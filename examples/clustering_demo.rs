@@ -1,0 +1,74 @@
+//! Clustering demo: the digits (MNIST stand-in) dataset end to end —
+//! graph building, average Affinity clustering (Figure 4), and the
+//! single-linkage 2-approximation of Theorem 2.5.
+//!
+//! Run: `cargo run --release --example clustering_demo [n]` (default 10000)
+
+use stars::clustering::{affinity_cluster_to_k, single_linkage_k, sweep_components, v_measure};
+use stars::data::synth;
+use stars::graph::Csr;
+use stars::lsh::SimHash;
+use stars::sim::{CosineSim, CountingSim};
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let ds = synth::digits(n, 42);
+    println!(
+        "digits dataset: {} points, dim {}, {} classes",
+        ds.len(),
+        ds.dim(),
+        ds.num_classes()
+    );
+
+    // Build graphs with Stars and non-Stars; compare clustering quality.
+    let family = SimHash::new(ds.dim(), 12, 7);
+    for algo in [Algorithm::Lsh, Algorithm::LshStars] {
+        let sim = CountingSim::new(CosineSim);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&sim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(algo)
+                    .sketches(100)
+                    .threshold(0.5),
+            )
+            .build();
+        let graph = out.graph.filter_weight(0.5);
+        let level = affinity_cluster_to_k(&graph, ds.num_classes());
+        let vm = v_measure(&level.labels, &ds.labels);
+        println!(
+            "{:<10} {:>12} comparisons  {:>9} edges  {} clusters  V-Measure {:.3}",
+            algo.name(),
+            out.report.comparisons,
+            graph.num_edges(),
+            level.clusters,
+            vm.v
+        );
+
+        if algo == Algorithm::LshStars {
+            // Theorem 2.5: single-linkage over the spanner.
+            let k = ds.num_classes();
+            let (labels, cost) = single_linkage_k(&out.graph, k);
+            let vm_sl = v_measure(&labels, &ds.labels);
+            println!(
+                "  single-linkage k={k}: objective (max cross-cluster sim) {:.3}, V-Measure {:.3}",
+                cost, vm_sl.v
+            );
+            // Component sweep (the geometric-threshold construction).
+            println!("  component sweep over the spanner:");
+            for r in [0.4f32, 0.5, 0.6, 0.7, 0.8] {
+                println!("    r={r}: {} components", sweep_components(&out.graph, r));
+            }
+            let csr = Csr::new(&out.graph);
+            println!(
+                "  graph degrees: mean {:.1}, max {}",
+                stars::graph::stats::degree_stats(&csr).mean,
+                csr.max_degree()
+            );
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! End-to-end system driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Exercises every layer on one realistic workload — the Amazon2m stand-in:
+//!
+//! 1. generate the products dataset (hybrid embedding + co-purchase sets);
+//! 2. build graphs with all four LSH algorithms (mixture similarity),
+//!    through the simulated AMPC cluster with cost accounting;
+//! 3. score a Stars graph with the **learned similarity model executing via
+//!    PJRT from the rust hot path** (L1/L2 artifacts), proving the three
+//!    layers compose;
+//! 4. evaluate: comparisons, recall vs brute-force ground truth, V-Measure
+//!    of Affinity clustering;
+//! 5. print the report and write results/e2e_pipeline.json.
+//!
+//! Run: `cargo run --release --example e2e_pipeline [n]` (default 20000)
+
+use stars::clustering::{affinity_cluster_to_k, v_measure};
+use stars::coordinator::driver::{make_family, make_measure};
+use stars::coordinator::job::{DatasetSpec, FamilySpec, MeasureSpec};
+use stars::eval::recall::{sample_queries, threshold_recall};
+use stars::graph::Csr;
+use stars::sim::Similarity;
+use stars::stars::{allpair, Algorithm, BuildParams, StarsBuilder};
+use stars::util::json::Json;
+
+fn main() -> stars::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let seed = 42u64;
+    let threshold = 0.4f32;
+    let workers = stars::util::pool::default_workers();
+    println!("=== Stars end-to-end pipeline (products-{n}, {workers} workers) ===\n");
+
+    // ---- 1. Dataset ----
+    let t0 = std::time::Instant::now();
+    let spec = DatasetSpec::Products { n };
+    let ds = spec.realize(seed)?;
+    println!(
+        "[1] dataset: {} points, dim {}, {} classes, generated in {:.1}s",
+        ds.len(),
+        ds.dim(),
+        ds.num_classes(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. Graph building with all four algorithms ----
+    let measure = make_measure(MeasureSpec::Mixture)?;
+    let mut rows = Vec::new();
+    let mut stars_graph = None;
+    println!("\n[2] graph building (mixture similarity, R=25):");
+    for algo in [
+        Algorithm::Lsh,
+        Algorithm::LshStars,
+        Algorithm::SortingLsh,
+        Algorithm::SortingLshStars,
+    ] {
+        let sorting = matches!(algo, Algorithm::SortingLsh | Algorithm::SortingLshStars);
+        let family = make_family(FamilySpec::default_for(&spec, sorting), ds.dim(), seed ^ 1);
+        let params = if sorting {
+            BuildParams::knn_mode(algo).sketches(25)
+        } else {
+            BuildParams::threshold_mode(algo)
+                .sketches(25)
+                .threshold(threshold)
+        };
+        let counting = CountingDyn::new(measure.as_ref());
+        let out = StarsBuilder::new(&ds)
+            .similarity(&counting)
+            .hash(family.as_ref())
+            .params(params)
+            .workers(workers)
+            .build();
+        println!(
+            "    {:<18} {:>14} comparisons  {:>9} edges  total {:>7.2}s  real {:>6.2}s",
+            algo.name(),
+            stars::bench::fmt_count(out.report.comparisons),
+            stars::bench::fmt_count(out.graph.num_edges() as u64),
+            out.report.total_time,
+            out.report.real_time,
+        );
+        rows.push(Json::obj(vec![
+            ("algorithm", Json::from(algo.name())),
+            ("comparisons", Json::from(out.report.comparisons)),
+            ("edges", Json::from(out.graph.num_edges())),
+            ("total_time_s", Json::from(out.report.total_time)),
+            ("real_time_s", Json::from(out.report.real_time)),
+        ]));
+        if algo == Algorithm::LshStars {
+            stars_graph = Some(out.graph);
+        }
+    }
+    let stars_graph = stars_graph.unwrap();
+
+    // ---- 3. Learned similarity via PJRT (L1+L2 -> L3 composition) ----
+    println!("\n[3] learned similarity through PJRT (AOT artifacts):");
+    let learned_json = match make_measure(MeasureSpec::Learned) {
+        Err(e) => {
+            println!("    SKIPPED (run `make artifacts`): {e}");
+            Json::Null
+        }
+        Ok(learned) => {
+            // Build a Stars graph where every similarity evaluation is a
+            // batched PJRT dispatch of the neural model.
+            let family = make_family(FamilySpec::default_for(&spec, false), ds.dim(), seed ^ 2);
+            let counting = CountingDyn::new(learned.as_ref());
+            let sub = ds.take(4000); // learned scoring is ~10x costlier
+            let t = std::time::Instant::now();
+            let out = StarsBuilder::new(&sub)
+                .similarity(&counting)
+                .hash(family.as_ref())
+                .params(
+                    BuildParams::threshold_mode(Algorithm::LshStars)
+                        .sketches(10)
+                        .threshold(0.5),
+                )
+                .workers(workers)
+                .build();
+            let level = affinity_cluster_to_k(&out.graph.filter_weight(0.5), sub.num_classes());
+            let vm = v_measure(&level.labels, &sub.labels);
+            println!(
+                "    lsh+stars/learned: {} comparisons, {} edges, {:.1}s wall, V-Measure {:.3}",
+                stars::bench::fmt_count(out.report.comparisons),
+                stars::bench::fmt_count(out.graph.num_edges() as u64),
+                t.elapsed().as_secs_f64(),
+                vm.v
+            );
+            Json::obj(vec![
+                ("comparisons", Json::from(out.report.comparisons)),
+                ("edges", Json::from(out.graph.num_edges())),
+                ("vmeasure", Json::from(vm.v)),
+                ("n", Json::from(sub.len())),
+            ])
+        }
+    };
+
+    // ---- 4. Recall vs brute-force ground truth ----
+    println!("\n[4] recall vs brute force (threshold {threshold}):");
+    let cluster = stars::ampc::Cluster::new(workers);
+    let eval_n = ds.len().min(6000);
+    let eval_ds = ds.take(eval_n);
+    let truth = allpair::exact_threshold_neighbors(&eval_ds, measure.as_ref(), threshold, &cluster);
+    // Rebuild on the eval subset so ground truth matches.
+    let family = make_family(FamilySpec::default_for(&spec, false), ds.dim(), seed ^ 1);
+    let counting = CountingDyn::new(measure.as_ref());
+    let out = StarsBuilder::new(&eval_ds)
+        .similarity(&counting)
+        .hash(family.as_ref())
+        .params(
+            BuildParams::threshold_mode(Algorithm::LshStars)
+                .sketches(100)
+                .threshold(threshold),
+        )
+        .workers(workers)
+        .build();
+    let csr = Csr::new(&out.graph);
+    let queries = sample_queries(eval_ds.len(), 500, seed ^ 3);
+    let rec = threshold_recall(&csr, &truth, &queries, threshold, threshold * 0.99);
+    println!(
+        "    1-hop {:.3}   2-hop {:.3}   2-hop relaxed {:.3}   ({} queries)",
+        rec.one_hop, rec.two_hop, rec.two_hop_relaxed, rec.queries
+    );
+
+    // ---- 5. Clustering quality ----
+    println!("\n[5] Affinity clustering V-Measure:");
+    let level = affinity_cluster_to_k(&stars_graph.filter_weight(threshold), ds.num_classes());
+    let vm = v_measure(&level.labels, &ds.labels);
+    println!(
+        "    lsh+stars graph: {} clusters, V-Measure {:.3} (homogeneity {:.3}, completeness {:.3})",
+        level.clusters, vm.v, vm.homogeneity, vm.completeness
+    );
+
+    let doc = Json::obj(vec![
+        ("example", Json::from("e2e_pipeline")),
+        ("n", Json::from(n)),
+        ("build_rows", Json::Arr(rows)),
+        ("learned", learned_json),
+        (
+            "recall",
+            Json::obj(vec![
+                ("one_hop", Json::from(rec.one_hop)),
+                ("two_hop", Json::from(rec.two_hop)),
+                ("two_hop_relaxed", Json::from(rec.two_hop_relaxed)),
+            ]),
+        ),
+        ("vmeasure", Json::from(vm.v)),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/e2e_pipeline.json", doc.to_pretty())?;
+    println!("\nwrote results/e2e_pipeline.json");
+    Ok(())
+}
+
+/// Counting wrapper over a borrowed dyn measure.
+struct CountingDyn<'a> {
+    inner: &'a dyn Similarity,
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> CountingDyn<'a> {
+    fn new(inner: &'a dyn Similarity) -> Self {
+        CountingDyn {
+            inner,
+            count: Default::default(),
+        }
+    }
+}
+
+impl Similarity for CountingDyn<'_> {
+    fn sim(&self, ds: &stars::data::Dataset, i: usize, j: usize) -> f32 {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sim(ds, i, j)
+    }
+
+    fn sim_batch(
+        &self,
+        ds: &stars::data::Dataset,
+        leader: usize,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        self.count
+            .fetch_add(candidates.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sim_batch(ds, leader, candidates, out);
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}

@@ -1,0 +1,117 @@
+//! Learned similarity demo: the paper's motivating scenario.
+//!
+//! A neural similarity model (trained and frozen into an HLO artifact at
+//! build time) is 5-10x costlier per comparison than the cosine/Jaccard
+//! mixture. Stars reduces comparisons ~10x, which translates directly into
+//! total-time savings — making the expensive, higher-quality measure
+//! affordable (paper §5 "Effect of the similarity function", Tables 1-2).
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example learned_similarity [n]` (default 3000)
+
+use stars::bench::{fmt_count, Table};
+use stars::clustering::{affinity_cluster_to_k, v_measure};
+use stars::coordinator::driver::make_measure;
+use stars::coordinator::job::MeasureSpec;
+use stars::data::synth;
+use stars::lsh::MixtureHash;
+use stars::sim::Similarity;
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+
+fn main() -> stars::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3_000);
+    // Same recipe seed the model was trained on (artifacts/meta.json).
+    let meta = stars::runtime::ArtifactMeta::load(&stars::runtime::ArtifactMeta::default_dir())?;
+    let seed = meta
+        .raw
+        .get("recipe_seed")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(42) as u64;
+    let ds = synth::products(n, &synth::ProductsParams::default(), seed);
+    println!(
+        "products-{n}: {} classes; learned model holdout AUC {:.3}\n",
+        ds.num_classes(),
+        meta.raw
+            .get("learned_sim")
+            .and_then(|e| e.get("auc"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN)
+    );
+
+    let family = MixtureHash::new(ds.dim(), 12, 31);
+    let mut table = Table::new(&[
+        "measure", "algorithm", "comparisons", "total(s)", "edges", "vmeasure",
+    ]);
+    for mspec in [MeasureSpec::Mixture, MeasureSpec::Learned] {
+        let measure = make_measure(mspec)?;
+        let threshold = if mspec == MeasureSpec::Learned { 0.5 } else { 0.4 };
+        for algo in [Algorithm::Lsh, Algorithm::LshStars] {
+            let counting = Counting::new(measure.as_ref());
+            let out = StarsBuilder::new(&ds)
+                .similarity(&counting)
+                .hash(&family)
+                .params(
+                    BuildParams::threshold_mode(algo)
+                        .sketches(25)
+                        .threshold(threshold),
+                )
+                .build();
+            let graph = out.graph.filter_weight(threshold);
+            let level = affinity_cluster_to_k(&graph, ds.num_classes());
+            let vm = v_measure(&level.labels, &ds.labels);
+            table.row(vec![
+                mspec.name().into(),
+                algo.name().into(),
+                fmt_count(out.report.comparisons),
+                format!("{:.2}", out.report.total_time),
+                fmt_count(graph.num_edges() as u64),
+                format!("{:.3}", vm.v),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(the learned rows pay ~an order of magnitude more per comparison;");
+    println!(" Stars keeps their total time in the same league as mixture non-Stars)");
+    Ok(())
+}
+
+struct Counting<'a> {
+    inner: &'a dyn Similarity,
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> Counting<'a> {
+    fn new(inner: &'a dyn Similarity) -> Self {
+        Counting {
+            inner,
+            count: Default::default(),
+        }
+    }
+}
+
+impl Similarity for Counting<'_> {
+    fn sim(&self, ds: &stars::data::Dataset, i: usize, j: usize) -> f32 {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sim(ds, i, j)
+    }
+
+    fn sim_batch(
+        &self,
+        ds: &stars::data::Dataset,
+        leader: usize,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        self.count
+            .fetch_add(candidates.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sim_batch(ds, leader, candidates, out);
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}

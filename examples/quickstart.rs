@@ -1,0 +1,59 @@
+//! Quickstart: build a two-hop spanner with LSH+Stars on a synthetic
+//! Gaussian-mixture dataset and inspect the result.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use stars::data::synth;
+use stars::graph::Csr;
+use stars::lsh::SimHash;
+use stars::sim::{CosineSim, CountingSim};
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+
+fn main() {
+    // 1. A dataset: 20k points from a 100-mode GMM in 100 dimensions (the
+    //    paper's Random1B recipe, scaled down).
+    let ds = synth::gaussian_mixture(20_000, 100, 100, 0.1, 42);
+    println!("dataset: {} points, dim {}", ds.len(), ds.dim());
+
+    // 2. A similarity measure (with comparison counting) and an LSH family.
+    let sim = CountingSim::new(CosineSim);
+    let family = SimHash::new(ds.dim(), 16, 7);
+
+    // 3. Build with Stars 1 (LSH bucketing + star graphs per bucket).
+    let out = StarsBuilder::new(&ds)
+        .similarity(&sim)
+        .hash(&family)
+        .params(
+            BuildParams::threshold_mode(Algorithm::LshStars)
+                .sketches(25) // R
+                .leaders(25) // s
+                .threshold(0.5), // r1
+        )
+        .build();
+
+    println!(
+        "built {} edges with {} comparisons ({}x fewer than brute force)",
+        out.graph.num_edges(),
+        out.report.comparisons,
+        (ds.len() as u64 * (ds.len() as u64 - 1) / 2) / out.report.comparisons.max(1)
+    );
+    println!(
+        "total time {:.2}s across {} workers, real time {:.2}s",
+        out.report.total_time, out.report.workers, out.report.real_time
+    );
+
+    // 4. Inspect the graph.
+    let csr = Csr::new(&out.graph);
+    let stats = stars::graph::stats::degree_stats(&csr);
+    println!(
+        "degrees: mean {:.1}, max {}, isolated {}",
+        stats.mean, stats.max, stats.isolated
+    );
+
+    // 5. Two-hop neighborhoods are the point: sample one node and count
+    //    reachable similar points at 1 vs 2 hops.
+    let p = 0u32;
+    let h1 = stars::graph::two_hop::one_hop_set(&csr, p, 0.5);
+    let h2 = stars::graph::two_hop::two_hop_set(&csr, p, 0.5);
+    println!("node {p}: {} direct neighbors, {} within two hops", h1.len(), h2.len());
+}

@@ -1,0 +1,74 @@
+//! "Tera-scale" simulation: the Table 3 experiment at the largest size this
+//! box handles — Random1M (and Random10M with `--big`), 100-mode GMM,
+//! R=25 sketches, degree threshold 250.
+//!
+//! The paper's claim reproduced here: Stars variants do within a small
+//! constant of the retained-edge count in comparisons, while non-Stars
+//! algorithms burn 10-100x more; total running time follows comparisons.
+//!
+//! Run: `cargo run --release --example tera_scale_sim [--big] [--n N]`
+
+use stars::bench::{fmt_count, Table};
+use stars::data::synth;
+use stars::sim::{CosineSim, CountingSim};
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+use stars::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n: usize = if args.flag("big") {
+        10_000_000
+    } else {
+        args.get_parsed_or("n", 1_000_000usize)
+    };
+    let workers = stars::util::pool::default_workers();
+    println!("generating random-{n} (100-mode GMM, dim 100) ...");
+    let t = std::time::Instant::now();
+    let ds = synth::gaussian_mixture(n, 100, 100, 0.1, 42);
+    println!("generated in {:.1}s\n", t.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "algorithm",
+        "comparisons",
+        "edges",
+        "total(s)",
+        "real(s)",
+        "rel total",
+    ]);
+    let mut base_total = None;
+    for algo in [
+        Algorithm::Lsh,
+        Algorithm::SortingLsh,
+        Algorithm::LshStars,
+        Algorithm::SortingLshStars,
+    ] {
+        let sorting = matches!(algo, Algorithm::SortingLsh | Algorithm::SortingLshStars);
+        let family = stars::lsh::SimHash::new(100, if sorting { 30 } else { 16 }, 7);
+        let params = if sorting {
+            BuildParams::knn_mode(algo).sketches(25).degree_cap(250)
+        } else {
+            BuildParams::threshold_mode(algo)
+                .sketches(25)
+                .threshold(0.5)
+                .degree_cap(250)
+        };
+        let sim = CountingSim::new(CosineSim);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&sim)
+            .hash(&family)
+            .params(params)
+            .workers(workers)
+            .build();
+        let base = *base_total.get_or_insert(out.report.total_time);
+        table.row(vec![
+            algo.name().into(),
+            fmt_count(out.report.comparisons),
+            fmt_count(out.graph.num_edges() as u64),
+            format!("{:.1}", out.report.total_time),
+            format!("{:.1}", out.report.real_time),
+            format!("{:.3}", out.report.total_time / base),
+        ]);
+    }
+    table.print();
+    println!("\n(paper Table 3 shape: lsh ~ 1.0, stars variants ~ 0.01-0.2)");
+}

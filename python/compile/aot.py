@@ -1,0 +1,170 @@
+"""AOT compile path: lower every artifact to HLO **text** + meta.json.
+
+Run once via `make artifacts`; the rust runtime (rust/src/runtime/) loads the
+text with `HloModuleProto::from_text_file` and executes via PJRT. Python is
+never on the request path.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts:
+  cosine_scorer.hlo.txt   (leaders[8,128], cands[512,128]) -> scores[8,512]
+  simhash_sketch.hlo.txt  (x[256,128]) -> bits[256,64]   (G baked constant)
+  learned_sim.hlo.txt     (ea, ha, eb, hb, pf)[256,...]  -> sim[256]
+  meta.json               shapes + file names + training AUC
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_mod
+from compile.kernels import pairwise, simhash
+
+# Artifact shapes (rust reads these from meta.json; keep in sync with tests).
+SCORER_LEADERS = 8
+SCORER_BLOCK = 512
+SCORER_DIM = 128
+SKETCH_BLOCK = 256
+SKETCH_DIM = 128
+SKETCH_BITS = 64
+SKETCH_SEED = 0x5EED
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    `print_large_constants=True` is load-bearing: the default printer elides
+    big constants as `{...}`, which the 0.5.1 text parser silently fills
+    with zeros — wiping out the frozen model weights / hyperplanes.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def build_cosine_scorer(out_dir: str) -> dict:
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(pairwise.cosine_scores).lower(
+        spec((SCORER_LEADERS, SCORER_DIM), jnp.float32),
+        spec((SCORER_BLOCK, SCORER_DIM), jnp.float32),
+    )
+    path = os.path.join(out_dir, "cosine_scorer.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "file": "cosine_scorer.hlo.txt",
+        "leaders": SCORER_LEADERS,
+        "block": SCORER_BLOCK,
+        "dim": SCORER_DIM,
+    }
+
+
+def build_simhash_sketch(out_dir: str) -> dict:
+    g = jnp.asarray(simhash.hyperplanes(SKETCH_SEED, SKETCH_DIM, SKETCH_BITS))
+
+    def sketch(x):
+        return simhash.simhash_bits(x, g)
+
+    lowered = jax.jit(sketch).lower(
+        jax.ShapeDtypeStruct((SKETCH_BLOCK, SKETCH_DIM), jnp.float32)
+    )
+    path = os.path.join(out_dir, "simhash_sketch.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "file": "simhash_sketch.hlo.txt",
+        "block": SKETCH_BLOCK,
+        "dim": SKETCH_DIM,
+        "bits": SKETCH_BITS,
+        "seed": SKETCH_SEED,
+    }
+
+
+def build_learned_sim(out_dir: str, steps: int, seed: int) -> dict:
+    t0 = time.time()
+    params, auc = model_mod.train(seed=seed, steps=steps)
+    train_secs = time.time() - t0
+
+    def fwd(ea, ha, eb, hb, pf):
+        # The frozen model: params closed over as constants; dense layers run
+        # through the Pallas kernel so the artifact exercises the L1 path.
+        return model_mod.similarity(params, ea, ha, eb, hb, pf, use_pallas=True)
+
+    spec = jax.ShapeDtypeStruct
+    b = model_mod.BATCH
+    lowered = jax.jit(fwd).lower(
+        spec((b, model_mod.DIM), jnp.float32),
+        spec((b, model_mod.HASH_BUCKETS), jnp.float32),
+        spec((b, model_mod.DIM), jnp.float32),
+        spec((b, model_mod.HASH_BUCKETS), jnp.float32),
+        spec((b, model_mod.PAIR_FEATS), jnp.float32),
+    )
+    path = os.path.join(out_dir, "learned_sim.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # Golden I/O for the rust runtime smoke test: a fixed batch plus the
+    # model's scores, so rust can verify end-to-end numerics after loading.
+    # Format: little-endian u64 section count, then per section u64 length +
+    # f32 data, in order [ea, ha, eb, hb, pf, scores].
+    sampler = model_mod.PairSampler(seed, 1234)
+    ea, ha, eb, hb, pf, y = sampler.batch(b)
+    scores = np.asarray(fwd(ea, ha, eb, hb, pf))
+    sections = [ea, ha, eb, hb, pf, scores]
+    with open(os.path.join(out_dir, "learned_sim_golden.bin"), "wb") as f:
+        f.write(np.uint64(len(sections)).tobytes())
+        for arr in sections:
+            flat = np.ascontiguousarray(arr, dtype=np.float32).reshape(-1)
+            f.write(np.uint64(flat.size).tobytes())
+            f.write(flat.tobytes())
+
+    return {
+        "file": "learned_sim.hlo.txt",
+        "batch": b,
+        "dim": model_mod.DIM,
+        "hash_buckets": model_mod.HASH_BUCKETS,
+        "pair_feats": model_mod.PAIR_FEATS,
+        "auc": auc,
+        "train_steps": steps,
+        "train_secs": round(train_secs, 2),
+        "recipe_seed": seed,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--steps", type=int, default=400, help="model training steps")
+    ap.add_argument("--seed", type=int, default=42, help="shared recipe seed")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meta = {"recipe_seed": args.seed}
+    print("[aot] lowering cosine_scorer ...")
+    meta["cosine_scorer"] = build_cosine_scorer(args.out)
+    print("[aot] lowering simhash_sketch ...")
+    meta["simhash_sketch"] = build_simhash_sketch(args.out)
+    print(f"[aot] training learned_sim ({args.steps} steps) ...")
+    meta["learned_sim"] = build_learned_sim(args.out, args.steps, args.seed)
+    print(f"[aot] learned_sim holdout AUC = {meta['learned_sim']['auc']:.4f}")
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] wrote artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

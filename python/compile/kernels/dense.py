@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: fused dense layer (x @ W + b, optional ReLU).
+
+The learned similarity model's towers and pairwise MLP are stacks of these.
+Keeping the layer as a Pallas kernel means the learned_sim artifact's hot
+FLOPs flow through the same kernel layer as the scorers: one (BT, IN) @
+(IN, OUT) MXU matmul per grid step with the bias add and ReLU fused on the
+VPU before writeback.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, out_ref, *, relu: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    bias = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + bias[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def dense(x, w, b, relu: bool = True):
+    """Fused dense layer. x: (B, IN), w: (IN, OUT), b: (OUT,). B % 128 == 0."""
+    batch, d_in = x.shape
+    d_in2, d_out = w.shape
+    assert d_in == d_in2 and b.shape == (d_out,)
+    assert batch % BLOCK_ROWS == 0, f"batch {batch} not a multiple of {BLOCK_ROWS}"
+    grid = (batch // BLOCK_ROWS,)
+    kernel = functools.partial(_dense_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: tiled leaders x block cosine scoring.
+
+The Stars scoring hot-spot is "compare one leader against every bucket
+member". Batched over L leaders and B candidates this is a small matmul with
+row normalization — an MXU-shaped computation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (L, D) leader tile and a
+(BT, D) candidate tile live in VMEM; the grid streams candidate tiles
+HBM->VMEM (the BlockSpec index_map below), and each grid step is one
+(L x D) @ (D x BT) MXU matmul plus a VPU rsqrt row-scale. With L=8, BT=128,
+D=128 the working set is ~200 KiB — far under the 16 MiB VMEM budget, so the
+pipeline can double-buffer deeply.
+
+On this image Pallas must run interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned against kernels/ref.py by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate-tile width. 128 = one MXU/VPU lane width.
+BLOCK_B = 128
+
+
+def _cosine_kernel(leaders_ref, cands_ref, out_ref):
+    """One grid step: score all leaders against one candidate tile."""
+    lead = leaders_ref[...]  # (L, D) — resident across the grid
+    cand = cands_ref[...]  # (BT, D) — streamed per grid step
+    # MXU: (L, D) @ (D, BT).
+    dots = jnp.dot(lead, cand.T, preferred_element_type=jnp.float32)
+    # VPU: row/col inverse norms (guarding zero-padded rows).
+    lnorm = jnp.sum(lead * lead, axis=1, keepdims=True)  # (L, 1)
+    cnorm = jnp.sum(cand * cand, axis=1, keepdims=True).T  # (1, BT)
+    denom = jnp.sqrt(lnorm * cnorm)
+    out_ref[...] = jnp.where(denom > 0.0, dots / denom, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cosine_scores(leaders, cands):
+    """Cosine similarity of every leader row against every candidate row.
+
+    leaders: (L, D) f32, cands: (B, D) f32 with B % BLOCK_B == 0.
+    Returns (L, B) f32 in [-1, 1] (0 where either row is all-zero padding).
+    """
+    l, d = leaders.shape
+    b, d2 = cands.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert b % BLOCK_B == 0, f"candidate count {b} not a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _cosine_kernel,
+        grid=grid,
+        in_specs=[
+            # Leaders: same full tile at every grid step (resident in VMEM).
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+            # Candidates: stream one BLOCK_B-row tile per grid step.
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, BLOCK_B), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((l, b), jnp.float32),
+        interpret=True,
+    )(leaders, cands)

@@ -1,0 +1,27 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+pytest (python/tests/test_kernel.py) asserts allclose between each kernel and
+its oracle across shapes and seeds — the core L1 correctness signal.
+"""
+
+import jax.numpy as jnp
+
+
+def cosine_scores_ref(leaders, cands):
+    """Reference for kernels.pairwise.cosine_scores."""
+    dots = leaders @ cands.T
+    lnorm = jnp.linalg.norm(leaders, axis=1, keepdims=True)
+    cnorm = jnp.linalg.norm(cands, axis=1, keepdims=True).T
+    denom = lnorm * cnorm
+    return jnp.where(denom > 0.0, dots / denom, 0.0)
+
+
+def simhash_bits_ref(x, g):
+    """Reference for kernels.simhash.simhash_bits."""
+    return (x @ g >= 0.0).astype(jnp.float32)
+
+
+def dense_ref(x, w, b, relu=True):
+    """Reference for kernels.dense.dense."""
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: SimHash sketching (sign bits of X @ G).
+
+One grid step sketches a tile of points against the full hyperplane matrix G
+(baked as a compile-time constant from a seed): an (BT, D) @ (D, M) MXU
+matmul followed by a VPU sign. Output is 0/1 f32; the rust side packs bits.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def hyperplanes(seed: int, dim: int, bits: int) -> np.ndarray:
+    """Deterministic (dim, bits) gaussian hyperplane matrix."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((dim, bits), dtype=np.float32)
+
+
+def _simhash_kernel(x_ref, g_ref, out_ref):
+    x = x_ref[...]  # (BT, D)
+    g = g_ref[...]  # (D, M) resident
+    dots = jnp.dot(x, g, preferred_element_type=jnp.float32)
+    out_ref[...] = (dots >= 0.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def simhash_bits(x, g):
+    """Sign bits (0/1 f32) of x @ g.
+
+    x: (B, D) f32 with B % BLOCK_ROWS == 0; g: (D, M) f32. Returns (B, M).
+    """
+    b, d = x.shape
+    d2, m = g.shape
+    assert d == d2
+    assert b % BLOCK_ROWS == 0
+    grid = (b // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _simhash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x, g)

@@ -1,0 +1,214 @@
+"""L2: the learned pairwise similarity model (paper §C.2 / §D.3, after
+Grale [24]).
+
+Architecture (sizes scaled to this repo's Amazon2m stand-in):
+  * per-side tower: concat(embedding[100], hashed co-purchase multi-hot[64])
+    -> dense(100) ReLU -> dense(100) ReLU -> dense(32) linear  (shared weights)
+  * pairwise head: concat(hadamard(tower_a, tower_b)[32],
+                          [cosine, co-purchase indicator, jaccard][3])
+    -> dense(100) ReLU -> dense(100) ReLU -> dense(1) -> sigmoid.
+
+The dense layers run through the L1 Pallas kernel (kernels.dense), so the
+AOT-lowered learned_sim artifact carries the same kernel path the scorers do.
+Trained at artifact-build time on synthetic same/different-category pairs
+drawn from the shared recipe (compile/recipe.py == rust data::recipe), then
+frozen into HLO. Python never runs at request time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import recipe
+from compile.kernels import dense as dense_kernel
+
+# Shapes (mirrored into artifacts/meta.json; rust reads them from there).
+DIM = 100           # embedding dimension
+HASH_BUCKETS = 64   # co-purchase multi-hot size
+PAIR_FEATS = 3      # [cosine, co-purchase indicator, jaccard]
+EMB = 32            # tower output
+HIDDEN = 100
+BATCH = 256
+
+
+def init_params(seed: int) -> dict:
+    """He-initialized parameter pytree."""
+    rng = np.random.default_rng(seed)
+
+    def layer(d_in, d_out):
+        w = rng.standard_normal((d_in, d_out), dtype=np.float32)
+        w *= np.sqrt(2.0 / d_in).astype(np.float32)
+        return {"w": jnp.asarray(w), "b": jnp.zeros((d_out,), jnp.float32)}
+
+    tower_in = DIM + HASH_BUCKETS
+    head_in = EMB + PAIR_FEATS
+    return {
+        "t1": layer(tower_in, HIDDEN),
+        "t2": layer(HIDDEN, HIDDEN),
+        "t3": layer(HIDDEN, EMB),
+        "h1": layer(head_in, HIDDEN),
+        "h2": layer(HIDDEN, HIDDEN),
+        "h3": layer(HIDDEN, 1),
+    }
+
+
+def _dense(use_pallas, x, layer, relu):
+    if use_pallas:
+        return dense_kernel.dense(x, layer["w"], layer["b"], relu=relu)
+    y = x @ layer["w"] + layer["b"][None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def tower(params, e, h, use_pallas=False):
+    """Shared-weight embedding tower."""
+    x = jnp.concatenate([e, h], axis=1)
+    x = _dense(use_pallas, x, params["t1"], True)
+    x = _dense(use_pallas, x, params["t2"], True)
+    return _dense(use_pallas, x, params["t3"], False)
+
+
+def logits(params, ea, ha, eb, hb, pf, use_pallas=False):
+    """Unthresholded pairwise score (the paper's scalar output)."""
+    ta = tower(params, ea, ha, use_pallas)
+    tb = tower(params, eb, hb, use_pallas)
+    pair = jnp.concatenate([ta * tb, pf], axis=1)  # Hadamard ++ pair feats
+    x = _dense(use_pallas, pair, params["h1"], True)
+    x = _dense(use_pallas, x, params["h2"], True)
+    return _dense(use_pallas, x, params["h3"], False)[:, 0]
+
+
+def similarity(params, ea, ha, eb, hb, pf, use_pallas=False):
+    """Similarity in (0, 1): sigmoid of the logit."""
+    return jax.nn.sigmoid(logits(params, ea, ha, eb, hb, pf, use_pallas))
+
+
+# --------------------------------------------------------------------------
+# Training-data generation from the shared recipe (distributionally identical
+# to rust data::synth::products; see DESIGN.md §3).
+# --------------------------------------------------------------------------
+
+# Mirror of rust data::synth::ProductsParams::default() — keep in sync.
+PRODUCTS = {
+    "classes": 47,
+    "noise": 0.09,
+    "vocab": 20_000,
+    "pool_size": 24,
+    "basket": 40,
+    "class_mass": 0.8,
+}
+
+
+class PairSampler:
+    """Samples featurized (same-class? different-class?) product pairs."""
+
+    def __init__(self, seed: int, np_seed: int):
+        p = PRODUCTS
+        self.means = np.asarray(
+            [recipe.class_mean(seed, c, DIM) for c in range(p["classes"])],
+            dtype=np.float32,
+        )
+        self.pools = [
+            recipe.class_token_pool(seed, c, p["vocab"], p["pool_size"])
+            for c in range(p["classes"])
+        ]
+        self.rng = np.random.default_rng(np_seed)
+
+    def _point(self, c: int):
+        p = PRODUCTS
+        e = self.means[c] + p["noise"] * self.rng.standard_normal(DIM).astype(np.float32)
+        pool = self.pools[c]
+        toks = set()
+        for _ in range(p["basket"]):
+            if self.rng.random() < p["class_mass"]:
+                toks.add(pool[self.rng.integers(len(pool))])
+            else:
+                toks.add(int(self.rng.integers(p["vocab"])))
+        return e, toks
+
+    def batch(self, size: int):
+        """Featurized batch: (ea, ha, eb, hb, pf, labels)."""
+        p = PRODUCTS
+        ea = np.zeros((size, DIM), np.float32)
+        eb = np.zeros((size, DIM), np.float32)
+        ha = np.zeros((size, HASH_BUCKETS), np.float32)
+        hb = np.zeros((size, HASH_BUCKETS), np.float32)
+        pf = np.zeros((size, PAIR_FEATS), np.float32)
+        y = np.zeros((size,), np.float32)
+        for k in range(size):
+            same = self.rng.random() < 0.5
+            c1 = int(self.rng.integers(p["classes"]))
+            c2 = c1 if same else int(self.rng.integers(p["classes"]))
+            if not same and c2 == c1:
+                c2 = (c1 + 1) % p["classes"]
+            e1, t1 = self._point(c1)
+            e2, t2 = self._point(c2)
+            ea[k], eb[k] = e1, e2
+            for t in t1:
+                ha[k, recipe.hash_token(t, HASH_BUCKETS)] = 1.0
+            for t in t2:
+                hb[k, recipe.hash_token(t, HASH_BUCKETS)] = 1.0
+            inter = len(t1 & t2)
+            union = len(t1 | t2)
+            jac = inter / union if union else 0.0
+            cos = float(
+                e1 @ e2 / max(np.linalg.norm(e1) * np.linalg.norm(e2), 1e-12)
+            )
+            pf[k] = [cos, 1.0 if inter > 0 else 0.0, jac]
+            y[k] = 1.0 if c1 == c2 else 0.0
+        return ea, ha, eb, hb, pf, y
+
+
+# --------------------------------------------------------------------------
+# Training (hand-rolled Adam; optax is not assumed present).
+# --------------------------------------------------------------------------
+
+
+def loss_fn(params, batch):
+    ea, ha, eb, hb, pf, y = batch
+    z = logits(params, ea, ha, eb, hb, pf, use_pallas=False)
+    # Binary cross entropy with logits (stable form).
+    return jnp.mean(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def adam_step(params, m, v, t, batch, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mhat, vhat
+    )
+    return params, m, v, loss
+
+
+def train(seed: int = 42, steps: int = 400, batch_size: int = BATCH, np_seed: int = 7):
+    """Train the model; returns (params, holdout_auc)."""
+    params = init_params(np_seed)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    sampler = PairSampler(seed, np_seed)
+    for t in range(1, steps + 1):
+        batch = sampler.batch(batch_size)
+        params, m, v, _ = adam_step(params, m, v, float(t), batch)
+    # Holdout AUC on a fresh sample (distinct numpy stream).
+    holdout = PairSampler(seed, np_seed + 1).batch(2048)
+    scores = np.asarray(similarity(params, *holdout[:5]))
+    auc = compute_auc(scores, holdout[5])
+    return params, float(auc)
+
+
+def compute_auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """Rank-based AUC (Mann-Whitney)."""
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels > 0.5
+    n_pos = int(pos.sum())
+    n_neg = len(labels) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    return (ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)

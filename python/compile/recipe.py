@@ -1,0 +1,68 @@
+"""Shared deterministic recipe — python mirror of rust/src/data/recipe.rs.
+
+The learned similarity model is trained (at artifact-build time) on synthetic
+products drawn from the same class geometry the rust generators use at
+evaluation time. That geometry is pinned by this module: a SplitMix64 stream
+plus Box-Muller gaussians, implemented identically on both sides.
+
+Do not change any constant here without changing the rust mirror and
+regenerating artifacts. Cross-language golden values are asserted in
+python/tests/test_recipe.py and rust/src/data/recipe.rs.
+"""
+
+import math
+
+MASK64 = (1 << 64) - 1
+
+CLASS_MEAN_STREAM = 0xC1A5
+CLASS_TOKENS_STREAM = 0x70CE
+
+
+class SplitMix64:
+    """Mirror of rust util::rng::SplitMix64."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_gaussian(self) -> float:
+        u1 = self.next_f64()
+        if u1 < 1e-300:
+            u1 = 1e-300
+        u2 = self.next_f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+def derive_seed(parent: int, stream: int) -> int:
+    """Mirror of rust util::rng::derive_seed."""
+    mixed = (parent ^ ((stream * 0xA0761D6478BD642F) & MASK64)) & MASK64
+    return SplitMix64(mixed).next_u64()
+
+
+def class_mean(seed: int, class_id: int, dim: int) -> list[float]:
+    """Unit-norm class prototype — mirror of data::recipe::class_mean."""
+    sm = SplitMix64(derive_seed(seed ^ CLASS_MEAN_STREAM, class_id))
+    raw = [sm.next_gaussian() for _ in range(dim)]
+    norm = max(math.sqrt(sum(x * x for x in raw)), 1e-12)
+    # Rust casts each f64/norm to f32; numpy float32 cast happens downstream.
+    return [x / norm for x in raw]
+
+
+def class_token_pool(seed: int, class_id: int, vocab: int, pool_size: int) -> list[int]:
+    """Class co-purchase token pool — mirror of data::recipe::class_token_pool."""
+    sm = SplitMix64(derive_seed(seed ^ CLASS_TOKENS_STREAM, class_id))
+    return [sm.next_u64() % vocab for _ in range(pool_size)]
+
+
+def hash_token(token: int, buckets: int) -> int:
+    """Knuth multiplicative co-purchase hash — mirror of runtime::learned::hash_token."""
+    return ((token * 2654435761) & 0xFFFFFFFF) % buckets

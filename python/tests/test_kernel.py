@@ -1,0 +1,126 @@
+"""L1 kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and value distributions; every Pallas kernel must
+match its ref.py oracle to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, pairwise, ref, simhash
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- pairwise
+
+
+@given(
+    l=st.sampled_from([1, 3, 8]),
+    b_tiles=st.integers(1, 4),
+    d=st.sampled_from([4, 100, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cosine_matches_ref(l, b_tiles, d, seed):
+    leaders = rand((l, d), seed)
+    cands = rand((b_tiles * pairwise.BLOCK_B, d), seed + 1)
+    got = pairwise.cosine_scores(leaders, cands)
+    want = ref.cosine_scores_ref(leaders, cands)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cosine_zero_rows_give_zero():
+    leaders = jnp.zeros((8, 16), jnp.float32)
+    cands = rand((pairwise.BLOCK_B, 16), 3)
+    got = pairwise.cosine_scores(leaders, cands)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_cosine_self_similarity_is_one():
+    x = rand((8, 128), 5)
+    cands = jnp.concatenate([x, jnp.zeros((pairwise.BLOCK_B - 8, 128))], axis=0)
+    got = np.asarray(pairwise.cosine_scores(x, cands))
+    np.testing.assert_allclose(np.diag(got[:, :8]), 1.0, atol=1e-5)
+
+
+def test_cosine_range_bounded():
+    got = np.asarray(pairwise.cosine_scores(rand((4, 32), 9), rand((128, 32), 10)))
+    assert got.min() >= -1.0 - 1e-5 and got.max() <= 1.0 + 1e-5
+
+
+def test_cosine_rejects_ragged_block():
+    with pytest.raises(AssertionError):
+        pairwise.cosine_scores(rand((4, 16), 1), rand((100, 16), 2))
+
+
+# ---------------------------------------------------------------- simhash
+
+
+@given(
+    tiles=st.integers(1, 3),
+    d=st.sampled_from([8, 64, 128]),
+    m=st.sampled_from([12, 30, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_simhash_matches_ref(tiles, d, m, seed):
+    x = rand((tiles * simhash.BLOCK_ROWS, d), seed)
+    g = jnp.asarray(simhash.hyperplanes(seed + 1, d, m))
+    got = simhash.simhash_bits(x, g)
+    want = ref.simhash_bits_ref(x, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_simhash_bits_are_binary():
+    x = rand((simhash.BLOCK_ROWS, 32), 2)
+    g = jnp.asarray(simhash.hyperplanes(3, 32, 16))
+    got = np.asarray(simhash.simhash_bits(x, g))
+    assert set(np.unique(got)).issubset({0.0, 1.0})
+
+
+def test_simhash_identical_rows_identical_bits():
+    row = rand((1, 64), 4)
+    x = jnp.tile(row, (simhash.BLOCK_ROWS, 1))
+    g = jnp.asarray(simhash.hyperplanes(5, 64, 24))
+    got = np.asarray(simhash.simhash_bits(x, g))
+    assert (got == got[0]).all()
+
+
+def test_hyperplanes_deterministic():
+    a = simhash.hyperplanes(7, 16, 8)
+    b = simhash.hyperplanes(7, 16, 8)
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------- dense
+
+
+@given(
+    tiles=st.integers(1, 2),
+    d_in=st.sampled_from([35, 100, 164]),
+    d_out=st.sampled_from([1, 32, 100]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(tiles, d_in, d_out, relu, seed):
+    x = rand((tiles * dense.BLOCK_ROWS, d_in), seed)
+    w = rand((d_in, d_out), seed + 1, scale=0.1)
+    b = rand((d_out,), seed + 2)
+    got = dense.dense(x, w, b, relu=relu)
+    want = ref.dense_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_relu_clamps():
+    x = rand((dense.BLOCK_ROWS, 8), 1)
+    w = rand((8, 4), 2)
+    b = jnp.asarray(np.full((4,), -100.0, np.float32))
+    got = np.asarray(dense.dense(x, w, b, relu=True))
+    assert got.min() >= 0.0

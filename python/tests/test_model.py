@@ -1,0 +1,72 @@
+"""L2 model tests: shapes, pallas-vs-plain forward equivalence, learnability."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return model.PairSampler(42, 99).batch(model.BATCH)
+
+
+def test_forward_shapes(params, batch):
+    ea, ha, eb, hb, pf, _ = batch
+    z = model.logits(params, ea, ha, eb, hb, pf)
+    assert z.shape == (model.BATCH,)
+    s = model.similarity(params, ea, ha, eb, hb, pf)
+    assert s.shape == (model.BATCH,)
+    assert float(jnp.min(s)) > 0.0 and float(jnp.max(s)) < 1.0
+
+
+def test_pallas_and_plain_forward_agree(params, batch):
+    """The lowered artifact uses the Pallas dense kernel; training used the
+    plain path. They must agree to float tolerance."""
+    ea, ha, eb, hb, pf, _ = batch
+    plain = model.similarity(params, ea, ha, eb, hb, pf, use_pallas=False)
+    pallas = model.similarity(params, ea, ha, eb, hb, pf, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(pallas), rtol=1e-4, atol=1e-5)
+
+
+def test_symmetric_inputs_score_equal(params, batch):
+    ea, ha, eb, hb, pf, _ = batch
+    # Identical sides -> towers identical; the model is symmetric in (a, b)
+    # because the pair representation (hadamard) is commutative.
+    s1 = model.similarity(params, ea, ha, eb, hb, pf)
+    s2 = model.similarity(params, eb, hb, ea, ha, pf)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-6)
+
+
+def test_training_learns_category_signal():
+    params, auc = model.train(seed=42, steps=60, np_seed=3)
+    assert 0.75 < auc <= 1.0, f"AUC after 60 steps: {auc}"
+
+
+def test_trained_model_separates_same_vs_diff():
+    params, _ = model.train(seed=42, steps=60, np_seed=3)
+    ea, ha, eb, hb, pf, y = model.PairSampler(42, 55).batch(512)
+    s = np.asarray(model.similarity(params, ea, ha, eb, hb, pf))
+    same = s[y > 0.5].mean()
+    diff = s[y < 0.5].mean()
+    assert same > diff + 0.2, f"same {same} vs diff {diff}"
+
+
+def test_auc_of_random_scores_is_half():
+    rng = np.random.default_rng(0)
+    scores = rng.random(4000)
+    labels = (rng.random(4000) > 0.5).astype(np.float32)
+    auc = model.compute_auc(scores, labels)
+    assert abs(auc - 0.5) < 0.05
+
+
+def test_auc_of_perfect_scores_is_one():
+    labels = np.array([0, 0, 1, 1], np.float32)
+    scores = np.array([0.1, 0.2, 0.8, 0.9])
+    assert model.compute_auc(scores, labels) == 1.0

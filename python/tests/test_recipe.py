@@ -1,0 +1,63 @@
+"""Cross-language recipe checks: python mirror vs rust golden values.
+
+The rust side asserts the same constants (rust/src/util/rng.rs and
+rust/src/data/recipe.rs); the goldens below were captured from the rust
+implementation (examples/quickstart.rs dump) and pin the bridge.
+"""
+
+import math
+
+import pytest
+
+from compile import recipe
+
+
+def test_splitmix_reference_values():
+    sm = recipe.SplitMix64(0)
+    assert sm.next_u64() == 0xE220A8397B1DCDAF
+    assert sm.next_u64() == 0x6E789E6AA1B965F4
+    assert sm.next_u64() == 0x06C45D188009454F
+
+
+def test_class_mean_matches_rust_golden():
+    got = recipe.class_mean(42, 0, 8)
+    want = [
+        0.11108279,
+        0.12884913,
+        -0.5187552,
+        0.47085604,
+        0.45231187,
+        -0.06786341,
+        -0.49378076,
+        -0.16503093,
+    ]
+    assert len(got) == 8
+    for g, w in zip(got, want):
+        assert g == pytest.approx(w, abs=1e-6)
+
+
+def test_class_token_pool_matches_rust_golden():
+    got = recipe.class_token_pool(42, 0, 1000, 8)
+    assert got == [939, 875, 270, 440, 480, 816, 121, 421]
+
+
+def test_class_mean_unit_norm():
+    for c in range(5):
+        m = recipe.class_mean(7, c, 100)
+        assert math.sqrt(sum(x * x for x in m)) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_distinct_classes_decorrelated():
+    a = recipe.class_mean(7, 0, 100)
+    b = recipe.class_mean(7, 1, 100)
+    dot = sum(x * y for x, y in zip(a, b))
+    assert abs(dot) < 0.5
+
+
+def test_hash_token_range():
+    for t in [0, 1, 17, 9999, 2**32 - 1]:
+        h = recipe.hash_token(t, 64)
+        assert 0 <= h < 64
+    # Spot value consistent with the rust implementation:
+    # (17 * 2654435761) mod 2^32 mod 64
+    assert recipe.hash_token(17, 64) == ((17 * 2654435761) % (2**32)) % 64

@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Figure 1 (number of comparisons).
+//! Run: `cargo bench --bench fig1_comparisons` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{fig1, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| fig1(&cfg));
+    println!("\n[fig1_comparisons] completed in {}", stars::bench::fmt_secs(secs));
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Figure 2 (recall of near(est) neighbors).
+//! Run: `cargo bench --bench fig2_recall` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{fig2, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| fig2(&cfg));
+    println!("\n[fig2_recall] completed in {}", stars::bench::fmt_secs(secs));
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Figure 3 (edges above the similarity threshold).
+//! Run: `cargo bench --bench fig3_edges` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{fig3, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| fig3(&cfg));
+    println!("\n[fig3_edges] completed in {}", stars::bench::fmt_secs(secs));
+}

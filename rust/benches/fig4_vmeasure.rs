@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Figure 4 (V-Measure of Affinity clustering).
+//! Run: `cargo bench --bench fig4_vmeasure` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{fig4, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| fig4(&cfg));
+    println!("\n[fig4_vmeasure] completed in {}", stars::bench::fmt_secs(secs));
+}

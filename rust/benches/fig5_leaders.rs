@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Figures 5-7 (effect of the number of leaders).
+//! Run: `cargo bench --bench fig5_leaders` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{fig5_leaders, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| fig5_leaders(&cfg));
+    println!("\n[fig5_leaders] completed in {}", stars::bench::fmt_secs(secs));
+}

@@ -1,0 +1,187 @@
+//! Microbenchmarks of the hot-path primitives — the L3 profiling harness
+//! for the performance pass (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench microbench`
+
+use stars::ampc::CostLedger;
+use stars::bench::{fmt_count, fmt_secs, time_runs, Table};
+use stars::data::synth;
+use stars::lsh::{sorted_order, LshFamily, SimHash, WeightedMinHash};
+use stars::sim::{CosineSim, Similarity};
+use stars::stars::group_buckets;
+use stars::util::rng::Rng;
+
+fn main() {
+    let mut table = Table::new(&["primitive", "n", "median", "throughput"]);
+    let ds = synth::gaussian_mixture(100_000, 100, 100, 0.1, 42);
+
+    // Cosine scoring: leader vs 10k candidates, batched.
+    {
+        let cands: Vec<u32> = (1..10_001).collect();
+        let mut out = Vec::new();
+        let stats = time_runs(3, 15, || {
+            CosineSim.sim_batch(&ds, 0, &cands, &mut out);
+            std::hint::black_box(&out);
+        });
+        table.row(vec![
+            "cosine sim_batch (d=100)".into(),
+            fmt_count(cands.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((cands.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+    }
+
+    // SimHash sketching: one repetition over 100k points.
+    {
+        let h = SimHash::new(100, 16, 7);
+        let stats = time_runs(1, 5, || {
+            std::hint::black_box(h.bucket_keys(&ds, 0));
+        });
+        table.row(vec![
+            "simhash bucket_keys (M=16)".into(),
+            fmt_count(ds.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((ds.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+    }
+
+    // Weighted MinHash sketching on sets.
+    {
+        let sets = synth::zipf_sets(20_000, &synth::ZipfSetsParams::default(), 3);
+        let h = WeightedMinHash::new(3, 9);
+        let stats = time_runs(1, 5, || {
+            std::hint::black_box(h.bucket_keys(&sets, 0));
+        });
+        table.row(vec![
+            "wminhash bucket_keys (M=3)".into(),
+            fmt_count(sets.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((sets.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+    }
+
+    // Bucket grouping of 100k keys.
+    {
+        let h = SimHash::new(100, 16, 7);
+        let keys = h.bucket_keys(&ds, 0);
+        let stats = time_runs(2, 10, || {
+            std::hint::black_box(group_buckets(&keys));
+        });
+        table.row(vec![
+            "group_buckets".into(),
+            fmt_count(keys.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((keys.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+    }
+
+    // SortingLSH: full sorted order (M=30) over 100k points.
+    {
+        let h = SimHash::new(100, 30, 7);
+        let stats = time_runs(1, 3, || {
+            std::hint::black_box(sorted_order(&h, &ds, 0));
+        });
+        table.row(vec![
+            "sorted_order (M=30, matrix)".into(),
+            fmt_count(ds.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((ds.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+        // Packed-u64 fast path (what the scoring loop actually uses).
+        let stats = time_runs(1, 3, || {
+            std::hint::black_box(stars::lsh::sorting::sorted_indices(&h, &ds, 0));
+        });
+        table.row(vec![
+            "sorted_indices (M=30, packed)".into(),
+            fmt_count(ds.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((ds.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+    }
+
+    // TeraSort 1M u64 records.
+    {
+        let mut rng = Rng::new(5);
+        let items: Vec<u64> = (0..1_000_000).map(|_| rng.next_u64()).collect();
+        let ledger = CostLedger::new(8);
+        let stats = time_runs(1, 3, || {
+            std::hint::black_box(stars::ampc::terasort::terasort(
+                items.clone(),
+                8,
+                8,
+                |x| *x,
+                &ledger,
+                1,
+            ));
+        });
+        table.row(vec![
+            "terasort u64 x8 workers".into(),
+            fmt_count(items.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{}/s",
+                fmt_count((items.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+    }
+
+    // PJRT learned-model scoring throughput (if artifacts exist).
+    if let Ok(meta) =
+        stars::runtime::ArtifactMeta::load(&stars::runtime::ArtifactMeta::default_dir())
+    {
+        let engine = stars::runtime::Engine::cpu().unwrap();
+        let model = stars::runtime::LearnedModel::load(&engine, &meta).unwrap();
+        let prods = synth::products(2048, &synth::ProductsParams::default(), 42);
+        let pairs: Vec<(u32, u32)> = (0..1024u32).map(|i| (i, i + 1024)).collect();
+        let stats = time_runs(1, 5, || {
+            std::hint::black_box(model.score(&prods, &pairs).unwrap());
+        });
+        table.row(vec![
+            "learned model score (PJRT)".into(),
+            fmt_count(pairs.len() as u64),
+            fmt_secs(stats.median()),
+            format!(
+                "{} pairs/s",
+                fmt_count((pairs.len() as f64 / stats.median()) as u64)
+            ),
+        ]);
+
+        let scorer = stars::runtime::CosineScorer::load(&engine, &meta).unwrap();
+        let leaders: Vec<f32> = ds.dense[..8 * 100].to_vec();
+        let cands: Vec<f32> = ds.dense[..4096 * 100].to_vec();
+        let stats = time_runs(1, 5, || {
+            std::hint::black_box(scorer.score(&leaders, 8, &cands, 4096, 100).unwrap());
+        });
+        table.row(vec![
+            "cosine scorer (PJRT, 8x4096)".into(),
+            fmt_count(8 * 4096),
+            fmt_secs(stats.median()),
+            format!(
+                "{} scores/s",
+                fmt_count((8.0 * 4096.0 / stats.median()) as u64)
+            ),
+        ]);
+    } else {
+        println!("(PJRT rows skipped: run `make artifacts`)");
+    }
+
+    table.print();
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Table 2 (relative total running time, SortingLSH-based).
+//! Run: `cargo bench --bench table2_sortinglsh_runtime` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{table12, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| table12(&cfg, true));
+    println!("\n[table2_sortinglsh_runtime] completed in {}", stars::bench::fmt_secs(secs));
+}

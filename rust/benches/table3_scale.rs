@@ -1,0 +1,9 @@
+//! Bench: regenerates the paper's Table 3 (relative total running time at scale).
+//! Run: `cargo bench --bench table3_scale` (STARS_BENCH_FULL=1 for paper-size R).
+use stars::coordinator::experiments::{table3, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (secs, _) = stars::bench::time_once(|| table3(&cfg));
+    println!("\n[table3_scale] completed in {}", stars::bench::fmt_secs(secs));
+}

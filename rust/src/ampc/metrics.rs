@@ -1,0 +1,185 @@
+//! Cost accounting: comparisons, per-worker busy time, shuffle bytes.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, thread-safe cost counters for one graph-building job.
+#[derive(Debug)]
+pub struct CostLedger {
+    /// Per-worker busy nanoseconds ("total running time" contributors).
+    busy_nanos: Vec<AtomicU64>,
+    comparisons: AtomicU64,
+    sketch_evals: AtomicU64,
+    edges_emitted: AtomicU64,
+    shuffle_bytes: AtomicU64,
+    dht_lookups: AtomicU64,
+    dht_bytes: AtomicU64,
+}
+
+impl CostLedger {
+    /// Ledger for `workers` workers.
+    pub fn new(workers: usize) -> CostLedger {
+        CostLedger {
+            busy_nanos: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            comparisons: AtomicU64::new(0),
+            sketch_evals: AtomicU64::new(0),
+            edges_emitted: AtomicU64::new(0),
+            shuffle_bytes: AtomicU64::new(0),
+            dht_lookups: AtomicU64::new(0),
+            dht_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of workers this ledger tracks.
+    pub fn workers(&self) -> usize {
+        self.busy_nanos.len()
+    }
+
+    /// Charge busy time to a worker.
+    #[inline]
+    pub fn add_busy(&self, worker: usize, nanos: u64) {
+        self.busy_nanos[worker % self.busy_nanos.len()].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Record `n` pairwise similarity evaluations.
+    #[inline]
+    pub fn add_comparisons(&self, n: u64) {
+        self.comparisons.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` LSH sketch evaluations.
+    #[inline]
+    pub fn add_sketches(&self, n: u64) {
+        self.sketch_evals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` emitted edges (pre-dedup).
+    #[inline]
+    pub fn add_edges(&self, n: u64) {
+        self.edges_emitted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record shuffle I/O bytes.
+    #[inline]
+    pub fn add_shuffle_bytes(&self, n: u64) {
+        self.shuffle_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record a DHT lookup of `bytes` payload.
+    #[inline]
+    pub fn add_dht_lookup(&self, bytes: u64) {
+        self.dht_lookups.fetch_add(1, Ordering::Relaxed);
+        self.dht_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Total comparisons so far.
+    pub fn comparisons(&self) -> u64 {
+        self.comparisons.load(Ordering::Relaxed)
+    }
+
+    /// Sum of per-worker busy time, seconds — the paper's "total running
+    /// time ... over all machines".
+    pub fn total_time(&self) -> f64 {
+        self.busy_nanos
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum::<u64>() as f64
+            / 1e9
+    }
+
+    /// Immutable snapshot.
+    pub fn report(&self, real_time: f64) -> CostReport {
+        CostReport {
+            workers: self.busy_nanos.len(),
+            comparisons: self.comparisons.load(Ordering::Relaxed),
+            sketch_evals: self.sketch_evals.load(Ordering::Relaxed),
+            edges_emitted: self.edges_emitted.load(Ordering::Relaxed),
+            shuffle_bytes: self.shuffle_bytes.load(Ordering::Relaxed),
+            dht_lookups: self.dht_lookups.load(Ordering::Relaxed),
+            dht_bytes: self.dht_bytes.load(Ordering::Relaxed),
+            total_time: self.total_time(),
+            real_time,
+        }
+    }
+}
+
+/// Snapshot of a job's costs — the row schema of the paper's tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostReport {
+    /// Worker count.
+    pub workers: usize,
+    /// Pairwise similarity evaluations (Figure 1's metric).
+    pub comparisons: u64,
+    /// LSH sketch evaluations.
+    pub sketch_evals: u64,
+    /// Edges emitted before dedup.
+    pub edges_emitted: u64,
+    /// Bytes moved by shuffle joins.
+    pub shuffle_bytes: u64,
+    /// DHT lookups performed.
+    pub dht_lookups: u64,
+    /// Bytes served by the DHT.
+    pub dht_bytes: u64,
+    /// Σ per-worker busy seconds (paper: total running time).
+    pub total_time: f64,
+    /// Wall-clock seconds (paper: real running time).
+    pub real_time: f64,
+}
+
+impl CostReport {
+    /// Convert to JSON for experiment reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::from(self.workers)),
+            ("comparisons", Json::from(self.comparisons)),
+            ("sketch_evals", Json::from(self.sketch_evals)),
+            ("edges_emitted", Json::from(self.edges_emitted)),
+            ("shuffle_bytes", Json::from(self.shuffle_bytes)),
+            ("dht_lookups", Json::from(self.dht_lookups)),
+            ("dht_bytes", Json::from(self.dht_bytes)),
+            ("total_time_s", Json::from(self.total_time)),
+            ("real_time_s", Json::from(self.real_time)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let l = CostLedger::new(4);
+        l.add_comparisons(10);
+        l.add_comparisons(5);
+        l.add_busy(0, 1_000_000_000);
+        l.add_busy(3, 500_000_000);
+        l.add_edges(7);
+        l.add_sketches(3);
+        l.add_shuffle_bytes(100);
+        l.add_dht_lookup(400);
+        assert_eq!(l.comparisons(), 15);
+        assert!((l.total_time() - 1.5).abs() < 1e-9);
+        let r = l.report(2.0);
+        assert_eq!(r.comparisons, 15);
+        assert_eq!(r.edges_emitted, 7);
+        assert_eq!(r.dht_lookups, 1);
+        assert_eq!(r.real_time, 2.0);
+    }
+
+    #[test]
+    fn worker_index_wraps() {
+        let l = CostLedger::new(2);
+        l.add_busy(5, 100); // worker 5 % 2 = 1
+        assert!(l.total_time() > 0.0);
+    }
+
+    #[test]
+    fn report_to_json_parses() {
+        let l = CostLedger::new(1);
+        l.add_comparisons(3);
+        let j = l.report(0.1).to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("comparisons").unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Simulated AMPC cluster (paper §4).
+//!
+//! The paper's implementation runs on an Adaptive Massively Parallel
+//! Computation fleet of ~1000 workers. Here a [`Cluster`] is a pool of
+//! worker threads, each with a cost ledger, reproducing the paper's two
+//! reported metrics:
+//!
+//! * **total running time** — the sum of per-worker busy time (the paper's
+//!   "summation of running time of building edges over all machines"), and
+//! * **real running time** — wall clock of the whole job.
+//!
+//! The feature-join strategies of §4 are implemented faithfully:
+//! [`Dht`] (cache the dataset in memory across shards; per-bucket feature
+//! lookups) and [`shuffle`] (TeraSort-style distributed sort to co-locate
+//! features with sketches, paying disk/shuffle bytes instead of RAM).
+
+mod cluster;
+mod dht;
+mod metrics;
+pub mod shuffle;
+pub mod terasort;
+
+pub use cluster::Cluster;
+pub use dht::Dht;
+pub use metrics::{CostLedger, CostReport};

@@ -1,0 +1,79 @@
+//! MapReduce-style shuffle join (paper §4, the disk-heavy join).
+//!
+//! "We require O(Rn) additional disk storage and O(Rn log(Rn)) time to
+//! materialize the joined table." The shuffle groups (bucket_key, point_id)
+//! records by key via [`terasort`], charging shuffle bytes; the grouped runs
+//! are the LSH buckets handed to the scoring phase.
+
+use super::metrics::CostLedger;
+use super::terasort::terasort;
+
+/// A grouped bucket: the shared key and the member point ids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KeyGroup {
+    /// Bucket key.
+    pub key: u64,
+    /// Members (point ids) in arbitrary order.
+    pub members: Vec<u32>,
+}
+
+/// Group `(key, id)` records by key using a distributed-style shuffle sort.
+/// Returns groups in ascending key order; singleton groups are retained
+/// (callers usually skip them — no pairs to score).
+pub fn shuffle_group(
+    records: Vec<(u64, u32)>,
+    workers: usize,
+    ledger: &CostLedger,
+    seed: u64,
+) -> Vec<KeyGroup> {
+    // 12 bytes per record: u64 key + u32 id.
+    let sorted = terasort(records, workers, 12, |r| (r.0, r.1), ledger, seed);
+    let mut groups: Vec<KeyGroup> = Vec::new();
+    for (key, id) in sorted {
+        match groups.last_mut() {
+            Some(g) if g.key == key => g.members.push(id),
+            _ => groups.push(KeyGroup {
+                key,
+                members: vec![id],
+            }),
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_by_key() {
+        let ledger = CostLedger::new(2);
+        let groups = shuffle_group(
+            vec![(5, 1), (3, 2), (5, 3), (3, 4), (9, 5)],
+            2,
+            &ledger,
+            7,
+        );
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].key, 3);
+        let mut m = groups[0].members.clone();
+        m.sort();
+        assert_eq!(m, vec![2, 4]);
+        assert_eq!(groups[2].key, 9);
+        assert_eq!(groups[2].members, vec![5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ledger = CostLedger::new(2);
+        assert!(shuffle_group(vec![], 2, &ledger, 1).is_empty());
+    }
+
+    #[test]
+    fn charges_bytes_proportional_to_records() {
+        let ledger = CostLedger::new(2);
+        let records: Vec<(u64, u32)> = (0..100).map(|i| (i % 10, i as u32)).collect();
+        shuffle_group(records, 4, &ledger, 2);
+        assert_eq!(ledger.report(0.0).shuffle_bytes, 2 * 12 * 100);
+    }
+}

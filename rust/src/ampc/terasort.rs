@@ -1,0 +1,125 @@
+//! TeraSort: sample-based range-partitioned parallel sort (paper §C.1).
+//!
+//! "The SortingLSH algorithm involves computing R sketches per point, then
+//! sorting the nR total sketches ... we leverage the TeraSort algorithm."
+//!
+//! Structure: sample keys → choose `workers − 1` splitters → partition
+//! records into per-worker ranges → sort ranges independently → concatenate.
+//! This is the same algorithm Hadoop's TeraSort uses; here "machines" are
+//! pool workers and the shuffle bytes are charged to the ledger.
+
+use super::metrics::CostLedger;
+use crate::util::pool::parallel_chunks;
+use crate::util::rng::Rng;
+
+/// Sort `items` by `key` using sample-based range partitioning over
+/// `workers` workers, charging shuffle bytes (one record write + read per
+/// item) to `ledger`. Stable within ranges is not guaranteed (matching a
+/// distributed shuffle).
+pub fn terasort<T, K, F>(
+    items: Vec<T>,
+    workers: usize,
+    record_bytes: u64,
+    key: F,
+    ledger: &CostLedger,
+    seed: u64,
+) -> Vec<T>
+where
+    T: Send + Sync + Clone,
+    K: Ord + Clone + Send,
+    F: Fn(&T) -> K + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1);
+    ledger.add_shuffle_bytes(2 * record_bytes * n as u64);
+    if n <= 1 || workers == 1 {
+        let mut items = items;
+        items.sort_by(|a, b| key(a).cmp(&key(b)));
+        return items;
+    }
+
+    // 1. Sample ~32 keys per worker and derive splitters.
+    let mut rng = Rng::new(seed);
+    let sample_size = (workers * 32).min(n);
+    let mut sample: Vec<K> = (0..sample_size)
+        .map(|_| key(&items[rng.below(n)]))
+        .collect();
+    sample.sort();
+    let splitters: Vec<K> = (1..workers)
+        .map(|w| sample[w * sample.len() / workers].clone())
+        .collect();
+
+    // 2. Partition into per-worker bins.
+    let mut bins: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for item in items {
+        let k = key(&item);
+        // Index of first splitter > k == bin index.
+        let bin = splitters.partition_point(|s| *s <= k);
+        bins[bin].push(item);
+    }
+
+    // 3. Sort bins in parallel.
+    let bins_ref = &bins;
+    let sorted_bins = parallel_chunks(workers, workers, |_, range| {
+        let mut out = Vec::new();
+        for b in range {
+            let mut bin = bins_ref[b].clone();
+            bin.sort_by(|a, b| key(a).cmp(&key(b)));
+            out.push((b, bin));
+        }
+        out
+    });
+
+    // 4. Concatenate in bin order.
+    let mut flat: Vec<(usize, Vec<T>)> = sorted_bins.into_iter().flatten().collect();
+    flat.sort_by_key(|(b, _)| *b);
+    let mut out = Vec::with_capacity(n);
+    for (_, bin) in flat {
+        out.extend(bin);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Gen};
+
+    #[test]
+    fn sorts_correctly() {
+        check("terasort-vs-std", 25, |g: &mut Gen| {
+            let n = g.usize_in(0, 3000);
+            let items: Vec<u64> = (0..n).map(|_| g.usize_in(0, 10_000) as u64).collect();
+            let ledger = CostLedger::new(4);
+            let sorted = terasort(items.clone(), 4, 8, |x| *x, &ledger, 42);
+            let mut want = items;
+            want.sort();
+            assert_eq!(sorted, want);
+        });
+    }
+
+    #[test]
+    fn charges_shuffle_bytes() {
+        let ledger = CostLedger::new(2);
+        let _ = terasort(vec![3u64, 1, 2], 2, 16, |x| *x, &ledger, 1);
+        let r = ledger.report(0.0);
+        assert_eq!(r.shuffle_bytes, 2 * 16 * 3);
+    }
+
+    #[test]
+    fn handles_skewed_keys() {
+        // All-equal keys land in one bin; must still terminate and sort.
+        let items = vec![7u64; 5000];
+        let ledger = CostLedger::new(8);
+        let sorted = terasort(items.clone(), 8, 8, |x| *x, &ledger, 3);
+        assert_eq!(sorted, items);
+    }
+
+    #[test]
+    fn sorts_composite_keys() {
+        let items: Vec<(u64, u32)> = vec![(2, 1), (1, 9), (2, 0), (1, 1)];
+        let ledger = CostLedger::new(2);
+        let sorted = terasort(items, 2, 12, |x| (x.0, x.1), &ledger, 5);
+        assert_eq!(sorted, vec![(1, 1), (1, 9), (2, 0), (2, 1)]);
+    }
+}

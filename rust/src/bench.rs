@@ -1,0 +1,196 @@
+//! Bench harness (criterion is not in the vendor set).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that uses this
+//! module to time workloads and print paper-style tables. Reports median and
+//! spread over repeated runs, plus throughput when a unit count is given.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs of a workload.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Run durations, seconds, sorted ascending.
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    /// Median seconds.
+    pub fn median(&self) -> f64 {
+        let n = self.samples.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n % 2 == 1 {
+            self.samples[n / 2]
+        } else {
+            0.5 * (self.samples[n / 2 - 1] + self.samples[n / 2])
+        }
+    }
+
+    /// Minimum seconds.
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(0.0)
+    }
+
+    /// Maximum seconds.
+    pub fn max(&self) -> f64 {
+        self.samples.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Time `f` for `runs` runs after `warmup` unmeasured runs.
+pub fn time_runs<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats { samples }
+}
+
+/// Time one run of `f`, returning (seconds, result).
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (f64, R) {
+    let t = Instant::now();
+    let r = f();
+    (t.elapsed().as_secs_f64(), r)
+}
+
+/// Pretty-print seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Pretty-print a count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Simple fixed-width table printer for bench/experiment outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render to a string with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", cell, width = widths[c]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median() {
+        let s = Stats {
+            samples: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(s.median(), 2.0);
+        let s = Stats {
+            samples: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(s.median(), 2.5);
+    }
+
+    #[test]
+    fn time_runs_counts() {
+        let mut calls = 0;
+        let stats = time_runs(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(stats.samples.len(), 5);
+        assert!(stats.min() <= stats.median() && stats.median() <= stats.max());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_count(1234567), "1,234,567");
+        assert_eq!(fmt_count(7), "7");
+        assert!(fmt_secs(0.5).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "comparisons"]);
+        t.row(vec!["stars".into(), "123".into()]);
+        t.row(vec!["allpair".into(), "4567890".into()]);
+        let r = t.render();
+        assert!(r.contains("stars"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,320 @@
+//! Graph-based hierarchical agglomerative clustering (average linkage).
+//!
+//! The paper's primary downstream citation [16] (Dhulipala, Eisenstat,
+//! Łącki, Mirrokni, Shi — "Hierarchical agglomerative graph clustering in
+//! nearly-linear time", ICML 2021) shows graph HAC with average linkage runs
+//! in time nearly linear in the number of *edges* — exactly why Stars'
+//! sparse two-hop spanners matter: the spanner's edge count, not n², is
+//! what downstream clustering pays for.
+//!
+//! This is the sequential heap-based variant: maintain cluster-level average
+//! weights, repeatedly merge the globally best pair above a stopping
+//! threshold, lazily invalidating stale heap entries. Complexity
+//! O(E log E · α) with α the cluster-degree overlap factor — nearly linear
+//! on the sparse graphs Stars produces.
+
+use crate::graph::Graph;
+use crate::util::fxhash::FxHashMap;
+use std::collections::BinaryHeap;
+
+/// A merge record in the dendrogram: clusters `a` and `b` (ids in the
+/// internal node space) merged at average similarity `sim` into `into`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Merge {
+    /// First merged cluster id.
+    pub a: u32,
+    /// Second merged cluster id.
+    pub b: u32,
+    /// New cluster id (n + merge index).
+    pub into: u32,
+    /// Average-linkage similarity at merge time.
+    pub sim: f32,
+}
+
+/// Dendrogram produced by [`average_linkage_hac`].
+#[derive(Clone, Debug, Default)]
+pub struct Dendrogram {
+    /// Number of leaves (original points).
+    pub n: usize,
+    /// Merges in execution order (non-increasing similarity under exact
+    /// average linkage on a static graph is NOT guaranteed — averages can
+    /// rise after merges — but is monotone in practice on similarity
+    /// graphs).
+    pub merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    /// Flat clustering: apply merges with `sim >= cut`, return labels.
+    pub fn cut(&self, cut: f32) -> Vec<u32> {
+        let mut uf = crate::graph::UnionFind::new(self.n);
+        for m in &self.merges {
+            if m.sim >= cut {
+                // `into` ids are synthetic; union the leaf-space reps.
+                uf.union(self.leaf_of(m.a), self.leaf_of(m.b));
+            }
+        }
+        uf.labels()
+    }
+
+    /// Flat clustering with (at most) `k` clusters: apply merges best-first
+    /// until k clusters remain (plus isolated leaves).
+    pub fn cut_to_k(&self, k: usize) -> Vec<u32> {
+        let mut uf = crate::graph::UnionFind::new(self.n);
+        for m in &self.merges {
+            if uf.num_components() <= k {
+                break;
+            }
+            uf.union(self.leaf_of(m.a), self.leaf_of(m.b));
+        }
+        uf.labels()
+    }
+
+    /// Any leaf contained in cluster id `c` (leaf ids pass through).
+    fn leaf_of(&self, c: u32) -> u32 {
+        let mut c = c;
+        while c as usize >= self.n {
+            c = self.merges[c as usize - self.n].a;
+        }
+        c
+    }
+}
+
+/// Run average-linkage graph HAC down to `min_sim`: merging stops when no
+/// cluster pair with average similarity ≥ `min_sim` remains.
+pub fn average_linkage_hac(g: &Graph, min_sim: f32) -> Dendrogram {
+    let n = g.num_nodes();
+    // Active cluster adjacency: cluster -> (neighbor cluster -> (Σw, cnt)).
+    let mut adj: Vec<FxHashMap<u32, (f64, u64)>> = vec![FxHashMap::default(); n];
+    for e in g.edges() {
+        adj[e.u as usize]
+            .entry(e.v)
+            .and_modify(|x| {
+                x.0 += e.w as f64;
+                x.1 += 1;
+            })
+            .or_insert((e.w as f64, 1));
+        adj[e.v as usize]
+            .entry(e.u)
+            .and_modify(|x| {
+                x.0 += e.w as f64;
+                x.1 += 1;
+            })
+            .or_insert((e.w as f64, 1));
+    }
+    // Cluster metadata: alive flag + current id mapping. Merged clusters get
+    // fresh ids appended to `adj`.
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut merges = Vec::new();
+
+    // Max-heap of candidate merges (lazy deletion).
+    #[derive(PartialEq)]
+    struct Cand {
+        sim: f32,
+        a: u32,
+        b: u32,
+    }
+    impl Eq for Cand {}
+    impl Ord for Cand {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.sim
+                .total_cmp(&other.sim)
+                .then(self.a.cmp(&other.a))
+                .then(self.b.cmp(&other.b))
+        }
+    }
+    impl PartialOrd for Cand {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let mut heap = BinaryHeap::new();
+    for (u, nbrs) in adj.iter().enumerate() {
+        for (&v, &(sum, cnt)) in nbrs {
+            if (u as u32) < v {
+                let sim = (sum / cnt as f64) as f32;
+                if sim >= min_sim {
+                    heap.push(Cand {
+                        sim,
+                        a: u as u32,
+                        b: v,
+                    });
+                }
+            }
+        }
+    }
+
+    while let Some(Cand { sim, a, b }) = heap.pop() {
+        if sim < min_sim {
+            break;
+        }
+        if !alive[a as usize] || !alive[b as usize] {
+            continue; // stale entry
+        }
+        // Re-validate: the (a, b) average may have changed after merges.
+        let current = adj[a as usize].get(&b).map(|&(s, c)| (s / c as f64) as f32);
+        match current {
+            Some(cur) if (cur - sim).abs() <= 1e-6 => {}
+            Some(cur) => {
+                if cur >= min_sim {
+                    heap.push(Cand { sim: cur, a, b });
+                }
+                continue;
+            }
+            None => continue,
+        }
+        // Merge b into a new cluster id.
+        let new_id = adj.len() as u32;
+        alive[a as usize] = false;
+        alive[b as usize] = false;
+        alive.push(true);
+        merges.push(Merge {
+            a,
+            b,
+            into: new_id,
+            sim,
+        });
+        // Union neighbor maps of a and b (excluding each other).
+        let na = std::mem::take(&mut adj[a as usize]);
+        let nb = std::mem::take(&mut adj[b as usize]);
+        let mut merged: FxHashMap<u32, (f64, u64)> = FxHashMap::default();
+        for (src, skip) in [(na, b), (nb, a)] {
+            for (v, (sum, cnt)) in src {
+                if v == skip {
+                    continue;
+                }
+                let ent = merged.entry(v).or_insert((0.0, 0));
+                ent.0 += sum;
+                ent.1 += cnt;
+            }
+        }
+        adj.push(FxHashMap::default());
+        // Rewire neighbors to point at the new cluster and push fresh heap
+        // candidates.
+        let entries: Vec<(u32, (f64, u64))> = merged.into_iter().collect();
+        for (v, (sum, cnt)) in entries {
+            if !alive[v as usize] {
+                continue;
+            }
+            adj[v as usize].remove(&a);
+            adj[v as usize].remove(&b);
+            adj[v as usize].insert(new_id, (sum, cnt));
+            adj[new_id as usize].insert(v, (sum, cnt));
+            let s = (sum / cnt as f64) as f32;
+            if s >= min_sim {
+                heap.push(Cand {
+                    sim: s,
+                    a: v.min(new_id),
+                    b: v.max(new_id),
+                });
+            }
+        }
+    }
+
+    Dendrogram { n, merges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn two_cliques() -> Graph {
+        Graph::from_edges(
+            6,
+            vec![
+                Edge::new(0, 1, 0.9),
+                Edge::new(1, 2, 0.9),
+                Edge::new(0, 2, 0.9),
+                Edge::new(3, 4, 0.9),
+                Edge::new(4, 5, 0.9),
+                Edge::new(3, 5, 0.9),
+                Edge::new(2, 3, 0.1),
+            ],
+        )
+    }
+
+    #[test]
+    fn merges_cliques_before_bridge() {
+        let d = average_linkage_hac(&two_cliques(), 0.0);
+        // 5 merges total (connected graph -> single cluster).
+        assert_eq!(d.merges.len(), 5);
+        // The first four merges are all at high similarity (within cliques);
+        // the bridge merge comes last at a low average.
+        assert!(d.merges[0].sim > 0.5);
+        let last = d.merges.last().unwrap();
+        assert!(last.sim < 0.5, "bridge merged at {}", last.sim);
+    }
+
+    #[test]
+    fn min_sim_stops_merging() {
+        let d = average_linkage_hac(&two_cliques(), 0.5);
+        // Bridge (avg 0.1) never merges: exactly 4 merges.
+        assert_eq!(d.merges.len(), 4);
+        let labels = d.cut(0.5);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[5]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn cut_to_k_respects_k() {
+        let d = average_linkage_hac(&two_cliques(), 0.0);
+        let labels = d.cut_to_k(2);
+        let distinct: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(distinct.len(), 2);
+        let labels = d.cut_to_k(1);
+        let distinct: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(distinct.len(), 1);
+    }
+
+    #[test]
+    fn empty_graph_no_merges() {
+        let g = Graph::from_edges(4, vec![]);
+        let d = average_linkage_hac(&g, 0.0);
+        assert!(d.merges.is_empty());
+        assert_eq!(d.cut(0.5), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn average_linkage_uses_means_not_max() {
+        // 0-1 at 1.0; cluster {0,1} connects to 2 via edges 1.0 and 0.0:
+        // average 0.5, so with min_sim 0.6 the second merge must not happen.
+        let g = Graph::from_edges(
+            3,
+            vec![
+                Edge::new(0, 1, 1.0),
+                Edge::new(0, 2, 1.0),
+                Edge::new(1, 2, 0.0),
+            ],
+        );
+        let d = average_linkage_hac(&g, 0.6);
+        assert_eq!(d.merges.len(), 1, "merges: {:?}", d.merges);
+    }
+
+    #[test]
+    fn hac_on_stars_graph_recovers_modes() {
+        use crate::data::synth;
+        use crate::lsh::SimHash;
+        use crate::sim::CosineSim;
+        use crate::stars::{Algorithm, BuildParams, StarsBuilder};
+
+        let ds = synth::gaussian_mixture(600, 32, 6, 0.05, 13);
+        let family = SimHash::new(32, 6, 2);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(40)
+                    .threshold(0.4),
+            )
+            .workers(2)
+            .build();
+        let d = average_linkage_hac(&out.graph, 0.4);
+        let labels = d.cut_to_k(6);
+        let vm = crate::clustering::v_measure(&labels, &ds.labels);
+        assert!(vm.v > 0.7, "HAC on spanner V-Measure {}", vm.v);
+    }
+}

@@ -1,0 +1,19 @@
+//! Downstream clustering consumers of the built graphs.
+//!
+//! * [`affinity`] — average Affinity clustering (Bateni et al., NIPS'17):
+//!   Borůvka-style MST clustering, the paper's Figure 4 workload.
+//! * [`single_linkage`] — k-single-linkage via descending-weight edge
+//!   unions; with two-hop spanners this realizes Theorem 2.5's
+//!   2-approximation.
+//! * [`vmeasure`] — the V-Measure external cluster quality score
+//!   (Rosenberg & Hirschberg, 2007) used in Figure 4.
+
+pub mod affinity;
+pub mod hac;
+pub mod single_linkage;
+pub mod vmeasure;
+
+pub use affinity::{affinity_cluster_to_k, affinity_levels};
+pub use hac::{average_linkage_hac, Dendrogram, Merge};
+pub use single_linkage::{single_linkage_k, sweep_components};
+pub use vmeasure::{v_measure, VMeasure};

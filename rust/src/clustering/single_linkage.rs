@@ -1,0 +1,153 @@
+//! k-single-linkage clustering over similarity graphs (paper §2, Theorem 2.5
+//! and Appendix A).
+//!
+//! The objective *minimizes the maximum cross-cluster similarity*: merge the
+//! most-similar pairs first (descending-weight Kruskal unions) and stop at k
+//! components. On an exact threshold graph this is optimal; Theorem 2.5 shows
+//! that (r/c, r)-two-hop spanners over a geometric sweep of r give a
+//! c-approximation (c = r₂/r₁ ≈ 1/ε).
+
+use crate::graph::{Edge, Graph, UnionFind};
+
+/// Cluster into exactly `k` components (or the natural component count if
+/// the graph has more than `k` components). Returns (labels, cost) where
+/// cost is the largest similarity crossing the final partition — the
+/// k-single-linkage objective value (f32::NEG_INFINITY when every edge was
+/// merged).
+pub fn single_linkage_k(g: &Graph, k: usize) -> (Vec<u32>, f32) {
+    let n = g.num_nodes();
+    let mut edges: Vec<Edge> = g.edges().to_vec();
+    edges.sort_unstable_by(|a, b| b.w.total_cmp(&a.w));
+    let mut uf = UnionFind::new(n);
+    let mut cost = f32::NEG_INFINITY;
+    for e in edges {
+        if uf.num_components() <= k.max(1) {
+            // Remaining (unmerged) cross edges bound the objective: the best
+            // of them is the max cross-cluster similarity.
+            if !uf.connected(e.u, e.v) {
+                cost = cost.max(e.w);
+            }
+            break;
+        }
+        uf.union(e.u, e.v);
+    }
+    (uf.labels(), cost)
+}
+
+/// Number of connected components when keeping only edges with weight ≥ r —
+/// the component sweep used to realize the geometric-threshold construction
+/// of Theorem 2.5 with a single weighted spanner.
+pub fn sweep_components(g: &Graph, r: f32) -> usize {
+    let mut uf = UnionFind::new(g.num_nodes());
+    for e in g.edges() {
+        if e.w >= r {
+            uf.union(e.u, e.v);
+        }
+    }
+    uf.num_components()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn chain() -> Graph {
+        // 0 -0.9- 1 -0.2- 2 -0.8- 3
+        Graph::from_edges(
+            4,
+            vec![
+                Edge::new(0, 1, 0.9),
+                Edge::new(1, 2, 0.2),
+                Edge::new(2, 3, 0.8),
+            ],
+        )
+    }
+
+    #[test]
+    fn k2_cuts_weakest_link() {
+        let (labels, cost) = single_linkage_k(&chain(), 2);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+        assert!((cost - 0.2).abs() < 1e-6, "cost {cost}");
+    }
+
+    #[test]
+    fn k1_merges_everything() {
+        let (labels, cost) = single_linkage_k(&chain(), 1);
+        assert!(labels.iter().all(|&l| l == labels[0]));
+        assert_eq!(cost, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn more_components_than_k_is_ok() {
+        let g = Graph::from_edges(5, vec![Edge::new(0, 1, 0.5)]);
+        let (labels, _) = single_linkage_k(&g, 2);
+        // 4 natural components > k=2; everything mergeable got merged.
+        let distinct: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn sweep_monotone_in_r() {
+        let g = chain();
+        assert_eq!(sweep_components(&g, 0.1), 1);
+        assert_eq!(sweep_components(&g, 0.5), 2);
+        assert_eq!(sweep_components(&g, 0.85), 3);
+        assert_eq!(sweep_components(&g, 0.95), 4);
+        // Monotone non-decreasing.
+        let mut prev = 0;
+        for r in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+            let c = sweep_components(&g, r);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    /// Theorem 2.5 / Observation A.1 sandwich: components of the
+    /// (r/c, r)-two-hop spanner sit between those of the r-threshold and
+    /// r/c-threshold graphs. We emulate the spanner by a Stars build and
+    /// check against exact threshold graphs on a small dataset.
+    #[test]
+    fn spanner_components_sandwich_threshold_components() {
+        use crate::data::synth;
+        use crate::lsh::SimHash;
+        use crate::sim::CosineSim;
+        use crate::stars::{Algorithm, BuildParams, StarsBuilder};
+
+        let ds = synth::gaussian_mixture(300, 16, 5, 0.05, 31);
+        let (r, c) = (0.6f32, 1.2f32);
+        let r1 = r / c;
+        let family = SimHash::new(16, 6, 3);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(60)
+                    .threshold(r1)
+                    .degree_cap(0),
+            )
+            .workers(2)
+            .build();
+        // Exact threshold graphs.
+        let cluster = crate::ampc::Cluster::new(2);
+        let hi = Graph::from_edges(
+            300,
+            crate::stars::allpair::allpair_edges(&ds, &CosineSim, r, &cluster),
+        );
+        let lo = Graph::from_edges(
+            300,
+            crate::stars::allpair::allpair_edges(&ds, &CosineSim, r1, &cluster),
+        );
+        let spanner_cc = sweep_components(&out.graph, r1);
+        let hi_cc = sweep_components(&hi, f32::MIN); // all edges
+        let lo_cc = sweep_components(&lo, f32::MIN);
+        // Observation A.1: cc(r/c-threshold) ≤ cc(spanner) ≤ cc(r-threshold).
+        assert!(
+            lo_cc <= spanner_cc && spanner_cc <= hi_cc,
+            "sandwich violated: {lo_cc} <= {spanner_cc} <= {hi_cc}"
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! V-Measure (Rosenberg & Hirschberg, EMNLP-CoNLL 2007): the harmonic mean
+//! of homogeneity and completeness — the paper's Figure 4 quality score.
+
+use crate::util::fxhash::FxHashMap;
+
+/// V-Measure decomposition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VMeasure {
+    /// Each cluster contains only members of a single class (1.0 = perfect).
+    pub homogeneity: f64,
+    /// All members of a class are assigned to the same cluster (1.0 = perfect).
+    pub completeness: f64,
+    /// Harmonic mean of the two.
+    pub v: f64,
+}
+
+/// Compute V-Measure between predicted cluster labels and ground-truth class
+/// labels. Labels are arbitrary u32 ids; lengths must match.
+pub fn v_measure(pred: &[u32], truth: &[u32]) -> VMeasure {
+    assert_eq!(pred.len(), truth.len(), "label length mismatch");
+    let n = pred.len();
+    if n == 0 {
+        return VMeasure {
+            homogeneity: 1.0,
+            completeness: 1.0,
+            v: 1.0,
+        };
+    }
+    // Contingency counts.
+    let mut joint: FxHashMap<(u32, u32), u64> = FxHashMap::default();
+    let mut by_cluster: FxHashMap<u32, u64> = FxHashMap::default();
+    let mut by_class: FxHashMap<u32, u64> = FxHashMap::default();
+    for i in 0..n {
+        *joint.entry((pred[i], truth[i])).or_default() += 1;
+        *by_cluster.entry(pred[i]).or_default() += 1;
+        *by_class.entry(truth[i]).or_default() += 1;
+    }
+    let nf = n as f64;
+    let entropy = |counts: &FxHashMap<u32, u64>| -> f64 {
+        counts
+            .values()
+            .map(|&c| {
+                let p = c as f64 / nf;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let h_c = entropy(&by_class); // H(C): class entropy
+    let h_k = entropy(&by_cluster); // H(K): cluster entropy
+    // H(C|K) and H(K|C) from the joint.
+    let mut h_c_given_k = 0.0;
+    let mut h_k_given_c = 0.0;
+    for (&(k, c), &cnt) in &joint {
+        let p_joint = cnt as f64 / nf;
+        let p_k = by_cluster[&k] as f64 / nf;
+        let p_c = by_class[&c] as f64 / nf;
+        h_c_given_k -= p_joint * (p_joint / p_k).ln();
+        h_k_given_c -= p_joint * (p_joint / p_c).ln();
+    }
+    let homogeneity = if h_c <= 0.0 { 1.0 } else { 1.0 - h_c_given_k / h_c };
+    let completeness = if h_k <= 0.0 { 1.0 } else { 1.0 - h_k_given_c / h_k };
+    let v = if homogeneity + completeness <= 0.0 {
+        0.0
+    } else {
+        2.0 * homogeneity * completeness / (homogeneity + completeness)
+    };
+    VMeasure {
+        homogeneity,
+        completeness,
+        v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let m = v_measure(&truth, &truth);
+        assert!((m.v - 1.0).abs() < 1e-9);
+        assert!((m.homogeneity - 1.0).abs() < 1e-9);
+        assert!((m.completeness - 1.0).abs() < 1e-9);
+        // Label permutation does not matter.
+        let permuted = vec![5, 5, 9, 9, 7, 7];
+        assert!((v_measure(&permuted, &truth).v - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_cluster_is_complete_not_homogeneous() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 0, 0, 0];
+        let m = v_measure(&pred, &truth);
+        assert!((m.completeness - 1.0).abs() < 1e-9);
+        assert!(m.homogeneity < 0.01);
+        assert!(m.v < 0.01);
+    }
+
+    #[test]
+    fn singletons_are_homogeneous_not_complete() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 1, 2, 3];
+        let m = v_measure(&pred, &truth);
+        assert!((m.homogeneity - 1.0).abs() < 1e-9);
+        assert!(m.completeness < 1.0);
+    }
+
+    #[test]
+    fn known_value_from_paper_example() {
+        // sklearn cross-check: labels_true = [0,0,1,1], labels_pred = [0,0,1,2]
+        // homogeneity = 1.0, completeness ≈ 0.6667, v ≈ 0.8.
+        let m = v_measure(&[0, 0, 1, 2], &[0, 0, 1, 1]);
+        assert!((m.homogeneity - 1.0).abs() < 1e-6);
+        assert!((m.completeness - 2.0 / 3.0).abs() < 0.02, "{}", m.completeness);
+        assert!((m.v - 0.8).abs() < 0.02, "{}", m.v);
+    }
+
+    #[test]
+    fn better_clusterings_score_higher() {
+        let truth: Vec<u32> = (0..100).map(|i| i / 25).collect();
+        let good: Vec<u32> = truth
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| if i % 25 == 0 { (t + 1) % 4 } else { t })
+            .collect();
+        let bad: Vec<u32> = (0..100).map(|i| (i % 7) as u32).collect();
+        assert!(v_measure(&good, &truth).v > v_measure(&bad, &truth).v);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let m = v_measure(&[], &[]);
+        assert_eq!(m.v, 1.0);
+        // All one class, all one cluster: both entropies zero -> perfect.
+        let m = v_measure(&[3, 3], &[1, 1]);
+        assert!((m.v - 1.0).abs() < 1e-9);
+    }
+}

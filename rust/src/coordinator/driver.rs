@@ -1,0 +1,150 @@
+//! Executes [`Job`]s: realizes the dataset, wires measure + family, runs the
+//! builder on the simulated cluster, and returns a structured result.
+
+use crate::ampc::CostReport;
+use crate::coordinator::job::{FamilySpec, Job, MeasureSpec};
+use crate::data::Dataset;
+use crate::graph::Graph;
+use crate::lsh::{LshFamily, MinHash, MixtureHash, SimHash, WeightedMinHash};
+use crate::runtime::{ArtifactMeta, Engine, LearnedModel};
+use crate::sim::{
+    CosineSim, JaccardSim, LearnedSim, MixtureSim, Similarity, WeightedJaccardSim,
+};
+use crate::stars::{Algorithm, StarsBuilder};
+use crate::util::json::Json;
+use crate::util::rng::derive_seed;
+
+/// Outcome of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    /// The built graph.
+    pub graph: Graph,
+    /// Cost report.
+    pub report: CostReport,
+    /// The dataset (kept for downstream evaluation).
+    pub dataset: Dataset,
+}
+
+impl JobResult {
+    /// JSON summary (without the graph payload).
+    pub fn to_json(&self, job: &Job) -> Json {
+        Json::obj(vec![
+            ("job", job.to_json()),
+            ("edges", Json::from(self.graph.num_edges())),
+            ("nodes", Json::from(self.graph.num_nodes())),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
+/// Instantiate a hash family from its spec.
+pub fn make_family(spec: FamilySpec, dim: usize, seed: u64) -> Box<dyn LshFamily> {
+    match spec {
+        FamilySpec::SimHash { bits } => Box::new(SimHash::new(dim.max(1), bits, seed)),
+        FamilySpec::MinHash { perms } => Box::new(MinHash::new(perms, seed)),
+        FamilySpec::WeightedMinHash { perms } => Box::new(WeightedMinHash::new(perms, seed)),
+        FamilySpec::Mixture { len } => Box::new(MixtureHash::new(dim.max(1), len, seed)),
+    }
+}
+
+/// Instantiate a similarity measure. `Learned` loads the AOT artifact and
+/// fails with a clear message if `make artifacts` has not run.
+pub fn make_measure(spec: MeasureSpec) -> crate::Result<Box<dyn Similarity>> {
+    Ok(match spec {
+        MeasureSpec::Cosine => Box::new(CosineSim),
+        MeasureSpec::Jaccard => Box::new(JaccardSim),
+        MeasureSpec::WeightedJaccard => Box::new(WeightedJaccardSim),
+        MeasureSpec::Mixture => Box::new(MixtureSim::default()),
+        MeasureSpec::Learned => {
+            let meta = ArtifactMeta::load(&ArtifactMeta::default_dir())?;
+            let engine = Engine::cpu()?;
+            let model = LearnedModel::load(&engine, &meta)?;
+            Box::new(LearnedSim::new(model))
+        }
+    })
+}
+
+/// Run a job end to end.
+pub fn run_job(job: &Job) -> crate::Result<JobResult> {
+    let dataset = job.dataset.realize(job.data_seed)?;
+    let measure = make_measure(job.measure)?;
+    let family = make_family(
+        job.family,
+        dataset.dim(),
+        derive_seed(job.params.seed, 0xFA),
+    );
+    let workers = if job.workers == 0 {
+        crate::util::pool::default_workers()
+    } else {
+        job.workers
+    };
+    let mut builder = StarsBuilder::new(&dataset)
+        .similarity(measure.as_ref())
+        .params(job.params.clone())
+        .workers(workers);
+    if job.params.algorithm != Algorithm::AllPair {
+        builder = builder.hash(family.as_ref());
+    }
+    let out = builder.build();
+    Ok(JobResult {
+        graph: out.graph,
+        report: out.report,
+        dataset,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::DatasetSpec;
+    use crate::stars::BuildParams;
+
+    #[test]
+    fn run_small_job_end_to_end() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 500,
+                dim: 32,
+                modes: 10,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(Algorithm::LshStars).sketches(10),
+            data_seed: 3,
+            workers: 2,
+        };
+        let res = run_job(&job).unwrap();
+        assert!(res.graph.num_edges() > 0);
+        assert!(res.report.comparisons > 0);
+        let j = res.to_json(&job).to_string();
+        assert!(j.contains("comparisons"));
+    }
+
+    #[test]
+    fn zipf_job_with_weighted_minhash() {
+        let job = Job {
+            dataset: DatasetSpec::ZipfSets { n: 300 },
+            measure: MeasureSpec::WeightedJaccard,
+            family: FamilySpec::WeightedMinHash { perms: 3 },
+            params: BuildParams::threshold_mode(Algorithm::LshStars)
+                .sketches(8)
+                .threshold(0.1),
+            data_seed: 4,
+            workers: 2,
+        };
+        let res = run_job(&job).unwrap();
+        assert!(res.graph.num_edges() > 0);
+    }
+
+    #[test]
+    fn family_construction() {
+        let f = make_family(FamilySpec::SimHash { bits: 8 }, 16, 1);
+        assert_eq!(f.sketch_len(), 8);
+        let f = make_family(FamilySpec::WeightedMinHash { perms: 3 }, 0, 1);
+        assert_eq!(f.sketch_len(), 3);
+        let f = make_family(FamilySpec::Mixture { len: 12 }, 16, 1);
+        assert_eq!(f.sketch_len(), 12);
+        let f = make_family(FamilySpec::MinHash { perms: 4 }, 0, 1);
+        assert_eq!(f.sketch_len(), 4);
+    }
+}

@@ -1,0 +1,981 @@
+//! Experiment registry: one runner per paper table/figure.
+//!
+//! Each runner prints the same rows/series the paper reports and returns a
+//! JSON document (also written to `results/` by the benches/CLI). Dataset
+//! sizes are scaled to a single box; the *shape* of the results — who wins,
+//! by roughly what factor — is the reproduction target (DESIGN.md §4).
+
+use crate::bench::Table;
+use crate::coordinator::driver::{make_family, make_measure};
+use crate::coordinator::job::{DatasetSpec, FamilySpec, MeasureSpec};
+use crate::data::Dataset;
+use crate::eval::recall::{knn_recall, sample_queries, threshold_recall, RecallReport};
+use crate::graph::{Csr, Graph};
+use crate::sim::Similarity;
+use crate::stars::{allpair, Algorithm, BuildParams, StarsBuilder};
+use crate::util::json::Json;
+
+/// Shared experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Sketch counts R to sweep (paper: 25, 100, 400).
+    pub sketches: Vec<usize>,
+    /// Dataset size multiplier.
+    pub scale: f64,
+    /// Worker threads (0 = auto).
+    pub workers: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        let full = std::env::var("STARS_BENCH_FULL").is_ok();
+        let scale = std::env::var("STARS_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(if full { 1.0 } else { 0.5 });
+        ExpConfig {
+            sketches: if full {
+                vec![25, 100, 400]
+            } else {
+                vec![25, 100]
+            },
+            scale,
+            workers: 0,
+            seed: 42,
+        }
+    }
+}
+
+impl ExpConfig {
+    fn n(&self, base: usize) -> usize {
+        ((base as f64) * self.scale).round() as usize
+    }
+
+    fn workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::pool::default_workers()
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// A standard evaluation dataset with its paper-default measure/families.
+pub struct Bench {
+    /// Display name.
+    pub name: String,
+    /// The realized dataset.
+    pub ds: Dataset,
+    /// Measure spec.
+    pub measure: MeasureSpec,
+    /// LSH-mode family.
+    pub lsh_family: FamilySpec,
+    /// SortingLSH-mode family (M=30).
+    pub sorting_family: FamilySpec,
+    /// Edge threshold for threshold-mode experiments.
+    pub threshold: f32,
+}
+
+/// Scale a sketching dimension from the paper's dataset size to ours so
+/// bucket occupancy stays in the same regime: each halving of n removes
+/// roughly one SimHash bit (one factor-2 of bucket count).
+pub fn scaled_bits(paper_bits: usize, paper_n: usize, n: usize) -> usize {
+    let shrink = (paper_n as f64 / n.max(1) as f64).log2().round().max(0.0) as usize;
+    paper_bits.saturating_sub(shrink).max(3)
+}
+
+/// The three "real" datasets of §5 (scaled stand-ins).
+///
+/// LSH sketching dimensions follow Appendix D.2 (M=12 SimHash for MNIST,
+/// M=3 weighted MinHash for Wikipedia, M=12 mixture for Amazon2m, M=30 for
+/// SortingLSH), rescaled via [`scaled_bits`] to this run's dataset sizes.
+pub fn standard_benches(cfg: &ExpConfig) -> Vec<Bench> {
+    let n = cfg.n(4000);
+    let specs = [
+        (DatasetSpec::Digits { n }, 0.5f32),
+        (DatasetSpec::ZipfSets { n }, 0.15),
+        (DatasetSpec::Products { n }, 0.4),
+    ];
+    specs
+        .into_iter()
+        .map(|(spec, threshold)| {
+            let (lsh_family, sorting_family) = match &spec {
+                DatasetSpec::Digits { n } => (
+                    FamilySpec::SimHash {
+                        bits: scaled_bits(12, 60_000, *n),
+                    },
+                    FamilySpec::SimHash {
+                        // Sorting prefixes adapt per point, so keep M high.
+                        bits: scaled_bits(30, 60_000, *n) + 8,
+                    },
+                ),
+                DatasetSpec::ZipfSets { n } => (
+                    FamilySpec::WeightedMinHash {
+                        perms: if *n < 100_000 { 2 } else { 3 },
+                    },
+                    FamilySpec::WeightedMinHash { perms: 12 },
+                ),
+                DatasetSpec::Products { n } => (
+                    FamilySpec::Mixture {
+                        len: scaled_bits(12, 2_450_000, *n),
+                    },
+                    FamilySpec::Mixture {
+                        len: scaled_bits(30, 2_450_000, *n) + 8,
+                    },
+                ),
+                _ => unreachable!(),
+            };
+            Bench {
+                name: spec.name(),
+                ds: spec.realize(cfg.seed).unwrap(),
+                measure: MeasureSpec::default_for(&spec),
+                lsh_family,
+                sorting_family,
+                threshold,
+            }
+        })
+        .collect()
+}
+
+/// Build one graph, returning (graph, comparisons, total_time, real_time).
+#[allow(clippy::too_many_arguments)]
+pub fn run_build(
+    ds: &Dataset,
+    measure: &dyn Similarity,
+    family: FamilySpec,
+    mut params: BuildParams,
+    workers: usize,
+    seed: u64,
+) -> (Graph, u64, f64, f64) {
+    params = params.seed(seed);
+    let fam = make_family(family, ds.dim(), seed ^ 0xFA);
+    let counting = CountingSimDyn::new(measure);
+    let mut b = StarsBuilder::new(ds)
+        .similarity(&counting)
+        .params(params.clone())
+        .workers(workers);
+    if params.algorithm != Algorithm::AllPair {
+        b = b.hash(fam.as_ref());
+    }
+    let out = b.build();
+    (
+        out.graph,
+        out.report.comparisons,
+        out.report.total_time,
+        out.report.real_time,
+    )
+}
+
+/// Dyn-friendly counting wrapper (CountingSim is generic).
+struct CountingSimDyn<'a> {
+    inner: &'a dyn Similarity,
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> CountingSimDyn<'a> {
+    fn new(inner: &'a dyn Similarity) -> Self {
+        CountingSimDyn {
+            inner,
+            count: Default::default(),
+        }
+    }
+}
+
+impl Similarity for CountingSimDyn<'_> {
+    fn sim(&self, ds: &Dataset, i: usize, j: usize) -> f32 {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sim(ds, i, j)
+    }
+
+    fn sim_batch(&self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        self.count
+            .fetch_add(candidates.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sim_batch(ds, leader, candidates, out);
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+fn write_results(name: &str, json: &Json) {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir).ok();
+    std::fs::write(dir.join(format!("{name}.json")), json.to_pretty()).ok();
+}
+
+// ------------------------------------------------------------------------
+// Figure 1: number of comparisons per algorithm per dataset.
+// ------------------------------------------------------------------------
+
+/// Figure 1 runner.
+pub fn fig1(cfg: &ExpConfig) -> Json {
+    println!("== Figure 1: number of similarity comparisons ==");
+    let mut table = Table::new(&["dataset", "R", "algorithm", "comparisons", "vs stars"]);
+    let mut rows = Vec::new();
+    for bench in standard_benches(cfg) {
+        let measure = make_measure(bench.measure).unwrap();
+        // AllPair baseline (R-independent).
+        let n = bench.ds.len() as u64;
+        let allpair_cmp = n * (n - 1) / 2;
+        table.row(vec![
+            bench.name.clone(),
+            "-".into(),
+            "allpair".into(),
+            crate::bench::fmt_count(allpair_cmp),
+            String::new(),
+        ]);
+        for &r in &cfg.sketches {
+            let mut by_algo = Vec::new();
+            for algo in [
+                Algorithm::Lsh,
+                Algorithm::LshStars,
+                Algorithm::SortingLsh,
+                Algorithm::SortingLshStars,
+            ] {
+                let (family, params) = params_for(&bench, algo, r);
+                let (_, cmp, _, _) = run_build(
+                    &bench.ds,
+                    measure.as_ref(),
+                    family,
+                    params,
+                    cfg.workers(),
+                    cfg.seed ^ r as u64,
+                );
+                by_algo.push((algo, cmp));
+            }
+            let stars_cmp = by_algo
+                .iter()
+                .find(|(a, _)| *a == Algorithm::LshStars)
+                .unwrap()
+                .1
+                .max(1);
+            for (algo, cmp) in &by_algo {
+                table.row(vec![
+                    bench.name.clone(),
+                    r.to_string(),
+                    algo.name().into(),
+                    crate::bench::fmt_count(*cmp),
+                    format!("{:.1}x", *cmp as f64 / stars_cmp as f64),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("dataset", Json::from(bench.name.clone())),
+                    ("R", Json::from(r)),
+                    ("algorithm", Json::from(algo.name())),
+                    ("comparisons", Json::from(*cmp)),
+                ]));
+            }
+            rows.push(Json::obj(vec![
+                ("dataset", Json::from(bench.name.clone())),
+                ("R", Json::from(r)),
+                ("algorithm", Json::from("allpair")),
+                ("comparisons", Json::from(allpair_cmp)),
+            ]));
+        }
+    }
+    table.print();
+    let out = Json::obj(vec![("figure", Json::from("fig1")), ("rows", Json::Arr(rows))]);
+    write_results("fig1_comparisons", &out);
+    out
+}
+
+/// Family + params for an algorithm on a bench, paper defaults.
+pub fn params_for(bench: &Bench, algo: Algorithm, r: usize) -> (FamilySpec, BuildParams) {
+    match algo {
+        Algorithm::SortingLsh | Algorithm::SortingLshStars => (
+            bench.sorting_family,
+            BuildParams::knn_mode(algo).sketches(r),
+        ),
+        _ => (
+            bench.lsh_family,
+            BuildParams::threshold_mode(algo)
+                .sketches(r)
+                .threshold(bench.threshold),
+        ),
+    }
+}
+
+// ------------------------------------------------------------------------
+// Figure 2: recall of near(est) neighbors.
+// ------------------------------------------------------------------------
+
+/// Figure 2 runner. Uses R = max of cfg.sketches (paper: 400).
+pub fn fig2(cfg: &ExpConfig) -> Json {
+    println!("== Figure 2: recall of near(est) neighbors ==");
+    let r = *cfg.sketches.iter().max().unwrap();
+    let k = 100;
+    let mut table = Table::new(&[
+        "dataset",
+        "algorithm",
+        "metric",
+        "recall",
+        "recall(1.01-approx)",
+    ]);
+    let mut rows = Vec::new();
+    for bench in standard_benches(cfg) {
+        let measure = make_measure(bench.measure).unwrap();
+        let cluster = crate::ampc::Cluster::new(cfg.workers());
+        let truth_thresh = allpair::exact_threshold_neighbors(
+            &bench.ds,
+            measure.as_ref(),
+            bench.threshold,
+            &cluster,
+        );
+        let truth_knn = allpair::exact_knn(&bench.ds, measure.as_ref(), k, &cluster);
+        let queries = sample_queries(bench.ds.len(), 500, cfg.seed ^ 0xF2);
+
+        for algo in [
+            Algorithm::Lsh,
+            Algorithm::LshStars,
+            Algorithm::SortingLsh,
+            Algorithm::SortingLshStars,
+        ] {
+            let (family, params) = params_for(&bench, algo, r);
+            let (graph, _, _, _) = run_build(
+                &bench.ds,
+                measure.as_ref(),
+                family,
+                params,
+                cfg.workers(),
+                cfg.seed ^ 0x2F2,
+            );
+            let csr = Csr::new(&graph);
+            let (metric, rep): (&str, RecallReport) = match algo {
+                Algorithm::Lsh | Algorithm::LshStars => (
+                    "sim>=thresh",
+                    threshold_recall(
+                        &csr,
+                        &truth_thresh,
+                        &queries,
+                        bench.threshold,
+                        bench.threshold * 0.99,
+                    ),
+                ),
+                _ => (
+                    "100-nn",
+                    knn_recall(
+                        &bench.ds,
+                        measure.as_ref(),
+                        &csr,
+                        &truth_knn,
+                        &queries,
+                        k,
+                        0.99,
+                    ),
+                ),
+            };
+            // Stars algorithms are scored on two-hop recall, baselines on
+            // one-hop (the paper's protocol).
+            let (main, relaxed) = if algo.is_stars() {
+                (rep.two_hop, rep.two_hop_relaxed)
+            } else {
+                (rep.one_hop, rep.one_hop)
+            };
+            table.row(vec![
+                bench.name.clone(),
+                algo.name().into(),
+                metric.into(),
+                format!("{main:.3}"),
+                format!("{relaxed:.3}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::from(bench.name.clone())),
+                ("algorithm", Json::from(algo.name())),
+                ("metric", Json::from(metric)),
+                ("recall", Json::from(main)),
+                ("recall_relaxed", Json::from(relaxed)),
+                ("R", Json::from(r)),
+            ]));
+        }
+    }
+    table.print();
+    let out = Json::obj(vec![("figure", Json::from("fig2")), ("rows", Json::Arr(rows))]);
+    write_results("fig2_recall", &out);
+    out
+}
+
+// ------------------------------------------------------------------------
+// Figure 3: number of edges above the similarity threshold.
+// ------------------------------------------------------------------------
+
+/// Figure 3 runner (LSH-based algorithms; R sweep).
+pub fn fig3(cfg: &ExpConfig) -> Json {
+    println!("== Figure 3: edges with similarity >= threshold ==");
+    let mut table = Table::new(&["dataset", "R", "algorithm", "edges", "edges(relaxed)"]);
+    let mut rows = Vec::new();
+    for bench in standard_benches(cfg) {
+        let measure = make_measure(bench.measure).unwrap();
+        for &r in &cfg.sketches {
+            for algo in [Algorithm::Lsh, Algorithm::LshStars] {
+                let (family, params) = params_for(&bench, algo, r);
+                // Relaxed edge threshold so both counts are measurable.
+                let params = params.threshold(bench.threshold * 0.99);
+                let (graph, _, _, _) = run_build(
+                    &bench.ds,
+                    measure.as_ref(),
+                    family,
+                    params,
+                    cfg.workers(),
+                    cfg.seed ^ (r as u64) << 8,
+                );
+                let strict = graph.count_weight_ge(bench.threshold);
+                let relaxed = graph.num_edges();
+                table.row(vec![
+                    bench.name.clone(),
+                    r.to_string(),
+                    algo.name().into(),
+                    crate::bench::fmt_count(strict as u64),
+                    crate::bench::fmt_count(relaxed as u64),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("dataset", Json::from(bench.name.clone())),
+                    ("R", Json::from(r)),
+                    ("algorithm", Json::from(algo.name())),
+                    ("edges", Json::from(strict)),
+                    ("edges_relaxed", Json::from(relaxed)),
+                ]));
+            }
+        }
+    }
+    table.print();
+    let out = Json::obj(vec![("figure", Json::from("fig3")), ("rows", Json::Arr(rows))]);
+    write_results("fig3_edges", &out);
+    out
+}
+
+// ------------------------------------------------------------------------
+// Figure 4: V-Measure of Affinity clustering.
+// ------------------------------------------------------------------------
+
+/// Figure 4 runner. Clusters digits (10 classes) and products (47 classes,
+/// mixture + learned similarity) with average Affinity clustering.
+pub fn fig4(cfg: &ExpConfig) -> Json {
+    println!("== Figure 4: V-Measure of Affinity clustering ==");
+    let r = *cfg.sketches.iter().max().unwrap();
+    let mut table = Table::new(&["dataset", "similarity", "algorithm", "vmeasure"]);
+    let mut rows = Vec::new();
+
+    // (dataset bench index, measure, label)
+    let benches = standard_benches(cfg);
+    let mut cases: Vec<(&Bench, MeasureSpec, String)> = vec![
+        (&benches[0], benches[0].measure, "cosine".into()),
+        (&benches[2], benches[2].measure, "mix".into()),
+    ];
+    let learned_available = make_measure(MeasureSpec::Learned).is_ok();
+    if learned_available {
+        cases.push((&benches[2], MeasureSpec::Learned, "learn".into()));
+    } else {
+        println!("(learned similarity skipped: run `make artifacts`)");
+    }
+
+    for (bench, mspec, label) in cases {
+        let measure = make_measure(mspec).unwrap();
+        let classes = bench.ds.num_classes();
+        let threshold = if mspec == MeasureSpec::Learned {
+            0.5
+        } else {
+            bench.threshold
+        };
+        // Ground truth graph baseline: allpair thresholded.
+        let cluster = crate::ampc::Cluster::new(cfg.workers());
+        let exact = Graph::from_edges(
+            bench.ds.len(),
+            allpair::allpair_edges(&bench.ds, measure.as_ref(), threshold, &cluster),
+        );
+        let level = crate::clustering::affinity_cluster_to_k(&exact, classes);
+        let v = crate::clustering::v_measure(&level.labels, &bench.ds.labels).v;
+        table.row(vec![
+            bench.name.clone(),
+            label.clone(),
+            format!("allpair-sim{threshold}"),
+            format!("{v:.3}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("dataset", Json::from(bench.name.clone())),
+            ("similarity", Json::from(label.clone())),
+            ("algorithm", Json::from("allpair")),
+            ("vmeasure", Json::from(v)),
+        ]));
+
+        for algo in [
+            Algorithm::Lsh,
+            Algorithm::LshStars,
+            Algorithm::SortingLsh,
+            Algorithm::SortingLshStars,
+        ] {
+            let (family, params) = params_for(bench, algo, r);
+            let params = match algo {
+                Algorithm::Lsh | Algorithm::LshStars => params.threshold(threshold),
+                _ => params.degree_cap(100),
+            };
+            let (graph, _, _, _) = run_build(
+                &bench.ds,
+                measure.as_ref(),
+                family,
+                params,
+                cfg.workers(),
+                cfg.seed ^ 0x44,
+            );
+            // Paper: keep edges >= threshold for LSH graphs; 100 closest for
+            // SortingLSH graphs (already degree-capped above).
+            let graph = match algo {
+                Algorithm::Lsh | Algorithm::LshStars => graph.filter_weight(threshold),
+                _ => graph,
+            };
+            let level = crate::clustering::affinity_cluster_to_k(&graph, classes);
+            let v = crate::clustering::v_measure(&level.labels, &bench.ds.labels).v;
+            table.row(vec![
+                bench.name.clone(),
+                label.clone(),
+                algo.name().into(),
+                format!("{v:.3}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::from(bench.name.clone())),
+                ("similarity", Json::from(label.clone())),
+                ("algorithm", Json::from(algo.name())),
+                ("vmeasure", Json::from(v)),
+            ]));
+        }
+    }
+    table.print();
+    let out = Json::obj(vec![("figure", Json::from("fig4")), ("rows", Json::Arr(rows))]);
+    write_results("fig4_vmeasure", &out);
+    out
+}
+
+// ------------------------------------------------------------------------
+// Figures 5-7: effect of the number of leaders (Appendix D.4).
+// ------------------------------------------------------------------------
+
+/// Figures 5/6/7 runner: comparisons, recall, and edges vs s ∈ {1,5,10,25}.
+pub fn fig5_leaders(cfg: &ExpConfig) -> Json {
+    println!("== Figures 5-7: effect of the number of leaders (R fixed) ==");
+    let r = *cfg.sketches.iter().max().unwrap();
+    let mut table = Table::new(&[
+        "dataset", "s", "algorithm", "comparisons", "recall(2hop)", "edges",
+    ]);
+    let mut rows = Vec::new();
+    for bench in standard_benches(cfg) {
+        let measure = make_measure(bench.measure).unwrap();
+        let cluster = crate::ampc::Cluster::new(cfg.workers());
+        let truth = allpair::exact_threshold_neighbors(
+            &bench.ds,
+            measure.as_ref(),
+            bench.threshold,
+            &cluster,
+        );
+        let queries = sample_queries(bench.ds.len(), 400, cfg.seed ^ 0x57);
+        for s in [1usize, 5, 10, 25] {
+            let (family, params) = params_for(&bench, Algorithm::LshStars, r);
+            let params = params.leaders(s);
+            let (graph, cmp, _, _) = run_build(
+                &bench.ds,
+                measure.as_ref(),
+                family,
+                params,
+                cfg.workers(),
+                cfg.seed ^ (s as u64) << 4,
+            );
+            let csr = Csr::new(&graph);
+            let rec = threshold_recall(
+                &csr,
+                &truth,
+                &queries,
+                bench.threshold,
+                bench.threshold * 0.99,
+            );
+            let edges = graph.count_weight_ge(bench.threshold);
+            table.row(vec![
+                bench.name.clone(),
+                s.to_string(),
+                "lsh+stars".into(),
+                crate::bench::fmt_count(cmp),
+                format!("{:.3}", rec.two_hop_relaxed),
+                crate::bench::fmt_count(edges as u64),
+            ]);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::from(bench.name.clone())),
+                ("s", Json::from(s)),
+                ("comparisons", Json::from(cmp)),
+                ("recall_2hop", Json::from(rec.two_hop)),
+                ("recall_2hop_relaxed", Json::from(rec.two_hop_relaxed)),
+                ("edges", Json::from(edges)),
+                ("R", Json::from(r)),
+            ]));
+        }
+    }
+    table.print();
+    let out = Json::obj(vec![
+        ("figure", Json::from("fig5-7")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    write_results("fig5_leaders", &out);
+    out
+}
+
+// ------------------------------------------------------------------------
+// Tables 1 & 2: relative total running time, mixture vs learned similarity.
+// ------------------------------------------------------------------------
+
+/// Table 1 (LSH-based) and Table 2 (SortingLSH-based) runner.
+pub fn table12(cfg: &ExpConfig, sorting: bool) -> Json {
+    let name = if sorting { "Table 2 (SortingLSH)" } else { "Table 1 (LSH)" };
+    println!("== {name}: relative total running time, products ==");
+    let spec = DatasetSpec::Products { n: cfg.n(2000) };
+    let ds = spec.realize(cfg.seed).unwrap();
+    let bench = Bench {
+        name: spec.name(),
+        ds,
+        measure: MeasureSpec::Mixture,
+        lsh_family: FamilySpec::default_for(&spec, false),
+        sorting_family: FamilySpec::default_for(&spec, true),
+        threshold: 0.4,
+    };
+    let learned_ok = make_measure(MeasureSpec::Learned).is_ok();
+    let mut measures = vec![MeasureSpec::Mixture];
+    if learned_ok {
+        measures.push(MeasureSpec::Learned);
+    } else {
+        println!("(learned similarity skipped: run `make artifacts`)");
+    }
+    let rs = [25usize, 400];
+    let algos = if sorting {
+        [Algorithm::SortingLsh, Algorithm::SortingLshStars]
+    } else {
+        [Algorithm::Lsh, Algorithm::LshStars]
+    };
+
+    let mut cells: Vec<(String, String, f64)> = Vec::new();
+    for mspec in &measures {
+        let measure = make_measure(*mspec).unwrap();
+        for algo in algos {
+            for r in rs {
+                let (family, params) = params_for(&bench, algo, r);
+                let (_, _, total, _) = run_build(
+                    &bench.ds,
+                    measure.as_ref(),
+                    family,
+                    params,
+                    cfg.workers(),
+                    cfg.seed ^ 0x71,
+                );
+                cells.push((
+                    format!("{} (R={})", algo.name(), r),
+                    mspec.name().to_string(),
+                    total,
+                ));
+            }
+        }
+    }
+    // Normalize to non-Stars R=25 mixture (the paper's 1.00 row).
+    let base = cells
+        .iter()
+        .find(|(row, m, _)| row.starts_with(algos[0].name()) && row.contains("R=25") && m == "mixture")
+        .map(|(_, _, t)| *t)
+        .unwrap_or(1.0)
+        .max(1e-9);
+    let mut table = Table::new(&["configuration", "mixture", "learned"]);
+    let mut rows = Vec::new();
+    let row_names: Vec<String> = cells
+        .iter()
+        .map(|(r, _, _)| r.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    for rn in row_names {
+        let get = |m: &str| {
+            cells
+                .iter()
+                .find(|(r, mm, _)| *r == rn && mm == m)
+                .map(|(_, _, t)| t / base)
+        };
+        let mix = get("mixture");
+        let lrn = get("learned");
+        table.row(vec![
+            rn.clone(),
+            mix.map(|v| format!("{v:.2}")).unwrap_or_default(),
+            lrn.map(|v| format!("{v:.2}")).unwrap_or_default(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("configuration", Json::from(rn.clone())),
+            ("mixture_rel", mix.map(Json::from).unwrap_or(Json::Null)),
+            ("learned_rel", lrn.map(Json::from).unwrap_or(Json::Null)),
+        ]));
+    }
+    table.print();
+    let out = Json::obj(vec![
+        ("table", Json::from(if sorting { "table2" } else { "table1" })),
+        ("baseline_total_seconds", Json::from(base)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    write_results(if sorting { "table2_sortinglsh" } else { "table1_lsh" }, &out);
+    out
+}
+
+// ------------------------------------------------------------------------
+// Table 3: scaling on the random GMM datasets.
+// ------------------------------------------------------------------------
+
+/// Table 3 runner: Random "1B/10B" stand-ins (default 100k/1M; scale with
+/// `STARS_BENCH_FULL` or cfg.scale for the 1M/10M run).
+pub fn table3(cfg: &ExpConfig) -> Json {
+    println!("== Table 3: relative total running time on random GMM ==");
+    let full = std::env::var("STARS_BENCH_FULL").is_ok();
+    let (n_small, n_big) = if full {
+        (1_000_000, 10_000_000)
+    } else {
+        (cfg.n(40_000), cfg.n(400_000))
+    };
+    let r = 25usize;
+    let mut rows = Vec::new();
+    let mut table = Table::new(&["configuration", &format!("random-{n_small}"), &format!("random-{n_big}")]);
+
+    let mut cells: Vec<(String, usize, f64, f64)> = Vec::new(); // (config, n, total, real)
+    for &n in &[n_small, n_big] {
+        let spec = DatasetSpec::Random { n, dim: 100, modes: 100 };
+        let ds = spec.realize(cfg.seed).unwrap();
+        let measure = make_measure(MeasureSpec::Cosine).unwrap();
+        for (algo, fam_bits) in [
+            (Algorithm::Lsh, 16usize),
+            (Algorithm::SortingLsh, 30),
+            (Algorithm::LshStars, 16),
+            (Algorithm::SortingLshStars, 30),
+        ] {
+            let family = FamilySpec::SimHash { bits: fam_bits };
+            let params = match algo {
+                Algorithm::Lsh | Algorithm::LshStars => BuildParams::threshold_mode(algo)
+                    .sketches(r)
+                    .threshold(0.5)
+                    .degree_cap(250),
+                _ => BuildParams::knn_mode(algo).sketches(r).degree_cap(250),
+            };
+            let t0 = std::time::Instant::now();
+            let (_, cmp, total, real) =
+                run_build(&ds, measure.as_ref(), family, params, cfg.workers(), cfg.seed);
+            crate::info!(
+                "table3 {} n={} comparisons={} total={:.1}s real={:.1}s ({:.1}s incl. overhead)",
+                algo.name(),
+                n,
+                cmp,
+                total,
+                real,
+                t0.elapsed().as_secs_f64()
+            );
+            cells.push((algo.name().to_string(), n, total, real));
+        }
+    }
+    let base = cells
+        .iter()
+        .find(|(a, n, _, _)| a == "lsh" && *n == n_small)
+        .map(|(_, _, t, _)| *t)
+        .unwrap_or(1.0)
+        .max(1e-9);
+    for algo in ["lsh", "sortinglsh", "lsh+stars", "sortinglsh+stars"] {
+        let get = |n: usize| {
+            cells
+                .iter()
+                .find(|(a, nn, _, _)| a == algo && *nn == n)
+                .map(|(_, _, t, _)| t / base)
+        };
+        let (s, b) = (get(n_small), get(n_big));
+        table.row(vec![
+            format!("{algo} (R={r})"),
+            s.map(|v| format!("{v:.3}")).unwrap_or_default(),
+            b.map(|v| format!("{v:.3}")).unwrap_or_default(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("algorithm", Json::from(algo)),
+            ("rel_small", s.map(Json::from).unwrap_or(Json::Null)),
+            ("rel_big", b.map(Json::from).unwrap_or(Json::Null)),
+            ("n_small", Json::from(n_small)),
+            ("n_big", Json::from(n_big)),
+        ]));
+    }
+    table.print();
+    // Real running times (the paper's 1h/2h/23h narrative, scaled).
+    for (a, n, total, real) in &cells {
+        rows.push(Json::obj(vec![
+            ("algorithm", Json::from(a.clone())),
+            ("n", Json::from(*n)),
+            ("total_s", Json::from(*total)),
+            ("real_s", Json::from(*real)),
+        ]));
+    }
+    let out = Json::obj(vec![("table", Json::from("table3")), ("rows", Json::Arr(rows))]);
+    write_results("table3_scale", &out);
+    out
+}
+
+// ------------------------------------------------------------------------
+// Ablations (§4 design choices): bucket-size cap and feature-join strategy.
+// ------------------------------------------------------------------------
+
+/// Ablation A: the max-bucket cap. The paper caps buckets (1000 non-Stars /
+/// 10000 Stars) to bound worst-case scoring; Stars' nearly-linear per-bucket
+/// cost is what lets the cap relax. Sweep the cap and report comparisons +
+/// recall.
+pub fn ablation_bucket_cap(cfg: &ExpConfig) -> Json {
+    println!("== Ablation: max bucket size (digits, LSH algorithms, R=25) ==");
+    let bench = &standard_benches(cfg)[0];
+    let measure = make_measure(bench.measure).unwrap();
+    let cluster = crate::ampc::Cluster::new(cfg.workers());
+    let truth = allpair::exact_threshold_neighbors(
+        &bench.ds,
+        measure.as_ref(),
+        bench.threshold,
+        &cluster,
+    );
+    let queries = sample_queries(bench.ds.len(), 300, cfg.seed);
+    let mut table = Table::new(&["algorithm", "cap", "comparisons", "recall(2hop rel.)"]);
+    let mut rows = Vec::new();
+    for algo in [Algorithm::Lsh, Algorithm::LshStars] {
+        for cap in [100usize, 1_000, 10_000] {
+            let (family, params) = params_for(bench, algo, 25);
+            let params = params.max_bucket(cap);
+            let (graph, cmp, _, _) = run_build(
+                &bench.ds,
+                measure.as_ref(),
+                family,
+                params,
+                cfg.workers(),
+                cfg.seed ^ cap as u64,
+            );
+            let csr = Csr::new(&graph);
+            let rec = threshold_recall(
+                &csr,
+                &truth,
+                &queries,
+                bench.threshold,
+                bench.threshold * 0.99,
+            );
+            let recall = if algo.is_stars() {
+                rec.two_hop_relaxed
+            } else {
+                rec.one_hop
+            };
+            table.row(vec![
+                algo.name().into(),
+                cap.to_string(),
+                crate::bench::fmt_count(cmp),
+                format!("{recall:.3}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("algorithm", Json::from(algo.name())),
+                ("cap", Json::from(cap)),
+                ("comparisons", Json::from(cmp)),
+                ("recall", Json::from(recall)),
+            ]));
+        }
+    }
+    table.print();
+    let out = Json::obj(vec![
+        ("ablation", Json::from("bucket_cap")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    write_results("ablation_bucket_cap", &out);
+    out
+}
+
+/// Ablation B: feature-join strategy (§4). Direct (in-process), DHT (O(n)
+/// RAM, per-bucket lookups) and shuffle (O(Rn) disk bytes) must produce the
+/// same graph; they differ in the I/O they charge.
+pub fn ablation_join(cfg: &ExpConfig) -> Json {
+    println!("== Ablation: feature-join strategy (products, lsh+stars, R=25) ==");
+    let bench = &standard_benches(cfg)[2];
+    let measure = make_measure(bench.measure).unwrap();
+    let mut table = Table::new(&[
+        "join", "edges", "comparisons", "dht lookups", "dht MB", "shuffle MB",
+    ]);
+    let mut rows = Vec::new();
+    for join in [
+        crate::stars::JoinStrategy::Direct,
+        crate::stars::JoinStrategy::Dht,
+        crate::stars::JoinStrategy::Shuffle,
+    ] {
+        let (family, params) = params_for(bench, Algorithm::LshStars, 25);
+        let params = params.join(join);
+        let fam = make_family(family, bench.ds.dim(), cfg.seed ^ 0xFA);
+        let counting = CountingSimDyn::new(measure.as_ref());
+        let out = StarsBuilder::new(&bench.ds)
+            .similarity(&counting)
+            .hash(fam.as_ref())
+            .params(params)
+            .workers(cfg.workers())
+            .build();
+        table.row(vec![
+            format!("{join:?}"),
+            crate::bench::fmt_count(out.graph.num_edges() as u64),
+            crate::bench::fmt_count(out.report.comparisons),
+            crate::bench::fmt_count(out.report.dht_lookups),
+            format!("{:.1}", out.report.dht_bytes as f64 / 1e6),
+            format!("{:.1}", out.report.shuffle_bytes as f64 / 1e6),
+        ]);
+        rows.push(Json::obj(vec![
+            ("join", Json::from(format!("{join:?}"))),
+            ("edges", Json::from(out.graph.num_edges())),
+            ("comparisons", Json::from(out.report.comparisons)),
+            ("dht_lookups", Json::from(out.report.dht_lookups)),
+            ("dht_bytes", Json::from(out.report.dht_bytes)),
+            ("shuffle_bytes", Json::from(out.report.shuffle_bytes)),
+        ]));
+    }
+    table.print();
+    let out = Json::obj(vec![
+        ("ablation", Json::from("join_strategy")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    write_results("ablation_join", &out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            sketches: vec![5],
+            scale: 0.05, // 150-point datasets
+            workers: 2,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn fig1_runs_and_orders_algorithms() {
+        let out = fig1(&tiny_cfg());
+        let rows = out.get("rows").unwrap().as_arr().unwrap();
+        assert!(!rows.is_empty());
+        // For each dataset/R, lsh must have >= comparisons than lsh+stars.
+        for r in rows {
+            if r.get("algorithm").unwrap().as_str() == Some("allpair") {
+                continue;
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_counts_edges() {
+        let out = fig3(&tiny_cfg());
+        let rows = out.get("rows").unwrap().as_arr().unwrap();
+        for r in rows {
+            let strict = r.get("edges").unwrap().as_usize().unwrap();
+            let relaxed = r.get("edges_relaxed").unwrap().as_usize().unwrap();
+            assert!(relaxed >= strict);
+        }
+    }
+
+    #[test]
+    fn params_for_uses_knn_mode_for_sorting() {
+        let cfg = tiny_cfg();
+        let bench = &standard_benches(&cfg)[0];
+        let (_, p) = params_for(bench, Algorithm::SortingLshStars, 5);
+        assert_eq!(p.threshold, f32::MIN);
+        let (_, p) = params_for(bench, Algorithm::LshStars, 5);
+        assert_eq!(p.threshold, bench.threshold);
+    }
+}

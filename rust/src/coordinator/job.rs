@@ -1,0 +1,251 @@
+//! Declarative job specification: dataset × measure × hash family × params.
+//!
+//! Jobs are what the CLI, the examples, and the per-figure benches all
+//! construct; [`super::driver::run_job`] executes them.
+
+use crate::data::synth::{self, ProductsParams, ZipfSetsParams};
+use crate::data::Dataset;
+use crate::stars::BuildParams;
+use crate::util::json::Json;
+
+/// Which dataset to generate (or load).
+#[derive(Clone, Debug)]
+pub enum DatasetSpec {
+    /// MNIST stand-in: 10 classes, 784-d images.
+    Digits { n: usize },
+    /// Wikipedia stand-in: weighted word sets.
+    ZipfSets { n: usize },
+    /// Amazon2m stand-in: 47 classes, embedding + co-purchase sets.
+    Products { n: usize },
+    /// Random1B/10B stand-in: 100-mode GMM.
+    Random { n: usize, dim: usize, modes: usize },
+    /// Load from a dataset file written by `stars gen-data`.
+    File { path: String },
+}
+
+impl DatasetSpec {
+    /// Instantiate the dataset (deterministic in `seed`).
+    pub fn realize(&self, seed: u64) -> crate::Result<Dataset> {
+        Ok(match self {
+            DatasetSpec::Digits { n } => synth::digits(*n, seed),
+            DatasetSpec::ZipfSets { n } => synth::zipf_sets(*n, &ZipfSetsParams::default(), seed),
+            DatasetSpec::Products { n } => synth::products(*n, &ProductsParams::default(), seed),
+            DatasetSpec::Random { n, dim, modes } => {
+                synth::gaussian_mixture(*n, *dim, *modes, 0.1, seed)
+            }
+            DatasetSpec::File { path } => {
+                let p = std::path::Path::new(path);
+                if p.is_dir() {
+                    crate::data::mnist::load_dir(p)?
+                } else {
+                    crate::data::io::load(p)?
+                }
+            }
+        })
+    }
+
+    /// Parse from a CLI name like `digits`, `products`, `random`.
+    pub fn parse(name: &str, n: usize) -> crate::Result<DatasetSpec> {
+        Ok(match name {
+            "digits" => DatasetSpec::Digits { n },
+            "zipf" | "zipfsets" | "wikipedia" => DatasetSpec::ZipfSets { n },
+            "products" | "amazon" => DatasetSpec::Products { n },
+            "random" => DatasetSpec::Random {
+                n,
+                dim: 100,
+                modes: 100,
+            },
+            path if std::path::Path::new(path).exists() => DatasetSpec::File {
+                path: path.to_string(),
+            },
+            other => anyhow::bail!("unknown dataset '{other}'"),
+        })
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> String {
+        match self {
+            DatasetSpec::Digits { n } => format!("digits-{n}"),
+            DatasetSpec::ZipfSets { n } => format!("zipf-{n}"),
+            DatasetSpec::Products { n } => format!("products-{n}"),
+            DatasetSpec::Random { n, .. } => format!("random-{n}"),
+            DatasetSpec::File { path } => path.clone(),
+        }
+    }
+}
+
+/// Which similarity measure to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeasureSpec {
+    Cosine,
+    Jaccard,
+    WeightedJaccard,
+    /// α=0.5 cosine/jaccard blend (Amazon2m "mixture of similarities").
+    Mixture,
+    /// The AOT neural model via PJRT (requires `make artifacts`).
+    Learned,
+}
+
+impl MeasureSpec {
+    /// Parse from a CLI name.
+    pub fn parse(name: &str) -> crate::Result<MeasureSpec> {
+        Ok(match name {
+            "cosine" => MeasureSpec::Cosine,
+            "jaccard" => MeasureSpec::Jaccard,
+            "weighted-jaccard" | "wjaccard" => MeasureSpec::WeightedJaccard,
+            "mixture" | "mix" => MeasureSpec::Mixture,
+            "learned" | "nn" => MeasureSpec::Learned,
+            other => anyhow::bail!("unknown measure '{other}'"),
+        })
+    }
+
+    /// Display name (paper legend style).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MeasureSpec::Cosine => "cosine",
+            MeasureSpec::Jaccard => "jaccard",
+            MeasureSpec::WeightedJaccard => "weighted-jaccard",
+            MeasureSpec::Mixture => "mixture",
+            MeasureSpec::Learned => "learned",
+        }
+    }
+
+    /// The natural measure for a dataset (paper §5 pairings).
+    pub fn default_for(ds: &DatasetSpec) -> MeasureSpec {
+        match ds {
+            DatasetSpec::Digits { .. } | DatasetSpec::Random { .. } => MeasureSpec::Cosine,
+            DatasetSpec::ZipfSets { .. } => MeasureSpec::WeightedJaccard,
+            DatasetSpec::Products { .. } => MeasureSpec::Mixture,
+            DatasetSpec::File { .. } => MeasureSpec::Cosine,
+        }
+    }
+}
+
+/// Which LSH family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FamilySpec {
+    /// SimHash with `bits` hyperplanes per sketch.
+    SimHash { bits: usize },
+    /// MinHash with `perms` permutations.
+    MinHash { perms: usize },
+    /// Weighted MinHash (Ioffe CWS) with `perms` hashes.
+    WeightedMinHash { perms: usize },
+    /// SimHash/MinHash per-symbol mixture of length `len`.
+    Mixture { len: usize },
+}
+
+impl FamilySpec {
+    /// Paper Appendix D.2 defaults per dataset and mode.
+    /// `sorting` selects the M=30 SortingLSH sketching dimension.
+    pub fn default_for(ds: &DatasetSpec, sorting: bool) -> FamilySpec {
+        if sorting {
+            return match ds {
+                DatasetSpec::ZipfSets { .. } => FamilySpec::WeightedMinHash { perms: 30 },
+                DatasetSpec::Products { .. } => FamilySpec::Mixture { len: 30 },
+                _ => FamilySpec::SimHash { bits: 30 },
+            };
+        }
+        match ds {
+            DatasetSpec::Digits { .. } => FamilySpec::SimHash { bits: 12 },
+            DatasetSpec::Random { .. } => FamilySpec::SimHash { bits: 16 },
+            DatasetSpec::ZipfSets { .. } => FamilySpec::WeightedMinHash { perms: 3 },
+            DatasetSpec::Products { .. } => FamilySpec::Mixture { len: 12 },
+            DatasetSpec::File { .. } => FamilySpec::SimHash { bits: 12 },
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> String {
+        match self {
+            FamilySpec::SimHash { bits } => format!("simhash-{bits}"),
+            FamilySpec::MinHash { perms } => format!("minhash-{perms}"),
+            FamilySpec::WeightedMinHash { perms } => format!("wminhash-{perms}"),
+            FamilySpec::Mixture { len } => format!("mixture-{len}"),
+        }
+    }
+}
+
+/// A full graph-building job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Dataset to build over.
+    pub dataset: DatasetSpec,
+    /// Similarity measure.
+    pub measure: MeasureSpec,
+    /// LSH family (ignored for AllPair).
+    pub family: FamilySpec,
+    /// Algorithm + parameters.
+    pub params: BuildParams,
+    /// Dataset generation seed.
+    pub data_seed: u64,
+    /// Cluster workers (0 = auto).
+    pub workers: usize,
+}
+
+impl Job {
+    /// JSON echo for reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::from(self.dataset.name())),
+            ("measure", Json::from(self.measure.name())),
+            ("family", Json::from(self.family.name())),
+            ("params", self.params.to_json()),
+            ("data_seed", Json::from(self.data_seed)),
+            ("workers", Json::from(self.workers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stars::Algorithm;
+
+    #[test]
+    fn dataset_spec_realize_and_names() {
+        let ds = DatasetSpec::parse("digits", 50).unwrap().realize(1).unwrap();
+        assert_eq!(ds.len(), 50);
+        assert_eq!(ds.dim(), 784);
+        let ds = DatasetSpec::parse("products", 2000).unwrap().realize(1).unwrap();
+        assert_eq!(ds.num_classes(), 47);
+        assert!(DatasetSpec::parse("nonsense-name", 10).is_err());
+    }
+
+    #[test]
+    fn measure_parsing() {
+        assert_eq!(MeasureSpec::parse("cosine").unwrap(), MeasureSpec::Cosine);
+        assert_eq!(MeasureSpec::parse("nn").unwrap(), MeasureSpec::Learned);
+        assert!(MeasureSpec::parse("???").is_err());
+    }
+
+    #[test]
+    fn defaults_match_paper_pairings() {
+        let d = DatasetSpec::Digits { n: 10 };
+        assert_eq!(MeasureSpec::default_for(&d), MeasureSpec::Cosine);
+        assert_eq!(FamilySpec::default_for(&d, false), FamilySpec::SimHash { bits: 12 });
+        assert_eq!(FamilySpec::default_for(&d, true), FamilySpec::SimHash { bits: 30 });
+        let w = DatasetSpec::ZipfSets { n: 10 };
+        assert_eq!(MeasureSpec::default_for(&w), MeasureSpec::WeightedJaccard);
+        assert_eq!(
+            FamilySpec::default_for(&w, false),
+            FamilySpec::WeightedMinHash { perms: 3 }
+        );
+        let r = DatasetSpec::Random { n: 10, dim: 100, modes: 100 };
+        assert_eq!(FamilySpec::default_for(&r, false), FamilySpec::SimHash { bits: 16 });
+    }
+
+    #[test]
+    fn job_json_echo() {
+        let job = Job {
+            dataset: DatasetSpec::Digits { n: 10 },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 12 },
+            params: BuildParams::threshold_mode(Algorithm::LshStars),
+            data_seed: 5,
+            workers: 2,
+        };
+        let j = job.to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("measure").unwrap().as_str().unwrap(), "cosine");
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordinator: job specs, the driver that runs them on the simulated
+//! AMPC cluster, and the experiment registry that regenerates every table
+//! and figure of the paper.
+
+pub mod job;
+pub mod driver;
+pub mod experiments;
+
+pub use driver::{run_job, JobResult};
+pub use job::{DatasetSpec, FamilySpec, Job, MeasureSpec};

@@ -1,0 +1,191 @@
+//! Binary dataset serialization.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic "SDS1" | n u64 | dim u64 | has_sets u8 | has_labels u8 |
+//! dense  f32 * n*dim |
+//! [labels u32 * n] |
+//! [sets: per point: len u32, tokens u32*len, weights f32*len]
+//! ```
+//! Used to persist generated datasets between experiment runs so the
+//! expensive generators (10M-point GMMs) run once.
+
+use crate::data::types::{Dataset, WeightedSet};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SDS1";
+
+/// Write a dataset to `path`.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(ds.len() as u64).to_le_bytes())?;
+    w.write_all(&(ds.dim() as u64).to_le_bytes())?;
+    w.write_all(&[!ds.sets.is_empty() as u8, !ds.labels.is_empty() as u8])?;
+    let name = ds.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    for &x in &ds.dense {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    if !ds.labels.is_empty() {
+        for &l in &ds.labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+    }
+    if !ds.sets.is_empty() {
+        for s in &ds.sets {
+            w.write_all(&(s.len() as u32).to_le_bytes())?;
+            for &t in &s.tokens {
+                w.write_all(&t.to_le_bytes())?;
+            }
+            for &wt in &s.weights {
+                w.write_all(&wt.to_le_bytes())?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a dataset from `path`.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let file =
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a stars dataset file", path.display());
+    }
+    let n = read_u64(&mut r)? as usize;
+    let dim = read_u64(&mut r)? as usize;
+    let mut flags = [0u8; 2];
+    r.read_exact(&mut flags)?;
+    let (has_sets, has_labels) = (flags[0] != 0, flags[1] != 0);
+    let name_len = read_u32(&mut r)? as usize;
+    let mut name_buf = vec![0u8; name_len];
+    r.read_exact(&mut name_buf)?;
+    let name = String::from_utf8(name_buf).context("dataset name not utf8")?;
+
+    let mut dense = vec![0f32; n * dim];
+    read_f32s(&mut r, &mut dense)?;
+    let labels = if has_labels {
+        let mut buf = vec![0u32; n];
+        read_u32s(&mut r, &mut buf)?;
+        buf
+    } else {
+        Vec::new()
+    };
+    let sets = if has_sets {
+        let mut sets = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = read_u32(&mut r)? as usize;
+            let mut tokens = vec![0u32; len];
+            read_u32s(&mut r, &mut tokens)?;
+            let mut weights = vec![0f32; len];
+            read_f32s(&mut r, &mut weights)?;
+            sets.push(WeightedSet { tokens, weights });
+        }
+        sets
+    } else {
+        Vec::new()
+    };
+
+    Ok(match (dim > 0, has_sets) {
+        (true, true) => Dataset::hybrid(&name, dim, dense, sets, labels),
+        (true, false) => Dataset::from_dense(&name, dim, dense, labels),
+        (false, true) => Dataset::from_sets(&name, sets, labels),
+        (false, false) => bail!("dataset has neither dense nor set features"),
+    })
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u32s<R: Read>(r: &mut R, out: &mut [u32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(4).enumerate() {
+        out[i] = u32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("stars_io_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let ds = synth::gaussian_mixture(100, 8, 4, 0.1, 1);
+        let p = tmp("dense");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ds.dense, back.dense);
+        assert_eq!(ds.labels, back.labels);
+        assert_eq!(ds.name, back.name);
+        assert_eq!(ds.norms, back.norms);
+    }
+
+    #[test]
+    fn roundtrip_sets() {
+        let ds = synth::zipf_sets(50, &synth::ZipfSetsParams::default(), 2);
+        let p = tmp("sets");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ds.sets, back.sets);
+        assert_eq!(ds.labels, back.labels);
+    }
+
+    #[test]
+    fn roundtrip_hybrid() {
+        let ds = synth::products(60, &synth::ProductsParams::default(), 3);
+        let p = tmp("hybrid");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ds.dense, back.dense);
+        assert_eq!(ds.sets, back.sets);
+        assert_eq!(back.kind(), crate::data::FeatureKind::Hybrid);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"not a dataset").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

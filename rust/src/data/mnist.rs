@@ -1,0 +1,154 @@
+//! IDX-format loader for the real MNIST dataset.
+//!
+//! The reproduction defaults to the synthetic digits stand-in (no network
+//! access at build time), but if the canonical IDX files are present —
+//! `train-images-idx3-ubyte` / `train-labels-idx1-ubyte`, optionally
+//! gzip-less — this loader turns them into a [`Dataset`] identical in shape
+//! to the paper's MNIST setup (60k × 784 floats in [0,1], 10 classes), so
+//! every experiment can be re-run on the real corpus:
+//!
+//! ```text
+//! stars build --dataset /data/mnist --algo lsh+stars --r 400
+//! ```
+//! (pass the *directory* containing the two files).
+
+use crate::data::types::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const IMAGES_MAGIC: u32 = 0x0000_0803;
+const LABELS_MAGIC: u32 = 0x0000_0801;
+
+/// Load MNIST from a directory containing the IDX files.
+pub fn load_dir(dir: &Path) -> Result<Dataset> {
+    let images = read_file(&dir.join("train-images-idx3-ubyte"))?;
+    let labels = read_file(&dir.join("train-labels-idx1-ubyte"))?;
+    from_idx(&images, &labels)
+}
+
+fn read_file(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+/// Parse raw IDX image + label buffers into a dataset.
+pub fn from_idx(images: &[u8], labels: &[u8]) -> Result<Dataset> {
+    let (imagic, idims) = idx_header(images)?;
+    if imagic != IMAGES_MAGIC || idims.len() != 3 {
+        bail!("not an IDX3 image file (magic {imagic:#x})");
+    }
+    let (lmagic, ldims) = idx_header(labels)?;
+    if lmagic != LABELS_MAGIC || ldims.len() != 1 {
+        bail!("not an IDX1 label file (magic {lmagic:#x})");
+    }
+    let (n, rows, cols) = (idims[0] as usize, idims[1] as usize, idims[2] as usize);
+    if ldims[0] as usize != n {
+        bail!("image/label count mismatch: {n} vs {}", ldims[0]);
+    }
+    let dim = rows * cols;
+    let pixel_off = 4 + 4 * idims.len();
+    let label_off = 4 + 4 * ldims.len();
+    if images.len() < pixel_off + n * dim {
+        bail!("truncated image file");
+    }
+    if labels.len() < label_off + n {
+        bail!("truncated label file");
+    }
+    let dense: Vec<f32> = images[pixel_off..pixel_off + n * dim]
+        .iter()
+        .map(|&b| b as f32 / 255.0)
+        .collect();
+    let label_vec: Vec<u32> = labels[label_off..label_off + n]
+        .iter()
+        .map(|&b| b as u32)
+        .collect();
+    if let Some(&bad) = label_vec.iter().find(|&&l| l > 9) {
+        bail!("label {bad} out of range for MNIST");
+    }
+    Ok(Dataset::from_dense("mnist", dim, dense, label_vec))
+}
+
+fn idx_header(buf: &[u8]) -> Result<(u32, Vec<u32>)> {
+    if buf.len() < 4 {
+        bail!("file too short for IDX header");
+    }
+    let magic = u32::from_be_bytes(buf[0..4].try_into().unwrap());
+    let ndims = (magic & 0xFF) as usize;
+    if buf.len() < 4 + 4 * ndims {
+        bail!("file too short for {ndims} dims");
+    }
+    let dims = (0..ndims)
+        .map(|d| u32::from_be_bytes(buf[4 + 4 * d..8 + 4 * d].try_into().unwrap()))
+        .collect();
+    Ok((magic, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny valid IDX fixture in memory.
+    fn fixture(n: usize, side: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut images = Vec::new();
+        images.extend_from_slice(&IMAGES_MAGIC.to_be_bytes());
+        images.extend_from_slice(&(n as u32).to_be_bytes());
+        images.extend_from_slice(&(side as u32).to_be_bytes());
+        images.extend_from_slice(&(side as u32).to_be_bytes());
+        for i in 0..n * side * side {
+            images.push((i % 256) as u8);
+        }
+        let mut labels = Vec::new();
+        labels.extend_from_slice(&LABELS_MAGIC.to_be_bytes());
+        labels.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            labels.push((i % 10) as u8);
+        }
+        (images, labels)
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let (images, labels) = fixture(20, 4);
+        let ds = from_idx(&images, &labels).unwrap();
+        assert_eq!(ds.len(), 20);
+        assert_eq!(ds.dim(), 16);
+        assert_eq!(ds.labels.len(), 20);
+        assert_eq!(ds.labels[3], 3);
+        // Pixels normalized to [0,1].
+        assert!(ds.dense.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        assert!((ds.dense[255] - 1.0).abs() < 1e-6); // byte 255 -> 1.0
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let (mut images, labels) = fixture(5, 4);
+        images[3] = 0x01; // corrupt magic dims byte
+        assert!(from_idx(&images, &labels).is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let (images, _) = fixture(5, 4);
+        let (_, labels) = fixture(6, 4);
+        assert!(from_idx(&images, &labels).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let (images, labels) = fixture(5, 4);
+        assert!(from_idx(&images[..images.len() - 3], &labels).is_err());
+        assert!(from_idx(&images, &labels[..labels.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_labels() {
+        let (images, mut labels) = fixture(5, 4);
+        let off = labels.len() - 1;
+        labels[off] = 42;
+        assert!(from_idx(&images, &labels).is_err());
+    }
+}

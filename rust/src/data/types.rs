@@ -1,0 +1,265 @@
+//! Point and dataset representations.
+//!
+//! Dense features are stored flat (row-major `Vec<f32>`) for cache-friendly
+//! scoring; weighted sets are per-point sorted token lists. A dataset may
+//! carry either or both (the Amazon2m analogue carries both: an embedding
+//! vector and a co-purchase token set).
+
+/// A weighted set feature: sorted unique `(token, weight)` pairs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WeightedSet {
+    /// Strictly increasing token ids.
+    pub tokens: Vec<u32>,
+    /// Non-negative weights, parallel to `tokens`.
+    pub weights: Vec<f32>,
+}
+
+impl WeightedSet {
+    /// Build from unsorted (token, weight) pairs; duplicate tokens have their
+    /// weights summed.
+    pub fn from_pairs(mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(t, _)| t);
+        let mut tokens = Vec::with_capacity(pairs.len());
+        let mut weights = Vec::with_capacity(pairs.len());
+        for (t, w) in pairs {
+            if tokens.last() == Some(&t) {
+                *weights.last_mut().unwrap() += w;
+            } else {
+                tokens.push(t);
+                weights.push(w);
+            }
+        }
+        WeightedSet { tokens, weights }
+    }
+
+    /// Unweighted set (all weights 1).
+    pub fn from_tokens(mut tokens: Vec<u32>) -> Self {
+        tokens.sort_unstable();
+        tokens.dedup();
+        let weights = vec![1.0; tokens.len()];
+        WeightedSet { tokens, weights }
+    }
+
+    /// Number of tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True if the set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Total weight.
+    pub fn total_weight(&self) -> f32 {
+        self.weights.iter().sum()
+    }
+}
+
+/// What feature kinds a dataset carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Dense f32 vectors only.
+    Dense,
+    /// Weighted sets only.
+    Sets,
+    /// Both (e.g. embedding + co-purchase set).
+    Hybrid,
+}
+
+/// An in-memory dataset: n points with optional dense features, optional
+/// weighted-set features, and optional ground-truth class labels.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Human-readable name (used in reports).
+    pub name: String,
+    /// Dense feature dimension (0 if no dense features).
+    pub dim: usize,
+    /// Flat row-major dense features, length `n * dim`.
+    pub dense: Vec<f32>,
+    /// Precomputed L2 norms of dense rows (kept in sync by constructors).
+    pub norms: Vec<f32>,
+    /// Weighted set features (empty if none).
+    pub sets: Vec<WeightedSet>,
+    /// Ground-truth class labels (empty if none).
+    pub labels: Vec<u32>,
+    n: usize,
+}
+
+impl Dataset {
+    /// Dataset of dense vectors.
+    pub fn from_dense(name: &str, dim: usize, dense: Vec<f32>, labels: Vec<u32>) -> Self {
+        assert!(dim > 0 && dense.len() % dim == 0, "dense length not a multiple of dim");
+        let n = dense.len() / dim;
+        assert!(labels.is_empty() || labels.len() == n);
+        let norms = (0..n)
+            .map(|i| {
+                dense[i * dim..(i + 1) * dim]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    .sqrt()
+            })
+            .collect();
+        Dataset {
+            name: name.to_string(),
+            dim,
+            dense,
+            norms,
+            sets: Vec::new(),
+            labels,
+            n,
+        }
+    }
+
+    /// Dataset of weighted sets.
+    pub fn from_sets(name: &str, sets: Vec<WeightedSet>, labels: Vec<u32>) -> Self {
+        let n = sets.len();
+        assert!(labels.is_empty() || labels.len() == n);
+        Dataset {
+            name: name.to_string(),
+            dim: 0,
+            dense: Vec::new(),
+            norms: Vec::new(),
+            sets,
+            labels,
+            n,
+        }
+    }
+
+    /// Hybrid dataset (dense + sets, same point count).
+    pub fn hybrid(
+        name: &str,
+        dim: usize,
+        dense: Vec<f32>,
+        sets: Vec<WeightedSet>,
+        labels: Vec<u32>,
+    ) -> Self {
+        let mut ds = Dataset::from_dense(name, dim, dense, labels);
+        assert_eq!(sets.len(), ds.n, "set count != point count");
+        ds.sets = sets;
+        ds.name = name.to_string();
+        ds
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Dense feature dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Which feature kinds are present.
+    pub fn kind(&self) -> FeatureKind {
+        match (self.dim > 0, !self.sets.is_empty()) {
+            (true, true) => FeatureKind::Hybrid,
+            (true, false) => FeatureKind::Dense,
+            (false, true) => FeatureKind::Sets,
+            (false, false) => FeatureKind::Dense, // empty dataset; arbitrary
+        }
+    }
+
+    /// Dense row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.dense[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Precomputed L2 norm of row `i`.
+    #[inline]
+    pub fn norm(&self, i: usize) -> f32 {
+        self.norms[i]
+    }
+
+    /// Weighted set of point `i`.
+    #[inline]
+    pub fn set(&self, i: usize) -> &WeightedSet {
+        &self.sets[i]
+    }
+
+    /// Number of distinct labels (0 if unlabeled).
+    pub fn num_classes(&self) -> usize {
+        self.labels
+            .iter()
+            .copied()
+            .max()
+            .map(|m| m as usize + 1)
+            .unwrap_or(0)
+    }
+
+    /// Take the first `k` points (for scaled-down experiments).
+    pub fn take(&self, k: usize) -> Dataset {
+        let k = k.min(self.n);
+        Dataset {
+            name: self.name.clone(),
+            dim: self.dim,
+            dense: self.dense[..k * self.dim].to_vec(),
+            norms: self.norms[..k.min(self.norms.len())].to_vec(),
+            sets: self.sets.iter().take(k).cloned().collect(),
+            labels: self.labels.iter().take(k).copied().collect(),
+            n: k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_set_merges_duplicates() {
+        let s = WeightedSet::from_pairs(vec![(3, 1.0), (1, 2.0), (3, 0.5)]);
+        assert_eq!(s.tokens, vec![1, 3]);
+        assert_eq!(s.weights, vec![2.0, 1.5]);
+        assert!((s.total_weight() - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_tokens_dedups_and_sorts() {
+        let s = WeightedSet::from_tokens(vec![5, 1, 5, 2]);
+        assert_eq!(s.tokens, vec![1, 2, 5]);
+        assert_eq!(s.weights, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn dense_dataset_norms() {
+        let ds = Dataset::from_dense("t", 2, vec![3.0, 4.0, 0.0, 1.0], vec![0, 1]);
+        assert_eq!(ds.len(), 2);
+        assert!((ds.norm(0) - 5.0).abs() < 1e-6);
+        assert!((ds.norm(1) - 1.0).abs() < 1e-6);
+        assert_eq!(ds.row(1), &[0.0, 1.0]);
+        assert_eq!(ds.num_classes(), 2);
+        assert_eq!(ds.kind(), FeatureKind::Dense);
+    }
+
+    #[test]
+    fn hybrid_dataset() {
+        let sets = vec![WeightedSet::from_tokens(vec![1]), WeightedSet::from_tokens(vec![2])];
+        let ds = Dataset::hybrid("h", 1, vec![1.0, 2.0], sets, vec![]);
+        assert_eq!(ds.kind(), FeatureKind::Hybrid);
+        assert_eq!(ds.set(1).tokens, vec![2]);
+    }
+
+    #[test]
+    fn take_truncates_consistently() {
+        let ds = Dataset::from_dense("t", 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0], vec![0, 1, 2]);
+        let t = ds.take(2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.labels, vec![0, 1]);
+        assert_eq!(t.norms.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_dense_len_panics() {
+        Dataset::from_dense("t", 3, vec![1.0; 4], vec![]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation machinery: ground truth, recall metrics (Figure 2), and
+//! experiment-level summaries.
+
+pub mod recall;
+
+pub use recall::{knn_recall, threshold_recall, RecallReport};

@@ -1,0 +1,209 @@
+//! Figure 2's recall metrics.
+//!
+//! Paper protocol:
+//! * **Threshold (LSH-based) graphs** — ground truth: all points with
+//!   similarity ≥ 0.5. Non-Stars graphs count *direct* neighbors; Stars
+//!   graphs count neighbors within **two hops** where every edge on the path
+//!   also has similarity ≥ 0.5, plus a relaxed variant at 0.495 (the
+//!   1.01-approximation of §3.2).
+//! * **k-NN (SortingLSH-based) graphs** — ground truth: exact 100-NN.
+//!   One hop (non-Stars) vs two hops (Stars), plus the 1.01-approximate
+//!   relaxation: candidates at dissimilarity ≤ 1.01 · d_k(p) count, with the
+//!   ratio capped at 1 when more than k are found.
+
+use crate::data::types::Dataset;
+use crate::graph::two_hop::{capped_recall, one_hop_set, recall, two_hop_set};
+use crate::graph::Csr;
+use crate::sim::Similarity;
+use crate::util::fxhash::FxHashSet;
+use crate::util::pool::parallel_chunks;
+use crate::util::rng::Rng;
+
+/// Averaged recall over query points.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecallReport {
+    /// Fraction of true neighbors that are direct neighbors.
+    pub one_hop: f64,
+    /// Fraction reachable within two hops.
+    pub two_hop: f64,
+    /// Two-hop fraction under the relaxed (1/ε-approximate) criterion.
+    pub two_hop_relaxed: f64,
+    /// Number of query points averaged.
+    pub queries: usize,
+}
+
+/// Sample `k` query point ids (deterministic in `seed`).
+pub fn sample_queries(n: usize, k: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    rng.sample_indices(n, k.min(n))
+        .into_iter()
+        .map(|i| i as u32)
+        .collect()
+}
+
+/// Threshold-graph recall (Figure 2 left panels).
+///
+/// `truth[p]` = exact neighbors of p with similarity ≥ r. Edges on counted
+/// paths must carry weight ≥ r (strict variant) / ≥ r_relaxed (relaxed).
+pub fn threshold_recall(
+    csr: &Csr,
+    truth: &[Vec<u32>],
+    queries: &[u32],
+    r: f32,
+    r_relaxed: f32,
+) -> RecallReport {
+    let workers = crate::util::pool::default_workers();
+    let parts = parallel_chunks(queries.len(), workers, |_, range| {
+        let (mut h1, mut h2, mut h2r, mut m) = (0.0, 0.0, 0.0, 0usize);
+        for qi in range {
+            let p = queries[qi];
+            let targets = &truth[p as usize];
+            if targets.is_empty() {
+                continue;
+            }
+            m += 1;
+            h1 += recall(&one_hop_set(csr, p, r), targets);
+            h2 += recall(&two_hop_set(csr, p, r), targets);
+            h2r += recall(&two_hop_set(csr, p, r_relaxed), targets);
+        }
+        (h1, h2, h2r, m)
+    });
+    reduce(parts)
+}
+
+/// k-NN recall (Figure 2 right panels).
+///
+/// `truth_knn[p]` = exact k-NN of p as (similarity, id), sorted descending.
+/// The relaxed criterion counts any point with dissimilarity ≤ (1/ε)·d_k(p)
+/// (`eps` ≈ 0.99 ⇒ 1.01-approximate), capped at ratio 1.
+pub fn knn_recall(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    csr: &Csr,
+    truth_knn: &[Vec<(f32, u32)>],
+    queries: &[u32],
+    k: usize,
+    eps: f64,
+) -> RecallReport {
+    let workers = crate::util::pool::default_workers();
+    let parts = parallel_chunks(queries.len(), workers, |_, range| {
+        let (mut h1, mut h2, mut h2r, mut m) = (0.0, 0.0, 0.0, 0usize);
+        for qi in range {
+            let p = queries[qi];
+            let nbrs = &truth_knn[p as usize];
+            if nbrs.is_empty() {
+                continue;
+            }
+            m += 1;
+            let k_eff = nbrs.len().min(k);
+            let targets: Vec<u32> = nbrs[..k_eff].iter().map(|&(_, id)| id).collect();
+            let one = one_hop_set(csr, p, f32::MIN);
+            let two = two_hop_set(csr, p, f32::MIN);
+            h1 += recall(&one, &targets);
+            h2 += recall(&two, &targets);
+            // Relaxed: similarity ≥ 1 - (1/eps)·(1 - tau_k).
+            let tau_k = nbrs[k_eff - 1].0;
+            let relaxed_thresh = 1.0 - (1.0 - tau_k as f64) / eps;
+            let candidates: FxHashSet<u32> = two
+                .iter()
+                .copied()
+                .filter(|&q| sim.sim(ds, p as usize, q as usize) as f64 >= relaxed_thresh)
+                .collect();
+            h2r += capped_recall(&two, &candidates, k_eff);
+        }
+        (h1, h2, h2r, m)
+    });
+    reduce(parts)
+}
+
+fn reduce(parts: Vec<(f64, f64, f64, usize)>) -> RecallReport {
+    let (mut h1, mut h2, mut h2r, mut m) = (0.0, 0.0, 0.0, 0usize);
+    for (a, b, c, n) in parts {
+        h1 += a;
+        h2 += b;
+        h2r += c;
+        m += n;
+    }
+    if m == 0 {
+        return RecallReport::default();
+    }
+    RecallReport {
+        one_hop: h1 / m as f64,
+        two_hop: h2 / m as f64,
+        two_hop_relaxed: h2r / m as f64,
+        queries: m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::graph::{Edge, Graph};
+    use crate::sim::CosineSim;
+    use crate::stars::allpair;
+
+    #[test]
+    fn sample_queries_distinct() {
+        let q = sample_queries(100, 20, 5);
+        assert_eq!(q.len(), 20);
+        let set: std::collections::HashSet<_> = q.iter().collect();
+        assert_eq!(set.len(), 20);
+    }
+
+    #[test]
+    fn star_graph_two_hop_beats_one_hop() {
+        // Star center 0 with 5 leaves, all true neighbors of each other.
+        let g = Graph::from_edges(6, (1..6).map(|v| Edge::new(0, v, 0.9)).collect());
+        let csr = Csr::new(&g);
+        let truth: Vec<Vec<u32>> = (0..6)
+            .map(|p| (0..6u32).filter(|&q| q != p).collect())
+            .collect();
+        let queries: Vec<u32> = (0..6).collect();
+        let rep = threshold_recall(&csr, &truth, &queries, 0.5, 0.49);
+        assert!(rep.two_hop > rep.one_hop);
+        assert!((rep.two_hop - 1.0).abs() < 1e-9, "star covers all in 2 hops");
+        assert_eq!(rep.queries, 6);
+    }
+
+    #[test]
+    fn relaxed_threshold_finds_more() {
+        // Edge at 0.495: strict 0.5 misses it, relaxed counts it.
+        let g = Graph::from_edges(3, vec![Edge::new(0, 1, 0.495), Edge::new(1, 2, 0.9)]);
+        let csr = Csr::new(&g);
+        let truth = vec![vec![1u32, 2], vec![0, 2], vec![0, 1]];
+        let rep = threshold_recall(&csr, &truth, &[0], 0.5, 0.495);
+        assert_eq!(rep.two_hop, 0.0);
+        assert!((rep.two_hop_relaxed - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn knn_recall_on_exact_graph_is_one() {
+        let ds = synth::gaussian_mixture(150, 8, 3, 0.1, 9);
+        let cluster = crate::ampc::Cluster::new(2);
+        let truth = allpair::exact_knn(&ds, &CosineSim, 10, &cluster);
+        // Build the exact 10-NN graph.
+        let mut edges = Vec::new();
+        for (i, nbrs) in truth.iter().enumerate() {
+            for &(w, j) in nbrs {
+                edges.push(Edge::new(i as u32, j, w));
+            }
+        }
+        let csr = Csr::new(&Graph::from_edges(150, edges));
+        let queries = sample_queries(150, 50, 3);
+        let rep = knn_recall(&ds, &CosineSim, &csr, &truth, &queries, 10, 0.99);
+        assert!((rep.one_hop - 1.0).abs() < 1e-9, "one hop {}", rep.one_hop);
+        assert!((rep.two_hop - 1.0).abs() < 1e-9);
+        assert!(rep.two_hop_relaxed >= rep.two_hop - 1e-9);
+    }
+
+    #[test]
+    fn empty_truth_gives_empty_report() {
+        let g = Graph::from_edges(3, vec![]);
+        let csr = Csr::new(&g);
+        let truth = vec![vec![], vec![], vec![]];
+        let rep = threshold_recall(&csr, &truth, &[0, 1, 2], 0.5, 0.5);
+        assert_eq!(rep.queries, 0);
+        assert_eq!(rep.one_hop, 0.0);
+    }
+}

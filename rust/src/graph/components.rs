@@ -1,0 +1,166 @@
+//! Union-find (disjoint set union) for connected components.
+//!
+//! Used by single-linkage clustering (Theorem 2.5 / Appendix A): the
+//! connected components of an (r/c, r)-two-hop spanner sandwich the
+//! components of the r- and r/c-threshold graphs.
+
+/// Disjoint set union with path halving and union by size.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    components: usize,
+}
+
+impl UnionFind {
+    /// `n` singleton components.
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            components: n,
+        }
+    }
+
+    /// Representative of `x`'s component.
+    #[inline]
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let grand = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = grand;
+            x = grand;
+        }
+        x
+    }
+
+    /// Merge the components of `a` and `b`; returns true if they were
+    /// previously separate.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+        self.components -= 1;
+        true
+    }
+
+    /// Whether `a` and `b` are connected.
+    pub fn connected(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Current number of components.
+    pub fn num_components(&self) -> usize {
+        self.components
+    }
+
+    /// Size of `x`'s component.
+    pub fn component_size(&mut self, x: u32) -> usize {
+        let r = self.find(x);
+        self.size[r as usize] as usize
+    }
+
+    /// Dense component labels in [0, num_components).
+    pub fn labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut map = crate::util::fxhash::FxHashMap::default();
+        let mut labels = vec![0u32; n];
+        for x in 0..n as u32 {
+            let r = self.find(x);
+            let next = map.len() as u32;
+            let id = *map.entry(r).or_insert(next);
+            labels[x as usize] = id;
+        }
+        labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Gen};
+
+    #[test]
+    fn union_reduces_components() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.num_components(), 5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(1, 2));
+        assert!(!uf.union(0, 2));
+        assert_eq!(uf.num_components(), 3);
+        assert!(uf.connected(0, 2));
+        assert!(!uf.connected(0, 3));
+        assert_eq!(uf.component_size(1), 3);
+    }
+
+    #[test]
+    fn labels_are_dense_and_consistent() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 3);
+        uf.union(4, 5);
+        let labels = uf.labels();
+        assert_eq!(labels[0], labels[3]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[4]);
+        let max = *labels.iter().max().unwrap() as usize;
+        assert_eq!(max + 1, uf.num_components());
+    }
+
+    #[test]
+    fn matches_naive_reachability() {
+        check("uf-vs-bfs", 30, |g: &mut Gen| {
+            let n = g.usize_in(2, 40);
+            let m = g.usize_in(0, 60);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| {
+                    let a = g.usize_in(0, n - 1) as u32;
+                    let b = g.usize_in(0, n - 1) as u32;
+                    (a, b)
+                })
+                .filter(|(a, b)| a != b)
+                .collect();
+            let mut uf = UnionFind::new(n);
+            for &(a, b) in &edges {
+                uf.union(a, b);
+            }
+            // BFS ground truth.
+            let mut adj = vec![Vec::new(); n];
+            for &(a, b) in &edges {
+                adj[a as usize].push(b);
+                adj[b as usize].push(a);
+            }
+            let mut label = vec![u32::MAX; n];
+            let mut next = 0;
+            for s in 0..n {
+                if label[s] != u32::MAX {
+                    continue;
+                }
+                let mut queue = vec![s as u32];
+                label[s] = next;
+                while let Some(x) = queue.pop() {
+                    for &y in &adj[x as usize] {
+                        if label[y as usize] == u32::MAX {
+                            label[y as usize] = next;
+                            queue.push(y);
+                        }
+                    }
+                }
+                next += 1;
+            }
+            assert_eq!(uf.num_components(), next as usize);
+            for a in 0..n as u32 {
+                for b in 0..n as u32 {
+                    assert_eq!(
+                        uf.connected(a, b),
+                        label[a as usize] == label[b as usize]
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,189 @@
+//! Compressed sparse row adjacency with the paper's degree threshold.
+
+use super::edges::{Edge, Graph};
+use crate::util::topk::TopK;
+
+/// Undirected CSR adjacency. Optionally degree-capped: each node keeps only
+/// its `cap` most-similar incident edges (the paper caps at 250), after which
+/// an edge survives if *either* endpoint kept it.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    /// Neighbor ids, grouped per node.
+    neighbors: Vec<u32>,
+    /// Edge weights, parallel to `neighbors`.
+    weights: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a graph without any degree cap.
+    pub fn new(g: &Graph) -> Csr {
+        Self::build(g.num_nodes(), g.edges())
+    }
+
+    /// Build keeping only each node's `cap` most-similar neighbors.
+    /// An edge is retained if either endpoint ranks it within its cap —
+    /// matching the paper's "keep the 250 closest points for each node".
+    pub fn with_degree_cap(g: &Graph, cap: usize) -> Csr {
+        let n = g.num_nodes();
+        let mut keep: Vec<TopK<u32>> = (0..n).map(|_| TopK::new(cap)).collect();
+        for (idx, e) in g.edges().iter().enumerate() {
+            keep[e.u as usize].push(e.w, idx as u32);
+            keep[e.v as usize].push(e.w, idx as u32);
+        }
+        let mut kept = vec![false; g.num_edges()];
+        for t in keep {
+            for (_, idx) in t.into_sorted() {
+                kept[idx as usize] = true;
+            }
+        }
+        let edges: Vec<Edge> = g
+            .edges()
+            .iter()
+            .zip(&kept)
+            .filter(|(_, &k)| k)
+            .map(|(e, _)| *e)
+            .collect();
+        Self::build(n, &edges)
+    }
+
+    fn build(n: usize, edges: &[Edge]) -> Csr {
+        let mut deg = vec![0usize; n];
+        for e in edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut neighbors = vec![0u32; offsets[n]];
+        let mut weights = vec![0f32; offsets[n]];
+        let mut cursor = offsets.clone();
+        for e in edges {
+            neighbors[cursor[e.u as usize]] = e.v;
+            weights[cursor[e.u as usize]] = e.w;
+            cursor[e.u as usize] += 1;
+            neighbors[cursor[e.v as usize]] = e.u;
+            weights[cursor[e.v as usize]] = e.w;
+            cursor[e.v as usize] += 1;
+        }
+        Csr {
+            offsets,
+            neighbors,
+            weights,
+        }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Degree of node `u`.
+    pub fn degree(&self, u: u32) -> usize {
+        self.offsets[u as usize + 1] - self.offsets[u as usize]
+    }
+
+    /// Neighbors of `u` with weights.
+    pub fn neighbors(&self, u: u32) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let r = self.offsets[u as usize]..self.offsets[u as usize + 1];
+        self.neighbors[r.clone()]
+            .iter()
+            .copied()
+            .zip(self.weights[r].iter().copied())
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes() as u32)
+            .map(|u| self.degree(u))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph() -> Graph {
+        Graph::from_edges(
+            4,
+            vec![
+                Edge::new(0, 1, 0.9),
+                Edge::new(1, 2, 0.8),
+                Edge::new(2, 3, 0.7),
+            ],
+        )
+    }
+
+    #[test]
+    fn adjacency_roundtrip() {
+        let csr = Csr::new(&path_graph());
+        assert_eq!(csr.num_nodes(), 4);
+        assert_eq!(csr.num_edges(), 3);
+        assert_eq!(csr.degree(1), 2);
+        let n1: Vec<(u32, f32)> = csr.neighbors(1).collect();
+        assert!(n1.contains(&(0, 0.9)) && n1.contains(&(2, 0.8)));
+        assert_eq!(csr.max_degree(), 2);
+    }
+
+    #[test]
+    fn degree_cap_keeps_best_edges() {
+        // Clique on 6 nodes with distinct weights; cap 2. Under the
+        // either-endpoint rule every edge kept by *some* endpoint survives,
+        // so total edges shrink but no node's best-2 are ever lost.
+        let mut edges = Vec::new();
+        for u in 0..6u32 {
+            for v in (u + 1)..6 {
+                edges.push(Edge::new(u, v, (u * 6 + v) as f32 / 36.0));
+            }
+        }
+        let g = Graph::from_edges(6, edges);
+        let csr = Csr::with_degree_cap(&g, 2);
+        assert!(csr.num_edges() < g.num_edges());
+        // Every node retains its two best incident edges.
+        let full = Csr::new(&g);
+        for u in 0..6u32 {
+            let mut best: Vec<f32> = full.neighbors(u).map(|(_, w)| w).collect();
+            best.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kept: Vec<f32> = csr.neighbors(u).map(|(_, w)| w).collect();
+            for want in &best[..2] {
+                assert!(kept.contains(want), "node {u} lost a top-2 edge");
+            }
+        }
+    }
+
+    #[test]
+    fn degree_cap_or_semantics() {
+        // Edge (0,1) is node 0's worst but node 1's only edge: must survive.
+        let g = Graph::from_edges(
+            4,
+            vec![
+                Edge::new(0, 1, 0.1),
+                Edge::new(0, 2, 0.9),
+                Edge::new(0, 3, 0.8),
+            ],
+        );
+        let csr = Csr::with_degree_cap(&g, 2);
+        assert!(
+            csr.neighbors(1).any(|(v, _)| v == 0),
+            "edge kept by the low-degree endpoint was dropped"
+        );
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(3, vec![]);
+        let csr = Csr::new(&g);
+        assert_eq!(csr.num_edges(), 0);
+        assert_eq!(csr.degree(0), 0);
+        assert_eq!(csr.max_degree(), 0);
+    }
+}

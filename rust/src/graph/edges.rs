@@ -1,0 +1,143 @@
+//! Edge lists and the deduplicated [`Graph`].
+
+/// An undirected weighted edge. Stored with `u < v` after normalization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    /// Smaller endpoint.
+    pub u: u32,
+    /// Larger endpoint.
+    pub v: u32,
+    /// Similarity weight.
+    pub w: f32,
+}
+
+impl Edge {
+    /// Normalized edge (u < v). Panics on self-loops in debug builds.
+    #[inline]
+    pub fn new(a: u32, b: u32, w: f32) -> Edge {
+        debug_assert_ne!(a, b, "self loop");
+        if a < b {
+            Edge { u: a, v: b, w }
+        } else {
+            Edge { u: b, v: a, w }
+        }
+    }
+
+    /// Packed (u, v) key for dedup.
+    #[inline]
+    pub fn key(&self) -> u64 {
+        ((self.u as u64) << 32) | self.v as u64
+    }
+}
+
+/// A deduplicated undirected similarity graph over `n` points.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<Edge>,
+}
+
+impl Graph {
+    /// Build from raw (possibly duplicated) edges: sorts by endpoint pair,
+    /// keeps the maximum weight per pair, drops self loops.
+    pub fn from_edges(n: usize, mut raw: Vec<Edge>) -> Graph {
+        raw.retain(|e| e.u != e.v);
+        raw.sort_unstable_by(|a, b| a.key().cmp(&b.key()).then(b.w.total_cmp(&a.w)));
+        raw.dedup_by_key(|e| e.key());
+        raw.shrink_to_fit();
+        Graph { n, edges: raw }
+    }
+
+    /// Merge several per-worker edge buffers into one graph.
+    pub fn from_parts(n: usize, parts: Vec<Vec<Edge>>) -> Graph {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut raw = Vec::with_capacity(total);
+        for p in parts {
+            raw.extend(p);
+        }
+        Graph::from_edges(n, raw)
+    }
+
+    /// Number of vertices.
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Number of (deduplicated) edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The edges, sorted by (u, v).
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// A copy of this graph keeping only edges with weight ≥ `min_w`.
+    pub fn filter_weight(&self, min_w: f32) -> Graph {
+        Graph {
+            n: self.n,
+            edges: self.edges.iter().filter(|e| e.w >= min_w).copied().collect(),
+        }
+    }
+
+    /// Count edges with weight ≥ `min_w` (Figure 3's metric).
+    pub fn count_weight_ge(&self, min_w: f32) -> usize {
+        self.edges.iter().filter(|e| e.w >= min_w).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_normalizes_endpoints() {
+        let e = Edge::new(5, 2, 0.7);
+        assert_eq!((e.u, e.v), (2, 5));
+        assert_eq!(e.key(), Edge::new(2, 5, 0.1).key());
+    }
+
+    #[test]
+    fn graph_dedups_keeping_max_weight() {
+        let g = Graph::from_edges(
+            10,
+            vec![
+                Edge::new(1, 2, 0.5),
+                Edge::new(2, 1, 0.9),
+                Edge::new(1, 2, 0.7),
+                Edge::new(3, 4, 0.2),
+            ],
+        );
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edges()[0].w, 0.9);
+    }
+
+    #[test]
+    fn from_parts_merges() {
+        let g = Graph::from_parts(
+            5,
+            vec![
+                vec![Edge::new(0, 1, 0.5)],
+                vec![Edge::new(1, 0, 0.6), Edge::new(2, 3, 0.4)],
+            ],
+        );
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edges()[0].w, 0.6);
+    }
+
+    #[test]
+    fn filter_and_count() {
+        let g = Graph::from_edges(
+            5,
+            vec![
+                Edge::new(0, 1, 0.9),
+                Edge::new(1, 2, 0.5),
+                Edge::new(2, 3, 0.1),
+            ],
+        );
+        assert_eq!(g.count_weight_ge(0.5), 2);
+        assert_eq!(g.filter_weight(0.5).num_edges(), 2);
+        assert_eq!(g.filter_weight(0.95).num_edges(), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Similarity graph representations and queries.
+//!
+//! The build phase accumulates weighted edges (possibly duplicated across
+//! repetitions); [`Graph`] dedups them, [`Csr`] provides adjacency with the
+//! paper's degree threshold (keep the ~250 most-similar neighbors per node),
+//! [`UnionFind`] provides connected components for single-linkage, and
+//! [`two_hop`] implements the recall queries behind Figure 2.
+
+mod edges;
+mod csr;
+mod components;
+pub mod nn_descent;
+pub mod two_hop;
+pub mod stats;
+
+pub use components::UnionFind;
+pub use csr::Csr;
+pub use edges::{Edge, Graph};

@@ -1,0 +1,88 @@
+//! Graph summary statistics used by the experiment reports.
+
+use super::csr::Csr;
+use super::edges::Graph;
+
+/// Degree distribution summary.
+#[derive(Clone, Debug, Default)]
+pub struct DegreeStats {
+    /// Minimum degree.
+    pub min: usize,
+    /// Maximum degree.
+    pub max: usize,
+    /// Mean degree.
+    pub mean: f64,
+    /// Number of isolated nodes.
+    pub isolated: usize,
+}
+
+/// Compute degree statistics of a CSR graph.
+pub fn degree_stats(csr: &Csr) -> DegreeStats {
+    let n = csr.num_nodes();
+    if n == 0 {
+        return DegreeStats::default();
+    }
+    let mut min = usize::MAX;
+    let mut max = 0usize;
+    let mut sum = 0usize;
+    let mut isolated = 0usize;
+    for u in 0..n as u32 {
+        let d = csr.degree(u);
+        min = min.min(d);
+        max = max.max(d);
+        sum += d;
+        if d == 0 {
+            isolated += 1;
+        }
+    }
+    DegreeStats {
+        min,
+        max,
+        mean: sum as f64 / n as f64,
+        isolated,
+    }
+}
+
+/// Weight histogram over fixed [0,1] bins (for similarity-valued weights).
+pub fn weight_histogram(g: &Graph, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    for e in g.edges() {
+        let b = ((e.w.clamp(0.0, 1.0)) * bins as f32) as usize;
+        h[b.min(bins - 1)] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    #[test]
+    fn degree_stats_basic() {
+        let g = Graph::from_edges(4, vec![Edge::new(0, 1, 0.5), Edge::new(0, 2, 0.5)]);
+        let s = degree_stats(&Csr::new(&g));
+        assert_eq!(s.max, 2);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.isolated, 1);
+        assert!((s.mean - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let g = Graph::from_edges(
+            4,
+            vec![
+                Edge::new(0, 1, 0.05),
+                Edge::new(1, 2, 0.55),
+                Edge::new(2, 3, 0.95),
+                Edge::new(0, 3, 1.0),
+            ],
+        );
+        let h = weight_histogram(&g, 10);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[5], 1);
+        assert_eq!(h[9], 2); // 0.95 and clamped 1.0
+        assert_eq!(h.iter().sum::<usize>(), 4);
+    }
+}

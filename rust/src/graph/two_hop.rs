@@ -1,0 +1,142 @@
+//! Two-hop neighborhood queries — the machinery behind Figure 2's recall
+//! metrics and the two-hop spanner definition (Definition 2.4).
+
+use super::csr::Csr;
+use crate::util::fxhash::FxHashSet;
+
+/// The set of nodes reachable from `p` in ≤ 2 hops using only edges with
+/// weight ≥ `min_w`. Excludes `p` itself.
+pub fn two_hop_set(csr: &Csr, p: u32, min_w: f32) -> FxHashSet<u32> {
+    let mut out = FxHashSet::default();
+    for (q, w1) in csr.neighbors(p) {
+        if w1 < min_w {
+            continue;
+        }
+        out.insert(q);
+        for (r, w2) in csr.neighbors(q) {
+            if w2 >= min_w && r != p {
+                out.insert(r);
+            }
+        }
+    }
+    out
+}
+
+/// One-hop neighbor set of `p` over edges with weight ≥ `min_w`.
+pub fn one_hop_set(csr: &Csr, p: u32, min_w: f32) -> FxHashSet<u32> {
+    csr.neighbors(p)
+        .filter(|&(_, w)| w >= min_w)
+        .map(|(q, _)| q)
+        .collect()
+}
+
+/// Fraction of `targets` found in `found` (1.0 when `targets` is empty).
+pub fn recall(found: &FxHashSet<u32>, targets: &[u32]) -> f64 {
+    if targets.is_empty() {
+        return 1.0;
+    }
+    let hit = targets.iter().filter(|t| found.contains(t)).count();
+    hit as f64 / targets.len() as f64
+}
+
+/// Capped recall for the k-ANN relaxation: |found ∩ candidates| / k, capped
+/// at 1 (the paper: "if we can find more than 100 approximate 100-nearest
+/// neighbors, we regard the ratio as 1").
+pub fn capped_recall(found: &FxHashSet<u32>, candidates: &FxHashSet<u32>, k: usize) -> f64 {
+    if k == 0 {
+        return 1.0;
+    }
+    let hit = found.iter().filter(|f| candidates.contains(f)).count();
+    (hit as f64 / k as f64).min(1.0)
+}
+
+/// Verify the two-hop spanner property (Definition 2.4) by explicit check:
+/// every pair with similarity ≥ r2 (given as `required_pairs`) must be within
+/// two hops; every graph edge must have weight ≥ r1. Returns the number of
+/// violated required pairs.
+pub fn spanner_violations(
+    csr: &Csr,
+    required_pairs: &[(u32, u32)],
+    r1: f32,
+) -> (usize, usize) {
+    let mut missing = 0;
+    for &(p, q) in required_pairs {
+        let hop2 = two_hop_set(csr, p, r1);
+        if !hop2.contains(&q) {
+            missing += 1;
+        }
+    }
+    let mut bad_edges = 0;
+    for u in 0..csr.num_nodes() as u32 {
+        for (_, w) in csr.neighbors(u) {
+            if w < r1 {
+                bad_edges += 1;
+            }
+        }
+    }
+    (missing, bad_edges / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Edge, Graph};
+
+    fn csr_of(n: usize, edges: Vec<Edge>) -> Csr {
+        Csr::new(&Graph::from_edges(n, edges))
+    }
+
+    #[test]
+    fn two_hop_reaches_star_leaves() {
+        // Star: center 0 — leaves 1..4. Leaves are 2 hops from each other.
+        let csr = csr_of(
+            5,
+            (1..5).map(|v| Edge::new(0, v, 0.9)).collect(),
+        );
+        let h2 = two_hop_set(&csr, 1, 0.5);
+        assert!(h2.contains(&0));
+        for v in 2..5 {
+            assert!(h2.contains(&v), "leaf {v} not reached");
+        }
+        let h1 = one_hop_set(&csr, 1, 0.5);
+        assert_eq!(h1.len(), 1);
+    }
+
+    #[test]
+    fn weight_filter_cuts_paths() {
+        // 1 -0.9- 0 -0.3- 2: with min_w 0.5 node 2 unreachable.
+        let csr = csr_of(3, vec![Edge::new(0, 1, 0.9), Edge::new(0, 2, 0.3)]);
+        let h2 = two_hop_set(&csr, 1, 0.5);
+        assert!(h2.contains(&0) && !h2.contains(&2));
+        let h2_relaxed = two_hop_set(&csr, 1, 0.25);
+        assert!(h2_relaxed.contains(&2));
+    }
+
+    #[test]
+    fn recall_metrics() {
+        let mut found = FxHashSet::default();
+        found.insert(1);
+        found.insert(2);
+        assert!((recall(&found, &[1, 2, 3, 4]) - 0.5).abs() < 1e-9);
+        assert_eq!(recall(&found, &[]), 1.0);
+
+        let mut cands = FxHashSet::default();
+        cands.insert(1);
+        cands.insert(2);
+        cands.insert(5);
+        assert!((capped_recall(&found, &cands, 2) - 1.0).abs() < 1e-9);
+        assert!((capped_recall(&found, &cands, 4) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spanner_violation_detection() {
+        let csr = csr_of(4, vec![Edge::new(0, 1, 0.9), Edge::new(1, 2, 0.9)]);
+        // (0,2) is within 2 hops; (0,3) is not.
+        let (missing, bad) = spanner_violations(&csr, &[(0, 2), (0, 3)], 0.5);
+        assert_eq!(missing, 1);
+        assert_eq!(bad, 0);
+        // With r1 above the edge weights, both edges are "bad".
+        let (_, bad) = spanner_violations(&csr, &[], 0.95);
+        assert_eq!(bad, 2);
+    }
+}

@@ -1,0 +1,62 @@
+//! # Stars: Tera-Scale Graph Building for Clustering and Graph Learning
+//!
+//! Full-system reproduction of the Stars paper (Google Research, 2022).
+//!
+//! Stars builds **two-hop spanners**: extremely sparse similarity graphs in
+//! which similar points are connected by a path of length at most two. Within
+//! each LSH bucket (or SortingLSH window) it creates *star graphs* centered on
+//! randomly sampled leaders, reducing the per-bucket comparison cost from
+//! quadratic to nearly linear.
+//!
+//! The crate is the L3 (coordinator) layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the graph-building pipeline: LSH sketching,
+//!   bucketing, star construction, a simulated AMPC cluster with per-worker
+//!   cost accounting, downstream clustering and evaluation.
+//! * **L2 (python/compile/model.py)** — the learned pairwise similarity model
+//!   (JAX), AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for batched cosine
+//!   scoring and SimHash sketching, lowered into the same HLO artifacts.
+//!
+//! Python never runs at request time: [`runtime::Engine`] loads the
+//! `artifacts/*.hlo.txt` produced by `make artifacts` and executes them via
+//! the PJRT CPU client (`xla` crate).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use stars::data::synth;
+//! use stars::sim::{CosineSim, CountingSim};
+//! use stars::lsh::SimHash;
+//! use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+//!
+//! let ds = synth::gaussian_mixture(10_000, 100, 100, 0.1, 42);
+//! let sim = CountingSim::new(CosineSim);
+//! let family = SimHash::new(ds.dim(), 12, 7);
+//! let params = BuildParams::threshold_mode(Algorithm::LshStars)
+//!     .sketches(25)
+//!     .leaders(25)
+//!     .threshold(0.5);
+//! let out = StarsBuilder::new(&ds)
+//!     .similarity(&sim)
+//!     .hash(&family)
+//!     .params(params)
+//!     .build();
+//! println!("{} edges, {} comparisons", out.graph.num_edges(), out.report.comparisons);
+//! ```
+
+pub mod util;
+pub mod data;
+pub mod sim;
+pub mod lsh;
+pub mod graph;
+pub mod ampc;
+pub mod stars;
+pub mod clustering;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Crate-wide result type (anyhow-based).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,85 @@
+//! The [`LshFamily`] trait.
+
+use crate::data::types::Dataset;
+use crate::util::fxhash;
+
+/// A locality sensitive hash family over a dataset.
+///
+/// One *repetition* (`rep`) corresponds to one independent draw of the
+/// concatenated hash `H(p) = (h_1(p), …, h_M(p))` from the family. The
+/// pipeline evaluates repetitions `0..R` (the paper's "number of sketches").
+pub trait LshFamily: Sync {
+    /// Display name.
+    fn name(&self) -> &'static str;
+
+    /// Number of concatenated base hashes per sketch (the paper's M,
+    /// "sketching dimension").
+    fn sketch_len(&self) -> usize;
+
+    /// Write the M base-hash symbols of point `i` under repetition `rep`
+    /// into `out` (length `sketch_len()`).
+    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]);
+
+    /// Bucket key of point `i` under repetition `rep`: the combined hash of
+    /// all M symbols. Two points share a bucket iff all symbols agree (up to
+    /// a 2⁻⁶⁴ collision, which is negligible against the paper's n⁻⁴ bound).
+    fn bucket_key(&self, ds: &Dataset, i: usize, rep: u64) -> u64 {
+        let mut buf = vec![0u64; self.sketch_len()];
+        self.symbols(ds, i, rep, &mut buf);
+        combine_symbols(&buf)
+    }
+
+    /// Bucket keys for all points under repetition `rep`. Implementations
+    /// override this when batch evaluation is cheaper (e.g. SimHash reuses
+    /// the hyperplane matrix across points).
+    fn bucket_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
+        (0..ds.len()).map(|i| self.bucket_key(ds, i, rep)).collect()
+    }
+
+    /// Symbol matrix for all points (n × M, row-major) under repetition
+    /// `rep`. Used by SortingLSH, which sorts rows lexicographically.
+    fn symbol_matrix(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
+        let m = self.sketch_len();
+        let mut out = vec![0u64; ds.len() * m];
+        for i in 0..ds.len() {
+            self.symbols(ds, i, rep, &mut out[i * m..(i + 1) * m]);
+        }
+        out
+    }
+
+    /// Optional fast path for SortingLSH: one u64 per point whose integer
+    /// order equals the lexicographic order of the point's symbol sequence
+    /// (families with ≤64 binary symbols pack sign bits MSB-first).
+    /// Returning `Some` lets [`crate::lsh::sorting::sorted_indices`] sort
+    /// plain u64 keys instead of comparing symbol rows.
+    fn packed_sort_keys(&self, _ds: &Dataset, _rep: u64) -> Option<Vec<u64>> {
+        None
+    }
+}
+
+/// Collapse a symbol sequence into a single bucket key.
+#[inline]
+pub fn combine_symbols(symbols: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &s in symbols {
+        h = fxhash::combine(h, s);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_symbols_is_injective_enough() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..100u64 {
+            for b in 0..100u64 {
+                seen.insert(combine_symbols(&[a, b]));
+            }
+        }
+        assert_eq!(seen.len(), 10_000);
+        assert_ne!(combine_symbols(&[1, 2]), combine_symbols(&[2, 1]));
+    }
+}

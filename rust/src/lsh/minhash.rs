@@ -1,0 +1,128 @@
+//! MinHash (Broder): LSH for Jaccard similarity over token sets.
+//!
+//! `Pr[h(A) = h(B)] = |A∩B| / |A∪B|` exactly, per base hash.
+
+use crate::data::types::Dataset;
+use crate::lsh::family::LshFamily;
+use crate::util::fxhash;
+use crate::util::rng::SplitMix64;
+
+/// MinHash family over (unweighted) token sets.
+#[derive(Clone, Debug)]
+pub struct MinHash {
+    perms: usize,
+    seed: u64,
+}
+
+impl MinHash {
+    /// Family with `perms` independent min-wise hashes per sketch.
+    pub fn new(perms: usize, seed: u64) -> Self {
+        assert!(perms >= 1);
+        MinHash { perms, seed }
+    }
+
+    /// The t-th permutation value of `token` under repetition `rep`:
+    /// a stateless mix of (token, rep, t, seed).
+    #[inline]
+    pub fn perm_value(&self, token: u32, rep: u64, t: usize) -> u64 {
+        // One SplitMix64 step keyed by (token, rep, t): statistically a fresh
+        // random permutation per (rep, t).
+        let key = fxhash::combine(
+            self.seed ^ 0x4D49_4E48, // "MINH"
+            (rep << 20) ^ (t as u64) << 40 ^ token as u64,
+        );
+        SplitMix64::new(key).next_u64()
+    }
+
+    /// Min-wise symbol of one set for (rep, t).
+    #[inline]
+    pub fn symbol_of_set(&self, tokens: &[u32], rep: u64, t: usize) -> u64 {
+        tokens
+            .iter()
+            .map(|&tok| self.perm_value(tok, rep, t))
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+}
+
+impl LshFamily for MinHash {
+    fn name(&self) -> &'static str {
+        "minhash"
+    }
+
+    fn sketch_len(&self) -> usize {
+        self.perms
+    }
+
+    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
+        let tokens = &ds.set(i).tokens;
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = self.symbol_of_set(tokens, rep, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::types::{Dataset, WeightedSet};
+    use crate::sim::jaccard;
+
+    fn two_set_ds(a: Vec<u32>, b: Vec<u32>) -> Dataset {
+        Dataset::from_sets(
+            "t",
+            vec![WeightedSet::from_tokens(a), WeightedSet::from_tokens(b)],
+            vec![],
+        )
+    }
+
+    #[test]
+    fn identical_sets_always_collide() {
+        let ds = two_set_ds(vec![1, 5, 9], vec![1, 5, 9]);
+        let h = MinHash::new(4, 3);
+        for rep in 0..20 {
+            assert_eq!(h.bucket_key(&ds, 0, rep), h.bucket_key(&ds, 1, rep));
+        }
+    }
+
+    #[test]
+    fn disjoint_sets_rarely_collide() {
+        let ds = two_set_ds((0..50).collect(), (100..150).collect());
+        let h = MinHash::new(1, 3);
+        let mut coll = 0;
+        for rep in 0..500 {
+            if h.bucket_key(&ds, 0, rep) == h.bucket_key(&ds, 1, rep) {
+                coll += 1;
+            }
+        }
+        assert!(coll < 10, "disjoint sets collided {coll}/500");
+    }
+
+    #[test]
+    fn collision_rate_estimates_jaccard() {
+        // |A∩B|=5, |A∪B|=15 -> J = 1/3 per base hash.
+        let a: Vec<u32> = (0..10).collect();
+        let b: Vec<u32> = (5..15).collect();
+        let ds = two_set_ds(a.clone(), b.clone());
+        let j = jaccard(ds.set(0), ds.set(1));
+        assert!((j - 1.0 / 3.0).abs() < 1e-6);
+        let h = MinHash::new(1, 7);
+        let reps = 6000;
+        let mut coll = 0;
+        for rep in 0..reps {
+            if h.symbol_of_set(&ds.set(0).tokens, rep, 0)
+                == h.symbol_of_set(&ds.set(1).tokens, rep, 0)
+            {
+                coll += 1;
+            }
+        }
+        let p = coll as f64 / reps as f64;
+        assert!((p - j as f64).abs() < 0.03, "estimate {p} vs jaccard {j}");
+    }
+
+    #[test]
+    fn empty_set_symbol_is_sentinel() {
+        let h = MinHash::new(2, 1);
+        assert_eq!(h.symbol_of_set(&[], 0, 0), u64::MAX);
+    }
+}

@@ -1,0 +1,159 @@
+//! SimHash/MinHash mixture family (Amazon2m, paper Appendix D.2).
+//!
+//! Each of the M sketch symbols is independently drawn from either SimHash
+//! (over the embedding) or MinHash (over the co-purchase set), chosen by a
+//! per-(rep, symbol) coin. As the paper notes, this satisfies Definition 2.1
+//! for the mixture similarity α·cosine + (1−α)·jaccard.
+
+use crate::data::types::Dataset;
+use crate::lsh::family::LshFamily;
+use crate::lsh::{MinHash, SimHash};
+use crate::util::rng::{derive_seed, SplitMix64};
+
+/// Per-symbol random mixture of SimHash and MinHash over a hybrid dataset.
+#[derive(Clone, Debug)]
+pub struct MixtureHash {
+    simhash: SimHash,
+    minhash: MinHash,
+    sketch_len: usize,
+    /// Probability a symbol uses SimHash (0.5 = the paper's unbiased mix).
+    pub simhash_prob: f64,
+    seed: u64,
+}
+
+impl MixtureHash {
+    /// Mixture family with `sketch_len` symbols over `dim`-dense + set data.
+    pub fn new(dim: usize, sketch_len: usize, seed: u64) -> Self {
+        MixtureHash {
+            // Give each component its own full symbol budget; the mixture
+            // picks per symbol which component's value to use.
+            simhash: SimHash::new(dim, sketch_len.min(64), derive_seed(seed, 0x5D)),
+            minhash: MinHash::new(sketch_len, derive_seed(seed, 0x3A)),
+            sketch_len,
+            simhash_prob: 0.5,
+            seed,
+        }
+    }
+
+    /// True if symbol `t` of repetition `rep` uses the SimHash component.
+    #[inline]
+    pub fn uses_simhash(&self, rep: u64, t: usize) -> bool {
+        let mut sm = SplitMix64::new(derive_seed(
+            self.seed ^ 0x4D49_58,
+            rep.wrapping_mul(131).wrapping_add(t as u64),
+        ));
+        sm.next_f64() < self.simhash_prob
+    }
+}
+
+impl LshFamily for MixtureHash {
+    fn name(&self) -> &'static str {
+        "mixture-hash"
+    }
+
+    fn sketch_len(&self) -> usize {
+        self.sketch_len
+    }
+
+    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
+        // Evaluate the SimHash bits once (they are packed in one pass).
+        let planes = self.simhash.hyperplanes(rep);
+        let bits = self.simhash.sketch_row(ds.row(i), &planes);
+        let tokens = &ds.set(i).tokens;
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = if self.uses_simhash(rep, t) {
+                (bits >> (t % 64)) & 1
+            } else {
+                self.minhash.symbol_of_set(tokens, rep, t)
+            };
+        }
+    }
+
+    fn bucket_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
+        // Precompute which symbols are simhash for this rep, and the planes.
+        let planes = self.simhash.hyperplanes(rep);
+        let choice: Vec<bool> = (0..self.sketch_len)
+            .map(|t| self.uses_simhash(rep, t))
+            .collect();
+        let mut buf = vec![0u64; self.sketch_len];
+        (0..ds.len())
+            .map(|i| {
+                let bits = self.simhash.sketch_row(ds.row(i), &planes);
+                let tokens = &ds.set(i).tokens;
+                for (t, b) in buf.iter_mut().enumerate() {
+                    *b = if choice[t] {
+                        (bits >> (t % 64)) & 1
+                    } else {
+                        self.minhash.symbol_of_set(tokens, rep, t)
+                    };
+                }
+                super::family::combine_symbols(&buf)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn deterministic_and_rep_dependent() {
+        let ds = synth::products(60, &synth::ProductsParams::default(), 4);
+        let h = MixtureHash::new(ds.dim(), 12, 9);
+        assert_eq!(h.bucket_keys(&ds, 0), h.bucket_keys(&ds, 0));
+        assert_ne!(h.bucket_keys(&ds, 0), h.bucket_keys(&ds, 1));
+    }
+
+    #[test]
+    fn batch_matches_scalar_path() {
+        let ds = synth::products(30, &synth::ProductsParams::default(), 4);
+        let h = MixtureHash::new(ds.dim(), 8, 9);
+        let batch = h.bucket_keys(&ds, 5);
+        for i in 0..ds.len() {
+            assert_eq!(batch[i], h.bucket_key(&ds, i, 5), "point {i}");
+        }
+    }
+
+    #[test]
+    fn mixture_uses_both_components() {
+        let h = MixtureHash::new(10, 16, 1);
+        let mut sim = 0;
+        for rep in 0..8u64 {
+            for t in 0..16 {
+                if h.uses_simhash(rep, t) {
+                    sim += 1;
+                }
+            }
+        }
+        // Out of 128 coins at p=0.5, both sides must appear.
+        assert!(sim > 20 && sim < 108, "coin flips degenerate: {sim}/128");
+    }
+
+    #[test]
+    fn same_class_collides_more_than_cross_class() {
+        let ds = synth::products(300, &synth::ProductsParams::default(), 12);
+        // Short sketches so full-key collisions are observable.
+        let h = MixtureHash::new(ds.dim(), 2, 3);
+        let (mut same_coll, mut same_n, mut diff_coll, mut diff_n) = (0, 0, 0, 0);
+        for rep in 0..60u64 {
+            let keys = h.bucket_keys(&ds, rep);
+            for i in 0..60 {
+                for j in (i + 1)..60 {
+                    let coll = (keys[i] == keys[j]) as u64;
+                    if ds.labels[i] == ds.labels[j] {
+                        same_coll += coll;
+                        same_n += 1;
+                    } else {
+                        diff_coll += coll;
+                        diff_n += 1;
+                    }
+                }
+            }
+        }
+        let ps = same_coll as f64 / same_n.max(1) as f64;
+        let pd = diff_coll as f64 / diff_n.max(1) as f64;
+        assert!(ps > pd, "same-class collision {ps} <= cross {pd}");
+    }
+}

@@ -1,0 +1,28 @@
+//! Locality sensitive hash families.
+//!
+//! A family produces, per repetition, either a **bucket key** per point (the
+//! concatenation of its M base hashes — classic LSH bucketing, Stars 1) or a
+//! **symbol sequence** per point (the M base hashes kept separate so points
+//! can be sorted lexicographically — SortingLSH, Stars 2).
+//!
+//! Families implemented (matching the paper's Appendix D.2 setups):
+//! * [`SimHash`] — random hyperplanes, for cosine/angular similarity.
+//! * [`MinHash`] — for (unweighted) Jaccard.
+//! * [`WeightedMinHash`] — Ioffe consistent weighted sampling, for weighted
+//!   Jaccard (the Wikipedia measure).
+//! * [`MixtureHash`] — per-symbol random choice of SimHash or MinHash (the
+//!   Amazon2m family; satisfies Definition 2.1 for the mixture similarity).
+
+mod family;
+mod simhash;
+mod minhash;
+mod weighted_minhash;
+mod mixture;
+pub mod sorting;
+
+pub use family::LshFamily;
+pub use minhash::MinHash;
+pub use mixture::MixtureHash;
+pub use simhash::SimHash;
+pub use sorting::{sorted_indices, sorted_order, windows, SortedOrder};
+pub use weighted_minhash::WeightedMinHash;

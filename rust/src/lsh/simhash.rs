@@ -1,0 +1,244 @@
+//! SimHash (Charikar): random-hyperplane LSH for cosine/angular similarity.
+//!
+//! `Pr[h(x) = h(y)] = 1 − θ(x,y)/π` per bit. The paper uses sketching
+//! dimension M=12 (MNIST), M=16 (Random1B/10B), and M=30 for SortingLSH.
+
+use crate::data::types::Dataset;
+use crate::lsh::family::LshFamily;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Random-hyperplane family over dense features.
+#[derive(Clone, Debug)]
+pub struct SimHash {
+    dim: usize,
+    bits: usize,
+    seed: u64,
+}
+
+impl SimHash {
+    /// Family over `dim`-dimensional vectors with `bits` hyperplanes per
+    /// sketch (bits ≤ 64 so a sketch packs into one u64 key).
+    pub fn new(dim: usize, bits: usize, seed: u64) -> Self {
+        assert!(bits >= 1 && bits <= 64, "bits must be in 1..=64");
+        assert!(dim >= 1);
+        SimHash { dim, bits, seed }
+    }
+
+    /// Generate the hyperplane matrix for a repetition: `bits × dim`,
+    /// row-major. Deterministic in (seed, rep).
+    pub fn hyperplanes(&self, rep: u64) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.bits * self.dim);
+        for m in 0..self.bits {
+            let mut rng = Rng::new(derive_seed(
+                self.seed ^ 0x51_4D48, // "SMH"
+                rep.wrapping_mul(1_000_003).wrapping_add(m as u64),
+            ));
+            for _ in 0..self.dim {
+                out.push(rng.gaussian() as f32);
+            }
+        }
+        out
+    }
+
+    /// Packed sign bits of one row against a precomputed hyperplane matrix.
+    ///
+    /// Perf: processes hyperplanes in pairs with 4-way unrolled
+    /// multiply-accumulate lanes so the autovectorizer emits wide FMAs and
+    /// the row stays hot in L1 across both planes (see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn sketch_row(&self, row: &[f32], planes: &[f32]) -> u64 {
+        debug_assert_eq!(row.len(), self.dim);
+        let d = self.dim;
+        let mut key = 0u64;
+        let mut m = 0;
+        while m + 2 <= self.bits {
+            let p0 = &planes[m * d..(m + 1) * d];
+            let p1 = &planes[(m + 1) * d..(m + 2) * d];
+            let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+            let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
+            let chunks = d / 4;
+            for c in 0..chunks {
+                let k = c * 4;
+                a0 += row[k] * p0[k];
+                a1 += row[k + 1] * p0[k + 1];
+                a2 += row[k + 2] * p0[k + 2];
+                a3 += row[k + 3] * p0[k + 3];
+                b0 += row[k] * p1[k];
+                b1 += row[k + 1] * p1[k + 1];
+                b2 += row[k + 2] * p1[k + 2];
+                b3 += row[k + 3] * p1[k + 3];
+            }
+            let (mut da, mut db) = (a0 + a1 + a2 + a3, b0 + b1 + b2 + b3);
+            for k in chunks * 4..d {
+                da += row[k] * p0[k];
+                db += row[k] * p1[k];
+            }
+            if da >= 0.0 {
+                key |= 1 << m;
+            }
+            if db >= 0.0 {
+                key |= 1 << (m + 1);
+            }
+            m += 2;
+        }
+        if m < self.bits {
+            let plane = &planes[m * d..(m + 1) * d];
+            let mut dot = 0f32;
+            for k in 0..d {
+                dot += row[k] * plane[k];
+            }
+            if dot >= 0.0 {
+                key |= 1 << m;
+            }
+        }
+        key
+    }
+
+    /// Packed sort keys for SortingLSH: the M sign bits stored MSB-first so
+    /// integer order == lexicographic symbol order. Fast path used by
+    /// [`crate::lsh::sorting::sorted_indices`].
+    pub fn packed_sort_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
+        let planes = self.hyperplanes(rep);
+        (0..ds.len())
+            .map(|i| {
+                let key = self.sketch_row(ds.row(i), &planes);
+                // bit t of key is symbol t; move symbol 0 to the MSB.
+                key.reverse_bits() >> (64 - self.bits)
+            })
+            .collect()
+    }
+}
+
+impl LshFamily for SimHash {
+    fn name(&self) -> &'static str {
+        "simhash"
+    }
+
+    fn sketch_len(&self) -> usize {
+        self.bits
+    }
+
+    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
+        let planes = self.hyperplanes(rep);
+        let key = self.sketch_row(ds.row(i), &planes);
+        for (m, o) in out.iter_mut().enumerate() {
+            *o = (key >> m) & 1;
+        }
+    }
+
+    fn bucket_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
+        let planes = self.hyperplanes(rep);
+        (0..ds.len())
+            .map(|i| self.sketch_row(ds.row(i), &planes))
+            .collect()
+    }
+
+    fn symbol_matrix(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
+        let planes = self.hyperplanes(rep);
+        let m = self.bits;
+        let mut out = vec![0u64; ds.len() * m];
+        for i in 0..ds.len() {
+            let key = self.sketch_row(ds.row(i), &planes);
+            for t in 0..m {
+                out[i * m + t] = (key >> t) & 1;
+            }
+        }
+        out
+    }
+
+    fn packed_sort_keys(&self, ds: &Dataset, rep: u64) -> Option<Vec<u64>> {
+        Some(SimHash::packed_sort_keys(self, ds, rep))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::quickcheck::{check, Gen};
+
+    #[test]
+    fn deterministic_across_calls() {
+        let ds = synth::gaussian_mixture(50, 16, 4, 0.1, 3);
+        let h = SimHash::new(16, 12, 7);
+        assert_eq!(h.bucket_keys(&ds, 0), h.bucket_keys(&ds, 0));
+        assert_ne!(h.bucket_keys(&ds, 0), h.bucket_keys(&ds, 1));
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        let mut dense = vec![0.5f32; 16];
+        dense.extend_from_slice(&dense.clone());
+        let ds = crate::data::Dataset::from_dense("t", 16, dense, vec![]);
+        let h = SimHash::new(16, 24, 1);
+        for rep in 0..10 {
+            let keys = h.bucket_keys(&ds, rep);
+            assert_eq!(keys[0], keys[1]);
+        }
+    }
+
+    #[test]
+    fn collision_probability_tracks_angle() {
+        // Pr[bit collision] = 1 - theta/pi. Validate empirically over many
+        // repetitions for a known angle (90 degrees -> 0.5).
+        let dense = vec![1.0, 0.0, 0.0, 1.0]; // orthogonal pair in d=2
+        let ds = crate::data::Dataset::from_dense("t", 2, dense, vec![]);
+        let h = SimHash::new(2, 1, 99);
+        let reps = 4000;
+        let mut coll = 0;
+        for rep in 0..reps {
+            let keys = h.bucket_keys(&ds, rep);
+            if keys[0] == keys[1] {
+                coll += 1;
+            }
+        }
+        let p = coll as f64 / reps as f64;
+        assert!((p - 0.5).abs() < 0.05, "orthogonal collision prob {p}");
+    }
+
+    #[test]
+    fn closer_pairs_collide_more() {
+        check("simhash-monotone", 10, |g: &mut Gen| {
+            let d = 16;
+            let x = g.unit_vec(d);
+            // y_close = x + small noise, y_far = random.
+            let mut y_close = x.clone();
+            for v in &mut y_close {
+                *v += 0.1 * g.f32_in(-1.0, 1.0);
+            }
+            let y_far = g.unit_vec(d);
+            let mut dense = x.clone();
+            dense.extend(&y_close);
+            dense.extend(&y_far);
+            let ds = crate::data::Dataset::from_dense("t", d, dense, vec![]);
+            let h = SimHash::new(d, 8, 5);
+            let (mut close, mut far) = (0, 0);
+            for rep in 0..300 {
+                let keys = h.bucket_keys(&ds, rep);
+                if keys[0] == keys[1] {
+                    close += 1;
+                }
+                if keys[0] == keys[2] {
+                    far += 1;
+                }
+            }
+            assert!(
+                close > far,
+                "close collided {close} <= far {far}"
+            );
+        });
+    }
+
+    #[test]
+    fn symbols_match_bucket_key_bits() {
+        let ds = synth::gaussian_mixture(10, 8, 2, 0.1, 4);
+        let h = SimHash::new(8, 10, 2);
+        let keys = h.bucket_keys(&ds, 3);
+        let mat = h.symbol_matrix(&ds, 3);
+        for i in 0..ds.len() {
+            for t in 0..10 {
+                assert_eq!(mat[i * 10 + t], (keys[i] >> t) & 1);
+            }
+        }
+    }
+}

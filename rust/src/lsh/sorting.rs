@@ -1,0 +1,216 @@
+//! SortingLSH (paper §3.2, after Bawa et al.'s LSH Forest).
+//!
+//! Evaluate M base hashes per point, sort points lexicographically by their
+//! symbol sequences, and split the order into contiguous windows of size ≤ W
+//! with a random shift `r ∈ [W/2, W]` for the first window. Points in dense
+//! regions share long prefixes and land in the same window; sparse-region
+//! points still share shorter prefixes with their (more distant) neighbors.
+
+use crate::data::types::Dataset;
+use crate::lsh::family::LshFamily;
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// The sorted order of points for one repetition.
+#[derive(Clone, Debug)]
+pub struct SortedOrder {
+    /// Point indices in lexicographic symbol order.
+    pub order: Vec<u32>,
+    /// Symbol matrix (n × m, row-major, in *original* point order).
+    pub symbols: Vec<u64>,
+    /// Symbols per point.
+    pub m: usize,
+}
+
+impl SortedOrder {
+    /// Symbols of original point `i`.
+    pub fn row(&self, i: u32) -> &[u64] {
+        let m = self.m;
+        &self.symbols[i as usize * m..(i as usize + 1) * m]
+    }
+
+    /// Common prefix length (in symbols) between two original points.
+    pub fn common_prefix(&self, i: u32, j: u32) -> usize {
+        self.row(i)
+            .iter()
+            .zip(self.row(j))
+            .take_while(|(a, b)| a == b)
+            .count()
+    }
+}
+
+/// Just the lexicographic index order (the scoring loop's need). Uses the
+/// family's packed-u64 fast path when available — sorting 64-bit keys is
+/// ~30x cheaper than comparing symbol rows (EXPERIMENTS.md §Perf).
+pub fn sorted_indices<F: LshFamily + ?Sized>(family: &F, ds: &Dataset, rep: u64) -> Vec<u32> {
+    if let Some(keys) = family.packed_sort_keys(ds, rep) {
+        let mut order: Vec<u32> = (0..ds.len() as u32).collect();
+        order.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        return order;
+    }
+    sorted_order(family, ds, rep).order
+}
+
+/// Compute the lexicographic order of all points under repetition `rep`.
+pub fn sorted_order<F: LshFamily + ?Sized>(family: &F, ds: &Dataset, rep: u64) -> SortedOrder {
+    let m = family.sketch_len();
+    let symbols = family.symbol_matrix(ds, rep);
+    let mut order: Vec<u32> = (0..ds.len() as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        let ra = &symbols[a as usize * m..(a as usize + 1) * m];
+        let rb = &symbols[b as usize * m..(b as usize + 1) * m];
+        ra.cmp(rb).then(a.cmp(&b))
+    });
+    SortedOrder { order, symbols, m }
+}
+
+/// Split `n` sorted positions into windows of size ≤ `w`, with the first
+/// window's size drawn uniformly from [w/2, w] (the paper's random shift,
+/// Stars 2 step 3). Returns ranges over *positions in the sorted order*.
+pub fn windows(n: usize, w: usize, rng: &mut Rng) -> Vec<Range<usize>> {
+    assert!(w >= 2, "window size must be >= 2");
+    if n == 0 {
+        return Vec::new();
+    }
+    let first = rng.range(w / 2, w + 1).min(n);
+    let mut out = Vec::with_capacity(n / w + 2);
+    out.push(0..first);
+    let mut start = first;
+    while start < n {
+        let end = (start + w).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lsh::SimHash;
+    use crate::util::quickcheck::{check, Gen};
+
+    #[test]
+    fn order_is_permutation_and_sorted() {
+        let ds = synth::gaussian_mixture(200, 16, 8, 0.1, 6);
+        let h = SimHash::new(16, 20, 3);
+        let so = sorted_order(&h, &ds, 0);
+        let mut seen = so.order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..200).collect::<Vec<u32>>());
+        for k in 1..so.order.len() {
+            let (a, b) = (so.order[k - 1], so.order[k]);
+            assert!(so.row(a) <= so.row(b), "not sorted at {k}");
+        }
+    }
+
+    #[test]
+    fn similar_points_sort_adjacent() {
+        // Duplicate points share all symbols, so they must be adjacent.
+        let mut dense = Vec::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let v: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+            dense.extend(&v);
+            dense.extend(&v); // duplicate
+        }
+        let ds = crate::data::Dataset::from_dense("t", 8, dense, vec![]);
+        let h = SimHash::new(8, 24, 2);
+        let so = sorted_order(&h, &ds, 0);
+        for k in 0..so.order.len() {
+            let i = so.order[k];
+            let twin = if i % 2 == 0 { i + 1 } else { i - 1 };
+            let pos_twin = so.order.iter().position(|&x| x == twin).unwrap();
+            assert_eq!(
+                (k as i64 - pos_twin as i64).abs(),
+                1,
+                "duplicates {i},{twin} not adjacent"
+            );
+        }
+    }
+
+    #[test]
+    fn windows_partition_exactly() {
+        check("windows-partition", 60, |g: &mut Gen| {
+            let n = g.usize_in(0, 5000);
+            let w = g.usize_in(2, 300);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let ws = windows(n, w, &mut rng);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for (k, r) in ws.iter().enumerate() {
+                assert_eq!(r.start, prev_end, "gap before window {k}");
+                assert!(r.end <= n);
+                assert!(r.len() <= w, "window {k} too big: {}", r.len());
+                if k == 0 && n >= w / 2 {
+                    assert!(r.len() >= w / 2.min(n), "first window too small");
+                }
+                covered += r.len();
+                prev_end = r.end;
+            }
+            assert_eq!(covered, n, "windows don't cover all points");
+        });
+    }
+
+    #[test]
+    fn first_window_size_varies_with_rng() {
+        let mut sizes = std::collections::HashSet::new();
+        for seed in 0..50 {
+            let mut rng = Rng::new(seed);
+            let ws = windows(10_000, 100, &mut rng);
+            sizes.insert(ws[0].len());
+        }
+        assert!(sizes.len() > 10, "shift not random: {sizes:?}");
+    }
+
+    #[test]
+    fn packed_fast_path_matches_matrix_sort() {
+        // sorted_indices (packed u64 keys) must produce a valid
+        // lexicographic order identical to the matrix path up to ties.
+        let ds = synth::gaussian_mixture(500, 16, 8, 0.1, 9);
+        for bits in [1usize, 7, 30, 64] {
+            let h = SimHash::new(16, bits, 4);
+            let fast = sorted_indices(&h, &ds, 3);
+            let slow = sorted_order(&h, &ds, 3);
+            // Both sorts tie-break by index, so the orders must be equal.
+            assert_eq!(fast, slow.order, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn non_binary_families_fall_back() {
+        use crate::lsh::WeightedMinHash;
+        let ds = synth::zipf_sets(100, &synth::ZipfSetsParams::default(), 2);
+        let h = WeightedMinHash::new(3, 5);
+        let fast = sorted_indices(&h, &ds, 0);
+        let slow = sorted_order(&h, &ds, 0);
+        assert_eq!(fast, slow.order);
+    }
+
+    #[test]
+    fn common_prefix_reflects_similarity() {
+        let ds = synth::gaussian_mixture(400, 32, 4, 0.05, 8);
+        let h = SimHash::new(32, 30, 5);
+        let so = sorted_order(&h, &ds, 0);
+        // Average prefix within a mode must exceed across modes.
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0usize, 0usize, 0usize, 0usize);
+        for i in 0..100u32 {
+            for j in (i + 1)..100u32 {
+                let p = so.common_prefix(i, j);
+                if ds.labels[i as usize] == ds.labels[j as usize] {
+                    same += p;
+                    same_n += 1;
+                } else {
+                    diff += p;
+                    diff_n += 1;
+                }
+            }
+        }
+        let ms = same as f64 / same_n.max(1) as f64;
+        let md = diff as f64 / diff_n.max(1) as f64;
+        assert!(ms > md + 1.0, "prefixes don't separate modes: {ms} vs {md}");
+    }
+
+    use crate::util::rng::Rng;
+}

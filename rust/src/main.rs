@@ -1,0 +1,217 @@
+//! `stars` CLI — leader entrypoint for the graph-building system.
+//!
+//! Subcommands:
+//!   gen-data     generate a synthetic dataset and save it to disk
+//!   build        build a similarity graph and print its cost report
+//!   cluster      build + affinity-cluster + V-Measure
+//!   experiment   regenerate a paper table/figure (fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all)
+//!   smoke        verify the PJRT artifacts load and execute
+
+use stars::coordinator::experiments::{self, ExpConfig};
+use stars::coordinator::{run_job, DatasetSpec, FamilySpec, Job, MeasureSpec};
+use stars::stars::{Algorithm, BuildParams};
+use stars::util::args::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> stars::Result<()> {
+    let mut args = Args::from_env();
+    let cmd = args.take_subcommand().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "gen-data" => gen_data(&mut args),
+        "build" => build(&mut args),
+        "cluster" => cluster(&mut args),
+        "experiment" => experiment(&mut args),
+        "smoke" => smoke(),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+stars — Tera-Scale Graph Building via two-hop spanners (paper reproduction)
+
+USAGE:
+  stars gen-data --dataset <digits|zipf|products|random> --n <N> --out <file> [--seed S]
+  stars build    --dataset <name|file> --n <N> --algo <allpair|lsh|lsh+stars|sortinglsh|sortinglsh+stars>
+                 [--measure cosine|jaccard|wjaccard|mixture|learned]
+                 [--r SKETCHES] [--s LEADERS] [--threshold T] [--window W]
+                 [--degree-cap K] [--workers W] [--seed S] [--join direct|dht|shuffle]
+  stars cluster  (build flags) [--classes K]
+  stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
+                 [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
+  stars smoke    verify artifacts (PJRT runtime end-to-end)
+";
+
+fn parse_algo(name: &str) -> stars::Result<Algorithm> {
+    Ok(match name {
+        "allpair" => Algorithm::AllPair,
+        "lsh" => Algorithm::Lsh,
+        "lsh+stars" | "stars" => Algorithm::LshStars,
+        "sortinglsh" => Algorithm::SortingLsh,
+        "sortinglsh+stars" => Algorithm::SortingLshStars,
+        other => anyhow::bail!("unknown algorithm '{other}'"),
+    })
+}
+
+fn job_from_args(args: &Args) -> stars::Result<Job> {
+    let n = args.get_parsed_or("n", 10_000usize);
+    let dataset = DatasetSpec::parse(args.get_or("dataset", "random"), n)?;
+    let algo = parse_algo(args.get_or("algo", "lsh+stars"))?;
+    let sorting = matches!(algo, Algorithm::SortingLsh | Algorithm::SortingLshStars);
+    let measure = match args.get("measure") {
+        Some(m) => MeasureSpec::parse(m)?,
+        None => MeasureSpec::default_for(&dataset),
+    };
+    let family = FamilySpec::default_for(&dataset, sorting);
+    let mut params = if sorting {
+        BuildParams::knn_mode(algo)
+    } else {
+        BuildParams::threshold_mode(algo)
+    };
+    let (r0, s0, w0, cap0) = (params.sketches, params.leaders, params.window, params.degree_cap);
+    params = params
+        .sketches(args.get_parsed_or("r", r0))
+        .leaders(args.get_parsed_or("s", s0))
+        .window(args.get_parsed_or("window", w0))
+        .degree_cap(args.get_parsed_or("degree-cap", cap0))
+        .seed(args.get_parsed_or("seed", 42u64));
+    if let Some(t) = args.get("threshold") {
+        params = params.threshold(t.parse::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    params = params.join(match args.get_or("join", "direct") {
+        "direct" => stars::stars::JoinStrategy::Direct,
+        "dht" => stars::stars::JoinStrategy::Dht,
+        "shuffle" => stars::stars::JoinStrategy::Shuffle,
+        other => anyhow::bail!("unknown join strategy '{other}'"),
+    });
+    Ok(Job {
+        dataset,
+        measure,
+        family,
+        params,
+        data_seed: args.get_parsed_or("seed", 42u64),
+        workers: args.get_parsed_or("workers", 0usize),
+    })
+}
+
+fn gen_data(args: &mut Args) -> stars::Result<()> {
+    let n = args.get_parsed_or("n", 10_000usize);
+    let spec = DatasetSpec::parse(args.get_or("dataset", "random"), n)?;
+    let seed = args.get_parsed_or("seed", 42u64);
+    let out = args.get_or("out", "dataset.bin").to_string();
+    let ds = spec.realize(seed)?;
+    stars::data::io::save(&ds, std::path::Path::new(&out))?;
+    println!(
+        "wrote {} ({} points, dim {}, {} classes) to {out}",
+        spec.name(),
+        ds.len(),
+        ds.dim(),
+        ds.num_classes()
+    );
+    Ok(())
+}
+
+fn build(args: &mut Args) -> stars::Result<()> {
+    let job = job_from_args(args)?;
+    let res = run_job(&job)?;
+    println!("{}", res.to_json(&job).to_pretty());
+    Ok(())
+}
+
+fn cluster(args: &mut Args) -> stars::Result<()> {
+    let job = job_from_args(args)?;
+    let res = run_job(&job)?;
+    let classes = args.get_parsed_or("classes", res.dataset.num_classes().max(2));
+    let graph = if job.params.threshold > f32::MIN {
+        res.graph.filter_weight(job.params.threshold)
+    } else {
+        res.graph.clone()
+    };
+    let level = stars::clustering::affinity_cluster_to_k(&graph, classes);
+    let mut doc = res.to_json(&job);
+    if !res.dataset.labels.is_empty() {
+        let vm = stars::clustering::v_measure(&level.labels, &res.dataset.labels);
+        if let stars::util::json::Json::Obj(m) = &mut doc {
+            m.insert("vmeasure".into(), stars::util::json::Json::from(vm.v));
+            m.insert("homogeneity".into(), stars::util::json::Json::from(vm.homogeneity));
+            m.insert("completeness".into(), stars::util::json::Json::from(vm.completeness));
+            m.insert("clusters".into(), stars::util::json::Json::from(level.clusters));
+        }
+    }
+    println!("{}", doc.to_pretty());
+    Ok(())
+}
+
+fn experiment(args: &mut Args) -> stars::Result<()> {
+    let which = args
+        .take_subcommand()
+        .ok_or_else(|| anyhow::anyhow!("experiment name required (fig1..fig5, table1..table3, all)"))?;
+    let cfg = ExpConfig {
+        scale: args.get_parsed_or("scale", 1.0f64),
+        workers: args.get_parsed_or("workers", 0usize),
+        seed: args.get_parsed_or("seed", 42u64),
+        ..ExpConfig::default()
+    };
+    match which.as_str() {
+        "fig1" => drop(experiments::fig1(&cfg)),
+        "fig2" => drop(experiments::fig2(&cfg)),
+        "fig3" => drop(experiments::fig3(&cfg)),
+        "fig4" => drop(experiments::fig4(&cfg)),
+        "fig5" | "fig6" | "fig7" => drop(experiments::fig5_leaders(&cfg)),
+        "table1" => drop(experiments::table12(&cfg, false)),
+        "table2" => drop(experiments::table12(&cfg, true)),
+        "table3" => drop(experiments::table3(&cfg)),
+        "ablation" => {
+            experiments::ablation_bucket_cap(&cfg);
+            experiments::ablation_join(&cfg);
+        }
+        "all" => {
+            experiments::fig1(&cfg);
+            experiments::fig2(&cfg);
+            experiments::fig3(&cfg);
+            experiments::fig4(&cfg);
+            experiments::fig5_leaders(&cfg);
+            experiments::table12(&cfg, false);
+            experiments::table12(&cfg, true);
+            experiments::table3(&cfg);
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn smoke() -> stars::Result<()> {
+    use stars::runtime::{ArtifactMeta, CosineScorer, Engine, LearnedModel, SimHashSketcher};
+    let meta = ArtifactMeta::load(&ArtifactMeta::default_dir())?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    let scorer = CosineScorer::load(&engine, &meta)?;
+    println!(
+        "cosine_scorer: leaders={} block={} dim={}",
+        scorer.leaders, scorer.block, scorer.dim
+    );
+    let a = vec![1.0f32, 0.0, 0.0];
+    let b = vec![1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0];
+    let s = scorer.score(&a, 1, &b, 2, 3)?;
+    anyhow::ensure!((s[0] - 1.0).abs() < 1e-5 && s[1].abs() < 1e-5, "scorer numerics");
+    let sketcher = SimHashSketcher::load(&engine, &meta)?;
+    println!(
+        "simhash_sketch: block={} dim={} bits={}",
+        sketcher.block, sketcher.dim, sketcher.bits
+    );
+    let model = LearnedModel::load(&engine, &meta)?;
+    println!(
+        "learned_sim: batch={} dim={} auc={:.4}",
+        model.meta.batch, model.meta.dim, model.auc
+    );
+    println!("smoke OK");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! PJRT client wrapper: compile-once, execute-many.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    /// Platform name (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation. Inputs are `xla::Literal`s; the output is the
+/// flattened tuple the jax lowering produced (`return_tuple=True`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: `PjRtLoadedExecutable` holds a non-atomic `Rc<PjRtClientInternal>`,
+// which makes it `!Send`/`!Sync` even though the underlying PJRT CPU client
+// is thread-safe for execution. Callers in this crate uphold the required
+// discipline: every `Executable` is owned behind a `Mutex` (see
+// runtime::scorer / runtime::learned) and ALL PJRT interaction — execute,
+// buffer fetch, literal conversion — happens while that lock is held, so the
+// `Rc` refcount is never touched concurrently.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with the given inputs; returns the untupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("PJRT execute")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = lit.to_tuple().context("untupling result")?;
+        Ok(outs)
+    }
+
+    /// Execute and return the single f32 tensor output as a flat Vec.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+        outs[0].to_vec::<f32>().context("reading f32 output")
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "literal shape {:?} != data len {}",
+        dims,
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

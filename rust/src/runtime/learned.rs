@@ -1,0 +1,156 @@
+//! Learned pairwise similarity model executor.
+//!
+//! The model (python/compile/model.py, following Grale / paper §C.2, D.3)
+//! takes per-side features — product embedding + hashed co-purchase
+//! multi-hot — plus three pairwise features (embedding cosine, co-purchase
+//! indicator, co-purchase Jaccard), and outputs a similarity in (0, 1).
+//! It is trained at artifact-build time on synthetic same/different-category
+//! pairs drawn from the *same shared recipe* the rust generators use, then
+//! frozen into HLO. This module featurizes pairs and executes the artifact
+//! in fixed-size batches.
+
+use super::engine::{literal_f32, Engine, Executable};
+use super::ArtifactMeta;
+use crate::data::types::Dataset;
+use crate::sim::{cosine, jaccard};
+use anyhow::Result;
+use std::sync::Mutex;
+
+/// Knuth multiplicative hash of a co-purchase token into `buckets`.
+/// Mirrored in python/compile/model.py — keep in sync.
+#[inline]
+pub fn hash_token(token: u32, buckets: usize) -> usize {
+    (token.wrapping_mul(2654435761) as usize) % buckets
+}
+
+/// Shapes of the learned-model artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct LearnedMeta {
+    /// Pairs per PJRT dispatch.
+    pub batch: usize,
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Co-purchase hash buckets.
+    pub hash_buckets: usize,
+    /// Number of pairwise features.
+    pub pair_feats: usize,
+}
+
+/// PJRT-backed learned similarity model.
+pub struct LearnedModel {
+    exe: Mutex<Executable>,
+    /// Artifact shapes.
+    pub meta: LearnedMeta,
+    /// Holdout AUC recorded by the python training run (from meta.json).
+    pub auc: f64,
+    dispatches: std::sync::atomic::AtomicU64,
+}
+
+impl LearnedModel {
+    /// Load from artifacts.
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<LearnedModel> {
+        let exe = engine.load_hlo_text(&meta.file("learned_sim")?)?;
+        let auc = meta
+            .raw
+            .get("learned_sim")
+            .and_then(|e| e.get("auc"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+        Ok(LearnedModel {
+            exe: Mutex::new(exe),
+            meta: LearnedMeta {
+                batch: meta.usize_field("learned_sim", "batch")?,
+                dim: meta.usize_field("learned_sim", "dim")?,
+                hash_buckets: meta.usize_field("learned_sim", "hash_buckets")?,
+                pair_feats: meta.usize_field("learned_sim", "pair_feats")?,
+            },
+            auc,
+            dispatches: Default::default(),
+        })
+    }
+
+    /// PJRT dispatch count (perf accounting).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Score arbitrary pairs of dataset points. Pads the final batch.
+    ///
+    /// TODO(perf/mem): xla_extension 0.5.1's CPU client retains some
+    /// allocation per dispatch; jobs issuing hundreds of thousands of
+    /// dispatches (R=400 learned builds) grow RSS. Workaround until the
+    /// runtime is upgraded: recycle the Engine/model every ~50k dispatches
+    /// (see EXPERIMENTS.md known-issue note).
+    pub fn score(&self, ds: &Dataset, pairs: &[(u32, u32)]) -> Result<Vec<f32>> {
+        let m = self.meta;
+        anyhow::ensure!(
+            ds.dim() == m.dim,
+            "dataset dim {} != model dim {}",
+            ds.dim(),
+            m.dim
+        );
+        let mut out = Vec::with_capacity(pairs.len());
+        let mut ea = vec![0f32; m.batch * m.dim];
+        let mut eb = vec![0f32; m.batch * m.dim];
+        let mut ha = vec![0f32; m.batch * m.hash_buckets];
+        let mut hb = vec![0f32; m.batch * m.hash_buckets];
+        let mut pf = vec![0f32; m.batch * m.pair_feats];
+        for chunk in pairs.chunks(m.batch) {
+            ea.fill(0.0);
+            eb.fill(0.0);
+            ha.fill(0.0);
+            hb.fill(0.0);
+            pf.fill(0.0);
+            for (k, &(i, j)) in chunk.iter().enumerate() {
+                let (i, j) = (i as usize, j as usize);
+                ea[k * m.dim..(k + 1) * m.dim].copy_from_slice(ds.row(i));
+                eb[k * m.dim..(k + 1) * m.dim].copy_from_slice(ds.row(j));
+                for &t in &ds.set(i).tokens {
+                    ha[k * m.hash_buckets + hash_token(t, m.hash_buckets)] = 1.0;
+                }
+                for &t in &ds.set(j).tokens {
+                    hb[k * m.hash_buckets + hash_token(t, m.hash_buckets)] = 1.0;
+                }
+                let jac = jaccard(ds.set(i), ds.set(j));
+                pf[k * m.pair_feats] = cosine(ds.row(i), ds.row(j));
+                pf[k * m.pair_feats + 1] = if jac > 0.0 { 1.0 } else { 0.0 };
+                pf[k * m.pair_feats + 2] = jac;
+            }
+            let inputs = [
+                literal_f32(&ea, &[m.batch as i64, m.dim as i64])?,
+                literal_f32(&ha, &[m.batch as i64, m.hash_buckets as i64])?,
+                literal_f32(&eb, &[m.batch as i64, m.dim as i64])?,
+                literal_f32(&hb, &[m.batch as i64, m.hash_buckets as i64])?,
+                literal_f32(&pf, &[m.batch as i64, m.pair_feats as i64])?,
+            ];
+            self.dispatches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let scores = self.exe.lock().unwrap().run_f32(&inputs)?;
+            out.extend_from_slice(&scores[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_token_in_range_and_deterministic() {
+        for t in [0u32, 1, 17, 9999, u32::MAX] {
+            let h = hash_token(t, 64);
+            assert!(h < 64);
+            assert_eq!(h, hash_token(t, 64));
+        }
+    }
+
+    #[test]
+    fn hash_token_spreads() {
+        let mut counts = vec![0usize; 64];
+        for t in 0..6400u32 {
+            counts[hash_token(t, 64)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "some bucket never hit");
+    }
+}

@@ -1,0 +1,68 @@
+//! PJRT runtime: loads the HLO artifacts produced by `make artifacts`
+//! (python/compile/aot.py) and executes them from the rust hot path.
+//!
+//! Python never runs at request time. The interchange format is **HLO text**:
+//! jax ≥ 0.5 serializes protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+
+mod engine;
+mod scorer;
+mod learned;
+
+pub use engine::{literal_f32, Engine, Executable};
+pub use learned::{LearnedMeta, LearnedModel};
+pub use scorer::{CosineScorer, SimHashSketcher};
+
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/meta.json`: shapes and file names of every artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+    /// Raw parsed JSON.
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    /// Load `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let raw = json::parse(&text).context("parsing meta.json")?;
+        Ok(ArtifactMeta {
+            dir: dir.to_path_buf(),
+            raw,
+        })
+    }
+
+    /// Default artifact directory: `$STARS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("STARS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Path of the artifact file for a named entry.
+    pub fn file(&self, entry: &str) -> Result<PathBuf> {
+        let file = self
+            .raw
+            .get(entry)
+            .and_then(|e| e.get("file"))
+            .and_then(|f| f.as_str())
+            .with_context(|| format!("meta.json missing {entry}.file"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Integer field of an entry.
+    pub fn usize_field(&self, entry: &str, field: &str) -> Result<usize> {
+        self.raw
+            .get(entry)
+            .and_then(|e| e.get(field))
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("meta.json missing {entry}.{field}"))
+    }
+}

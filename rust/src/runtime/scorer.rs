@@ -1,0 +1,182 @@
+//! Batched scorers backed by AOT artifacts.
+//!
+//! [`CosineScorer`] wraps the Pallas pairwise-cosine kernel
+//! (python/compile/kernels/pairwise.py): it scores `L` leaders against a
+//! block of `B` candidates in one PJRT dispatch, padding ragged inputs. The
+//! fixed (L, B, dim) shape comes from `artifacts/meta.json`.
+//!
+//! [`SimHashSketcher`] wraps the Pallas SimHash kernel: a block of points ×
+//! the (constant-folded) hyperplane matrix → sign bits.
+
+use super::engine::{literal_f32, Engine, Executable};
+use super::ArtifactMeta;
+use anyhow::Result;
+use std::sync::Mutex;
+
+/// PJRT-backed leaders×block cosine scorer with fixed artifact shapes.
+pub struct CosineScorer {
+    exe: Mutex<Executable>,
+    /// Max leaders per dispatch.
+    pub leaders: usize,
+    /// Max candidates per dispatch.
+    pub block: usize,
+    /// Padded feature dimension the artifact was compiled for.
+    pub dim: usize,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl CosineScorer {
+    /// Load from artifacts.
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<CosineScorer> {
+        let exe = engine.load_hlo_text(&meta.file("cosine_scorer")?)?;
+        Ok(CosineScorer {
+            exe: Mutex::new(exe),
+            leaders: meta.usize_field("cosine_scorer", "leaders")?,
+            block: meta.usize_field("cosine_scorer", "block")?,
+            dim: meta.usize_field("cosine_scorer", "dim")?,
+            calls: Default::default(),
+        })
+    }
+
+    /// Number of PJRT dispatches so far (for perf accounting).
+    pub fn dispatches(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Score `nl` leader rows against `nb` candidate rows.
+    ///
+    /// `leaders`/`cands` are row-major with the *source* dimension `src_dim ≤
+    /// self.dim`; rows are zero-padded up to the artifact dim. Output is
+    /// row-major (nl × nb). Inputs larger than the artifact shape are split
+    /// over multiple dispatches.
+    pub fn score(
+        &self,
+        leaders: &[f32],
+        nl: usize,
+        cands: &[f32],
+        nb: usize,
+        src_dim: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(src_dim <= self.dim, "src dim {} > artifact dim {}", src_dim, self.dim);
+        anyhow::ensure!(leaders.len() == nl * src_dim && cands.len() == nb * src_dim);
+        let mut out = vec![0f32; nl * nb];
+        for l0 in (0..nl).step_by(self.leaders) {
+            let lcount = (nl - l0).min(self.leaders);
+            let lpad = pad_block(
+                &leaders[l0 * src_dim..(l0 + lcount) * src_dim],
+                lcount,
+                src_dim,
+                self.leaders,
+                self.dim,
+            );
+            for b0 in (0..nb).step_by(self.block) {
+                let bcount = (nb - b0).min(self.block);
+                let bpad = pad_block(
+                    &cands[b0 * src_dim..(b0 + bcount) * src_dim],
+                    bcount,
+                    src_dim,
+                    self.block,
+                    self.dim,
+                );
+                let ll = literal_f32(&lpad, &[self.leaders as i64, self.dim as i64])?;
+                let bl = literal_f32(&bpad, &[self.block as i64, self.dim as i64])?;
+                self.calls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let scores = self.exe.lock().unwrap().run_f32(&[ll, bl])?;
+                // scores is (leaders x block) padded; copy the live region.
+                for li in 0..lcount {
+                    let src = &scores[li * self.block..li * self.block + bcount];
+                    let dst =
+                        &mut out[(l0 + li) * nb + b0..(l0 + li) * nb + b0 + bcount];
+                    dst.copy_from_slice(src);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT-backed SimHash sketcher: block of points → sign bits (0/1 f32).
+pub struct SimHashSketcher {
+    exe: Mutex<Executable>,
+    /// Points per dispatch.
+    pub block: usize,
+    /// Padded input dimension.
+    pub dim: usize,
+    /// Bits per sketch.
+    pub bits: usize,
+}
+
+impl SimHashSketcher {
+    /// Load from artifacts.
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<SimHashSketcher> {
+        let exe = engine.load_hlo_text(&meta.file("simhash_sketch")?)?;
+        Ok(SimHashSketcher {
+            exe: Mutex::new(exe),
+            block: meta.usize_field("simhash_sketch", "block")?,
+            dim: meta.usize_field("simhash_sketch", "dim")?,
+            bits: meta.usize_field("simhash_sketch", "bits")?,
+        })
+    }
+
+    /// Sketch `n` rows of `src_dim` features into packed u64 keys
+    /// (bit t of the key = sign of hyperplane t).
+    pub fn sketch(&self, rows: &[f32], n: usize, src_dim: usize) -> Result<Vec<u64>> {
+        anyhow::ensure!(src_dim <= self.dim && self.bits <= 64);
+        anyhow::ensure!(rows.len() == n * src_dim);
+        let mut keys = vec![0u64; n];
+        for r0 in (0..n).step_by(self.block) {
+            let count = (n - r0).min(self.block);
+            let pad = pad_block(
+                &rows[r0 * src_dim..(r0 + count) * src_dim],
+                count,
+                src_dim,
+                self.block,
+                self.dim,
+            );
+            let lit = literal_f32(&pad, &[self.block as i64, self.dim as i64])?;
+            let bits = self.exe.lock().unwrap().run_f32(&[lit])?;
+            for i in 0..count {
+                let mut key = 0u64;
+                for t in 0..self.bits {
+                    if bits[i * self.bits + t] > 0.5 {
+                        key |= 1 << t;
+                    }
+                }
+                keys[r0 + i] = key;
+            }
+        }
+        Ok(keys)
+    }
+}
+
+/// Zero-pad a (rows × src_dim) block to (pad_rows × pad_dim).
+fn pad_block(
+    data: &[f32],
+    rows: usize,
+    src_dim: usize,
+    pad_rows: usize,
+    pad_dim: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; pad_rows * pad_dim];
+    for r in 0..rows {
+        out[r * pad_dim..r * pad_dim + src_dim]
+            .copy_from_slice(&data[r * src_dim..(r + 1) * src_dim]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_block_layout() {
+        let data = [1.0, 2.0, 3.0, 4.0]; // 2 rows x 2 dim
+        let p = pad_block(&data, 2, 2, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&p[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&p[8..12], &[0.0; 4]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Similarity measures.
+//!
+//! The paper evaluates cosine similarity (MNIST, Random1B/10B), weighted
+//! Jaccard (Wikipedia), a cosine+Jaccard mixture and a learned neural
+//! similarity (Amazon2m). All are exposed behind the [`Similarity`] trait;
+//! [`CountingSim`] wraps any measure with an atomic comparison counter —
+//! the paper's headline metric (Figure 1).
+
+mod measure;
+mod learned;
+
+pub use learned::LearnedSim;
+pub use measure::{
+    cosine, dot, jaccard, weighted_jaccard, CosineSim, CountingSim, DotSim, JaccardSim,
+    MixtureSim, Similarity, WeightedJaccardSim,
+};

@@ -1,0 +1,185 @@
+//! Brute-force all-pairs baseline (the paper's "AllPair").
+//!
+//! Used both as a comparison baseline (Figure 1: ≥1000× more comparisons
+//! than Stars) and as the ground-truth generator for recall evaluation
+//! (exact threshold neighbors and exact k-NN).
+
+use crate::ampc::Cluster;
+use crate::data::types::Dataset;
+use crate::graph::Edge;
+use crate::sim::Similarity;
+use crate::util::topk::TopK;
+
+/// Score every pair; emit edges with similarity ≥ `threshold`.
+/// Parallelized over row chunks on the cluster.
+pub fn allpair_edges(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    threshold: f32,
+    cluster: &Cluster,
+) -> Vec<Edge> {
+    let n = ds.len();
+    // Tasks = row blocks; use more tasks than workers for balance (upper
+    // triangle makes early rows costlier).
+    let tasks = (cluster.workers() * 8).min(n.max(1));
+    let block = n.div_ceil(tasks.max(1));
+    let parts = cluster.map_timed(tasks, |t, ledger| {
+        let lo = t * block;
+        let hi = ((t + 1) * block).min(n);
+        let mut edges = Vec::new();
+        let mut scores = Vec::new();
+        for i in lo..hi {
+            let rest: Vec<u32> = ((i + 1) as u32..n as u32).collect();
+            if rest.is_empty() {
+                continue;
+            }
+            ledger.add_comparisons(rest.len() as u64);
+            sim.sim_batch(ds, i, &rest, &mut scores);
+            for (k, &j) in rest.iter().enumerate() {
+                if scores[k] >= threshold {
+                    edges.push(Edge::new(i as u32, j, scores[k]));
+                }
+            }
+        }
+        ledger.add_edges(edges.len() as u64);
+        edges
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Exact k-nearest neighbors of every point (ground truth for Figure 2).
+/// Returns, per point, its k best `(similarity, neighbor)` sorted descending.
+pub fn exact_knn(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    k: usize,
+    cluster: &Cluster,
+) -> Vec<Vec<(f32, u32)>> {
+    let n = ds.len();
+    let tasks = (cluster.workers() * 4).min(n.max(1));
+    let block = n.div_ceil(tasks.max(1));
+    let parts: Vec<Vec<Vec<(f32, u32)>>> = cluster.map_timed(tasks, |t, ledger| {
+        let lo = t * block;
+        let hi = ((t + 1) * block).min(n);
+        let mut out = Vec::with_capacity(hi.saturating_sub(lo));
+        let mut scores = Vec::new();
+        let all: Vec<u32> = (0..n as u32).collect();
+        for i in lo..hi {
+            let mut topk = TopK::new(k);
+            // Score i against everyone (skip self below).
+            ledger.add_comparisons((n - 1) as u64);
+            sim.sim_batch(ds, i, &all, &mut scores);
+            for (j, &s) in scores.iter().enumerate() {
+                if j != i {
+                    topk.push(s, j as u32);
+                }
+            }
+            out.push(topk.into_sorted());
+        }
+        out
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Exact neighbors above a similarity threshold, per point (ground truth for
+/// the "near neighbor" recall panels).
+pub fn exact_threshold_neighbors(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    threshold: f32,
+    cluster: &Cluster,
+) -> Vec<Vec<u32>> {
+    let edges = allpair_edges(ds, sim, threshold, cluster);
+    let mut out = vec![Vec::new(); ds.len()];
+    for e in edges {
+        out[e.u as usize].push(e.v);
+        out[e.v as usize].push(e.u);
+    }
+    out
+}
+
+/// Convenience wrapper exposing the cost report alongside the edges.
+pub fn allpair_with_report(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    threshold: f32,
+    workers: usize,
+) -> (Vec<Edge>, crate::ampc::CostReport) {
+    let cluster = Cluster::new(workers);
+    let (edges, report) = cluster.run_job(|c| allpair_edges(ds, sim, threshold, c));
+    (edges, report)
+}
+
+/// Total comparisons a brute-force pass makes on `n` points.
+pub fn allpair_comparisons(n: usize) -> u64 {
+    (n as u64) * (n as u64 - 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::sim::CosineSim;
+
+    #[test]
+    fn counts_exactly_n_choose_2() {
+        let ds = synth::gaussian_mixture(101, 8, 4, 0.1, 1);
+        let (_, report) = allpair_with_report(&ds, &CosineSim, 0.5, 3);
+        assert_eq!(report.comparisons, allpair_comparisons(101));
+    }
+
+    #[test]
+    fn finds_all_threshold_pairs() {
+        let ds = synth::gaussian_mixture(120, 8, 3, 0.05, 2);
+        let cluster = Cluster::new(2);
+        let edges = allpair_edges(&ds, &CosineSim, 0.7, &cluster);
+        // Verify against a naive loop.
+        let mut want = 0;
+        for i in 0..120 {
+            for j in (i + 1)..120 {
+                if CosineSim.sim(&ds, i, j) >= 0.7 {
+                    want += 1;
+                }
+            }
+        }
+        assert_eq!(edges.len(), want);
+    }
+
+    #[test]
+    fn exact_knn_is_correct() {
+        let ds = synth::gaussian_mixture(80, 8, 4, 0.1, 3);
+        let cluster = Cluster::new(2);
+        let knn = exact_knn(&ds, &CosineSim, 5, &cluster);
+        assert_eq!(knn.len(), 80);
+        for (i, nbrs) in knn.iter().enumerate() {
+            assert_eq!(nbrs.len(), 5);
+            // Sorted descending and excludes self.
+            for w in nbrs.windows(2) {
+                assert!(w[0].0 >= w[1].0);
+            }
+            assert!(nbrs.iter().all(|&(_, j)| j as usize != i));
+            // The top neighbor is the true argmax.
+            let best = (0..80)
+                .filter(|&j| j != i)
+                .map(|j| (CosineSim.sim(&ds, i, j), j as u32))
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                .unwrap();
+            assert!((nbrs[0].0 - best.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn threshold_neighbors_symmetric() {
+        let ds = synth::gaussian_mixture(60, 8, 3, 0.1, 4);
+        let cluster = Cluster::new(2);
+        let nbrs = exact_threshold_neighbors(&ds, &CosineSim, 0.6, &cluster);
+        for (i, ns) in nbrs.iter().enumerate() {
+            for &j in ns {
+                assert!(
+                    nbrs[j as usize].contains(&(i as u32)),
+                    "asymmetric neighbor lists"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Bucket grouping and oversize partitioning (paper §4).
+//!
+//! "To ensure robustness to sub-optimal LSH settings, we randomly partition
+//! large buckets into size-constrained sub-buckets prior to pairwise
+//! scoring." The Stars algorithm's nearly-linear per-bucket cost is what
+//! lets the paper relax this cap from 1000 (non-Stars) to 10000 (Stars).
+
+use crate::util::fxhash::FxHashMap;
+use crate::util::rng::Rng;
+
+/// Group point ids by bucket key. Singleton buckets are dropped (no pairs).
+pub fn group_buckets(keys: &[u64]) -> Vec<Vec<u32>> {
+    let mut map: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+    for (i, &k) in keys.iter().enumerate() {
+        map.entry(k).or_default().push(i as u32);
+    }
+    map.into_values().filter(|b| b.len() >= 2).collect()
+}
+
+/// Randomly partition any bucket larger than `max_size` into sub-buckets of
+/// at most `max_size` members. Buckets within the cap pass through intact.
+pub fn split_oversized(buckets: Vec<Vec<u32>>, max_size: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let max_size = max_size.max(2);
+    let mut out = Vec::with_capacity(buckets.len());
+    for mut b in buckets {
+        if b.len() <= max_size {
+            out.push(b);
+            continue;
+        }
+        rng.shuffle(&mut b);
+        for chunk in b.chunks(max_size) {
+            if chunk.len() >= 2 {
+                out.push(chunk.to_vec());
+            }
+        }
+    }
+    out
+}
+
+/// Sample `s` distinct leader *positions* within a bucket of length `len`.
+pub fn sample_leaders(len: usize, s: usize, rng: &mut Rng) -> Vec<usize> {
+    rng.sample_indices(len, s.min(len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Gen};
+
+    #[test]
+    fn groups_by_key_and_drops_singletons() {
+        let keys = vec![7, 3, 7, 3, 9, 7];
+        let mut buckets = group_buckets(&keys);
+        buckets.sort_by_key(|b| b.len());
+        assert_eq!(buckets.len(), 2);
+        let mut big = buckets[1].clone();
+        big.sort();
+        assert_eq!(big, vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn split_caps_bucket_sizes() {
+        check("split-caps", 40, |g: &mut Gen| {
+            let n = g.usize_in(2, 2000);
+            let cap = g.usize_in(2, 300);
+            let bucket: Vec<u32> = (0..n as u32).collect();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 20) as u64);
+            let subs = split_oversized(vec![bucket], cap, &mut rng);
+            let mut all: Vec<u32> = subs.iter().flatten().copied().collect();
+            for s in &subs {
+                assert!(s.len() <= cap, "sub-bucket of {} > cap {cap}", s.len());
+            }
+            all.sort();
+            // All points preserved except possibly one dropped singleton tail.
+            assert!(all.len() >= n - 1, "lost points: {} of {n}", all.len());
+            all.dedup();
+            assert!(all.len() >= n - 1, "duplicated points");
+        });
+    }
+
+    #[test]
+    fn split_leaves_small_buckets_alone() {
+        let mut rng = Rng::new(1);
+        let b = vec![vec![1, 2, 3]];
+        let out = split_oversized(b.clone(), 10, &mut rng);
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn leaders_distinct_and_capped() {
+        let mut rng = Rng::new(2);
+        let ls = sample_leaders(10, 25, &mut rng);
+        assert_eq!(ls.len(), 10);
+        let ls = sample_leaders(100, 5, &mut rng);
+        assert_eq!(ls.len(), 5);
+        let set: std::collections::HashSet<_> = ls.iter().collect();
+        assert_eq!(set.len(), 5);
+        assert!(ls.iter().all(|&p| p < 100));
+    }
+}

@@ -1,0 +1,326 @@
+//! [`StarsBuilder`] — the crate's main entry point.
+//!
+//! Orchestrates a full graph build: repetitions fan out over the AMPC
+//! cluster in waves; each wave's edges fold into a degree-capped
+//! accumulator so memory stays bounded at ~n·cap retained edges regardless
+//! of R (the paper's degree threshold of 250 applied online).
+
+use crate::ampc::{Cluster, CostReport, Dht};
+use crate::data::types::Dataset;
+use crate::graph::{Edge, Graph};
+use crate::lsh::LshFamily;
+use crate::sim::Similarity;
+use crate::stars::params::{Algorithm, BuildParams, JoinStrategy};
+use crate::stars::{allpair, knn, threshold};
+use crate::util::fxhash::FxHashMap;
+
+/// Result of a graph build.
+#[derive(Debug)]
+pub struct BuildOutput {
+    /// The deduplicated, degree-capped similarity graph.
+    pub graph: Graph,
+    /// Cost report (comparisons, total/real time, I/O).
+    pub report: CostReport,
+    /// Echo of the parameters used.
+    pub params: BuildParams,
+}
+
+/// Builder for a Stars graph construction job.
+pub struct StarsBuilder<'a> {
+    ds: &'a Dataset,
+    sim: Option<&'a dyn Similarity>,
+    family: Option<&'a dyn LshFamily>,
+    params: Option<BuildParams>,
+    workers: usize,
+}
+
+impl<'a> StarsBuilder<'a> {
+    /// Start a build over a dataset.
+    pub fn new(ds: &'a Dataset) -> StarsBuilder<'a> {
+        StarsBuilder {
+            ds,
+            sim: None,
+            family: None,
+            params: None,
+            workers: crate::util::pool::default_workers(),
+        }
+    }
+
+    /// Similarity measure (required).
+    pub fn similarity(mut self, sim: &'a dyn Similarity) -> Self {
+        self.sim = Some(sim);
+        self
+    }
+
+    /// LSH family (required unless algorithm is AllPair).
+    pub fn hash(mut self, family: &'a dyn LshFamily) -> Self {
+        self.family = Some(family);
+        self
+    }
+
+    /// Build parameters (required).
+    pub fn params(mut self, params: BuildParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Worker count for the simulated cluster (default: host cores).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Run the build.
+    pub fn build(self) -> BuildOutput {
+        let params = self.params.expect("params not set");
+        let sim = self.sim.expect("similarity not set");
+        let cluster = Cluster::new(self.workers);
+        let n = self.ds.len();
+
+        let (graph, report) = cluster.run_job(|c| {
+            if params.algorithm == Algorithm::AllPair {
+                let edges = allpair::allpair_edges(self.ds, sim, params.threshold, c);
+                return finalize(n, edges, params.degree_cap);
+            }
+            let family = self.family.expect("hash family not set");
+            let dht_store;
+            let dht = match params.join {
+                JoinStrategy::Dht => {
+                    dht_store = Dht::new(self.ds, c.workers());
+                    Some(&dht_store)
+                }
+                _ => None,
+            };
+            let mut acc = Accumulator::new(n, params.degree_cap);
+            let wave = c.workers().max(1);
+            let reps = params.sketches;
+            let mut done = 0usize;
+            while done < reps {
+                let count = wave.min(reps - done);
+                let results = c.map_timed(count, |t, ledger| {
+                    let rep = (done + t) as u64;
+                    match params.algorithm {
+                        Algorithm::Lsh | Algorithm::LshStars => {
+                            threshold::lsh_rep(self.ds, sim, family, &params, rep, ledger, dht)
+                        }
+                        Algorithm::SortingLsh | Algorithm::SortingLshStars => {
+                            knn::sorting_rep(self.ds, sim, family, &params, rep, ledger)
+                        }
+                        Algorithm::AllPair => unreachable!(),
+                    }
+                });
+                for edges in results {
+                    acc.add(edges);
+                }
+                done += count;
+            }
+            acc.finalize()
+        });
+
+        BuildOutput {
+            graph,
+            report,
+            params,
+        }
+    }
+}
+
+fn finalize(n: usize, edges: Vec<Edge>, degree_cap: usize) -> Graph {
+    let mut acc = Accumulator::new(n, degree_cap);
+    acc.add(edges);
+    acc.finalize()
+}
+
+/// Online degree-capped edge accumulator.
+///
+/// With `cap == 0` it keeps every (deduplicated) edge. With a cap it keeps,
+/// per node, a map of its best neighbors, evicting the weakest once the map
+/// exceeds 2·cap — so memory is O(n·cap) while retained edges match "keep
+/// the cap most-similar neighbors per node" (an edge survives if either
+/// endpoint retains it, matching [`crate::graph::Csr::with_degree_cap`]).
+pub struct Accumulator {
+    n: usize,
+    cap: usize,
+    raw: Vec<Edge>,
+    per_node: Vec<FxHashMap<u32, f32>>,
+}
+
+impl Accumulator {
+    /// New accumulator over `n` nodes.
+    pub fn new(n: usize, cap: usize) -> Accumulator {
+        Accumulator {
+            n,
+            cap,
+            raw: Vec::new(),
+            per_node: if cap == 0 {
+                Vec::new()
+            } else {
+                vec![FxHashMap::default(); n]
+            },
+        }
+    }
+
+    /// Fold a batch of edges in.
+    pub fn add(&mut self, edges: Vec<Edge>) {
+        if self.cap == 0 {
+            self.raw.extend(edges);
+            return;
+        }
+        for e in edges {
+            self.insert(e.u, e.v, e.w);
+            self.insert(e.v, e.u, e.w);
+        }
+    }
+
+    fn insert(&mut self, node: u32, nbr: u32, w: f32) {
+        let map = &mut self.per_node[node as usize];
+        let entry = map.entry(nbr).or_insert(f32::MIN);
+        if w > *entry {
+            *entry = w;
+        }
+        if map.len() > 2 * self.cap {
+            // Evict down to cap: keep the cap strongest neighbors.
+            let mut items: Vec<(u32, f32)> = map.drain().collect();
+            items.sort_unstable_by(|a, b| b.1.total_cmp(&a.1));
+            items.truncate(self.cap);
+            map.extend(items);
+        }
+    }
+
+    /// Produce the final graph.
+    pub fn finalize(mut self) -> Graph {
+        if self.cap == 0 {
+            return Graph::from_edges(self.n, std::mem::take(&mut self.raw));
+        }
+        let mut edges = Vec::new();
+        for (node, map) in self.per_node.iter_mut().enumerate() {
+            let mut items: Vec<(u32, f32)> = map.drain().collect();
+            if items.len() > self.cap {
+                items.sort_unstable_by(|a, b| b.1.total_cmp(&a.1));
+                items.truncate(self.cap);
+            }
+            for (nbr, w) in items {
+                edges.push(Edge::new(node as u32, nbr, w));
+            }
+        }
+        Graph::from_edges(self.n, edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lsh::SimHash;
+    use crate::sim::{CosineSim, CountingSim};
+
+    #[test]
+    fn accumulator_uncapped_keeps_everything() {
+        let mut acc = Accumulator::new(5, 0);
+        acc.add(vec![Edge::new(0, 1, 0.5), Edge::new(1, 2, 0.6)]);
+        acc.add(vec![Edge::new(0, 1, 0.9)]);
+        let g = acc.finalize();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edges()[0].w, 0.9); // dedup keeps max
+    }
+
+    #[test]
+    fn accumulator_caps_degree() {
+        let mut acc = Accumulator::new(10, 2);
+        // Node 0 sees 6 neighbors with increasing weights.
+        acc.add((1..=6).map(|v| Edge::new(0, v, v as f32 / 10.0)).collect());
+        let g = acc.finalize();
+        let kept: Vec<&Edge> = g.edges().iter().collect();
+        // Node 0 keeps its best 2 (5, 6) — but each neighbor also keeps the
+        // edge from its own side, and their degree is 1 ≤ cap, so all
+        // survive under the either-endpoint rule.
+        assert_eq!(kept.len(), 6);
+        // Now flood every node: pairwise clique weights distinct.
+        let mut acc = Accumulator::new(10, 1);
+        let mut edges = Vec::new();
+        for i in 0..10u32 {
+            for j in (i + 1)..10 {
+                edges.push(Edge::new(i, j, (i * 10 + j) as f32 / 100.0));
+            }
+        }
+        acc.add(edges);
+        let g = acc.finalize();
+        // Each node keeps 1 → at most 10 edges survive.
+        assert!(g.num_edges() <= 10, "{} edges", g.num_edges());
+    }
+
+    #[test]
+    fn eviction_keeps_the_strongest() {
+        // Push 99 neighbors of node 0 in increasing weight; survivors must
+        // be the heaviest ones despite repeated eviction passes.
+        let mut acc = Accumulator::new(200, 2);
+        for v in 1..100u32 {
+            acc.add(vec![Edge::new(0, v + 1, v as f32 / 100.0)]);
+        }
+        let g = acc.finalize();
+        let best: Vec<f32> = g
+            .edges()
+            .iter()
+            .filter(|e| e.u == 0)
+            .map(|e| e.w)
+            .collect();
+        assert!(best.iter().any(|&w| (w - 0.99).abs() < 1e-6));
+    }
+
+    #[test]
+    fn end_to_end_build_lsh_stars() {
+        let ds = synth::gaussian_mixture(400, 16, 8, 0.08, 21);
+        let sim = CountingSim::new(CosineSim);
+        let family = SimHash::new(16, 8, 5);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&sim)
+            .hash(&family)
+            .params(
+                crate::stars::BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(10)
+                    .threshold(0.5),
+            )
+            .workers(2)
+            .build();
+        assert!(out.graph.num_edges() > 0);
+        assert_eq!(out.report.comparisons, sim.comparisons());
+        assert!(out.report.total_time > 0.0);
+        assert!(out.report.real_time > 0.0);
+        for e in out.graph.edges() {
+            assert!(e.w >= 0.5);
+        }
+    }
+
+    #[test]
+    fn end_to_end_build_sorting_stars() {
+        let ds = synth::gaussian_mixture(400, 16, 8, 0.08, 22);
+        let family = SimHash::new(16, 30, 6);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                crate::stars::BuildParams::knn_mode(Algorithm::SortingLshStars)
+                    .sketches(8)
+                    .window(50)
+                    .degree_cap(10),
+            )
+            .workers(2)
+            .build();
+        assert!(out.graph.num_edges() > 0);
+        let csr = crate::graph::Csr::new(&out.graph);
+        // Degree cap semantics: max degree can exceed cap (either-endpoint
+        // rule) but must be far below the uncapped worst case.
+        assert!(csr.max_degree() < 100, "degree {}", csr.max_degree());
+    }
+
+    #[test]
+    fn allpair_build_via_builder() {
+        let ds = synth::gaussian_mixture(100, 8, 4, 0.1, 23);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .params(crate::stars::BuildParams::threshold_mode(Algorithm::AllPair))
+            .workers(2)
+            .build();
+        assert_eq!(out.report.comparisons, 100 * 99 / 2);
+    }
+}

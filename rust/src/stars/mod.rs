@@ -1,0 +1,22 @@
+//! The Stars graph-building algorithms (paper §3) and their baselines.
+//!
+//! * [`Algorithm::LshStars`] — Stars 1: LSH bucketing + star graphs per
+//!   bucket (approximate threshold graphs / threshold two-hop spanners).
+//! * [`Algorithm::Lsh`] — non-Stars baseline: all pairs within each bucket.
+//! * [`Algorithm::SortingLshStars`] — Stars 2: SortingLSH windows + star
+//!   graphs per window (approximate k-NN two-hop spanners).
+//! * [`Algorithm::SortingLsh`] — non-Stars baseline: all pairs per window.
+//! * [`Algorithm::AllPair`] — brute force (ground truth / small data only).
+//!
+//! Entry point: [`StarsBuilder`].
+
+mod params;
+mod bucketing;
+pub mod threshold;
+pub mod knn;
+pub mod allpair;
+mod builder;
+
+pub use builder::{Accumulator, BuildOutput, StarsBuilder};
+pub use bucketing::{group_buckets, sample_leaders, split_oversized};
+pub use params::{Algorithm, BuildParams, JoinStrategy};

