@@ -2,17 +2,145 @@
 //! for the performance pass (EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench microbench`
+//!
+//! Besides the human-readable table, the run emits machine-readable
+//! `BENCH_scoring.json` at the repo root (override with `STARS_BENCH_OUT`)
+//! so the scoring-kernel perf trajectory is tracked across PRs: batched vs
+//! scalar cosine throughput at d ∈ {16, 100, 784} and the end-to-end
+//! `StarsBuilder::build` wall time against the recorded pre-tiling baseline.
 
 use stars::ampc::CostLedger;
 use stars::bench::{fmt_count, fmt_secs, time_runs, Table};
 use stars::data::synth;
 use stars::lsh::{sorted_order, LshFamily, SimHash, WeightedMinHash};
 use stars::sim::{CosineSim, Similarity};
-use stars::stars::group_buckets;
+use stars::stars::{group_buckets, Algorithm, BuildParams, StarsBuilder};
+use stars::util::json::Json;
 use stars::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Pre-change reference for the e2e build below, measured on the seed
+/// revision (serial coordinator accumulator + per-pair scalar scoring) on
+/// the same reference box as the committed BENCH_scoring.json. Override via
+/// `STARS_BASELINE_E2E_S` when re-baselining on new hardware.
+const BASELINE_E2E_S: f64 = 11.8;
+
+/// Where to write the machine-readable report: `STARS_BENCH_OUT`, else the
+/// repo root (benches run with CWD = rust/, so the root is one level up).
+fn bench_out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("STARS_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        PathBuf::from("../BENCH_scoring.json")
+    } else {
+        PathBuf::from("BENCH_scoring.json")
+    }
+}
+
+/// Batched (tiled sim_batch) vs scalar (per-pair sim(), the pre-tiling
+/// default) cosine scoring across the dimensions the acceptance tracks.
+fn bench_cosine_scoring(table: &mut Table) -> Json {
+    let mut rows = Vec::new();
+    for &d in &[16usize, 100, 784] {
+        let ds = synth::gaussian_mixture(20_000, d, 50, 0.1, 42);
+        let cands: Vec<u32> = (1..8_193).collect();
+        let pairs = cands.len();
+        let mut out: Vec<f32> = Vec::with_capacity(pairs);
+        // Scalar reference: exactly what the default trait sim_batch did
+        // before the tiled kernels (one sim() per candidate).
+        let scalar = time_runs(3, 15, || {
+            out.clear();
+            out.extend(cands.iter().map(|&c| CosineSim.sim(&ds, 0, c as usize)));
+            std::hint::black_box(&out);
+        });
+        let batched = time_runs(3, 15, || {
+            CosineSim.sim_batch(&ds, 0, &cands, &mut out);
+            std::hint::black_box(&out);
+        });
+        let (s_med, b_med) = (scalar.median(), batched.median());
+        let speedup = s_med / b_med;
+        for (name, med) in [("scalar", s_med), ("batched", b_med)] {
+            table.row(vec![
+                format!("cosine {name} (d={d})"),
+                fmt_count(pairs as u64),
+                fmt_secs(med),
+                format!("{}/s", fmt_count((pairs as f64 / med) as u64)),
+            ]);
+        }
+        rows.push(Json::obj(vec![
+            ("d", Json::from(d)),
+            ("pairs", Json::from(pairs)),
+            ("scalar_median_s", Json::from(s_med)),
+            ("batched_median_s", Json::from(b_med)),
+            ("scalar_pairs_per_s", Json::from(pairs as f64 / s_med)),
+            ("batched_pairs_per_s", Json::from(pairs as f64 / b_med)),
+            ("speedup", Json::from(speedup)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+/// End-to-end `StarsBuilder::build` wall time on the acceptance workload
+/// (gaussian_mixture(50_000, 100, …), LSH+Stars), vs the recorded
+/// pre-tiling/pre-sharding baseline.
+fn bench_e2e_build(table: &mut Table) -> Json {
+    let ds = synth::gaussian_mixture(50_000, 100, 100, 0.1, 42);
+    let family = SimHash::new(100, 12, 7);
+    let mut edges = 0usize;
+    let stats = time_runs(1, 3, || {
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(8)
+                    .leaders(10)
+                    .threshold(0.5),
+            )
+            .build();
+        edges = std::hint::black_box(out.graph.num_edges());
+    });
+    let baseline = std::env::var("STARS_BASELINE_E2E_S")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(BASELINE_E2E_S);
+    table.row(vec![
+        "e2e build lsh+stars (n=50k,d=100,R=8)".into(),
+        fmt_count(ds.len() as u64),
+        fmt_secs(stats.median()),
+        format!("baseline {}", fmt_secs(baseline)),
+    ]);
+    Json::obj(vec![
+        ("dataset", Json::from("gaussian_mixture(50000, 100, 100, 0.1, 42)")),
+        ("algorithm", Json::from("lsh+stars")),
+        ("sketches", Json::from(8usize)),
+        ("leaders", Json::from(10usize)),
+        ("wall_median_s", Json::from(stats.median())),
+        ("wall_min_s", Json::from(stats.min())),
+        ("edges", Json::from(edges)),
+        (
+            "baseline",
+            Json::obj(vec![
+                ("wall_median_s", Json::from(baseline)),
+                (
+                    "note",
+                    Json::from(
+                        "pre-change seed: serial coordinator accumulator + per-pair scalar scoring",
+                    ),
+                ),
+            ]),
+        ),
+    ])
+}
 
 fn main() {
     let mut table = Table::new(&["primitive", "n", "median", "throughput"]);
+
+    // Tiled batch scoring vs the scalar path (the perf-pass headline).
+    let scoring = bench_cosine_scoring(&mut table);
+    let e2e = bench_e2e_build(&mut table);
+
     let ds = synth::gaussian_mixture(100_000, 100, 100, 0.1, 42);
 
     // Cosine scoring: leader vs 10k candidates, batched.
@@ -184,4 +312,21 @@ fn main() {
     }
 
     table.print();
+
+    // Machine-readable report for cross-PR perf tracking.
+    let doc = Json::obj(vec![
+        ("schema", Json::from("stars-bench-scoring/v1")),
+        ("bench", Json::from("microbench")),
+        (
+            "workers",
+            Json::from(stars::util::pool::default_workers()),
+        ),
+        ("cosine_scoring", scoring),
+        ("e2e_build", e2e),
+    ]);
+    let path = bench_out_path();
+    match std::fs::write(&path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
 }

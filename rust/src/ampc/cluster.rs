@@ -46,7 +46,7 @@ impl Cluster {
     /// executing worker. Results are returned in task order.
     pub fn map_timed<R, F>(&self, tasks: usize, f: F) -> Vec<R>
     where
-        R: Send + Default + Clone,
+        R: Send,
         F: Fn(usize, &CostLedger) -> R + Sync,
     {
         let ledger = Arc::clone(&self.ledger);

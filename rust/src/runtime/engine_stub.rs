@@ -1,0 +1,74 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature is disabled.
+//!
+//! Mirrors the API surface of `engine.rs` exactly (Engine, Executable,
+//! literal_f32) so `runtime::scorer` / `runtime::learned` and the CLI's
+//! `smoke` subcommand compile without the `xla` crate closure. Every loader
+//! fails with a descriptive error, so artifact-dependent paths degrade the
+//! same way a missing `artifacts/` directory does: callers skip with a
+//! message instead of failing the build.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Opaque stand-in for `xla::Literal`. Carries the validated element count so
+/// [`literal_f32`] keeps the same shape-checking behavior as the real engine.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    _elems: usize,
+}
+
+/// Stub PJRT CPU client.
+pub struct Engine {
+    _priv: (),
+}
+
+impl Engine {
+    /// Always fails: the real client needs the `pjrt` feature + `xla` crate.
+    pub fn cpu() -> Result<Engine> {
+        bail!("PJRT runtime unavailable: built without the `pjrt` feature (see rust/Cargo.toml)")
+    }
+
+    /// Platform name (for logs).
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Always fails (no compiler without PJRT).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        bail!(
+            "cannot compile {}: built without the `pjrt` feature",
+            path.display()
+        )
+    }
+}
+
+/// Stub compiled computation. Never constructed — [`Engine::cpu`] and
+/// [`Engine::load_hlo_text`] both fail first — but the methods must
+/// typecheck for the scorer/model wrappers.
+pub struct Executable {
+    _priv: (),
+}
+
+impl Executable {
+    /// Unreachable at runtime (no `Executable` can exist without PJRT).
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+
+    /// Unreachable at runtime (no `Executable` can exist without PJRT).
+    pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+}
+
+/// Shape-checked literal constructor, same contract as the real engine.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "literal shape {:?} != data len {}",
+        dims,
+        data.len()
+    );
+    Ok(Literal { _elems: data.len() })
+}

@@ -5,6 +5,22 @@
 //! jax ≥ 0.5 serializes protos with 64-bit instruction ids that the crate's
 //! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
 
+// The real engine needs the `xla` crate, which is deliberately not declared
+// in Cargo.toml (see the notes there). This guard turns the otherwise-opaque
+// "unresolved import `xla`" into an actionable message: add the vendored
+// `xla` dependency, then delete this compile_error.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the vendored `xla` crate: add `xla` to \
+     [dependencies] in rust/Cargo.toml and remove this guard (runtime/mod.rs)"
+);
+#[cfg(feature = "pjrt")]
+mod engine;
+// Without the `pjrt` feature (and the vendored `xla` crate it requires) the
+// engine is a stub with the same API whose loaders return a descriptive
+// error — see Cargo.toml. Scorer/model wrappers compile unchanged on top.
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod scorer;
 mod learned;

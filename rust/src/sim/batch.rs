@@ -1,0 +1,381 @@
+//! Tiled batch-scoring kernels — the dense and set hot paths.
+//!
+//! The paper's central claim is that similarity comparisons dominate graph
+//! building, so the comparisons that *do* run must move at memory bandwidth.
+//! The scalar path (`Similarity::sim` per pair) re-loads the leader row and
+//! restarts the FMA pipeline for every candidate. This module instead:
+//!
+//! * gathers a bucket's candidate rows into a contiguous, cache-blocked
+//!   **tile** (sized to ~half an L1d), then
+//! * scores leader-vs-tile with a 4-row × 8-lane register-blocked dot kernel
+//!   ([`dot_tile`]): one leader load feeds four FMA chains, and the lane
+//!   reduction matches [`measure::dot`] bit-for-bit so batched and scalar
+//!   scores are identical (EXPERIMENTS.md §Perf);
+//! * for set measures, expands the leader's token list into a hash map once
+//!   per batch so each candidate walk is O(|B|) lookups instead of an
+//!   O(|A|+|B|) cold merge per pair.
+//!
+//! Scratch buffers live in a thread-local [`BatchScratch`] so the `&self`
+//! trait entry points allocate nothing in steady state. Helpers take explicit
+//! buffers; only the `Similarity` impls touch the thread-local, exactly once
+//! per call (never nested, which would panic the RefCell).
+
+use super::measure::{self, cosine_from_parts};
+use crate::data::types::Dataset;
+use crate::util::fxhash::FxHashMap;
+use std::cell::RefCell;
+
+/// Byte budget for one gathered tile: ~half a typical 32 KiB L1d, leaving
+/// room for the leader row, the output slice, and the gather cursor.
+const TILE_BYTES: usize = 16 * 1024;
+
+/// Accumulator lanes per row — keep in sync with [`measure::dot`]'s unroll
+/// so batched and scalar dots reduce in the same order (bit-exact parity).
+const LANES: usize = 8;
+
+/// Rows scored per register block.
+const BLOCK: usize = 4;
+
+/// Rows gathered per tile for dense dimension `d` (cache-blocking policy).
+#[inline]
+pub fn tile_rows(d: usize) -> usize {
+    (TILE_BYTES / (d.max(1) * std::mem::size_of::<f32>())).clamp(BLOCK, 64)
+}
+
+/// Dot of `leader` against four tile rows at once. One leader element load
+/// feeds four 8-lane accumulator groups (4 ymm worth of f32 on AVX2), so the
+/// kernel is FMA-throughput bound instead of load bound.
+///
+/// Reduction order per row is identical to [`measure::dot`]: lane sums
+/// combined pairwise, then the scalar tail — do not reorder one without the
+/// other, batched/scalar parity tests assert exact equality for cosine/dot.
+#[inline]
+fn dot_block4(leader: &[f32], t0: &[f32], t1: &[f32], t2: &[f32], t3: &[f32]) -> [f32; 4] {
+    let d = leader.len();
+    debug_assert!(t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d);
+    let chunks = d / LANES;
+    let mut acc = [[0f32; LANES]; BLOCK];
+    for c in 0..chunks {
+        let k = c * LANES;
+        for l in 0..LANES {
+            let x = leader[k + l];
+            acc[0][l] += x * t0[k + l];
+            acc[1][l] += x * t1[k + l];
+            acc[2][l] += x * t2[k + l];
+            acc[3][l] += x * t3[k + l];
+        }
+    }
+    let mut out = [0f32; BLOCK];
+    for (r, a) in acc.iter().enumerate() {
+        out[r] = (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]));
+    }
+    for k in chunks * LANES..d {
+        let x = leader[k];
+        out[0] += x * t0[k];
+        out[1] += x * t1[k];
+        out[2] += x * t2[k];
+        out[3] += x * t3[k];
+    }
+    out
+}
+
+/// Score `leader` against the first `rows` rows of a gathered tile, writing
+/// `out[r] = dot(leader, tile_row_r)`. Tail rows (rows % 4) fall back to the
+/// scalar unrolled kernel, which reduces in the same order.
+pub fn dot_tile(leader: &[f32], tile: &[f32], rows: usize, out: &mut [f32]) {
+    let d = leader.len();
+    debug_assert!(tile.len() >= rows * d && out.len() >= rows);
+    let mut r = 0;
+    while r + BLOCK <= rows {
+        let base = r * d;
+        let res = dot_block4(
+            leader,
+            &tile[base..base + d],
+            &tile[base + d..base + 2 * d],
+            &tile[base + 2 * d..base + 3 * d],
+            &tile[base + 3 * d..base + 4 * d],
+        );
+        out[r..r + BLOCK].copy_from_slice(&res);
+        r += BLOCK;
+    }
+    while r < rows {
+        out[r] = measure::dot(leader, &tile[r * d..(r + 1) * d]);
+        r += 1;
+    }
+}
+
+/// Gather candidate rows into contiguous tiles and score the leader against
+/// each: `out[k] = dot(row(leader), row(candidates[k]))`. The gather turns
+/// scattered bucket rows into a streaming read for the blocked kernel; one
+/// leader-row load is amortized over the whole tile.
+pub fn dot_batch(
+    ds: &Dataset,
+    leader: usize,
+    candidates: &[u32],
+    tile: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(candidates.len(), 0.0);
+    if candidates.is_empty() {
+        return;
+    }
+    let d = ds.dim();
+    let lrow = ds.row(leader);
+    let rows_per_tile = tile_rows(d);
+    if tile.len() < rows_per_tile * d {
+        tile.resize(rows_per_tile * d, 0.0);
+    }
+    for (t, chunk) in candidates.chunks(rows_per_tile).enumerate() {
+        for (r, &c) in chunk.iter().enumerate() {
+            tile[r * d..(r + 1) * d].copy_from_slice(ds.row(c as usize));
+        }
+        let off = t * rows_per_tile;
+        dot_tile(lrow, tile, chunk.len(), &mut out[off..off + chunk.len()]);
+    }
+}
+
+/// Batched cosine: tiled dots normalized by the precomputed
+/// [`Dataset::norms`] (never recomputed — same source as the scalar path).
+pub fn cosine_batch(
+    ds: &Dataset,
+    leader: usize,
+    candidates: &[u32],
+    tile: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    dot_batch(ds, leader, candidates, tile, out);
+    let ln = ds.norm(leader);
+    for (k, &c) in candidates.iter().enumerate() {
+        out[k] = cosine_from_parts(out[k], ln * ds.norm(c as usize));
+    }
+}
+
+/// Batched unweighted Jaccard. The leader's tokens are expanded into
+/// `leader_wts` once; each candidate then costs |B| hash probes instead of a
+/// cold sorted merge. Integer counts make this bit-identical to
+/// [`measure::jaccard`].
+pub fn jaccard_batch(
+    ds: &Dataset,
+    leader: usize,
+    candidates: &[u32],
+    leader_wts: &mut FxHashMap<u32, f32>,
+    out: &mut Vec<f32>,
+) {
+    let a = ds.set(leader);
+    leader_wts.clear();
+    for &t in &a.tokens {
+        leader_wts.insert(t, 1.0);
+    }
+    out.clear();
+    for &c in candidates {
+        let b = ds.set(c as usize);
+        if a.is_empty() && b.is_empty() {
+            out.push(0.0);
+            continue;
+        }
+        let inter = b
+            .tokens
+            .iter()
+            .filter(|t| leader_wts.contains_key(t))
+            .count();
+        let union = a.len() + b.len() - inter;
+        out.push(if union == 0 {
+            0.0
+        } else {
+            inter as f32 / union as f32
+        });
+    }
+}
+
+/// Batched weighted Jaccard via the min-sum identity
+/// Σ max(xᵢ, yᵢ) = Σxᵢ + Σyᵢ − Σ min(xᵢ, yᵢ): the leader's weights and total
+/// are computed once, so each candidate walks only its own token list.
+/// Matches [`measure::weighted_jaccard`] to f32 rounding (the denominator is
+/// summed in a different order).
+pub fn weighted_jaccard_batch(
+    ds: &Dataset,
+    leader: usize,
+    candidates: &[u32],
+    leader_wts: &mut FxHashMap<u32, f32>,
+    out: &mut Vec<f32>,
+) {
+    let a = ds.set(leader);
+    leader_wts.clear();
+    let mut ta = 0f32;
+    for (&t, &w) in a.tokens.iter().zip(&a.weights) {
+        leader_wts.insert(t, w);
+        ta += w;
+    }
+    out.clear();
+    for &c in candidates {
+        let b = ds.set(c as usize);
+        if a.is_empty() && b.is_empty() {
+            out.push(0.0);
+            continue;
+        }
+        let (mut s_min, mut tb) = (0f32, 0f32);
+        for (&t, &w) in b.tokens.iter().zip(&b.weights) {
+            tb += w;
+            if let Some(&aw) = leader_wts.get(&t) {
+                s_min += w.min(aw);
+            }
+        }
+        let den = ta + tb - s_min;
+        out.push(if den <= 0.0 { 0.0 } else { s_min / den });
+    }
+}
+
+/// Reusable per-thread scratch for the batch kernels: the gather tile, a
+/// secondary score buffer (mixture blending), and the expanded leader set.
+#[derive(Default)]
+pub struct BatchScratch {
+    tile: Vec<f32>,
+    aux: Vec<f32>,
+    leader_wts: FxHashMap<u32, f32>,
+}
+
+impl BatchScratch {
+    /// `out[k] = dot(leader, candidates[k])`, tiled.
+    pub fn dot(&mut self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        dot_batch(ds, leader, candidates, &mut self.tile, out);
+    }
+
+    /// `out[k] = cosine(leader, candidates[k])`, tiled, norms precomputed.
+    pub fn cosine(&mut self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        cosine_batch(ds, leader, candidates, &mut self.tile, out);
+    }
+
+    /// `out[k] = jaccard(leader, candidates[k])`, leader set expanded once.
+    pub fn jaccard(&mut self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        jaccard_batch(ds, leader, candidates, &mut self.leader_wts, out);
+    }
+
+    /// `out[k] = weighted_jaccard(leader, candidates[k])`.
+    pub fn weighted_jaccard(
+        &mut self,
+        ds: &Dataset,
+        leader: usize,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        weighted_jaccard_batch(ds, leader, candidates, &mut self.leader_wts, out);
+    }
+
+    /// `out[k] = α·cosine + (1−α)·jaccard` (the Amazon2m mixture), sharing
+    /// this scratch's tile and leader-set buffers across both components.
+    pub fn mixture(
+        &mut self,
+        alpha: f32,
+        ds: &Dataset,
+        leader: usize,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        cosine_batch(ds, leader, candidates, &mut self.tile, out);
+        jaccard_batch(ds, leader, candidates, &mut self.leader_wts, &mut self.aux);
+        for (o, &j) in out.iter_mut().zip(self.aux.iter()) {
+            *o = alpha * *o + (1.0 - alpha) * j;
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<BatchScratch> = RefCell::new(BatchScratch::default());
+}
+
+/// Run `f` with this thread's scratch buffers. Callers must not call
+/// `with_scratch` (or any `sim_batch` that uses it) from inside `f`.
+pub fn with_scratch<R>(f: impl FnOnce(&mut BatchScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::sim::measure::dot;
+
+    #[test]
+    fn tile_rows_respects_bounds() {
+        assert_eq!(tile_rows(16), 64); // small d capped at 64 rows
+        assert_eq!(tile_rows(100), 40); // 16 KiB / 400 B
+        assert_eq!(tile_rows(784), 5); // 16 KiB / 3136 B
+        assert_eq!(tile_rows(100_000), BLOCK); // huge d floors at the block
+        assert_eq!(tile_rows(0), 64);
+    }
+
+    #[test]
+    fn dot_tile_matches_scalar_dot_exactly() {
+        for d in [1usize, 7, 8, 15, 16, 100, 784] {
+            let ds = synth::gaussian_mixture(40, d, 4, 0.2, 9);
+            let leader = ds.row(0);
+            let rows = 13; // exercises both the 4-block and the tail path
+            let mut tile = vec![0f32; rows * d];
+            for r in 0..rows {
+                tile[r * d..(r + 1) * d].copy_from_slice(ds.row(r + 1));
+            }
+            let mut out = vec![0f32; rows];
+            dot_tile(leader, &tile, rows, &mut out);
+            for r in 0..rows {
+                let want = dot(leader, ds.row(r + 1));
+                assert_eq!(out[r], want, "d={d} row={r}: {} vs {want}", out[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_batch_gathers_and_scores() {
+        let ds = synth::gaussian_mixture(200, 100, 4, 0.2, 3);
+        let cands: Vec<u32> = (0..199).rev().collect(); // scattered order
+        let (mut tile, mut out) = (Vec::new(), Vec::new());
+        dot_batch(&ds, 7, &cands, &mut tile, &mut out);
+        assert_eq!(out.len(), cands.len());
+        for (k, &c) in cands.iter().enumerate() {
+            assert_eq!(out[k], dot(ds.row(7), ds.row(c as usize)));
+        }
+    }
+
+    #[test]
+    fn empty_candidates_clear_output() {
+        let ds = synth::gaussian_mixture(10, 8, 2, 0.1, 5);
+        let (mut tile, mut out) = (Vec::new(), vec![1.0f32; 4]);
+        dot_batch(&ds, 0, &[], &mut tile, &mut out);
+        assert!(out.is_empty());
+        let mut wts = FxHashMap::default();
+        let sets = synth::zipf_sets(10, &synth::ZipfSetsParams::default(), 5);
+        out.push(1.0);
+        jaccard_batch(&sets, 0, &[], &mut wts, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn jaccard_batch_matches_merge_walk() {
+        let sets = synth::zipf_sets(120, &synth::ZipfSetsParams::default(), 11);
+        let cands: Vec<u32> = (1..120).collect();
+        let mut wts = FxHashMap::default();
+        let mut out = Vec::new();
+        jaccard_batch(&sets, 0, &cands, &mut wts, &mut out);
+        for (k, &c) in cands.iter().enumerate() {
+            let want = measure::jaccard(sets.set(0), sets.set(c as usize));
+            assert_eq!(out[k], want, "candidate {c}");
+        }
+    }
+
+    #[test]
+    fn weighted_jaccard_batch_matches_merge_walk() {
+        let sets = synth::zipf_sets(120, &synth::ZipfSetsParams::default(), 13);
+        let cands: Vec<u32> = (1..120).collect();
+        let mut wts = FxHashMap::default();
+        let mut out = Vec::new();
+        weighted_jaccard_batch(&sets, 0, &cands, &mut wts, &mut out);
+        for (k, &c) in cands.iter().enumerate() {
+            let want = measure::weighted_jaccard(sets.set(0), sets.set(c as usize));
+            assert!(
+                (out[k] - want).abs() < 1e-6,
+                "candidate {c}: {} vs {want}",
+                out[k]
+            );
+        }
+    }
+}

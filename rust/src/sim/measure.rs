@@ -1,24 +1,33 @@
 //! Similarity functions and the [`Similarity`] trait.
 
+use super::batch;
 use crate::data::types::{Dataset, WeightedSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Cosine similarity of two dense vectors.
+/// Shared cosine normalization: a dot product over a product of L2 norms.
+/// Single definition used by the free function, the scalar trait impl and
+/// the tiled batch kernels, so the three paths cannot drift.
+#[inline]
+pub(crate) fn cosine_from_parts(d: f32, norm_prod: f32) -> f32 {
+    if norm_prod <= f32::MIN_POSITIVE {
+        0.0
+    } else {
+        (d / norm_prod).clamp(-1.0, 1.0)
+    }
+}
+
+/// L2 norm, via the same unrolled kernel as [`dot`].
+#[inline]
+pub fn l2_norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity of two dense vectors (norms computed on the fly; the
+/// dataset path [`CosineSim`] reads them from [`Dataset::norms`] instead).
 #[inline]
 pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let (mut d, mut na, mut nb) = (0f32, 0f32, 0f32);
-    for i in 0..a.len() {
-        d += a[i] * b[i];
-        na += a[i] * a[i];
-        nb += b[i] * b[i];
-    }
-    let denom = (na * nb).sqrt();
-    if denom <= f32::MIN_POSITIVE {
-        0.0
-    } else {
-        (d / denom).clamp(-1.0, 1.0)
-    }
+    cosine_from_parts(dot(a, b), l2_norm(a) * l2_norm(b))
 }
 
 /// Dot product of two dense vectors.
@@ -132,13 +141,11 @@ pub struct CosineSim;
 impl Similarity for CosineSim {
     #[inline]
     fn sim(&self, ds: &Dataset, i: usize, j: usize) -> f32 {
-        let d = dot(ds.row(i), ds.row(j));
-        let denom = ds.norm(i) * ds.norm(j);
-        if denom <= f32::MIN_POSITIVE {
-            0.0
-        } else {
-            (d / denom).clamp(-1.0, 1.0)
-        }
+        cosine_from_parts(dot(ds.row(i), ds.row(j)), ds.norm(i) * ds.norm(j))
+    }
+
+    fn sim_batch(&self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        batch::with_scratch(|s| s.cosine(ds, leader, candidates, out));
     }
 
     fn name(&self) -> &'static str {
@@ -156,6 +163,10 @@ impl Similarity for DotSim {
         dot(ds.row(i), ds.row(j))
     }
 
+    fn sim_batch(&self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        batch::with_scratch(|s| s.dot(ds, leader, candidates, out));
+    }
+
     fn name(&self) -> &'static str {
         "dot"
     }
@@ -171,6 +182,10 @@ impl Similarity for JaccardSim {
         jaccard(ds.set(i), ds.set(j))
     }
 
+    fn sim_batch(&self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        batch::with_scratch(|s| s.jaccard(ds, leader, candidates, out));
+    }
+
     fn name(&self) -> &'static str {
         "jaccard"
     }
@@ -184,6 +199,10 @@ impl Similarity for WeightedJaccardSim {
     #[inline]
     fn sim(&self, ds: &Dataset, i: usize, j: usize) -> f32 {
         weighted_jaccard(ds.set(i), ds.set(j))
+    }
+
+    fn sim_batch(&self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        batch::with_scratch(|s| s.weighted_jaccard(ds, leader, candidates, out));
     }
 
     fn name(&self) -> &'static str {
@@ -210,6 +229,10 @@ impl Similarity for MixtureSim {
         let c = CosineSim.sim(ds, i, j);
         let jac = jaccard(ds.set(i), ds.set(j));
         self.alpha * c + (1.0 - self.alpha) * jac
+    }
+
+    fn sim_batch(&self, ds: &Dataset, leader: usize, candidates: &[u32], out: &mut Vec<f32>) {
+        batch::with_scratch(|s| s.mixture(self.alpha, ds, leader, candidates, out));
     }
 
     fn name(&self) -> &'static str {

@@ -5,12 +5,21 @@
 //! similarity (Amazon2m). All are exposed behind the [`Similarity`] trait;
 //! [`CountingSim`] wraps any measure with an atomic comparison counter —
 //! the paper's headline metric (Figure 1).
+//!
+//! The scoring hot path goes through `sim_batch`, which every built-in
+//! measure overrides with the tiled kernels in [`batch`] (leader-vs-tile
+//! blocked FMA dots for dense rows, hash-expanded leader sets for token
+//! measures). Batched and scalar scores agree exactly for cosine/dot/
+//! jaccard/mixture and to f32 rounding for weighted Jaccard — asserted by
+//! the parity property tests in `tests/batch_parity.rs`.
 
+pub mod batch;
 mod measure;
 mod learned;
 
+pub use batch::BatchScratch;
 pub use learned::LearnedSim;
 pub use measure::{
-    cosine, dot, jaccard, weighted_jaccard, CosineSim, CountingSim, DotSim, JaccardSim,
+    cosine, dot, jaccard, l2_norm, weighted_jaccard, CosineSim, CountingSim, DotSim, JaccardSim,
     MixtureSim, Similarity, WeightedJaccardSim,
 };

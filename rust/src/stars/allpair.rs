@@ -23,18 +23,21 @@ pub fn allpair_edges(
     // triangle makes early rows costlier).
     let tasks = (cluster.workers() * 8).min(n.max(1));
     let block = n.div_ceil(tasks.max(1));
+    // One shared id list; each row's candidates are the tail slice — the
+    // previous per-row `collect` allocated O(n) per row.
+    let all_ids: Vec<u32> = (0..n as u32).collect();
     let parts = cluster.map_timed(tasks, |t, ledger| {
         let lo = t * block;
         let hi = ((t + 1) * block).min(n);
         let mut edges = Vec::new();
         let mut scores = Vec::new();
         for i in lo..hi {
-            let rest: Vec<u32> = ((i + 1) as u32..n as u32).collect();
+            let rest = &all_ids[i + 1..];
             if rest.is_empty() {
                 continue;
             }
             ledger.add_comparisons(rest.len() as u64);
-            sim.sim_batch(ds, i, &rest, &mut scores);
+            sim.sim_batch(ds, i, rest, &mut scores);
             for (k, &j) in rest.iter().enumerate() {
                 if scores[k] >= threshold {
                     edges.push(Edge::new(i as u32, j, scores[k]));
@@ -58,12 +61,12 @@ pub fn exact_knn(
     let n = ds.len();
     let tasks = (cluster.workers() * 4).min(n.max(1));
     let block = n.div_ceil(tasks.max(1));
+    let all: Vec<u32> = (0..n as u32).collect();
     let parts: Vec<Vec<Vec<(f32, u32)>>> = cluster.map_timed(tasks, |t, ledger| {
         let lo = t * block;
         let hi = ((t + 1) * block).min(n);
         let mut out = Vec::with_capacity(hi.saturating_sub(lo));
         let mut scores = Vec::new();
-        let all: Vec<u32> = (0..n as u32).collect();
         for i in lo..hi {
             let mut topk = TopK::new(k);
             // Score i against everyone (skip self below).

@@ -1,9 +1,11 @@
 //! [`StarsBuilder`] — the crate's main entry point.
 //!
 //! Orchestrates a full graph build: repetitions fan out over the AMPC
-//! cluster in waves; each wave's edges fold into a degree-capped
-//! accumulator so memory stays bounded at ~n·cap retained edges regardless
-//! of R (the paper's degree threshold of 250 applied online).
+//! cluster in waves; each wave's edges fold into a degree-capped,
+//! **node-sharded** accumulator so memory stays bounded at ~n·cap retained
+//! edges regardless of R (the paper's degree threshold of 250 applied
+//! online) and the fold itself runs across the worker pool instead of
+//! serializing on the coordinator.
 
 use crate::ampc::{Cluster, CostReport, Dht};
 use crate::data::types::Dataset;
@@ -13,6 +15,9 @@ use crate::sim::Similarity;
 use crate::stars::params::{Algorithm, BuildParams, JoinStrategy};
 use crate::stars::{allpair, knn, threshold};
 use crate::util::fxhash::FxHashMap;
+use crate::util::pool;
+use crate::util::topk::TopK;
+use std::sync::Mutex;
 
 /// Result of a graph build.
 #[derive(Debug)]
@@ -80,7 +85,7 @@ impl<'a> StarsBuilder<'a> {
         let (graph, report) = cluster.run_job(|c| {
             if params.algorithm == Algorithm::AllPair {
                 let edges = allpair::allpair_edges(self.ds, sim, params.threshold, c);
-                return finalize(n, edges, params.degree_cap);
+                return finalize(n, edges, params.degree_cap, c.workers());
             }
             let family = self.family.expect("hash family not set");
             let dht_store;
@@ -91,8 +96,8 @@ impl<'a> StarsBuilder<'a> {
                 }
                 _ => None,
             };
-            let mut acc = Accumulator::new(n, params.degree_cap);
             let wave = c.workers().max(1);
+            let mut acc = Accumulator::with_workers(n, params.degree_cap, wave);
             let reps = params.sketches;
             let mut done = 0usize;
             while done < reps {
@@ -109,9 +114,7 @@ impl<'a> StarsBuilder<'a> {
                         Algorithm::AllPair => unreachable!(),
                     }
                 });
-                for edges in results {
-                    acc.add(edges);
-                }
+                acc.add_wave(results);
                 done += count;
             }
             acc.finalize()
@@ -125,85 +128,227 @@ impl<'a> StarsBuilder<'a> {
     }
 }
 
-fn finalize(n: usize, edges: Vec<Edge>, degree_cap: usize) -> Graph {
-    let mut acc = Accumulator::new(n, degree_cap);
-    acc.add(edges);
+fn finalize(n: usize, edges: Vec<Edge>, degree_cap: usize, workers: usize) -> Graph {
+    let mut acc = Accumulator::with_workers(n, degree_cap, workers);
+    acc.add_wave(vec![edges]);
     acc.finalize()
 }
 
-/// Online degree-capped edge accumulator.
-///
-/// With `cap == 0` it keeps every (deduplicated) edge. With a cap it keeps,
-/// per node, a map of its best neighbors, evicting the weakest once the map
-/// exceeds 2·cap — so memory is O(n·cap) while retained edges match "keep
-/// the cap most-similar neighbors per node" (an edge survives if either
-/// endpoint retains it, matching [`crate::graph::Csr::with_degree_cap`]).
-pub struct Accumulator {
-    n: usize,
-    cap: usize,
-    raw: Vec<Edge>,
-    per_node: Vec<FxHashMap<u32, f32>>,
+/// Waves smaller than this fold serially — below it the staging pass costs
+/// more than it saves.
+const PARALLEL_WAVE_MIN: usize = 4096;
+
+/// Per-node neighbor state: a dedup map (keep the max weight seen per
+/// neighbor) plus the eviction floor — once a bounded top-k eviction has run,
+/// any candidate strictly below the weakest retained weight can never enter
+/// the node's final top-`cap` (retained entries only leave via evictions that
+/// keep the top `cap`, and weights only grow under max-dedup), so it is
+/// dropped without touching the map.
+#[derive(Clone)]
+struct NodeAcc {
+    nbrs: FxHashMap<u32, f32>,
+    floor: f32,
 }
 
-impl Accumulator {
-    /// New accumulator over `n` nodes.
-    pub fn new(n: usize, cap: usize) -> Accumulator {
-        Accumulator {
-            n,
-            cap,
-            raw: Vec::new(),
-            per_node: if cap == 0 {
-                Vec::new()
-            } else {
-                vec![FxHashMap::default(); n]
-            },
+impl NodeAcc {
+    fn new() -> NodeAcc {
+        NodeAcc {
+            nbrs: FxHashMap::default(),
+            floor: f32::NEG_INFINITY,
         }
     }
 
-    /// Fold a batch of edges in.
+    #[inline]
+    fn offer(&mut self, nbr: u32, w: f32, cap: usize) {
+        if w < self.floor {
+            return;
+        }
+        let entry = self.nbrs.entry(nbr).or_insert(f32::NEG_INFINITY);
+        if w > *entry {
+            *entry = w;
+        }
+        if self.nbrs.len() > 2 * cap {
+            // Bounded top-k eviction: O(m log cap) selection instead of the
+            // previous drain + full sort (O(m log m)).
+            let mut top: TopK<u32> = TopK::new(cap);
+            for (&nbr, &w) in &self.nbrs {
+                top.push(w, nbr);
+            }
+            self.floor = top.threshold().unwrap_or(f32::NEG_INFINITY);
+            self.nbrs.clear();
+            for (w, nbr) in top.into_sorted() {
+                self.nbrs.insert(nbr, w);
+            }
+        }
+    }
+}
+
+/// A contiguous node range `[lo, lo + nodes.len())` of the accumulator.
+struct Shard {
+    lo: u32,
+    nodes: Vec<NodeAcc>,
+}
+
+/// Online degree-capped edge accumulator, sharded by contiguous node range.
+///
+/// With `cap == 0` it keeps every (deduplicated) edge. With a cap it keeps,
+/// per node, its best neighbors under bounded top-k eviction — memory is
+/// O(n·cap) while retained edges match "keep the cap most-similar neighbors
+/// per node" (an edge survives if either endpoint retains it, matching
+/// [`crate::graph::Csr::with_degree_cap`]).
+///
+/// [`Accumulator::add_wave`] folds a whole wave of per-repetition batches in
+/// parallel: batches are partitioned by destination shard across the worker
+/// pool, then each shard folds its slice independently. Per node, entries
+/// arrive in (batch order, edge order) — the same order the serial fold
+/// uses — so sharded and serial accumulation produce identical graphs
+/// (verified by `tests/batch_parity.rs`; f32 weight ties may be broken
+/// either way, as in the serial fold).
+pub struct Accumulator {
+    n: usize,
+    cap: usize,
+    workers: usize,
+    shard_size: usize,
+    raw: Vec<Edge>,
+    shards: Vec<Mutex<Shard>>,
+}
+
+impl Accumulator {
+    /// New accumulator over `n` nodes, sized to the host's worker pool.
+    pub fn new(n: usize, cap: usize) -> Accumulator {
+        Accumulator::with_workers(n, cap, pool::default_workers())
+    }
+
+    /// New accumulator over `n` nodes with an explicit worker count.
+    pub fn with_workers(n: usize, cap: usize, workers: usize) -> Accumulator {
+        let workers = workers.max(1);
+        // 2 shards per worker: contiguous ranges balance unevenly when node
+        // ids correlate with density, so oversharding smooths the tail.
+        let shard_size = if cap == 0 || n == 0 {
+            1
+        } else {
+            n.div_ceil(workers * 2).max(1)
+        };
+        let mut shards = Vec::new();
+        if cap > 0 {
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + shard_size).min(n);
+                shards.push(Mutex::new(Shard {
+                    lo: lo as u32,
+                    nodes: vec![NodeAcc::new(); hi - lo],
+                }));
+                lo = hi;
+            }
+        }
+        Accumulator {
+            n,
+            cap,
+            workers,
+            shard_size,
+            raw: Vec::new(),
+            shards,
+        }
+    }
+
+    /// Fold a batch of edges in, serially (small batches / tests).
     pub fn add(&mut self, edges: Vec<Edge>) {
         if self.cap == 0 {
             self.raw.extend(edges);
             return;
         }
-        for e in edges {
-            self.insert(e.u, e.v, e.w);
-            self.insert(e.v, e.u, e.w);
+        let cap = self.cap;
+        for e in &edges {
+            for (node, nbr) in [(e.u, e.v), (e.v, e.u)] {
+                let shard = self.shards[node as usize / self.shard_size]
+                    .get_mut()
+                    .unwrap();
+                let idx = node as usize - shard.lo as usize;
+                shard.nodes[idx].offer(nbr, e.w, cap);
+            }
         }
     }
 
-    fn insert(&mut self, node: u32, nbr: u32, w: f32) {
-        let map = &mut self.per_node[node as usize];
-        let entry = map.entry(nbr).or_insert(f32::MIN);
-        if w > *entry {
-            *entry = w;
+    /// Fold a whole wave of per-repetition batches in, in parallel across
+    /// the worker pool. Equivalent to `add`-ing each batch in order.
+    pub fn add_wave(&mut self, batches: Vec<Vec<Edge>>) {
+        if self.cap == 0 {
+            for b in batches {
+                self.raw.extend(b);
+            }
+            return;
         }
-        if map.len() > 2 * self.cap {
-            // Evict down to cap: keep the cap strongest neighbors.
-            let mut items: Vec<(u32, f32)> = map.drain().collect();
-            items.sort_unstable_by(|a, b| b.1.total_cmp(&a.1));
-            items.truncate(self.cap);
-            map.extend(items);
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        if self.workers == 1 || total < PARALLEL_WAVE_MIN {
+            for b in batches {
+                self.add(b);
+            }
+            return;
         }
+        let nshards = self.shards.len();
+        let shard_size = self.shard_size;
+        // Phase 1: partition each batch's half-edges by destination shard
+        // (one task per batch, dynamically balanced).
+        let staged: Vec<Vec<Vec<(u32, u32, f32)>>> =
+            pool::parallel_map(batches.len(), self.workers, |b| {
+                let mut parts: Vec<Vec<(u32, u32, f32)>> = vec![Vec::new(); nshards];
+                for e in &batches[b] {
+                    parts[e.u as usize / shard_size].push((e.u, e.v, e.w));
+                    parts[e.v as usize / shard_size].push((e.v, e.u, e.w));
+                }
+                parts
+            });
+        drop(batches);
+        // Phase 2: each shard folds its staged entries, batches in wave
+        // order, so per-node insertion order matches the serial fold. Each
+        // shard is visited by exactly one chunk, so the locks never contend.
+        let cap = self.cap;
+        let shards = &self.shards;
+        pool::parallel_chunks(nshards, self.workers, |_, range| {
+            for s in range {
+                let mut shard = shards[s].lock().unwrap();
+                let lo = shard.lo as usize;
+                for batch in &staged {
+                    for &(node, nbr, w) in &batch[s] {
+                        shard.nodes[node as usize - lo].offer(nbr, w, cap);
+                    }
+                }
+            }
+        });
     }
 
-    /// Produce the final graph.
+    /// Produce the final graph (per-shard top-`cap` selection in parallel).
     pub fn finalize(mut self) -> Graph {
         if self.cap == 0 {
             return Graph::from_edges(self.n, std::mem::take(&mut self.raw));
         }
-        let mut edges = Vec::new();
-        for (node, map) in self.per_node.iter_mut().enumerate() {
-            let mut items: Vec<(u32, f32)> = map.drain().collect();
-            if items.len() > self.cap {
-                items.sort_unstable_by(|a, b| b.1.total_cmp(&a.1));
-                items.truncate(self.cap);
+        let cap = self.cap;
+        let shards = std::mem::take(&mut self.shards);
+        let workers = self.workers.min(shards.len().max(1));
+        let parts = pool::parallel_chunks(shards.len(), workers, |_, range| {
+            let mut edges = Vec::new();
+            for s in range {
+                let shard = shards[s].lock().unwrap();
+                for (i, acc) in shard.nodes.iter().enumerate() {
+                    let node = shard.lo + i as u32;
+                    if acc.nbrs.len() > cap {
+                        let mut top: TopK<u32> = TopK::new(cap);
+                        for (&nbr, &w) in &acc.nbrs {
+                            top.push(w, nbr);
+                        }
+                        for (w, nbr) in top.into_sorted() {
+                            edges.push(Edge::new(node, nbr, w));
+                        }
+                    } else {
+                        for (&nbr, &w) in &acc.nbrs {
+                            edges.push(Edge::new(node, nbr, w));
+                        }
+                    }
+                }
             }
-            for (nbr, w) in items {
-                edges.push(Edge::new(node as u32, nbr, w));
-            }
-        }
-        Graph::from_edges(self.n, edges)
+            edges
+        });
+        Graph::from_parts(self.n, parts)
     }
 }
 
@@ -265,6 +410,62 @@ mod tests {
             .map(|e| e.w)
             .collect();
         assert!(best.iter().any(|&w| (w - 0.99).abs() < 1e-6));
+    }
+
+    #[test]
+    fn eviction_floor_admits_later_stronger_entries() {
+        // Interleave weak and strong inserts so evictions run mid-stream;
+        // a neighbor strictly above the floor must still get in.
+        let mut acc = Accumulator::with_workers(50, 2, 1);
+        let mut edges = Vec::new();
+        for v in 1..40u32 {
+            edges.push(Edge::new(0, v, 0.3 + (v as f32 % 7.0) * 1e-3));
+        }
+        edges.push(Edge::new(0, 41, 0.9));
+        edges.push(Edge::new(0, 42, 0.95));
+        acc.add(edges);
+        let g = acc.finalize();
+        let node0: Vec<(u32, f32)> = g
+            .edges()
+            .iter()
+            .filter(|e| e.u == 0)
+            .map(|e| (e.v, e.w))
+            .collect();
+        assert!(node0.iter().any(|&(v, _)| v == 41));
+        assert!(node0.iter().any(|&(v, _)| v == 42));
+    }
+
+    #[test]
+    fn add_wave_matches_sequential_adds() {
+        // Same edges folded as one parallel wave vs one batch at a time.
+        let mut rng = crate::util::rng::Rng::new(77);
+        let n = 300usize;
+        let mut batches = Vec::new();
+        let mut uniq = 0u32;
+        for _ in 0..8 {
+            let mut batch = Vec::new();
+            for _ in 0..2000 {
+                let u = rng.below(n) as u32;
+                let mut v = rng.below(n) as u32;
+                if u == v {
+                    v = (v + 1) % n as u32;
+                }
+                // Unique weights: ties cannot mask ordering bugs.
+                uniq += 1;
+                batch.push(Edge::new(u, v, uniq as f32 * 1e-5));
+            }
+            batches.push(batch);
+        }
+        let mut wave = Accumulator::with_workers(n, 5, 4);
+        wave.add_wave(batches.clone());
+        let g1 = wave.finalize();
+        let mut seq = Accumulator::with_workers(n, 5, 1);
+        for b in batches {
+            seq.add(b);
+        }
+        let g2 = seq.finalize();
+        assert_eq!(g1.num_edges(), g2.num_edges());
+        assert_eq!(g1.edges(), g2.edges());
     }
 
     #[test]

@@ -43,7 +43,6 @@ pub fn sorting_rep(
 
     let mut edges = Vec::new();
     let mut scores = Vec::new();
-    let mut cand_buf: Vec<u32> = Vec::new();
     for w in windows(n, params.window, &mut rng) {
         let members = &order[w];
         if members.len() < 2 {
@@ -52,24 +51,25 @@ pub fn sorting_rep(
         // Stars 2 step 5 (the k <= n^2rho branch, also the small-window
         // fallback): all pairs is cheaper than stars when |W| <= 2s.
         if params.algorithm.is_stars() && members.len() > 2 * params.leaders {
-            // Stars 2 step 4: s random leaders per window.
+            // Stars 2 step 4: s random leaders per window, each scored
+            // against the two contiguous halves around its position — the
+            // batch kernels tile straight from the window slice, no
+            // per-leader candidate copy.
             let leaders = sample_leaders(members.len(), params.leaders, &mut rng);
             for &lp in &leaders {
                 let leader = members[lp];
-                // Reused scratch buffer: no per-leader allocation.
-                cand_buf.clear();
-                cand_buf.extend(
-                    members
-                        .iter()
-                        .enumerate()
-                        .filter(|&(pos, _)| pos != lp)
-                        .map(|(_, &id)| id),
-                );
-                ledger.add_comparisons(cand_buf.len() as u64);
-                sim.sim_batch(ds, leader as usize, &cand_buf, &mut scores);
-                for (k, &c) in cand_buf.iter().enumerate() {
-                    if scores[k] >= params.threshold {
-                        edges.push(Edge::new(leader, c, scores[k]));
+                let (before, rest) = members.split_at(lp);
+                let after = &rest[1..];
+                ledger.add_comparisons((members.len() - 1) as u64);
+                for part in [before, after] {
+                    if part.is_empty() {
+                        continue;
+                    }
+                    sim.sim_batch(ds, leader as usize, part, &mut scores);
+                    for (k, &c) in part.iter().enumerate() {
+                        if scores[k] >= params.threshold {
+                            edges.push(Edge::new(leader, c, scores[k]));
+                        }
                     }
                 }
             }

@@ -96,28 +96,25 @@ pub fn score_stars(
         return;
     }
     let leaders = sample_leaders(bucket.len(), s, rng);
-    // Reused scratch buffer: the scoring loop must not allocate per leader.
-    let mut cand_buf: Vec<u32> = Vec::with_capacity(bucket.len());
     for &lp in &leaders {
         let leader = bucket[lp];
-        // Compare the leader to every other member (paper: y ∈ B \ {x}).
-        cand_buf.clear();
-        cand_buf.extend(
-            bucket
-                .iter()
-                .enumerate()
-                .filter(|&(pos, _)| pos != lp)
-                .map(|(_, &id)| id),
-        );
-        if cand_buf.is_empty() {
-            continue;
-        }
-        ledger.add_comparisons(cand_buf.len() as u64);
-        sim.sim_batch(ds, leader as usize, &cand_buf, scores);
-        for (k, &c) in cand_buf.iter().enumerate() {
-            let w = scores[k];
-            if w >= threshold && c != leader {
-                edges.push(Edge::new(leader, c, w));
+        // Compare the leader to every other member (paper: y ∈ B \ {x}) by
+        // scoring the two contiguous halves around the leader position — the
+        // batch kernels tile straight from the bucket slice, and no per-
+        // leader candidate copy is ever made.
+        let (before, rest) = bucket.split_at(lp);
+        let after = &rest[1..];
+        ledger.add_comparisons((bucket.len() - 1) as u64);
+        for part in [before, after] {
+            if part.is_empty() {
+                continue;
+            }
+            sim.sim_batch(ds, leader as usize, part, scores);
+            for (k, &c) in part.iter().enumerate() {
+                let w = scores[k];
+                if w >= threshold && c != leader {
+                    edges.push(Edge::new(leader, c, w));
+                }
             }
         }
     }

@@ -46,12 +46,17 @@ where
     })
 }
 
-/// Dynamically distribute `n` independent tasks over `workers` threads.
-/// `f(task_index)` is called exactly once per index; the per-task results are
-/// returned in index order.
+/// Dynamically distribute `n` independent tasks over `workers` threads via an
+/// atomic cursor. `f(task_index)` is called exactly once per index; the
+/// per-task results are returned in index order.
+///
+/// Each worker buffers its `(index, result)` pairs locally and the buffers
+/// are merged once after the scope joins — no per-slot mutex, no `Default +
+/// Clone` bound on `R` (the previous implementation paid a lock/unlock per
+/// task plus an up-front clone of `n` defaults).
 pub fn parallel_map<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
 where
-    R: Send + Default + Clone,
+    R: Send,
     F: Fn(usize) -> R + Sync,
 {
     let workers = workers.max(1).min(n.max(1));
@@ -59,26 +64,38 @@ where
         return (0..n).map(&f).collect();
     }
     let cursor = AtomicUsize::new(0);
-    let mut results: Vec<R> = vec![R::default(); n];
-    let slots: Vec<std::sync::Mutex<Option<R>>> = (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let cursor = &cursor;
-            let f = &f;
-            let slots = &slots;
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                *slots[i].lock().unwrap() = Some(f(i));
-            });
-        }
+    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let cursor = &cursor;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    for (i, slot) in slots.into_iter().enumerate() {
-        results[i] = slot.into_inner().unwrap().expect("task not executed");
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for part in parts {
+        for (i, r) in part {
+            debug_assert!(slots[i].is_none(), "task {i} executed twice");
+            slots[i] = Some(r);
+        }
     }
-    results
+    slots
+        .into_iter()
+        .map(|s| s.expect("task not executed"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -125,5 +142,14 @@ mod tests {
     fn map_zero_tasks() {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_supports_non_default_non_clone_results() {
+        struct Opaque(usize);
+        let out = parallel_map(97, 6, Opaque);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.0, i);
+        }
     }
 }

@@ -1,0 +1,212 @@
+//! Batch/scalar parity property tests for every `Similarity` implementation,
+//! plus the sharded-vs-serial `Accumulator` equivalence test.
+//!
+//! The tiled kernels in `sim::batch` must agree with the per-pair scalar
+//! path: exactly for cosine/dot/jaccard/mixture (same reduction order by
+//! construction) and to 1e-6 for weighted Jaccard (the denominator is summed
+//! in a different order). `LearnedSim` is excluded — it needs PJRT artifacts
+//! and its `sim_batch` is a single model dispatch either way.
+
+use stars::data::synth;
+use stars::data::types::{Dataset, WeightedSet};
+use stars::graph::Edge;
+use stars::sim::{
+    CosineSim, CountingSim, DotSim, JaccardSim, MixtureSim, Similarity, WeightedJaccardSim,
+};
+use stars::stars::Accumulator;
+use stars::util::quickcheck::{check, Gen};
+use stars::util::rng::Rng;
+
+/// Assert `sim_batch` == per-pair `sim` to within `tol` for one measure.
+fn assert_parity(sim: &dyn Similarity, ds: &Dataset, leader: usize, cands: &[u32], tol: f32) {
+    let mut out = Vec::new();
+    sim.sim_batch(ds, leader, cands, &mut out);
+    assert_eq!(out.len(), cands.len(), "{}: wrong output len", sim.name());
+    for (k, &c) in cands.iter().enumerate() {
+        let want = sim.sim(ds, leader, c as usize);
+        assert!(
+            (out[k] - want).abs() <= tol,
+            "{}: leader {leader} cand {c}: batch {} vs scalar {want}",
+            sim.name(),
+            out[k]
+        );
+    }
+}
+
+/// Random dense dataset; dimension sweeps past the 8-lane chunk and the
+/// 4-row block boundaries.
+fn dense_dataset(g: &mut Gen) -> Dataset {
+    let n = g.usize_in(2, 80);
+    let d = g.usize_in(1, 130);
+    let mut rows = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        rows.extend(g.vec_f32(d));
+    }
+    Dataset::from_dense("parity", d, rows, Vec::new())
+}
+
+/// Random set dataset (some sets empty, to hit the 0/0 conventions).
+fn set_dataset(g: &mut Gen) -> Dataset {
+    let n = g.usize_in(2, 60);
+    let mut sets = Vec::with_capacity(n);
+    for _ in 0..n {
+        if g.bool(0.1) {
+            sets.push(WeightedSet::default());
+        } else {
+            let tokens = g.subset(64, 12);
+            let pairs: Vec<(u32, f32)> =
+                tokens.into_iter().map(|t| (t, g.f32_in(0.0, 2.0))).collect();
+            sets.push(WeightedSet::from_pairs(pairs));
+        }
+    }
+    Dataset::from_sets("parity-sets", sets, Vec::new())
+}
+
+/// Candidate list over a dataset: scattered order, may repeat, may include
+/// the leader itself (the scoring loops never pass it, but the kernel
+/// contract does not forbid it).
+fn candidates(g: &mut Gen, n: usize) -> Vec<u32> {
+    let m = g.usize_in(1, 2 * n.max(2));
+    (0..m).map(|_| g.usize_in(0, n - 1) as u32).collect()
+}
+
+#[test]
+fn cosine_batch_parity() {
+    check("cosine-parity", 60, |g| {
+        let ds = dense_dataset(g);
+        let leader = g.usize_in(0, ds.len() - 1);
+        let cands = candidates(g, ds.len());
+        assert_parity(&CosineSim, &ds, leader, &cands, 1e-6);
+    });
+}
+
+#[test]
+fn dot_batch_parity() {
+    check("dot-parity", 60, |g| {
+        let ds = dense_dataset(g);
+        let leader = g.usize_in(0, ds.len() - 1);
+        let cands = candidates(g, ds.len());
+        assert_parity(&DotSim, &ds, leader, &cands, 1e-6);
+    });
+}
+
+#[test]
+fn jaccard_batch_parity() {
+    check("jaccard-parity", 60, |g| {
+        let ds = set_dataset(g);
+        let leader = g.usize_in(0, ds.len() - 1);
+        let cands = candidates(g, ds.len());
+        assert_parity(&JaccardSim, &ds, leader, &cands, 1e-6);
+    });
+}
+
+#[test]
+fn weighted_jaccard_batch_parity() {
+    check("weighted-jaccard-parity", 60, |g| {
+        let ds = set_dataset(g);
+        let leader = g.usize_in(0, ds.len() - 1);
+        let cands = candidates(g, ds.len());
+        assert_parity(&WeightedJaccardSim, &ds, leader, &cands, 1e-6);
+    });
+}
+
+#[test]
+fn mixture_batch_parity() {
+    check("mixture-parity", 40, |g| {
+        // Hybrid dataset: the products generator carries embeddings + sets.
+        let n = g.usize_in(4, 60);
+        let ds = synth::products(n, &synth::ProductsParams::default(), g.usize_in(0, 1 << 30) as u64);
+        let leader = g.usize_in(0, ds.len() - 1);
+        let cands = candidates(g, ds.len());
+        let alpha = g.f32_in(0.0, 1.0);
+        assert_parity(&MixtureSim { alpha }, &ds, leader, &cands, 1e-6);
+    });
+}
+
+#[test]
+fn counting_sim_batch_parity_and_count() {
+    check("counting-parity", 30, |g| {
+        let ds = dense_dataset(g);
+        let leader = g.usize_in(0, ds.len() - 1);
+        let cands = candidates(g, ds.len());
+        let cs = CountingSim::new(CosineSim);
+        let mut out = Vec::new();
+        cs.sim_batch(&ds, leader, &cands, &mut out);
+        assert_eq!(cs.comparisons(), cands.len() as u64);
+        for (k, &c) in cands.iter().enumerate() {
+            let want = CosineSim.sim(&ds, leader, c as usize);
+            assert!((out[k] - want).abs() <= 1e-6);
+        }
+    });
+}
+
+/// Naive reference for the degree-capped accumulator: dedup to the max
+/// weight per pair, then keep each node's `cap` strongest neighbors; an edge
+/// survives if either endpoint retains it. Assumes distinct weights.
+fn reference_graph(n: usize, cap: usize, batches: &[Vec<Edge>]) -> Vec<(u32, u32)> {
+    use std::collections::HashMap;
+    let mut best: HashMap<(u32, u32), f32> = HashMap::new();
+    for b in batches {
+        for e in b {
+            let w = best.entry((e.u, e.v)).or_insert(f32::NEG_INFINITY);
+            if e.w > *w {
+                *w = e.w;
+            }
+        }
+    }
+    let mut per_node: Vec<Vec<(f32, u32)>> = vec![Vec::new(); n];
+    for (&(u, v), &w) in &best {
+        per_node[u as usize].push((w, v));
+        per_node[v as usize].push((w, u));
+    }
+    let mut kept: std::collections::BTreeSet<(u32, u32)> = Default::default();
+    for (node, nbrs) in per_node.iter_mut().enumerate() {
+        nbrs.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for &(_, nbr) in nbrs.iter().take(cap) {
+            let (a, b) = (node as u32, nbr);
+            kept.insert((a.min(b), a.max(b)));
+        }
+    }
+    kept.into_iter().collect()
+}
+
+#[test]
+fn accumulator_sharded_matches_serial_and_reference() {
+    // Fixed seed; weights unique by construction so f32 ties cannot mask
+    // ordering differences between the sharded and serial folds.
+    let mut rng = Rng::new(0x5EED);
+    let n = 400usize;
+    let cap = 4usize;
+    let mut batches: Vec<Vec<Edge>> = Vec::new();
+    let mut uniq = 0u32;
+    for _ in 0..6 {
+        let mut batch = Vec::new();
+        for _ in 0..3000 {
+            let u = rng.below(n) as u32;
+            let mut v = rng.below(n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            uniq += 1;
+            batch.push(Edge::new(u, v, uniq as f32 * 1e-6));
+        }
+        batches.push(batch);
+    }
+
+    let mut sharded = Accumulator::with_workers(n, cap, 8);
+    sharded.add_wave(batches.clone());
+    let g_sharded = sharded.finalize();
+
+    let mut serial = Accumulator::with_workers(n, cap, 1);
+    for b in batches.clone() {
+        serial.add(b);
+    }
+    let g_serial = serial.finalize();
+
+    assert_eq!(g_sharded.edges(), g_serial.edges(), "sharded != serial");
+
+    let want = reference_graph(n, cap, &batches);
+    let got: Vec<(u32, u32)> = g_sharded.edges().iter().map(|e| (e.u, e.v)).collect();
+    assert_eq!(got.len(), want.len(), "edge count vs reference");
+    assert_eq!(got, want, "edge set vs naive top-cap reference");
+}

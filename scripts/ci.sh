@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 (build + tests) plus formatting and lint gates.
+#
+#   scripts/ci.sh          # tier-1 + fmt + clippy
+#   scripts/ci.sh --bench  # also regenerate BENCH_scoring.json (slow)
+#
+# The perf trajectory is tracked via BENCH_scoring.json at the repo root,
+# emitted by `cargo bench --bench microbench` (see EXPERIMENTS.md §Perf).
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "==> cargo bench --bench microbench (writes ../BENCH_scoring.json)"
+    cargo bench --bench microbench
+fi
+
+echo "CI OK"
