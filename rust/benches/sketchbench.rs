@@ -1,0 +1,236 @@
+//! Sketch-phase and sort-phase microbenchmarks — the perf harness for the
+//! data-parallel sketching subsystem (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench sketchbench`
+//!
+//! Besides the human-readable table, the run emits machine-readable
+//! `BENCH_sketch.json` at the repo root (override with `STARS_BENCH_OUT`)
+//! so the sketch/sort perf trajectory is tracked across PRs alongside
+//! `BENCH_scoring.json`:
+//!
+//! * scalar per-row vs tiled vs tiled+pool SimHash sketching at
+//!   d ∈ {16, 100, 784}, M=16 (the acceptance dimension is d=100/M=16);
+//! * per-point (seed default path) vs per-token-cached WeightedMinHash;
+//! * comparison sort vs LSD radix argsort on packed sort keys;
+//! * end-to-end SortingLSH+Stars build wall time.
+
+use stars::bench::{fmt_count, fmt_secs, time_runs, Table};
+use stars::data::synth;
+use stars::lsh::{sketch, LshFamily, SimHash, WeightedMinHash};
+use stars::sim::CosineSim;
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+use stars::util::json::Json;
+use stars::util::pool;
+use stars::util::radix;
+use std::path::PathBuf;
+
+/// Pre-change reference for the e2e SortingLSH build below: the PR-1
+/// revision (scalar per-row sketching, comparison sort, rep-only
+/// parallelism). The committed value is a reference-box projection — no
+/// toolchain was available to measure it (see EXPERIMENTS.md header);
+/// override via `STARS_BASELINE_SORTING_E2E_S` when re-baselining on
+/// measured hardware.
+const BASELINE_SORTING_E2E_S: f64 = 4.31;
+
+/// Where to write the machine-readable report: `STARS_BENCH_OUT`, else the
+/// repo root (benches run with CWD = rust/, so the root is one level up).
+fn bench_out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("STARS_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        PathBuf::from("../BENCH_sketch.json")
+    } else {
+        PathBuf::from("BENCH_sketch.json")
+    }
+}
+
+/// Scalar per-row vs tiled vs tiled+pool SimHash sketching.
+fn bench_simhash(table: &mut Table) -> Json {
+    let mut rows = Vec::new();
+    let workers = pool::default_workers();
+    for &d in &[16usize, 100, 784] {
+        let n = if d >= 784 { 20_000 } else { 100_000 };
+        let ds = synth::gaussian_mixture(n, d, 50, 0.1, 42);
+        let h = SimHash::new(d, 16, 7);
+        let planes = h.hyperplanes(0);
+        // Scalar reference: the seed bucket_keys loop — per-rep planes, one
+        // sketch_row call per point.
+        let scalar = time_runs(1, 7, || {
+            let keys: Vec<u64> = (0..ds.len()).map(|i| h.sketch_row(ds.row(i), &planes)).collect();
+            std::hint::black_box(keys);
+        });
+        let tiled = time_runs(1, 7, || {
+            std::hint::black_box(h.bucket_keys(&ds, 0));
+        });
+        let tiled_par = time_runs(1, 7, || {
+            std::hint::black_box(sketch::bucket_keys_par(&h, &ds, 0, workers));
+        });
+        let (s_med, t_med, p_med) = (scalar.median(), tiled.median(), tiled_par.median());
+        for (name, med) in [
+            ("scalar", s_med),
+            ("tiled", t_med),
+            ("tiled+pool", p_med),
+        ] {
+            table.row(vec![
+                format!("simhash {name} (d={d}, M=16)"),
+                fmt_count(n as u64),
+                fmt_secs(med),
+                format!("{}/s", fmt_count((n as f64 / med) as u64)),
+            ]);
+        }
+        rows.push(Json::obj(vec![
+            ("d", Json::from(d)),
+            ("m", Json::from(16usize)),
+            ("points", Json::from(n)),
+            ("scalar_median_s", Json::from(s_med)),
+            ("tiled_median_s", Json::from(t_med)),
+            ("tiled_pool_median_s", Json::from(p_med)),
+            ("scalar_points_per_s", Json::from(n as f64 / s_med)),
+            ("tiled_points_per_s", Json::from(n as f64 / t_med)),
+            ("tiled_pool_points_per_s", Json::from(n as f64 / p_med)),
+            ("tiled_speedup", Json::from(s_med / t_med)),
+            ("tiled_pool_speedup", Json::from(s_med / p_med)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+/// Seed default path (per-point `bucket_key`) vs per-token-cached state.
+fn bench_wminhash(table: &mut Table) -> Json {
+    let sets = synth::zipf_sets(20_000, &synth::ZipfSetsParams::default(), 3);
+    let h = WeightedMinHash::new(3, 9);
+    let per_point = time_runs(1, 5, || {
+        let keys: Vec<u64> = (0..sets.len()).map(|i| h.bucket_key(&sets, i, 0)).collect();
+        std::hint::black_box(keys);
+    });
+    let cached = time_runs(1, 5, || {
+        std::hint::black_box(h.bucket_keys(&sets, 0));
+    });
+    let (p_med, c_med) = (per_point.median(), cached.median());
+    for (name, med) in [("per-point", p_med), ("token-cached", c_med)] {
+        table.row(vec![
+            format!("wminhash {name} (M=3)"),
+            fmt_count(sets.len() as u64),
+            fmt_secs(med),
+            format!("{}/s", fmt_count((sets.len() as f64 / med) as u64)),
+        ]);
+    }
+    Json::obj(vec![
+        ("points", Json::from(sets.len())),
+        ("perms", Json::from(3usize)),
+        ("per_point_median_s", Json::from(p_med)),
+        ("cached_median_s", Json::from(c_med)),
+        ("speedup", Json::from(p_med / c_med)),
+    ])
+}
+
+/// Comparison sort vs LSD radix argsort on packed sort keys (M=30: four
+/// live bytes, so half the radix passes are skipped).
+fn bench_sort(table: &mut Table) -> Json {
+    let ds = synth::gaussian_mixture(1_000_000, 16, 100, 0.1, 42);
+    let h = SimHash::new(16, 30, 7);
+    let keys = h.packed_sort_keys(&ds, 0).unwrap();
+    let comparison = time_runs(1, 7, || {
+        let mut order: Vec<u32> = (0..keys.len() as u32).collect();
+        order.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        std::hint::black_box(order);
+    });
+    let radix_stats = time_runs(1, 7, || {
+        std::hint::black_box(radix::argsort_u64(&keys));
+    });
+    let (c_med, r_med) = (comparison.median(), radix_stats.median());
+    for (name, med) in [("comparison", c_med), ("radix", r_med)] {
+        table.row(vec![
+            format!("argsort {name} (M=30 keys)"),
+            fmt_count(keys.len() as u64),
+            fmt_secs(med),
+            format!("{}/s", fmt_count((keys.len() as f64 / med) as u64)),
+        ]);
+    }
+    Json::obj(vec![
+        ("keys", Json::from(keys.len())),
+        ("comparison_median_s", Json::from(c_med)),
+        ("radix_median_s", Json::from(r_med)),
+        ("speedup", Json::from(c_med / r_med)),
+    ])
+}
+
+/// End-to-end SortingLSH+Stars build: the pipeline where all four layers
+/// (state cache, tiled kernel, in-rep parallelism, radix sort) are live.
+fn bench_e2e_sorting(table: &mut Table) -> Json {
+    let ds = synth::gaussian_mixture(50_000, 100, 100, 0.1, 42);
+    let family = SimHash::new(100, 30, 7);
+    let mut edges = 0usize;
+    let stats = time_runs(1, 3, || {
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                BuildParams::knn_mode(Algorithm::SortingLshStars)
+                    .sketches(8)
+                    .leaders(10)
+                    .window(250)
+                    .degree_cap(50),
+            )
+            .build();
+        edges = std::hint::black_box(out.graph.num_edges());
+    });
+    let baseline = std::env::var("STARS_BASELINE_SORTING_E2E_S")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(BASELINE_SORTING_E2E_S);
+    table.row(vec![
+        "e2e build sortinglsh+stars (n=50k,d=100,R=8)".into(),
+        fmt_count(ds.len() as u64),
+        fmt_secs(stats.median()),
+        format!("baseline {}", fmt_secs(baseline)),
+    ]);
+    Json::obj(vec![
+        ("dataset", Json::from("gaussian_mixture(50000, 100, 100, 0.1, 42)")),
+        ("algorithm", Json::from("sortinglsh+stars")),
+        ("sketches", Json::from(8usize)),
+        ("leaders", Json::from(10usize)),
+        ("window", Json::from(250usize)),
+        ("wall_median_s", Json::from(stats.median())),
+        ("wall_min_s", Json::from(stats.min())),
+        ("edges", Json::from(edges)),
+        (
+            "baseline",
+            Json::obj(vec![
+                ("wall_median_s", Json::from(baseline)),
+                (
+                    "note",
+                    Json::from(
+                        "PR-1 revision: per-row scalar sketching, comparison sort, \
+                         rep-only parallelism",
+                    ),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn main() {
+    let mut table = Table::new(&["primitive", "n", "median", "throughput"]);
+    let simhash = bench_simhash(&mut table);
+    let wminhash = bench_wminhash(&mut table);
+    let sort = bench_sort(&mut table);
+    let e2e = bench_e2e_sorting(&mut table);
+    table.print();
+
+    let doc = Json::obj(vec![
+        ("schema", Json::from("stars-bench-sketch/v1")),
+        ("bench", Json::from("sketchbench")),
+        ("workers", Json::from(pool::default_workers())),
+        ("simhash_sketching", simhash),
+        ("wminhash_sketching", wminhash),
+        ("packed_key_sort", sort),
+        ("e2e_sorting_build", e2e),
+    ]);
+    let path = bench_out_path();
+    match std::fs::write(&path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}

@@ -1,7 +1,41 @@
-//! The [`LshFamily`] trait.
+//! The [`LshFamily`] trait and its per-repetition [`SketchState`].
+//!
+//! The sketch phase evaluates every point under every repetition — R·n
+//! evaluations per build. The seed trait made `symbols(point)` the primitive,
+//! so each family re-derived its repetition constants (SimHash's `bits × dim`
+//! Gaussian hyperplane matrix, CWS's per-token Gamma draws) *per point*:
+//! O(n·M·d) redundant RNG work. The trait is now built around
+//! [`LshFamily::prepare`]: one call per repetition captures everything that
+//! depends only on `(family, rep)` — and, for set families, per-token tables
+//! over the dataset — into a [`SketchState`], and all batch evaluation runs
+//! through the state over point *ranges*. Ranges are what makes the sketch
+//! phase data-parallel: `lsh::sketch` chunks `0..n` over the worker pool and
+//! each chunk fills its disjoint output slice against the shared state.
 
 use crate::data::types::Dataset;
 use crate::util::fxhash;
+
+/// Cached per-repetition evaluation state produced by [`LshFamily::prepare`].
+///
+/// All methods evaluate a contiguous point range `lo..lo + count` where
+/// `count` is implied by the output slice length; the drivers in
+/// [`crate::lsh::sketch`] call them from multiple pool threads at once, so
+/// implementations must be immutable after `prepare` (hence `Sync`).
+pub trait SketchState: Sync {
+    /// Bucket keys of points `lo..lo + out.len()` into `out`.
+    fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]);
+
+    /// Symbol rows (row-major, `sketch_len` symbols per point) of points
+    /// `lo..lo + out.len() / sketch_len` into `out`.
+    fn symbols_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]);
+
+    /// Packed sort keys of points `lo..lo + out.len()` into `out`. Only
+    /// called when the owning family reports
+    /// [`LshFamily::supports_packed_sort`].
+    fn packed_sort_keys_into(&self, _ds: &Dataset, _lo: usize, _out: &mut [u64]) {
+        unreachable!("family does not support packed sort keys");
+    }
+}
 
 /// A locality sensitive hash family over a dataset.
 ///
@@ -16,9 +50,29 @@ pub trait LshFamily: Sync {
     /// "sketching dimension").
     fn sketch_len(&self) -> usize;
 
+    /// Capture the repetition's cached evaluation state: hyperplane
+    /// matrices, per-symbol component choices, per-token hash tables —
+    /// whatever would otherwise be re-derived per point. Called once per
+    /// (rep, job stage); everything downstream evaluates through the state.
+    fn prepare<'a>(&'a self, ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a>;
+
+    /// True if [`SketchState::packed_sort_keys_into`] is implemented: one
+    /// u64 per point whose integer order equals the lexicographic order of
+    /// the point's symbol sequence (families with ≤64 binary symbols pack
+    /// sign bits MSB-first). This lets SortingLSH radix-sort plain u64 keys
+    /// instead of comparing symbol rows.
+    fn supports_packed_sort(&self) -> bool {
+        false
+    }
+
     /// Write the M base-hash symbols of point `i` under repetition `rep`
-    /// into `out` (length `sketch_len()`).
-    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]);
+    /// into `out` (length `sketch_len()`). Single-point convenience: the
+    /// default prepares a fresh state per call, so looping it over points
+    /// re-derives the repetition constants — batch paths must use
+    /// [`LshFamily::prepare`] (or the plural methods below) instead.
+    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
+        self.prepare(ds, rep).symbols_into(ds, i, out);
+    }
 
     /// Bucket key of point `i` under repetition `rep`: the combined hash of
     /// all M symbols. Two points share a bucket iff all symbols agree (up to
@@ -29,31 +83,38 @@ pub trait LshFamily: Sync {
         combine_symbols(&buf)
     }
 
-    /// Bucket keys for all points under repetition `rep`. Implementations
-    /// override this when batch evaluation is cheaper (e.g. SimHash reuses
-    /// the hyperplane matrix across points).
+    /// Bucket keys for all points under repetition `rep` — one `prepare`,
+    /// then a single state pass. See [`crate::lsh::sketch::bucket_keys_par`]
+    /// for the pool-parallel variant.
     fn bucket_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
-        (0..ds.len()).map(|i| self.bucket_key(ds, i, rep)).collect()
+        let mut out = vec![0u64; ds.len()];
+        if !out.is_empty() {
+            self.prepare(ds, rep).bucket_keys_into(ds, 0, &mut out);
+        }
+        out
     }
 
     /// Symbol matrix for all points (n × M, row-major) under repetition
     /// `rep`. Used by SortingLSH, which sorts rows lexicographically.
     fn symbol_matrix(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
-        let m = self.sketch_len();
-        let mut out = vec![0u64; ds.len() * m];
-        for i in 0..ds.len() {
-            self.symbols(ds, i, rep, &mut out[i * m..(i + 1) * m]);
+        let mut out = vec![0u64; ds.len() * self.sketch_len()];
+        if !out.is_empty() {
+            self.prepare(ds, rep).symbols_into(ds, 0, &mut out);
         }
         out
     }
 
-    /// Optional fast path for SortingLSH: one u64 per point whose integer
-    /// order equals the lexicographic order of the point's symbol sequence
-    /// (families with ≤64 binary symbols pack sign bits MSB-first).
-    /// Returning `Some` lets [`crate::lsh::sorting::sorted_indices`] sort
-    /// plain u64 keys instead of comparing symbol rows.
-    fn packed_sort_keys(&self, _ds: &Dataset, _rep: u64) -> Option<Vec<u64>> {
-        None
+    /// Packed sort keys for all points, or `None` for families without the
+    /// packed fast path (see [`LshFamily::supports_packed_sort`]).
+    fn packed_sort_keys(&self, ds: &Dataset, rep: u64) -> Option<Vec<u64>> {
+        if !self.supports_packed_sort() {
+            return None;
+        }
+        let mut out = vec![0u64; ds.len()];
+        if !out.is_empty() {
+            self.prepare(ds, rep).packed_sort_keys_into(ds, 0, &mut out);
+        }
+        Some(out)
     }
 }
 

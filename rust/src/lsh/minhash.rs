@@ -3,7 +3,7 @@
 //! `Pr[h(A) = h(B)] = |A∩B| / |A∪B|` exactly, per base hash.
 
 use crate::data::types::Dataset;
-use crate::lsh::family::LshFamily;
+use crate::lsh::family::{combine_symbols, LshFamily, SketchState};
 use crate::util::fxhash;
 use crate::util::rng::SplitMix64;
 
@@ -45,6 +45,38 @@ impl MinHash {
     }
 }
 
+/// Per-repetition MinHash state. The permutations are stateless mixes of
+/// `(token, rep, t)`, so there is nothing to cache — the state's value is
+/// the range-batched evaluation (one symbol buffer reused across a whole
+/// chunk instead of a per-point allocation in the generic path).
+struct MinHashState<'a> {
+    h: &'a MinHash,
+    rep: u64,
+}
+
+impl SketchState for MinHashState<'_> {
+    fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let mut buf = vec![0u64; self.h.perms];
+        for (k, key) in out.iter_mut().enumerate() {
+            let tokens = &ds.set(lo + k).tokens;
+            for (t, b) in buf.iter_mut().enumerate() {
+                *b = self.h.symbol_of_set(tokens, self.rep, t);
+            }
+            *key = combine_symbols(&buf);
+        }
+    }
+
+    fn symbols_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let m = self.h.perms;
+        for (k, row) in out.chunks_mut(m).enumerate() {
+            let tokens = &ds.set(lo + k).tokens;
+            for (t, o) in row.iter_mut().enumerate() {
+                *o = self.h.symbol_of_set(tokens, self.rep, t);
+            }
+        }
+    }
+}
+
 impl LshFamily for MinHash {
     fn name(&self) -> &'static str {
         "minhash"
@@ -52,6 +84,10 @@ impl LshFamily for MinHash {
 
     fn sketch_len(&self) -> usize {
         self.perms
+    }
+
+    fn prepare<'a>(&'a self, _ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a> {
+        Box::new(MinHashState { h: self, rep })
     }
 
     fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {

@@ -4,9 +4,15 @@
 //! (over the embedding) or MinHash (over the co-purchase set), chosen by a
 //! per-(rep, symbol) coin. As the paper notes, this satisfies Definition 2.1
 //! for the mixture similarity α·cosine + (1−α)·jaccard.
+//!
+//! [`MixtureHash::prepare`] draws the per-symbol coins once and nests the
+//! SimHash component's own cached state, so every batch evaluation runs the
+//! tiled hyperplane kernel per chunk instead of regenerating the `bits × dim`
+//! matrix per point (the seed `symbols`/`symbol_matrix` path's O(n·M·d)
+//! redundant RNG work).
 
 use crate::data::types::Dataset;
-use crate::lsh::family::LshFamily;
+use crate::lsh::family::{combine_symbols, LshFamily, SketchState};
 use crate::lsh::{MinHash, SimHash};
 use crate::util::rng::{derive_seed, SplitMix64};
 
@@ -46,6 +52,58 @@ impl MixtureHash {
     }
 }
 
+/// Per-repetition mixture state: the nested SimHash state (cached planes)
+/// plus the per-symbol component coins.
+struct MixtureState<'a> {
+    h: &'a MixtureHash,
+    sim_state: Box<dyn SketchState + 'a>,
+    choice: Vec<bool>,
+    rep: u64,
+}
+
+impl MixtureState<'_> {
+    /// SimHash keys of the chunk via the nested state's tiled kernel.
+    fn sim_bits(&self, ds: &Dataset, lo: usize, count: usize) -> Vec<u64> {
+        let mut bits = vec![0u64; count];
+        self.sim_state.bucket_keys_into(ds, lo, &mut bits);
+        bits
+    }
+
+    #[inline]
+    fn symbol(&self, bits: u64, tokens: &[u32], t: usize) -> u64 {
+        if self.choice[t] {
+            (bits >> (t % 64)) & 1
+        } else {
+            self.h.minhash.symbol_of_set(tokens, self.rep, t)
+        }
+    }
+}
+
+impl SketchState for MixtureState<'_> {
+    fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let bits = self.sim_bits(ds, lo, out.len());
+        let mut buf = vec![0u64; self.h.sketch_len];
+        for (k, key) in out.iter_mut().enumerate() {
+            let tokens = &ds.set(lo + k).tokens;
+            for (t, b) in buf.iter_mut().enumerate() {
+                *b = self.symbol(bits[k], tokens, t);
+            }
+            *key = combine_symbols(&buf);
+        }
+    }
+
+    fn symbols_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let m = self.h.sketch_len;
+        let bits = self.sim_bits(ds, lo, out.len() / m);
+        for (k, row) in out.chunks_mut(m).enumerate() {
+            let tokens = &ds.set(lo + k).tokens;
+            for (t, o) in row.iter_mut().enumerate() {
+                *o = self.symbol(bits[k], tokens, t);
+            }
+        }
+    }
+}
+
 impl LshFamily for MixtureHash {
     fn name(&self) -> &'static str {
         "mixture-hash"
@@ -55,41 +113,15 @@ impl LshFamily for MixtureHash {
         self.sketch_len
     }
 
-    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
-        // Evaluate the SimHash bits once (they are packed in one pass).
-        let planes = self.simhash.hyperplanes(rep);
-        let bits = self.simhash.sketch_row(ds.row(i), &planes);
-        let tokens = &ds.set(i).tokens;
-        for (t, o) in out.iter_mut().enumerate() {
-            *o = if self.uses_simhash(rep, t) {
-                (bits >> (t % 64)) & 1
-            } else {
-                self.minhash.symbol_of_set(tokens, rep, t)
-            };
-        }
-    }
-
-    fn bucket_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
-        // Precompute which symbols are simhash for this rep, and the planes.
-        let planes = self.simhash.hyperplanes(rep);
-        let choice: Vec<bool> = (0..self.sketch_len)
-            .map(|t| self.uses_simhash(rep, t))
-            .collect();
-        let mut buf = vec![0u64; self.sketch_len];
-        (0..ds.len())
-            .map(|i| {
-                let bits = self.simhash.sketch_row(ds.row(i), &planes);
-                let tokens = &ds.set(i).tokens;
-                for (t, b) in buf.iter_mut().enumerate() {
-                    *b = if choice[t] {
-                        (bits >> (t % 64)) & 1
-                    } else {
-                        self.minhash.symbol_of_set(tokens, rep, t)
-                    };
-                }
-                super::family::combine_symbols(&buf)
-            })
-            .collect()
+    fn prepare<'a>(&'a self, ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a> {
+        Box::new(MixtureState {
+            h: self,
+            sim_state: self.simhash.prepare(ds, rep),
+            choice: (0..self.sketch_len)
+                .map(|t| self.uses_simhash(rep, t))
+                .collect(),
+            rep,
+        })
     }
 }
 
@@ -113,6 +145,20 @@ mod tests {
         let batch = h.bucket_keys(&ds, 5);
         for i in 0..ds.len() {
             assert_eq!(batch[i], h.bucket_key(&ds, i, 5), "point {i}");
+        }
+    }
+
+    #[test]
+    fn symbol_matrix_matches_per_point_symbols() {
+        // The seed symbol_matrix path regenerated hyperplanes per point; the
+        // cached state must produce the same symbols.
+        let ds = synth::products(40, &synth::ProductsParams::default(), 7);
+        let h = MixtureHash::new(ds.dim(), 10, 2);
+        let mat = h.symbol_matrix(&ds, 3);
+        let mut buf = vec![0u64; 10];
+        for i in 0..ds.len() {
+            h.symbols(&ds, i, 3, &mut buf);
+            assert_eq!(&mat[i * 10..(i + 1) * 10], &buf[..], "point {i}");
         }
     }
 

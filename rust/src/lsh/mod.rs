@@ -5,6 +5,11 @@
 //! **symbol sequence** per point (the M base hashes kept separate so points
 //! can be sorted lexicographically — SortingLSH, Stars 2).
 //!
+//! Evaluation is two-phase: [`LshFamily::prepare`] captures everything a
+//! repetition can cache (hyperplane matrices, component coins, per-token CWS
+//! tables) into a [`SketchState`], and the [`sketch`] drivers batch-evaluate
+//! point ranges against it — serially or chunked over the worker pool.
+//!
 //! Families implemented (matching the paper's Appendix D.2 setups):
 //! * [`SimHash`] — random hyperplanes, for cosine/angular similarity.
 //! * [`MinHash`] — for (unweighted) Jaccard.
@@ -18,11 +23,14 @@ mod simhash;
 mod minhash;
 mod weighted_minhash;
 mod mixture;
+pub mod sketch;
 pub mod sorting;
 
-pub use family::LshFamily;
+pub use family::{combine_symbols, LshFamily, SketchState};
 pub use minhash::MinHash;
 pub use mixture::MixtureHash;
 pub use simhash::SimHash;
-pub use sorting::{sorted_indices, sorted_order, windows, SortedOrder};
+pub use sorting::{
+    sorted_indices, sorted_indices_par, sorted_order, sorted_order_par, windows, SortedOrder,
+};
 pub use weighted_minhash::WeightedMinHash;

@@ -2,9 +2,15 @@
 //!
 //! `Pr[h(x) = h(y)] = 1 − θ(x,y)/π` per bit. The paper uses sketching
 //! dimension M=12 (MNIST), M=16 (Random1B/10B), and M=30 for SortingLSH.
+//!
+//! The hyperplane matrix depends only on `(seed, rep)`, so it is generated
+//! once per repetition into [`SimHash::prepare`]'s state and every batch
+//! evaluation runs the tiled multi-plane kernel
+//! ([`crate::lsh::sketch::sketch_tile`]) over contiguous row blocks.
 
 use crate::data::types::Dataset;
-use crate::lsh::family::LshFamily;
+use crate::lsh::family::{LshFamily, SketchState};
+use crate::lsh::sketch::{sketch_row_scalar, sketch_tile};
 use crate::util::rng::{derive_seed, Rng};
 
 /// Random-hyperplane family over dense features.
@@ -24,6 +30,16 @@ impl SimHash {
         SimHash { dim, bits, seed }
     }
 
+    /// Hyperplanes per sketch (the packed key width).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Dense feature dimension the family was built for.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
     /// Generate the hyperplane matrix for a repetition: `bits × dim`,
     /// row-major. Deterministic in (seed, rep).
     pub fn hyperplanes(&self, rep: u64) -> Vec<f32> {
@@ -40,72 +56,49 @@ impl SimHash {
         out
     }
 
-    /// Packed sign bits of one row against a precomputed hyperplane matrix.
-    ///
-    /// Perf: processes hyperplanes in pairs with 4-way unrolled
-    /// multiply-accumulate lanes so the autovectorizer emits wide FMAs and
-    /// the row stays hot in L1 across both planes (see EXPERIMENTS.md §Perf).
+    /// Packed sign bits of one row against a precomputed hyperplane matrix
+    /// (delegates to the shared scalar kernel — the reduction-order
+    /// reference the tiled kernel is parity-tested against).
     #[inline]
     pub fn sketch_row(&self, row: &[f32], planes: &[f32]) -> u64 {
-        debug_assert_eq!(row.len(), self.dim);
-        let d = self.dim;
-        let mut key = 0u64;
-        let mut m = 0;
-        while m + 2 <= self.bits {
-            let p0 = &planes[m * d..(m + 1) * d];
-            let p1 = &planes[(m + 1) * d..(m + 2) * d];
-            let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-            let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
-            let chunks = d / 4;
-            for c in 0..chunks {
-                let k = c * 4;
-                a0 += row[k] * p0[k];
-                a1 += row[k + 1] * p0[k + 1];
-                a2 += row[k + 2] * p0[k + 2];
-                a3 += row[k + 3] * p0[k + 3];
-                b0 += row[k] * p1[k];
-                b1 += row[k + 1] * p1[k + 1];
-                b2 += row[k + 2] * p1[k + 2];
-                b3 += row[k + 3] * p1[k + 3];
-            }
-            let (mut da, mut db) = (a0 + a1 + a2 + a3, b0 + b1 + b2 + b3);
-            for k in chunks * 4..d {
-                da += row[k] * p0[k];
-                db += row[k] * p1[k];
-            }
-            if da >= 0.0 {
-                key |= 1 << m;
-            }
-            if db >= 0.0 {
-                key |= 1 << (m + 1);
-            }
-            m += 2;
-        }
-        if m < self.bits {
-            let plane = &planes[m * d..(m + 1) * d];
-            let mut dot = 0f32;
-            for k in 0..d {
-                dot += row[k] * plane[k];
-            }
-            if dot >= 0.0 {
-                key |= 1 << m;
-            }
-        }
-        key
+        sketch_row_scalar(planes, self.bits, self.dim, row)
+    }
+}
+
+/// Per-repetition SimHash state: the cached hyperplane matrix.
+struct SimHashState<'a> {
+    h: &'a SimHash,
+    planes: Vec<f32>,
+}
+
+impl SketchState for SimHashState<'_> {
+    fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let d = self.h.dim;
+        debug_assert_eq!(ds.dim(), d);
+        let rows = &ds.dense[lo * d..(lo + out.len()) * d];
+        sketch_tile(&self.planes, self.h.bits, d, rows, out.len(), out);
     }
 
-    /// Packed sort keys for SortingLSH: the M sign bits stored MSB-first so
-    /// integer order == lexicographic symbol order. Fast path used by
-    /// [`crate::lsh::sorting::sorted_indices`].
-    pub fn packed_sort_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
-        let planes = self.hyperplanes(rep);
-        (0..ds.len())
-            .map(|i| {
-                let key = self.sketch_row(ds.row(i), &planes);
-                // bit t of key is symbol t; move symbol 0 to the MSB.
-                key.reverse_bits() >> (64 - self.bits)
-            })
-            .collect()
+    fn symbols_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let m = self.h.bits;
+        let count = out.len() / m;
+        debug_assert_eq!(out.len(), count * m);
+        let mut keys = vec![0u64; count];
+        self.bucket_keys_into(ds, lo, &mut keys);
+        for (row, &key) in out.chunks_mut(m).zip(keys.iter()) {
+            for (t, o) in row.iter_mut().enumerate() {
+                *o = (key >> t) & 1;
+            }
+        }
+    }
+
+    fn packed_sort_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        self.bucket_keys_into(ds, lo, out);
+        // Bit t of a key is symbol t; move symbol 0 to the MSB so integer
+        // order equals lexicographic symbol order.
+        for k in out.iter_mut() {
+            *k = k.reverse_bits() >> (64 - self.h.bits);
+        }
     }
 }
 
@@ -118,36 +111,15 @@ impl LshFamily for SimHash {
         self.bits
     }
 
-    fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
-        let planes = self.hyperplanes(rep);
-        let key = self.sketch_row(ds.row(i), &planes);
-        for (m, o) in out.iter_mut().enumerate() {
-            *o = (key >> m) & 1;
-        }
+    fn prepare<'a>(&'a self, _ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a> {
+        Box::new(SimHashState {
+            h: self,
+            planes: self.hyperplanes(rep),
+        })
     }
 
-    fn bucket_keys(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
-        let planes = self.hyperplanes(rep);
-        (0..ds.len())
-            .map(|i| self.sketch_row(ds.row(i), &planes))
-            .collect()
-    }
-
-    fn symbol_matrix(&self, ds: &Dataset, rep: u64) -> Vec<u64> {
-        let planes = self.hyperplanes(rep);
-        let m = self.bits;
-        let mut out = vec![0u64; ds.len() * m];
-        for i in 0..ds.len() {
-            let key = self.sketch_row(ds.row(i), &planes);
-            for t in 0..m {
-                out[i * m + t] = (key >> t) & 1;
-            }
-        }
-        out
-    }
-
-    fn packed_sort_keys(&self, ds: &Dataset, rep: u64) -> Option<Vec<u64>> {
-        Some(SimHash::packed_sort_keys(self, ds, rep))
+    fn supports_packed_sort(&self) -> bool {
+        true
     }
 }
 
@@ -239,6 +211,17 @@ mod tests {
             for t in 0..10 {
                 assert_eq!(mat[i * 10 + t], (keys[i] >> t) & 1);
             }
+        }
+    }
+
+    #[test]
+    fn packed_sort_keys_reverse_key_bits() {
+        let ds = synth::gaussian_mixture(23, 8, 2, 0.2, 8);
+        let h = SimHash::new(8, 10, 6);
+        let keys = h.bucket_keys(&ds, 1);
+        let packed = h.packed_sort_keys(&ds, 1).unwrap();
+        for i in 0..ds.len() {
+            assert_eq!(packed[i], keys[i].reverse_bits() >> (64 - 10));
         }
     }
 }

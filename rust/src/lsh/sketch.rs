@@ -1,0 +1,321 @@
+//! Data-parallel sketch-phase drivers and the tiled multi-plane kernel.
+//!
+//! After the tiled batch-scoring pass (`sim/batch.rs`), the sketch-and-sort
+//! phase became the dominant cost of a build ("TeraSort" in the production
+//! system). This module is its counterpart:
+//!
+//! * [`sketch_tile`] — the dense hot kernel. Instead of [`sketch_row_scalar`]'s
+//!   one-row × 2-plane loop, it scores a 4-row block against plane pairs as a
+//!   cache-blocked mini-GEMM: one plane-element load feeds four FMA chains
+//!   ([`sketch_block4`]), so the kernel runs ~2× fewer loads per FMA. Per
+//!   (row, plane) dot the lane count, lane-sum order and scalar tail are kept
+//!   identical to `sketch_row_scalar`, so tiled and scalar packed keys are
+//!   **bit-identical** (asserted by `tests/sketch_parity.rs`).
+//! * [`bucket_keys_par`] / [`symbol_matrix_par`] / [`packed_sort_keys_par`]
+//!   (and [`crate::lsh::sorting::sorted_indices_par`] on top of them) — the
+//!   data-parallel drivers. One
+//!   [`LshFamily::prepare`] captures the repetition state, then point ranges
+//!   are chunked over the pool with [`pool::parallel_fill`] and each chunk
+//!   fills its disjoint output slice. This is what keeps cores busy when the
+//!   builder has fewer live repetitions than workers (small R, wave tails).
+
+use crate::data::types::Dataset;
+use crate::lsh::family::LshFamily;
+use crate::util::pool;
+
+/// Minimum points a worker chunk must cover before the drivers spin up
+/// threads — below this the spawn/join overhead beats the sketch work.
+const PAR_MIN_CHUNK: usize = 1024;
+
+/// Chunk length (in points) for `n` points over at most `workers` chunks,
+/// or `n` when the range is too small to be worth splitting.
+fn chunk_points(n: usize, workers: usize) -> usize {
+    let w = workers.max(1).min(n.div_ceil(PAR_MIN_CHUNK).max(1));
+    n.div_ceil(w).max(1)
+}
+
+/// Bucket keys of all points under `rep`, chunked over `workers` threads.
+pub fn bucket_keys_par<F: LshFamily + ?Sized>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+) -> Vec<u64> {
+    let n = ds.len();
+    let mut out = vec![0u64; n];
+    if n == 0 {
+        return out;
+    }
+    let state = family.prepare(ds, rep);
+    pool::parallel_fill(&mut out, chunk_points(n, workers), |lo, slice| {
+        state.bucket_keys_into(ds, lo, slice)
+    });
+    out
+}
+
+/// Symbol matrix (n × M, row-major) under `rep`, chunked over `workers`.
+pub fn symbol_matrix_par<F: LshFamily + ?Sized>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+) -> Vec<u64> {
+    let n = ds.len();
+    let m = family.sketch_len();
+    let mut out = vec![0u64; n * m];
+    if out.is_empty() {
+        return out;
+    }
+    let state = family.prepare(ds, rep);
+    // Chunk boundaries must land on row boundaries: chunk in points, scale
+    // to elements, and recover the first point from the element offset.
+    pool::parallel_fill(&mut out, chunk_points(n, workers) * m, |off, slice| {
+        state.symbols_into(ds, off / m, slice)
+    });
+    out
+}
+
+/// Packed sort keys under `rep`, chunked over `workers`; `None` when the
+/// family has no packed fast path.
+pub fn packed_sort_keys_par<F: LshFamily + ?Sized>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+) -> Option<Vec<u64>> {
+    if !family.supports_packed_sort() {
+        return None;
+    }
+    let n = ds.len();
+    let mut out = vec![0u64; n];
+    if n == 0 {
+        return Some(out);
+    }
+    let state = family.prepare(ds, rep);
+    pool::parallel_fill(&mut out, chunk_points(n, workers), |lo, slice| {
+        state.packed_sort_keys_into(ds, lo, slice)
+    });
+    Some(out)
+}
+
+/// Packed sign bits of one row against a precomputed hyperplane matrix
+/// (`bits × d`, row-major): bit `m` of the result is `dot(row, plane_m) ≥ 0`.
+///
+/// Perf: processes hyperplanes in pairs with 4-way unrolled
+/// multiply-accumulate lanes so the autovectorizer emits wide FMAs and the
+/// row stays hot in L1 across both planes (see EXPERIMENTS.md §Perf). This
+/// is the reduction-order reference for [`sketch_tile`] — do not reorder one
+/// without the other, the parity tests assert exact key equality.
+#[inline]
+pub fn sketch_row_scalar(planes: &[f32], bits: usize, d: usize, row: &[f32]) -> u64 {
+    debug_assert_eq!(row.len(), d);
+    let mut key = 0u64;
+    let mut m = 0;
+    while m + 2 <= bits {
+        let p0 = &planes[m * d..(m + 1) * d];
+        let p1 = &planes[(m + 1) * d..(m + 2) * d];
+        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+        let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
+        let chunks = d / 4;
+        for c in 0..chunks {
+            let k = c * 4;
+            a0 += row[k] * p0[k];
+            a1 += row[k + 1] * p0[k + 1];
+            a2 += row[k + 2] * p0[k + 2];
+            a3 += row[k + 3] * p0[k + 3];
+            b0 += row[k] * p1[k];
+            b1 += row[k + 1] * p1[k + 1];
+            b2 += row[k + 2] * p1[k + 2];
+            b3 += row[k + 3] * p1[k + 3];
+        }
+        let (mut da, mut db) = (a0 + a1 + a2 + a3, b0 + b1 + b2 + b3);
+        for k in chunks * 4..d {
+            da += row[k] * p0[k];
+            db += row[k] * p1[k];
+        }
+        if da >= 0.0 {
+            key |= 1 << m;
+        }
+        if db >= 0.0 {
+            key |= 1 << (m + 1);
+        }
+        m += 2;
+    }
+    if m < bits {
+        let plane = &planes[m * d..(m + 1) * d];
+        let mut dot = 0f32;
+        for k in 0..d {
+            dot += row[k] * plane[k];
+        }
+        if dot >= 0.0 {
+            key |= 1 << m;
+        }
+    }
+    key
+}
+
+/// Dots of four rows against a plane pair at once: one plane-element load
+/// feeds four FMA chains per plane. Per (row, plane) the lane structure is
+/// exactly [`sketch_row_scalar`]'s — 4 lanes over `d/4` chunks, lane sum
+/// `((a0+a1)+a2)+a3`, then the scalar tail — so each dot is bit-identical
+/// to the scalar kernel's.
+#[inline]
+fn sketch_block4(
+    p0: &[f32],
+    p1: &[f32],
+    t0: &[f32],
+    t1: &[f32],
+    t2: &[f32],
+    t3: &[f32],
+) -> ([f32; 4], [f32; 4]) {
+    let d = p0.len();
+    debug_assert!(
+        p1.len() == d && t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d
+    );
+    let chunks = d / 4;
+    let mut a = [[0f32; 4]; 4]; // a[row][lane] against p0
+    let mut b = [[0f32; 4]; 4]; // b[row][lane] against p1
+    for c in 0..chunks {
+        let k = c * 4;
+        for l in 0..4 {
+            let (x0, x1) = (p0[k + l], p1[k + l]);
+            a[0][l] += t0[k + l] * x0;
+            b[0][l] += t0[k + l] * x1;
+            a[1][l] += t1[k + l] * x0;
+            b[1][l] += t1[k + l] * x1;
+            a[2][l] += t2[k + l] * x0;
+            b[2][l] += t2[k + l] * x1;
+            a[3][l] += t3[k + l] * x0;
+            b[3][l] += t3[k + l] * x1;
+        }
+    }
+    let mut da = [0f32; 4];
+    let mut db = [0f32; 4];
+    for (row, (aa, bb)) in a.iter().zip(b.iter()).enumerate() {
+        da[row] = aa[0] + aa[1] + aa[2] + aa[3];
+        db[row] = bb[0] + bb[1] + bb[2] + bb[3];
+    }
+    let tails = [t0, t1, t2, t3];
+    for k in chunks * 4..d {
+        let (x0, x1) = (p0[k], p1[k]);
+        for (row, t) in tails.iter().enumerate() {
+            da[row] += t[k] * x0;
+            db[row] += t[k] * x1;
+        }
+    }
+    (da, db)
+}
+
+/// Packed keys of `n` contiguous rows (`rows[r*d..(r+1)*d]` is row r)
+/// against a `bits × d` hyperplane matrix: the tiled multi-plane kernel.
+/// 4-row blocks run through [`sketch_block4`]; tail rows (n % 4) fall back
+/// to [`sketch_row_scalar`], which reduces in the same order, so the output
+/// is bit-identical to a per-row scalar loop.
+pub fn sketch_tile(planes: &[f32], bits: usize, d: usize, rows: &[f32], n: usize, out: &mut [u64]) {
+    debug_assert!(bits >= 1 && bits <= 64);
+    debug_assert!(planes.len() >= bits * d && rows.len() >= n * d && out.len() >= n);
+    let mut r = 0;
+    while r + 4 <= n {
+        let base = r * d;
+        let t0 = &rows[base..base + d];
+        let t1 = &rows[base + d..base + 2 * d];
+        let t2 = &rows[base + 2 * d..base + 3 * d];
+        let t3 = &rows[base + 3 * d..base + 4 * d];
+        let mut keys = [0u64; 4];
+        let mut m = 0;
+        while m + 2 <= bits {
+            let p0 = &planes[m * d..(m + 1) * d];
+            let p1 = &planes[(m + 1) * d..(m + 2) * d];
+            let (da, db) = sketch_block4(p0, p1, t0, t1, t2, t3);
+            for (row, key) in keys.iter_mut().enumerate() {
+                if da[row] >= 0.0 {
+                    *key |= 1 << m;
+                }
+                if db[row] >= 0.0 {
+                    *key |= 1 << (m + 1);
+                }
+            }
+            m += 2;
+        }
+        if m < bits {
+            // Odd final plane: same plain scalar accumulation as the
+            // scalar kernel's tail.
+            let plane = &planes[m * d..(m + 1) * d];
+            for (t, key) in [t0, t1, t2, t3].iter().zip(keys.iter_mut()) {
+                let mut dot = 0f32;
+                for (x, p) in t.iter().zip(plane.iter()) {
+                    dot += x * p;
+                }
+                if dot >= 0.0 {
+                    *key |= 1 << m;
+                }
+            }
+        }
+        out[r..r + 4].copy_from_slice(&keys);
+        r += 4;
+    }
+    while r < n {
+        out[r] = sketch_row_scalar(planes, bits, d, &rows[r * d..(r + 1) * d]);
+        r += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lsh::{MinHash, SimHash};
+
+    #[test]
+    fn tile_matches_scalar_rows_including_tails() {
+        // 11 rows: two 4-blocks plus a 3-row tail; odd and even bit counts.
+        for &(bits, d) in &[(1usize, 5usize), (7, 16), (12, 100), (30, 33), (64, 8)] {
+            let ds = synth::gaussian_mixture(11, d, 3, 0.4, 77);
+            let h = SimHash::new(d, bits, 5);
+            let planes = h.hyperplanes(4);
+            let mut out = vec![0u64; ds.len()];
+            sketch_tile(&planes, bits, d, &ds.dense, ds.len(), &mut out);
+            for i in 0..ds.len() {
+                let want = sketch_row_scalar(&planes, bits, d, ds.row(i));
+                assert_eq!(out[i], want, "bits={bits} d={d} row={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_drivers_match_serial_trait_paths() {
+        let ds = synth::gaussian_mixture(3000, 16, 6, 0.1, 9);
+        let h = SimHash::new(16, 12, 3);
+        for workers in [1usize, 3, 8] {
+            assert_eq!(bucket_keys_par(&h, &ds, 1, workers), h.bucket_keys(&ds, 1));
+            assert_eq!(
+                symbol_matrix_par(&h, &ds, 1, workers),
+                h.symbol_matrix(&ds, 1)
+            );
+            assert_eq!(
+                packed_sort_keys_par(&h, &ds, 1, workers),
+                h.packed_sort_keys(&ds, 1)
+            );
+        }
+    }
+
+    #[test]
+    fn drivers_handle_empty_and_unpacked_families() {
+        let ds = crate::data::Dataset::from_sets("t", Vec::new(), Vec::new());
+        let mh = MinHash::new(3, 1);
+        assert!(bucket_keys_par(&mh, &ds, 0, 4).is_empty());
+        assert!(symbol_matrix_par(&mh, &ds, 0, 4).is_empty());
+        assert_eq!(packed_sort_keys_par(&mh, &ds, 0, 4), None);
+    }
+
+    #[test]
+    fn sorted_indices_par_is_worker_invariant() {
+        use crate::lsh::sorting::sorted_indices_par;
+        let ds = synth::gaussian_mixture(2500, 16, 8, 0.1, 6);
+        let h = SimHash::new(16, 30, 4);
+        let serial = sorted_indices_par(&h, &ds, 2, 1);
+        for workers in [2usize, 5, 16] {
+            assert_eq!(sorted_indices_par(&h, &ds, 2, workers), serial);
+        }
+    }
+}

@@ -8,6 +8,8 @@
 
 use crate::data::types::Dataset;
 use crate::lsh::family::LshFamily;
+use crate::lsh::sketch;
+use crate::util::radix;
 use crate::util::rng::Rng;
 use std::ops::Range;
 
@@ -40,21 +42,43 @@ impl SortedOrder {
 }
 
 /// Just the lexicographic index order (the scoring loop's need). Uses the
-/// family's packed-u64 fast path when available — sorting 64-bit keys is
-/// ~30x cheaper than comparing symbol rows (EXPERIMENTS.md §Perf).
+/// family's packed-u64 fast path when available — LSD radix on 64-bit keys
+/// ([`radix::argsort_u64`]) replaces both the symbol-row comparisons and the
+/// `n log n` key sort (EXPERIMENTS.md §Perf); ties still break by index, so
+/// the order is identical to the comparison path's.
 pub fn sorted_indices<F: LshFamily + ?Sized>(family: &F, ds: &Dataset, rep: u64) -> Vec<u32> {
-    if let Some(keys) = family.packed_sort_keys(ds, rep) {
-        let mut order: Vec<u32> = (0..ds.len() as u32).collect();
-        order.sort_unstable_by_key(|&i| (keys[i as usize], i));
-        return order;
+    sorted_indices_par(family, ds, rep, 1)
+}
+
+/// [`sorted_indices`] with the sketch stage chunked over `workers` pool
+/// threads (the in-repetition parallel path — output is identical for any
+/// worker count).
+pub fn sorted_indices_par<F: LshFamily + ?Sized>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+) -> Vec<u32> {
+    if let Some(keys) = sketch::packed_sort_keys_par(family, ds, rep, workers) {
+        return radix::argsort_u64(&keys);
     }
-    sorted_order(family, ds, rep).order
+    sorted_order_par(family, ds, rep, workers).order
 }
 
 /// Compute the lexicographic order of all points under repetition `rep`.
 pub fn sorted_order<F: LshFamily + ?Sized>(family: &F, ds: &Dataset, rep: u64) -> SortedOrder {
+    sorted_order_par(family, ds, rep, 1)
+}
+
+/// [`sorted_order`] with the symbol matrix filled in parallel point chunks.
+pub fn sorted_order_par<F: LshFamily + ?Sized>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+) -> SortedOrder {
     let m = family.sketch_len();
-    let symbols = family.symbol_matrix(ds, rep);
+    let symbols = sketch::symbol_matrix_par(family, ds, rep, workers);
     let mut order: Vec<u32> = (0..ds.len() as u32).collect();
     order.sort_unstable_by(|&a, &b| {
         let ra = &symbols[a as usize * m..(a as usize + 1) * m];
@@ -143,8 +167,8 @@ mod tests {
                 assert_eq!(r.start, prev_end, "gap before window {k}");
                 assert!(r.end <= n);
                 assert!(r.len() <= w, "window {k} too big: {}", r.len());
-                if k == 0 && n >= w / 2 {
-                    assert!(r.len() >= w / 2.min(n), "first window too small");
+                if k == 0 {
+                    assert!(r.len() >= (w / 2).min(n), "first window too small");
                 }
                 covered += r.len();
                 prev_end = r.end;

@@ -5,11 +5,36 @@
 //! uses for Wikipedia. The paper cites [33] (Moulton & Jiang) for the
 //! general-vector variant; Ioffe's CWS is the standard construction and
 //! samples exactly from the same distribution.
+//!
+//! The CWS randomness `(r, c, β)` depends only on `(seed, rep, token, t)` —
+//! not on the point — so [`WeightedMinHash::prepare`] derives it **once per
+//! distinct token** of the dataset into a per-repetition table. The seed
+//! path re-ran the four transcendental draws for every *occurrence* of a
+//! token (every point × every symbol); with Zipf-ish token distributions the
+//! table turns most of the sketch phase into table lookups. Table values are
+//! the same doubles the on-the-fly path computes, so symbols are
+//! bit-identical either way.
 
 use crate::data::types::Dataset;
-use crate::lsh::family::LshFamily;
-use crate::util::fxhash;
+use crate::lsh::family::{combine_symbols, LshFamily, SketchState};
+use crate::util::fxhash::{self, FxHashMap};
 use crate::util::rng::SplitMix64;
+
+/// Cap on cached CWS entries (distinct tokens × perms): past this the state
+/// falls back to on-the-fly derivation so a pathological token universe
+/// cannot blow up per-repetition memory (entries are 24 B each).
+const CWS_CACHE_MAX_ENTRIES: usize = 1 << 21;
+
+/// The per-(token, rep, t) CWS draw, stored in evaluation-ready form.
+#[derive(Clone, Copy)]
+struct CwsParam {
+    /// Gamma(2, 1) scale of the quantization grid.
+    r: f64,
+    /// ln of the Gamma(2, 1) acceptance variable.
+    ln_c: f64,
+    /// Uniform grid offset.
+    beta: f64,
+}
 
 /// Ioffe CWS family over weighted token sets.
 #[derive(Clone, Debug)]
@@ -25,39 +50,168 @@ impl WeightedMinHash {
         WeightedMinHash { perms, seed }
     }
 
-    /// CWS symbol of one weighted set for (rep, t): encodes (k*, t_{k*}).
+    /// The CWS draw for `(rep, token, t)`.
     ///
     /// Perf: Gamma(2,1) draws use one `ln` on the product of two uniforms
     /// instead of two separate `ln` calls (identical distribution), cutting
     /// the transcendental count per token from 5 to 4 (EXPERIMENTS.md §Perf).
+    #[inline]
+    fn cws_param(&self, rep: u64, tok: u32, t: usize) -> CwsParam {
+        // Per-(token, rep, t) deterministic stream of uniforms.
+        let key = fxhash::combine(
+            self.seed ^ 0x4357_53_48, // "CWSH"
+            fxhash::combine((rep << 24) ^ t as u64, tok as u64),
+        );
+        let mut sm = SplitMix64::new(key);
+        // r, c ~ Gamma(2, 1) = -ln(u1 u2); beta ~ U(0,1).
+        let r = -(sm.next_f64() * sm.next_f64()).max(1e-300).ln();
+        let c = -(sm.next_f64() * sm.next_f64()).max(1e-300).ln();
+        let beta = sm.next_f64();
+        CwsParam {
+            r,
+            ln_c: c.ln(),
+            beta,
+        }
+    }
+
+    /// CWS symbol of one weighted set for (rep, t): encodes (k*, t_{k*}).
     pub fn symbol_of_set(&self, tokens: &[u32], weights: &[f32], rep: u64, t: usize) -> u64 {
-        let mut best = f64::INFINITY;
-        let mut best_sym = u64::MAX;
+        let mut best = (f64::INFINITY, u64::MAX);
         for (idx, &tok) in tokens.iter().enumerate() {
             let w = weights[idx] as f64;
             if w <= 0.0 {
                 continue;
             }
-            // Per-(token, rep, t) deterministic stream of uniforms.
-            let key = fxhash::combine(
-                self.seed ^ 0x4357_53_48, // "CWSH"
-                fxhash::combine((rep << 24) ^ t as u64, tok as u64),
-            );
-            let mut sm = SplitMix64::new(key);
-            // r, c ~ Gamma(2, 1) = -ln(u1 u2); beta ~ U(0,1).
-            let r = -(sm.next_f64() * sm.next_f64()).max(1e-300).ln();
-            let c = -(sm.next_f64() * sm.next_f64()).max(1e-300).ln();
-            let beta = sm.next_f64();
-            let t_k = (w.ln() / r + beta).floor();
-            let ln_y = r * (t_k - beta);
-            // a_k = c / (y e^r)  =>  ln a_k = ln c - ln y - r.
-            let ln_a = c.ln() - ln_y - r;
-            if ln_a < best {
-                best = ln_a;
-                best_sym = fxhash::combine(tok as u64, t_k.to_bits());
+            let p = self.cws_param(rep, tok, t);
+            offer_symbol(&mut best, &p, w.ln(), tok);
+        }
+        best.1
+    }
+}
+
+/// Evaluate one (token, symbol) candidate against the running minimum:
+/// `ln a_k = ln c − ln y − r` with `y = e^{r (t_k − β)}`, `t_k = ⌊ln w / r +
+/// β⌋`. Strict `<` keeps the first minimum, matching the seed path's token
+/// iteration order.
+#[inline]
+fn offer_symbol(best: &mut (f64, u64), p: &CwsParam, ln_w: f64, tok: u32) {
+    let t_k = (ln_w / p.r + p.beta).floor();
+    let ln_y = p.r * (t_k - p.beta);
+    let ln_a = p.ln_c - ln_y - p.r;
+    if ln_a < best.0 {
+        *best = (ln_a, fxhash::combine(tok as u64, t_k.to_bits()));
+    }
+}
+
+/// Per-repetition CWS state: the per-distinct-token parameter table (or the
+/// fallback marker when the universe exceeds [`CWS_CACHE_MAX_ENTRIES`]).
+struct WeightedMinHashState<'a> {
+    h: &'a WeightedMinHash,
+    rep: u64,
+    /// token -> slot; `params[slot * perms + t]` is the (token, t) draw.
+    slots: FxHashMap<u32, u32>,
+    params: Vec<CwsParam>,
+}
+
+impl<'a> WeightedMinHashState<'a> {
+    fn new(h: &'a WeightedMinHash, ds: &Dataset, rep: u64) -> Self {
+        // The distinct-token cap in slot units; bail out of the discovery
+        // scan the moment it trips so an over-cap universe doesn't pay a
+        // full dataset pass just to throw it away.
+        let max_slots = CWS_CACHE_MAX_ENTRIES / h.perms.max(1);
+        let mut slots: FxHashMap<u32, u32> = FxHashMap::default();
+        'scan: for i in 0..ds.len() {
+            for &tok in &ds.set(i).tokens {
+                let next = slots.len() as u32;
+                slots.entry(tok).or_insert(next);
+                if slots.len() > max_slots {
+                    break 'scan;
+                }
             }
         }
-        best_sym
+        if slots.len() > max_slots {
+            return WeightedMinHashState {
+                h,
+                rep,
+                slots: FxHashMap::default(),
+                params: Vec::new(),
+            };
+        }
+        let entries = slots.len() * h.perms;
+        let mut params = vec![
+            CwsParam {
+                r: 0.0,
+                ln_c: 0.0,
+                beta: 0.0
+            };
+            entries
+        ];
+        for (&tok, &slot) in &slots {
+            let base = slot as usize * h.perms;
+            for (t, p) in params[base..base + h.perms].iter_mut().enumerate() {
+                *p = h.cws_param(rep, tok, t);
+            }
+        }
+        WeightedMinHashState {
+            h,
+            rep,
+            slots,
+            params,
+        }
+    }
+
+    /// Fill `best` (one `(ln a, symbol)` slot per base hash) for point `i`.
+    fn point_min(&self, ds: &Dataset, i: usize, best: &mut [(f64, u64)]) {
+        best.fill((f64::INFINITY, u64::MAX));
+        let m = self.h.perms;
+        let set = ds.set(i);
+        for (idx, &tok) in set.tokens.iter().enumerate() {
+            let w = set.weights[idx] as f64;
+            if w <= 0.0 {
+                continue;
+            }
+            let ln_w = w.ln();
+            match self.slots.get(&tok) {
+                Some(&slot) => {
+                    let ps = &self.params[slot as usize * m..(slot as usize + 1) * m];
+                    for (b, p) in best.iter_mut().zip(ps.iter()) {
+                        offer_symbol(b, p, ln_w, tok);
+                    }
+                }
+                None => {
+                    for (t, b) in best.iter_mut().enumerate() {
+                        let p = self.h.cws_param(self.rep, tok, t);
+                        offer_symbol(b, &p, ln_w, tok);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl SketchState for WeightedMinHashState<'_> {
+    fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let m = self.h.perms;
+        let mut best = vec![(f64::INFINITY, u64::MAX); m];
+        let mut buf = vec![0u64; m];
+        for (k, key) in out.iter_mut().enumerate() {
+            self.point_min(ds, lo + k, &mut best);
+            for (b, &(_, sym)) in buf.iter_mut().zip(best.iter()) {
+                *b = sym;
+            }
+            *key = combine_symbols(&buf);
+        }
+    }
+
+    fn symbols_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
+        let m = self.h.perms;
+        let mut best = vec![(f64::INFINITY, u64::MAX); m];
+        for (k, row) in out.chunks_mut(m).enumerate() {
+            self.point_min(ds, lo + k, &mut best);
+            for (o, &(_, sym)) in row.iter_mut().zip(best.iter()) {
+                *o = sym;
+            }
+        }
     }
 }
 
@@ -68,6 +222,10 @@ impl LshFamily for WeightedMinHash {
 
     fn sketch_len(&self) -> usize {
         self.perms
+    }
+
+    fn prepare<'a>(&'a self, ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a> {
+        Box::new(WeightedMinHashState::new(self, ds, rep))
     }
 
     fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
@@ -154,5 +312,27 @@ mod tests {
         let a = h.symbol_of_set(&[1, 2], &[1.0, 0.0], 0, 0);
         let b = h.symbol_of_set(&[1], &[1.0], 0, 0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cached_state_matches_per_point_path() {
+        let ds = crate::data::synth::zipf_sets(
+            150,
+            &crate::data::synth::ZipfSetsParams::default(),
+            13,
+        );
+        let h = WeightedMinHash::new(4, 21);
+        for rep in [0u64, 3] {
+            let batch = h.bucket_keys(&ds, rep);
+            for i in 0..ds.len() {
+                assert_eq!(batch[i], h.bucket_key(&ds, i, rep), "point {i} rep {rep}");
+            }
+            let mat = h.symbol_matrix(&ds, rep);
+            let mut buf = vec![0u64; 4];
+            for i in 0..ds.len() {
+                h.symbols(&ds, i, rep, &mut buf);
+                assert_eq!(&mat[i * 4..(i + 1) * 4], &buf[..], "point {i} rep {rep}");
+            }
+        }
     }
 }

@@ -102,14 +102,22 @@ impl<'a> StarsBuilder<'a> {
             let mut done = 0usize;
             while done < reps {
                 let count = wave.min(reps - done);
+                // When the wave carries fewer repetitions than workers
+                // (R < workers, or the last wave's tail), grant each
+                // repetition the spare cores for in-repetition data
+                // parallelism — sketch chunks and bucket/window scoring
+                // tasks — instead of leaving them idle. Edge output is
+                // identical for any split (see lsh_rep_par docs), so the
+                // graph does not depend on the wave geometry.
+                let inner = (wave / count).max(1);
                 let results = c.map_timed(count, |t, ledger| {
                     let rep = (done + t) as u64;
                     match params.algorithm {
-                        Algorithm::Lsh | Algorithm::LshStars => {
-                            threshold::lsh_rep(self.ds, sim, family, &params, rep, ledger, dht)
-                        }
+                        Algorithm::Lsh | Algorithm::LshStars => threshold::lsh_rep_par(
+                            self.ds, sim, family, &params, rep, ledger, dht, inner,
+                        ),
                         Algorithm::SortingLsh | Algorithm::SortingLshStars => {
-                            knn::sorting_rep(self.ds, sim, family, &params, rep, ledger)
+                            knn::sorting_rep_par(self.ds, sim, family, &params, rep, ledger, inner)
                         }
                         Algorithm::AllPair => unreachable!(),
                     }
@@ -323,12 +331,17 @@ impl Accumulator {
             return Graph::from_edges(self.n, std::mem::take(&mut self.raw));
         }
         let cap = self.cap;
-        let shards = std::mem::take(&mut self.shards);
+        // `finalize` consumes the accumulator, so it exclusively owns every
+        // shard: take them out of their mutexes instead of locking each one.
+        let shards: Vec<Shard> = std::mem::take(&mut self.shards)
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .collect();
         let workers = self.workers.min(shards.len().max(1));
         let parts = pool::parallel_chunks(shards.len(), workers, |_, range| {
             let mut edges = Vec::new();
             for s in range {
-                let shard = shards[s].lock().unwrap();
+                let shard = &shards[s];
                 for (i, acc) in shard.nodes.iter().enumerate() {
                     let node = shard.lo + i as u32;
                     if acc.nbrs.len() > cap {

@@ -16,14 +16,15 @@
 use crate::ampc::CostLedger;
 use crate::data::types::Dataset;
 use crate::graph::Edge;
-use crate::lsh::sorting::sorted_indices;
+use crate::lsh::sorting::sorted_indices_par;
 use crate::lsh::{windows, LshFamily};
 use crate::sim::Similarity;
 use crate::stars::bucketing::sample_leaders;
 use crate::stars::params::BuildParams;
+use crate::util::pool;
 use crate::util::rng::{derive_seed, Rng};
 
-/// Run one SortingLSH repetition; returns the edges found.
+/// Run one SortingLSH repetition on a single core; returns the edges found.
 pub fn sorting_rep(
     ds: &Dataset,
     sim: &dyn Similarity,
@@ -32,64 +33,104 @@ pub fn sorting_rep(
     rep: u64,
     ledger: &CostLedger,
 ) -> Vec<Edge> {
+    sorting_rep_par(ds, sim, family, params, rep, ledger, 1)
+}
+
+/// Run one SortingLSH repetition with `inner_workers` cores of
+/// in-repetition data parallelism: the sketch stage is chunked over point
+/// ranges, the packed keys go through the LSD radix sort, and window scoring
+/// is dispatched per window over the pool.
+///
+/// Determinism: the window split and all leader draws consume the
+/// repetition RNG serially in window order before any parallel dispatch,
+/// and per-window edge batches are concatenated in window order — the edge
+/// vector is identical to the single-core path for every `inner_workers`
+/// value (asserted by `tests/sketch_parity.rs`).
+pub fn sorting_rep_par(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    family: &dyn LshFamily,
+    params: &BuildParams,
+    rep: u64,
+    ledger: &CostLedger,
+    inner_workers: usize,
+) -> Vec<Edge> {
     let n = ds.len();
     let mut rng = Rng::new(derive_seed(params.seed ^ 0x50_47, rep));
 
-    // Sketch + sort phase (TeraSort in the real system; here the per-rep
-    // sort is already parallel across repetitions). Uses the packed-u64
-    // fast path for binary-symbol families.
-    let order = sorted_indices(family, ds, rep);
+    // Sketch + sort phase (TeraSort in the real system): data-parallel
+    // sketching over point chunks, then the packed-u64 radix fast path for
+    // binary-symbol families.
+    let order = sorted_indices_par(family, ds, rep, inner_workers);
     ledger.add_sketches((n * family.sketch_len()) as u64);
 
-    let mut edges = Vec::new();
-    let mut scores = Vec::new();
-    for w in windows(n, params.window, &mut rng) {
-        let members = &order[w];
+    let ws = windows(n, params.window, &mut rng);
+    // Leader pre-draw in window order: same RNG stream as the sequential
+    // loop (windows below 2 members are skipped and draw nothing; `None`
+    // means "score all pairs" — Stars 2 step 5, the k ≤ n^2ρ branch, which
+    // is also the small-window fallback since all pairs is cheaper than
+    // stars when |W| ≤ 2s).
+    let stars = params.algorithm.is_stars();
+    let s = params.leaders;
+    let plans: Vec<Option<Vec<usize>>> = ws
+        .iter()
+        .map(|w| {
+            if w.len() >= 2 && stars && w.len() > 2 * s {
+                Some(sample_leaders(w.len(), s, &mut rng))
+            } else {
+                None
+            }
+        })
+        .collect();
+
+    let score_window = |k: usize, scores: &mut Vec<f32>, edges: &mut Vec<Edge>| {
+        let members = &order[ws[k].clone()];
         if members.len() < 2 {
-            continue;
+            return;
         }
-        // Stars 2 step 5 (the k <= n^2rho branch, also the small-window
-        // fallback): all pairs is cheaper than stars when |W| <= 2s.
-        if params.algorithm.is_stars() && members.len() > 2 * params.leaders {
-            // Stars 2 step 4: s random leaders per window, each scored
-            // against the two contiguous halves around its position — the
-            // batch kernels tile straight from the window slice, no
-            // per-leader candidate copy.
-            let leaders = sample_leaders(members.len(), params.leaders, &mut rng);
-            for &lp in &leaders {
-                let leader = members[lp];
-                let (before, rest) = members.split_at(lp);
-                let after = &rest[1..];
-                ledger.add_comparisons((members.len() - 1) as u64);
-                for part in [before, after] {
-                    if part.is_empty() {
-                        continue;
-                    }
-                    sim.sim_batch(ds, leader as usize, part, &mut scores);
-                    for (k, &c) in part.iter().enumerate() {
-                        if scores[k] >= params.threshold {
-                            edges.push(Edge::new(leader, c, scores[k]));
+        match &plans[k] {
+            Some(leaders) => {
+                // Stars 2 step 4: s random leaders per window, each scored
+                // against the two contiguous halves around its position —
+                // the batch kernels tile straight from the window slice, no
+                // per-leader candidate copy.
+                for &lp in leaders {
+                    let leader = members[lp];
+                    let (before, rest) = members.split_at(lp);
+                    let after = &rest[1..];
+                    ledger.add_comparisons((members.len() - 1) as u64);
+                    for part in [before, after] {
+                        if part.is_empty() {
+                            continue;
+                        }
+                        sim.sim_batch(ds, leader as usize, part, scores);
+                        for (j, &c) in part.iter().enumerate() {
+                            if scores[j] >= params.threshold {
+                                edges.push(Edge::new(leader, c, scores[j]));
+                            }
                         }
                     }
                 }
             }
-        } else {
-            // Stars 2 step 5 / baseline: all pairs within the window.
-            for (pos, &a) in members.iter().enumerate() {
-                let rest = &members[pos + 1..];
-                if rest.is_empty() {
-                    continue;
-                }
-                ledger.add_comparisons(rest.len() as u64);
-                sim.sim_batch(ds, a as usize, rest, &mut scores);
-                for (k, &b) in rest.iter().enumerate() {
-                    if scores[k] >= params.threshold {
-                        edges.push(Edge::new(a, b, scores[k]));
+            None => {
+                // Stars 2 step 5 / baseline: all pairs within the window.
+                for (pos, &a) in members.iter().enumerate() {
+                    let rest = &members[pos + 1..];
+                    if rest.is_empty() {
+                        continue;
+                    }
+                    ledger.add_comparisons(rest.len() as u64);
+                    sim.sim_batch(ds, a as usize, rest, scores);
+                    for (j, &b) in rest.iter().enumerate() {
+                        if scores[j] >= params.threshold {
+                            edges.push(Edge::new(a, b, scores[j]));
+                        }
                     }
                 }
             }
         }
-    }
+    };
+    let edges = pool::parallel_flat_map(ws.len(), inner_workers, Vec::<f32>::new, score_window);
     ledger.add_edges(edges.len() as u64);
     edges
 }

@@ -15,13 +15,14 @@
 use crate::ampc::{shuffle::shuffle_group, CostLedger, Dht};
 use crate::data::types::Dataset;
 use crate::graph::Edge;
-use crate::lsh::LshFamily;
+use crate::lsh::{sketch, LshFamily};
 use crate::sim::Similarity;
 use crate::stars::bucketing::{group_buckets, sample_leaders, split_oversized};
 use crate::stars::params::{BuildParams, JoinStrategy};
+use crate::util::pool;
 use crate::util::rng::{derive_seed, Rng};
 
-/// Run one LSH repetition; returns the edges found.
+/// Run one LSH repetition on a single core; returns the edges found.
 pub fn lsh_rep(
     ds: &Dataset,
     sim: &dyn Similarity,
@@ -31,11 +32,36 @@ pub fn lsh_rep(
     ledger: &CostLedger,
     dht: Option<&Dht<'_>>,
 ) -> Vec<Edge> {
+    lsh_rep_par(ds, sim, family, params, rep, ledger, dht, 1)
+}
+
+/// Run one LSH repetition with `inner_workers` cores of in-repetition data
+/// parallelism: the sketch phase is chunked over point ranges and bucket
+/// scoring is dispatched per bucket over the pool. The builder grants inner
+/// cores when a wave has fewer repetitions than workers (small R, wave
+/// tails), which previously left those cores idle.
+///
+/// Determinism: all RNG-dependent decisions (sub-bucket splits, leader
+/// draws) are made serially in bucket order before any parallel dispatch,
+/// and per-bucket edge batches are concatenated in bucket order — so the
+/// edge vector is identical to the single-core path for every
+/// `inner_workers` value (asserted by `tests/sketch_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn lsh_rep_par(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    family: &dyn LshFamily,
+    params: &BuildParams,
+    rep: u64,
+    ledger: &CostLedger,
+    dht: Option<&Dht<'_>>,
+    inner_workers: usize,
+) -> Vec<Edge> {
     let n = ds.len();
     let mut rng = Rng::new(derive_seed(params.seed ^ 0x7E9, rep));
 
-    // Sketch phase.
-    let keys = family.bucket_keys(ds, rep);
+    // Sketch phase: one prepared state, point chunks over the pool.
+    let keys = sketch::bucket_keys_par(family, ds, rep, inner_workers);
     ledger.add_sketches(n as u64);
 
     // Join phase: group ids by bucket key (§4's two strategies).
@@ -53,22 +79,40 @@ pub fn lsh_rep(
     };
     let buckets = split_oversized(buckets, params.max_bucket, &mut rng);
 
-    // Scoring phase.
-    let mut edges = Vec::new();
-    let mut scores = Vec::new();
-    for bucket in &buckets {
+    // Leader pre-draw: consume the repetition RNG in bucket order exactly as
+    // the sequential scoring loop did (a draw only for Stars buckets above
+    // the all-pairs fallback size), so parallel dispatch cannot perturb the
+    // stream. `None` means "score all pairs".
+    let stars = params.algorithm.is_stars();
+    let s = params.leaders;
+    let plans: Vec<Option<Vec<usize>>> = buckets
+        .iter()
+        .map(|b| {
+            if stars && b.len() > 2 * s {
+                Some(sample_leaders(b.len(), s, &mut rng))
+            } else {
+                None
+            }
+        })
+        .collect();
+
+    // Scoring phase: one task per bucket. The ledger is atomic, so parallel
+    // tasks charge comparisons/DHT traffic exactly as the serial loop does.
+    let threshold = params.threshold;
+    let score_bucket = |b: usize, scores: &mut Vec<f32>, edges: &mut Vec<Edge>| {
+        let bucket = &buckets[b];
         if let Some(dht) = dht {
             dht.lookup_batch(bucket, ledger);
         }
-        if params.algorithm.is_stars() {
-            score_stars(
-                ds, sim, bucket, params.leaders, params.threshold, &mut rng, ledger,
-                &mut scores, &mut edges,
-            );
-        } else {
-            score_all_pairs(ds, sim, bucket, params.threshold, ledger, &mut scores, &mut edges);
+        match &plans[b] {
+            Some(leaders) => score_stars_with_leaders(
+                ds, sim, bucket, leaders, threshold, ledger, scores, edges,
+            ),
+            None => score_all_pairs(ds, sim, bucket, threshold, ledger, scores, edges),
         }
-    }
+    };
+    let edges =
+        pool::parallel_flat_map(buckets.len(), inner_workers, Vec::<f32>::new, score_bucket);
     ledger.add_edges(edges.len() as u64);
     edges
 }
@@ -96,7 +140,24 @@ pub fn score_stars(
         return;
     }
     let leaders = sample_leaders(bucket.len(), s, rng);
-    for &lp in &leaders {
+    score_stars_with_leaders(ds, sim, bucket, &leaders, threshold, ledger, scores, edges);
+}
+
+/// Star scoring with pre-drawn leader positions — the parallel dispatch path
+/// ([`lsh_rep_par`] draws all leaders serially up front, then fans buckets
+/// out over the pool).
+#[allow(clippy::too_many_arguments)]
+pub fn score_stars_with_leaders(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    bucket: &[u32],
+    leaders: &[usize],
+    threshold: f32,
+    ledger: &CostLedger,
+    scores: &mut Vec<f32>,
+    edges: &mut Vec<Edge>,
+) {
+    for &lp in leaders {
         let leader = bucket[lp];
         // Compare the leader to every other member (paper: y ∈ B \ {x}) by
         // scoring the two contiguous halves around the leader position — the

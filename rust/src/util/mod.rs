@@ -14,3 +14,4 @@ pub mod pool;
 pub mod fxhash;
 pub mod quickcheck;
 pub mod logging;
+pub mod radix;

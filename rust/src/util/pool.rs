@@ -46,6 +46,62 @@ where
     })
 }
 
+/// Run `n` indexed tasks that each append to an output vector, and return
+/// the outputs concatenated in task order. `scratch()` seeds per-evaluation
+/// scratch state: the serial path (`workers <= 1` or `n <= 1`) builds it
+/// once and reuses it across all tasks — keeping the sequential scoring
+/// loops allocation-free — while the parallel path builds one per task and
+/// fans out via [`parallel_map`]. Output order is identical either way.
+pub fn parallel_flat_map<S, T, F, G>(n: usize, workers: usize, scratch: G, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut S, &mut Vec<T>) + Sync,
+    G: Fn() -> S + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        let mut s = scratch();
+        let mut out = Vec::new();
+        for i in 0..n {
+            f(i, &mut s, &mut out);
+        }
+        return out;
+    }
+    let parts = parallel_map(n, workers, |i| {
+        let mut s = scratch();
+        let mut local = Vec::new();
+        f(i, &mut s, &mut local);
+        local
+    });
+    let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// Split a mutable output slice into contiguous chunks of `chunk` elements
+/// and fill each in parallel: `f(start, slice)` writes `out[start..start +
+/// slice.len()]`. The sketch drivers use this to chunk one repetition's
+/// key/symbol buffers over the pool without staging per-worker vectors and
+/// re-copying them (the chunks are disjoint `&mut` borrows).
+pub fn parallel_fill<T, F>(out: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    let chunk = chunk.max(1);
+    if chunk >= n {
+        return f(0, out);
+    }
+    std::thread::scope(|scope| {
+        for (c, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(c * chunk, slice));
+        }
+    });
+}
+
 /// Dynamically distribute `n` independent tasks over `workers` threads via an
 /// atomic cursor. `f(task_index)` is called exactly once per index; the
 /// per-task results are returned in index order.
@@ -142,6 +198,52 @@ mod tests {
     fn map_zero_tasks() {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn flat_map_concatenates_in_task_order() {
+        for workers in [1usize, 4] {
+            let out = parallel_flat_map(9, workers, || 10usize, |i, base, out| {
+                for k in 0..i {
+                    out.push(*base * i + k);
+                }
+            });
+            let mut want = Vec::new();
+            for i in 0..9 {
+                for k in 0..i {
+                    want.push(10 * i + k);
+                }
+            }
+            assert_eq!(out, want, "workers={workers}");
+        }
+        let empty: Vec<u8> = parallel_flat_map(0, 4, || (), |_, _, _| {});
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn fill_covers_whole_slice_with_correct_offsets() {
+        let mut out = vec![0usize; 1003];
+        parallel_fill(&mut out, 128, |start, slice| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = start + k;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn fill_serial_when_chunk_covers_slice() {
+        let mut out = vec![0u64; 10];
+        parallel_fill(&mut out, 10, |start, slice| {
+            assert_eq!(start, 0);
+            assert_eq!(slice.len(), 10);
+            slice.fill(7);
+        });
+        assert_eq!(out, vec![7u64; 10]);
+        let mut empty: Vec<u64> = Vec::new();
+        parallel_fill(&mut empty, 4, |_, _| {});
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! LSD radix sort for u64 sort keys.
+//!
+//! SortingLSH sorts n packed sketch keys per repetition — the "TeraSort"
+//! phase of the production system. A comparison sort pays O(n log n) key
+//! loads with a data-dependent branch per compare; least-significant-digit
+//! radix makes it O(passes · n) streaming scatters. Two properties matter
+//! here:
+//!
+//! * **Stability.** Each pass preserves the relative order of equal digits,
+//!   and the initial order is index order, so the result is identical to
+//!   `sort_unstable_by_key(|&i| (keys[i], i))` — ties broken by point index,
+//!   bit-for-bit the order the comparison path produced (asserted by
+//!   `tests/sketch_parity.rs`).
+//! * **Pass skipping.** Packed SimHash keys occupy only the low `bits` bits
+//!   (M=30 ⇒ 4 live bytes), so the high-byte histograms are degenerate and
+//!   those passes permute nothing; one fused histogram pass up front detects
+//!   and skips them.
+
+/// Below this length the constant factors favor the comparison sort; both
+/// paths produce the identical permutation, so the cutoff is purely a
+/// performance knob.
+const RADIX_MIN_N: usize = 512;
+
+/// Indices `0..keys.len()` sorted by `(keys[i], i)` — stable LSD radix on
+/// 8-bit digits with degenerate passes skipped.
+pub fn argsort_u64(keys: &[u64]) -> Vec<u32> {
+    let n = keys.len();
+    assert!(n <= u32::MAX as usize, "argsort_u64 indexes with u32");
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if n < RADIX_MIN_N {
+        idx.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        return idx;
+    }
+    // All eight digit histograms in one read of the key array.
+    let mut hist = [[0u32; 256]; 8];
+    for &k in keys {
+        for (pass, h) in hist.iter_mut().enumerate() {
+            h[((k >> (pass * 8)) & 0xFF) as usize] += 1;
+        }
+    }
+    let mut buf = vec![0u32; n];
+    for (pass, h) in hist.iter().enumerate() {
+        // A pass where every key shares one digit value permutes nothing.
+        if h.iter().any(|&c| c as usize == n) {
+            continue;
+        }
+        let shift = pass * 8;
+        let mut cursor = [0u32; 256];
+        let mut sum = 0u32;
+        for (c, &count) in cursor.iter_mut().zip(h.iter()) {
+            *c = sum;
+            sum += count;
+        }
+        for &i in &idx {
+            let digit = ((keys[i as usize] >> shift) & 0xFF) as usize;
+            buf[cursor[digit] as usize] = i;
+            cursor[digit] += 1;
+        }
+        std::mem::swap(&mut idx, &mut buf);
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reference(keys: &[u64]) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+        idx.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        idx
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(argsort_u64(&[]).is_empty());
+        assert_eq!(argsort_u64(&[9]), vec![0]);
+        assert_eq!(argsort_u64(&[9, 3, 9]), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn matches_comparison_sort_above_cutoff() {
+        let mut rng = Rng::new(17);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        assert_eq!(argsort_u64(&keys), reference(&keys));
+    }
+
+    #[test]
+    fn heavy_ties_break_by_index() {
+        // 8 distinct key values over 5000 entries: every pass but the first
+        // is skipped, and ties must come out in ascending index order.
+        let mut rng = Rng::new(3);
+        let keys: Vec<u64> = (0..5_000).map(|_| rng.next_u64() % 8).collect();
+        let order = argsort_u64(&keys);
+        assert_eq!(order, reference(&keys));
+        for w in order.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if keys[a as usize] == keys[b as usize] {
+                assert!(a < b, "tie {a},{b} not in index order");
+            }
+        }
+    }
+
+    #[test]
+    fn all_equal_keys_are_identity() {
+        let keys = vec![42u64; 2_000];
+        let order = argsort_u64(&keys);
+        assert_eq!(order, (0..2_000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn high_bytes_only() {
+        // Keys living in the top byte exercise the late passes.
+        let mut rng = Rng::new(5);
+        let keys: Vec<u64> = (0..4_000).map(|_| rng.next_u64() << 56).collect();
+        assert_eq!(argsort_u64(&keys), reference(&keys));
+    }
+}

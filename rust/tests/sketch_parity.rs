@@ -1,0 +1,262 @@
+//! Parity property tests for the data-parallel sketching subsystem:
+//!
+//! * the LSD radix argsort must reproduce the comparison sort's order,
+//!   including index tie-breaks;
+//! * the tiled multi-plane sketch kernel must produce bit-identical packed
+//!   keys to the scalar per-row kernel across bit widths and dimensions;
+//! * the restructured in-repetition-parallel `lsh_rep`/`sorting_rep` must
+//!   produce edge vectors identical to the seed sequential per-rep path for
+//!   fixed seeds, for every inner worker count;
+//! * a full `StarsBuilder::build` must not depend on the worker count.
+
+use stars::ampc::CostLedger;
+use stars::data::synth;
+use stars::data::types::Dataset;
+use stars::graph::Edge;
+use stars::lsh::{sketch, sorted_indices, windows, LshFamily, SimHash};
+use stars::sim::{CosineSim, Similarity};
+use stars::stars::threshold::{lsh_rep_par, score_all_pairs, score_stars};
+use stars::stars::knn::sorting_rep_par;
+use stars::stars::{
+    group_buckets, sample_leaders, split_oversized, Algorithm, BuildParams, StarsBuilder,
+};
+use stars::util::quickcheck::check;
+use stars::util::radix;
+use stars::util::rng::{derive_seed, Rng};
+
+#[test]
+fn radix_argsort_matches_comparison_including_ties() {
+    check("radix-vs-comparison", 30, |g| {
+        let n = g.usize_in(0, 4000);
+        // Narrow widths force heavy ties (and degenerate high-byte passes).
+        let bits = [3usize, 16, 30, 64][g.usize_in(0, 3)];
+        let mask = if bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << bits) - 1
+        };
+        let keys: Vec<u64> = (0..n).map(|_| g.rng().next_u64() & mask).collect();
+        let got = radix::argsort_u64(&keys);
+        let mut want: Vec<u32> = (0..n as u32).collect();
+        want.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        assert_eq!(got, want, "n={n} bits={bits}");
+    });
+}
+
+#[test]
+fn tiled_sketch_keys_bit_identical_to_scalar_kernel() {
+    // 57 points: 14 full 4-row blocks plus a 1-row tail.
+    for &bits in &[1usize, 7, 12, 30, 64] {
+        for &d in &[3usize, 16, 100, 784] {
+            let ds = synth::gaussian_mixture(57, d, 4, 0.3, (bits * 1000 + d) as u64);
+            let h = SimHash::new(d, bits, 11);
+            let planes = h.hyperplanes(2);
+            let scalar: Vec<u64> = (0..ds.len()).map(|i| h.sketch_row(ds.row(i), &planes)).collect();
+            assert_eq!(h.bucket_keys(&ds, 2), scalar, "bits={bits} d={d}");
+            let packed: Vec<u64> = scalar
+                .iter()
+                .map(|k| k.reverse_bits() >> (64 - bits))
+                .collect();
+            assert_eq!(
+                h.packed_sort_keys(&ds, 2),
+                Some(packed),
+                "packed bits={bits} d={d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_sketch_drivers_bit_identical_to_scalar_kernel() {
+    // Large enough that the drivers actually chunk across threads.
+    let d = 16;
+    let ds = synth::gaussian_mixture(2500, d, 8, 0.1, 29);
+    let h = SimHash::new(d, 12, 3);
+    let planes = h.hyperplanes(1);
+    let scalar: Vec<u64> = (0..ds.len()).map(|i| h.sketch_row(ds.row(i), &planes)).collect();
+    for workers in [1usize, 2, 7] {
+        assert_eq!(sketch::bucket_keys_par(&h, &ds, 1, workers), scalar);
+    }
+}
+
+/// The seed revision's sequential `lsh_rep` (Direct join): bucket, split,
+/// then score each bucket in order against the shared repetition RNG.
+fn lsh_rep_seed_reference(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    family: &dyn LshFamily,
+    params: &BuildParams,
+    rep: u64,
+    ledger: &CostLedger,
+) -> Vec<Edge> {
+    let mut rng = Rng::new(derive_seed(params.seed ^ 0x7E9, rep));
+    let keys = family.bucket_keys(ds, rep);
+    let buckets = split_oversized(group_buckets(&keys), params.max_bucket, &mut rng);
+    let mut edges = Vec::new();
+    let mut scores = Vec::new();
+    for bucket in &buckets {
+        if params.algorithm.is_stars() {
+            score_stars(
+                ds,
+                sim,
+                bucket,
+                params.leaders,
+                params.threshold,
+                &mut rng,
+                ledger,
+                &mut scores,
+                &mut edges,
+            );
+        } else {
+            score_all_pairs(ds, sim, bucket, params.threshold, ledger, &mut scores, &mut edges);
+        }
+    }
+    edges
+}
+
+/// The seed revision's sequential `sorting_rep`.
+fn sorting_rep_seed_reference(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    family: &dyn LshFamily,
+    params: &BuildParams,
+    rep: u64,
+    ledger: &CostLedger,
+) -> Vec<Edge> {
+    let n = ds.len();
+    let mut rng = Rng::new(derive_seed(params.seed ^ 0x50_47, rep));
+    let order = sorted_indices(family, ds, rep);
+    let mut edges = Vec::new();
+    let mut scores = Vec::new();
+    for w in windows(n, params.window, &mut rng) {
+        let members = &order[w];
+        if members.len() < 2 {
+            continue;
+        }
+        if params.algorithm.is_stars() && members.len() > 2 * params.leaders {
+            let leaders = sample_leaders(members.len(), params.leaders, &mut rng);
+            for &lp in &leaders {
+                let leader = members[lp];
+                let (before, rest) = members.split_at(lp);
+                let after = &rest[1..];
+                for part in [before, after] {
+                    if part.is_empty() {
+                        continue;
+                    }
+                    sim.sim_batch(ds, leader as usize, part, &mut scores);
+                    for (k, &c) in part.iter().enumerate() {
+                        if scores[k] >= params.threshold {
+                            edges.push(Edge::new(leader, c, scores[k]));
+                        }
+                    }
+                }
+            }
+        } else {
+            for (pos, &a) in members.iter().enumerate() {
+                let rest = &members[pos + 1..];
+                if rest.is_empty() {
+                    continue;
+                }
+                sim.sim_batch(ds, a as usize, rest, &mut scores);
+                for (k, &b) in rest.iter().enumerate() {
+                    if scores[k] >= params.threshold {
+                        edges.push(Edge::new(a, b, scores[k]));
+                    }
+                }
+            }
+        }
+    }
+    let _ = ledger;
+    edges
+}
+
+#[test]
+fn lsh_rep_parallel_matches_seed_path() {
+    let ds = synth::gaussian_mixture(600, 16, 8, 0.08, 41);
+    let h = SimHash::new(16, 8, 9);
+    for algo in [Algorithm::LshStars, Algorithm::Lsh] {
+        // Small leader count and bucket cap so both the leader-draw and the
+        // sub-bucket-split RNG consumption are exercised.
+        let params = BuildParams::threshold_mode(algo)
+            .leaders(2)
+            .max_bucket(40)
+            .threshold(0.3)
+            .seed(7);
+        for rep in [0u64, 3] {
+            let ledger = CostLedger::new(1);
+            let want = lsh_rep_seed_reference(&ds, &CosineSim, &h, &params, rep, &ledger);
+            assert!(!want.is_empty(), "reference produced no edges");
+            for inner in [1usize, 2, 8] {
+                let ledger = CostLedger::new(1);
+                let got =
+                    lsh_rep_par(&ds, &CosineSim, &h, &params, rep, &ledger, None, inner);
+                assert_eq!(got, want, "{algo:?} rep={rep} inner={inner}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sorting_rep_parallel_matches_seed_path() {
+    let ds = synth::gaussian_mixture(700, 16, 8, 0.08, 43);
+    let h = SimHash::new(16, 30, 13);
+    for algo in [Algorithm::SortingLshStars, Algorithm::SortingLsh] {
+        let params = BuildParams::knn_mode(algo).window(40).leaders(2).seed(19);
+        for rep in [0u64, 5] {
+            let ledger = CostLedger::new(1);
+            let want = sorting_rep_seed_reference(&ds, &CosineSim, &h, &params, rep, &ledger);
+            assert!(!want.is_empty(), "reference produced no edges");
+            for inner in [1usize, 2, 8] {
+                let ledger = CostLedger::new(1);
+                let got = sorting_rep_par(&ds, &CosineSim, &h, &params, rep, &ledger, inner);
+                assert_eq!(got, want, "{algo:?} rep={rep} inner={inner}");
+            }
+        }
+    }
+}
+
+#[test]
+fn build_graph_invariant_to_worker_count() {
+    // R=3 sketches over up to 8 workers: small waves force inner workers
+    // > 1, and the resulting graph must still be identical.
+    let ds = synth::gaussian_mixture(800, 16, 8, 0.08, 31);
+    for (family_bits, params) in [
+        (
+            8,
+            BuildParams::threshold_mode(Algorithm::LshStars)
+                .sketches(3)
+                .leaders(3)
+                .threshold(0.4)
+                .seed(23),
+        ),
+        (
+            30,
+            BuildParams::knn_mode(Algorithm::SortingLshStars)
+                .sketches(3)
+                .window(50)
+                .degree_cap(8)
+                .seed(23),
+        ),
+    ] {
+        let family = SimHash::new(16, family_bits, 5);
+        let mut reference: Option<Vec<Edge>> = None;
+        for workers in [1usize, 3, 8] {
+            let out = StarsBuilder::new(&ds)
+                .similarity(&CosineSim)
+                .hash(&family)
+                .params(params.clone())
+                .workers(workers)
+                .build();
+            let edges = out.graph.edges().to_vec();
+            assert!(!edges.is_empty());
+            match &reference {
+                None => reference = Some(edges),
+                Some(want) => assert_eq!(
+                    &edges, want,
+                    "graph differs at workers={workers} ({:?})",
+                    params.algorithm
+                ),
+            }
+        }
+    }
+}

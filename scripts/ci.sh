@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 (build + tests) plus formatting and lint gates.
 #
-#   scripts/ci.sh          # tier-1 + fmt + clippy
-#   scripts/ci.sh --bench  # also regenerate BENCH_scoring.json (slow)
+#   scripts/ci.sh          # tier-1 + fmt + clippy + bench compile check
+#   scripts/ci.sh --bench  # also regenerate BENCH_scoring.json and
+#                          # BENCH_sketch.json (slow)
 #
-# The perf trajectory is tracked via BENCH_scoring.json at the repo root,
-# emitted by `cargo bench --bench microbench` (see EXPERIMENTS.md §Perf).
+# The perf trajectory is tracked via BENCH_scoring.json and BENCH_sketch.json
+# at the repo root, emitted by `cargo bench --bench microbench` and
+# `cargo bench --bench sketchbench` (see EXPERIMENTS.md §Perf). Benches are
+# always *compiled* (`cargo bench --no-run`) so bench code cannot rot between
+# the occasional timed runs.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -22,9 +26,14 @@ cargo fmt --check
 echo "==> cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
 
+echo "==> cargo bench --no-run (bench compile check)"
+cargo bench --no-run
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "==> cargo bench --bench microbench (writes ../BENCH_scoring.json)"
     cargo bench --bench microbench
+    echo "==> cargo bench --bench sketchbench (writes ../BENCH_sketch.json)"
+    cargo bench --bench sketchbench
 fi
 
 echo "CI OK"
