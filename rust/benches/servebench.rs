@@ -1,0 +1,167 @@
+//! Serving-path benchmarks — the perf harness for `stars::serve`
+//! (EXPERIMENTS.md §Serve).
+//!
+//! Run: `cargo bench --bench servebench`
+//!
+//! Besides the human-readable table, the run emits machine-readable
+//! `BENCH_serve.json` at the repo root (override with `STARS_BENCH_OUT`) so
+//! the serving trajectory — QPS, latency percentiles, recall@k — is tracked
+//! across PRs alongside `BENCH_scoring.json` and `BENCH_sketch.json`:
+//!
+//! * snapshot build (graph build + index export) wall time;
+//! * batched query throughput (QPS) at the host worker count;
+//! * single-query latency distribution (p50/p99);
+//! * recall@10 against brute-force scoring, and the brute-force QPS the
+//!   two-hop route-and-expand path replaces;
+//! * streaming inserts + compaction wall time.
+
+use stars::bench::{fmt_count, fmt_secs, percentile, time_once, time_runs, Table};
+use stars::data::synth;
+use stars::lsh::SimHash;
+use stars::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig, ServeMeasure};
+use stars::sim::CosineSim;
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+use stars::util::json::Json;
+use stars::util::pool;
+use std::path::PathBuf;
+
+const N: usize = 50_000;
+const DIM: usize = 100;
+const K: usize = 10;
+const BATCH_QUERIES: usize = 2000;
+const LATENCY_QUERIES: usize = 500;
+const RECALL_QUERIES: usize = 200;
+
+/// Where to write the machine-readable report: `STARS_BENCH_OUT`, else the
+/// repo root (benches run with CWD = rust/, so the root is one level up).
+fn bench_out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("STARS_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        PathBuf::from("../BENCH_serve.json")
+    } else {
+        PathBuf::from("BENCH_serve.json")
+    }
+}
+
+fn main() {
+    let workers = pool::default_workers();
+    let mut table = Table::new(&["stage", "n", "median", "rate"]);
+
+    let ds = synth::gaussian_mixture(N, DIM, 100, 0.1, 42);
+    let family = SimHash::new(DIM, 14, 7);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(8)
+        .leaders(10)
+        .threshold(0.5);
+
+    // Snapshot build: graph + index export.
+    let (build_s, (out, index)) = time_once(|| {
+        StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(params.clone())
+            .build_indexed(ServeConfig::default().route_reps(8).compact_limit(0))
+    });
+    let router_entries = index.router().num_entries();
+    table.row(vec![
+        "snapshot build (graph + index)".into(),
+        fmt_count(N as u64),
+        fmt_secs(build_s),
+        format!("{} router entries", fmt_count(router_entries as u64)),
+    ]);
+    let engine = QueryEngine::new(index, &family, ServeMeasure::Cosine, params).workers(workers);
+
+    // Batched throughput.
+    let qids: Vec<u32> = (0..BATCH_QUERIES as u32).map(|i| i * (N / BATCH_QUERIES) as u32).collect();
+    let queries = ds.subset(&qids);
+    let batch = time_runs(1, 5, || {
+        std::hint::black_box(engine.query(&queries, K));
+    });
+    let qps = BATCH_QUERIES as f64 / batch.median();
+    table.row(vec![
+        format!("batched queries (k={K}, {workers} workers)"),
+        fmt_count(BATCH_QUERIES as u64),
+        fmt_secs(batch.median()),
+        format!("{}/s", fmt_count(qps as u64)),
+    ]);
+
+    // Single-query latency distribution.
+    let mut lats = Vec::with_capacity(LATENCY_QUERIES);
+    for qi in 0..LATENCY_QUERIES {
+        let one = queries.subset(&[(qi % BATCH_QUERIES) as u32]);
+        let (s, _) = time_once(|| engine.query(&one, K));
+        lats.push(s);
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99) = (percentile(&lats, 0.50), percentile(&lats, 0.99));
+    table.row(vec![
+        "single-query latency".into(),
+        fmt_count(LATENCY_QUERIES as u64),
+        format!("p50 {}", fmt_secs(p50)),
+        format!("p99 {}", fmt_secs(p99)),
+    ]);
+
+    // Recall@10 vs brute force, plus the brute-force rate it replaces.
+    let rqueries = ds.subset(&qids[..RECALL_QUERIES]);
+    let got = engine.query(&rqueries, K);
+    let (bf_s, truth) = time_once(|| brute_force_topk(&ds, &rqueries, ServeMeasure::Cosine, K, workers));
+    let recall = truth
+        .iter()
+        .zip(got.iter())
+        .map(|(t, g)| recall_against(t, g))
+        .sum::<f64>()
+        / RECALL_QUERIES as f64;
+    let bf_qps = RECALL_QUERIES as f64 / bf_s;
+    table.row(vec![
+        format!("recall@{K} vs brute force"),
+        fmt_count(RECALL_QUERIES as u64),
+        format!("{recall:.4}"),
+        format!("brute {}/s", fmt_count(bf_qps as u64)),
+    ]);
+
+    // Streaming inserts + compaction.
+    let (insert_s, _) = time_once(|| {
+        for i in 0..1000 {
+            engine.insert(Some(ds.row(i)), None);
+        }
+    });
+    let (compact_s, _) = time_once(|| engine.compact());
+    table.row(vec![
+        "insert 1000 + compact".into(),
+        fmt_count(engine.num_indexed() as u64),
+        fmt_secs(compact_s),
+        format!("{}/s insert", fmt_count((1000.0 / insert_s) as u64)),
+    ]);
+
+    table.print();
+
+    let doc = Json::obj(vec![
+        ("schema", Json::from("stars-bench-serve/v1")),
+        ("bench", Json::from("servebench")),
+        ("workers", Json::from(workers)),
+        (
+            "dataset",
+            Json::from(format!("gaussian_mixture({N}, {DIM}, 100, 0.1, 42)")),
+        ),
+        ("algorithm", Json::from("lsh+stars")),
+        ("k", Json::from(K)),
+        ("edges", Json::from(out.graph.num_edges())),
+        ("router_entries", Json::from(router_entries)),
+        ("build_s", Json::from(build_s)),
+        ("batch_queries", Json::from(BATCH_QUERIES)),
+        ("batch_qps", Json::from(qps)),
+        ("latency_p50_ms", Json::from(p50 * 1e3)),
+        ("latency_p99_ms", Json::from(p99 * 1e3)),
+        ("recall_at_10", Json::from(recall)),
+        ("brute_force_qps", Json::from(bf_qps)),
+        ("insert_per_s", Json::from(1000.0 / insert_s)),
+        ("compact_s", Json::from(compact_s)),
+    ]);
+    let path = bench_out_path();
+    match std::fs::write(&path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}

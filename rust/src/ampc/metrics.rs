@@ -41,6 +41,22 @@ impl CostLedger {
         self.busy_nanos[worker % self.busy_nanos.len()].fetch_add(nanos, Ordering::Relaxed);
     }
 
+    /// Charge busy time from an in-repetition *inner* worker (the spare
+    /// cores a wave grants when it has fewer repetitions than machines).
+    ///
+    /// Accounting model: `Cluster::map_timed` already charges a
+    /// repetition's full wall time to one worker slot, and inner worker 0's
+    /// span is concurrent with (and bounded by) that wall charge — so only
+    /// workers ≥ 1 add machine-seconds. With this, Σ busy reflects the
+    /// machine-seconds a real fleet would spend instead of under-reporting
+    /// every multi-core repetition as one machine.
+    #[inline]
+    pub fn add_inner_busy(&self, worker: usize, nanos: u64) {
+        if worker > 0 {
+            self.add_busy(worker, nanos);
+        }
+    }
+
     /// Record `n` pairwise similarity evaluations.
     #[inline]
     pub fn add_comparisons(&self, n: u64) {
@@ -165,6 +181,17 @@ mod tests {
         assert_eq!(r.edges_emitted, 7);
         assert_eq!(r.dht_lookups, 1);
         assert_eq!(r.real_time, 2.0);
+    }
+
+    #[test]
+    fn inner_busy_skips_worker_zero() {
+        // Worker 0's span is concurrent with the rep's wall charge; only
+        // extra machines add to Σ busy.
+        let l = CostLedger::new(4);
+        l.add_inner_busy(0, 1_000_000_000);
+        assert_eq!(l.total_time(), 0.0);
+        l.add_inner_busy(2, 500_000_000);
+        assert!((l.total_time() - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -93,6 +93,95 @@ pub fn run_job(job: &Job) -> crate::Result<JobResult> {
     })
 }
 
+/// The serving-side measure for a job's measure spec. `Learned` scores
+/// through the PJRT engine, which has no batched query-row path yet.
+pub fn serve_measure(spec: MeasureSpec) -> crate::Result<crate::serve::ServeMeasure> {
+    use crate::serve::ServeMeasure;
+    Ok(match spec {
+        MeasureSpec::Cosine => ServeMeasure::Cosine,
+        MeasureSpec::Jaccard => ServeMeasure::Jaccard,
+        MeasureSpec::WeightedJaccard => ServeMeasure::WeightedJaccard,
+        MeasureSpec::Mixture => ServeMeasure::Mixture { alpha: 0.5 },
+        MeasureSpec::Learned => {
+            anyhow::bail!("the learned measure has no serving path yet (see ROADMAP)")
+        }
+    })
+}
+
+/// Build a job's graph, export a serving snapshot, and measure the query
+/// path: batch QPS, single-query latency percentiles, and recall@k against
+/// brute-force scoring. Query points are sampled from the dataset itself
+/// (the paper's recall protocol).
+pub fn run_serve(job: &Job, queries: usize, k: usize) -> crate::Result<Json> {
+    use crate::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig};
+    use std::time::Instant;
+    let dataset = job.dataset.realize(job.data_seed)?;
+    let smeasure = serve_measure(job.measure)?;
+    let measure = make_measure(job.measure)?;
+    let family = make_family(
+        job.family,
+        dataset.dim(),
+        derive_seed(job.params.seed, 0xFA),
+    );
+    let workers = if job.workers == 0 {
+        crate::util::pool::default_workers()
+    } else {
+        job.workers
+    };
+    let cfg = ServeConfig::default().route_reps(job.params.sketches.clamp(1, 8));
+    let t = Instant::now();
+    let (out, index) = StarsBuilder::new(&dataset)
+        .similarity(measure.as_ref())
+        .hash(family.as_ref())
+        .params(job.params.clone())
+        .workers(workers)
+        .build_indexed(cfg);
+    let build_s = t.elapsed().as_secs_f64();
+    let engine = QueryEngine::new(index, family.as_ref(), smeasure, job.params.clone())
+        .workers(workers);
+
+    let qids = crate::eval::recall::sample_queries(dataset.len(), queries, job.data_seed ^ 0x9E);
+    let qset = dataset.subset(&qids);
+    // Batch throughput.
+    let t = Instant::now();
+    let got = engine.query(&qset, k);
+    let batch_s = t.elapsed().as_secs_f64();
+    // Single-query latency distribution over a bounded prefix.
+    let lat_n = qids.len().min(200);
+    let mut lats = Vec::with_capacity(lat_n);
+    for qi in 0..lat_n {
+        let one = qset.subset(&[qi as u32]);
+        let t = Instant::now();
+        let _ = engine.query(&one, k);
+        lats.push(t.elapsed().as_secs_f64());
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Recall vs brute force with identical kernels and tie rule.
+    let truth = brute_force_topk(&dataset, &qset, smeasure, k, workers);
+    let recall = if got.is_empty() {
+        1.0
+    } else {
+        truth
+            .iter()
+            .zip(got.iter())
+            .map(|(t, g)| recall_against(t, g))
+            .sum::<f64>()
+            / got.len() as f64
+    };
+    Ok(Json::obj(vec![
+        ("job", job.to_json()),
+        ("edges", Json::from(out.graph.num_edges())),
+        ("router_entries", Json::from(engine.snapshot().router().num_entries())),
+        ("build_s", Json::from(build_s)),
+        ("queries", Json::from(qids.len())),
+        ("k", Json::from(k)),
+        ("batch_qps", Json::from(qids.len() as f64 / batch_s.max(1e-12))),
+        ("p50_ms", Json::from(crate::bench::percentile(&lats, 0.50) * 1e3)),
+        ("p99_ms", Json::from(crate::bench::percentile(&lats, 0.99) * 1e3)),
+        ("recall_at_k", Json::from(recall)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +223,39 @@ mod tests {
         };
         let res = run_job(&job).unwrap();
         assert!(res.graph.num_edges() > 0);
+    }
+
+    #[test]
+    fn run_serve_reports_recall_and_latency() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 600,
+                dim: 16,
+                modes: 8,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                .sketches(8)
+                .threshold(0.4),
+            data_seed: 7,
+            workers: 2,
+        };
+        let doc = run_serve(&job, 40, 5).unwrap();
+        let recall = doc.get("recall_at_k").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&recall), "recall {recall}");
+        assert!(doc.get("batch_qps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(doc.get("p99_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(doc.get("k").unwrap().as_usize().unwrap(), 5);
+    }
+
+    #[test]
+    fn learned_measure_has_no_serve_path() {
+        assert!(serve_measure(MeasureSpec::Learned).is_err());
+        assert_eq!(
+            serve_measure(MeasureSpec::Mixture).unwrap(),
+            crate::serve::ServeMeasure::Mixture { alpha: 0.5 }
+        );
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod synth;
 pub mod io;
 pub mod mnist;
 
-pub use types::{Dataset, FeatureKind, WeightedSet};
+pub use types::{Dataset, FeatureKind, TokenVocab, WeightedSet};

@@ -4,6 +4,81 @@
 //! scoring; weighted sets are per-point sorted token lists. A dataset may
 //! carry either or both (the Amazon2m analogue carries both: an embedding
 //! vector and a co-purchase token set).
+//!
+//! Set datasets additionally carry a lazily built [`TokenVocab`]: the
+//! repetition-invariant token → dense-slot map that the set-family sketch
+//! caches (MinHash, WeightedMinHash) previously rediscovered with a full
+//! dataset pass on *every* repetition. It is built once on first use and
+//! shared across families and repetitions via `Arc`.
+
+use crate::util::fxhash::FxHashMap;
+use std::sync::{Arc, OnceLock};
+
+/// Cap on distinct tokens the vocabulary will index. Past this the scan
+/// aborts and the vocabulary reports [`TokenVocab::overflow`], signalling
+/// sketch caches to fall back to on-the-fly derivation rather than let a
+/// pathological token universe blow up resident memory.
+pub const TOKEN_VOCAB_MAX: usize = 1 << 22;
+
+/// The repetition-invariant token universe of a dataset: each distinct
+/// token mapped to a dense slot in first-occurrence order.
+#[derive(Clone, Debug, Default)]
+pub struct TokenVocab {
+    /// token -> slot, slots dense in `0..len()`.
+    slots: FxHashMap<u32, u32>,
+    /// True when discovery aborted at [`TOKEN_VOCAB_MAX`] distinct tokens;
+    /// `slots` is then incomplete and must not be used.
+    overflow: bool,
+}
+
+impl TokenVocab {
+    fn build(sets: &[WeightedSet]) -> TokenVocab {
+        let mut slots: FxHashMap<u32, u32> = FxHashMap::default();
+        for set in sets {
+            for &tok in &set.tokens {
+                let next = slots.len() as u32;
+                slots.entry(tok).or_insert(next);
+                if slots.len() > TOKEN_VOCAB_MAX {
+                    return TokenVocab {
+                        slots: FxHashMap::default(),
+                        overflow: true,
+                    };
+                }
+            }
+        }
+        TokenVocab {
+            slots,
+            overflow: false,
+        }
+    }
+
+    /// Number of distinct tokens indexed (0 on overflow).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no tokens are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// True when the universe exceeded [`TOKEN_VOCAB_MAX`] and the map is
+    /// unusable.
+    pub fn overflow(&self) -> bool {
+        self.overflow
+    }
+
+    /// Dense slot of `token`, if it occurs in the dataset.
+    #[inline]
+    pub fn slot(&self, token: u32) -> Option<u32> {
+        self.slots.get(&token).copied()
+    }
+
+    /// Iterate `(token, slot)` pairs (unspecified order).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.slots.iter().map(|(&t, &s)| (t, s))
+    }
+}
 
 /// A weighted set feature: sorted unique `(token, weight)` pairs.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -84,6 +159,10 @@ pub struct Dataset {
     /// Ground-truth class labels (empty if none).
     pub labels: Vec<u32>,
     n: usize,
+    /// Lazily built shared token universe (see [`Dataset::token_vocab`]).
+    /// Reset by every constructor and mutation; cloning a dataset carries
+    /// the already-built vocabulary along (same points, same universe).
+    vocab: OnceLock<Arc<TokenVocab>>,
 }
 
 impl Dataset {
@@ -109,6 +188,7 @@ impl Dataset {
             sets: Vec::new(),
             labels,
             n,
+            vocab: OnceLock::new(),
         }
     }
 
@@ -124,6 +204,7 @@ impl Dataset {
             sets,
             labels,
             n,
+            vocab: OnceLock::new(),
         }
     }
 
@@ -206,6 +287,113 @@ impl Dataset {
             sets: self.sets.iter().take(k).cloned().collect(),
             labels: self.labels.iter().take(k).copied().collect(),
             n: k,
+            vocab: OnceLock::new(),
+        }
+    }
+
+    /// The shared token universe, built on first call (one pass over all
+    /// token occurrences) and cached for the dataset's lifetime. Sketch
+    /// caches key their per-repetition tables by these slots, so the
+    /// per-repetition cost drops to the per-rep draws alone.
+    pub fn token_vocab(&self) -> &Arc<TokenVocab> {
+        self.vocab
+            .get_or_init(|| Arc::new(TokenVocab::build(&self.sets)))
+    }
+
+    /// Select a subset of points by id (queries sampled from a dataset,
+    /// serve-side test fixtures). Labels follow when present.
+    pub fn subset(&self, ids: &[u32]) -> Dataset {
+        let mut dense = Vec::with_capacity(ids.len() * self.dim);
+        let mut norms = Vec::with_capacity(ids.len().min(self.norms.len()));
+        let mut sets = Vec::new();
+        let mut labels = Vec::new();
+        for &i in ids {
+            let i = i as usize;
+            if self.dim > 0 {
+                dense.extend_from_slice(self.row(i));
+                norms.push(self.norms[i]);
+            }
+            if !self.sets.is_empty() {
+                sets.push(self.sets[i].clone());
+            }
+            if !self.labels.is_empty() {
+                labels.push(self.labels[i]);
+            }
+        }
+        Dataset {
+            name: self.name.clone(),
+            dim: self.dim,
+            dense,
+            norms,
+            sets,
+            labels,
+            n: ids.len(),
+            vocab: OnceLock::new(),
+        }
+    }
+
+    /// Append one point carrying the same feature kinds as this dataset:
+    /// a dense row when `dim > 0`, a token set when sets are present. The
+    /// serving delta buffer grows through this; labels stay untouched (new
+    /// points are unlabeled), and the cached vocabulary is invalidated.
+    /// Returns the new point's id.
+    pub fn push_point(&mut self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
+        if self.dim > 0 {
+            let row = row.expect("dataset has dense features; row required");
+            assert_eq!(row.len(), self.dim, "row dimension mismatch");
+            self.dense.extend_from_slice(row);
+            self.norms
+                .push(row.iter().map(|x| x * x).sum::<f32>().sqrt());
+        } else {
+            assert!(row.is_none(), "dataset has no dense features");
+        }
+        match set {
+            // The caller decides the feature kind by what it passes; all we
+            // enforce is that set features stay aligned with the point count
+            // (so a kind cannot change mid-stream).
+            Some(s) => {
+                assert_eq!(self.sets.len(), self.n, "set features out of sync");
+                self.sets.push(s);
+            }
+            None => assert!(self.sets.is_empty(), "dataset has set features; set required"),
+        }
+        self.n += 1;
+        self.vocab = OnceLock::new();
+        self.n as u32 - 1
+    }
+
+    /// New dataset with `other`'s points appended (same feature kinds and
+    /// dense dimension required). Labels are kept only when both sides
+    /// carry them — the serving compaction path appends unlabeled deltas.
+    pub fn concat(&self, other: &Dataset) -> Dataset {
+        assert_eq!(self.dim, other.dim, "dense dimension mismatch");
+        assert_eq!(
+            self.sets.is_empty(),
+            other.sets.is_empty(),
+            "set feature mismatch"
+        );
+        let mut dense = self.dense.clone();
+        dense.extend_from_slice(&other.dense);
+        let mut norms = self.norms.clone();
+        norms.extend_from_slice(&other.norms);
+        let mut sets = self.sets.clone();
+        sets.extend(other.sets.iter().cloned());
+        let labels = if !self.labels.is_empty() && !other.labels.is_empty() {
+            let mut l = self.labels.clone();
+            l.extend_from_slice(&other.labels);
+            l
+        } else {
+            Vec::new()
+        };
+        Dataset {
+            name: self.name.clone(),
+            dim: self.dim,
+            dense,
+            norms,
+            sets,
+            labels,
+            n: self.n + other.n,
+            vocab: OnceLock::new(),
         }
     }
 }
@@ -261,5 +449,80 @@ mod tests {
     #[should_panic]
     fn bad_dense_len_panics() {
         Dataset::from_dense("t", 3, vec![1.0; 4], vec![]);
+    }
+
+    #[test]
+    fn token_vocab_is_dense_and_cached() {
+        let ds = Dataset::from_sets(
+            "t",
+            vec![
+                WeightedSet::from_tokens(vec![5, 9]),
+                WeightedSet::from_tokens(vec![9, 30]),
+            ],
+            vec![],
+        );
+        let v = ds.token_vocab();
+        assert_eq!(v.len(), 3);
+        assert!(!v.overflow());
+        let mut slots: Vec<u32> = [5u32, 9, 30].iter().map(|&t| v.slot(t).unwrap()).collect();
+        slots.sort_unstable();
+        assert_eq!(slots, vec![0, 1, 2], "slots not dense");
+        assert_eq!(v.slot(7), None);
+        // Second call returns the same cached Arc.
+        assert!(Arc::ptr_eq(v, ds.token_vocab()));
+        // Clones carry the built vocabulary along.
+        let clone = ds.clone();
+        assert_eq!(clone.token_vocab().len(), 3);
+    }
+
+    #[test]
+    fn subset_selects_rows_sets_and_labels() {
+        let sets = vec![
+            WeightedSet::from_tokens(vec![1]),
+            WeightedSet::from_tokens(vec![2]),
+            WeightedSet::from_tokens(vec![3]),
+        ];
+        let ds = Dataset::hybrid(
+            "h",
+            2,
+            vec![1.0, 0.0, 0.0, 2.0, 3.0, 0.0],
+            sets,
+            vec![7, 8, 9],
+        );
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.row(0), &[3.0, 0.0]);
+        assert_eq!(sub.row(1), &[1.0, 0.0]);
+        assert!((sub.norm(0) - 3.0).abs() < 1e-6);
+        assert_eq!(sub.set(0).tokens, vec![3]);
+        assert_eq!(sub.labels, vec![9, 7]);
+    }
+
+    #[test]
+    fn push_point_and_concat_grow_consistently() {
+        let mut delta = Dataset::from_dense("d", 2, Vec::new(), vec![]);
+        assert_eq!(delta.len(), 0);
+        assert_eq!(delta.push_point(Some(&[3.0, 4.0]), None), 0);
+        assert_eq!(delta.push_point(Some(&[0.0, 1.0]), None), 1);
+        assert_eq!(delta.len(), 2);
+        assert!((delta.norm(0) - 5.0).abs() < 1e-6);
+        let base = Dataset::from_dense("b", 2, vec![1.0, 0.0], vec![0]);
+        let merged = base.concat(&delta);
+        assert_eq!(merged.len(), 3);
+        assert_eq!(merged.row(1), &[3.0, 4.0]);
+        assert!(merged.labels.is_empty(), "labels must drop on unlabeled concat");
+        assert_eq!(merged.norms.len(), 3);
+    }
+
+    #[test]
+    fn push_point_sets_only() {
+        let mut delta = Dataset::from_sets("d", Vec::new(), vec![]);
+        delta.push_point(None, Some(WeightedSet::from_tokens(vec![4, 5])));
+        assert_eq!(delta.len(), 1);
+        assert_eq!(delta.set(0).tokens, vec![4, 5]);
+        assert_eq!(delta.token_vocab().len(), 2);
+        // Vocab invalidates on the next push.
+        delta.push_point(None, Some(WeightedSet::from_tokens(vec![6])));
+        assert_eq!(delta.token_vocab().len(), 3);
     }
 }

@@ -1,11 +1,95 @@
 //! Two-hop neighborhood queries — the machinery behind Figure 2's recall
-//! metrics and the two-hop spanner definition (Definition 2.4).
+//! metrics, the two-hop spanner definition (Definition 2.4), and the serving
+//! path's candidate expansion ([`crate::serve`]).
 
 use super::csr::Csr;
 use crate::util::fxhash::FxHashSet;
 
+/// Reusable visited-mark scratch for neighborhood expansion.
+///
+/// The recall metrics build an `FxHashSet` per query, which is fine offline
+/// but allocates and hashes on every membership test. The serving hot path
+/// instead stamps nodes in a flat `Vec<u32>` keyed by an epoch counter:
+/// `begin` bumps the epoch (O(1) reset), `mark` is one indexed load/store.
+/// One scratch per worker thread serves any number of queries.
+#[derive(Clone, Debug, Default)]
+pub struct VisitScratch {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl VisitScratch {
+    /// Scratch sized for graphs of up to `n` nodes (grows on demand).
+    pub fn new(n: usize) -> VisitScratch {
+        VisitScratch {
+            stamp: vec![0; n],
+            epoch: 0,
+        }
+    }
+
+    /// Start a fresh visited set over `n` nodes.
+    pub fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        if self.epoch == u32::MAX {
+            // Epoch wrap: clear the stamps once every 2^32 - 1 queries.
+            self.stamp.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Mark `v` visited; true if it was not already marked this epoch.
+    #[inline]
+    pub fn mark(&mut self, v: u32) -> bool {
+        let slot = &mut self.stamp[v as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
+    }
+
+    /// True if `v` has been marked since the last `begin`.
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        self.stamp[v as usize] == self.epoch
+    }
+}
+
+/// Append the ≤ 2-hop neighborhood of `p` (edges with weight ≥ `min_w`;
+/// excluding `p` itself) to `out`, skipping nodes already marked in `visit`.
+///
+/// `p` is marked as a side effect, so repeated calls with different seeds
+/// and a shared `visit` (the serving path: one call per routed leader)
+/// produce a duplicate-free candidate list in deterministic expansion
+/// order. Allocation-free given warm buffers.
+pub fn two_hop_into(csr: &Csr, p: u32, min_w: f32, visit: &mut VisitScratch, out: &mut Vec<u32>) {
+    visit.mark(p);
+    for (q, w1) in csr.neighbors(p) {
+        if w1 < min_w {
+            continue;
+        }
+        if visit.mark(q) {
+            out.push(q);
+        }
+        for (r, w2) in csr.neighbors(q) {
+            if w2 >= min_w && visit.mark(r) {
+                out.push(r);
+            }
+        }
+    }
+}
+
 /// The set of nodes reachable from `p` in ≤ 2 hops using only edges with
 /// weight ≥ `min_w`. Excludes `p` itself.
+///
+/// Offline/metrics variant: cost scales with the neighborhood, not the
+/// graph (the recall sweeps call this per query with no scratch to reuse).
+/// The serving hot path uses [`two_hop_into`] with a per-thread
+/// [`VisitScratch`] instead.
 pub fn two_hop_set(csr: &Csr, p: u32, min_w: f32) -> FxHashSet<u32> {
     let mut out = FxHashSet::default();
     for (q, w1) in csr.neighbors(p) {
@@ -110,6 +194,57 @@ mod tests {
         assert!(h2.contains(&0) && !h2.contains(&2));
         let h2_relaxed = two_hop_set(&csr, 1, 0.25);
         assert!(h2_relaxed.contains(&2));
+    }
+
+    #[test]
+    fn two_hop_into_matches_set_and_dedups_across_seeds() {
+        let csr = csr_of(
+            6,
+            vec![
+                Edge::new(0, 1, 0.9),
+                Edge::new(1, 2, 0.8),
+                Edge::new(2, 3, 0.7),
+                Edge::new(4, 5, 0.6),
+            ],
+        );
+        // Single-seed expansion equals the set variant.
+        for p in 0..6u32 {
+            let mut visit = VisitScratch::new(6);
+            visit.begin(6);
+            let mut out = Vec::new();
+            two_hop_into(&csr, p, 0.5, &mut visit, &mut out);
+            let set: FxHashSet<u32> = out.iter().copied().collect();
+            assert_eq!(set.len(), out.len(), "duplicates from seed {p}");
+            assert_eq!(set, two_hop_set(&csr, p, 0.5), "seed {p}");
+        }
+        // Shared scratch across seeds: overlapping neighborhoods dedup, and
+        // no seed ever appears in the combined candidate list.
+        let mut visit = VisitScratch::new(6);
+        visit.begin(6);
+        let mut out = Vec::new();
+        for p in [0u32, 2] {
+            visit.mark(p);
+            two_hop_into(&csr, p, 0.5, &mut visit, &mut out);
+        }
+        let set: FxHashSet<u32> = out.iter().copied().collect();
+        assert_eq!(set.len(), out.len(), "duplicates across seeds");
+        assert!(!out.contains(&0) && !out.contains(&2));
+        assert!(set.contains(&1) && set.contains(&3));
+    }
+
+    #[test]
+    fn visit_scratch_epochs_reset_in_constant_time() {
+        let mut v = VisitScratch::new(3);
+        v.begin(3);
+        assert!(v.mark(1));
+        assert!(!v.mark(1));
+        assert!(v.contains(1));
+        v.begin(3);
+        assert!(!v.contains(1), "epoch bump did not reset");
+        assert!(v.mark(1));
+        // Growing n on a later begin is allowed.
+        v.begin(10);
+        assert!(v.mark(9));
     }
 
     #[test]

@@ -52,6 +52,7 @@ pub mod lsh;
 pub mod graph;
 pub mod ampc;
 pub mod stars;
+pub mod serve;
 pub mod clustering;
 pub mod eval;
 pub mod runtime;

@@ -20,8 +20,10 @@ use crate::util::fxhash;
 /// All methods evaluate a contiguous point range `lo..lo + count` where
 /// `count` is implied by the output slice length; the drivers in
 /// [`crate::lsh::sketch`] call them from multiple pool threads at once, so
-/// implementations must be immutable after `prepare` (hence `Sync`).
-pub trait SketchState: Sync {
+/// implementations must be immutable after `prepare` (hence `Sync`). The
+/// serving layer additionally retains states inside `Arc`-shared snapshots
+/// that hop threads on epoch swaps (hence `Send`).
+pub trait SketchState: Send + Sync {
     /// Bucket keys of points `lo..lo + out.len()` into `out`.
     fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]);
 

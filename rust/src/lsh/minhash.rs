@@ -2,10 +2,16 @@
 //!
 //! `Pr[h(A) = h(B)] = |A∩B| / |A∪B|` exactly, per base hash.
 
-use crate::data::types::Dataset;
+use crate::data::types::{Dataset, TokenVocab};
 use crate::lsh::family::{combine_symbols, LshFamily, SketchState};
 use crate::util::fxhash;
 use crate::util::rng::SplitMix64;
+use std::sync::Arc;
+
+/// Cap on cached permutation entries (distinct tokens × perms), matching
+/// the CWS cache bound: past it the state falls back to on-the-fly mixing
+/// so a pathological token universe cannot blow up per-repetition memory.
+const MINHASH_CACHE_MAX_ENTRIES: usize = 1 << 21;
 
 /// MinHash family over (unweighted) token sets.
 #[derive(Clone, Debug)]
@@ -45,23 +51,84 @@ impl MinHash {
     }
 }
 
-/// Per-repetition MinHash state. The permutations are stateless mixes of
-/// `(token, rep, t)`, so there is nothing to cache — the state's value is
-/// the range-batched evaluation (one symbol buffer reused across a whole
-/// chunk instead of a per-point allocation in the generic path).
+/// Per-repetition MinHash state: the per-(distinct token, t) permutation
+/// table, keyed by the dataset's shared [`TokenVocab`] slots.
+///
+/// The permutations are stateless mixes of `(token, rep, t)`, but the seed
+/// path re-ran the mix for every *occurrence* of a token (every point ×
+/// every permutation). With the table, a repetition pays |vocab|·M mixes up
+/// front and each occurrence is one indexed load. Tokens outside the vocab
+/// (query points on the serving path, or an over-cap universe) fall back to
+/// the on-the-fly mix; table entries hold the exact values
+/// [`MinHash::perm_value`] computes, so symbols are bit-identical either way.
 struct MinHashState<'a> {
     h: &'a MinHash,
     rep: u64,
+    /// The prepare-time token universe; `None` when caching is disabled
+    /// (overflowed vocab or over-cap table).
+    vocab: Option<Arc<TokenVocab>>,
+    /// `table[slot * perms + t]` = perm_value(token_of(slot), rep, t).
+    table: Vec<u64>,
+}
+
+impl<'a> MinHashState<'a> {
+    fn new(h: &'a MinHash, ds: &Dataset, rep: u64) -> Self {
+        let vocab = ds.token_vocab();
+        if vocab.overflow() || vocab.len() * h.perms > MINHASH_CACHE_MAX_ENTRIES {
+            return MinHashState {
+                h,
+                rep,
+                vocab: None,
+                table: Vec::new(),
+            };
+        }
+        let mut table = vec![0u64; vocab.len() * h.perms];
+        for (tok, slot) in vocab.iter() {
+            let base = slot as usize * h.perms;
+            for (t, v) in table[base..base + h.perms].iter_mut().enumerate() {
+                *v = h.perm_value(tok, rep, t);
+            }
+        }
+        MinHashState {
+            h,
+            rep,
+            vocab: Some(Arc::clone(vocab)),
+            table,
+        }
+    }
+
+    /// Fill `best` (one min slot per permutation) for a token list.
+    fn point_min(&self, tokens: &[u32], best: &mut [u64]) {
+        best.fill(u64::MAX);
+        let m = self.h.perms;
+        for &tok in tokens {
+            match self.vocab.as_ref().and_then(|v| v.slot(tok)) {
+                Some(slot) => {
+                    let vals = &self.table[slot as usize * m..(slot as usize + 1) * m];
+                    for (b, &v) in best.iter_mut().zip(vals.iter()) {
+                        if v < *b {
+                            *b = v;
+                        }
+                    }
+                }
+                None => {
+                    for (t, b) in best.iter_mut().enumerate() {
+                        let v = self.h.perm_value(tok, self.rep, t);
+                        if v < *b {
+                            *b = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl SketchState for MinHashState<'_> {
     fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
         let mut buf = vec![0u64; self.h.perms];
         for (k, key) in out.iter_mut().enumerate() {
-            let tokens = &ds.set(lo + k).tokens;
-            for (t, b) in buf.iter_mut().enumerate() {
-                *b = self.h.symbol_of_set(tokens, self.rep, t);
-            }
+            self.point_min(&ds.set(lo + k).tokens, &mut buf);
             *key = combine_symbols(&buf);
         }
     }
@@ -69,10 +136,7 @@ impl SketchState for MinHashState<'_> {
     fn symbols_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]) {
         let m = self.h.perms;
         for (k, row) in out.chunks_mut(m).enumerate() {
-            let tokens = &ds.set(lo + k).tokens;
-            for (t, o) in row.iter_mut().enumerate() {
-                *o = self.h.symbol_of_set(tokens, self.rep, t);
-            }
+            self.point_min(&ds.set(lo + k).tokens, row);
         }
     }
 }
@@ -86,8 +150,8 @@ impl LshFamily for MinHash {
         self.perms
     }
 
-    fn prepare<'a>(&'a self, _ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a> {
-        Box::new(MinHashState { h: self, rep })
+    fn prepare<'a>(&'a self, ds: &Dataset, rep: u64) -> Box<dyn SketchState + 'a> {
+        Box::new(MinHashState::new(self, ds, rep))
     }
 
     fn symbols(&self, ds: &Dataset, i: usize, rep: u64, out: &mut [u64]) {
@@ -160,5 +224,43 @@ mod tests {
     fn empty_set_symbol_is_sentinel() {
         let h = MinHash::new(2, 1);
         assert_eq!(h.symbol_of_set(&[], 0, 0), u64::MAX);
+    }
+
+    #[test]
+    fn cached_state_matches_per_point_path() {
+        let ds = crate::data::synth::zipf_sets(
+            150,
+            &crate::data::synth::ZipfSetsParams::default(),
+            19,
+        );
+        let h = MinHash::new(4, 21);
+        for rep in [0u64, 5] {
+            let batch = h.bucket_keys(&ds, rep);
+            for i in 0..ds.len() {
+                assert_eq!(batch[i], h.bucket_key(&ds, i, rep), "point {i} rep {rep}");
+            }
+            let mat = h.symbol_matrix(&ds, rep);
+            let mut buf = vec![0u64; 4];
+            for i in 0..ds.len() {
+                h.symbols(&ds, i, rep, &mut buf);
+                assert_eq!(&mat[i * 4..(i + 1) * 4], &buf[..], "point {i} rep {rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_falls_back_for_out_of_vocab_tokens() {
+        // Prepare against one dataset, evaluate another whose tokens the
+        // table has never seen (the serving query path): symbols must match
+        // the stateless per-point mix exactly.
+        let index_ds = two_set_ds(vec![1, 2, 3], vec![2, 3, 4]);
+        let query_ds = two_set_ds(vec![900, 901], vec![1, 900]);
+        let h = MinHash::new(3, 8);
+        let state = h.prepare(&index_ds, 2);
+        let mut keys = vec![0u64; 2];
+        state.bucket_keys_into(&query_ds, 0, &mut keys);
+        for i in 0..2 {
+            assert_eq!(keys[i], h.bucket_key(&query_ds, i, 2), "query {i}");
+        }
     }
 }

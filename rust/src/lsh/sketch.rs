@@ -41,13 +41,30 @@ pub fn bucket_keys_par<F: LshFamily + ?Sized>(
     rep: u64,
     workers: usize,
 ) -> Vec<u64> {
+    bucket_keys_par_timed(family, ds, rep, workers, |_, _| {})
+}
+
+/// [`bucket_keys_par`] reporting per-chunk busy spans to `busy` — the
+/// builder threads its ledger through here so inner-worker machine-seconds
+/// land in Σ busy (see `CostLedger::add_inner_busy`).
+pub fn bucket_keys_par_timed<F, B>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+    busy: B,
+) -> Vec<u64>
+where
+    F: LshFamily + ?Sized,
+    B: Fn(usize, u64) + Sync,
+{
     let n = ds.len();
     let mut out = vec![0u64; n];
     if n == 0 {
         return out;
     }
     let state = family.prepare(ds, rep);
-    pool::parallel_fill(&mut out, chunk_points(n, workers), |lo, slice| {
+    pool::parallel_fill_timed(&mut out, chunk_points(n, workers), busy, |lo, slice| {
         state.bucket_keys_into(ds, lo, slice)
     });
     out
@@ -60,6 +77,21 @@ pub fn symbol_matrix_par<F: LshFamily + ?Sized>(
     rep: u64,
     workers: usize,
 ) -> Vec<u64> {
+    symbol_matrix_par_timed(family, ds, rep, workers, |_, _| {})
+}
+
+/// [`symbol_matrix_par`] with per-chunk busy reporting.
+pub fn symbol_matrix_par_timed<F, B>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+    busy: B,
+) -> Vec<u64>
+where
+    F: LshFamily + ?Sized,
+    B: Fn(usize, u64) + Sync,
+{
     let n = ds.len();
     let m = family.sketch_len();
     let mut out = vec![0u64; n * m];
@@ -69,7 +101,7 @@ pub fn symbol_matrix_par<F: LshFamily + ?Sized>(
     let state = family.prepare(ds, rep);
     // Chunk boundaries must land on row boundaries: chunk in points, scale
     // to elements, and recover the first point from the element offset.
-    pool::parallel_fill(&mut out, chunk_points(n, workers) * m, |off, slice| {
+    pool::parallel_fill_timed(&mut out, chunk_points(n, workers) * m, busy, |off, slice| {
         state.symbols_into(ds, off / m, slice)
     });
     out
@@ -83,6 +115,21 @@ pub fn packed_sort_keys_par<F: LshFamily + ?Sized>(
     rep: u64,
     workers: usize,
 ) -> Option<Vec<u64>> {
+    packed_sort_keys_par_timed(family, ds, rep, workers, |_, _| {})
+}
+
+/// [`packed_sort_keys_par`] with per-chunk busy reporting.
+pub fn packed_sort_keys_par_timed<F, B>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+    busy: B,
+) -> Option<Vec<u64>>
+where
+    F: LshFamily + ?Sized,
+    B: Fn(usize, u64) + Sync,
+{
     if !family.supports_packed_sort() {
         return None;
     }
@@ -92,7 +139,7 @@ pub fn packed_sort_keys_par<F: LshFamily + ?Sized>(
         return Some(out);
     }
     let state = family.prepare(ds, rep);
-    pool::parallel_fill(&mut out, chunk_points(n, workers), |lo, slice| {
+    pool::parallel_fill_timed(&mut out, chunk_points(n, workers), busy, |lo, slice| {
         state.packed_sort_keys_into(ds, lo, slice)
     });
     Some(out)

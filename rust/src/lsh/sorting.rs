@@ -59,10 +59,29 @@ pub fn sorted_indices_par<F: LshFamily + ?Sized>(
     rep: u64,
     workers: usize,
 ) -> Vec<u32> {
-    if let Some(keys) = sketch::packed_sort_keys_par(family, ds, rep, workers) {
+    sorted_indices_par_timed(family, ds, rep, workers, |_, _| {})
+}
+
+/// [`sorted_indices_par`] reporting per-chunk sketch busy spans to `busy`
+/// (the radix/comparison sort itself is serial and stays on the caller's
+/// wall-clock charge).
+pub fn sorted_indices_par_timed<F, B>(
+    family: &F,
+    ds: &Dataset,
+    rep: u64,
+    workers: usize,
+    busy: B,
+) -> Vec<u32>
+where
+    F: LshFamily + ?Sized,
+    B: Fn(usize, u64) + Sync,
+{
+    if let Some(keys) = sketch::packed_sort_keys_par_timed(family, ds, rep, workers, &busy) {
         return radix::argsort_u64(&keys);
     }
-    sorted_order_par(family, ds, rep, workers).order
+    let m = family.sketch_len();
+    let symbols = sketch::symbol_matrix_par_timed(family, ds, rep, workers, &busy);
+    sort_by_symbol_rows(ds.len(), &symbols, m)
 }
 
 /// Compute the lexicographic order of all points under repetition `rep`.
@@ -79,13 +98,19 @@ pub fn sorted_order_par<F: LshFamily + ?Sized>(
 ) -> SortedOrder {
     let m = family.sketch_len();
     let symbols = sketch::symbol_matrix_par(family, ds, rep, workers);
-    let mut order: Vec<u32> = (0..ds.len() as u32).collect();
+    let order = sort_by_symbol_rows(ds.len(), &symbols, m);
+    SortedOrder { order, symbols, m }
+}
+
+/// Lexicographic index order over symbol rows, ties broken by index.
+fn sort_by_symbol_rows(n: usize, symbols: &[u64], m: usize) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
     order.sort_unstable_by(|&a, &b| {
         let ra = &symbols[a as usize * m..(a as usize + 1) * m];
         let rb = &symbols[b as usize * m..(b as usize + 1) * m];
         ra.cmp(rb).then(a.cmp(&b))
     });
-    SortedOrder { order, symbols, m }
+    order
 }
 
 /// Split `n` sorted positions into windows of size ≤ `w`, with the first

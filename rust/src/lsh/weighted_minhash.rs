@@ -14,11 +14,16 @@
 //! table turns most of the sketch phase into table lookups. Table values are
 //! the same doubles the on-the-fly path computes, so symbols are
 //! bit-identical either way.
+//!
+//! The token → slot map itself is repetition-invariant, so it lives on the
+//! dataset as the shared [`TokenVocab`] (one discovery pass per dataset,
+//! not one per repetition) — `prepare` performs only the per-rep CWS draws.
 
-use crate::data::types::Dataset;
+use crate::data::types::{Dataset, TokenVocab};
 use crate::lsh::family::{combine_symbols, LshFamily, SketchState};
-use crate::util::fxhash::{self, FxHashMap};
+use crate::util::fxhash;
 use crate::util::rng::SplitMix64;
+use std::sync::Arc;
 
 /// Cap on cached CWS entries (distinct tokens × perms): past this the state
 /// falls back to on-the-fly derivation so a pathological token universe
@@ -103,41 +108,33 @@ fn offer_symbol(best: &mut (f64, u64), p: &CwsParam, ln_w: f64, tok: u32) {
     }
 }
 
-/// Per-repetition CWS state: the per-distinct-token parameter table (or the
-/// fallback marker when the universe exceeds [`CWS_CACHE_MAX_ENTRIES`]).
+/// Per-repetition CWS state: the per-distinct-token parameter table keyed
+/// by the dataset's shared [`TokenVocab`] slots (or the fallback marker
+/// when the universe exceeds [`CWS_CACHE_MAX_ENTRIES`]).
 struct WeightedMinHashState<'a> {
     h: &'a WeightedMinHash,
     rep: u64,
-    /// token -> slot; `params[slot * perms + t]` is the (token, t) draw.
-    slots: FxHashMap<u32, u32>,
+    /// The prepare-time token universe; `None` disables the table.
+    vocab: Option<Arc<TokenVocab>>,
+    /// `params[slot * perms + t]` is the (token_of(slot), t) draw.
     params: Vec<CwsParam>,
 }
 
 impl<'a> WeightedMinHashState<'a> {
     fn new(h: &'a WeightedMinHash, ds: &Dataset, rep: u64) -> Self {
-        // The distinct-token cap in slot units; bail out of the discovery
-        // scan the moment it trips so an over-cap universe doesn't pay a
-        // full dataset pass just to throw it away.
-        let max_slots = CWS_CACHE_MAX_ENTRIES / h.perms.max(1);
-        let mut slots: FxHashMap<u32, u32> = FxHashMap::default();
-        'scan: for i in 0..ds.len() {
-            for &tok in &ds.set(i).tokens {
-                let next = slots.len() as u32;
-                slots.entry(tok).or_insert(next);
-                if slots.len() > max_slots {
-                    break 'scan;
-                }
-            }
-        }
-        if slots.len() > max_slots {
+        // The repetition-invariant token -> slot map comes from the shared
+        // per-dataset vocabulary (built once, reused by every repetition
+        // and family); this function only performs the per-rep CWS draws.
+        let vocab = ds.token_vocab();
+        if vocab.overflow() || vocab.len() * h.perms > CWS_CACHE_MAX_ENTRIES {
             return WeightedMinHashState {
                 h,
                 rep,
-                slots: FxHashMap::default(),
+                vocab: None,
                 params: Vec::new(),
             };
         }
-        let entries = slots.len() * h.perms;
+        let entries = vocab.len() * h.perms;
         let mut params = vec![
             CwsParam {
                 r: 0.0,
@@ -146,7 +143,7 @@ impl<'a> WeightedMinHashState<'a> {
             };
             entries
         ];
-        for (&tok, &slot) in &slots {
+        for (tok, slot) in vocab.iter() {
             let base = slot as usize * h.perms;
             for (t, p) in params[base..base + h.perms].iter_mut().enumerate() {
                 *p = h.cws_param(rep, tok, t);
@@ -155,7 +152,7 @@ impl<'a> WeightedMinHashState<'a> {
         WeightedMinHashState {
             h,
             rep,
-            slots,
+            vocab: Some(Arc::clone(vocab)),
             params,
         }
     }
@@ -171,8 +168,8 @@ impl<'a> WeightedMinHashState<'a> {
                 continue;
             }
             let ln_w = w.ln();
-            match self.slots.get(&tok) {
-                Some(&slot) => {
+            match self.vocab.as_ref().and_then(|v| v.slot(tok)) {
+                Some(slot) => {
                     let ps = &self.params[slot as usize * m..(slot as usize + 1) * m];
                     for (b, p) in best.iter_mut().zip(ps.iter()) {
                         offer_symbol(b, p, ln_w, tok);
@@ -312,6 +309,37 @@ mod tests {
         let a = h.symbol_of_set(&[1, 2], &[1.0, 0.0], 0, 0);
         let b = h.symbol_of_set(&[1], &[1.0], 0, 0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prepare_reuses_the_shared_vocab_across_reps() {
+        let ds = crate::data::synth::zipf_sets(
+            80,
+            &crate::data::synth::ZipfSetsParams::default(),
+            7,
+        );
+        let h = WeightedMinHash::new(2, 3);
+        // First prepare builds the vocabulary; later reps must get the very
+        // same Arc (no rediscovery pass).
+        let _ = h.prepare(&ds, 0);
+        let built = std::sync::Arc::clone(ds.token_vocab());
+        let _ = h.prepare(&ds, 1);
+        assert!(std::sync::Arc::ptr_eq(&built, ds.token_vocab()));
+    }
+
+    #[test]
+    fn state_falls_back_for_out_of_vocab_tokens() {
+        // Prepare against one dataset, evaluate another with unseen tokens
+        // (the serving query path): bit-identical to the stateless path.
+        let index_ds = ds_of(vec![vec![(1, 2.0), (2, 1.0)], vec![(2, 1.5), (3, 1.0)]]);
+        let query_ds = ds_of(vec![vec![(700, 1.0), (1, 0.5)], vec![(701, 2.0)]]);
+        let h = WeightedMinHash::new(3, 11);
+        let state = h.prepare(&index_ds, 4);
+        let mut keys = vec![0u64; 2];
+        state.bucket_keys_into(&query_ds, 0, &mut keys);
+        for i in 0..2 {
+            assert_eq!(keys[i], h.bucket_key(&query_ds, i, 4), "query {i}");
+        }
     }
 
     #[test]

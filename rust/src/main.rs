@@ -4,6 +4,8 @@
 //!   gen-data     generate a synthetic dataset and save it to disk
 //!   build        build a similarity graph and print its cost report
 //!   cluster      build + affinity-cluster + V-Measure
+//!   serve        build + snapshot + answer sampled top-k queries (QPS,
+//!                latency percentiles, recall@k vs brute force)
 //!   experiment   regenerate a paper table/figure (fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all)
 //!   smoke        verify the PJRT artifacts load and execute
 
@@ -26,6 +28,7 @@ fn real_main() -> stars::Result<()> {
         "gen-data" => gen_data(&mut args),
         "build" => build(&mut args),
         "cluster" => cluster(&mut args),
+        "serve" => serve(&mut args),
         "experiment" => experiment(&mut args),
         "smoke" => smoke(),
         _ => {
@@ -45,6 +48,9 @@ USAGE:
                  [--r SKETCHES] [--s LEADERS] [--threshold T] [--window W]
                  [--degree-cap K] [--workers W] [--seed S] [--join direct|dht|shuffle]
   stars cluster  (build flags) [--classes K]
+  stars serve    (build flags) [--queries N] [--k K]
+                 build a graph, export a serving snapshot, and answer N
+                 sampled top-k queries (reports QPS, p50/p99, recall@k)
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
                  [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
   stars smoke    verify artifacts (PJRT runtime end-to-end)
@@ -146,6 +152,15 @@ fn cluster(args: &mut Args) -> stars::Result<()> {
             m.insert("clusters".into(), stars::util::json::Json::from(level.clusters));
         }
     }
+    println!("{}", doc.to_pretty());
+    Ok(())
+}
+
+fn serve(args: &mut Args) -> stars::Result<()> {
+    let job = job_from_args(args)?;
+    let queries = args.get_parsed_or("queries", 1000usize);
+    let k = args.get_parsed_or("k", 10usize);
+    let doc = stars::coordinator::run_serve(&job, queries, k)?;
     println!("{}", doc.to_pretty());
     Ok(())
 }

@@ -1,0 +1,143 @@
+//! The streaming write path: a bounded buffer of not-yet-indexed points.
+//!
+//! Inserts append to a small side dataset that every query scores brute
+//! force (the buffer is bounded by [`super::ServeConfig::compact_limit`],
+//! so the extra work per query is a constant-size tile). Compaction folds
+//! the buffered points into a fresh [`super::StarIndex`] snapshot and trims
+//! the absorbed prefix; global point ids are stable across the swap because
+//! compaction appends the prefix in insertion order.
+
+use crate::data::types::{Dataset, WeightedSet};
+
+/// Buffer of points inserted since the last snapshot.
+pub struct DeltaBuffer {
+    ds: Dataset,
+    /// Global id of the buffer's first point (= current snapshot size).
+    base: usize,
+    /// Whether inserts must carry a token set — fixed by the snapshot's
+    /// feature kinds at construction, so a hybrid index cannot silently
+    /// accumulate set-less points that would panic the mixture scorer or
+    /// the compaction concat later.
+    wants_sets: bool,
+}
+
+impl DeltaBuffer {
+    /// Empty buffer carrying the same feature kinds as `template` (the
+    /// snapshot dataset), with global ids starting at `base`.
+    pub fn new(template: &Dataset, base: usize) -> DeltaBuffer {
+        let ds = if template.dim() > 0 {
+            Dataset::from_dense("delta", template.dim(), Vec::new(), vec![])
+        } else {
+            Dataset::from_sets("delta", Vec::new(), vec![])
+        };
+        let wants_sets = template.dim() == 0 || !template.sets.is_empty();
+        DeltaBuffer {
+            ds,
+            base,
+            wants_sets,
+        }
+    }
+
+    /// Number of buffered points.
+    pub fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.ds.is_empty()
+    }
+
+    /// Global id of the buffer's first point.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// The buffered points as a dataset (brute-force scoring tile).
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    /// Append a point (dense row and/or token set, matching the snapshot's
+    /// feature kinds); returns its global id.
+    pub fn insert(&mut self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
+        assert_eq!(
+            set.is_some(),
+            self.wants_sets,
+            "insert feature kinds must match the indexed dataset"
+        );
+        let local = self.ds.push_point(row, set);
+        (self.base + local as usize) as u32
+    }
+
+    /// Drop the first `prefix` points (absorbed into a new snapshot) and
+    /// advance `base` past them. Points inserted while the compaction ran
+    /// keep their global ids: the new snapshot ends exactly where the
+    /// surviving tail begins.
+    pub fn absorb_prefix(&mut self, prefix: usize) {
+        debug_assert!(prefix <= self.ds.len());
+        let tail: Vec<u32> = (prefix as u32..self.ds.len() as u32).collect();
+        self.ds = self.ds.subset(&tail);
+        self.base += prefix;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_global_and_stable_across_absorption() {
+        let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 100);
+        assert!(d.is_empty());
+        assert_eq!(d.insert(Some(&[1.0, 0.0]), None), 100);
+        assert_eq!(d.insert(Some(&[0.0, 1.0]), None), 101);
+        assert_eq!(d.insert(Some(&[0.5, 0.5]), None), 102);
+        assert_eq!(d.len(), 3);
+        // Compaction absorbed the first two: the tail keeps id 102.
+        d.absorb_prefix(2);
+        assert_eq!(d.base(), 102);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.dataset().row(0), &[0.5, 0.5]);
+        assert_eq!(d.insert(Some(&[2.0, 0.0]), None), 103);
+    }
+
+    #[test]
+    fn hybrid_template_requires_sets_on_insert() {
+        let template = Dataset::hybrid(
+            "t",
+            2,
+            vec![1.0, 0.0],
+            vec![WeightedSet::from_tokens(vec![3])],
+            vec![],
+        );
+        let mut d = DeltaBuffer::new(&template, 1);
+        let id = d.insert(Some(&[0.0, 1.0]), Some(WeightedSet::from_tokens(vec![5])));
+        assert_eq!(id, 1);
+        assert_eq!(d.dataset().set(0).tokens, vec![5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "insert feature kinds")]
+    fn hybrid_template_rejects_setless_insert() {
+        let template = Dataset::hybrid(
+            "t",
+            2,
+            vec![1.0, 0.0],
+            vec![WeightedSet::from_tokens(vec![3])],
+            vec![],
+        );
+        let mut d = DeltaBuffer::new(&template, 1);
+        d.insert(Some(&[0.0, 1.0]), None);
+    }
+
+    #[test]
+    fn set_deltas_follow_template_kind() {
+        let template = Dataset::from_sets("t", vec![WeightedSet::from_tokens(vec![1])], vec![]);
+        let mut d = DeltaBuffer::new(&template, 1);
+        let id = d.insert(None, Some(WeightedSet::from_tokens(vec![4, 9])));
+        assert_eq!(id, 1);
+        assert_eq!(d.dataset().set(0).tokens, vec![4, 9]);
+    }
+}

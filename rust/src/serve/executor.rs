@@ -1,0 +1,520 @@
+//! The concurrent batched query executor.
+//!
+//! [`QueryEngine`] owns the current [`StarIndex`] epoch (behind
+//! `RwLock<Arc<_>>`), the [`DeltaBuffer`] of streamed inserts, and the
+//! query pipeline: sketch → route → two-hop expand → tiled score → top-k
+//! merge with the delta. Batches fan out over [`crate::util::pool`], one
+//! task per query; per-query work is independent and results are assembled
+//! in query order, so the returned top-k lists are **bit-identical for any
+//! worker count** — the read-side mirror of the builder's determinism
+//! contract.
+
+use super::delta::DeltaBuffer;
+use super::index::StarIndex;
+use crate::data::types::{Dataset, WeightedSet};
+use crate::graph::two_hop::{two_hop_into, VisitScratch};
+use crate::lsh::LshFamily;
+use crate::sim::{
+    BatchScratch, CosineSim, DotSim, JaccardSim, MixtureSim, Similarity, WeightedJaccardSim,
+};
+use crate::stars::{BuildParams, StarsBuilder};
+use crate::util::pool;
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// The similarity measure a serving stack scores with. A plain enum (not a
+/// trait object) so engines stay `Send + Sync` without lifetime plumbing
+/// and queries can carry it by value into pool tasks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServeMeasure {
+    /// Cosine over dense rows.
+    Cosine,
+    /// Dot product over dense rows.
+    Dot,
+    /// Unweighted Jaccard over token sets.
+    Jaccard,
+    /// Weighted Jaccard over weighted token sets.
+    WeightedJaccard,
+    /// α·cosine + (1−α)·jaccard over hybrid points.
+    Mixture {
+        /// Weight on the cosine component.
+        alpha: f32,
+    },
+}
+
+impl ServeMeasure {
+    /// Display name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeMeasure::Cosine => "cosine",
+            ServeMeasure::Dot => "dot",
+            ServeMeasure::Jaccard => "jaccard",
+            ServeMeasure::WeightedJaccard => "weighted-jaccard",
+            ServeMeasure::Mixture { .. } => "mixture",
+        }
+    }
+
+    /// The build-side [`Similarity`] equivalent (compaction rebuilds).
+    pub fn to_similarity(self) -> Box<dyn Similarity> {
+        match self {
+            ServeMeasure::Cosine => Box::new(CosineSim),
+            ServeMeasure::Dot => Box::new(DotSim),
+            ServeMeasure::Jaccard => Box::new(JaccardSim),
+            ServeMeasure::WeightedJaccard => Box::new(WeightedJaccardSim),
+            ServeMeasure::Mixture { alpha } => Box::new(MixtureSim { alpha }),
+        }
+    }
+
+    /// Score query `qi` of `queries` against `cands` in `ds` through the
+    /// tiled batch kernels (`out[j]` = similarity to `cands[j]`).
+    fn score(
+        self,
+        queries: &Dataset,
+        qi: usize,
+        ds: &Dataset,
+        cands: &[u32],
+        batch: &mut BatchScratch,
+        out: &mut Vec<f32>,
+    ) {
+        match self {
+            ServeMeasure::Cosine => {
+                batch.cosine_row(queries.row(qi), queries.norm(qi), ds, cands, out)
+            }
+            ServeMeasure::Dot => batch.dot_row(queries.row(qi), ds, cands, out),
+            ServeMeasure::Jaccard => batch.jaccard_set(queries.set(qi), ds, cands, out),
+            ServeMeasure::WeightedJaccard => {
+                batch.weighted_jaccard_set(queries.set(qi), ds, cands, out)
+            }
+            ServeMeasure::Mixture { alpha } => batch.mixture_row_set(
+                alpha,
+                queries.row(qi),
+                queries.norm(qi),
+                queries.set(qi),
+                ds,
+                cands,
+                out,
+            ),
+        }
+    }
+}
+
+/// Per-thread query scratch: visited stamps, candidate/score buffers and
+/// the tiled-kernel scratch. One per pool thread, reset per query.
+#[derive(Default)]
+struct QueryScratch {
+    visit: VisitScratch,
+    entry_visit: VisitScratch,
+    cands: Vec<u32>,
+    scores: Vec<f32>,
+    batch: BatchScratch,
+}
+
+thread_local! {
+    static QSCRATCH: RefCell<QueryScratch> = RefCell::new(QueryScratch::default());
+}
+
+/// Bounded top-k of neighbors under the serving order: higher score wins,
+/// equal scores prefer the smaller id — enforced *including at the k-th
+/// boundary*. The generic [`crate::util::topk::TopK`] keeps the
+/// first-pushed of boundary ties, which would make the retained set depend
+/// on candidate order and diverge from the brute-force reference on
+/// tie-heavy measures (small-rational Jaccard scores).
+struct TopNeighbors {
+    k: usize,
+    /// Min-heap: the *worst* retained entry (score asc, id desc) at root.
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopNeighbors {
+    fn new(k: usize) -> TopNeighbors {
+        TopNeighbors {
+            k,
+            heap: Vec::with_capacity(k.min(1024)),
+        }
+    }
+
+    /// True when `a` ranks strictly worse than `b`: lower score, or equal
+    /// score and larger id.
+    #[inline]
+    fn worse(a: (f32, u32), b: (f32, u32)) -> bool {
+        match a.0.total_cmp(&b.0) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => a.1 > b.1,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, score: f32, id: u32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((score, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if Self::worse(self.heap[0], (score, id)) {
+            self.heap[0] = (score, id);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::worse(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < n && Self::worse(self.heap[l], self.heap[worst]) {
+                worst = l;
+            }
+            if r < n && Self::worse(self.heap[r], self.heap[worst]) {
+                worst = r;
+            }
+            if worst == i {
+                break;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+
+    /// Extract `(id, score)` best-first: score descending, ties ascending
+    /// by id.
+    fn into_sorted(mut self) -> Vec<(u32, f32)> {
+        self.heap
+            .sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        self.heap.into_iter().map(|(w, c)| (c, w)).collect()
+    }
+}
+
+/// Answer one query against a consistent (snapshot, delta) view.
+#[allow(clippy::too_many_arguments)]
+fn answer_one(
+    snap: &StarIndex<'_>,
+    delta: &Dataset,
+    delta_base: usize,
+    keys: &[u64],
+    nq: usize,
+    qi: usize,
+    queries: &Dataset,
+    measure: ServeMeasure,
+    k: usize,
+    s: &mut QueryScratch,
+) -> Vec<(u32, f32)> {
+    let cfg = snap.config();
+    let csr = snap.csr();
+    let n = snap.len();
+    s.visit.begin(n);
+    s.entry_visit.begin(n);
+    s.cands.clear();
+    // Route + expand: entries in (repetition, bucket) order; each distinct
+    // entry expands its two-hop star neighborhood exactly once. The order —
+    // and therefore the candidate list and every downstream tie — is fully
+    // determined by the query, never by scheduling.
+    'route: for rep in 0..snap.router().reps() {
+        let key = keys[rep * nq + qi];
+        for &e in snap.router().route(rep, key).iter().take(cfg.probe_entries) {
+            if s.entry_visit.mark(e) {
+                if s.visit.mark(e) {
+                    s.cands.push(e);
+                }
+                two_hop_into(csr, e, cfg.min_w, &mut s.visit, &mut s.cands);
+            }
+            if cfg.max_candidates > 0 && s.cands.len() >= cfg.max_candidates {
+                break 'route;
+            }
+        }
+    }
+    // Score the snapshot candidates through the tiled kernels.
+    let mut top = TopNeighbors::new(k);
+    measure.score(queries, qi, snap.dataset(), &s.cands, &mut s.batch, &mut s.scores);
+    for (&c, &w) in s.cands.iter().zip(s.scores.iter()) {
+        top.push(w, c);
+    }
+    // Brute-force the delta buffer (bounded by the compaction limit).
+    if !delta.is_empty() {
+        s.cands.clear();
+        s.cands.extend(0..delta.len() as u32);
+        measure.score(queries, qi, delta, &s.cands, &mut s.batch, &mut s.scores);
+        for (di, &w) in s.scores.iter().enumerate() {
+            top.push(w, (delta_base + di) as u32);
+        }
+    }
+    top.into_sorted()
+}
+
+/// Exact top-k by scanning the whole dataset with the same tiled kernels
+/// and tie rule as the engine — the recall reference for tests and
+/// `servebench`.
+pub fn brute_force_topk(
+    ds: &Dataset,
+    queries: &Dataset,
+    measure: ServeMeasure,
+    k: usize,
+    workers: usize,
+) -> Vec<Vec<(u32, f32)>> {
+    let ids: Vec<u32> = (0..ds.len() as u32).collect();
+    pool::parallel_map(queries.len(), workers, |qi| {
+        QSCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            measure.score(queries, qi, ds, &ids, &mut s.batch, &mut s.scores);
+            let mut top = TopNeighbors::new(k);
+            for (&c, &w) in ids.iter().zip(s.scores.iter()) {
+                top.push(w, c);
+            }
+            top.into_sorted()
+        })
+    })
+}
+
+/// The online query engine: an epoch-swapped [`StarIndex`] snapshot plus a
+/// streaming [`DeltaBuffer`], serving worker-count-invariant top-k batches.
+pub struct QueryEngine<'f> {
+    family: &'f dyn LshFamily,
+    measure: ServeMeasure,
+    build: BuildParams,
+    workers: usize,
+    compact_limit: usize,
+    snapshot: RwLock<Arc<StarIndex<'f>>>,
+    delta: Mutex<DeltaBuffer>,
+    /// Serializes compactions so concurrent triggers rebuild once.
+    compacting: Mutex<()>,
+}
+
+impl<'f> QueryEngine<'f> {
+    /// Engine over a built snapshot. `build` parameterizes compaction
+    /// rebuilds (typically the params the snapshot's graph was built with).
+    pub fn new(
+        index: StarIndex<'f>,
+        family: &'f dyn LshFamily,
+        measure: ServeMeasure,
+        build: BuildParams,
+    ) -> QueryEngine<'f> {
+        let compact_limit = index.config().compact_limit;
+        let delta = Mutex::new(DeltaBuffer::new(index.dataset(), index.len()));
+        QueryEngine {
+            family,
+            measure,
+            build,
+            workers: pool::default_workers(),
+            compact_limit,
+            snapshot: RwLock::new(Arc::new(index)),
+            delta,
+            compacting: Mutex::new(()),
+        }
+    }
+
+    /// Worker count for query batches and compaction rebuilds.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Points in the current snapshot.
+    pub fn num_indexed(&self) -> usize {
+        self.snapshot.read().unwrap().len()
+    }
+
+    /// Points waiting in the delta buffer.
+    pub fn num_pending(&self) -> usize {
+        self.delta.lock().unwrap().len()
+    }
+
+    /// The current snapshot epoch (for inspection/metrics).
+    pub fn snapshot(&self) -> Arc<StarIndex<'f>> {
+        self.snapshot.read().unwrap().clone()
+    }
+
+    /// Answer a batch of queries: for each query point, its top-`k`
+    /// (id, similarity) neighbors over snapshot ∪ delta, scores descending
+    /// with ties broken by ascending id. Ids are global: snapshot points
+    /// keep their dataset ids, delta points continue the sequence and
+    /// survive compaction unchanged.
+    pub fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        let nq = queries.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        // Consistent epoch: the snapshot pointer and the delta are read
+        // under the delta lock, which compaction also holds while swapping
+        // — a batch sees either (old snapshot, full delta) or (new
+        // snapshot, trimmed delta), never a point twice or not at all.
+        let (snap, delta, delta_base) = {
+            let d = self.delta.lock().unwrap();
+            (
+                self.snapshot.read().unwrap().clone(),
+                d.dataset().clone(),
+                d.base(),
+            )
+        };
+        if snap.dataset().dim() > 0 {
+            assert_eq!(queries.dim(), snap.dataset().dim(), "query dimension mismatch");
+        }
+        let keys = snap.query_keys(queries, self.workers);
+        let measure = self.measure;
+        pool::parallel_map(nq, self.workers, |qi| {
+            QSCRATCH.with(|cell| {
+                let s = &mut *cell.borrow_mut();
+                answer_one(&snap, &delta, delta_base, &keys, nq, qi, queries, measure, k, s)
+            })
+        })
+    }
+
+    /// Stream one point in (dense row and/or token set, matching the
+    /// indexed feature kinds); returns its global id, queryable
+    /// immediately. Triggers a compaction when the delta reaches the
+    /// configured limit.
+    pub fn insert(&self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
+        let (id, should_compact) = {
+            let mut d = self.delta.lock().unwrap();
+            let id = d.insert(row, set);
+            (id, self.compact_limit > 0 && d.len() >= self.compact_limit)
+        };
+        if should_compact {
+            self.compact();
+        }
+        id
+    }
+
+    /// Fold the delta buffer into a fresh snapshot: rebuild the star graph
+    /// over snapshot ∪ delta with the engine's build parameters, rebuild
+    /// the routing tables, and swap the epoch in. Queries keep serving from
+    /// the old epoch throughout; only the final pointer swap takes the
+    /// delta lock. Returns false when there was nothing to compact.
+    pub fn compact(&self) -> bool {
+        let _serial = self.compacting.lock().unwrap();
+        let (merged, prefix, cfg) = {
+            let d = self.delta.lock().unwrap();
+            if d.is_empty() {
+                return false;
+            }
+            let snap = self.snapshot.read().unwrap().clone();
+            (
+                snap.dataset().concat(d.dataset()),
+                d.len(),
+                snap.config().clone(),
+            )
+        };
+        let sim = self.measure.to_similarity();
+        let out = StarsBuilder::new(&merged)
+            .similarity(sim.as_ref())
+            .hash(self.family)
+            .params(self.build.clone())
+            .workers(self.workers)
+            .build();
+        let next = StarIndex::build_with_workers(merged, self.family, &out.graph, cfg, self.workers);
+        // Swap the epoch and trim the absorbed prefix atomically w.r.t.
+        // readers (who take the delta lock to capture their view).
+        let mut d = self.delta.lock().unwrap();
+        *self.snapshot.write().unwrap() = Arc::new(next);
+        d.absorb_prefix(prefix);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lsh::SimHash;
+    use crate::serve::ServeConfig;
+    use crate::stars::Algorithm;
+
+    fn build_engine(h: &SimHash) -> QueryEngine<'_> {
+        let ds = synth::gaussian_mixture(800, 16, 8, 0.08, 47);
+        let params = BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(8)
+            .threshold(0.4);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(h)
+            .params(params.clone())
+            .workers(2)
+            .build();
+        let cfg = ServeConfig::default().route_reps(8).compact_limit(0);
+        let index = StarIndex::build(ds, h, &out.graph, cfg);
+        QueryEngine::new(index, h, ServeMeasure::Cosine, params).workers(2)
+    }
+
+    #[test]
+    fn self_query_returns_self_first() {
+        let h = SimHash::new(16, 8, 3);
+        let engine = build_engine(&h);
+        let snap = engine.snapshot();
+        let queries = snap.dataset().subset(&[5, 123, 700]);
+        let res = engine.query(&queries, 5);
+        assert_eq!(res.len(), 3);
+        for (qi, &p) in [5u32, 123, 700].iter().enumerate() {
+            assert!(!res[qi].is_empty(), "query {qi} found nothing");
+            assert_eq!(res[qi][0].0, p, "self not top-1 for {p}");
+            assert!((res[qi][0].1 - 1.0).abs() < 1e-5);
+            // Scores descending.
+            for w in res[qi].windows(2) {
+                assert!(w[0].1 >= w[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn brute_force_reference_is_exact() {
+        let ds = synth::gaussian_mixture(200, 8, 4, 0.1, 9);
+        let queries = ds.subset(&[0, 50]);
+        let res = brute_force_topk(&ds, &queries, ServeMeasure::Cosine, 3, 2);
+        assert_eq!(res.len(), 2);
+        // Exhaustive check against a plain scan for query 0 — CosineSim
+        // reads the same precomputed norms the kernels do, so scores are
+        // bit-identical and the order must match exactly.
+        let mut want: Vec<(u32, f32)> = (0..200u32)
+            .map(|j| (j, CosineSim.sim(&ds, 0, j as usize)))
+            .collect();
+        want.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let got: Vec<u32> = res[0].iter().map(|&(id, _)| id).collect();
+        let expect: Vec<u32> = want[..3].iter().map(|&(id, _)| id).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn top_neighbors_breaks_boundary_ties_by_id() {
+        // More tied candidates than k, pushed in scrambled order: the
+        // retained set must be the lowest ids, independent of push order.
+        let mut top = TopNeighbors::new(2);
+        for id in [5u32, 2, 9, 1, 7] {
+            top.push(1.0, id);
+        }
+        assert_eq!(top.into_sorted(), vec![(1, 1.0), (2, 1.0)]);
+        // Mixed scores: score dominates, ids only break exact ties.
+        let mut top = TopNeighbors::new(3);
+        for (w, id) in [(0.5f32, 9u32), (0.9, 4), (0.5, 3), (0.7, 8), (0.5, 6)] {
+            top.push(w, id);
+        }
+        assert_eq!(top.into_sorted(), vec![(4, 0.9), (8, 0.7), (3, 0.5)]);
+        // k = 0 keeps nothing.
+        let mut top = TopNeighbors::new(0);
+        top.push(1.0, 1);
+        assert!(top.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn empty_batch_and_k_zero() {
+        let h = SimHash::new(16, 8, 3);
+        let engine = build_engine(&h);
+        let snap = engine.snapshot();
+        let empty = snap.dataset().subset(&[]);
+        assert!(engine.query(&empty, 5).is_empty());
+        let queries = snap.dataset().subset(&[1]);
+        let res = engine.query(&queries, 0);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].is_empty());
+    }
+}

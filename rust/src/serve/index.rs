@@ -1,0 +1,205 @@
+//! The immutable serving snapshot.
+//!
+//! A [`StarIndex`] freezes everything the read path needs: the indexed
+//! dataset, the degree-capped star graph in CSR form, one prepared
+//! [`SketchState`] per routing repetition (so query sketching reuses the
+//! cached hyperplane matrices / token tables instead of re-deriving them
+//! per batch), and the [`Router`]'s bucket-key → entry tables. Snapshots
+//! are shared behind `Arc` and replaced wholesale by compaction — no
+//! in-place mutation, so readers take no locks beyond the epoch pointer.
+
+use super::router::Router;
+use super::ServeConfig;
+use crate::data::types::Dataset;
+use crate::graph::{Csr, Graph};
+use crate::lsh::{LshFamily, SketchState};
+use crate::util::pool;
+
+/// Minimum points per sketch chunk before the snapshot/query sketch passes
+/// spin up pool threads (same economics as the build-side drivers).
+const PAR_MIN_CHUNK: usize = 1024;
+
+fn chunk_points(n: usize, workers: usize) -> usize {
+    let w = workers.max(1).min(n.div_ceil(PAR_MIN_CHUNK).max(1));
+    n.div_ceil(w).max(1)
+}
+
+/// An immutable serving snapshot over a built star graph.
+pub struct StarIndex<'f> {
+    ds: Dataset,
+    csr: Csr,
+    states: Vec<Box<dyn SketchState + 'f>>,
+    router: Router,
+    cfg: ServeConfig,
+}
+
+impl<'f> StarIndex<'f> {
+    /// Build a snapshot from a dataset, its hash family and its built
+    /// graph, sized to the host's worker pool.
+    pub fn build(
+        ds: Dataset,
+        family: &'f dyn LshFamily,
+        graph: &Graph,
+        cfg: ServeConfig,
+    ) -> StarIndex<'f> {
+        Self::build_with_workers(ds, family, graph, cfg, pool::default_workers())
+    }
+
+    /// [`StarIndex::build`] with an explicit worker count for the sketch
+    /// and routing passes.
+    pub fn build_with_workers(
+        ds: Dataset,
+        family: &'f dyn LshFamily,
+        graph: &Graph,
+        cfg: ServeConfig,
+        workers: usize,
+    ) -> StarIndex<'f> {
+        assert_eq!(
+            graph.num_nodes(),
+            ds.len(),
+            "graph node count != dataset size"
+        );
+        let n = ds.len();
+        let reps = cfg.route_reps.max(1);
+        // One prepared state per routing repetition — the same (family,
+        // rep) draws the builder bucketed repetitions 0..R with, so routing
+        // buckets coincide with build buckets for shared rep ids. States
+        // are retained: the query path sketches straight through them.
+        let mut states: Vec<Box<dyn SketchState + 'f>> = Vec::with_capacity(reps);
+        let mut keys_per_rep: Vec<Vec<u64>> = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let state = family.prepare(&ds, rep as u64);
+            let mut keys = vec![0u64; n];
+            if n > 0 {
+                pool::parallel_fill(&mut keys, chunk_points(n, workers), |lo, slice| {
+                    state.bucket_keys_into(&ds, lo, slice)
+                });
+            }
+            states.push(state);
+            keys_per_rep.push(keys);
+        }
+        let router = Router::build(&keys_per_rep, cfg.route_leaders, cfg.seed);
+        StarIndex {
+            csr: Csr::new(graph),
+            ds,
+            states,
+            router,
+            cfg,
+        }
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    /// True when nothing is indexed.
+    pub fn is_empty(&self) -> bool {
+        self.ds.is_empty()
+    }
+
+    /// The indexed dataset.
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    /// The star graph adjacency.
+    pub fn csr(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// The routing tables.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// The snapshot's configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Bucket keys of a query batch under every routing repetition,
+    /// rep-major: `keys[rep * queries.len() + qi]`. Chunked over `workers`
+    /// pool threads; output is identical for any worker count (each point's
+    /// key depends only on the prepared state).
+    pub fn query_keys(&self, queries: &Dataset, workers: usize) -> Vec<u64> {
+        let nq = queries.len();
+        let mut keys = vec![0u64; self.states.len() * nq];
+        if nq == 0 {
+            return keys;
+        }
+        for (rep, state) in self.states.iter().enumerate() {
+            let slice = &mut keys[rep * nq..(rep + 1) * nq];
+            pool::parallel_fill(slice, chunk_points(nq, workers), |lo, out| {
+                state.bucket_keys_into(queries, lo, out)
+            });
+        }
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lsh::{LshFamily, SimHash};
+    use crate::sim::CosineSim;
+    use crate::stars::{Algorithm, BuildParams, StarsBuilder};
+
+    fn small_index(h: &SimHash) -> StarIndex<'_> {
+        let ds = synth::gaussian_mixture(600, 16, 6, 0.08, 31);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(h)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(6)
+                    .threshold(0.4),
+            )
+            .workers(2)
+            .build();
+        StarIndex::build(ds, h, &out.graph, ServeConfig::default().route_reps(4))
+    }
+
+    #[test]
+    fn snapshot_keys_match_family_keys_and_route_home() {
+        let h = SimHash::new(16, 8, 5);
+        let index = small_index(&h);
+        assert_eq!(index.len(), 600);
+        // Query the index with its own points: per-rep keys must equal the
+        // family's keys, and each point's bucket must route somewhere.
+        let queries = index.dataset().subset(&[0, 17, 599]);
+        let keys = index.query_keys(&queries, 2);
+        for (rep, want_rep) in (0..4u64).enumerate() {
+            let want = h.bucket_keys(index.dataset(), want_rep);
+            for (qi, &p) in [0usize, 17, 599].iter().enumerate() {
+                assert_eq!(keys[rep * 3 + qi], want[p], "rep {rep} q{qi}");
+                assert!(
+                    !index.router().route(rep, want[p]).is_empty(),
+                    "indexed point {p} has no entries under rep {rep}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn query_keys_worker_invariant() {
+        let h = SimHash::new(16, 8, 5);
+        let index = small_index(&h);
+        let queries = index.dataset().subset(&(0..64u32).collect::<Vec<_>>());
+        let one = index.query_keys(&queries, 1);
+        for w in [2usize, 7] {
+            assert_eq!(index.query_keys(&queries, w), one, "workers={w}");
+        }
+    }
+
+    #[test]
+    fn empty_index_builds() {
+        let ds = crate::data::Dataset::from_dense("e", 4, Vec::new(), vec![]);
+        let h = SimHash::new(4, 6, 1);
+        let g = crate::graph::Graph::from_edges(0, vec![]);
+        let index = StarIndex::build(ds, &h, &g, ServeConfig::default());
+        assert!(index.is_empty());
+        assert_eq!(index.router().num_entries(), 0);
+    }
+}

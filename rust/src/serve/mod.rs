@@ -1,0 +1,174 @@
+//! `stars::serve` — an online two-hop ANN query engine over the star graph.
+//!
+//! The paper builds the star graph as a *substrate* for nearest-neighbor
+//! workloads: by Definition 2.4, the approximate nearest neighbors of a
+//! point live inside its two-hop neighborhood. Everything up to this module
+//! only *builds* that substrate offline; `serve` turns the built artifact
+//! into a read path that answers top-k queries directly instead of
+//! re-scanning the dataset:
+//!
+//! 1. **Sketch** — query batches run through the exact per-repetition
+//!    [`crate::lsh::SketchState`]s the builder used (SimHash's tiled
+//!    multi-plane kernel, the per-token CWS/MinHash tables), prepared once
+//!    per snapshot and chunked over the worker pool.
+//! 2. **Route** — each query's bucket key, per repetition, is looked up in
+//!    the [`Router`]: the snapshot-time table mapping every bucket key to a
+//!    bounded set of *entry points* (the serving analogue of the builder's
+//!    per-bucket leaders).
+//! 3. **Expand** — entry points fan out through their two-hop star
+//!    neighborhoods ([`crate::graph::two_hop::two_hop_into`], stamp-based
+//!    and allocation-free on the hot path) into a deduplicated candidate
+//!    list.
+//! 4. **Score** — the query row/set is scored against the candidate tile
+//!    with the same blocked kernels the builder scores buckets with
+//!    ([`crate::sim::batch`]), and the top k survive.
+//!
+//! Writes stream through a [`DeltaBuffer`]: inserted points are scored
+//! brute-force alongside every query (the delta is bounded) until a
+//! compaction folds them into a fresh [`StarIndex`] snapshot, atomically
+//! swapped in via `Arc` — the epoch pattern; readers never block on
+//! writers.
+//!
+//! **Determinism contract:** like the builder, [`QueryEngine::query`]
+//! results are bit-identical for every worker count (per-query work is
+//! independent and results are assembled in query order; ties break by
+//! score-descending then id-ascending). Asserted by
+//! `tests/serve_integration.rs`.
+
+pub mod delta;
+pub mod executor;
+pub mod index;
+pub mod router;
+
+pub use delta::DeltaBuffer;
+pub use executor::{brute_force_topk, QueryEngine, ServeMeasure};
+pub use index::StarIndex;
+pub use router::Router;
+
+/// Configuration of the serving snapshot and engine.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Routing repetitions: how many independent hash draws the snapshot
+    /// keys its entry tables by. Using the same repetition ids as the build
+    /// (`0..route_reps`) makes the routing buckets coincide with the
+    /// builder's bucketing for those repetitions.
+    pub route_reps: usize,
+    /// Entry points retained per (repetition, bucket) in the router.
+    pub route_leaders: usize,
+    /// Entry points expanded per (query, repetition) at query time
+    /// (≤ `route_leaders` is typical; more probes, more recall).
+    pub probe_entries: usize,
+    /// Minimum edge weight followed during two-hop expansion. `f32::MIN`
+    /// follows every retained edge (the degree-capped graph is already the
+    /// strongest-neighbor skeleton).
+    pub min_w: f32,
+    /// Candidate cap per query (0 = unbounded). Expansion stops, in
+    /// deterministic route order, once this many candidates are gathered.
+    pub max_candidates: usize,
+    /// Delta-buffer size that triggers automatic compaction on insert
+    /// (0 = manual compaction only).
+    pub compact_limit: usize,
+    /// Seed for the router's deterministic entry sampling.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            route_reps: 8,
+            route_leaders: 4,
+            probe_entries: 4,
+            min_w: f32::MIN,
+            max_candidates: 8192,
+            compact_limit: 1024,
+            seed: 0x5EA7,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Set the routing repetition count.
+    pub fn route_reps(mut self, r: usize) -> Self {
+        self.route_reps = r.max(1);
+        self
+    }
+
+    /// Set the retained entries per bucket.
+    pub fn route_leaders(mut self, s: usize) -> Self {
+        self.route_leaders = s.max(1);
+        self
+    }
+
+    /// Set the probed entries per (query, repetition).
+    pub fn probe_entries(mut self, s: usize) -> Self {
+        self.probe_entries = s.max(1);
+        self
+    }
+
+    /// Set the expansion weight floor.
+    pub fn min_w(mut self, w: f32) -> Self {
+        self.min_w = w;
+        self
+    }
+
+    /// Set the per-query candidate cap (0 = unbounded).
+    pub fn max_candidates(mut self, c: usize) -> Self {
+        self.max_candidates = c;
+        self
+    }
+
+    /// Set the auto-compaction threshold (0 = manual only).
+    pub fn compact_limit(mut self, c: usize) -> Self {
+        self.compact_limit = c;
+        self
+    }
+
+    /// Set the router sampling seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Fraction of `reference` ids also present in `got` (1.0 when `reference`
+/// is empty) — the serving recall metric (recall@k when both lists are
+/// top-k).
+pub fn recall_against(reference: &[(u32, f32)], got: &[(u32, f32)]) -> f64 {
+    if reference.is_empty() {
+        return 1.0;
+    }
+    let hit = reference
+        .iter()
+        .filter(|(id, _)| got.iter().any(|(g, _)| g == id))
+        .count();
+    hit as f64 / reference.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_builders_clamp() {
+        let c = ServeConfig::default()
+            .route_reps(0)
+            .route_leaders(0)
+            .probe_entries(0)
+            .max_candidates(10)
+            .compact_limit(5)
+            .seed(1);
+        assert_eq!(c.route_reps, 1);
+        assert_eq!(c.route_leaders, 1);
+        assert_eq!(c.probe_entries, 1);
+        assert_eq!(c.max_candidates, 10);
+        assert_eq!(c.compact_limit, 5);
+    }
+
+    #[test]
+    fn recall_metric() {
+        let r = [(1u32, 0.9f32), (2, 0.8), (3, 0.7)];
+        let g = [(2u32, 0.8f32), (9, 0.5), (1, 0.9)];
+        assert!((recall_against(&r, &g) - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(recall_against(&[], &g), 1.0);
+    }
+}

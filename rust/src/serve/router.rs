@@ -1,0 +1,137 @@
+//! Bucket-key → entry-point routing tables.
+//!
+//! At snapshot-build time every indexed point's bucket key is computed for
+//! each routing repetition (the same `(family, rep)` draws the builder
+//! bucketed with), and each bucket retains a bounded sample of members as
+//! **entry points**. At query time a query's key either hits a bucket —
+//! whose entries are, by the LSH property, likely near the query — or
+//! misses (empty slice), in which case other repetitions provide the
+//! redundancy, exactly as repetitions do for the builder.
+//!
+//! Entries are stored flat (one `Vec<u32>` per repetition, buckets as
+//! ranges) so routing is one hash probe plus a slice borrow — no per-query
+//! allocation.
+
+use crate::util::fxhash::FxHashMap;
+use crate::util::rng::{derive_seed, Rng};
+
+/// One repetition's routing table.
+struct RepRouter {
+    /// bucket key -> (start, len) into `entries`.
+    table: FxHashMap<u64, (u32, u32)>,
+    /// Entry point ids, grouped per bucket.
+    entries: Vec<u32>,
+}
+
+/// Per-repetition bucket-key → entry-point tables.
+pub struct Router {
+    reps: Vec<RepRouter>,
+}
+
+impl Router {
+    /// Build from per-repetition bucket keys of all indexed points
+    /// (`keys_per_rep[r][i]` = key of point `i` under routing repetition
+    /// `r`). Each bucket keeps at most `route_leaders` members, sampled
+    /// deterministically from `seed` — buckets are processed in sorted key
+    /// order, so the table is independent of hash-map iteration order.
+    pub fn build(keys_per_rep: &[Vec<u64>], route_leaders: usize, seed: u64) -> Router {
+        let route_leaders = route_leaders.max(1);
+        let reps = keys_per_rep
+            .iter()
+            .enumerate()
+            .map(|(r, keys)| {
+                let mut buckets: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+                for (i, &k) in keys.iter().enumerate() {
+                    buckets.entry(k).or_default().push(i as u32);
+                }
+                let mut ordered: Vec<(u64, Vec<u32>)> = buckets.into_iter().collect();
+                ordered.sort_unstable_by_key(|(k, _)| *k);
+                let mut rng = Rng::new(derive_seed(seed ^ 0x5EAE, r as u64));
+                let mut table = FxHashMap::default();
+                let mut entries = Vec::new();
+                for (key, members) in ordered {
+                    let start = entries.len() as u32;
+                    if members.len() <= route_leaders {
+                        entries.extend_from_slice(&members);
+                    } else {
+                        // Sample positions, then sort them so the retained
+                        // entries keep ascending-id order (sample_indices
+                        // returns an unspecified order).
+                        let mut picks = rng.sample_indices(members.len(), route_leaders);
+                        picks.sort_unstable();
+                        entries.extend(picks.into_iter().map(|p| members[p]));
+                    }
+                    table.insert(key, (start, entries.len() as u32 - start));
+                }
+                entries.shrink_to_fit();
+                RepRouter { table, entries }
+            })
+            .collect();
+        Router { reps }
+    }
+
+    /// Number of routing repetitions.
+    pub fn reps(&self) -> usize {
+        self.reps.len()
+    }
+
+    /// Entry points for `key` under routing repetition `rep` (empty slice
+    /// on a bucket miss).
+    #[inline]
+    pub fn route(&self, rep: usize, key: u64) -> &[u32] {
+        let r = &self.reps[rep];
+        match r.table.get(&key) {
+            Some(&(start, len)) => &r.entries[start as usize..(start + len) as usize],
+            None => &[],
+        }
+    }
+
+    /// Total retained entries across all repetitions (memory telemetry).
+    pub fn num_entries(&self) -> usize {
+        self.reps.iter().map(|r| r.entries.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_every_indexed_key_and_misses_unknown() {
+        let keys = vec![vec![7u64, 3, 7, 3, 9, 7]];
+        let router = Router::build(&keys, 8, 1);
+        assert_eq!(router.reps(), 1);
+        let mut b7 = router.route(0, 7).to_vec();
+        b7.sort_unstable();
+        assert_eq!(b7, vec![0, 2, 5]);
+        assert_eq!(router.route(0, 9), &[4]);
+        assert!(router.route(0, 1234).is_empty());
+    }
+
+    #[test]
+    fn bucket_entries_are_capped_and_deterministic() {
+        let keys = vec![vec![5u64; 100]];
+        let a = Router::build(&keys, 3, 42);
+        let b = Router::build(&keys, 3, 42);
+        assert_eq!(a.route(0, 5), b.route(0, 5));
+        assert_eq!(a.route(0, 5).len(), 3);
+        assert_eq!(a.num_entries(), 3);
+        // Entries are valid member ids in ascending order.
+        let e = a.route(0, 5);
+        assert!(e.windows(2).all(|w| w[0] < w[1]));
+        assert!(e.iter().all(|&i| i < 100));
+        // A different seed may pick different entries.
+        let c = Router::build(&keys, 3, 43);
+        assert_eq!(c.route(0, 5).len(), 3);
+    }
+
+    #[test]
+    fn multiple_reps_route_independently() {
+        let keys = vec![vec![1u64, 1, 2], vec![9u64, 8, 9]];
+        let router = Router::build(&keys, 4, 0);
+        assert_eq!(router.reps(), 2);
+        assert_eq!(router.route(0, 1), &[0, 1]);
+        assert_eq!(router.route(1, 9), &[0, 2]);
+        assert!(router.route(1, 1).is_empty());
+    }
+}

@@ -21,7 +21,7 @@
 //! per call (never nested, which would panic the RefCell).
 
 use super::measure::{self, cosine_from_parts};
-use crate::data::types::Dataset;
+use crate::data::types::{Dataset, WeightedSet};
 use crate::util::fxhash::FxHashMap;
 use std::cell::RefCell;
 
@@ -115,13 +115,26 @@ pub fn dot_batch(
     tile: &mut Vec<f32>,
     out: &mut Vec<f32>,
 ) {
+    dot_batch_row(ds.row(leader), ds, candidates, tile, out);
+}
+
+/// [`dot_batch`] with the leader row passed explicitly — the serving path's
+/// entry point, where the query vector lives outside the indexed dataset.
+/// Same gather, same tiled kernel, same reduction order.
+pub fn dot_batch_row(
+    lrow: &[f32],
+    ds: &Dataset,
+    candidates: &[u32],
+    tile: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
     out.clear();
     out.resize(candidates.len(), 0.0);
     if candidates.is_empty() {
         return;
     }
     let d = ds.dim();
-    let lrow = ds.row(leader);
+    debug_assert_eq!(lrow.len(), d);
     let rows_per_tile = tile_rows(d);
     if tile.len() < rows_per_tile * d {
         tile.resize(rows_per_tile * d, 0.0);
@@ -144,10 +157,22 @@ pub fn cosine_batch(
     tile: &mut Vec<f32>,
     out: &mut Vec<f32>,
 ) {
-    dot_batch(ds, leader, candidates, tile, out);
-    let ln = ds.norm(leader);
+    cosine_batch_row(ds.row(leader), ds.norm(leader), ds, candidates, tile, out);
+}
+
+/// [`cosine_batch`] with the leader row and its L2 norm passed explicitly
+/// (serving path). Candidate norms still come from [`Dataset::norms`].
+pub fn cosine_batch_row(
+    lrow: &[f32],
+    lnorm: f32,
+    ds: &Dataset,
+    candidates: &[u32],
+    tile: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    dot_batch_row(lrow, ds, candidates, tile, out);
     for (k, &c) in candidates.iter().enumerate() {
-        out[k] = cosine_from_parts(out[k], ln * ds.norm(c as usize));
+        out[k] = cosine_from_parts(out[k], lnorm * ds.norm(c as usize));
     }
 }
 
@@ -162,7 +187,17 @@ pub fn jaccard_batch(
     leader_wts: &mut FxHashMap<u32, f32>,
     out: &mut Vec<f32>,
 ) {
-    let a = ds.set(leader);
+    jaccard_batch_set(ds.set(leader), ds, candidates, leader_wts, out);
+}
+
+/// [`jaccard_batch`] with the leader set passed explicitly (serving path).
+pub fn jaccard_batch_set(
+    a: &WeightedSet,
+    ds: &Dataset,
+    candidates: &[u32],
+    leader_wts: &mut FxHashMap<u32, f32>,
+    out: &mut Vec<f32>,
+) {
     leader_wts.clear();
     for &t in &a.tokens {
         leader_wts.insert(t, 1.0);
@@ -200,7 +235,18 @@ pub fn weighted_jaccard_batch(
     leader_wts: &mut FxHashMap<u32, f32>,
     out: &mut Vec<f32>,
 ) {
-    let a = ds.set(leader);
+    weighted_jaccard_batch_set(ds.set(leader), ds, candidates, leader_wts, out);
+}
+
+/// [`weighted_jaccard_batch`] with the leader set passed explicitly
+/// (serving path).
+pub fn weighted_jaccard_batch_set(
+    a: &WeightedSet,
+    ds: &Dataset,
+    candidates: &[u32],
+    leader_wts: &mut FxHashMap<u32, f32>,
+    out: &mut Vec<f32>,
+) {
     leader_wts.clear();
     let mut ta = 0f32;
     for (&t, &w) in a.tokens.iter().zip(&a.weights) {
@@ -274,6 +320,65 @@ impl BatchScratch {
     ) {
         cosine_batch(ds, leader, candidates, &mut self.tile, out);
         jaccard_batch(ds, leader, candidates, &mut self.leader_wts, &mut self.aux);
+        for (o, &j) in out.iter_mut().zip(self.aux.iter()) {
+            *o = alpha * *o + (1.0 - alpha) * j;
+        }
+    }
+
+    /// `out[k] = dot(query_row, candidates[k])` — query-side entry point.
+    pub fn dot_row(&mut self, row: &[f32], ds: &Dataset, candidates: &[u32], out: &mut Vec<f32>) {
+        dot_batch_row(row, ds, candidates, &mut self.tile, out);
+    }
+
+    /// `out[k] = cosine(query_row, candidates[k])`, query norm passed in.
+    pub fn cosine_row(
+        &mut self,
+        row: &[f32],
+        norm: f32,
+        ds: &Dataset,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        cosine_batch_row(row, norm, ds, candidates, &mut self.tile, out);
+    }
+
+    /// `out[k] = jaccard(query_set, candidates[k])` — query-side entry point.
+    pub fn jaccard_set(
+        &mut self,
+        set: &WeightedSet,
+        ds: &Dataset,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        jaccard_batch_set(set, ds, candidates, &mut self.leader_wts, out);
+    }
+
+    /// `out[k] = weighted_jaccard(query_set, candidates[k])`.
+    pub fn weighted_jaccard_set(
+        &mut self,
+        set: &WeightedSet,
+        ds: &Dataset,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        weighted_jaccard_batch_set(set, ds, candidates, &mut self.leader_wts, out);
+    }
+
+    /// `out[k] = α·cosine + (1−α)·jaccard` against an external query point
+    /// carrying both a dense row and a token set (hybrid datasets).
+    #[allow(clippy::too_many_arguments)]
+    pub fn mixture_row_set(
+        &mut self,
+        alpha: f32,
+        row: &[f32],
+        norm: f32,
+        set: &WeightedSet,
+        ds: &Dataset,
+        candidates: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        cosine_batch_row(row, norm, ds, candidates, &mut self.tile, out);
+        jaccard_batch_set(set, ds, candidates, &mut self.leader_wts, &mut self.aux);
         for (o, &j) in out.iter_mut().zip(self.aux.iter()) {
             *o = alpha * *o + (1.0 - alpha) * j;
         }

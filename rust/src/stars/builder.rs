@@ -11,6 +11,7 @@ use crate::ampc::{Cluster, CostReport, Dht};
 use crate::data::types::Dataset;
 use crate::graph::{Edge, Graph};
 use crate::lsh::LshFamily;
+use crate::serve::StarIndex;
 use crate::sim::Similarity;
 use crate::stars::params::{Algorithm, BuildParams, JoinStrategy};
 use crate::stars::{allpair, knn, threshold};
@@ -73,6 +74,22 @@ impl<'a> StarsBuilder<'a> {
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
+    }
+
+    /// Run the build and export a serving snapshot over the result in one
+    /// step: the returned [`StarIndex`] freezes the built graph (CSR), the
+    /// dataset, one prepared sketch state per routing repetition, and the
+    /// bucket-key → entry tables. Routing repetitions reuse the build's
+    /// repetition ids (`0..route_reps`), so for shared ids the router's
+    /// buckets are exactly the buckets the builder scored.
+    pub fn build_indexed(self, serve: crate::serve::ServeConfig) -> (BuildOutput, StarIndex<'a>) {
+        let ds = self.ds;
+        let family = self.family.expect("hash family not set");
+        let workers = self.workers;
+        let out = self.build();
+        let index =
+            StarIndex::build_with_workers(ds.clone(), family, &out.graph, serve, workers);
+        (out, index)
     }
 
     /// Run the build.
@@ -525,6 +542,35 @@ mod tests {
         // Degree cap semantics: max degree can exceed cap (either-endpoint
         // rule) but must be far below the uncapped worst case.
         assert!(csr.max_degree() < 100, "degree {}", csr.max_degree());
+    }
+
+    #[test]
+    fn build_indexed_exports_a_matching_snapshot() {
+        let ds = synth::gaussian_mixture(400, 16, 8, 0.08, 24);
+        let family = SimHash::new(16, 8, 5);
+        let (out, index) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                crate::stars::BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(10)
+                    .threshold(0.5),
+            )
+            .workers(2)
+            .build_indexed(crate::serve::ServeConfig::default().route_reps(4));
+        assert_eq!(index.len(), ds.len());
+        assert_eq!(index.csr().num_edges(), out.graph.num_edges());
+        // Routing buckets reuse the build's repetition draws: every point's
+        // rep-0 key routes to a non-empty entry list containing bucket
+        // members that share that key.
+        let keys = family.bucket_keys(&ds, 0);
+        for p in [0usize, 100, 399] {
+            let entries = index.router().route(0, keys[p]);
+            assert!(!entries.is_empty(), "point {p} routes nowhere");
+            for &e in entries {
+                assert_eq!(keys[e as usize], keys[p], "entry outside bucket");
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use crate::ampc::CostLedger;
 use crate::data::types::Dataset;
 use crate::graph::Edge;
-use crate::lsh::sorting::sorted_indices_par;
+use crate::lsh::sorting::sorted_indices_par_timed;
 use crate::lsh::{windows, LshFamily};
 use crate::sim::Similarity;
 use crate::stars::bucketing::sample_leaders;
@@ -57,11 +57,14 @@ pub fn sorting_rep_par(
 ) -> Vec<Edge> {
     let n = ds.len();
     let mut rng = Rng::new(derive_seed(params.seed ^ 0x50_47, rep));
+    // In-rep parallel phases report extra inner workers' busy spans so Σ
+    // busy counts machine-seconds (worker 0 rides the rep's wall charge).
+    let inner_busy = |w: usize, nanos: u64| ledger.add_inner_busy(w, nanos);
 
     // Sketch + sort phase (TeraSort in the real system): data-parallel
     // sketching over point chunks, then the packed-u64 radix fast path for
     // binary-symbol families.
-    let order = sorted_indices_par(family, ds, rep, inner_workers);
+    let order = sorted_indices_par_timed(family, ds, rep, inner_workers, inner_busy);
     ledger.add_sketches((n * family.sketch_len()) as u64);
 
     let ws = windows(n, params.window, &mut rng);
@@ -130,7 +133,13 @@ pub fn sorting_rep_par(
             }
         }
     };
-    let edges = pool::parallel_flat_map(ws.len(), inner_workers, Vec::<f32>::new, score_window);
+    let edges = pool::parallel_flat_map_timed(
+        ws.len(),
+        inner_workers,
+        inner_busy,
+        Vec::<f32>::new,
+        score_window,
+    );
     ledger.add_edges(edges.len() as u64);
     edges
 }

@@ -59,9 +59,12 @@ pub fn lsh_rep_par(
 ) -> Vec<Edge> {
     let n = ds.len();
     let mut rng = Rng::new(derive_seed(params.seed ^ 0x7E9, rep));
+    // In-rep parallel phases report extra inner workers' busy spans so Σ
+    // busy counts machine-seconds (worker 0 rides the rep's wall charge).
+    let inner_busy = |w: usize, nanos: u64| ledger.add_inner_busy(w, nanos);
 
     // Sketch phase: one prepared state, point chunks over the pool.
-    let keys = sketch::bucket_keys_par(family, ds, rep, inner_workers);
+    let keys = sketch::bucket_keys_par_timed(family, ds, rep, inner_workers, inner_busy);
     ledger.add_sketches(n as u64);
 
     // Join phase: group ids by bucket key (§4's two strategies).
@@ -111,8 +114,13 @@ pub fn lsh_rep_par(
             None => score_all_pairs(ds, sim, bucket, threshold, ledger, scores, edges),
         }
     };
-    let edges =
-        pool::parallel_flat_map(buckets.len(), inner_workers, Vec::<f32>::new, score_bucket);
+    let edges = pool::parallel_flat_map_timed(
+        buckets.len(),
+        inner_workers,
+        inner_busy,
+        Vec::<f32>::new,
+        score_bucket,
+    );
     ledger.add_edges(edges.len() as u64);
     edges
 }
@@ -262,6 +270,26 @@ mod tests {
         let e2 = lsh_rep(&ds, &CosineSim, &h, &p, 3, &l, None);
         assert_eq!(e1.len(), e2.len());
         assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn inner_workers_charge_extra_machine_seconds() {
+        // Large enough that the sketch drivers actually split chunks
+        // (PAR_MIN_CHUNK) and the bucket fan-out engages the pool.
+        let ds = synth::gaussian_mixture(4000, 16, 8, 0.1, 5);
+        let h = SimHash::new(16, 8, 9);
+        let p = BuildParams::threshold_mode(Algorithm::LshStars);
+        // Single inner worker: all busy reports land on index 0, which the
+        // ledger treats as covered by the repetition's wall charge.
+        let l1 = CostLedger::new(4);
+        let e1 = lsh_rep_par(&ds, &CosineSim, &h, &p, 0, &l1, None, 1);
+        assert_eq!(l1.total_time(), 0.0);
+        // Four inner workers: extra machines report busy seconds, and the
+        // edge output is unchanged.
+        let l4 = CostLedger::new(4);
+        let e4 = lsh_rep_par(&ds, &CosineSim, &h, &p, 0, &l4, None, 4);
+        assert_eq!(e1, e4);
+        assert!(l4.total_time() > 0.0, "inner workers reported no busy time");
     }
 
     #[test]

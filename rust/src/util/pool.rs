@@ -8,10 +8,20 @@
 //! * [`parallel_map`] — dynamic work distribution over items via an atomic
 //!   cursor (work stealing degenerate case: one shared queue).
 //!
+//! The `_timed` variants additionally report each spawned worker's busy
+//! span to a `busy(worker_index, nanos)` callback. This is how in-repetition
+//! parallelism stays visible to the AMPC cost model: the builder's
+//! `map_timed` charges a repetition's *wall* time to one worker slot, and
+//! the inner primitives report the extra machines' busy seconds on top (the
+//! ledger skips index 0, whose span the wall charge already covers — see
+//! `CostLedger::add_inner_busy`). Σ busy then reflects machine-seconds even
+//! when a wave grants repetitions spare cores.
+//!
 //! tokio is not in the offline vendor set; plain scoped threads are both
 //! sufficient and simpler to account costs on.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 /// Number of workers used by default: one per available core, capped so the
 /// simulation's "machines" stay comparable across hosts.
@@ -58,15 +68,36 @@ where
     F: Fn(usize, &mut S, &mut Vec<T>) + Sync,
     G: Fn() -> S + Sync,
 {
+    parallel_flat_map_timed(n, workers, |_, _| {}, scratch, f)
+}
+
+/// [`parallel_flat_map`] reporting each worker's busy span to
+/// `busy(worker_index, nanos)` (the serial path reports index 0 — the span
+/// a caller's own wall-clock charge covers).
+pub fn parallel_flat_map_timed<S, T, F, G, B>(
+    n: usize,
+    workers: usize,
+    busy: B,
+    scratch: G,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut S, &mut Vec<T>) + Sync,
+    G: Fn() -> S + Sync,
+    B: Fn(usize, u64) + Sync,
+{
     if workers <= 1 || n <= 1 {
+        let t = Instant::now();
         let mut s = scratch();
         let mut out = Vec::new();
         for i in 0..n {
             f(i, &mut s, &mut out);
         }
+        busy(0, t.elapsed().as_nanos() as u64);
         return out;
     }
-    let parts = parallel_map(n, workers, |i| {
+    let parts = parallel_map_timed(n, workers, busy, |i| {
         let mut s = scratch();
         let mut local = Vec::new();
         f(i, &mut s, &mut local);
@@ -89,15 +120,33 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    parallel_fill_timed(out, chunk, |_, _| {}, f)
+}
+
+/// [`parallel_fill`] reporting each chunk worker's busy span to
+/// `busy(chunk_index, nanos)` (the serial path reports index 0).
+pub fn parallel_fill_timed<T, F, B>(out: &mut [T], chunk: usize, busy: B, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+    B: Fn(usize, u64) + Sync,
+{
     let n = out.len();
     let chunk = chunk.max(1);
     if chunk >= n {
-        return f(0, out);
+        let t = Instant::now();
+        f(0, out);
+        return busy(0, t.elapsed().as_nanos() as u64);
     }
     std::thread::scope(|scope| {
         for (c, slice) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
-            scope.spawn(move || f(c * chunk, slice));
+            let busy = &busy;
+            scope.spawn(move || {
+                let t = Instant::now();
+                f(c * chunk, slice);
+                busy(c, t.elapsed().as_nanos() as u64);
+            });
         }
     });
 }
@@ -115,17 +164,34 @@ where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
+    parallel_map_timed(n, workers, |_, _| {}, f)
+}
+
+/// [`parallel_map`] reporting each worker thread's busy span (its whole
+/// task loop, one callback per worker) to `busy(worker_index, nanos)`. The
+/// serial path reports index 0.
+pub fn parallel_map_timed<R, F, B>(n: usize, workers: usize, busy: B, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+    B: Fn(usize, u64) + Sync,
+{
     let workers = workers.max(1).min(n.max(1));
     if workers == 1 {
-        return (0..n).map(&f).collect();
+        let t = Instant::now();
+        let out = (0..n).map(&f).collect();
+        busy(0, t.elapsed().as_nanos() as u64);
+        return out;
     }
     let cursor = AtomicUsize::new(0);
     let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 let cursor = &cursor;
                 let f = &f;
+                let busy = &busy;
                 scope.spawn(move || {
+                    let t = Instant::now();
                     let mut local = Vec::new();
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -134,6 +200,7 @@ where
                         }
                         local.push((i, f(i)));
                     }
+                    busy(w, t.elapsed().as_nanos() as u64);
                     local
                 })
             })
@@ -244,6 +311,48 @@ mod tests {
         assert_eq!(out, vec![7u64; 10]);
         let mut empty: Vec<u64> = Vec::new();
         parallel_fill(&mut empty, 4, |_, _| {});
+    }
+
+    #[test]
+    fn timed_variants_report_per_worker_busy() {
+        // parallel_map_timed: one callback per worker, indices < workers.
+        let busy_calls = std::sync::Mutex::new(Vec::new());
+        let out = parallel_map_timed(20, 4, |w, ns| busy_calls.lock().unwrap().push((w, ns)), |i| i);
+        assert_eq!(out, (0..20).collect::<Vec<_>>());
+        let calls = busy_calls.lock().unwrap();
+        assert_eq!(calls.len(), 4);
+        assert!(calls.iter().all(|&(w, _)| w < 4));
+        drop(calls);
+
+        // Serial path reports exactly index 0.
+        let busy_calls = std::sync::Mutex::new(Vec::new());
+        parallel_map_timed(5, 1, |w, ns| busy_calls.lock().unwrap().push((w, ns)), |i| i);
+        let calls = busy_calls.into_inner().unwrap();
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0].0, 0);
+
+        // parallel_fill_timed: one callback per chunk, and the busy spans
+        // cover real work (busy-wait 2ms each so nanos are non-trivial).
+        let total = std::sync::atomic::AtomicU64::new(0);
+        let mut out = vec![0u8; 4];
+        parallel_fill_timed(
+            &mut out,
+            1,
+            |_, ns| {
+                total.fetch_add(ns, Ordering::Relaxed);
+            },
+            |_, slice| {
+                let t = std::time::Instant::now();
+                while t.elapsed().as_micros() < 2000 {}
+                slice.fill(1);
+            },
+        );
+        assert_eq!(out, vec![1u8; 4]);
+        assert!(
+            total.load(Ordering::Relaxed) >= 4 * 2_000_000,
+            "busy under-reported: {}",
+            total.load(Ordering::Relaxed)
+        );
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Serving-path acceptance tests: recall parity against brute force,
+//! streaming insert-then-query correctness across compaction, and the
+//! worker-count invariance contract of the batched query executor.
+
+use stars::data::synth;
+use stars::lsh::{SimHash, WeightedMinHash};
+use stars::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig, ServeMeasure};
+use stars::sim::{CosineSim, WeightedJaccardSim};
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+
+fn clustered_params() -> BuildParams {
+    BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(10)
+        .threshold(0.5)
+}
+
+/// Build the synthetic clustered fixture: 2000 points, 20 well-separated
+/// Gaussian modes, and an engine over its star graph.
+fn build_cosine_engine(
+    h: &SimHash,
+    workers: usize,
+    compact_limit: usize,
+) -> (stars::data::Dataset, QueryEngine<'_>) {
+    let ds = synth::gaussian_mixture(2000, 16, 20, 0.08, 33);
+    let params = clustered_params();
+    let (_, index) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(h)
+        .params(params.clone())
+        .workers(workers)
+        .build_indexed(
+            ServeConfig::default()
+                .route_reps(8)
+                .compact_limit(compact_limit),
+        );
+    let engine = QueryEngine::new(index, h, ServeMeasure::Cosine, params).workers(workers);
+    (ds, engine)
+}
+
+#[test]
+fn recall_at_10_beats_point_nine_vs_brute_force() {
+    let h = SimHash::new(16, 8, 7);
+    let (ds, engine) = build_cosine_engine(&h, 4, 0);
+    let qids: Vec<u32> = (0..2000u32).step_by(40).collect(); // 50 queries
+    let queries = ds.subset(&qids);
+    let got = engine.query(&queries, 10);
+    let truth = brute_force_topk(&ds, &queries, ServeMeasure::Cosine, 10, 4);
+    let recall = truth
+        .iter()
+        .zip(got.iter())
+        .map(|(t, g)| recall_against(t, g))
+        .sum::<f64>()
+        / qids.len() as f64;
+    assert!(recall >= 0.9, "recall@10 = {recall:.3} < 0.9");
+    // Engine scores are true similarities: spot-check against the measure.
+    for (qi, res) in got.iter().enumerate() {
+        for &(id, w) in res.iter().take(3) {
+            let want = stars::sim::cosine(queries.row(qi), ds.row(id as usize));
+            assert!((w - want).abs() < 1e-5, "score drift on ({qi}, {id})");
+        }
+    }
+}
+
+#[test]
+fn query_batches_are_worker_count_invariant() {
+    let h = SimHash::new(16, 8, 7);
+    let qids: Vec<u32> = (0..2000u32).step_by(101).collect();
+    let (ds, engine1) = build_cosine_engine(&h, 1, 0);
+    let queries = ds.subset(&qids);
+    let baseline = engine1.query(&queries, 10);
+    drop(engine1);
+    for workers in [3usize, 8] {
+        let (_, engine) = build_cosine_engine(&h, workers, 0);
+        // Pure-snapshot path: bit-identical to the single-worker baseline.
+        assert_eq!(
+            engine.query(&queries, 10),
+            baseline,
+            "snapshot results differ between 1 and {workers} workers"
+        );
+        // Delta path: insert the same point into a fresh single-worker
+        // engine and this one — still bit-identical.
+        engine.insert(Some(ds.row(5)), None);
+        let (_, e1) = build_cosine_engine(&h, 1, 0);
+        e1.insert(Some(ds.row(5)), None);
+        assert_eq!(
+            engine.query(&queries, 10),
+            e1.query(&queries, 10),
+            "delta-path results differ between 1 and {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn delta_insert_then_query_then_compact_keeps_ids() {
+    let h = SimHash::new(16, 8, 7);
+    let (ds, engine) = build_cosine_engine(&h, 2, 0);
+    let n = ds.len() as u32;
+    // Insert an exact duplicate of point 42: it must be queryable
+    // immediately, tie-broken after the original (ascending id).
+    let id = engine.insert(Some(ds.row(42)), None);
+    assert_eq!(id, n);
+    assert_eq!(engine.num_pending(), 1);
+    let queries = ds.subset(&[42]);
+    let res = engine.query(&queries, 5);
+    assert_eq!(res[0][0].0, 42, "original not first");
+    assert_eq!(res[0][1].0, n, "delta duplicate not second");
+    assert!((res[0][1].1 - 1.0).abs() < 1e-5);
+    // Compact: the delta folds into a fresh epoch, ids unchanged.
+    assert!(engine.compact());
+    assert!(!engine.compact(), "second compact had nothing to do");
+    assert_eq!(engine.num_pending(), 0);
+    assert_eq!(engine.num_indexed(), n as usize + 1);
+    let res = engine.query(&queries, 5);
+    assert_eq!(res[0][0].0, 42);
+    assert_eq!(res[0][1].0, n, "compacted point lost from the index path");
+    assert!((res[0][1].1 - 1.0).abs() < 1e-5);
+}
+
+#[test]
+fn auto_compaction_triggers_at_the_limit() {
+    let h = SimHash::new(16, 8, 7);
+    let (ds, engine) = build_cosine_engine(&h, 2, 3);
+    let before = engine.num_indexed();
+    engine.insert(Some(ds.row(0)), None);
+    engine.insert(Some(ds.row(1)), None);
+    assert_eq!(engine.num_pending(), 2);
+    engine.insert(Some(ds.row(2)), None);
+    assert_eq!(engine.num_pending(), 0, "limit did not trigger compaction");
+    assert_eq!(engine.num_indexed(), before + 3);
+}
+
+#[test]
+fn set_measure_serving_self_retrieval() {
+    // Weighted-Jaccard over Zipf token sets: the set-family serving path
+    // (per-token CWS tables on the query side, hash-expanded query set in
+    // the scoring kernel).
+    let sets = synth::zipf_sets(500, &synth::ZipfSetsParams::default(), 29);
+    let h = WeightedMinHash::new(3, 11);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(8)
+        .threshold(0.1);
+    let (_, index) = StarsBuilder::new(&sets)
+        .similarity(&WeightedJaccardSim)
+        .hash(&h)
+        .params(params.clone())
+        .workers(2)
+        .build_indexed(ServeConfig::default().route_reps(6));
+    let engine = QueryEngine::new(index, &h, ServeMeasure::WeightedJaccard, params).workers(2);
+    let qids = [0u32, 99, 250, 499];
+    let queries = sets.subset(&qids);
+    let res = engine.query(&queries, 5);
+    for (qi, &p) in qids.iter().enumerate() {
+        assert!(!res[qi].is_empty(), "query {p} found nothing");
+        assert_eq!(res[qi][0].0, p, "self not top-1 for set point {p}");
+        assert!((res[qi][0].1 - 1.0).abs() < 1e-5);
+    }
+    // Streaming a new set point works end to end.
+    let id = engine.insert(None, Some(sets.set(7).clone()));
+    assert_eq!(id, 500);
+    let res = engine.query(&sets.subset(&[7]), 3);
+    assert!(res[0].iter().any(|&(i, _)| i == 500), "delta set not found");
+}

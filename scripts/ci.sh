@@ -5,11 +5,12 @@
 #   scripts/ci.sh --bench  # also regenerate BENCH_scoring.json and
 #                          # BENCH_sketch.json (slow)
 #
-# The perf trajectory is tracked via BENCH_scoring.json and BENCH_sketch.json
-# at the repo root, emitted by `cargo bench --bench microbench` and
-# `cargo bench --bench sketchbench` (see EXPERIMENTS.md §Perf). Benches are
-# always *compiled* (`cargo bench --no-run`) so bench code cannot rot between
-# the occasional timed runs.
+# The perf trajectory is tracked via BENCH_scoring.json, BENCH_sketch.json
+# and BENCH_serve.json at the repo root, emitted by `cargo bench --bench
+# microbench`, `--bench sketchbench` and `--bench servebench` (see
+# EXPERIMENTS.md §Perf / §Serve). Benches are always *compiled*
+# (`cargo bench --no-run`, which covers servebench too) so bench code cannot
+# rot between the occasional timed runs.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -34,6 +35,8 @@ if [[ "${1:-}" == "--bench" ]]; then
     cargo bench --bench microbench
     echo "==> cargo bench --bench sketchbench (writes ../BENCH_sketch.json)"
     cargo bench --bench sketchbench
+    echo "==> cargo bench --bench servebench (writes ../BENCH_serve.json)"
+    cargo bench --bench servebench
 fi
 
 echo "CI OK"
