@@ -13,12 +13,16 @@
 //! * single-query latency distribution (p50/p99);
 //! * recall@10 against brute-force scoring, and the brute-force QPS the
 //!   two-hop route-and-expand path replaces;
-//! * streaming inserts + compaction wall time.
+//! * streaming inserts + **incremental-compaction latency vs delta size**
+//!   (the O(delta) claim), plus one full rebuild for the speedup ratio and
+//!   the final snapshot's memory telemetry.
 
 use stars::bench::{fmt_count, fmt_secs, percentile, time_once, time_runs, Table};
 use stars::data::synth;
 use stars::lsh::SimHash;
-use stars::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig, ServeMeasure};
+use stars::serve::{
+    brute_force_topk, recall_against, CompactionMode, QueryEngine, ServeConfig, ServeMeasure,
+};
 use stars::sim::CosineSim;
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
 use stars::util::json::Json;
@@ -121,24 +125,61 @@ fn main() {
         format!("brute {}/s", fmt_count(bf_qps as u64)),
     ]);
 
-    // Streaming inserts + compaction.
-    let (insert_s, _) = time_once(|| {
-        for i in 0..1000 {
-            engine.insert(Some(ds.row(i)), None);
-        }
+    // Streaming inserts + incremental compaction latency vs delta size:
+    // the O(delta) claim, measured. Each round streams `delta` fresh-ish
+    // points in and folds them through the incremental path.
+    let mut insert_per_s = 0.0;
+    let mut compaction_rows: Vec<Json> = Vec::new();
+    for &delta in &[100usize, 1000, 10_000] {
+        let (insert_s, _) = time_once(|| {
+            for i in 0..delta {
+                engine.insert(Some(ds.row(i % N)), None);
+            }
+        });
+        insert_per_s = delta as f64 / insert_s.max(1e-12);
+        let (inc_s, rep) = time_once(|| {
+            engine
+                .compact_with(CompactionMode::Incremental)
+                .expect("delta pending")
+        });
+        table.row(vec![
+            format!("incremental compact (delta={delta})"),
+            fmt_count(engine.num_indexed() as u64),
+            fmt_secs(inc_s),
+            format!(
+                "{} cands, {} buckets",
+                fmt_count(rep.candidates_scored),
+                fmt_count(rep.affected_buckets as u64)
+            ),
+        ]);
+        compaction_rows.push(Json::obj(vec![
+            ("delta", Json::from(delta)),
+            ("incremental_s", Json::from(inc_s)),
+            ("candidates_scored", Json::from(rep.candidates_scored)),
+            ("affected_buckets", Json::from(rep.affected_buckets)),
+            ("edges_emitted", Json::from(rep.edges_emitted)),
+        ]));
+    }
+    // One full rebuild at the same delta size for the speedup ratio.
+    for i in 0..1000 {
+        engine.insert(Some(ds.row(i % N)), None);
+    }
+    let (full_s, _) = time_once(|| {
+        engine
+            .compact_with(CompactionMode::Full)
+            .expect("delta pending")
     });
-    let (compact_s, _) = time_once(|| engine.compact());
     table.row(vec![
-        "insert 1000 + compact".into(),
+        "full-rebuild compact (delta=1000)".into(),
         fmt_count(engine.num_indexed() as u64),
-        fmt_secs(compact_s),
-        format!("{}/s insert", fmt_count((1000.0 / insert_s) as u64)),
+        fmt_secs(full_s),
+        format!("{}/s insert", fmt_count(insert_per_s as u64)),
     ]);
 
     table.print();
 
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-serve/v1")),
+        ("schema", Json::from("stars-bench-serve/v2")),
         ("bench", Json::from("servebench")),
         ("workers", Json::from(workers)),
         (
@@ -156,8 +197,13 @@ fn main() {
         ("latency_p99_ms", Json::from(p99 * 1e3)),
         ("recall_at_10", Json::from(recall)),
         ("brute_force_qps", Json::from(bf_qps)),
-        ("insert_per_s", Json::from(1000.0 / insert_s)),
-        ("compact_s", Json::from(compact_s)),
+        ("insert_per_s", Json::from(insert_per_s)),
+        ("compaction_incremental", Json::Arr(compaction_rows)),
+        ("compact_full_s", Json::from(full_s)),
+        (
+            "snapshot",
+            engine.snapshot().stats().to_json(),
+        ),
     ]);
     let path = bench_out_path();
     match std::fs::write(&path, doc.to_pretty()) {

@@ -115,7 +115,46 @@ impl CostLedger {
             dht_bytes: self.dht_bytes.load(Ordering::Relaxed),
             total_time: self.total_time(),
             real_time,
+            snapshot: None,
         }
+    }
+}
+
+/// Size/memory telemetry of a serving snapshot — router tables, CSR
+/// adjacency, cached sketch-state tables. `StarsBuilder::build_indexed`
+/// attaches one to its [`CostReport`] so capacity planning is tracked in
+/// the same reports as build costs (bytes are heap estimates of the live
+/// arrays, not allocator-exact).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SnapshotStats {
+    /// Indexed points.
+    pub points: usize,
+    /// Undirected star-graph edges in the snapshot CSR.
+    pub edges: usize,
+    /// Routing repetitions.
+    pub router_reps: usize,
+    /// Live entry points across all routing tables.
+    pub router_entries: usize,
+    /// Router heap bytes (entry arrays + key tables).
+    pub router_bytes: usize,
+    /// CSR heap bytes (offsets + neighbors + weights).
+    pub csr_bytes: usize,
+    /// Cached sketch-state table bytes (hyperplanes, per-token tables).
+    pub state_table_bytes: usize,
+}
+
+impl SnapshotStats {
+    /// JSON object for experiment/serving reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("points", Json::from(self.points)),
+            ("edges", Json::from(self.edges)),
+            ("router_reps", Json::from(self.router_reps)),
+            ("router_entries", Json::from(self.router_entries)),
+            ("router_bytes", Json::from(self.router_bytes)),
+            ("csr_bytes", Json::from(self.csr_bytes)),
+            ("state_table_bytes", Json::from(self.state_table_bytes)),
+        ])
     }
 }
 
@@ -140,12 +179,15 @@ pub struct CostReport {
     pub total_time: f64,
     /// Wall-clock seconds (paper: real running time).
     pub real_time: f64,
+    /// Serving-snapshot telemetry, when the job exported one
+    /// (`StarsBuilder::build_indexed`).
+    pub snapshot: Option<SnapshotStats>,
 }
 
 impl CostReport {
     /// Convert to JSON for experiment reports.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("workers", Json::from(self.workers)),
             ("comparisons", Json::from(self.comparisons)),
             ("sketch_evals", Json::from(self.sketch_evals)),
@@ -155,7 +197,11 @@ impl CostReport {
             ("dht_bytes", Json::from(self.dht_bytes)),
             ("total_time_s", Json::from(self.total_time)),
             ("real_time_s", Json::from(self.real_time)),
-        ])
+        ];
+        if let Some(s) = &self.snapshot {
+            pairs.push(("snapshot", s.to_json()));
+        }
+        Json::obj(pairs)
     }
 }
 

@@ -22,4 +22,4 @@ pub mod terasort;
 
 pub use cluster::Cluster;
 pub use dht::Dht;
-pub use metrics::{CostLedger, CostReport};
+pub use metrics::{CostLedger, CostReport, SnapshotStats};

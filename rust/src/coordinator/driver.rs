@@ -108,13 +108,55 @@ pub fn serve_measure(spec: MeasureSpec) -> crate::Result<crate::serve::ServeMeas
     })
 }
 
+/// Options for [`run_serve_with`] beyond the basic query sweep.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Queries sampled from the dataset (the paper's recall protocol).
+    pub queries: usize,
+    /// Neighbors returned per query.
+    pub k: usize,
+    /// Points streamed in after the query sweep to exercise compaction
+    /// (0 = skip the write-path phase).
+    pub inserts: usize,
+    /// How the compaction folds the inserts in (the serve config's knob).
+    pub compaction: crate::serve::CompactionMode,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            queries: 1000,
+            k: 10,
+            inserts: 0,
+            compaction: crate::serve::CompactionMode::default(),
+        }
+    }
+}
+
 /// Build a job's graph, export a serving snapshot, and measure the query
 /// path: batch QPS, single-query latency percentiles, and recall@k against
 /// brute-force scoring. Query points are sampled from the dataset itself
 /// (the paper's recall protocol).
 pub fn run_serve(job: &Job, queries: usize, k: usize) -> crate::Result<Json> {
+    run_serve_with(
+        job,
+        &ServeOpts {
+            queries,
+            k,
+            ..ServeOpts::default()
+        },
+    )
+}
+
+/// [`run_serve`] with the full option set: optionally streams `inserts`
+/// points in after the query sweep and reports the configured compaction's
+/// cost ([`crate::serve::CompactionReport`]) plus the final snapshot's
+/// memory telemetry, so capacity planning reads off the same JSON as build
+/// costs.
+pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     use crate::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig};
     use std::time::Instant;
+    let (queries, k) = (opts.queries, opts.k);
     let dataset = job.dataset.realize(job.data_seed)?;
     let smeasure = serve_measure(job.measure)?;
     let measure = make_measure(job.measure)?;
@@ -128,7 +170,15 @@ pub fn run_serve(job: &Job, queries: usize, k: usize) -> crate::Result<Json> {
     } else {
         job.workers
     };
-    let cfg = ServeConfig::default().route_reps(job.params.sketches.clamp(1, 8));
+    // Manual compaction only (compact_limit 0): the write-path phase below
+    // measures inserts and exactly one compaction — a default auto-compact
+    // limit would fire mid-loop for inserts ≥ 1024, folding compaction
+    // walls into insert_per_s and draining the delta before the reported
+    // compact_report() call.
+    let cfg = ServeConfig::default()
+        .route_reps(job.params.sketches.clamp(1, 8))
+        .compact_limit(0)
+        .compaction(opts.compaction);
     let t = Instant::now();
     let (out, index) = StarsBuilder::new(&dataset)
         .similarity(measure.as_ref())
@@ -168,7 +218,7 @@ pub fn run_serve(job: &Job, queries: usize, k: usize) -> crate::Result<Json> {
             .sum::<f64>()
             / got.len() as f64
     };
-    Ok(Json::obj(vec![
+    let mut doc = vec![
         ("job", job.to_json()),
         ("edges", Json::from(out.graph.num_edges())),
         ("router_entries", Json::from(engine.snapshot().router().num_entries())),
@@ -179,7 +229,31 @@ pub fn run_serve(job: &Job, queries: usize, k: usize) -> crate::Result<Json> {
         ("p50_ms", Json::from(crate::bench::percentile(&lats, 0.50) * 1e3)),
         ("p99_ms", Json::from(crate::bench::percentile(&lats, 0.99) * 1e3)),
         ("recall_at_k", Json::from(recall)),
-    ]))
+    ];
+    // Write path: stream inserts in and compact with the configured mode,
+    // reporting the compaction's cost alongside the read-path numbers.
+    if opts.inserts > 0 && !dataset.is_empty() {
+        let t = Instant::now();
+        for i in 0..opts.inserts {
+            let src = i % dataset.len();
+            let row = (dataset.dim() > 0).then(|| dataset.row(src));
+            let set = (!dataset.sets.is_empty()).then(|| dataset.set(src).clone());
+            engine.insert(row, set);
+        }
+        let insert_s = t.elapsed().as_secs_f64();
+        doc.push(("inserts", Json::from(opts.inserts)));
+        doc.push((
+            "insert_per_s",
+            Json::from(opts.inserts as f64 / insert_s.max(1e-12)),
+        ));
+        if let Some(rep) = engine.compact_report() {
+            doc.push(("compaction", rep.to_json()));
+        }
+    }
+    // Final snapshot telemetry (router/CSR/state-table memory), tracked
+    // like build costs (ROADMAP "Router memory telemetry").
+    doc.push(("snapshot", engine.snapshot().stats().to_json()));
+    Ok(Json::obj(doc))
 }
 
 #[cfg(test)]
@@ -247,6 +321,41 @@ mod tests {
         assert!(doc.get("batch_qps").unwrap().as_f64().unwrap() > 0.0);
         assert!(doc.get("p99_ms").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(doc.get("k").unwrap().as_usize().unwrap(), 5);
+    }
+
+    #[test]
+    fn run_serve_with_inserts_reports_compaction_and_snapshot() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 500,
+                dim: 16,
+                modes: 8,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                .sketches(6)
+                .threshold(0.4),
+            data_seed: 11,
+            workers: 2,
+        };
+        let opts = ServeOpts {
+            queries: 20,
+            k: 5,
+            inserts: 30,
+            compaction: crate::serve::CompactionMode::Incremental,
+        };
+        let doc = run_serve_with(&job, &opts).unwrap();
+        assert!(doc.get("insert_per_s").unwrap().as_f64().unwrap() > 0.0);
+        let comp = doc.get("compaction").expect("compaction report missing");
+        assert_eq!(comp.get("mode").unwrap().as_str().unwrap(), "incremental");
+        assert_eq!(comp.get("delta_points").unwrap().as_usize().unwrap(), 30);
+        assert!(comp.get("seconds").unwrap().as_f64().unwrap() >= 0.0);
+        let snap = doc.get("snapshot").expect("snapshot telemetry missing");
+        assert_eq!(snap.get("points").unwrap().as_usize().unwrap(), 530);
+        assert!(snap.get("router_bytes").unwrap().as_usize().unwrap() > 0);
+        assert!(snap.get("csr_bytes").unwrap().as_usize().unwrap() > 0);
+        assert!(snap.get("state_table_bytes").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod job;
 pub mod driver;
 pub mod experiments;
 
-pub use driver::{run_job, run_serve, JobResult};
+pub use driver::{run_job, run_serve, run_serve_with, JobResult, ServeOpts};
 pub use job::{DatasetSpec, FamilySpec, Job, MeasureSpec};

@@ -99,6 +99,14 @@ impl Csr {
             .zip(self.weights[r].iter().copied())
     }
 
+    /// Estimated heap bytes of the adjacency arrays (offsets + neighbors +
+    /// weights) — serving-snapshot memory telemetry.
+    pub fn heap_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.neighbors.len() * std::mem::size_of::<u32>()
+            + self.weights.len() * std::mem::size_of::<f32>()
+    }
+
     /// Maximum degree.
     pub fn max_degree(&self) -> usize {
         (0..self.num_nodes() as u32)

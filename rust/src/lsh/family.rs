@@ -23,6 +23,17 @@ use crate::util::fxhash;
 /// implementations must be immutable after `prepare` (hence `Sync`). The
 /// serving layer additionally retains states inside `Arc`-shared snapshots
 /// that hop threads on epoch swaps (hence `Send`).
+///
+/// **State-purity contract.** A state is a *cache*, never a definition: for
+/// any evaluation dataset, outputs must be bit-identical to what a state
+/// prepared against any other dataset would produce — every cached value is
+/// a pure function of `(family seed, rep, point features)` alone (SimHash
+/// hyperplanes depend only on the rep; MinHash/CWS per-token draws are
+/// keyed by the token id, with an on-the-fly fallback for tokens outside
+/// the prepare-time vocabulary). The serving layer leans on this twice:
+/// query batches are sketched through index-time states, and incremental
+/// compaction sketches *delta* points through the snapshot's states and
+/// must land them in exactly the buckets a from-scratch rebuild would.
 pub trait SketchState: Send + Sync {
     /// Bucket keys of points `lo..lo + out.len()` into `out`.
     fn bucket_keys_into(&self, ds: &Dataset, lo: usize, out: &mut [u64]);
@@ -36,6 +47,13 @@ pub trait SketchState: Send + Sync {
     /// [`LshFamily::supports_packed_sort`].
     fn packed_sort_keys_into(&self, _ds: &Dataset, _lo: usize, _out: &mut [u64]) {
         unreachable!("family does not support packed sort keys");
+    }
+
+    /// Heap bytes of the state's cached tables (hyperplane matrices,
+    /// per-token draws) — serving-snapshot memory telemetry. 0 when the
+    /// state caches nothing beyond the family constants.
+    fn table_bytes(&self) -> usize {
+        0
     }
 }
 

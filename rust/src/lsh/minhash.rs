@@ -139,6 +139,10 @@ impl SketchState for MinHashState<'_> {
             self.point_min(&ds.set(lo + k).tokens, row);
         }
     }
+
+    fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<u64>()
+    }
 }
 
 impl LshFamily for MinHash {

@@ -102,6 +102,10 @@ impl SketchState for MixtureState<'_> {
             }
         }
     }
+
+    fn table_bytes(&self) -> usize {
+        self.sim_state.table_bytes() + self.choice.len()
+    }
 }
 
 impl LshFamily for MixtureHash {

@@ -100,6 +100,10 @@ impl SketchState for SimHashState<'_> {
             *k = k.reverse_bits() >> (64 - self.h.bits);
         }
     }
+
+    fn table_bytes(&self) -> usize {
+        self.planes.len() * std::mem::size_of::<f32>()
+    }
 }
 
 impl LshFamily for SimHash {

@@ -107,6 +107,33 @@ where
     out
 }
 
+/// Bucket keys of the point range `lo..lo + count` of `ds` through an
+/// already-prepared [`SketchState`], chunked over `workers` pool threads —
+/// the *delta-range* driver. Where [`bucket_keys_par`] prepares a fresh
+/// state and sketches a whole dataset, this sketches only a sub-range
+/// through a state the caller already owns: the serving layer's incremental
+/// compaction pays `O(|delta|)` sketch work by running the snapshot's
+/// cached per-repetition states over just the appended rows of the merged
+/// dataset (bit-identical keys by the state-purity contract on
+/// [`SketchState`]). Output is identical for any worker count.
+pub fn state_keys_range_par(
+    state: &dyn crate::lsh::SketchState,
+    ds: &Dataset,
+    lo: usize,
+    count: usize,
+    workers: usize,
+) -> Vec<u64> {
+    debug_assert!(lo + count <= ds.len());
+    let mut out = vec![0u64; count];
+    if count == 0 {
+        return out;
+    }
+    pool::parallel_fill(&mut out, chunk_points(count, workers), |off, slice| {
+        state.bucket_keys_into(ds, lo + off, slice)
+    });
+    out
+}
+
 /// Packed sort keys under `rep`, chunked over `workers`; `None` when the
 /// family has no packed fast path.
 pub fn packed_sort_keys_par<F: LshFamily + ?Sized>(
@@ -344,6 +371,22 @@ mod tests {
                 h.packed_sort_keys(&ds, 1)
             );
         }
+    }
+
+    #[test]
+    fn state_range_driver_matches_full_sketch() {
+        // The incremental-compaction driver: sketching a sub-range through a
+        // prepared state must match the same rows of a full-dataset sketch,
+        // for any worker count.
+        let ds = synth::gaussian_mixture(2500, 16, 4, 0.1, 11);
+        let h = SimHash::new(16, 10, 5);
+        let state = h.prepare(&ds, 3);
+        let full = h.bucket_keys(&ds, 3);
+        for workers in [1usize, 4] {
+            let range = state_keys_range_par(state.as_ref(), &ds, 300, 2100, workers);
+            assert_eq!(&range[..], &full[300..2400], "workers={workers}");
+        }
+        assert!(state_keys_range_par(state.as_ref(), &ds, 10, 0, 2).is_empty());
     }
 
     #[test]

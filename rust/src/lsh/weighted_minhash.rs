@@ -210,6 +210,10 @@ impl SketchState for WeightedMinHashState<'_> {
             }
         }
     }
+
+    fn table_bytes(&self) -> usize {
+        self.params.len() * std::mem::size_of::<CwsParam>()
+    }
 }
 
 impl LshFamily for WeightedMinHash {

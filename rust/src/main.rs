@@ -48,9 +48,12 @@ USAGE:
                  [--r SKETCHES] [--s LEADERS] [--threshold T] [--window W]
                  [--degree-cap K] [--workers W] [--seed S] [--join direct|dht|shuffle]
   stars cluster  (build flags) [--classes K]
-  stars serve    (build flags) [--queries N] [--k K]
+  stars serve    (build flags) [--queries N] [--k K] [--inserts N]
+                 [--compact-mode incremental|full]
                  build a graph, export a serving snapshot, and answer N
-                 sampled top-k queries (reports QPS, p50/p99, recall@k)
+                 sampled top-k queries (reports QPS, p50/p99, recall@k);
+                 with --inserts, also stream N points in and report the
+                 compaction cost + snapshot memory telemetry
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
                  [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
   stars smoke    verify artifacts (PJRT runtime end-to-end)
@@ -158,9 +161,17 @@ fn cluster(args: &mut Args) -> stars::Result<()> {
 
 fn serve(args: &mut Args) -> stars::Result<()> {
     let job = job_from_args(args)?;
-    let queries = args.get_parsed_or("queries", 1000usize);
-    let k = args.get_parsed_or("k", 10usize);
-    let doc = stars::coordinator::run_serve(&job, queries, k)?;
+    let opts = stars::coordinator::ServeOpts {
+        queries: args.get_parsed_or("queries", 1000usize),
+        k: args.get_parsed_or("k", 10usize),
+        inserts: args.get_parsed_or("inserts", 0usize),
+        compaction: match args.get_or("compact-mode", "incremental") {
+            "incremental" => stars::serve::CompactionMode::Incremental,
+            "full" => stars::serve::CompactionMode::Full,
+            other => anyhow::bail!("unknown compaction mode '{other}'"),
+        },
+    };
+    let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());
     Ok(())
 }

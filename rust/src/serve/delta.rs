@@ -60,6 +60,18 @@ impl DeltaBuffer {
 
     /// Append a point (dense row and/or token set, matching the snapshot's
     /// feature kinds); returns its global id.
+    ///
+    /// ```
+    /// use stars::data::Dataset;
+    /// use stars::serve::DeltaBuffer;
+    ///
+    /// // A snapshot of 100 dense points hands out global ids from 100 on.
+    /// let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+    /// let mut delta = DeltaBuffer::new(&template, 100);
+    /// assert_eq!(delta.insert(Some(&[0.0, 1.0]), None), 100);
+    /// assert_eq!(delta.insert(Some(&[0.5, 0.5]), None), 101);
+    /// assert_eq!(delta.len(), 2);
+    /// ```
     pub fn insert(&mut self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
         assert_eq!(
             set.is_some(),

@@ -11,16 +11,23 @@
 
 use super::delta::DeltaBuffer;
 use super::index::StarIndex;
+use super::CompactionMode;
+use crate::ampc::SnapshotStats;
 use crate::data::types::{Dataset, WeightedSet};
 use crate::graph::two_hop::{two_hop_into, VisitScratch};
-use crate::lsh::LshFamily;
+use crate::graph::{Csr, Edge};
+use crate::lsh::{sketch, LshFamily};
 use crate::sim::{
     BatchScratch, CosineSim, DotSim, JaccardSim, MixtureSim, Similarity, WeightedJaccardSim,
 };
-use crate::stars::{BuildParams, StarsBuilder};
+use crate::stars::{Accumulator, BuildParams, StarsBuilder};
+use crate::util::fxhash::FxHashMap;
+use crate::util::json::Json;
 use crate::util::pool;
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 /// The similarity measure a serving stack scores with. A plain enum (not a
 /// trait object) so engines stay `Send + Sync` without lifetime plumbing
@@ -278,6 +285,45 @@ pub fn brute_force_topk(
     })
 }
 
+/// What one compaction did: the mode it ran in, how much work it scored,
+/// and the resulting snapshot's memory telemetry.
+#[derive(Clone, Debug)]
+pub struct CompactionReport {
+    /// Mode the compaction ran in.
+    pub mode: CompactionMode,
+    /// Delta points folded into the new epoch.
+    pub delta_points: usize,
+    /// Distinct (repetition, bucket key) pairs the delta landed in —
+    /// existing snapshot buckets and fresh keys alike (incremental mode;
+    /// 0 for a full rebuild, which re-buckets everything).
+    pub affected_buckets: usize,
+    /// Pairwise similarity evaluations performed — the cost the O(delta)
+    /// path bounds by |delta| · avg bucket size instead of the full
+    /// rebuild's corpus-wide rescoring.
+    pub candidates_scored: u64,
+    /// Raw edges emitted before dedup/degree-capping.
+    pub edges_emitted: usize,
+    /// Wall-clock seconds for the whole compaction (sketch through swap).
+    pub seconds: f64,
+    /// Memory/size telemetry of the new snapshot epoch.
+    pub snapshot: SnapshotStats,
+}
+
+impl CompactionReport {
+    /// JSON object for serving reports and benches.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::from(self.mode.name())),
+            ("delta_points", Json::from(self.delta_points)),
+            ("affected_buckets", Json::from(self.affected_buckets)),
+            ("candidates_scored", Json::from(self.candidates_scored)),
+            ("edges_emitted", Json::from(self.edges_emitted)),
+            ("seconds", Json::from(self.seconds)),
+            ("snapshot", self.snapshot.to_json()),
+        ])
+    }
+}
+
 /// The online query engine: an epoch-swapped [`StarIndex`] snapshot plus a
 /// streaming [`DeltaBuffer`], serving worker-count-invariant top-k batches.
 pub struct QueryEngine<'f> {
@@ -341,6 +387,31 @@ impl<'f> QueryEngine<'f> {
     /// with ties broken by ascending id. Ids are global: snapshot points
     /// keep their dataset ids, delta points continue the sequence and
     /// survive compaction unchanged.
+    ///
+    /// ```
+    /// use stars::data::synth;
+    /// use stars::lsh::SimHash;
+    /// use stars::serve::{QueryEngine, ServeConfig, ServeMeasure};
+    /// use stars::sim::CosineSim;
+    /// use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+    ///
+    /// let ds = synth::gaussian_mixture(200, 8, 4, 0.1, 7);
+    /// let family = SimHash::new(8, 6, 1);
+    /// let params = BuildParams::threshold_mode(Algorithm::LshStars)
+    ///     .sketches(4)
+    ///     .threshold(0.3);
+    /// let (_, index) = StarsBuilder::new(&ds)
+    ///     .similarity(&CosineSim)
+    ///     .hash(&family)
+    ///     .params(params.clone())
+    ///     .workers(2)
+    ///     .build_indexed(ServeConfig::default().route_reps(4));
+    /// let engine = QueryEngine::new(index, &family, ServeMeasure::Cosine, params);
+    ///
+    /// let top = engine.query(&ds.subset(&[0]), 3);
+    /// assert_eq!(top[0][0].0, 0); // a point's nearest neighbor is itself
+    /// assert!((top[0][0].1 - 1.0).abs() < 1e-5);
+    /// ```
     pub fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
         let nq = queries.len();
         if nq == 0 {
@@ -387,39 +458,234 @@ impl<'f> QueryEngine<'f> {
         id
     }
 
-    /// Fold the delta buffer into a fresh snapshot: rebuild the star graph
-    /// over snapshot ∪ delta with the engine's build parameters, rebuild
-    /// the routing tables, and swap the epoch in. Queries keep serving from
-    /// the old epoch throughout; only the final pointer swap takes the
-    /// delta lock. Returns false when there was nothing to compact.
+    /// Fold the delta buffer into a fresh snapshot epoch using the
+    /// snapshot's configured [`CompactionMode`] and swap it in. Queries
+    /// keep serving from the old epoch throughout; only the final pointer
+    /// swap takes the delta lock. Returns false when there was nothing to
+    /// compact.
     pub fn compact(&self) -> bool {
+        self.compact_report().is_some()
+    }
+
+    /// [`QueryEngine::compact`] returning the work/telemetry report
+    /// (`None` when the delta was empty).
+    pub fn compact_report(&self) -> Option<CompactionReport> {
+        let mode = self.snapshot.read().unwrap().config().compaction;
+        self.compact_with(mode)
+    }
+
+    /// Compact with an explicit mode, overriding the snapshot's configured
+    /// one (benches compare the two on the same engine).
+    ///
+    /// `Full` rebuilds the star graph over snapshot ∪ delta from scratch —
+    /// O(n) however small the delta. `Incremental` sketches *only* the
+    /// delta through the snapshot's cached per-repetition states, routes
+    /// the keys through the existing bucket tables, scores each delta point
+    /// against its buckets' entry points (plus delta points sharing the
+    /// bucket), folds the thresholded edges into an accumulator re-opened
+    /// from the snapshot CSR, and extends the routing tables in place —
+    /// O(|delta| · avg bucket size).
+    ///
+    /// **Equivalence.** The two modes produce snapshots with bit-identical
+    /// CSR edges and query answers (`tests/serve_integration.rs`) whenever
+    /// the rebuild's randomized machinery would not have engaged: every
+    /// affected bucket is all-pairs-scored (non-Stars algorithm, or
+    /// |bucket| ≤ 2·leaders), no bucket exceeds `max_bucket`, the router
+    /// retains every bucket member (`route_leaders` ≥ max bucket size),
+    /// `route_reps` ≥ the build's repetition count, edge weights are
+    /// tie-free, and the measure's kernels are orientation-symmetric
+    /// (cosine/dot/jaccard/mixture exactly; weighted-jaccard to the last
+    /// ulp). Outside those conditions incremental compaction still yields a
+    /// valid two-hop searchable graph — delta points connect through the
+    /// routed entry points, the serving analogue of bucket leaders — it
+    /// just stops being the rebuild's bit-exact twin (leader re-draws are
+    /// the price of not rescoring the corpus).
+    pub fn compact_with(&self, mode: CompactionMode) -> Option<CompactionReport> {
         let _serial = self.compacting.lock().unwrap();
-        let (merged, prefix, cfg) = {
+        let t0 = Instant::now();
+        let (snap, delta_ds, prefix) = {
             let d = self.delta.lock().unwrap();
             if d.is_empty() {
-                return false;
+                return None;
             }
-            let snap = self.snapshot.read().unwrap().clone();
             (
-                snap.dataset().concat(d.dataset()),
+                self.snapshot.read().unwrap().clone(),
+                d.dataset().clone(),
                 d.len(),
-                snap.config().clone(),
             )
         };
-        let sim = self.measure.to_similarity();
-        let out = StarsBuilder::new(&merged)
-            .similarity(sim.as_ref())
-            .hash(self.family)
-            .params(self.build.clone())
-            .workers(self.workers)
-            .build();
-        let next = StarIndex::build_with_workers(merged, self.family, &out.graph, cfg, self.workers);
+        let (next, mut report) = match mode {
+            CompactionMode::Full => self.rebuild_full(&snap, &delta_ds),
+            CompactionMode::Incremental => self.rebuild_incremental(&snap, &delta_ds),
+        };
+        report.snapshot = next.stats();
+        report.seconds = t0.elapsed().as_secs_f64();
         // Swap the epoch and trim the absorbed prefix atomically w.r.t.
         // readers (who take the delta lock to capture their view).
         let mut d = self.delta.lock().unwrap();
         *self.snapshot.write().unwrap() = Arc::new(next);
         d.absorb_prefix(prefix);
-        true
+        Some(report)
+    }
+
+    /// O(n) compaction: rebuild the star graph over snapshot ∪ delta with
+    /// the engine's build parameters (sharing the build's bucket keys with
+    /// the snapshot export) and rebuild the routing tables from scratch.
+    fn rebuild_full(
+        &self,
+        snap: &StarIndex<'f>,
+        delta: &Dataset,
+    ) -> (StarIndex<'f>, CompactionReport) {
+        let merged = snap.dataset().concat(delta);
+        let cfg = snap.config().clone();
+        let sim = self.measure.to_similarity();
+        let (out, keys) = StarsBuilder::new(&merged)
+            .similarity(sim.as_ref())
+            .hash(self.family)
+            .params(self.build.clone())
+            .workers(self.workers)
+            .build_with_keys(cfg.route_reps.max(1));
+        let next =
+            StarIndex::build_from_keys(merged, self.family, &out.graph, cfg, self.workers, keys);
+        let report = CompactionReport {
+            mode: CompactionMode::Full,
+            delta_points: delta.len(),
+            affected_buckets: 0,
+            candidates_scored: out.report.comparisons,
+            edges_emitted: out.report.edges_emitted as usize,
+            seconds: 0.0,
+            snapshot: SnapshotStats::default(),
+        };
+        (next, report)
+    }
+
+    /// O(delta) compaction: sketch → route → score only the delta, fold
+    /// into the snapshot's graph, extend the router, share the states.
+    fn rebuild_incremental(
+        &self,
+        snap: &StarIndex<'f>,
+        delta: &Dataset,
+    ) -> (StarIndex<'f>, CompactionReport) {
+        let n_old = snap.len();
+        let nd = delta.len();
+        let merged = snap.dataset().concat(delta);
+        let cfg = snap.config().clone();
+
+        // 1. Sketch only the delta range of the merged dataset through the
+        //    snapshot's cached per-repetition states (bit-identical keys by
+        //    the state-purity contract — no re-prepare, no corpus pass).
+        let delta_keys: Vec<Vec<u64>> = snap
+            .states()
+            .iter()
+            .map(|s| sketch::state_keys_range_par(s.as_ref(), &merged, n_old, nd, self.workers))
+            .collect();
+
+        // 2. Find the affected buckets: group delta points by bucket key
+        //    per repetition (sorted key order — the task list, and hence
+        //    every downstream edge vector, is identical for any worker
+        //    count) and look up each bucket's entry points.
+        struct BucketTask<'s> {
+            /// Snapshot entry points of the bucket (empty for a new key).
+            entries: &'s [u32],
+            /// Delta members that routed into the bucket, ids ascending.
+            members: Vec<u32>,
+        }
+        let mut tasks: Vec<BucketTask<'_>> = Vec::new();
+        let mut affected = 0usize;
+        for (rep, keys) in delta_keys.iter().enumerate() {
+            let mut groups: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+            for (i, &k) in keys.iter().enumerate() {
+                groups.entry(k).or_default().push((n_old + i) as u32);
+            }
+            let mut ordered: Vec<(u64, Vec<u32>)> = groups.into_iter().collect();
+            ordered.sort_unstable_by_key(|(k, _)| *k);
+            for (key, members) in ordered {
+                let entries = snap.router().route(rep, key);
+                affected += 1;
+                if entries.len() + members.len() >= 2 {
+                    tasks.push(BucketTask { entries, members });
+                }
+            }
+        }
+
+        // 3. Score each delta member against its bucket's routed snapshot
+        //    entries plus the bucket's later delta members, through the
+        //    tiled kernels; keep pairs at or above the build threshold.
+        //    The delta point sits on the leader side, which is weight-exact
+        //    versus the rebuild's member-side orientation for every
+        //    orientation-symmetric measure (see compact_with docs).
+        let threshold = self.build.threshold;
+        let measure = self.measure;
+        let merged_ref = &merged;
+        let task_refs = &tasks;
+        let scored = AtomicU64::new(0);
+        let batches: Vec<Vec<Edge>> = pool::parallel_map(tasks.len(), self.workers, |ti| {
+            QSCRATCH.with(|cell| {
+                let s = &mut *cell.borrow_mut();
+                let t = &task_refs[ti];
+                let mut edges = Vec::new();
+                let mut cands: Vec<u32> =
+                    Vec::with_capacity(t.entries.len() + t.members.len());
+                for (j, &x) in t.members.iter().enumerate() {
+                    cands.clear();
+                    cands.extend_from_slice(t.entries);
+                    cands.extend_from_slice(&t.members[j + 1..]);
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    measure.score(
+                        merged_ref,
+                        x as usize,
+                        merged_ref,
+                        &cands,
+                        &mut s.batch,
+                        &mut s.scores,
+                    );
+                    scored.fetch_add(cands.len() as u64, Ordering::Relaxed);
+                    for (&c, &w) in cands.iter().zip(s.scores.iter()) {
+                        if w >= threshold {
+                            edges.push(Edge::new(x, c, w));
+                        }
+                    }
+                }
+                edges
+            })
+        });
+        let emitted: usize = batches.iter().map(Vec::len).sum();
+
+        // 4. Fold the delta edges into the snapshot graph through a
+        //    re-opened accumulator and finalize the next epoch's graph.
+        let mut acc = Accumulator::reopen_from_csr(
+            snap.csr(),
+            merged.len(),
+            self.build.degree_cap,
+            self.workers,
+        );
+        acc.add_wave(batches);
+        let graph = acc.finalize();
+
+        // 5. Extend the routing tables with the delta keys and assemble
+        //    the next snapshot; sketch states carry over untouched.
+        let router = snap
+            .router()
+            .extended(&delta_keys, n_old as u32, cfg.route_leaders);
+        let next = StarIndex::from_parts(
+            merged,
+            Csr::new(&graph),
+            snap.states().to_vec(),
+            router,
+            cfg,
+        );
+        let report = CompactionReport {
+            mode: CompactionMode::Incremental,
+            delta_points: nd,
+            affected_buckets: affected,
+            candidates_scored: scored.into_inner(),
+            edges_emitted: emitted,
+            seconds: 0.0,
+            snapshot: SnapshotStats::default(),
+        };
+        (next, report)
     }
 }
 
@@ -503,6 +769,35 @@ mod tests {
         let mut top = TopNeighbors::new(0);
         top.push(1.0, 1);
         assert!(top.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn incremental_compaction_absorbs_the_delta() {
+        let h = SimHash::new(16, 8, 3);
+        let engine = build_engine(&h);
+        let snap = engine.snapshot();
+        let n = snap.len();
+        engine.insert(Some(snap.dataset().row(7)), None);
+        let rep = engine.compact_report().expect("delta pending");
+        assert_eq!(rep.mode, CompactionMode::Incremental);
+        assert_eq!(rep.delta_points, 1);
+        assert!(rep.affected_buckets > 0, "duplicate routed nowhere");
+        assert!(rep.candidates_scored > 0);
+        assert!(rep.edges_emitted > 0);
+        assert_eq!(rep.snapshot.points, n + 1);
+        assert!(rep.snapshot.router_entries > 0);
+        assert_eq!(engine.num_indexed(), n + 1);
+        assert_eq!(engine.num_pending(), 0);
+        assert!(engine.compact_report().is_none(), "nothing left to compact");
+        // The absorbed duplicate is reachable through the new epoch's graph
+        // (no delta buffer backs it up any more).
+        let res = engine.query(&snap.dataset().subset(&[7]), 5);
+        assert_eq!(res[0][0].0, 7);
+        assert!(
+            res[0].iter().any(|&(id, _)| id == n as u32),
+            "absorbed duplicate not reachable: {:?}",
+            res[0]
+        );
     }
 
     #[test]

@@ -10,10 +10,12 @@
 
 use super::router::Router;
 use super::ServeConfig;
+use crate::ampc::SnapshotStats;
 use crate::data::types::Dataset;
 use crate::graph::{Csr, Graph};
 use crate::lsh::{LshFamily, SketchState};
 use crate::util::pool;
+use std::sync::Arc;
 
 /// Minimum points per sketch chunk before the snapshot/query sketch passes
 /// spin up pool threads (same economics as the build-side drivers).
@@ -25,10 +27,15 @@ fn chunk_points(n: usize, workers: usize) -> usize {
 }
 
 /// An immutable serving snapshot over a built star graph.
+///
+/// States are held behind `Arc` so incremental compaction can carry them
+/// into the next epoch unchanged (they are pure per-repetition caches — see
+/// the state-purity contract on [`SketchState`]) instead of re-deriving
+/// them per snapshot.
 pub struct StarIndex<'f> {
     ds: Dataset,
     csr: Csr,
-    states: Vec<Box<dyn SketchState + 'f>>,
+    states: Vec<Arc<dyn SketchState + 'f>>,
     router: Router,
     cfg: ServeConfig,
 }
@@ -54,6 +61,24 @@ impl<'f> StarIndex<'f> {
         cfg: ServeConfig,
         workers: usize,
     ) -> StarIndex<'f> {
+        Self::build_from_keys(ds, family, graph, cfg, workers, Vec::new())
+    }
+
+    /// [`StarIndex::build_with_workers`] reusing bucket keys the graph
+    /// build already computed: `build_keys[rep]`, when `Some`, must be the
+    /// full per-point key vector of routing repetition `rep` (exactly what
+    /// `StarsBuilder::build_with_keys` hands over). Missing or absent
+    /// repetitions are sketched here as before — so a SortingLSH build,
+    /// which never computes bucket keys, still exports a snapshot, it just
+    /// pays for the routing sketch itself.
+    pub fn build_from_keys(
+        ds: Dataset,
+        family: &'f dyn LshFamily,
+        graph: &Graph,
+        cfg: ServeConfig,
+        workers: usize,
+        mut build_keys: Vec<Option<Vec<u64>>>,
+    ) -> StarIndex<'f> {
         assert_eq!(
             graph.num_nodes(),
             ds.len(),
@@ -65,16 +90,25 @@ impl<'f> StarIndex<'f> {
         // rep) draws the builder bucketed repetitions 0..R with, so routing
         // buckets coincide with build buckets for shared rep ids. States
         // are retained: the query path sketches straight through them.
-        let mut states: Vec<Box<dyn SketchState + 'f>> = Vec::with_capacity(reps);
+        let mut states: Vec<Arc<dyn SketchState + 'f>> = Vec::with_capacity(reps);
         let mut keys_per_rep: Vec<Vec<u64>> = Vec::with_capacity(reps);
         for rep in 0..reps {
-            let state = family.prepare(&ds, rep as u64);
-            let mut keys = vec![0u64; n];
-            if n > 0 {
-                pool::parallel_fill(&mut keys, chunk_points(n, workers), |lo, slice| {
-                    state.bucket_keys_into(&ds, lo, slice)
-                });
-            }
+            let state: Arc<dyn SketchState + 'f> = Arc::from(family.prepare(&ds, rep as u64));
+            let keys = match build_keys.get_mut(rep).and_then(Option::take) {
+                Some(keys) => {
+                    assert_eq!(keys.len(), n, "build keys length != dataset size");
+                    keys
+                }
+                None => {
+                    let mut keys = vec![0u64; n];
+                    if n > 0 {
+                        pool::parallel_fill(&mut keys, chunk_points(n, workers), |lo, slice| {
+                            state.bucket_keys_into(&ds, lo, slice)
+                        });
+                    }
+                    keys
+                }
+            };
             states.push(state);
             keys_per_rep.push(keys);
         }
@@ -82,6 +116,28 @@ impl<'f> StarIndex<'f> {
         StarIndex {
             csr: Csr::new(graph),
             ds,
+            states,
+            router,
+            cfg,
+        }
+    }
+
+    /// Assemble a snapshot from already-built parts — the incremental
+    /// compaction path, where the dataset grew by the delta, the CSR comes
+    /// from a re-opened accumulator, the router was extended in place, and
+    /// the sketch states are shared with the previous epoch.
+    pub(crate) fn from_parts(
+        ds: Dataset,
+        csr: Csr,
+        states: Vec<Arc<dyn SketchState + 'f>>,
+        router: Router,
+        cfg: ServeConfig,
+    ) -> StarIndex<'f> {
+        assert_eq!(csr.num_nodes(), ds.len(), "CSR node count != dataset size");
+        assert_eq!(states.len(), router.reps(), "state count != router reps");
+        StarIndex {
+            ds,
+            csr,
             states,
             router,
             cfg,
@@ -116,6 +172,28 @@ impl<'f> StarIndex<'f> {
     /// The snapshot's configuration.
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
+    }
+
+    /// The cached per-repetition sketch states (shared with the next epoch
+    /// by incremental compaction).
+    pub(crate) fn states(&self) -> &[Arc<dyn SketchState + 'f>] {
+        &self.states
+    }
+
+    /// Size/memory telemetry of this snapshot (router tables, CSR arrays,
+    /// cached sketch-state tables) for capacity planning — attached to
+    /// build reports by `StarsBuilder::build_indexed` and to every
+    /// `CompactionReport`.
+    pub fn stats(&self) -> SnapshotStats {
+        SnapshotStats {
+            points: self.ds.len(),
+            edges: self.csr.num_edges(),
+            router_reps: self.router.reps(),
+            router_entries: self.router.num_entries(),
+            router_bytes: self.router.heap_bytes(),
+            csr_bytes: self.csr.heap_bytes(),
+            state_table_bytes: self.states.iter().map(|s| s.table_bytes()).sum(),
+        }
     }
 
     /// Bucket keys of a query batch under every routing repetition,
@@ -191,6 +269,49 @@ mod tests {
         for w in [2usize, 7] {
             assert_eq!(index.query_keys(&queries, w), one, "workers={w}");
         }
+    }
+
+    #[test]
+    fn build_from_keys_matches_recomputed_routing() {
+        // Handing the build's key vectors over must produce the same
+        // routing tables as re-sketching them (they are the same values —
+        // that is the point of sharing them).
+        let h = SimHash::new(16, 8, 5);
+        let ds = synth::gaussian_mixture(600, 16, 6, 0.08, 31);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(6)
+                    .threshold(0.4),
+            )
+            .workers(2)
+            .build();
+        let cfg = ServeConfig::default().route_reps(4);
+        let keys: Vec<Option<Vec<u64>>> =
+            (0..4u64).map(|r| Some(h.bucket_keys(&ds, r))).collect();
+        let a = StarIndex::build_from_keys(ds.clone(), &h, &out.graph, cfg.clone(), 2, keys);
+        let b = StarIndex::build_with_workers(ds.clone(), &h, &out.graph, cfg, 2);
+        assert_eq!(a.router().num_entries(), b.router().num_entries());
+        for rep in 0..4u64 {
+            let want = h.bucket_keys(&ds, rep);
+            for p in [0usize, 99, 300, 599] {
+                assert_eq!(
+                    a.router().route(rep as usize, want[p]),
+                    b.router().route(rep as usize, want[p]),
+                    "rep {rep} point {p}"
+                );
+            }
+        }
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa, sb);
+        assert_eq!(sa.points, 600);
+        assert_eq!(sa.edges, a.csr().num_edges());
+        assert!(sa.router_entries > 0 && sa.router_bytes > 0);
+        assert!(sa.csr_bytes > 0);
+        // SimHash states cache 4 reps × 8 planes × 16 dims of f32.
+        assert_eq!(sa.state_table_bytes, 4 * 8 * 16 * 4);
     }
 
     #[test]

@@ -29,6 +29,19 @@
 //! swapped in via `Arc` — the epoch pattern; readers never block on
 //! writers.
 //!
+//! **Compaction** comes in two flavors ([`CompactionMode`], a
+//! [`ServeConfig`] knob). `Full` rebuilds the star graph over
+//! snapshot ∪ delta from scratch — O(n) per compaction, the original demo
+//! behavior. `Incremental` (the default) costs O(|delta| · avg bucket
+//! size): delta points are sketched through the snapshot's *cached* states,
+//! routed through the existing bucket-key tables, scored only against their
+//! buckets' entry points (plus delta points sharing a bucket), and the
+//! resulting edges fold into an accumulator re-opened from the snapshot CSR
+//! ([`crate::stars::Accumulator::reopen_from_csr`]) before the epoch swap —
+//! so sustained insert traffic pays for the work that changed, not the
+//! corpus (see `QueryEngine::compact_with` for the exactness conditions
+//! under which the two modes produce bit-identical snapshots).
+//!
 //! **Determinism contract:** like the builder, [`QueryEngine::query`]
 //! results are bit-identical for every worker count (per-query work is
 //! independent and results are assembled in query order; ties break by
@@ -41,9 +54,33 @@ pub mod index;
 pub mod router;
 
 pub use delta::DeltaBuffer;
-pub use executor::{brute_force_topk, QueryEngine, ServeMeasure};
+pub use executor::{brute_force_topk, CompactionReport, QueryEngine, ServeMeasure};
 pub use index::StarIndex;
 pub use router::Router;
+
+/// How `QueryEngine::compact` folds the delta buffer into the next
+/// snapshot epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompactionMode {
+    /// Rebuild the star graph over snapshot ∪ delta from scratch — O(n)
+    /// per compaction, independent of how little changed.
+    Full,
+    /// Sketch/route/score only the delta against its routed buckets and
+    /// fold the new edges into the snapshot's graph —
+    /// O(|delta| · avg bucket size). The default.
+    #[default]
+    Incremental,
+}
+
+impl CompactionMode {
+    /// Display name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompactionMode::Full => "full",
+            CompactionMode::Incremental => "incremental",
+        }
+    }
+}
 
 /// Configuration of the serving snapshot and engine.
 #[derive(Clone, Debug)]
@@ -68,6 +105,9 @@ pub struct ServeConfig {
     /// Delta-buffer size that triggers automatic compaction on insert
     /// (0 = manual compaction only).
     pub compact_limit: usize,
+    /// How compaction folds the delta into the next epoch (see
+    /// [`CompactionMode`]; incremental by default).
+    pub compaction: CompactionMode,
     /// Seed for the router's deterministic entry sampling.
     pub seed: u64,
 }
@@ -81,6 +121,7 @@ impl Default for ServeConfig {
             min_w: f32::MIN,
             max_candidates: 8192,
             compact_limit: 1024,
+            compaction: CompactionMode::default(),
             seed: 0x5EA7,
         }
     }
@@ -123,6 +164,12 @@ impl ServeConfig {
         self
     }
 
+    /// Set the compaction mode.
+    pub fn compaction(mut self, mode: CompactionMode) -> Self {
+        self.compaction = mode;
+        self
+    }
+
     /// Set the router sampling seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
@@ -156,12 +203,17 @@ mod tests {
             .probe_entries(0)
             .max_candidates(10)
             .compact_limit(5)
+            .compaction(CompactionMode::Full)
             .seed(1);
         assert_eq!(c.route_reps, 1);
         assert_eq!(c.route_leaders, 1);
         assert_eq!(c.probe_entries, 1);
         assert_eq!(c.max_candidates, 10);
         assert_eq!(c.compact_limit, 5);
+        assert_eq!(c.compaction, CompactionMode::Full);
+        assert_eq!(ServeConfig::default().compaction, CompactionMode::Incremental);
+        assert_eq!(CompactionMode::Full.name(), "full");
+        assert_eq!(CompactionMode::Incremental.name(), "incremental");
     }
 
     #[test]

@@ -86,9 +86,102 @@ impl Router {
         }
     }
 
-    /// Total retained entries across all repetitions (memory telemetry).
+    /// Total *live* retained entries across all repetitions (memory
+    /// telemetry). Counted through the key tables, so entry slots orphaned
+    /// by [`Router::extended`]'s bucket rewrites are excluded.
     pub fn num_entries(&self) -> usize {
-        self.reps.iter().map(|r| r.entries.len()).sum()
+        self.reps
+            .iter()
+            .map(|r| r.table.values().map(|&(_, len)| len as usize).sum::<usize>())
+            .sum()
+    }
+
+    /// Estimated heap bytes of the routing tables: flat entry arrays plus
+    /// the key tables (key + range + map-slot overhead per bucket).
+    pub fn heap_bytes(&self) -> usize {
+        self.reps
+            .iter()
+            .map(|r| r.entries.len() * 4 + r.table.len() * 24)
+            .sum()
+    }
+
+    /// A new router with `delta_keys_per_rep[r][i]` (the bucket keys of
+    /// delta point `base + i` under repetition `r`) folded in — the
+    /// incremental-compaction analogue of [`Router::build`] whose cost is
+    /// proportional to the snapshot tables' size (one clone) plus the
+    /// delta, never to a re-sketch of the corpus.
+    ///
+    /// Delta members append to their buckets until `route_leaders` is
+    /// reached (snapshot entries are never displaced — so when a bucket is
+    /// already full the delta rides on the existing entries, a
+    /// prefix-biased cap rather than [`Router::build`]'s uniform sample);
+    /// keys never seen by the snapshot get fresh buckets. Entry lists stay
+    /// ascending by id because delta ids all exceed snapshot ids. Buckets
+    /// are rewritten at the tail of the flat entry array; the orphaned
+    /// slots are compacted away once they outnumber live entries, so
+    /// repeated compactions cannot leak unboundedly.
+    pub fn extended(
+        &self,
+        delta_keys_per_rep: &[Vec<u64>],
+        base: u32,
+        route_leaders: usize,
+    ) -> Router {
+        assert_eq!(
+            delta_keys_per_rep.len(),
+            self.reps.len(),
+            "delta key repetitions != router repetitions"
+        );
+        let route_leaders = route_leaders.max(1);
+        let reps = self
+            .reps
+            .iter()
+            .zip(delta_keys_per_rep.iter())
+            .map(|(old, keys)| {
+                // Group delta members per bucket key, ids ascending, and
+                // process groups in sorted key order (deterministic — no
+                // dependence on hash-map iteration).
+                let mut groups: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+                for (i, &k) in keys.iter().enumerate() {
+                    groups.entry(k).or_default().push(base + i as u32);
+                }
+                let mut ordered: Vec<(u64, Vec<u32>)> = groups.into_iter().collect();
+                ordered.sort_unstable_by_key(|(k, _)| *k);
+
+                let mut table = old.table.clone();
+                let mut entries = old.entries.clone();
+                for (key, members) in ordered {
+                    let (start, len) = table.get(&key).copied().unwrap_or((0, 0));
+                    let kept = &old.entries[start as usize..(start + len) as usize];
+                    if kept.len() >= route_leaders {
+                        continue;
+                    }
+                    let new_start = entries.len() as u32;
+                    entries.extend_from_slice(kept);
+                    let room = route_leaders - kept.len();
+                    entries.extend(members.iter().take(room));
+                    table.insert(key, (new_start, entries.len() as u32 - new_start));
+                }
+                let live: usize = table.values().map(|&(_, len)| len as usize).sum();
+                if entries.len() > 2 * live {
+                    // Compact orphaned slots: repack live ranges in sorted
+                    // key order (same deterministic layout Router::build
+                    // produces).
+                    let mut sorted_keys: Vec<u64> = table.keys().copied().collect();
+                    sorted_keys.sort_unstable();
+                    let mut packed = Vec::with_capacity(live);
+                    for k in sorted_keys {
+                        let (s, l) = table[&k];
+                        let ns = packed.len() as u32;
+                        packed.extend_from_slice(&entries[s as usize..(s + l) as usize]);
+                        table.insert(k, (ns, l));
+                    }
+                    entries = packed;
+                }
+                entries.shrink_to_fit();
+                RepRouter { table, entries }
+            })
+            .collect();
+        Router { reps }
     }
 }
 
@@ -123,6 +216,52 @@ mod tests {
         // A different seed may pick different entries.
         let c = Router::build(&keys, 3, 43);
         assert_eq!(c.route(0, 5).len(), 3);
+    }
+
+    #[test]
+    fn extended_appends_delta_members_and_creates_new_buckets() {
+        let keys = vec![vec![7u64, 3, 7]]; // snapshot points 0..3
+        let router = Router::build(&keys, 8, 1);
+        let ext = router.extended(&[vec![7u64, 11]], 3, 8); // delta points 3, 4
+        assert_eq!(ext.route(0, 7), &[0, 2, 3]);
+        assert_eq!(ext.route(0, 3), &[1]);
+        assert_eq!(ext.route(0, 11), &[4]);
+        assert!(ext.route(0, 999).is_empty());
+        assert_eq!(ext.num_entries(), 5);
+        // The source router is untouched (epoch semantics).
+        assert_eq!(router.route(0, 7), &[0, 2]);
+        assert!(router.route(0, 11).is_empty());
+    }
+
+    #[test]
+    fn extended_respects_the_entry_cap() {
+        let keys = vec![vec![5u64, 5]];
+        let router = Router::build(&keys, 3, 0);
+        // One slot of room: only the first delta member gets in.
+        let ext = router.extended(&[vec![5, 5, 5]], 2, 3);
+        assert_eq!(ext.route(0, 5), &[0, 1, 2]);
+        assert_eq!(ext.num_entries(), 3);
+        // A full bucket keeps its snapshot entries unchanged.
+        let ext2 = ext.extended(&[vec![5]], 5, 3);
+        assert_eq!(ext2.route(0, 5), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn repeated_extension_compacts_orphaned_slots() {
+        let keys = vec![vec![1u64, 1]];
+        let mut router = Router::build(&keys, 64, 0);
+        for step in 0..10u32 {
+            router = router.extended(&[vec![1]], 2 + step, 64);
+        }
+        let bucket: Vec<u32> = router.route(0, 1).to_vec();
+        assert_eq!(bucket, (0..12).collect::<Vec<u32>>());
+        assert_eq!(router.num_entries(), 12);
+        // Orphaned slots are bounded: flat storage never exceeds 2x live.
+        assert!(
+            router.heap_bytes() <= 2 * 12 * 4 + 24,
+            "leaked entry slots: {} bytes",
+            router.heap_bytes()
+        );
     }
 
     #[test]

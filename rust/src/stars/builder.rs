@@ -2,14 +2,31 @@
 //!
 //! Orchestrates a full graph build: repetitions fan out over the AMPC
 //! cluster in waves; each wave's edges fold into a degree-capped,
-//! **node-sharded** accumulator so memory stays bounded at ~n·cap retained
-//! edges regardless of R (the paper's degree threshold of 250 applied
-//! online) and the fold itself runs across the worker pool instead of
-//! serializing on the coordinator.
+//! **node-sharded** [`Accumulator`] so memory stays bounded at ~n·cap
+//! retained edges regardless of R (the paper's degree threshold of 250
+//! applied online) and the fold itself runs across the worker pool instead
+//! of serializing on the coordinator.
+//!
+//! Three exits from a build:
+//!
+//! * [`StarsBuilder::build`] — the graph plus its [`CostReport`].
+//! * [`StarsBuilder::build_with_keys`] — additionally hands back the
+//!   per-repetition bucket keys the sketch phase computed, so downstream
+//!   consumers (snapshot export) never re-sketch repetitions the build
+//!   already paid for.
+//! * [`StarsBuilder::build_indexed`] — build **and** export a serving
+//!   snapshot ([`StarIndex`]) in one step, reusing the build's keys for the
+//!   routing repetitions and attaching the snapshot's memory telemetry to
+//!   the report.
+//!
+//! The serving layer's incremental compaction re-enters this module through
+//! [`Accumulator::reopen_from_csr`]: a finalized snapshot graph becomes an
+//! accumulator again, delta edge waves fold in, and `finalize` produces the
+//! next epoch's graph without rescoring the corpus.
 
 use crate::ampc::{Cluster, CostReport, Dht};
 use crate::data::types::Dataset;
-use crate::graph::{Edge, Graph};
+use crate::graph::{Csr, Edge, Graph};
 use crate::lsh::LshFamily;
 use crate::serve::StarIndex;
 use crate::sim::Similarity;
@@ -81,28 +98,48 @@ impl<'a> StarsBuilder<'a> {
     /// dataset, one prepared sketch state per routing repetition, and the
     /// bucket-key → entry tables. Routing repetitions reuse the build's
     /// repetition ids (`0..route_reps`), so for shared ids the router's
-    /// buckets are exactly the buckets the builder scored.
+    /// buckets are exactly the buckets the builder scored — and for
+    /// LSH-bucketing builds the per-rep key vectors themselves are handed
+    /// from the build to the snapshot ([`StarsBuilder::build_with_keys`]),
+    /// so the export never re-sketches repetitions the build already paid
+    /// for. The returned report carries the snapshot's memory telemetry
+    /// ([`crate::ampc::SnapshotStats`]).
     pub fn build_indexed(self, serve: crate::serve::ServeConfig) -> (BuildOutput, StarIndex<'a>) {
         let ds = self.ds;
         let family = self.family.expect("hash family not set");
         let workers = self.workers;
-        let out = self.build();
-        let index =
-            StarIndex::build_with_workers(ds.clone(), family, &out.graph, serve, workers);
+        let (mut out, keys) = self.build_with_keys(serve.route_reps.max(1));
+        let index = StarIndex::build_from_keys(ds.clone(), family, &out.graph, serve, workers, keys);
+        out.report.snapshot = Some(index.stats());
         (out, index)
     }
 
     /// Run the build.
     pub fn build(self) -> BuildOutput {
+        self.build_with_keys(0).0
+    }
+
+    /// Run the build, also handing back the per-repetition bucket keys for
+    /// repetitions `< keep_keys` — the ROADMAP "share sketch keys" path:
+    /// `build_indexed` routes these straight into the snapshot export
+    /// instead of re-preparing states and re-sketching n points per
+    /// routing repetition. Entries are `None` for repetitions the build
+    /// never bucket-keyed (SortingLSH sorts symbol rows; AllPair hashes
+    /// nothing) or that exceed the repetition count.
+    pub fn build_with_keys(
+        self,
+        keep_keys: usize,
+    ) -> (BuildOutput, Vec<Option<Vec<u64>>>) {
         let params = self.params.expect("params not set");
         let sim = self.sim.expect("similarity not set");
         let cluster = Cluster::new(self.workers);
         let n = self.ds.len();
 
-        let (graph, report) = cluster.run_job(|c| {
+        let ((graph, kept), report) = cluster.run_job(|c| {
+            let mut kept: Vec<Option<Vec<u64>>> = vec![None; keep_keys];
             if params.algorithm == Algorithm::AllPair {
                 let edges = allpair::allpair_edges(self.ds, sim, params.threshold, c);
-                return finalize(n, edges, params.degree_cap, c.workers());
+                return (finalize(n, edges, params.degree_cap, c.workers()), kept);
             }
             let family = self.family.expect("hash family not set");
             let dht_store;
@@ -130,26 +167,47 @@ impl<'a> StarsBuilder<'a> {
                 let results = c.map_timed(count, |t, ledger| {
                     let rep = (done + t) as u64;
                     match params.algorithm {
-                        Algorithm::Lsh | Algorithm::LshStars => threshold::lsh_rep_par(
-                            self.ds, sim, family, &params, rep, ledger, dht, inner,
+                        Algorithm::Lsh | Algorithm::LshStars => threshold::lsh_rep_par_keys(
+                            self.ds,
+                            sim,
+                            family,
+                            &params,
+                            rep,
+                            ledger,
+                            dht,
+                            inner,
+                            (rep as usize) < keep_keys,
                         ),
-                        Algorithm::SortingLsh | Algorithm::SortingLshStars => {
-                            knn::sorting_rep_par(self.ds, sim, family, &params, rep, ledger, inner)
-                        }
+                        Algorithm::SortingLsh | Algorithm::SortingLshStars => (
+                            knn::sorting_rep_par(self.ds, sim, family, &params, rep, ledger, inner),
+                            None,
+                        ),
                         Algorithm::AllPair => unreachable!(),
                     }
                 });
-                acc.add_wave(results);
+                let mut batches = Vec::with_capacity(results.len());
+                for (t, (edges, keys)) in results.into_iter().enumerate() {
+                    if let Some(k) = keys {
+                        if done + t < kept.len() {
+                            kept[done + t] = Some(k);
+                        }
+                    }
+                    batches.push(edges);
+                }
+                acc.add_wave(batches);
                 done += count;
             }
-            acc.finalize()
+            (acc.finalize(), kept)
         });
 
-        BuildOutput {
-            graph,
-            report,
-            params,
-        }
+        (
+            BuildOutput {
+                graph,
+                report,
+                params,
+            },
+            kept,
+        )
     }
 }
 
@@ -274,6 +332,54 @@ impl Accumulator {
             raw: Vec::new(),
             shards,
         }
+    }
+
+    /// Re-open a finalized graph for incremental folding: an accumulator
+    /// over `n ≥ csr.num_nodes()` nodes (new nodes start empty) seeded with
+    /// the snapshot CSR's surviving edges, ready to `add_wave` delta edge
+    /// batches and `finalize` into the next epoch's graph.
+    ///
+    /// Equivalence: per node, the CSR adjacency is a superset of the node's
+    /// own top-`cap` over everything the snapshot build offered it (the
+    /// either-endpoint retention rule only ever *adds* partner-kept
+    /// entries), and a candidate outside a top-`cap` cannot re-enter the
+    /// top-`cap` of any candidate superset — so folding delta edges here
+    /// and finalizing selects, per node, exactly what a from-scratch build
+    /// over (snapshot candidates ∪ delta edges) would select, up to f32
+    /// weight ties. This is what makes O(|delta|) compaction bit-compatible
+    /// with a full rebuild (`tests/serve_integration.rs`).
+    pub fn reopen_from_csr(csr: &Csr, n: usize, cap: usize, workers: usize) -> Accumulator {
+        assert!(n >= csr.num_nodes(), "cannot shrink the node range");
+        let mut acc = Accumulator::with_workers(n, cap, workers);
+        if cap == 0 {
+            // Uncapped: replay each surviving undirected edge once.
+            for u in 0..csr.num_nodes() as u32 {
+                for (v, w) in csr.neighbors(u) {
+                    if u < v {
+                        acc.raw.push(Edge::new(u, v, w));
+                    }
+                }
+            }
+            return acc;
+        }
+        {
+            let shards = &acc.shards;
+            let chunk_workers = workers.max(1).min(shards.len().max(1));
+            pool::parallel_chunks(shards.len(), chunk_workers, |_, range| {
+                for s in range {
+                    let mut shard = shards[s].lock().unwrap();
+                    let lo = shard.lo as usize;
+                    let hi = (lo + shard.nodes.len()).min(csr.num_nodes());
+                    for u in lo..hi {
+                        let node = &mut shard.nodes[u - lo];
+                        for (v, w) in csr.neighbors(u as u32) {
+                            node.offer(v, w, cap);
+                        }
+                    }
+                }
+            });
+        }
+        acc
     }
 
     /// Fold a batch of edges in, serially (small batches / tests).
@@ -496,6 +602,102 @@ mod tests {
         let g2 = seq.finalize();
         assert_eq!(g1.num_edges(), g2.num_edges());
         assert_eq!(g1.edges(), g2.edges());
+    }
+
+    #[test]
+    fn reopened_accumulator_matches_from_scratch_fold() {
+        // Folding a second wave into an accumulator re-opened from the
+        // finalized first wave must equal folding both waves from scratch
+        // (unique weights, so eviction order cannot hide behind ties).
+        let mut rng = crate::util::rng::Rng::new(91);
+        let n = 300usize;
+        let mut batches = Vec::new();
+        let mut uniq = 0u32;
+        for _ in 0..8 {
+            let mut batch = Vec::new();
+            for _ in 0..1500 {
+                let u = rng.below(n) as u32;
+                let mut v = rng.below(n) as u32;
+                if u == v {
+                    v = (v + 1) % n as u32;
+                }
+                uniq += 1;
+                batch.push(Edge::new(u, v, uniq as f32 * 1e-5));
+            }
+            batches.push(batch);
+        }
+        let mut scratch = Accumulator::with_workers(n, 5, 4);
+        scratch.add_wave(batches.clone());
+        let want = scratch.finalize();
+
+        let (first, second) = batches.split_at(4);
+        let mut acc = Accumulator::with_workers(n, 5, 2);
+        acc.add_wave(first.to_vec());
+        let snapshot = acc.finalize();
+        let csr = Csr::new(&snapshot);
+        let mut reopened = Accumulator::reopen_from_csr(&csr, n, 5, 3);
+        reopened.add_wave(second.to_vec());
+        let got = reopened.finalize();
+        assert_eq!(want.num_edges(), got.num_edges());
+        assert_eq!(want.edges(), got.edges());
+    }
+
+    #[test]
+    fn reopen_grows_the_node_range_for_delta_points() {
+        // Snapshot over 4 nodes; reopen over 6 and wire the new nodes in.
+        let mut acc = Accumulator::with_workers(4, 2, 1);
+        acc.add(vec![Edge::new(0, 1, 0.9), Edge::new(2, 3, 0.8)]);
+        let csr = Csr::new(&acc.finalize());
+        let mut re = Accumulator::reopen_from_csr(&csr, 6, 2, 2);
+        re.add(vec![Edge::new(4, 0, 0.7), Edge::new(5, 4, 0.6)]);
+        let g = re.finalize();
+        assert_eq!(g.num_nodes(), 6);
+        let mut keys: Vec<(u32, u32)> = g.edges().iter().map(|e| (e.u, e.v)).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![(0, 1), (0, 4), (2, 3), (4, 5)]);
+        // Uncapped reopen replays the snapshot edges verbatim.
+        let re0 = Accumulator::reopen_from_csr(&csr, 6, 0, 2);
+        let g0 = re0.finalize();
+        assert_eq!(g0.num_edges(), 2);
+    }
+
+    #[test]
+    fn build_with_keys_exports_the_build_reps_keys() {
+        let ds = synth::gaussian_mixture(300, 16, 6, 0.08, 25);
+        let family = SimHash::new(16, 8, 5);
+        let (out, keys) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(
+                crate::stars::BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(6)
+                    .threshold(0.4),
+            )
+            .workers(2)
+            .build_with_keys(4);
+        assert!(out.graph.num_edges() > 0);
+        assert_eq!(keys.len(), 4);
+        for (rep, k) in keys.iter().enumerate() {
+            assert_eq!(
+                k.as_ref().expect("lsh build must export keys"),
+                &family.bucket_keys(&ds, rep as u64),
+                "rep {rep}"
+            );
+        }
+        // Sorting builds never compute bucket keys — nothing to share.
+        let sorting = SimHash::new(16, 30, 6);
+        let (_, keys) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&sorting)
+            .params(
+                crate::stars::BuildParams::knn_mode(Algorithm::SortingLshStars)
+                    .sketches(3)
+                    .window(50)
+                    .degree_cap(10),
+            )
+            .workers(2)
+            .build_with_keys(3);
+        assert!(keys.iter().all(Option::is_none));
     }
 
     #[test]

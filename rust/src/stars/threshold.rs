@@ -57,6 +57,26 @@ pub fn lsh_rep_par(
     dht: Option<&Dht<'_>>,
     inner_workers: usize,
 ) -> Vec<Edge> {
+    lsh_rep_par_keys(ds, sim, family, params, rep, ledger, dht, inner_workers, false).0
+}
+
+/// [`lsh_rep_par`] that can also hand back the repetition's bucket keys
+/// (`keep_keys`), so the builder's snapshot export reuses the exact vectors
+/// the sketch phase produced instead of re-preparing a state and
+/// re-sketching every point (the ROADMAP "share sketch keys" item). The
+/// keys are a byproduct — the edge output is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn lsh_rep_par_keys(
+    ds: &Dataset,
+    sim: &dyn Similarity,
+    family: &dyn LshFamily,
+    params: &BuildParams,
+    rep: u64,
+    ledger: &CostLedger,
+    dht: Option<&Dht<'_>>,
+    inner_workers: usize,
+    keep_keys: bool,
+) -> (Vec<Edge>, Option<Vec<u64>>) {
     let n = ds.len();
     let mut rng = Rng::new(derive_seed(params.seed ^ 0x7E9, rep));
     // In-rep parallel phases report extra inner workers' busy spans so Σ
@@ -122,7 +142,7 @@ pub fn lsh_rep_par(
         score_bucket,
     );
     ledger.add_edges(edges.len() as u64);
-    edges
+    (edges, if keep_keys { Some(keys) } else { None })
 }
 
 /// Stars scoring: `s` leaders per bucket, each compared to every other
@@ -270,6 +290,19 @@ mod tests {
         let e2 = lsh_rep(&ds, &CosineSim, &h, &p, 3, &l, None);
         assert_eq!(e1.len(), e2.len());
         assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn keyed_variant_returns_the_sketch_keys_unchanged_edges() {
+        let (ds, h) = setup();
+        let p = BuildParams::threshold_mode(Algorithm::LshStars);
+        let l = CostLedger::new(1);
+        let (e1, keys) = lsh_rep_par_keys(&ds, &CosineSim, &h, &p, 2, &l, None, 1, true);
+        assert_eq!(keys.expect("keys requested"), h.bucket_keys(&ds, 2));
+        let e2 = lsh_rep(&ds, &CosineSim, &h, &p, 2, &l, None);
+        assert_eq!(e1, e2, "keeping keys must not perturb the edges");
+        let (_, none) = lsh_rep_par_keys(&ds, &CosineSim, &h, &p, 2, &l, None, 1, false);
+        assert!(none.is_none());
     }
 
     #[test]

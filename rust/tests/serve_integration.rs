@@ -4,7 +4,9 @@
 
 use stars::data::synth;
 use stars::lsh::{SimHash, WeightedMinHash};
-use stars::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig, ServeMeasure};
+use stars::serve::{
+    brute_force_topk, recall_against, CompactionMode, QueryEngine, ServeConfig, ServeMeasure,
+};
 use stars::sim::{CosineSim, WeightedJaccardSim};
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
 
@@ -127,6 +129,172 @@ fn auto_compaction_triggers_at_the_limit() {
     engine.insert(Some(ds.row(2)), None);
     assert_eq!(engine.num_pending(), 0, "limit did not trigger compaction");
     assert_eq!(engine.num_indexed(), before + 3);
+}
+
+/// Fixture for the compaction-equivalence tests: a configuration under
+/// which a full rebuild's randomized machinery never engages, so the
+/// incremental path must reproduce it bit for bit —
+/// * `Algorithm::Lsh`: every bucket is all-pairs scored (no leader draws),
+/// * `max_bucket` huge: no random sub-bucket splits,
+/// * `route_leaders` ≥ any bucket size: the router retains every member,
+/// * `route_reps == sketches`: routing covers every build repetition.
+fn equivalence_engine(
+    h: &SimHash,
+    workers: usize,
+    degree_cap: usize,
+    mode: CompactionMode,
+) -> (stars::data::Dataset, QueryEngine<'_>) {
+    let ds = synth::gaussian_mixture(600, 16, 12, 0.08, 51);
+    let params = BuildParams::threshold_mode(Algorithm::Lsh)
+        .sketches(6)
+        .threshold(0.35)
+        .max_bucket(1_000_000)
+        .degree_cap(degree_cap);
+    let cfg = ServeConfig::default()
+        .route_reps(6)
+        .route_leaders(4096)
+        .probe_entries(8)
+        .compact_limit(0)
+        .compaction(mode);
+    let (_, index) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(h)
+        .params(params.clone())
+        .workers(workers)
+        .build_indexed(cfg);
+    let engine = QueryEngine::new(index, h, ServeMeasure::Cosine, params).workers(workers);
+    (ds, engine)
+}
+
+#[test]
+fn incremental_compaction_is_bit_identical_to_full_rebuild() {
+    let h = SimHash::new(16, 9, 13);
+    let extra = synth::gaussian_mixture(64, 16, 12, 0.08, 52);
+    let qids: Vec<u32> = (0..664u32).step_by(13).collect(); // old + delta points
+    let mut baseline: Option<Vec<Vec<(u32, f32)>>> = None;
+    for workers in [1usize, 4] {
+        for degree_cap in [0usize, 48] {
+            let (_, inc) = equivalence_engine(&h, workers, degree_cap, CompactionMode::Incremental);
+            let (_, full) = equivalence_engine(&h, workers, degree_cap, CompactionMode::Full);
+            for i in 0..extra.len() {
+                inc.insert(Some(extra.row(i)), None);
+                full.insert(Some(extra.row(i)), None);
+            }
+            let ri = inc.compact_report().expect("incremental had a delta");
+            let rf = full.compact_report().expect("full had a delta");
+            assert_eq!(ri.mode, CompactionMode::Incremental);
+            assert_eq!(rf.mode, CompactionMode::Full);
+            assert!(ri.affected_buckets > 0);
+            assert!(
+                ri.candidates_scored < rf.candidates_scored,
+                "incremental ({}) did not score less than the rebuild ({})",
+                ri.candidates_scored,
+                rf.candidates_scored
+            );
+            // CSR edges: bit-identical adjacency, node by node.
+            let (si, sf) = (inc.snapshot(), full.snapshot());
+            assert_eq!(si.len(), 664);
+            assert_eq!(
+                si.csr().num_edges(),
+                sf.csr().num_edges(),
+                "edge count differs (workers={workers}, cap={degree_cap})"
+            );
+            for u in 0..si.len() as u32 {
+                let a: Vec<(u32, f32)> = si.csr().neighbors(u).collect();
+                let b: Vec<(u32, f32)> = sf.csr().neighbors(u).collect();
+                assert_eq!(a, b, "adjacency differs at node {u} (workers={workers}, cap={degree_cap})");
+            }
+            // Query top-k: bit-identical over old and compacted points,
+            // and identical across worker counts (cap=0 arm as baseline).
+            let queries = si.dataset().subset(&qids);
+            let got_inc = inc.query(&queries, 10);
+            let got_full = full.query(&queries, 10);
+            assert_eq!(
+                got_inc, got_full,
+                "top-k differs (workers={workers}, cap={degree_cap})"
+            );
+            if degree_cap == 0 {
+                if let Some(b) = &baseline {
+                    assert_eq!(
+                        &got_inc, b,
+                        "incremental compaction not worker-invariant ({workers} workers)"
+                    );
+                } else {
+                    baseline = Some(got_inc);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_incremental_compactions_stay_consistent() {
+    // Sustained insert traffic: several insert→compact rounds through the
+    // incremental path keep global ids stable and every point queryable.
+    let h = SimHash::new(16, 9, 13);
+    let (_, engine) = equivalence_engine(&h, 2, 48, CompactionMode::Incremental);
+    let extra = synth::gaussian_mixture(30, 16, 12, 0.08, 77);
+    let mut next_id = 600u32;
+    for round in 0..3 {
+        for i in (round * 10)..(round * 10 + 10) {
+            let id = engine.insert(Some(extra.row(i)), None);
+            assert_eq!(id, next_id, "global ids must be stable across epochs");
+            next_id += 1;
+        }
+        assert!(engine.compact(), "round {round} had a delta to absorb");
+        assert_eq!(engine.num_pending(), 0);
+        assert_eq!(engine.num_indexed(), 600 + (round + 1) * 10);
+    }
+    // Every absorbed point is self-retrievable through the graph path.
+    let snap = engine.snapshot();
+    let delta_ids: Vec<u32> = (600..630).collect();
+    let queries = snap.dataset().subset(&delta_ids);
+    let res = engine.query(&queries, 3);
+    for (qi, &id) in delta_ids.iter().enumerate() {
+        assert_eq!(res[qi][0].0, id, "absorbed point {id} not its own top-1");
+        assert!((res[qi][0].1 - 1.0).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn set_family_incremental_compaction_roundtrip() {
+    // Weighted-Jaccard over Zipf sets through the incremental path: delta
+    // sets are sketched through the snapshot's cached CWS tables (with the
+    // out-of-vocab fallback for unseen tokens) and must come back as their
+    // own nearest neighbors after the fold.
+    let sets = synth::zipf_sets(400, &synth::ZipfSetsParams::default(), 29);
+    let fresh = synth::zipf_sets(12, &synth::ZipfSetsParams::default(), 31);
+    let h = WeightedMinHash::new(3, 11);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(6)
+        .threshold(0.1);
+    let (_, index) = StarsBuilder::new(&sets)
+        .similarity(&WeightedJaccardSim)
+        .hash(&h)
+        .params(params.clone())
+        .workers(2)
+        .build_indexed(
+            ServeConfig::default()
+                .route_reps(6)
+                .route_leaders(16)
+                .compact_limit(0)
+                .compaction(CompactionMode::Incremental),
+        );
+    let engine = QueryEngine::new(index, &h, ServeMeasure::WeightedJaccard, params).workers(2);
+    for i in 0..fresh.len() {
+        assert_eq!(engine.insert(None, Some(fresh.set(i).clone())), (400 + i) as u32);
+    }
+    let rep = engine.compact_report().expect("delta pending");
+    assert_eq!(rep.mode, CompactionMode::Incremental);
+    assert_eq!(rep.delta_points, 12);
+    assert_eq!(engine.num_indexed(), 412);
+    let snap = engine.snapshot();
+    let delta_ids: Vec<u32> = (400..412).collect();
+    let res = engine.query(&snap.dataset().subset(&delta_ids), 3);
+    for (qi, &id) in delta_ids.iter().enumerate() {
+        assert_eq!(res[qi][0].0, id, "absorbed set {id} not its own top-1");
+        assert!((res[qi][0].1 - 1.0).abs() < 1e-5);
+    }
 }
 
 #[test]

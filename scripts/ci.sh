@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 (build + tests) plus formatting and lint gates.
+# CI entry point: tier-1 (build + tests) plus formatting, lint and rustdoc
+# gates.
 #
-#   scripts/ci.sh          # tier-1 + fmt + clippy + bench compile check
-#   scripts/ci.sh --bench  # also regenerate BENCH_scoring.json and
-#                          # BENCH_sketch.json (slow)
+#   scripts/ci.sh          # tier-1 + fmt + clippy + rustdoc + bench compile
+#   scripts/ci.sh --bench  # also regenerate BENCH_scoring.json,
+#                          # BENCH_sketch.json and BENCH_serve.json (slow)
 #
 # The perf trajectory is tracked via BENCH_scoring.json, BENCH_sketch.json
 # and BENCH_serve.json at the repo root, emitted by `cargo bench --bench
@@ -26,6 +27,9 @@ cargo fmt --check
 
 echo "==> cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (rustdoc gate, warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "==> cargo bench --no-run (bench compile check)"
 cargo bench --no-run
