@@ -13,10 +13,12 @@ use stars::ampc::CostLedger;
 use stars::bench::{fmt_count, fmt_secs, time_runs, Table};
 use stars::data::synth;
 use stars::lsh::{sorted_order, LshFamily, SimHash, WeightedMinHash};
+use stars::sim::batch::dot_tile_with;
 use stars::sim::{CosineSim, Similarity};
 use stars::stars::{group_buckets, Algorithm, BuildParams, StarsBuilder};
 use stars::util::json::Json;
 use stars::util::rng::Rng;
+use stars::util::simd;
 use std::path::PathBuf;
 
 /// Pre-change reference for the e2e build below, measured on the seed
@@ -81,6 +83,47 @@ fn bench_cosine_scoring(table: &mut Table) -> Json {
     Json::Arr(rows)
 }
 
+/// Per-backend throughput of the blocked dot kernel — the same tile shapes
+/// the scoring pass runs, forced through each backend the host can execute
+/// (scalar is always present, so the JSON always records the lane speedup
+/// the dispatcher is buying).
+fn bench_simd_backends(table: &mut Table) -> Json {
+    let mut out = Vec::new();
+    // Dimension-major: the (identical, backend-independent) dataset, tile
+    // gather and leader row are built once per d and reused across backends.
+    for &d in &[16usize, 100, 784] {
+        let ds = synth::gaussian_mixture(4_097, d, 8, 0.2, 11);
+        let n = 4_096;
+        let mut tile = vec![0f32; n * d];
+        for r in 0..n {
+            tile[r * d..(r + 1) * d].copy_from_slice(ds.row(r + 1));
+        }
+        let leader = ds.row(0);
+        let mut scores = vec![0f32; n];
+        for backend in simd::reachable() {
+            let stats = time_runs(3, 15, || {
+                dot_tile_with(backend, leader, &tile, n, &mut scores);
+                std::hint::black_box(&scores);
+            });
+            let med = stats.median();
+            table.row(vec![
+                format!("dot_tile [{}] (d={d})", backend.name()),
+                fmt_count(n as u64),
+                fmt_secs(med),
+                format!("{}/s", fmt_count((n as f64 / med) as u64)),
+            ]);
+            out.push(Json::obj(vec![
+                ("backend", Json::from(backend.name())),
+                ("d", Json::from(d)),
+                ("pairs", Json::from(n)),
+                ("median_s", Json::from(med)),
+                ("pairs_per_s", Json::from(n as f64 / med)),
+            ]));
+        }
+    }
+    Json::Arr(out)
+}
+
 /// End-to-end `StarsBuilder::build` wall time on the acceptance workload
 /// (gaussian_mixture(50_000, 100, …), LSH+Stars), vs the recorded
 /// pre-tiling/pre-sharding baseline.
@@ -139,6 +182,7 @@ fn main() {
 
     // Tiled batch scoring vs the scalar path (the perf-pass headline).
     let scoring = bench_cosine_scoring(&mut table);
+    let simd_kernels = bench_simd_backends(&mut table);
     let e2e = bench_e2e_build(&mut table);
 
     let ds = synth::gaussian_mixture(100_000, 100, 100, 0.1, 42);
@@ -315,13 +359,17 @@ fn main() {
 
     // Machine-readable report for cross-PR perf tracking.
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-scoring/v1")),
+        ("schema", Json::from("stars-bench-scoring/v2")),
         ("bench", Json::from("microbench")),
         (
             "workers",
             Json::from(stars::util::pool::default_workers()),
         ),
+        // Which lanes produced every number in this file (the override
+        // STARS_SIMD=scalar|avx2|neon pins it for A/B runs).
+        ("simd_backend", Json::from(simd::active().name())),
         ("cosine_scoring", scoring),
+        ("simd_kernel_dot", simd_kernels),
         ("e2e_build", e2e),
     ]);
     let path = bench_out_path();

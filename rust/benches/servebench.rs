@@ -179,9 +179,15 @@ fn main() {
     table.print();
 
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-serve/v2")),
+        ("schema", Json::from("stars-bench-serve/v3")),
         ("bench", Json::from("servebench")),
         ("workers", Json::from(workers)),
+        // Which SIMD lanes served every query in this file — p50/p99 are
+        // only comparable across runs pinned to the same backend.
+        (
+            "simd_backend",
+            Json::from(stars::util::simd::active().name()),
+        ),
         (
             "dataset",
             Json::from(format!("gaussian_mixture({N}, {DIM}, 100, 0.1, 42)")),

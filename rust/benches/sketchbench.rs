@@ -16,12 +16,14 @@
 
 use stars::bench::{fmt_count, fmt_secs, time_runs, Table};
 use stars::data::synth;
+use stars::lsh::sketch::sketch_tile_with;
 use stars::lsh::{sketch, LshFamily, SimHash, WeightedMinHash};
 use stars::sim::CosineSim;
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
 use stars::util::json::Json;
 use stars::util::pool;
 use stars::util::radix;
+use stars::util::simd;
 use std::path::PathBuf;
 
 /// Pre-change reference for the e2e SortingLSH build below: the PR-1
@@ -96,6 +98,43 @@ fn bench_simhash(table: &mut Table) -> Json {
     Json::Arr(rows)
 }
 
+/// Per-backend throughput of the tiled sketch kernel (M=16 plane pairs),
+/// forced through every backend the host can execute.
+fn bench_simd_sketch_backends(table: &mut Table) -> Json {
+    let mut out = Vec::new();
+    let (bits, n) = (16usize, 8_192usize);
+    // Dimension-major: the dataset and hyperplane matrix are backend-
+    // independent, so build them once per d and sweep backends inside.
+    for &d in &[16usize, 100, 784] {
+        let ds = synth::gaussian_mixture(n, d, 8, 0.2, 13);
+        let h = SimHash::new(d, bits, 7);
+        let planes = h.hyperplanes(0);
+        let mut keys = vec![0u64; n];
+        for backend in simd::reachable() {
+            let stats = time_runs(1, 7, || {
+                sketch_tile_with(backend, &planes, bits, d, &ds.dense, n, &mut keys);
+                std::hint::black_box(&keys);
+            });
+            let med = stats.median();
+            table.row(vec![
+                format!("sketch_tile [{}] (d={d}, M={bits})", backend.name()),
+                fmt_count(n as u64),
+                fmt_secs(med),
+                format!("{}/s", fmt_count((n as f64 / med) as u64)),
+            ]);
+            out.push(Json::obj(vec![
+                ("backend", Json::from(backend.name())),
+                ("d", Json::from(d)),
+                ("m", Json::from(bits)),
+                ("points", Json::from(n)),
+                ("median_s", Json::from(med)),
+                ("points_per_s", Json::from(n as f64 / med)),
+            ]));
+        }
+    }
+    Json::Arr(out)
+}
+
 /// Seed default path (per-point `bucket_key`) vs per-token-cached state.
 fn bench_wminhash(table: &mut Table) -> Json {
     let sets = synth::zipf_sets(20_000, &synth::ZipfSetsParams::default(), 3);
@@ -126,8 +165,10 @@ fn bench_wminhash(table: &mut Table) -> Json {
 }
 
 /// Comparison sort vs LSD radix argsort on packed sort keys (M=30: four
-/// live bytes, so half the radix passes are skipped).
+/// live bytes, so half the radix passes are mask-skipped), serial and
+/// pool-parallel.
 fn bench_sort(table: &mut Table) -> Json {
+    let workers = pool::default_workers();
     let ds = synth::gaussian_mixture(1_000_000, 16, 100, 0.1, 42);
     let h = SimHash::new(16, 30, 7);
     let keys = h.packed_sort_keys(&ds, 0).unwrap();
@@ -139,8 +180,19 @@ fn bench_sort(table: &mut Table) -> Json {
     let radix_stats = time_runs(1, 7, || {
         std::hint::black_box(radix::argsort_u64(&keys));
     });
-    let (c_med, r_med) = (comparison.median(), radix_stats.median());
-    for (name, med) in [("comparison", c_med), ("radix", r_med)] {
+    let radix_par = time_runs(1, 7, || {
+        std::hint::black_box(radix::argsort_u64_par(&keys, workers));
+    });
+    let (c_med, r_med, p_med) = (
+        comparison.median(),
+        radix_stats.median(),
+        radix_par.median(),
+    );
+    for (name, med) in [
+        ("comparison", c_med),
+        ("radix", r_med),
+        ("radix+pool", p_med),
+    ] {
         table.row(vec![
             format!("argsort {name} (M=30 keys)"),
             fmt_count(keys.len() as u64),
@@ -150,9 +202,12 @@ fn bench_sort(table: &mut Table) -> Json {
     }
     Json::obj(vec![
         ("keys", Json::from(keys.len())),
+        ("workers", Json::from(workers)),
         ("comparison_median_s", Json::from(c_med)),
         ("radix_median_s", Json::from(r_med)),
+        ("radix_par_median_s", Json::from(p_med)),
         ("speedup", Json::from(c_med / r_med)),
+        ("par_speedup", Json::from(r_med / p_med)),
     ])
 }
 
@@ -214,16 +269,19 @@ fn bench_e2e_sorting(table: &mut Table) -> Json {
 fn main() {
     let mut table = Table::new(&["primitive", "n", "median", "throughput"]);
     let simhash = bench_simhash(&mut table);
+    let simd_kernels = bench_simd_sketch_backends(&mut table);
     let wminhash = bench_wminhash(&mut table);
     let sort = bench_sort(&mut table);
     let e2e = bench_e2e_sorting(&mut table);
     table.print();
 
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-sketch/v1")),
+        ("schema", Json::from("stars-bench-sketch/v2")),
         ("bench", Json::from("sketchbench")),
         ("workers", Json::from(pool::default_workers())),
+        ("simd_backend", Json::from(simd::active().name())),
         ("simhash_sketching", simhash),
+        ("simd_kernel_sketch", simd_kernels),
         ("wminhash_sketching", wminhash),
         ("packed_key_sort", sort),
         ("e2e_sorting_build", e2e),

@@ -115,6 +115,7 @@ impl CostLedger {
             dht_bytes: self.dht_bytes.load(Ordering::Relaxed),
             total_time: self.total_time(),
             real_time,
+            simd_backend: crate::util::simd::active().name(),
             snapshot: None,
         }
     }
@@ -179,6 +180,12 @@ pub struct CostReport {
     pub total_time: f64,
     /// Wall-clock seconds (paper: real running time).
     pub real_time: f64,
+    /// The SIMD backend the hot kernels dispatched to
+    /// (`crate::util::simd::active().name()` — "scalar", "avx2" or "neon";
+    /// empty on a defaulted report). Results never depend on it (the
+    /// bit-identity contract), but throughput does, so every cost report
+    /// records which lanes produced its numbers.
+    pub simd_backend: &'static str,
     /// Serving-snapshot telemetry, when the job exported one
     /// (`StarsBuilder::build_indexed`).
     pub snapshot: Option<SnapshotStats>,
@@ -197,6 +204,7 @@ impl CostReport {
             ("dht_bytes", Json::from(self.dht_bytes)),
             ("total_time_s", Json::from(self.total_time)),
             ("real_time_s", Json::from(self.real_time)),
+            ("simd_backend", Json::from(self.simd_backend)),
         ];
         if let Some(s) = &self.snapshot {
             pairs.push(("snapshot", s.to_json()));
@@ -254,5 +262,8 @@ mod tests {
         let j = l.report(0.1).to_json().to_string();
         let v = crate::util::json::parse(&j).unwrap();
         assert_eq!(v.get("comparisons").unwrap().as_usize().unwrap(), 3);
+        // Every report names the lanes that produced it.
+        let backend = v.get("simd_backend").unwrap().as_str().unwrap().to_string();
+        assert_eq!(backend, crate::util::simd::active().name());
     }
 }

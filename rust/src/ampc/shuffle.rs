@@ -2,11 +2,12 @@
 //!
 //! "We require O(Rn) additional disk storage and O(Rn log(Rn)) time to
 //! materialize the joined table." The shuffle groups (bucket_key, point_id)
-//! records by key via [`terasort`], charging shuffle bytes; the grouped runs
-//! are the LSH buckets handed to the scoring phase.
+//! records by key via [`terasort_u64`] — the radix digit pipeline shared
+//! with SortingLSH's per-repetition sort — charging shuffle bytes; the
+//! grouped runs are the LSH buckets handed to the scoring phase.
 
 use super::metrics::CostLedger;
-use super::terasort::terasort;
+use super::terasort::terasort_u64;
 
 /// A grouped bucket: the shared key and the member point ids.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,16 +19,21 @@ pub struct KeyGroup {
 }
 
 /// Group `(key, id)` records by key using a distributed-style shuffle sort.
-/// Returns groups in ascending key order; singleton groups are retained
-/// (callers usually skip them — no pairs to score).
+/// Returns groups in ascending key order; within a group, members keep
+/// their record order (the radix sort is stable — and the join drivers
+/// emit records in ascending id order, so members come out id-ascending).
+/// Singleton groups are retained (callers usually skip them — no pairs to
+/// score).
 pub fn shuffle_group(
     records: Vec<(u64, u32)>,
     workers: usize,
     ledger: &CostLedger,
-    seed: u64,
+    _seed: u64,
 ) -> Vec<KeyGroup> {
-    // 12 bytes per record: u64 key + u32 id.
-    let sorted = terasort(records, workers, 12, |r| (r.0, r.1), ledger, seed);
+    // 12 bytes per record: u64 key + u32 id. The stable u64 fast path needs
+    // no splitter sampling, so the seed is unused (kept for signature
+    // stability with the generic terasort-based join).
+    let sorted = terasort_u64(records, workers, 12, |r| r.0, ledger);
     let mut groups: Vec<KeyGroup> = Vec::new();
     for (key, id) in sorted {
         match groups.last_mut() {

@@ -7,9 +7,18 @@
 //! records into per-worker ranges → sort ranges independently → concatenate.
 //! This is the same algorithm Hadoop's TeraSort uses; here "machines" are
 //! pool workers and the shuffle bytes are charged to the ledger.
+//!
+//! Records keyed by a packed `u64` — bucket keys, sketch keys, anything the
+//! LSH layer emits — skip the sample/splitter machinery entirely:
+//! [`terasort_u64`] rides `util::radix`'s pool-parallel digit pipeline
+//! (per-worker histograms + prefix-scatter per byte, degenerate bytes mask-
+//! skipped), the same code path SortingLSH's per-repetition sort uses. One
+//! pipeline, two layers: the in-repetition sort and the shuffle join cannot
+//! drift apart in either performance or tie behavior.
 
 use super::metrics::CostLedger;
 use crate::util::pool::parallel_chunks;
+use crate::util::radix;
 use crate::util::rng::Rng;
 
 /// Sort `items` by `key` using sample-based range partitioning over
@@ -80,6 +89,45 @@ where
     out
 }
 
+/// [`terasort`] for records with a packed `u64` sort key, riding the radix
+/// digit pipeline ([`radix::argsort_u64_par`]) instead of sample-based range
+/// partitioning: per-worker digit histograms and prefix-scatters per live
+/// byte, then one gather of the records into sorted order.
+///
+/// Unlike the generic [`terasort`], the order is fully deterministic —
+/// **stable**: equal keys keep their input order (the radix permutation
+/// breaks ties by position), independent of `workers`. Shuffle bytes are
+/// charged exactly as [`terasort`] charges them (one record write + read
+/// per item), and the radix passes' inner-worker busy spans land in Σ busy
+/// via [`CostLedger::add_inner_busy`] — worker 0 rides the caller's wall
+/// charge, like every other in-repetition parallel phase.
+pub fn terasort_u64<T, F>(
+    items: Vec<T>,
+    workers: usize,
+    record_bytes: u64,
+    key: F,
+    ledger: &CostLedger,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&T) -> u64,
+{
+    let n = items.len();
+    ledger.add_shuffle_bytes(2 * record_bytes * n as u64);
+    if n <= 1 {
+        return items;
+    }
+    let keys: Vec<u64> = items.iter().map(&key).collect();
+    let order = radix::argsort_u64_par_timed(&keys, workers.max(1), |w, nanos| {
+        ledger.add_inner_busy(w, nanos)
+    });
+    let mut slots: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    order
+        .into_iter()
+        .map(|i| slots[i as usize].take().expect("radix order is a permutation"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +169,32 @@ mod tests {
         let ledger = CostLedger::new(2);
         let sorted = terasort(items, 2, 12, |x| (x.0, x.1), &ledger, 5);
         assert_eq!(sorted, vec![(1, 1), (1, 9), (2, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn terasort_u64_matches_stable_sort_and_charges_bytes() {
+        check("terasort-u64-vs-std", 25, |g: &mut Gen| {
+            let n = g.usize_in(0, 3000);
+            let items: Vec<(u64, u32)> = (0..n)
+                .map(|i| (g.usize_in(0, 50) as u64, i as u32))
+                .collect();
+            let ledger = CostLedger::new(4);
+            let sorted = terasort_u64(items.clone(), 4, 12, |x| x.0, &ledger);
+            let mut want = items;
+            want.sort_by_key(|x| x.0); // std stable sort = position-tied order
+            assert_eq!(sorted, want);
+            assert_eq!(ledger.report(0.0).shuffle_bytes, 2 * 12 * n as u64);
+        });
+    }
+
+    #[test]
+    fn terasort_u64_is_worker_invariant() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let items: Vec<u64> = (0..20_000).map(|_| rng.next_u64() % 97).collect();
+        let ledger = CostLedger::new(8);
+        let one = terasort_u64(items.clone(), 1, 8, |x| *x, &ledger);
+        for workers in [2usize, 5, 8] {
+            assert_eq!(terasort_u64(items.clone(), workers, 8, |x| *x, &ledger), one);
+        }
     }
 }

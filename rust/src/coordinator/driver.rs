@@ -120,6 +120,11 @@ pub struct ServeOpts {
     pub inserts: usize,
     /// How the compaction folds the inserts in (the serve config's knob).
     pub compaction: crate::serve::CompactionMode,
+    /// Force one full rebuild per N compactions under the incremental mode
+    /// (0 = never) — forwarded to
+    /// [`crate::serve::ServeConfig::full_rebuild_every`]; the resulting
+    /// full/incremental mix is reported in the compaction JSON.
+    pub full_rebuild_every: usize,
 }
 
 impl Default for ServeOpts {
@@ -129,6 +134,7 @@ impl Default for ServeOpts {
             k: 10,
             inserts: 0,
             compaction: crate::serve::CompactionMode::default(),
+            full_rebuild_every: 0,
         }
     }
 }
@@ -178,7 +184,8 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     let cfg = ServeConfig::default()
         .route_reps(job.params.sketches.clamp(1, 8))
         .compact_limit(0)
-        .compaction(opts.compaction);
+        .compaction(opts.compaction)
+        .full_rebuild_every(opts.full_rebuild_every);
     let t = Instant::now();
     let (out, index) = StarsBuilder::new(&dataset)
         .similarity(measure.as_ref())
@@ -222,6 +229,10 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         ("job", job.to_json()),
         ("edges", Json::from(out.graph.num_edges())),
         ("router_entries", Json::from(engine.snapshot().router().num_entries())),
+        (
+            "simd_backend",
+            Json::from(crate::util::simd::active().name()),
+        ),
         ("build_s", Json::from(build_s)),
         ("queries", Json::from(qids.len())),
         ("k", Json::from(k)),
@@ -247,6 +258,8 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
             Json::from(opts.inserts as f64 / insert_s.max(1e-12)),
         ));
         if let Some(rep) = engine.compact_report() {
+            // The report carries the engine's running full/incremental mix
+            // (the `full_rebuild_every` policy's observable).
             doc.push(("compaction", rep.to_json()));
         }
     }
@@ -344,13 +357,23 @@ mod tests {
             k: 5,
             inserts: 30,
             compaction: crate::serve::CompactionMode::Incremental,
+            full_rebuild_every: 0,
         };
         let doc = run_serve_with(&job, &opts).unwrap();
         assert!(doc.get("insert_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            doc.get("simd_backend").unwrap().as_str().unwrap(),
+            crate::util::simd::active().name()
+        );
         let comp = doc.get("compaction").expect("compaction report missing");
         assert_eq!(comp.get("mode").unwrap().as_str().unwrap(), "incremental");
         assert_eq!(comp.get("delta_points").unwrap().as_usize().unwrap(), 30);
         assert!(comp.get("seconds").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            comp.get("incremental_compactions").unwrap().as_usize().unwrap(),
+            1
+        );
+        assert_eq!(comp.get("full_compactions").unwrap().as_usize().unwrap(), 0);
         let snap = doc.get("snapshot").expect("snapshot telemetry missing");
         assert_eq!(snap.get("points").unwrap().as_usize().unwrap(), 530);
         assert!(snap.get("router_bytes").unwrap().as_usize().unwrap() > 0);

@@ -6,7 +6,11 @@
 //! The hyperplane matrix depends only on `(seed, rep)`, so it is generated
 //! once per repetition into [`SimHash::prepare`]'s state and every batch
 //! evaluation runs the tiled multi-plane kernel
-//! ([`crate::lsh::sketch::sketch_tile`]) over contiguous row blocks.
+//! ([`crate::lsh::sketch::sketch_tile`]) over contiguous row blocks. The
+//! tile's plane dots ride the runtime-dispatched lanes of
+//! [`crate::util::simd`] (AVX2/NEON where the host has them), and every
+//! backend produces bit-identical keys — so a SimHash bucket assignment
+//! never depends on the instruction set that computed it.
 
 use crate::data::types::Dataset;
 use crate::lsh::family::{LshFamily, SketchState};
@@ -57,8 +61,9 @@ impl SimHash {
     }
 
     /// Packed sign bits of one row against a precomputed hyperplane matrix
-    /// (delegates to the shared scalar kernel — the reduction-order
-    /// reference the tiled kernel is parity-tested against).
+    /// (delegates to the shared one-row kernel — the reduction-order
+    /// reference the tiled kernel is parity-tested against, itself
+    /// dispatched over the `util::simd` backends).
     #[inline]
     pub fn sketch_row(&self, row: &[f32], planes: &[f32]) -> u64 {
         sketch_row_scalar(planes, self.bits, self.dim, row)

@@ -6,11 +6,14 @@
 //!
 //! * [`sketch_tile`] — the dense hot kernel. Instead of [`sketch_row_scalar`]'s
 //!   one-row × 2-plane loop, it scores a 4-row block against plane pairs as a
-//!   cache-blocked mini-GEMM: one plane-element load feeds four FMA chains
-//!   ([`sketch_block4`]), so the kernel runs ~2× fewer loads per FMA. Per
-//!   (row, plane) dot the lane count, lane-sum order and scalar tail are kept
-//!   identical to `sketch_row_scalar`, so tiled and scalar packed keys are
-//!   **bit-identical** (asserted by `tests/sketch_parity.rs`).
+//!   cache-blocked mini-GEMM: one plane-element load feeds four multiply-add
+//!   chains ([`crate::util::simd::sketch_block4`], runtime-dispatched to
+//!   AVX2/NEON lanes or the blocked-scalar reference), so the kernel runs
+//!   ~2× fewer loads per FMA and rides explicit vector registers where the
+//!   host has them. Per (row, plane) dot the lane count, lane-sum order and
+//!   scalar tail are kept identical to `sketch_row_scalar` on every
+//!   backend, so tiled and scalar packed keys are **bit-identical**
+//!   (asserted by `tests/sketch_parity.rs` and `tests/simd_parity.rs`).
 //! * [`bucket_keys_par`] / [`symbol_matrix_par`] / [`packed_sort_keys_par`]
 //!   (and [`crate::lsh::sorting::sorted_indices_par`] on top of them) — the
 //!   data-parallel drivers. One
@@ -22,6 +25,7 @@
 use crate::data::types::Dataset;
 use crate::lsh::family::LshFamily;
 use crate::util::pool;
+use crate::util::simd::{self, SimdBackend};
 
 /// Minimum points a worker chunk must cover before the drivers spin up
 /// threads — below this the spawn/join overhead beats the sketch work.
@@ -175,38 +179,35 @@ where
 /// Packed sign bits of one row against a precomputed hyperplane matrix
 /// (`bits × d`, row-major): bit `m` of the result is `dot(row, plane_m) ≥ 0`.
 ///
-/// Perf: processes hyperplanes in pairs with 4-way unrolled
-/// multiply-accumulate lanes so the autovectorizer emits wide FMAs and the
-/// row stays hot in L1 across both planes (see EXPERIMENTS.md §Perf). This
-/// is the reduction-order reference for [`sketch_tile`] — do not reorder one
-/// without the other, the parity tests assert exact key equality.
+/// Perf: processes hyperplanes in pairs through the runtime-dispatched
+/// plane-pair kernel ([`crate::util::simd::sketch_row2`] — AVX2/NEON lanes
+/// where available, the 4-lane blocked-scalar reference otherwise), so the
+/// row stays hot in L1 across both planes (see EXPERIMENTS.md §Perf).
+/// "Scalar" in the name means *one row at a time* (vs the 4-row
+/// [`sketch_tile`]); every backend reduces each (row, plane) dot in the
+/// same fixed order, so the packed keys are bit-identical regardless of
+/// backend — the parity tests assert exact key equality.
 #[inline]
 pub fn sketch_row_scalar(planes: &[f32], bits: usize, d: usize, row: &[f32]) -> u64 {
+    sketch_row_with(simd::active(), planes, bits, d, row)
+}
+
+/// [`sketch_row_scalar`] on an explicit SIMD backend (dispatch hoisted to
+/// one resolve per row).
+pub fn sketch_row_with(
+    backend: SimdBackend,
+    planes: &[f32],
+    bits: usize,
+    d: usize,
+    row: &[f32],
+) -> u64 {
     debug_assert_eq!(row.len(), d);
     let mut key = 0u64;
     let mut m = 0;
     while m + 2 <= bits {
         let p0 = &planes[m * d..(m + 1) * d];
         let p1 = &planes[(m + 1) * d..(m + 2) * d];
-        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-        let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
-        let chunks = d / 4;
-        for c in 0..chunks {
-            let k = c * 4;
-            a0 += row[k] * p0[k];
-            a1 += row[k + 1] * p0[k + 1];
-            a2 += row[k + 2] * p0[k + 2];
-            a3 += row[k + 3] * p0[k + 3];
-            b0 += row[k] * p1[k];
-            b1 += row[k + 1] * p1[k + 1];
-            b2 += row[k + 2] * p1[k + 2];
-            b3 += row[k + 3] * p1[k + 3];
-        }
-        let (mut da, mut db) = (a0 + a1 + a2 + a3, b0 + b1 + b2 + b3);
-        for k in chunks * 4..d {
-            da += row[k] * p0[k];
-            db += row[k] * p1[k];
-        }
+        let (da, db) = simd::sketch_row2_with(backend, p0, p1, row);
         if da >= 0.0 {
             key |= 1 << m;
         }
@@ -228,64 +229,30 @@ pub fn sketch_row_scalar(planes: &[f32], bits: usize, d: usize, row: &[f32]) -> 
     key
 }
 
-/// Dots of four rows against a plane pair at once: one plane-element load
-/// feeds four FMA chains per plane. Per (row, plane) the lane structure is
-/// exactly [`sketch_row_scalar`]'s — 4 lanes over `d/4` chunks, lane sum
-/// `((a0+a1)+a2)+a3`, then the scalar tail — so each dot is bit-identical
-/// to the scalar kernel's.
-#[inline]
-fn sketch_block4(
-    p0: &[f32],
-    p1: &[f32],
-    t0: &[f32],
-    t1: &[f32],
-    t2: &[f32],
-    t3: &[f32],
-) -> ([f32; 4], [f32; 4]) {
-    let d = p0.len();
-    debug_assert!(
-        p1.len() == d && t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d
-    );
-    let chunks = d / 4;
-    let mut a = [[0f32; 4]; 4]; // a[row][lane] against p0
-    let mut b = [[0f32; 4]; 4]; // b[row][lane] against p1
-    for c in 0..chunks {
-        let k = c * 4;
-        for l in 0..4 {
-            let (x0, x1) = (p0[k + l], p1[k + l]);
-            a[0][l] += t0[k + l] * x0;
-            b[0][l] += t0[k + l] * x1;
-            a[1][l] += t1[k + l] * x0;
-            b[1][l] += t1[k + l] * x1;
-            a[2][l] += t2[k + l] * x0;
-            b[2][l] += t2[k + l] * x1;
-            a[3][l] += t3[k + l] * x0;
-            b[3][l] += t3[k + l] * x1;
-        }
-    }
-    let mut da = [0f32; 4];
-    let mut db = [0f32; 4];
-    for (row, (aa, bb)) in a.iter().zip(b.iter()).enumerate() {
-        da[row] = aa[0] + aa[1] + aa[2] + aa[3];
-        db[row] = bb[0] + bb[1] + bb[2] + bb[3];
-    }
-    let tails = [t0, t1, t2, t3];
-    for k in chunks * 4..d {
-        let (x0, x1) = (p0[k], p1[k]);
-        for (row, t) in tails.iter().enumerate() {
-            da[row] += t[k] * x0;
-            db[row] += t[k] * x1;
-        }
-    }
-    (da, db)
-}
-
 /// Packed keys of `n` contiguous rows (`rows[r*d..(r+1)*d]` is row r)
 /// against a `bits × d` hyperplane matrix: the tiled multi-plane kernel.
-/// 4-row blocks run through [`sketch_block4`]; tail rows (n % 4) fall back
-/// to [`sketch_row_scalar`], which reduces in the same order, so the output
-/// is bit-identical to a per-row scalar loop.
+/// 4-row blocks run through the runtime-dispatched
+/// [`crate::util::simd::sketch_block4`] (one plane-element load feeds four
+/// multiply-add chains per plane); tail rows (n % 4) fall back to
+/// [`sketch_row_scalar`]'s plane-pair kernel, which reduces in the same
+/// order, so the output is bit-identical to a per-row loop on every
+/// backend.
 pub fn sketch_tile(planes: &[f32], bits: usize, d: usize, rows: &[f32], n: usize, out: &mut [u64]) {
+    sketch_tile_with(simd::active(), planes, bits, d, rows, n, out);
+}
+
+/// [`sketch_tile`] on an explicit SIMD backend (dispatch resolved once per
+/// tile — benches and the parity suite force backends through here).
+#[allow(clippy::too_many_arguments)]
+pub fn sketch_tile_with(
+    backend: SimdBackend,
+    planes: &[f32],
+    bits: usize,
+    d: usize,
+    rows: &[f32],
+    n: usize,
+    out: &mut [u64],
+) {
     debug_assert!(bits >= 1 && bits <= 64);
     debug_assert!(planes.len() >= bits * d && rows.len() >= n * d && out.len() >= n);
     let mut r = 0;
@@ -300,7 +267,7 @@ pub fn sketch_tile(planes: &[f32], bits: usize, d: usize, rows: &[f32], n: usize
         while m + 2 <= bits {
             let p0 = &planes[m * d..(m + 1) * d];
             let p1 = &planes[(m + 1) * d..(m + 2) * d];
-            let (da, db) = sketch_block4(p0, p1, t0, t1, t2, t3);
+            let (da, db) = simd::sketch_block4_with(backend, p0, p1, t0, t1, t2, t3);
             for (row, key) in keys.iter_mut().enumerate() {
                 if da[row] >= 0.0 {
                     *key |= 1 << m;
@@ -329,7 +296,7 @@ pub fn sketch_tile(planes: &[f32], bits: usize, d: usize, rows: &[f32], n: usize
         r += 4;
     }
     while r < n {
-        out[r] = sketch_row_scalar(planes, bits, d, &rows[r * d..(r + 1) * d]);
+        out[r] = sketch_row_with(backend, planes, bits, d, &rows[r * d..(r + 1) * d]);
         r += 1;
     }
 }

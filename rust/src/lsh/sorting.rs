@@ -43,9 +43,11 @@ impl SortedOrder {
 
 /// Just the lexicographic index order (the scoring loop's need). Uses the
 /// family's packed-u64 fast path when available — LSD radix on 64-bit keys
-/// ([`radix::argsort_u64`]) replaces both the symbol-row comparisons and the
-/// `n log n` key sort (EXPERIMENTS.md §Perf); ties still break by index, so
-/// the order is identical to the comparison path's.
+/// ([`radix::argsort_u64`], pool-parallel via
+/// [`radix::argsort_u64_par`] when the repetition has spare cores)
+/// replaces both the symbol-row comparisons and the `n log n` key sort
+/// (EXPERIMENTS.md §Perf); ties still break by index, so the order is
+/// identical to the comparison path's.
 pub fn sorted_indices<F: LshFamily + ?Sized>(family: &F, ds: &Dataset, rep: u64) -> Vec<u32> {
     sorted_indices_par(family, ds, rep, 1)
 }
@@ -62,9 +64,13 @@ pub fn sorted_indices_par<F: LshFamily + ?Sized>(
     sorted_indices_par_timed(family, ds, rep, workers, |_, _| {})
 }
 
-/// [`sorted_indices_par`] reporting per-chunk sketch busy spans to `busy`
-/// (the radix/comparison sort itself is serial and stays on the caller's
-/// wall-clock charge).
+/// [`sorted_indices_par`] reporting per-chunk busy spans to `busy` for both
+/// parallel phases: the sketch chunks and, when the repetition is large
+/// enough to clear the radix cutoffs, the pool-parallel radix passes
+/// ([`radix::argsort_u64_par_timed`] — identical permutation for any worker
+/// count, so granting a big repetition the wave's spare cores never changes
+/// its window split). The matrix-sort fallback stays serial on the caller's
+/// wall-clock charge.
 pub fn sorted_indices_par_timed<F, B>(
     family: &F,
     ds: &Dataset,
@@ -77,7 +83,7 @@ where
     B: Fn(usize, u64) + Sync,
 {
     if let Some(keys) = sketch::packed_sort_keys_par_timed(family, ds, rep, workers, &busy) {
-        return radix::argsort_u64(&keys);
+        return radix::argsort_u64_par_timed(&keys, workers, &busy);
     }
     let m = family.sketch_len();
     let symbols = sketch::symbol_matrix_par_timed(family, ds, rep, workers, &busy);

@@ -49,11 +49,13 @@ USAGE:
                  [--degree-cap K] [--workers W] [--seed S] [--join direct|dht|shuffle]
   stars cluster  (build flags) [--classes K]
   stars serve    (build flags) [--queries N] [--k K] [--inserts N]
-                 [--compact-mode incremental|full]
+                 [--compact-mode incremental|full] [--full-rebuild-every N]
                  build a graph, export a serving snapshot, and answer N
                  sampled top-k queries (reports QPS, p50/p99, recall@k);
                  with --inserts, also stream N points in and report the
-                 compaction cost + snapshot memory telemetry
+                 compaction cost + snapshot memory telemetry;
+                 --full-rebuild-every forces one full rebuild per N
+                 incremental compactions (drift bound; mix is reported)
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
                  [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
   stars smoke    verify artifacts (PJRT runtime end-to-end)
@@ -170,6 +172,7 @@ fn serve(args: &mut Args) -> stars::Result<()> {
             "full" => stars::serve::CompactionMode::Full,
             other => anyhow::bail!("unknown compaction mode '{other}'"),
         },
+        full_rebuild_every: args.get_parsed_or("full-rebuild-every", 0usize),
     };
     let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());

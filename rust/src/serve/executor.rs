@@ -305,6 +305,14 @@ pub struct CompactionReport {
     pub edges_emitted: usize,
     /// Wall-clock seconds for the whole compaction (sketch through swap).
     pub seconds: f64,
+    /// Full compactions this engine has run so far, this one included —
+    /// with `incremental_compactions`, the mix the periodic full-rebuild
+    /// policy ([`crate::serve::ServeConfig::full_rebuild_every`]) is
+    /// steering.
+    pub full_compactions: u64,
+    /// Incremental compactions this engine has run so far, this one
+    /// included.
+    pub incremental_compactions: u64,
     /// Memory/size telemetry of the new snapshot epoch.
     pub snapshot: SnapshotStats,
 }
@@ -319,6 +327,11 @@ impl CompactionReport {
             ("candidates_scored", Json::from(self.candidates_scored)),
             ("edges_emitted", Json::from(self.edges_emitted)),
             ("seconds", Json::from(self.seconds)),
+            ("full_compactions", Json::from(self.full_compactions)),
+            (
+                "incremental_compactions",
+                Json::from(self.incremental_compactions),
+            ),
             ("snapshot", self.snapshot.to_json()),
         ])
     }
@@ -336,6 +349,14 @@ pub struct QueryEngine<'f> {
     delta: Mutex<DeltaBuffer>,
     /// Serializes compactions so concurrent triggers rebuild once.
     compacting: Mutex<()>,
+    /// Full compactions run so far (all mutated under `compacting`; atomics
+    /// only so readers can snapshot the mix without the lock).
+    full_compactions: AtomicU64,
+    /// Incremental compactions run so far.
+    incremental_compactions: AtomicU64,
+    /// Incremental compactions since the last full rebuild — the input to
+    /// the `full_rebuild_every` policy.
+    incr_since_full: AtomicU64,
 }
 
 impl<'f> QueryEngine<'f> {
@@ -358,6 +379,9 @@ impl<'f> QueryEngine<'f> {
             snapshot: RwLock::new(Arc::new(index)),
             delta,
             compacting: Mutex::new(()),
+            full_compactions: AtomicU64::new(0),
+            incremental_compactions: AtomicU64::new(0),
+            incr_since_full: AtomicU64::new(0),
         }
     }
 
@@ -469,9 +493,37 @@ impl<'f> QueryEngine<'f> {
 
     /// [`QueryEngine::compact`] returning the work/telemetry report
     /// (`None` when the delta was empty).
+    ///
+    /// This is where the periodic full-rebuild policy engages: with the
+    /// snapshot configured for incremental compaction and
+    /// `full_rebuild_every = N > 0`, every Nth compaction is promoted to
+    /// [`CompactionMode::Full`] — re-drawing bucket leaders and router
+    /// entry samples so sustained incremental traffic cannot drift the
+    /// index arbitrarily far from a fresh build. Explicit
+    /// [`QueryEngine::compact_with`] calls bypass the policy (but still
+    /// count toward the mix).
     pub fn compact_report(&self) -> Option<CompactionReport> {
-        let mode = self.snapshot.read().unwrap().config().compaction;
+        let cfg = {
+            let snap = self.snapshot.read().unwrap();
+            let c = snap.config();
+            (c.compaction, c.full_rebuild_every)
+        };
+        let mut mode = cfg.0;
+        if mode == CompactionMode::Incremental
+            && cfg.1 > 0
+            && self.incr_since_full.load(Ordering::Relaxed) + 1 >= cfg.1 as u64
+        {
+            mode = CompactionMode::Full;
+        }
         self.compact_with(mode)
+    }
+
+    /// The engine's compaction mix so far: `(full, incremental)` counts.
+    pub fn compaction_mix(&self) -> (u64, u64) {
+        (
+            self.full_compactions.load(Ordering::Relaxed),
+            self.incremental_compactions.load(Ordering::Relaxed),
+        )
     }
 
     /// Compact with an explicit mode, overriding the snapshot's configured
@@ -518,6 +570,20 @@ impl<'f> QueryEngine<'f> {
             CompactionMode::Full => self.rebuild_full(&snap, &delta_ds),
             CompactionMode::Incremental => self.rebuild_incremental(&snap, &delta_ds),
         };
+        // Mix bookkeeping (consistent under the `compacting` lock): a full
+        // rebuild resets the policy counter, an incremental advances it.
+        match mode {
+            CompactionMode::Full => {
+                self.full_compactions.fetch_add(1, Ordering::Relaxed);
+                self.incr_since_full.store(0, Ordering::Relaxed);
+            }
+            CompactionMode::Incremental => {
+                self.incremental_compactions.fetch_add(1, Ordering::Relaxed);
+                self.incr_since_full.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        report.full_compactions = self.full_compactions.load(Ordering::Relaxed);
+        report.incremental_compactions = self.incremental_compactions.load(Ordering::Relaxed);
         report.snapshot = next.stats();
         report.seconds = t0.elapsed().as_secs_f64();
         // Swap the epoch and trim the absorbed prefix atomically w.r.t.
@@ -554,6 +620,8 @@ impl<'f> QueryEngine<'f> {
             candidates_scored: out.report.comparisons,
             edges_emitted: out.report.edges_emitted as usize,
             seconds: 0.0,
+            full_compactions: 0,
+            incremental_compactions: 0,
             snapshot: SnapshotStats::default(),
         };
         (next, report)
@@ -683,6 +751,8 @@ impl<'f> QueryEngine<'f> {
             candidates_scored: scored.into_inner(),
             edges_emitted: emitted,
             seconds: 0.0,
+            full_compactions: 0,
+            incremental_compactions: 0,
             snapshot: SnapshotStats::default(),
         };
         (next, report)
@@ -798,6 +868,53 @@ mod tests {
             "absorbed duplicate not reachable: {:?}",
             res[0]
         );
+    }
+
+    #[test]
+    fn full_rebuild_every_forces_periodic_full() {
+        let h = SimHash::new(16, 8, 3);
+        let ds = synth::gaussian_mixture(400, 16, 4, 0.1, 7);
+        let row: Vec<f32> = ds.row(0).to_vec();
+        let params = BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(4)
+            .threshold(0.4);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params.clone())
+            .workers(2)
+            .build();
+        let cfg = crate::serve::ServeConfig::default()
+            .route_reps(4)
+            .compact_limit(0)
+            .full_rebuild_every(2);
+        let index = StarIndex::build(ds, &h, &out.graph, cfg);
+        let engine = QueryEngine::new(index, &h, ServeMeasure::Cosine, params).workers(2);
+        let mut modes = Vec::new();
+        for _ in 0..4 {
+            engine.insert(Some(&row), None);
+            let rep = engine.compact_report().expect("delta pending");
+            modes.push(rep.mode);
+        }
+        // Every 2nd compaction is promoted to a full rebuild.
+        assert_eq!(
+            modes,
+            vec![
+                CompactionMode::Incremental,
+                CompactionMode::Full,
+                CompactionMode::Incremental,
+                CompactionMode::Full,
+            ]
+        );
+        assert_eq!(engine.compaction_mix(), (2, 2));
+        // One more round: the mix rides along in the report.
+        engine.insert(Some(&row), None);
+        let rep = engine.compact_report().unwrap();
+        assert_eq!(rep.mode, CompactionMode::Incremental);
+        assert_eq!(rep.full_compactions, 2);
+        assert_eq!(rep.incremental_compactions, 3);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("incremental_compactions"));
     }
 
     #[test]

@@ -40,7 +40,12 @@
 //! ([`crate::stars::Accumulator::reopen_from_csr`]) before the epoch swap —
 //! so sustained insert traffic pays for the work that changed, not the
 //! corpus (see `QueryEngine::compact_with` for the exactness conditions
-//! under which the two modes produce bit-identical snapshots).
+//! under which the two modes produce bit-identical snapshots). Because
+//! incremental compaction never re-draws leaders or router samples, a
+//! long-lived index drifts from what a fresh build would produce;
+//! [`ServeConfig::full_rebuild_every`] bounds the drift by forcing one
+//! `Full` per N compactions, and [`executor::CompactionReport`] reports the
+//! running full/incremental mix.
 //!
 //! **Determinism contract:** like the builder, [`QueryEngine::query`]
 //! results are bit-identical for every worker count (per-query work is
@@ -108,6 +113,14 @@ pub struct ServeConfig {
     /// How compaction folds the delta into the next epoch (see
     /// [`CompactionMode`]; incremental by default).
     pub compaction: CompactionMode,
+    /// Periodic full-rebuild policy: with `compaction = Incremental`, force
+    /// one [`CompactionMode::Full`] per this many compactions (0 = never).
+    /// Sustained incremental compaction never re-draws bucket leaders or
+    /// router entry samples, so a long-lived index slowly drifts from the
+    /// distribution a fresh build would produce; the periodic rebuild
+    /// bounds that drift. The full/incremental mix is reported in
+    /// [`executor::CompactionReport`].
+    pub full_rebuild_every: usize,
     /// Seed for the router's deterministic entry sampling.
     pub seed: u64,
 }
@@ -122,6 +135,7 @@ impl Default for ServeConfig {
             max_candidates: 8192,
             compact_limit: 1024,
             compaction: CompactionMode::default(),
+            full_rebuild_every: 0,
             seed: 0x5EA7,
         }
     }
@@ -170,6 +184,13 @@ impl ServeConfig {
         self
     }
 
+    /// Force one full rebuild per `n` compactions under the incremental
+    /// mode (0 = never — incremental forever).
+    pub fn full_rebuild_every(mut self, n: usize) -> Self {
+        self.full_rebuild_every = n;
+        self
+    }
+
     /// Set the router sampling seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
@@ -204,6 +225,7 @@ mod tests {
             .max_candidates(10)
             .compact_limit(5)
             .compaction(CompactionMode::Full)
+            .full_rebuild_every(3)
             .seed(1);
         assert_eq!(c.route_reps, 1);
         assert_eq!(c.route_leaders, 1);
@@ -211,6 +233,8 @@ mod tests {
         assert_eq!(c.max_candidates, 10);
         assert_eq!(c.compact_limit, 5);
         assert_eq!(c.compaction, CompactionMode::Full);
+        assert_eq!(c.full_rebuild_every, 3);
+        assert_eq!(ServeConfig::default().full_rebuild_every, 0);
         assert_eq!(ServeConfig::default().compaction, CompactionMode::Incremental);
         assert_eq!(CompactionMode::Full.name(), "full");
         assert_eq!(CompactionMode::Incremental.name(), "incremental");

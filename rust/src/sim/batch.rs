@@ -8,9 +8,12 @@
 //! * gathers a bucket's candidate rows into a contiguous, cache-blocked
 //!   **tile** (sized to ~half an L1d), then
 //! * scores leader-vs-tile with a 4-row × 8-lane register-blocked dot kernel
-//!   ([`dot_tile`]): one leader load feeds four FMA chains, and the lane
-//!   reduction matches [`measure::dot`] bit-for-bit so batched and scalar
-//!   scores are identical (EXPERIMENTS.md §Perf);
+//!   ([`dot_tile`]): one leader load feeds four multiply-add chains through
+//!   the runtime-dispatched lanes of [`crate::util::simd`] (AVX2/NEON, or
+//!   the blocked-scalar reference), and every backend's lane reduction
+//!   matches [`crate::sim::measure::dot`] bit-for-bit so batched and scalar scores are
+//!   identical on any backend (EXPERIMENTS.md §Perf,
+//!   `tests/simd_parity.rs`);
 //! * for set measures, expands the leader's token list into a hash map once
 //!   per batch so each candidate walk is O(|B|) lookups instead of an
 //!   O(|A|+|B|) cold merge per pair.
@@ -20,20 +23,19 @@
 //! buffers; only the `Similarity` impls touch the thread-local, exactly once
 //! per call (never nested, which would panic the RefCell).
 
-use super::measure::{self, cosine_from_parts};
+use super::measure::cosine_from_parts;
 use crate::data::types::{Dataset, WeightedSet};
 use crate::util::fxhash::FxHashMap;
+use crate::util::simd::{self, SimdBackend};
 use std::cell::RefCell;
 
 /// Byte budget for one gathered tile: ~half a typical 32 KiB L1d, leaving
 /// room for the leader row, the output slice, and the gather cursor.
 const TILE_BYTES: usize = 16 * 1024;
 
-/// Accumulator lanes per row — keep in sync with [`measure::dot`]'s unroll
-/// so batched and scalar dots reduce in the same order (bit-exact parity).
-const LANES: usize = 8;
-
-/// Rows scored per register block.
+/// Rows scored per register block (the lane structure inside a block —
+/// 8 lanes per row, matching [`crate::sim::measure::dot`] — lives in
+/// `util::simd`, which all backends replicate bit-for-bit).
 const BLOCK: usize = 4;
 
 /// Rows gathered per tile for dense dimension `d` (cache-blocking policy).
@@ -42,53 +44,33 @@ pub fn tile_rows(d: usize) -> usize {
     (TILE_BYTES / (d.max(1) * std::mem::size_of::<f32>())).clamp(BLOCK, 64)
 }
 
-/// Dot of `leader` against four tile rows at once. One leader element load
-/// feeds four 8-lane accumulator groups (4 ymm worth of f32 on AVX2), so the
-/// kernel is FMA-throughput bound instead of load bound.
-///
-/// Reduction order per row is identical to [`measure::dot`]: lane sums
-/// combined pairwise, then the scalar tail — do not reorder one without the
-/// other, batched/scalar parity tests assert exact equality for cosine/dot.
-#[inline]
-fn dot_block4(leader: &[f32], t0: &[f32], t1: &[f32], t2: &[f32], t3: &[f32]) -> [f32; 4] {
-    let d = leader.len();
-    debug_assert!(t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d);
-    let chunks = d / LANES;
-    let mut acc = [[0f32; LANES]; BLOCK];
-    for c in 0..chunks {
-        let k = c * LANES;
-        for l in 0..LANES {
-            let x = leader[k + l];
-            acc[0][l] += x * t0[k + l];
-            acc[1][l] += x * t1[k + l];
-            acc[2][l] += x * t2[k + l];
-            acc[3][l] += x * t3[k + l];
-        }
-    }
-    let mut out = [0f32; BLOCK];
-    for (r, a) in acc.iter().enumerate() {
-        out[r] = (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]));
-    }
-    for k in chunks * LANES..d {
-        let x = leader[k];
-        out[0] += x * t0[k];
-        out[1] += x * t1[k];
-        out[2] += x * t2[k];
-        out[3] += x * t3[k];
-    }
-    out
+/// Score `leader` against the first `rows` rows of a gathered tile, writing
+/// `out[r] = dot(leader, tile_row_r)`. 4-row blocks run through the
+/// runtime-dispatched [`simd::dot_block4_with`] (one leader load feeds four
+/// multiply-add chains); tail rows (rows % 4) fall back to the single-row
+/// kernel, which reduces in the same order — so the output is bit-identical
+/// to a per-row [`crate::sim::measure::dot`] loop on every backend.
+pub fn dot_tile(leader: &[f32], tile: &[f32], rows: usize, out: &mut [f32]) {
+    dot_tile_with(simd::active(), leader, tile, rows, out);
 }
 
-/// Score `leader` against the first `rows` rows of a gathered tile, writing
-/// `out[r] = dot(leader, tile_row_r)`. Tail rows (rows % 4) fall back to the
-/// scalar unrolled kernel, which reduces in the same order.
-pub fn dot_tile(leader: &[f32], tile: &[f32], rows: usize, out: &mut [f32]) {
+/// [`dot_tile`] on an explicit SIMD backend (the dispatch is hoisted here,
+/// once per tile — benches and the parity suite force backends through this
+/// entry point).
+pub fn dot_tile_with(
+    backend: SimdBackend,
+    leader: &[f32],
+    tile: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
     let d = leader.len();
     debug_assert!(tile.len() >= rows * d && out.len() >= rows);
     let mut r = 0;
     while r + BLOCK <= rows {
         let base = r * d;
-        let res = dot_block4(
+        let res = simd::dot_block4_with(
+            backend,
             leader,
             &tile[base..base + d],
             &tile[base + d..base + 2 * d],
@@ -99,7 +81,7 @@ pub fn dot_tile(leader: &[f32], tile: &[f32], rows: usize, out: &mut [f32]) {
         r += BLOCK;
     }
     while r < rows {
-        out[r] = measure::dot(leader, &tile[r * d..(r + 1) * d]);
+        out[r] = simd::dot_with(backend, leader, &tile[r * d..(r + 1) * d]);
         r += 1;
     }
 }
@@ -179,7 +161,7 @@ pub fn cosine_batch_row(
 /// Batched unweighted Jaccard. The leader's tokens are expanded into
 /// `leader_wts` once; each candidate then costs |B| hash probes instead of a
 /// cold sorted merge. Integer counts make this bit-identical to
-/// [`measure::jaccard`].
+/// [`crate::sim::measure::jaccard`].
 pub fn jaccard_batch(
     ds: &Dataset,
     leader: usize,
@@ -226,8 +208,8 @@ pub fn jaccard_batch_set(
 /// Batched weighted Jaccard via the min-sum identity
 /// Σ max(xᵢ, yᵢ) = Σxᵢ + Σyᵢ − Σ min(xᵢ, yᵢ): the leader's weights and total
 /// are computed once, so each candidate walks only its own token list.
-/// Matches [`measure::weighted_jaccard`] to f32 rounding (the denominator is
-/// summed in a different order).
+/// Matches [`crate::sim::measure::weighted_jaccard`] to f32 rounding (the
+/// denominator is summed in a different order).
 pub fn weighted_jaccard_batch(
     ds: &Dataset,
     leader: usize,
@@ -248,11 +230,13 @@ pub fn weighted_jaccard_batch_set(
     out: &mut Vec<f32>,
 ) {
     leader_wts.clear();
-    let mut ta = 0f32;
     for (&t, &w) in a.tokens.iter().zip(&a.weights) {
         leader_wts.insert(t, w);
-        ta += w;
     }
+    // Leader total through the dispatched accumulate helper — one blocked
+    // fold per batch instead of a serial add chained through the hash
+    // inserts.
+    let ta = simd::sum_f32(&a.weights);
     out.clear();
     for &c in candidates {
         let b = ds.set(c as usize);
@@ -399,7 +383,7 @@ pub fn with_scratch<R>(f: impl FnOnce(&mut BatchScratch) -> R) -> R {
 mod tests {
     use super::*;
     use crate::data::synth;
-    use crate::sim::measure::dot;
+    use crate::sim::measure::{self, dot};
 
     #[test]
     fn tile_rows_respects_bounds() {

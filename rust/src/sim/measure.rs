@@ -32,26 +32,16 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
 
 /// Dot product of two dense vectors.
 ///
-/// Perf: 8-lane unrolled accumulation so the autovectorizer emits wide FMAs
-/// (the scalar reduction chain otherwise serializes adds) — ~2x on d=100
-/// rows (EXPERIMENTS.md §Perf).
+/// Perf: runs on the runtime-dispatched 8-lane kernel of
+/// [`crate::util::simd`] — explicit AVX2/NEON lanes where the host has
+/// them, the blocked-scalar reference otherwise. Every backend reduces in
+/// the historical order (8 lanes, pairwise tree, sequential tail), so the
+/// result is bit-identical across backends and to the pre-dispatch kernel
+/// (EXPERIMENTS.md §Perf, `tests/simd_parity.rs`).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0f32; 8];
-    for c in 0..chunks {
-        let k = c * 8;
-        for l in 0..8 {
-            acc[l] += a[k + l] * b[k + l];
-        }
-    }
-    let mut d = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for k in chunks * 8..n {
-        d += a[k] * b[k];
-    }
-    d
+    crate::util::simd::dot(a, b)
 }
 
 /// Unweighted Jaccard similarity |A∩B| / |A∪B| over token sets.
@@ -100,8 +90,11 @@ pub fn weighted_jaccard(a: &WeightedSet, b: &WeightedSet) -> f32 {
             }
         }
     }
-    den += a.weights[i..].iter().sum::<f32>();
-    den += b.weights[j..].iter().sum::<f32>();
+    // Suffix weights fold through the dispatched 4-lane accumulate helper
+    // (one blocked reassociation vs the old sequential sum, identical on
+    // every backend).
+    den += crate::util::simd::sum_f32(&a.weights[i..]);
+    den += crate::util::simd::sum_f32(&b.weights[j..]);
     if den <= 0.0 {
         0.0
     } else {

@@ -15,3 +15,4 @@ pub mod fxhash;
 pub mod quickcheck;
 pub mod logging;
 pub mod radix;
+pub mod simd;

@@ -1,9 +1,9 @@
-//! LSD radix sort for u64 sort keys.
+//! LSD radix sort for u64 sort keys — serial and pool-parallel.
 //!
 //! SortingLSH sorts n packed sketch keys per repetition — the "TeraSort"
 //! phase of the production system. A comparison sort pays O(n log n) key
 //! loads with a data-dependent branch per compare; least-significant-digit
-//! radix makes it O(passes · n) streaming scatters. Two properties matter
+//! radix makes it O(passes · n) streaming scatters. Three properties matter
 //! here:
 //!
 //! * **Stability.** Each pass preserves the relative order of equal digits,
@@ -12,17 +12,56 @@
 //!   bit-for-bit the order the comparison path produced (asserted by
 //!   `tests/sketch_parity.rs`).
 //! * **Pass skipping.** Packed SimHash keys occupy only the low `bits` bits
-//!   (M=30 ⇒ 4 live bytes), so the high-byte histograms are degenerate and
-//!   those passes permute nothing; one fused histogram pass up front detects
-//!   and skips them.
+//!   (M=30 ⇒ 4 live bytes), so the high-byte passes permute nothing. One
+//!   OR/AND mask pass up front finds them: a byte position where every key
+//!   agrees has `or_byte == and_byte`, and such a **fully-degenerate byte
+//!   skips histogram accumulation too** — the fused histogram loop only
+//!   builds counts for live bytes.
+//! * **Pool parallelism.** [`argsort_u64_par`] runs each pass as
+//!   per-worker-chunk digit histograms, a serial 256 × W prefix scan, and a
+//!   parallel prefix-scatter into disjoint output ranges. Worker w's
+//!   digit-d block lands after workers < w's, and chunks walk the current
+//!   permutation in order, so every pass — and therefore the final
+//!   permutation — is **identical to the serial sort for any worker count**
+//!   (`tests/simd_parity.rs`). This is what lets one huge repetition use
+//!   the whole pool when the wave has spare cores, and `ampc::terasort`
+//!   rides the same pipeline via `terasort_u64`.
+
+use crate::util::pool::parallel_chunks;
+use std::time::Instant;
 
 /// Below this length the constant factors favor the comparison sort; both
 /// paths produce the identical permutation, so the cutoff is purely a
 /// performance knob.
 const RADIX_MIN_N: usize = 512;
 
+/// Below this many keys the parallel path degrades to the serial sort —
+/// spawn/join overhead beats the scatter work (identical output either
+/// way).
+const RADIX_PAR_MIN_N: usize = 1 << 16;
+
+/// Minimum keys per worker chunk in the parallel path; the effective worker
+/// count is capped at `n / RADIX_PAR_MIN_CHUNK`.
+const RADIX_PAR_MIN_CHUNK: usize = 1 << 14;
+
+/// Byte value of `k` at radix pass `pass`.
+#[inline(always)]
+fn digit(k: u64, pass: usize) -> usize {
+    ((k >> (pass * 8)) & 0xFF) as usize
+}
+
+/// The radix passes that can permute anything: byte positions where at
+/// least two keys disagree (`or_byte != and_byte`). Fully-degenerate bytes
+/// are skipped before any histogram is accumulated.
+fn live_passes(or_mask: u64, and_mask: u64) -> Vec<usize> {
+    (0..8)
+        .filter(|&p| digit(or_mask, p) != digit(and_mask, p))
+        .collect()
+}
+
 /// Indices `0..keys.len()` sorted by `(keys[i], i)` — stable LSD radix on
-/// 8-bit digits with degenerate passes skipped.
+/// 8-bit digits with degenerate passes (and their histograms) skipped via
+/// the OR/AND mask.
 pub fn argsort_u64(keys: &[u64]) -> Vec<u32> {
     let n = keys.len();
     assert!(n <= u32::MAX as usize, "argsort_u64 indexes with u32");
@@ -31,20 +70,26 @@ pub fn argsort_u64(keys: &[u64]) -> Vec<u32> {
         idx.sort_unstable_by_key(|&i| (keys[i as usize], i));
         return idx;
     }
-    // All eight digit histograms in one read of the key array.
-    let mut hist = [[0u32; 256]; 8];
+    // Mask pass: one read of the key array finds every byte the sort can
+    // skip — including skipping its histogram accumulation below.
+    let (mut or_mask, mut and_mask) = (0u64, u64::MAX);
     for &k in keys {
-        for (pass, h) in hist.iter_mut().enumerate() {
-            h[((k >> (pass * 8)) & 0xFF) as usize] += 1;
+        or_mask |= k;
+        and_mask &= k;
+    }
+    let live = live_passes(or_mask, and_mask);
+    if live.is_empty() {
+        return idx; // all keys equal: ties break by index — the identity
+    }
+    // All live digit histograms in one read of the key array.
+    let mut hist = vec![[0u32; 256]; live.len()];
+    for &k in keys {
+        for (h, &pass) in hist.iter_mut().zip(&live) {
+            h[digit(k, pass)] += 1;
         }
     }
     let mut buf = vec![0u32; n];
-    for (pass, h) in hist.iter().enumerate() {
-        // A pass where every key shares one digit value permutes nothing.
-        if h.iter().any(|&c| c as usize == n) {
-            continue;
-        }
-        let shift = pass * 8;
+    for (h, &pass) in hist.iter().zip(&live) {
         let mut cursor = [0u32; 256];
         let mut sum = 0u32;
         for (c, &count) in cursor.iter_mut().zip(h.iter()) {
@@ -52,10 +97,144 @@ pub fn argsort_u64(keys: &[u64]) -> Vec<u32> {
             sum += count;
         }
         for &i in &idx {
-            let digit = ((keys[i as usize] >> shift) & 0xFF) as usize;
-            buf[cursor[digit] as usize] = i;
-            cursor[digit] += 1;
+            let d = digit(keys[i as usize], pass);
+            buf[cursor[d] as usize] = i;
+            cursor[d] += 1;
         }
+        std::mem::swap(&mut idx, &mut buf);
+    }
+    idx
+}
+
+/// [`argsort_u64`] with each pass chunked over up to `workers` pool
+/// threads. The permutation is **identical** to the serial sort — and to
+/// `sort_unstable_by_key(|&i| (keys[i], i))` — for every worker count;
+/// parallelism only changes who computes which slice of each pass.
+pub fn argsort_u64_par(keys: &[u64], workers: usize) -> Vec<u32> {
+    argsort_u64_par_timed(keys, workers, |_, _| {})
+}
+
+/// [`argsort_u64_par`] reporting each chunk worker's busy span to
+/// `busy(worker_index, nanos)` — the sorting drivers thread the AMPC
+/// ledger through here so a pool-parallel sort's machine-seconds land in
+/// Σ busy like every other in-repetition parallel phase (index 0 rides the
+/// caller's wall charge; see `CostLedger::add_inner_busy`).
+pub fn argsort_u64_par_timed<B>(keys: &[u64], workers: usize, busy: B) -> Vec<u32>
+where
+    B: Fn(usize, u64) + Sync,
+{
+    let n = keys.len();
+    let cap = (n / RADIX_PAR_MIN_CHUNK).max(1);
+    let workers = workers.clamp(1, cap);
+    if workers <= 1 || n < RADIX_PAR_MIN_N {
+        let t = Instant::now();
+        let out = argsort_u64(keys);
+        busy(0, t.elapsed().as_nanos() as u64);
+        return out;
+    }
+    par_argsort(keys, workers, &busy)
+}
+
+/// A raw output pointer that workers scatter through. Writes are disjoint
+/// by construction: the prefix scan hands every (worker, digit) pair its
+/// own half-open output range, and the ranges partition `0..n`.
+struct ScatterOut(*mut u32);
+unsafe impl Send for ScatterOut {}
+unsafe impl Sync for ScatterOut {}
+
+/// The parallel radix pipeline (callers guarantee `workers >= 2` and
+/// `n >= workers`). Exposed to the module tests so the worker-invariance
+/// sweep can exercise the parallel path below the public cutoffs.
+fn par_argsort<B>(keys: &[u64], workers: usize, busy: &B) -> Vec<u32>
+where
+    B: Fn(usize, u64) + Sync,
+{
+    let n = keys.len();
+    assert!(n <= u32::MAX as usize, "argsort_u64 indexes with u32");
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+
+    // Mask pass, chunked: fold per-chunk OR/AND masks.
+    let masks = parallel_chunks(n, workers, |w, range| {
+        let t = Instant::now();
+        let (mut or_m, mut and_m) = (0u64, u64::MAX);
+        for &k in &keys[range] {
+            or_m |= k;
+            and_m &= k;
+        }
+        busy(w, t.elapsed().as_nanos() as u64);
+        (or_m, and_m)
+    });
+    let (or_mask, and_mask) = masks
+        .into_iter()
+        .fold((0u64, u64::MAX), |(o, a), (co, ca)| (o | co, a & ca));
+    let live = live_passes(or_mask, and_mask);
+    if live.is_empty() {
+        return idx;
+    }
+
+    // Fixed chunking of the permutation, shared by the histogram and
+    // scatter phases of every pass (both walk the *current* idx order).
+    let chunk = n.div_ceil(workers);
+    let ranges: Vec<std::ops::Range<usize>> = (0..workers)
+        .map(|w| (w * chunk).min(n)..((w + 1) * chunk).min(n))
+        .collect();
+
+    let mut buf = vec![0u32; n];
+    for &pass in &live {
+        // 1. Per-worker digit histograms over the current permutation.
+        let idx_ref = &idx;
+        let hists: Vec<[u32; 256]> = parallel_chunks(workers, workers, |w, wrange| {
+            let t = Instant::now();
+            let mut out = Vec::with_capacity(wrange.len());
+            for wi in wrange {
+                let mut h = [0u32; 256];
+                for &i in &idx_ref[ranges[wi].clone()] {
+                    h[digit(keys[i as usize], pass)] += 1;
+                }
+                out.push(h);
+            }
+            busy(w, t.elapsed().as_nanos() as u64);
+            out
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+
+        // 2. Serial prefix scan: worker w's digit-d block starts after all
+        //    smaller digits and after workers < w's digit-d counts — the
+        //    exact positions the serial stable scatter would use.
+        let mut starts = vec![[0u32; 256]; workers];
+        let mut sum = 0u32;
+        for d in 0..256 {
+            for (w, h) in hists.iter().enumerate() {
+                starts[w][d] = sum;
+                sum += h[d];
+            }
+        }
+
+        // 3. Parallel scatter into disjoint ranges of the shared buffer.
+        let out = ScatterOut(buf.as_mut_ptr());
+        let out_ref = &out;
+        let starts_ref = &starts;
+        parallel_chunks(workers, workers, |w, wrange| {
+            let t = Instant::now();
+            for wi in wrange {
+                let mut cursor = starts_ref[wi];
+                for &i in &idx_ref[ranges[wi].clone()] {
+                    let d = digit(keys[i as usize], pass);
+                    // SAFETY: `cursor[d]` walks `[starts[wi][d],
+                    // starts[wi][d] + hists[wi][d])`; the prefix scan makes
+                    // these ranges disjoint across (worker, digit) pairs
+                    // and their union is exactly 0..n, so each output slot
+                    // is written once, by one thread, with no overlap.
+                    unsafe {
+                        *out_ref.0.add(cursor[d] as usize) = i;
+                    }
+                    cursor[d] += 1;
+                }
+            }
+            busy(w, t.elapsed().as_nanos() as u64);
+        });
         std::mem::swap(&mut idx, &mut buf);
     }
     idx
@@ -115,5 +294,75 @@ mod tests {
         let mut rng = Rng::new(5);
         let keys: Vec<u64> = (0..4_000).map(|_| rng.next_u64() << 56).collect();
         assert_eq!(argsort_u64(&keys), reference(&keys));
+    }
+
+    #[test]
+    fn shared_nonzero_bytes_are_skipped_correctly() {
+        // Every key shares 0xAB in byte 2 and 0xFF in byte 6 — degenerate
+        // but nonzero bytes, which only the OR/AND mask (not a zero test)
+        // can prove skippable.
+        let mut rng = Rng::new(9);
+        let keys: Vec<u64> = (0..3_000)
+            .map(|_| {
+                let low = rng.next_u64() & 0xFFFF;
+                let high = (rng.next_u64() & 0xFF) << 24;
+                low | high | (0xABu64 << 16) | (0xFFu64 << 48)
+            })
+            .collect();
+        assert_eq!(argsort_u64(&keys), reference(&keys));
+    }
+
+    #[test]
+    fn live_pass_mask_detects_degenerate_bytes() {
+        // or == and on bytes 1 and 3 (all keys agree there).
+        let keys = [0x01_22_03_44u64, 0x05_22_07_44, 0xFF_22_00_44];
+        let (mut or_m, mut and_m) = (0u64, u64::MAX);
+        for &k in &keys {
+            or_m |= k;
+            and_m &= k;
+        }
+        assert_eq!(live_passes(or_m, and_m), vec![1, 3]);
+        assert_eq!(live_passes(7, 7), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_any_worker_count() {
+        // Drive the parallel pipeline directly (below the public cutoff
+        // n would fall back to serial and test nothing).
+        let mut rng = Rng::new(21);
+        let cases: Vec<Vec<u64>> = vec![
+            (0..20_000).map(|_| rng.next_u64()).collect(),
+            (0..20_000).map(|_| rng.next_u64() % 8).collect(), // heavy ties
+            (0..20_000).map(|_| rng.next_u64() << 56).collect(), // high byte only
+            vec![7u64; 20_000],                                // fully degenerate
+        ];
+        for (case, keys) in cases.iter().enumerate() {
+            let serial = argsort_u64(keys);
+            for workers in [2usize, 3, 5, 8] {
+                let par = par_argsort(keys, workers, &|_, _| {});
+                assert_eq!(par, serial, "case {case} workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn public_par_entry_point_handles_cutoffs_and_reports_busy() {
+        // Small input: serial fallback, busy reported on index 0.
+        let mut rng = Rng::new(4);
+        let keys: Vec<u64> = (0..2_000).map(|_| rng.next_u64()).collect();
+        let calls = std::sync::Mutex::new(Vec::new());
+        let order =
+            argsort_u64_par_timed(&keys, 8, |w, ns| calls.lock().unwrap().push((w, ns)));
+        assert_eq!(order, argsort_u64(&keys));
+        let calls = calls.into_inner().unwrap();
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0].0, 0);
+        // Large input: parallel path, identical permutation.
+        let keys: Vec<u64> = (0..(RADIX_PAR_MIN_N + 100))
+            .map(|_| rng.next_u64() % 1000)
+            .collect();
+        assert_eq!(argsort_u64_par(&keys, 4), argsort_u64(&keys));
+        assert_eq!(argsort_u64_par(&keys, 1), argsort_u64(&keys));
+        assert!(argsort_u64_par(&[], 4).is_empty());
     }
 }

@@ -1,0 +1,962 @@
+//! Runtime-dispatched SIMD lane layer for the dense hot kernels.
+//!
+//! The scoring and sketching tiles (`sim::batch::dot_tile`,
+//! `lsh::sketch::sketch_tile`) were written as fixed-shape blocked
+//! reductions so the autovectorizer *could* emit wide FMAs — but "could" is
+//! a compiler mood, not a contract. This module makes the lanes explicit:
+//! every hot reduction has a scalar reference implementation plus
+//! `std::arch` ports (AVX2 on `x86_64`, NEON on `aarch64`), and one backend
+//! is chosen **at runtime** from CPUID-style feature detection.
+//!
+//! Two contracts, both load-bearing:
+//!
+//! * **Bit-identity.** Every backend replicates the scalar kernel's exact
+//!   lane structure and reduction order — same lane count, same lane-sum
+//!   association tree, same scalar tail, and separate multiply/add rounding
+//!   (no FMA contraction: the scalar kernels round the product before the
+//!   sum, so a fused `a*b+c` would differ in the last ulp). A switch of
+//!   backend can therefore never change a similarity score, a sketch key,
+//!   an edge, or a served top-k — the worker-count-invariance contract in
+//!   ARCHITECTURE.md extends to an *instruction-set*-invariance contract,
+//!   asserted by `tests/simd_parity.rs` for every backend reachable on the
+//!   build host.
+//! * **Observability.** The resolved backend is reported by name in
+//!   `CostReport`/bench JSON (`simd_backend`), and `STARS_SIMD=
+//!   scalar|avx2|neon` forces a backend (falling back to scalar, with a
+//!   warning, when the host can't run the request) so perf numbers and CI
+//!   runs can pin the lanes they exercise.
+//!
+//! Dispatch is resolved once per tile (callers hoist [`active`] out of
+//! their block loops and call the `_with` variants), so the per-block cost
+//! is one predictable match, amortized over a `4 × d` reduction.
+
+use std::sync::OnceLock;
+
+/// Environment variable that forces a backend: `scalar`, `avx2` or `neon`.
+pub const SIMD_ENV: &str = "STARS_SIMD";
+
+/// An instruction-set backend for the lane kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Portable blocked-scalar kernels — the reduction-order reference.
+    Scalar,
+    /// 256-bit AVX2 lanes (`x86_64`, requires `avx2` + `fma` at runtime).
+    Avx2,
+    /// 128-bit NEON lanes (`aarch64`).
+    Neon,
+}
+
+impl SimdBackend {
+    /// Display name — the value `STARS_SIMD` accepts and the string
+    /// reported as `simd_backend` in `CostReport`/bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a `STARS_SIMD` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<SimdBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(SimdBackend::Scalar),
+            "avx2" => Some(SimdBackend::Avx2),
+            "neon" => Some(SimdBackend::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Whether this host can execute `backend`'s kernels. Scalar is always
+/// supported; AVX2 additionally requires the `fma` feature so future
+/// kernels may fuse where bit-identity permits.
+pub fn supported(backend: SimdBackend) -> bool {
+    match backend {
+        SimdBackend::Scalar => true,
+        SimdBackend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        SimdBackend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                std::arch::is_aarch64_feature_detected!("neon")
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                false
+            }
+        }
+    }
+}
+
+/// The best backend the host supports, ignoring any override.
+pub fn detected() -> SimdBackend {
+    if supported(SimdBackend::Avx2) {
+        SimdBackend::Avx2
+    } else if supported(SimdBackend::Neon) {
+        SimdBackend::Neon
+    } else {
+        SimdBackend::Scalar
+    }
+}
+
+/// Every backend this host can execute, scalar first — what the parity
+/// tests sweep and the benches report per-backend throughput for.
+pub fn reachable() -> Vec<SimdBackend> {
+    let mut out = vec![SimdBackend::Scalar];
+    for b in [SimdBackend::Avx2, SimdBackend::Neon] {
+        if supported(b) {
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Resolve a backend from an optional override string (the `STARS_SIMD`
+/// policy, factored out so tests can exercise it without touching the
+/// process environment): `None` → [`detected`]; a valid, supported name →
+/// that backend; a valid but unsupported name → scalar (with a warning —
+/// forcing lanes the host lacks would be an illegal-instruction trap, and
+/// scalar is the only backend guaranteed to agree bit-for-bit anyway); an
+/// unrecognized name → [`detected`] (with a warning).
+pub fn resolve(request: Option<&str>) -> SimdBackend {
+    let Some(req) = request else {
+        return detected();
+    };
+    match SimdBackend::parse(req) {
+        Some(b) if supported(b) => b,
+        Some(b) => {
+            eprintln!(
+                "stars: {SIMD_ENV}={req} requests the {} backend, which this host \
+                 cannot execute; falling back to scalar",
+                b.name()
+            );
+            SimdBackend::Scalar
+        }
+        None => {
+            eprintln!(
+                "stars: unrecognized {SIMD_ENV}={req} (expected scalar|avx2|neon); \
+                 using detected backend {}",
+                detected().name()
+            );
+            detected()
+        }
+    }
+}
+
+/// The active backend: `STARS_SIMD` if set, else the detected best.
+/// Resolved once per process and cached — hot kernels hoist this out of
+/// their block loops.
+pub fn active() -> SimdBackend {
+    static ACTIVE: OnceLock<SimdBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve(std::env::var(SIMD_ENV).ok().as_deref()))
+}
+
+// ---------------------------------------------------------------------------
+// Reduction-order reference kernels (scalar).
+//
+// These are the kernels the tiles shipped with; the SIMD ports below must
+// match them bit-for-bit. Lane-sum association trees are written out
+// explicitly — do not "simplify" them, the parity tests pin the rounding.
+// ---------------------------------------------------------------------------
+
+/// `((x0 + x1) + x2) + x3` — the 4-lane sum order shared by the sketch
+/// kernels and [`sum_f32`].
+#[inline(always)]
+fn sum4(x: [f32; 4]) -> f32 {
+    ((x[0] + x[1]) + x[2]) + x[3]
+}
+
+/// `(x0+x1) + (x2+x3) + ((x4+x5) + (x6+x7))` — the 8-lane tree shared by
+/// the dot kernels (`sim::measure::dot`'s historical order).
+#[inline(always)]
+fn sum8(x: [f32; 8]) -> f32 {
+    (x[0] + x[1]) + (x[2] + x[3]) + ((x[4] + x[5]) + (x[6] + x[7]))
+}
+
+/// 8-lane blocked dot product (one accumulator group).
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let k = c * 8;
+        for l in 0..8 {
+            acc[l] += a[k + l] * b[k + l];
+        }
+    }
+    let mut d = sum8(acc);
+    for k in chunks * 8..n {
+        d += a[k] * b[k];
+    }
+    d
+}
+
+/// Dot of `leader` against four rows at once: one leader-element load feeds
+/// four 8-lane accumulator groups.
+fn dot_block4_scalar(leader: &[f32], t0: &[f32], t1: &[f32], t2: &[f32], t3: &[f32]) -> [f32; 4] {
+    let d = leader.len();
+    let chunks = d / 8;
+    let mut acc = [[0f32; 8]; 4];
+    for c in 0..chunks {
+        let k = c * 8;
+        for l in 0..8 {
+            let x = leader[k + l];
+            acc[0][l] += x * t0[k + l];
+            acc[1][l] += x * t1[k + l];
+            acc[2][l] += x * t2[k + l];
+            acc[3][l] += x * t3[k + l];
+        }
+    }
+    let mut out = [0f32; 4];
+    for (r, a) in acc.iter().enumerate() {
+        out[r] = sum8(*a);
+    }
+    for k in chunks * 8..d {
+        let x = leader[k];
+        out[0] += x * t0[k];
+        out[1] += x * t1[k];
+        out[2] += x * t2[k];
+        out[3] += x * t3[k];
+    }
+    out
+}
+
+/// Dots of one row against a plane pair: two 4-lane accumulator groups
+/// (the inner kernel of `lsh::sketch::sketch_row_scalar`).
+fn sketch_row2_scalar(p0: &[f32], p1: &[f32], row: &[f32]) -> (f32, f32) {
+    let d = row.len();
+    let chunks = d / 4;
+    let mut a = [0f32; 4];
+    let mut b = [0f32; 4];
+    for c in 0..chunks {
+        let k = c * 4;
+        for l in 0..4 {
+            let x = row[k + l];
+            a[l] += x * p0[k + l];
+            b[l] += x * p1[k + l];
+        }
+    }
+    let (mut da, mut db) = (sum4(a), sum4(b));
+    for k in chunks * 4..d {
+        da += row[k] * p0[k];
+        db += row[k] * p1[k];
+    }
+    (da, db)
+}
+
+/// Dots of four rows against a plane pair at once: eight 4-lane accumulator
+/// groups (the inner kernel of `lsh::sketch::sketch_tile`).
+fn sketch_block4_scalar(
+    p0: &[f32],
+    p1: &[f32],
+    t0: &[f32],
+    t1: &[f32],
+    t2: &[f32],
+    t3: &[f32],
+) -> ([f32; 4], [f32; 4]) {
+    let d = p0.len();
+    let chunks = d / 4;
+    let mut a = [[0f32; 4]; 4]; // a[row][lane] against p0
+    let mut b = [[0f32; 4]; 4]; // b[row][lane] against p1
+    for c in 0..chunks {
+        let k = c * 4;
+        for l in 0..4 {
+            let (x0, x1) = (p0[k + l], p1[k + l]);
+            a[0][l] += t0[k + l] * x0;
+            b[0][l] += t0[k + l] * x1;
+            a[1][l] += t1[k + l] * x0;
+            b[1][l] += t1[k + l] * x1;
+            a[2][l] += t2[k + l] * x0;
+            b[2][l] += t2[k + l] * x1;
+            a[3][l] += t3[k + l] * x0;
+            b[3][l] += t3[k + l] * x1;
+        }
+    }
+    let mut da = [0f32; 4];
+    let mut db = [0f32; 4];
+    for (row, (aa, bb)) in a.iter().zip(b.iter()).enumerate() {
+        da[row] = sum4(*aa);
+        db[row] = sum4(*bb);
+    }
+    let tails = [t0, t1, t2, t3];
+    for k in chunks * 4..d {
+        let (x0, x1) = (p0[k], p1[k]);
+        for (row, t) in tails.iter().enumerate() {
+            da[row] += t[k] * x0;
+            db[row] += t[k] * x1;
+        }
+    }
+    (da, db)
+}
+
+/// 4-lane blocked sum — the accumulate helper behind the weighted-jaccard
+/// weight folds. NOTE: this is a *blocked* order (lanes then [`sum4`] then
+/// the scalar tail), not the strictly sequential `iter().sum()`; all
+/// backends agree bit-for-bit with each other, and callers that migrate
+/// from a sequential sum accept an ulp-level reassociation once.
+fn sum_f32_scalar(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let chunks = n / 4;
+    let mut acc = [0f32; 4];
+    for c in 0..chunks {
+        let k = c * 4;
+        for l in 0..4 {
+            acc[l] += xs[k + l];
+        }
+    }
+    let mut s = sum4(acc);
+    for k in chunks * 4..n {
+        s += xs[k];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 ports (x86_64). Each kernel keeps the scalar kernel's lane count,
+// association tree and scalar tail; multiplies and adds stay separate
+// instructions (`_mm*_mul_ps` + `_mm*_add_ps`, never `fmadd`) because the
+// scalar kernels round the product before the sum — fusing would break
+// bit-identity. `fma` is still part of the backend gate so kernels that
+// *can* fuse (none yet) have it available.
+//
+// Safety: every `unsafe fn` below requires the `avx2` feature (checked at
+// dispatch via [`supported`]); pointer arithmetic stays inside the slices'
+// bounds (`chunks * LANES <= len`).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{sum4, sum8};
+    use std::arch::x86_64::*;
+
+    /// Spill a 256-bit register to its 8 f32 lanes (lane 0 first).
+    #[inline(always)]
+    unsafe fn lanes8(v: __m256) -> [f32; 8] {
+        let mut out = [0f32; 8];
+        _mm256_storeu_ps(out.as_mut_ptr(), v);
+        out
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let k = c * 8;
+            let va = _mm256_loadu_ps(a.as_ptr().add(k));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut d = sum8(lanes8(acc));
+        for k in chunks * 8..n {
+            d += a[k] * b[k];
+        }
+        d
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_block4(
+        leader: &[f32],
+        t0: &[f32],
+        t1: &[f32],
+        t2: &[f32],
+        t3: &[f32],
+    ) -> [f32; 4] {
+        let d = leader.len();
+        let chunks = d / 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let k = c * 8;
+            let x = _mm256_loadu_ps(leader.as_ptr().add(k));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(x, _mm256_loadu_ps(t0.as_ptr().add(k))));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(x, _mm256_loadu_ps(t1.as_ptr().add(k))));
+            a2 = _mm256_add_ps(a2, _mm256_mul_ps(x, _mm256_loadu_ps(t2.as_ptr().add(k))));
+            a3 = _mm256_add_ps(a3, _mm256_mul_ps(x, _mm256_loadu_ps(t3.as_ptr().add(k))));
+        }
+        let mut out = [
+            sum8(lanes8(a0)),
+            sum8(lanes8(a1)),
+            sum8(lanes8(a2)),
+            sum8(lanes8(a3)),
+        ];
+        for k in chunks * 8..d {
+            let x = leader[k];
+            out[0] += x * t0[k];
+            out[1] += x * t1[k];
+            out[2] += x * t2[k];
+            out[3] += x * t3[k];
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sketch_row2(p0: &[f32], p1: &[f32], row: &[f32]) -> (f32, f32) {
+        let d = row.len();
+        let chunks = d / 4;
+        // Low 128 bits accumulate against p0, high against p1 — each lane
+        // chain matches one scalar accumulator exactly.
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let k = c * 4;
+            let r = _mm_loadu_ps(row.as_ptr().add(k));
+            let rr = _mm256_set_m128(r, r);
+            let p = _mm256_set_m128(
+                _mm_loadu_ps(p1.as_ptr().add(k)),
+                _mm_loadu_ps(p0.as_ptr().add(k)),
+            );
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(rr, p));
+        }
+        let l = lanes8(acc);
+        let mut da = sum4([l[0], l[1], l[2], l[3]]);
+        let mut db = sum4([l[4], l[5], l[6], l[7]]);
+        for k in chunks * 4..d {
+            da += row[k] * p0[k];
+            db += row[k] * p1[k];
+        }
+        (da, db)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sketch_block4(
+        p0: &[f32],
+        p1: &[f32],
+        t0: &[f32],
+        t1: &[f32],
+        t2: &[f32],
+        t3: &[f32],
+    ) -> ([f32; 4], [f32; 4]) {
+        let d = p0.len();
+        let chunks = d / 4;
+        // Row pairs share a 256-bit register (row r in the low 128, row
+        // r+1 in the high 128); each 4-lane half is one scalar accumulator
+        // group.
+        let mut a01 = _mm256_setzero_ps();
+        let mut a23 = _mm256_setzero_ps();
+        let mut b01 = _mm256_setzero_ps();
+        let mut b23 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let k = c * 4;
+            let x0 = _mm_loadu_ps(p0.as_ptr().add(k));
+            let x1 = _mm_loadu_ps(p1.as_ptr().add(k));
+            let p0v = _mm256_set_m128(x0, x0);
+            let p1v = _mm256_set_m128(x1, x1);
+            let t01 = _mm256_set_m128(
+                _mm_loadu_ps(t1.as_ptr().add(k)),
+                _mm_loadu_ps(t0.as_ptr().add(k)),
+            );
+            let t23 = _mm256_set_m128(
+                _mm_loadu_ps(t3.as_ptr().add(k)),
+                _mm_loadu_ps(t2.as_ptr().add(k)),
+            );
+            a01 = _mm256_add_ps(a01, _mm256_mul_ps(t01, p0v));
+            a23 = _mm256_add_ps(a23, _mm256_mul_ps(t23, p0v));
+            b01 = _mm256_add_ps(b01, _mm256_mul_ps(t01, p1v));
+            b23 = _mm256_add_ps(b23, _mm256_mul_ps(t23, p1v));
+        }
+        let (la01, la23) = (lanes8(a01), lanes8(a23));
+        let (lb01, lb23) = (lanes8(b01), lanes8(b23));
+        let mut da = [
+            sum4([la01[0], la01[1], la01[2], la01[3]]),
+            sum4([la01[4], la01[5], la01[6], la01[7]]),
+            sum4([la23[0], la23[1], la23[2], la23[3]]),
+            sum4([la23[4], la23[5], la23[6], la23[7]]),
+        ];
+        let mut db = [
+            sum4([lb01[0], lb01[1], lb01[2], lb01[3]]),
+            sum4([lb01[4], lb01[5], lb01[6], lb01[7]]),
+            sum4([lb23[0], lb23[1], lb23[2], lb23[3]]),
+            sum4([lb23[4], lb23[5], lb23[6], lb23[7]]),
+        ];
+        let tails = [t0, t1, t2, t3];
+        for k in chunks * 4..d {
+            let (x0, x1) = (p0[k], p1[k]);
+            for (row, t) in tails.iter().enumerate() {
+                da[row] += t[k] * x0;
+                db[row] += t[k] * x1;
+            }
+        }
+        (da, db)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sum_f32(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let chunks = n / 4;
+        let mut acc = _mm_setzero_ps();
+        for c in 0..chunks {
+            acc = _mm_add_ps(acc, _mm_loadu_ps(xs.as_ptr().add(c * 4)));
+        }
+        let mut l = [0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = sum4(l);
+        for k in chunks * 4..n {
+            s += xs[k];
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON ports (aarch64). 128-bit registers are 4 f32 lanes, so the 8-lane
+// dot kernels split each accumulator group across a lo/hi register pair;
+// the 4-lane sketch kernels map one group per register. Multiplies and adds
+// stay separate (`vmulq`/`vaddq`, never `vfmaq`) for the same bit-identity
+// reason as the AVX2 port.
+//
+// Safety: gated on the `neon` feature via [`supported`]; pointer reads stay
+// inside the slices (`chunks * LANES <= len`).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{sum4, sum8};
+    use std::arch::aarch64::*;
+
+    /// Spill a 128-bit register to its 4 f32 lanes (lane 0 first).
+    #[inline(always)]
+    unsafe fn lanes4(v: float32x4_t) -> [f32; 4] {
+        let mut out = [0f32; 4];
+        vst1q_f32(out.as_mut_ptr(), v);
+        out
+    }
+
+    /// Lanes of a lo/hi register pair as one 8-lane group.
+    #[inline(always)]
+    unsafe fn lanes8(lo: float32x4_t, hi: float32x4_t) -> [f32; 8] {
+        let (l, h) = (lanes4(lo), lanes4(hi));
+        [l[0], l[1], l[2], l[3], h[0], h[1], h[2], h[3]]
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let k = c * 8;
+            lo = vaddq_f32(
+                lo,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(k)), vld1q_f32(b.as_ptr().add(k))),
+            );
+            hi = vaddq_f32(
+                hi,
+                vmulq_f32(
+                    vld1q_f32(a.as_ptr().add(k + 4)),
+                    vld1q_f32(b.as_ptr().add(k + 4)),
+                ),
+            );
+        }
+        let mut d = sum8(lanes8(lo, hi));
+        for k in chunks * 8..n {
+            d += a[k] * b[k];
+        }
+        d
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_block4(
+        leader: &[f32],
+        t0: &[f32],
+        t1: &[f32],
+        t2: &[f32],
+        t3: &[f32],
+    ) -> [f32; 4] {
+        let d = leader.len();
+        let chunks = d / 8;
+        let mut lo = [vdupq_n_f32(0.0); 4];
+        let mut hi = [vdupq_n_f32(0.0); 4];
+        let rows = [t0, t1, t2, t3];
+        for c in 0..chunks {
+            let k = c * 8;
+            let xl = vld1q_f32(leader.as_ptr().add(k));
+            let xh = vld1q_f32(leader.as_ptr().add(k + 4));
+            for (r, t) in rows.iter().enumerate() {
+                lo[r] = vaddq_f32(lo[r], vmulq_f32(xl, vld1q_f32(t.as_ptr().add(k))));
+                hi[r] = vaddq_f32(hi[r], vmulq_f32(xh, vld1q_f32(t.as_ptr().add(k + 4))));
+            }
+        }
+        let mut out = [0f32; 4];
+        for r in 0..4 {
+            out[r] = sum8(lanes8(lo[r], hi[r]));
+        }
+        for k in chunks * 8..d {
+            let x = leader[k];
+            for (r, t) in rows.iter().enumerate() {
+                out[r] += x * t[k];
+            }
+        }
+        out
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sketch_row2(p0: &[f32], p1: &[f32], row: &[f32]) -> (f32, f32) {
+        let d = row.len();
+        let chunks = d / 4;
+        let mut a = vdupq_n_f32(0.0);
+        let mut b = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let k = c * 4;
+            let r = vld1q_f32(row.as_ptr().add(k));
+            a = vaddq_f32(a, vmulq_f32(r, vld1q_f32(p0.as_ptr().add(k))));
+            b = vaddq_f32(b, vmulq_f32(r, vld1q_f32(p1.as_ptr().add(k))));
+        }
+        let mut da = sum4(lanes4(a));
+        let mut db = sum4(lanes4(b));
+        for k in chunks * 4..d {
+            da += row[k] * p0[k];
+            db += row[k] * p1[k];
+        }
+        (da, db)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sketch_block4(
+        p0: &[f32],
+        p1: &[f32],
+        t0: &[f32],
+        t1: &[f32],
+        t2: &[f32],
+        t3: &[f32],
+    ) -> ([f32; 4], [f32; 4]) {
+        let d = p0.len();
+        let chunks = d / 4;
+        let mut a = [vdupq_n_f32(0.0); 4];
+        let mut b = [vdupq_n_f32(0.0); 4];
+        let rows = [t0, t1, t2, t3];
+        for c in 0..chunks {
+            let k = c * 4;
+            let x0 = vld1q_f32(p0.as_ptr().add(k));
+            let x1 = vld1q_f32(p1.as_ptr().add(k));
+            for (r, t) in rows.iter().enumerate() {
+                let tv = vld1q_f32(t.as_ptr().add(k));
+                a[r] = vaddq_f32(a[r], vmulq_f32(tv, x0));
+                b[r] = vaddq_f32(b[r], vmulq_f32(tv, x1));
+            }
+        }
+        let mut da = [0f32; 4];
+        let mut db = [0f32; 4];
+        for r in 0..4 {
+            da[r] = sum4(lanes4(a[r]));
+            db[r] = sum4(lanes4(b[r]));
+        }
+        for k in chunks * 4..d {
+            let (x0, x1) = (p0[k], p1[k]);
+            for (r, t) in rows.iter().enumerate() {
+                da[r] += t[k] * x0;
+                db[r] += t[k] * x1;
+            }
+        }
+        (da, db)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_f32(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            acc = vaddq_f32(acc, vld1q_f32(xs.as_ptr().add(c * 4)));
+        }
+        let mut s = sum4(lanes4(acc));
+        for k in chunks * 4..n {
+            s += xs[k];
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points. The `_with` variants take an explicit backend
+// (tiles resolve [`active`] once and pass it per block; parity tests force
+// each reachable backend); the plain variants dispatch on [`active`]. A
+// backend the host cannot execute silently degrades to scalar — [`resolve`]
+// never *selects* such a backend, this is the safety net for explicit
+// `_with` calls.
+// ---------------------------------------------------------------------------
+
+/// Dot product of two equal-length rows (8-lane blocked; the reduction
+/// order of `sim::measure::dot`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(active(), a, b)
+}
+
+/// [`dot`] on an explicit backend.
+#[inline]
+pub fn dot_with(backend: SimdBackend, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Dot of `leader` against four rows at once (`sim::batch::dot_tile`'s
+/// block kernel).
+#[inline]
+pub fn dot_block4(leader: &[f32], t0: &[f32], t1: &[f32], t2: &[f32], t3: &[f32]) -> [f32; 4] {
+    dot_block4_with(active(), leader, t0, t1, t2, t3)
+}
+
+/// [`dot_block4`] on an explicit backend.
+#[inline]
+pub fn dot_block4_with(
+    backend: SimdBackend,
+    leader: &[f32],
+    t0: &[f32],
+    t1: &[f32],
+    t2: &[f32],
+    t3: &[f32],
+) -> [f32; 4] {
+    let d = leader.len();
+    debug_assert!(t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d);
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe {
+            avx2::dot_block4(leader, t0, t1, t2, t3)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe {
+            neon::dot_block4(leader, t0, t1, t2, t3)
+        },
+        _ => dot_block4_scalar(leader, t0, t1, t2, t3),
+    }
+}
+
+/// Dots of one row against a plane pair (`lsh::sketch::sketch_row_scalar`'s
+/// pair kernel).
+#[inline]
+pub fn sketch_row2(p0: &[f32], p1: &[f32], row: &[f32]) -> (f32, f32) {
+    sketch_row2_with(active(), p0, p1, row)
+}
+
+/// [`sketch_row2`] on an explicit backend.
+#[inline]
+pub fn sketch_row2_with(backend: SimdBackend, p0: &[f32], p1: &[f32], row: &[f32]) -> (f32, f32) {
+    debug_assert!(p0.len() == row.len() && p1.len() == row.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe {
+            avx2::sketch_row2(p0, p1, row)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe {
+            neon::sketch_row2(p0, p1, row)
+        },
+        _ => sketch_row2_scalar(p0, p1, row),
+    }
+}
+
+/// Dots of four rows against a plane pair (`lsh::sketch::sketch_tile`'s
+/// block kernel): `(dots vs p0, dots vs p1)`.
+#[inline]
+pub fn sketch_block4(
+    p0: &[f32],
+    p1: &[f32],
+    t0: &[f32],
+    t1: &[f32],
+    t2: &[f32],
+    t3: &[f32],
+) -> ([f32; 4], [f32; 4]) {
+    sketch_block4_with(active(), p0, p1, t0, t1, t2, t3)
+}
+
+/// [`sketch_block4`] on an explicit backend.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn sketch_block4_with(
+    backend: SimdBackend,
+    p0: &[f32],
+    p1: &[f32],
+    t0: &[f32],
+    t1: &[f32],
+    t2: &[f32],
+    t3: &[f32],
+) -> ([f32; 4], [f32; 4]) {
+    let d = p0.len();
+    debug_assert!(
+        p1.len() == d && t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d
+    );
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe {
+            avx2::sketch_block4(p0, p1, t0, t1, t2, t3)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe {
+            neon::sketch_block4(p0, p1, t0, t1, t2, t3)
+        },
+        _ => sketch_block4_scalar(p0, p1, t0, t1, t2, t3),
+    }
+}
+
+/// Sum of a weight slice in a fixed 4-lane blocked order (lanes, then the
+/// `((s0+s1)+s2)+s3` lane sum, then the sequential tail). All backends
+/// agree bit-for-bit; callers migrating from a strictly sequential
+/// `iter().sum()` accept a one-time ulp-level reassociation.
+#[inline]
+pub fn sum_f32(xs: &[f32]) -> f32 {
+    sum_f32_with(active(), xs)
+}
+
+/// [`sum_f32`] on an explicit backend.
+#[inline]
+pub fn sum_f32_with(backend: SimdBackend, xs: &[f32]) -> f32 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe { avx2::sum_f32(xs) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe { neon::sum_f32(xs) },
+        _ => sum_f32_scalar(xs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecf(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in [SimdBackend::Scalar, SimdBackend::Avx2, SimdBackend::Neon] {
+            assert_eq!(SimdBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(SimdBackend::parse("AVX2"), Some(SimdBackend::Avx2));
+        assert_eq!(SimdBackend::parse("sse9"), None);
+    }
+
+    #[test]
+    fn resolve_policy() {
+        assert_eq!(resolve(None), detected());
+        assert_eq!(resolve(Some("scalar")), SimdBackend::Scalar);
+        assert_eq!(resolve(Some("garbage")), detected());
+        // Requesting each real backend yields it when supported, scalar
+        // otherwise — never an unsupported backend.
+        for (req, b) in [("avx2", SimdBackend::Avx2), ("neon", SimdBackend::Neon)] {
+            let got = resolve(Some(req));
+            if supported(b) {
+                assert_eq!(got, b);
+            } else {
+                assert_eq!(got, SimdBackend::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn reachable_starts_scalar_and_is_supported() {
+        let r = reachable();
+        assert_eq!(r[0], SimdBackend::Scalar);
+        assert!(r.iter().all(|&b| supported(b)));
+        assert!(r.contains(&active()), "active backend must be reachable");
+    }
+
+    #[test]
+    fn all_reachable_backends_are_bit_identical() {
+        for backend in reachable() {
+            for d in [0usize, 1, 3, 4, 7, 8, 15, 16, 100, 784] {
+                let a = vecf(d, 1 + d as u64);
+                let b = vecf(d, 100 + d as u64);
+                let t = [
+                    vecf(d, 7),
+                    vecf(d, 8),
+                    vecf(d, 9),
+                    vecf(d, 10),
+                ];
+                assert_eq!(
+                    dot_with(backend, &a, &b).to_bits(),
+                    dot_with(SimdBackend::Scalar, &a, &b).to_bits(),
+                    "dot {:?} d={d}",
+                    backend
+                );
+                let got = dot_block4_with(backend, &a, &t[0], &t[1], &t[2], &t[3]);
+                let want = dot_block4_with(SimdBackend::Scalar, &a, &t[0], &t[1], &t[2], &t[3]);
+                assert_eq!(
+                    got.map(f32::to_bits),
+                    want.map(f32::to_bits),
+                    "dot_block4 {:?} d={d}",
+                    backend
+                );
+                let got = sketch_row2_with(backend, &a, &b, &t[0]);
+                let want = sketch_row2_with(SimdBackend::Scalar, &a, &b, &t[0]);
+                assert_eq!(
+                    (got.0.to_bits(), got.1.to_bits()),
+                    (want.0.to_bits(), want.1.to_bits()),
+                    "sketch_row2 {:?} d={d}",
+                    backend
+                );
+                let got = sketch_block4_with(backend, &a, &b, &t[0], &t[1], &t[2], &t[3]);
+                let want =
+                    sketch_block4_with(SimdBackend::Scalar, &a, &b, &t[0], &t[1], &t[2], &t[3]);
+                assert_eq!(
+                    (got.0.map(f32::to_bits), got.1.map(f32::to_bits)),
+                    (want.0.map(f32::to_bits), want.1.map(f32::to_bits)),
+                    "sketch_block4 {:?} d={d}",
+                    backend
+                );
+                assert_eq!(
+                    sum_f32_with(backend, &a).to_bits(),
+                    sum_f32_with(SimdBackend::Scalar, &a).to_bits(),
+                    "sum_f32 {:?} d={d}",
+                    backend
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_entry_points_match_active_backend() {
+        let b = active();
+        let a = vecf(37, 5);
+        let x = vecf(37, 6);
+        assert_eq!(dot(&a, &x).to_bits(), dot_with(b, &a, &x).to_bits());
+        assert_eq!(sum_f32(&a).to_bits(), sum_f32_with(b, &a).to_bits());
+    }
+
+    #[test]
+    fn unsupported_with_request_degrades_to_scalar() {
+        // Whichever wide backend the host lacks must fall back to scalar
+        // bits instead of faulting.
+        let a = vecf(64, 2);
+        let b = vecf(64, 3);
+        for backend in [SimdBackend::Avx2, SimdBackend::Neon] {
+            if !supported(backend) {
+                assert_eq!(
+                    dot_with(backend, &a, &b).to_bits(),
+                    dot_with(SimdBackend::Scalar, &a, &b).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dot_matches_naive_within_tolerance() {
+        // Sanity: the blocked order is a reassociation of the plain sum.
+        let a = vecf(100, 11);
+        let b = vecf(100, 12);
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot_with(SimdBackend::Scalar, &a, &b) - naive).abs() < 1e-3);
+    }
+}

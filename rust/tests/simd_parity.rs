@@ -1,0 +1,242 @@
+//! SIMD-vs-scalar bit-parity suite, plus parallel-radix permutation
+//! equality — the enforcement arm of the instruction-set-invariance
+//! contract (ARCHITECTURE.md §SIMD dispatch).
+//!
+//! Every kernel ported onto `util::simd` must produce **bit-identical**
+//! output on every backend reachable on the build host: similarity scores,
+//! sketch keys, and therefore edges and served top-k lists can never depend
+//! on which lanes computed them. The sweep covers the acceptance dimensions
+//! {3, 8, 16, 100, 784} — hitting every lane-count/tail combination (d=3 is
+//! pure tail, d=8 one dot chunk, d=100 chunks+tail, d=784 the MNIST row).
+//!
+//! The forced override is exercised two ways: `resolve("scalar")` is pinned
+//! here, and `scripts/ci.sh` runs this whole suite (and every other test)
+//! twice — default dispatch and `STARS_SIMD=scalar` — so the dispatched
+//! entry points are themselves validated under both resolutions.
+
+use stars::data::synth;
+use stars::lsh::sketch::{sketch_row_with, sketch_tile_with};
+use stars::sim::batch::dot_tile_with;
+use stars::util::radix;
+use stars::util::rng::Rng;
+use stars::util::simd::{self, SimdBackend};
+
+const DIMS: [usize; 5] = [3, 8, 16, 100, 784];
+
+fn rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.gaussian() as f32).collect()
+}
+
+#[test]
+fn forced_scalar_override_resolves_to_scalar() {
+    // The env-var policy itself (resolve() is the pure core active() caches):
+    assert_eq!(simd::resolve(Some("scalar")), SimdBackend::Scalar);
+    // And when the driver runs this suite under STARS_SIMD=..., the active
+    // backend must be exactly what the override names.
+    if let Ok(forced) = std::env::var(simd::SIMD_ENV) {
+        let want = match SimdBackend::parse(&forced) {
+            Some(b) if simd::supported(b) => b,
+            Some(_) => SimdBackend::Scalar,
+            None => simd::detected(),
+        };
+        assert_eq!(simd::active(), want, "STARS_SIMD={forced} not honored");
+    }
+}
+
+#[test]
+fn every_reachable_backend_is_listed_and_supported() {
+    let backends = simd::reachable();
+    assert_eq!(backends[0], SimdBackend::Scalar);
+    assert!(backends.iter().all(|&b| simd::supported(b)));
+    assert!(backends.contains(&simd::detected()));
+}
+
+#[test]
+fn dot_kernels_bit_identical_across_backends() {
+    for backend in simd::reachable() {
+        for &d in &DIMS {
+            let a = rows(1, d, 11 + d as u64);
+            let b = rows(1, d, 77 + d as u64);
+            assert_eq!(
+                simd::dot_with(backend, &a, &b).to_bits(),
+                simd::dot_with(SimdBackend::Scalar, &a, &b).to_bits(),
+                "dot {backend:?} d={d}"
+            );
+            let t = rows(4, d, 5 + d as u64);
+            let (t0, t1, t2, t3) = (&t[..d], &t[d..2 * d], &t[2 * d..3 * d], &t[3 * d..4 * d]);
+            let got = simd::dot_block4_with(backend, &a, t0, t1, t2, t3);
+            let want = simd::dot_block4_with(SimdBackend::Scalar, &a, t0, t1, t2, t3);
+            assert_eq!(
+                got.map(f32::to_bits),
+                want.map(f32::to_bits),
+                "dot_block4 {backend:?} d={d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sketch_kernels_bit_identical_across_backends() {
+    for backend in simd::reachable() {
+        for &d in &DIMS {
+            let p0 = rows(1, d, 21 + d as u64);
+            let p1 = rows(1, d, 22 + d as u64);
+            let t = rows(4, d, 23 + d as u64);
+            let (t0, t1, t2, t3) = (&t[..d], &t[d..2 * d], &t[2 * d..3 * d], &t[3 * d..4 * d]);
+            let got = simd::sketch_row2_with(backend, &p0, &p1, t0);
+            let want = simd::sketch_row2_with(SimdBackend::Scalar, &p0, &p1, t0);
+            assert_eq!(
+                (got.0.to_bits(), got.1.to_bits()),
+                (want.0.to_bits(), want.1.to_bits()),
+                "sketch_row2 {backend:?} d={d}"
+            );
+            let got = simd::sketch_block4_with(backend, &p0, &p1, t0, t1, t2, t3);
+            let want = simd::sketch_block4_with(SimdBackend::Scalar, &p0, &p1, t0, t1, t2, t3);
+            assert_eq!(
+                (got.0.map(f32::to_bits), got.1.map(f32::to_bits)),
+                (want.0.map(f32::to_bits), want.1.map(f32::to_bits)),
+                "sketch_block4 {backend:?} d={d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sum_fold_bit_identical_across_backends() {
+    for backend in simd::reachable() {
+        for n in [0usize, 1, 3, 4, 5, 8, 100, 784, 1023] {
+            let xs = rows(1, n, 31 + n as u64);
+            assert_eq!(
+                simd::sum_f32_with(backend, &xs).to_bits(),
+                simd::sum_f32_with(SimdBackend::Scalar, &xs).to_bits(),
+                "sum_f32 {backend:?} n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_tile_bit_identical_across_backends() {
+    // Tile-level parity: block path + tail rows, over the dimension sweep.
+    for backend in simd::reachable() {
+        for &d in &DIMS {
+            let n = 13; // two 4-blocks + a 1-row tail after the gather
+            let tile = rows(n, d, 41 + d as u64);
+            let leader = rows(1, d, 42 + d as u64);
+            let mut got = vec![0f32; n];
+            let mut want = vec![0f32; n];
+            dot_tile_with(backend, &leader, &tile, n, &mut got);
+            dot_tile_with(SimdBackend::Scalar, &leader, &tile, n, &mut want);
+            for r in 0..n {
+                assert_eq!(
+                    got[r].to_bits(),
+                    want[r].to_bits(),
+                    "dot_tile {backend:?} d={d} row={r}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sketch_tile_keys_bit_identical_across_backends() {
+    // Key-level parity: the sign of every plane dot agrees on every
+    // backend, for odd and even bit counts and tail rows.
+    for backend in simd::reachable() {
+        for &(bits, d) in &[(1usize, 3usize), (7, 8), (12, 16), (16, 100), (30, 784)] {
+            let n = 11;
+            let planes = rows(bits, d, 51 + d as u64);
+            let data = rows(n, d, 52 + d as u64);
+            let mut got = vec![0u64; n];
+            let mut want = vec![0u64; n];
+            sketch_tile_with(backend, &planes, bits, d, &data, n, &mut got);
+            sketch_tile_with(SimdBackend::Scalar, &planes, bits, d, &data, n, &mut want);
+            assert_eq!(got, want, "sketch_tile {backend:?} bits={bits} d={d}");
+            for r in 0..n {
+                let row_key =
+                    sketch_row_with(backend, &planes, bits, d, &data[r * d..(r + 1) * d]);
+                assert_eq!(row_key, want[r], "sketch_row {backend:?} bits={bits} row={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_scoring_is_backend_consistent_end_to_end() {
+    // The dispatched entry points (whatever STARS_SIMD / detection picked)
+    // must agree bit-for-bit with the forced-scalar tile on real data —
+    // this is the assertion that makes the double CI run meaningful.
+    let ds = synth::gaussian_mixture(64, 100, 4, 0.2, 9);
+    let d = ds.dim();
+    let leader = ds.row(0);
+    let n = 63;
+    let mut tile = vec![0f32; n * d];
+    for r in 0..n {
+        tile[r * d..(r + 1) * d].copy_from_slice(ds.row(r + 1));
+    }
+    let mut got = vec![0f32; n];
+    let mut want = vec![0f32; n];
+    stars::sim::batch::dot_tile(leader, &tile, n, &mut got);
+    dot_tile_with(SimdBackend::Scalar, leader, &tile, n, &mut want);
+    for r in 0..n {
+        assert_eq!(got[r].to_bits(), want[r].to_bits(), "row {r}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel radix argsort: permutation equality with the serial sort.
+// ---------------------------------------------------------------------------
+
+/// Key sets covering the radix edge cases: uniform, heavy ties (8 distinct
+/// values), high-byte-only (late passes), shared-nonzero-byte (OR/AND mask
+/// skip), and fully degenerate.
+fn radix_cases(n: usize) -> Vec<(&'static str, Vec<u64>)> {
+    let mut rng = Rng::new(77);
+    vec![
+        ("uniform", (0..n).map(|_| rng.next_u64()).collect()),
+        ("heavy-ties", (0..n).map(|_| rng.next_u64() % 8).collect()),
+        ("high-byte-only", (0..n).map(|_| rng.next_u64() << 56).collect()),
+        (
+            "shared-mid-byte",
+            (0..n)
+                .map(|_| (rng.next_u64() & 0xFFFF) | (0xABu64 << 24))
+                .collect(),
+        ),
+        ("all-equal", vec![42u64; n]),
+    ]
+}
+
+#[test]
+fn argsort_par_matches_serial_permutation() {
+    // Large enough to clear the parallel cutoffs (RADIX_PAR_MIN_N = 64Ki)
+    // so workers > 1 really exercises the histogram + prefix-scatter path.
+    for (name, keys) in radix_cases(70_000) {
+        let serial = radix::argsort_u64(&keys);
+        // Reference semantics: stable by (key, index).
+        let mut reference: Vec<u32> = (0..keys.len() as u32).collect();
+        reference.sort_unstable_by_key(|&i| (keys[i as usize], i));
+        assert_eq!(serial, reference, "{name}: serial vs comparison");
+        for workers in [1usize, 2, 4, 8] {
+            assert_eq!(
+                radix::argsort_u64_par(&keys, workers),
+                serial,
+                "{name}: workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn argsort_par_reports_busy_spans() {
+    let mut rng = Rng::new(3);
+    let keys: Vec<u64> = (0..70_000).map(|_| rng.next_u64()).collect();
+    let spans = std::sync::Mutex::new(Vec::new());
+    let order = radix::argsort_u64_par_timed(&keys, 4, |w, ns| {
+        spans.lock().unwrap().push((w, ns));
+    });
+    assert_eq!(order, radix::argsort_u64(&keys));
+    let spans = spans.into_inner().unwrap();
+    assert!(!spans.is_empty());
+    assert!(spans.iter().all(|&(w, _)| w < 4), "worker index out of range");
+}

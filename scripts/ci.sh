@@ -19,8 +19,23 @@ cd "$(dirname "$0")/../rust"
 echo "==> cargo build --release"
 cargo build --release
 
-echo "==> cargo test -q"
+echo "==> cargo test -q (default SIMD dispatch)"
 cargo test -q
+
+# The whole suite again with the lane layer forced to the scalar reference:
+# every parity test now compares scalar-vs-scalar (trivially green) but the
+# *dispatched* kernels, drivers and serving paths all run on the scalar
+# backend — any result that differs between the two runs is a bit-identity
+# violation in a SIMD port (see ARCHITECTURE.md "SIMD dispatch"). Skipped
+# when the host has no wide backend (x86-64 without AVX2, non-aarch64):
+# there the default run already dispatched scalar everywhere.
+if grep -qi 'avx2' /proc/cpuinfo 2>/dev/null \
+    || [[ "$(uname -m)" == "aarch64" || "$(uname -m)" == "arm64" ]]; then
+    echo "==> STARS_SIMD=scalar cargo test -q (forced-scalar backend)"
+    STARS_SIMD=scalar cargo test -q
+else
+    echo "==> forced-scalar test run skipped (detected backend is already scalar)"
+fi
 
 echo "==> cargo fmt --check"
 cargo fmt --check
