@@ -14,6 +14,7 @@ use stars::bench::{fmt_count, fmt_secs, time_runs, Table};
 use stars::data::synth;
 use stars::lsh::{sorted_order, LshFamily, SimHash, WeightedMinHash};
 use stars::sim::batch::dot_tile_with;
+use stars::sim::quant::{quantize_row, QuantDataset};
 use stars::sim::{CosineSim, Similarity};
 use stars::stars::{group_buckets, Algorithm, BuildParams, StarsBuilder};
 use stars::util::json::Json;
@@ -124,6 +125,45 @@ fn bench_simd_backends(table: &mut Table) -> Json {
     Json::Arr(out)
 }
 
+/// Per-backend throughput of the int8 first-pass estimate kernel
+/// (`QuantDataset::dot_estimates_with`, the quantized serve tier's hot
+/// loop) over the same tile shapes as the f32 sweep — the int8-vs-f32
+/// kernel speedup reads off this array next to `simd_kernel_dot`
+/// (EXPERIMENTS.md §Quant table convention).
+fn bench_simd_int8(table: &mut Table) -> Json {
+    let mut out = Vec::new();
+    for &d in &[16usize, 100, 784] {
+        let ds = synth::gaussian_mixture(4_097, d, 8, 0.2, 11);
+        let q = QuantDataset::from_dataset(&ds);
+        let mut qcodes = vec![0i8; d];
+        let qscale = quantize_row(ds.row(0), &mut qcodes);
+        let n = 4_096;
+        let cands: Vec<u32> = (1..=n as u32).collect();
+        let mut est = Vec::with_capacity(n);
+        for backend in simd::reachable() {
+            let stats = time_runs(3, 15, || {
+                q.dot_estimates_with(backend, &qcodes, qscale, &cands, &mut est);
+                std::hint::black_box(&est);
+            });
+            let med = stats.median();
+            table.row(vec![
+                format!("dot_i8 estimates [{}] (d={d})", backend.name()),
+                fmt_count(n as u64),
+                fmt_secs(med),
+                format!("{}/s", fmt_count((n as f64 / med) as u64)),
+            ]);
+            out.push(Json::obj(vec![
+                ("backend", Json::from(backend.name())),
+                ("d", Json::from(d)),
+                ("pairs", Json::from(n)),
+                ("median_s", Json::from(med)),
+                ("pairs_per_s", Json::from(n as f64 / med)),
+            ]));
+        }
+    }
+    Json::Arr(out)
+}
+
 /// End-to-end `StarsBuilder::build` wall time on the acceptance workload
 /// (gaussian_mixture(50_000, 100, …), LSH+Stars), vs the recorded
 /// pre-tiling/pre-sharding baseline.
@@ -183,6 +223,7 @@ fn main() {
     // Tiled batch scoring vs the scalar path (the perf-pass headline).
     let scoring = bench_cosine_scoring(&mut table);
     let simd_kernels = bench_simd_backends(&mut table);
+    let simd_i8 = bench_simd_int8(&mut table);
     let e2e = bench_e2e_build(&mut table);
 
     let ds = synth::gaussian_mixture(100_000, 100, 100, 0.1, 42);
@@ -359,7 +400,9 @@ fn main() {
 
     // Machine-readable report for cross-PR perf tracking.
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-scoring/v2")),
+        // v3: added the simd_kernel_dot_i8 per-backend sweep (the
+        // quantized tier's int8 estimate kernel).
+        ("schema", Json::from("stars-bench-scoring/v3")),
         ("bench", Json::from("microbench")),
         (
             "workers",
@@ -370,6 +413,7 @@ fn main() {
         ("simd_backend", Json::from(simd::active().name())),
         ("cosine_scoring", scoring),
         ("simd_kernel_dot", simd_kernels),
+        ("simd_kernel_dot_i8", simd_i8),
         ("e2e_build", e2e),
     ]);
     let path = bench_out_path();

@@ -15,7 +15,11 @@
 //!   two-hop route-and-expand path replaces;
 //! * streaming inserts + **incremental-compaction latency vs delta size**
 //!   (the O(delta) claim), plus one full rebuild for the speedup ratio and
-//!   the final snapshot's memory telemetry.
+//!   the final snapshot's memory telemetry;
+//! * the **quantized tier** end-to-end (same build, `ServeConfig::
+//!   quantized`): int8-first QPS/latency/recall next to the f32 numbers,
+//!   with the recall ratio the 0.98 serve-integration gate tracks
+//!   (EXPERIMENTS.md §Quant table convention).
 
 use stars::bench::{fmt_count, fmt_secs, percentile, time_once, time_runs, Table};
 use stars::data::synth;
@@ -75,7 +79,8 @@ fn main() {
         fmt_secs(build_s),
         format!("{} router entries", fmt_count(router_entries as u64)),
     ]);
-    let engine = QueryEngine::new(index, &family, ServeMeasure::Cosine, params).workers(workers);
+    let engine =
+        QueryEngine::new(index, &family, ServeMeasure::Cosine, params.clone()).workers(workers);
 
     // Batched throughput.
     let qids: Vec<u32> = (0..BATCH_QUERIES as u32).map(|i| i * (N / BATCH_QUERIES) as u32).collect();
@@ -176,10 +181,59 @@ fn main() {
         format!("{}/s insert", fmt_count(insert_per_s as u64)),
     ]);
 
+    // Quantized tier: a second engine over the same graph with the SQ8
+    // first pass on (rescore c = 4·k), measured with the same protocol so
+    // the int8-vs-f32 pair reads off one file (§Quant table convention).
+    let (_, qindex) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&family)
+        .params(params.clone())
+        .build_indexed(
+            ServeConfig::default()
+                .route_reps(8)
+                .compact_limit(0)
+                .quantized(4),
+        );
+    let qstats = qindex.stats();
+    let qengine = QueryEngine::new(qindex, &family, ServeMeasure::Cosine, params).workers(workers);
+    let qbatch = time_runs(1, 5, || {
+        std::hint::black_box(qengine.query(&queries, K));
+    });
+    let q_qps = BATCH_QUERIES as f64 / qbatch.median();
+    table.row(vec![
+        format!("quantized batched queries (c={})", 4 * K),
+        fmt_count(BATCH_QUERIES as u64),
+        fmt_secs(qbatch.median()),
+        format!("{}/s", fmt_count(q_qps as u64)),
+    ]);
+    let mut qlats = Vec::with_capacity(LATENCY_QUERIES);
+    for qi in 0..LATENCY_QUERIES {
+        let one = queries.subset(&[(qi % BATCH_QUERIES) as u32]);
+        let (s, _) = time_once(|| qengine.query(&one, K));
+        qlats.push(s);
+    }
+    qlats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (q_p50, q_p99) = (percentile(&qlats, 0.50), percentile(&qlats, 0.99));
+    let q_got = qengine.query(&rqueries, K);
+    let q_recall = truth
+        .iter()
+        .zip(q_got.iter())
+        .map(|(t, g)| recall_against(t, g))
+        .sum::<f64>()
+        / RECALL_QUERIES as f64;
+    table.row(vec![
+        format!("quantized recall@{K} vs brute force"),
+        fmt_count(RECALL_QUERIES as u64),
+        format!("{q_recall:.4}"),
+        format!("{:.4} of f32", q_recall / recall.max(1e-12)),
+    ]);
+
     table.print();
 
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-serve/v3")),
+        // v4: added the `quantized` object (int8 first-pass tier measured
+        // next to its f32 twin from the same build recipe).
+        ("schema", Json::from("stars-bench-serve/v4")),
         ("bench", Json::from("servebench")),
         ("workers", Json::from(workers)),
         // Which SIMD lanes served every query in this file — p50/p99 are
@@ -209,6 +263,22 @@ fn main() {
         (
             "snapshot",
             engine.snapshot().stats().to_json(),
+        ),
+        (
+            "quantized",
+            Json::obj(vec![
+                ("rescore_c", Json::from(4 * K)),
+                ("batch_qps", Json::from(q_qps)),
+                ("latency_p50_ms", Json::from(q_p50 * 1e3)),
+                ("latency_p99_ms", Json::from(q_p99 * 1e3)),
+                ("recall_at_10", Json::from(q_recall)),
+                (
+                    "recall_ratio_vs_f32",
+                    Json::from(q_recall / recall.max(1e-12)),
+                ),
+                ("bytes_per_row", Json::from(qstats.bytes_per_row)),
+                ("quant_bytes", Json::from(qstats.quant_bytes)),
+            ]),
         ),
     ]);
     let path = bench_out_path();

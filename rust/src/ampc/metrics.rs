@@ -142,6 +142,19 @@ pub struct SnapshotStats {
     pub csr_bytes: usize,
     /// Cached sketch-state table bytes (hyperplanes, per-token tables).
     pub state_table_bytes: usize,
+    /// Whether the snapshot carries an SQ8 table for quantized first-pass
+    /// scoring (`ServeConfig::quantized`).
+    pub quantized: bool,
+    /// Exact-rescore width multiplier of the quantized path (`c = k ·
+    /// rescore_factor` survivors per query); 0 when not quantized.
+    pub rescore_factor: usize,
+    /// SQ8 table heap bytes (i8 codes + per-row scales); 0 when not
+    /// quantized.
+    pub quant_bytes: usize,
+    /// Bytes per row of the first-pass scoring storage: `dim + 4` (codes
+    /// + scale) when quantized, `4 · dim` (the dense f32 row) otherwise —
+    /// the ~4× row-storage reduction shows up here.
+    pub bytes_per_row: usize,
 }
 
 impl SnapshotStats {
@@ -155,6 +168,10 @@ impl SnapshotStats {
             ("router_bytes", Json::from(self.router_bytes)),
             ("csr_bytes", Json::from(self.csr_bytes)),
             ("state_table_bytes", Json::from(self.state_table_bytes)),
+            ("quantized", Json::from(self.quantized)),
+            ("rescore_factor", Json::from(self.rescore_factor)),
+            ("quant_bytes", Json::from(self.quant_bytes)),
+            ("bytes_per_row", Json::from(self.bytes_per_row)),
         ])
     }
 }

@@ -125,6 +125,15 @@ pub struct ServeOpts {
     /// [`crate::serve::ServeConfig::full_rebuild_every`]; the resulting
     /// full/incremental mix is reported in the compaction JSON.
     pub full_rebuild_every: usize,
+    /// Serve with the quantized first-pass tier
+    /// ([`crate::serve::ServeConfig::quantized`]): int8 estimates over the
+    /// candidate set, exact f32 rescore of the top `k · rescore_factor`.
+    /// The reported `recall_at_k` is still measured against exact brute
+    /// force, so this is where the quantized recall cost becomes visible.
+    pub quantized: bool,
+    /// Rescore width multiplier for the quantized path (ignored unless
+    /// `quantized`; clamped to ≥ 1).
+    pub rescore_factor: usize,
 }
 
 impl Default for ServeOpts {
@@ -135,6 +144,8 @@ impl Default for ServeOpts {
             inserts: 0,
             compaction: crate::serve::CompactionMode::default(),
             full_rebuild_every: 0,
+            quantized: false,
+            rescore_factor: 4,
         }
     }
 }
@@ -181,11 +192,14 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     // limit would fire mid-loop for inserts ≥ 1024, folding compaction
     // walls into insert_per_s and draining the delta before the reported
     // compact_report() call.
-    let cfg = ServeConfig::default()
+    let mut cfg = ServeConfig::default()
         .route_reps(job.params.sketches.clamp(1, 8))
         .compact_limit(0)
         .compaction(opts.compaction)
         .full_rebuild_every(opts.full_rebuild_every);
+    if opts.quantized {
+        cfg = cfg.quantized(opts.rescore_factor);
+    }
     let t = Instant::now();
     let (out, index) = StarsBuilder::new(&dataset)
         .similarity(measure.as_ref())
@@ -240,6 +254,15 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         ("p50_ms", Json::from(crate::bench::percentile(&lats, 0.50) * 1e3)),
         ("p99_ms", Json::from(crate::bench::percentile(&lats, 0.99) * 1e3)),
         ("recall_at_k", Json::from(recall)),
+        ("quantized", Json::from(opts.quantized)),
+        (
+            "rescore_c",
+            Json::from(if opts.quantized {
+                k * opts.rescore_factor.max(1)
+            } else {
+                0
+            }),
+        ),
     ];
     // Write path: stream inserts in and compact with the configured mode,
     // reporting the compaction's cost alongside the read-path numbers.
@@ -357,7 +380,7 @@ mod tests {
             k: 5,
             inserts: 30,
             compaction: crate::serve::CompactionMode::Incremental,
-            full_rebuild_every: 0,
+            ..ServeOpts::default()
         };
         let doc = run_serve_with(&job, &opts).unwrap();
         assert!(doc.get("insert_per_s").unwrap().as_f64().unwrap() > 0.0);
@@ -379,6 +402,52 @@ mod tests {
         assert!(snap.get("router_bytes").unwrap().as_usize().unwrap() > 0);
         assert!(snap.get("csr_bytes").unwrap().as_usize().unwrap() > 0);
         assert!(snap.get("state_table_bytes").unwrap().as_usize().unwrap() > 0);
+        // Default opts serve exact: the quantized telemetry says so.
+        assert!(!doc.get("quantized").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("rescore_c").unwrap().as_usize().unwrap(), 0);
+        assert!(!snap.get("quantized").unwrap().as_bool().unwrap());
+        assert_eq!(snap.get("bytes_per_row").unwrap().as_usize().unwrap(), 64);
+    }
+
+    #[test]
+    fn run_serve_quantized_reports_quant_telemetry() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 500,
+                dim: 16,
+                modes: 8,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                .sketches(6)
+                .threshold(0.4),
+            data_seed: 11,
+            workers: 2,
+        };
+        let opts = ServeOpts {
+            queries: 20,
+            k: 5,
+            inserts: 10,
+            quantized: true,
+            rescore_factor: 8,
+            ..ServeOpts::default()
+        };
+        let doc = run_serve_with(&job, &opts).unwrap();
+        assert!(doc.get("quantized").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("rescore_c").unwrap().as_usize().unwrap(), 40);
+        let recall = doc.get("recall_at_k").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&recall), "recall {recall}");
+        let snap = doc.get("snapshot").expect("snapshot telemetry missing");
+        assert!(snap.get("quantized").unwrap().as_bool().unwrap());
+        assert_eq!(snap.get("rescore_factor").unwrap().as_usize().unwrap(), 8);
+        // dim 16: 16 + 4 bytes per quantized row vs 64 dense — the ~4×
+        // first-pass storage reduction, via 510 compacted points.
+        assert_eq!(snap.get("bytes_per_row").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(
+            snap.get("quant_bytes").unwrap().as_usize().unwrap(),
+            510 * 20
+        );
     }
 
     #[test]

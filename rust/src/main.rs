@@ -50,12 +50,15 @@ USAGE:
   stars cluster  (build flags) [--classes K]
   stars serve    (build flags) [--queries N] [--k K] [--inserts N]
                  [--compact-mode incremental|full] [--full-rebuild-every N]
+                 [--quantized] [--rescore-c F]
                  build a graph, export a serving snapshot, and answer N
                  sampled top-k queries (reports QPS, p50/p99, recall@k);
                  with --inserts, also stream N points in and report the
                  compaction cost + snapshot memory telemetry;
                  --full-rebuild-every forces one full rebuild per N
-                 incremental compactions (drift bound; mix is reported)
+                 incremental compactions (drift bound; mix is reported);
+                 --quantized serves int8-first with an exact f32 rescore of
+                 the top k·F survivors (F = --rescore-c, default 4)
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
                  [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
   stars smoke    verify artifacts (PJRT runtime end-to-end)
@@ -173,6 +176,8 @@ fn serve(args: &mut Args) -> stars::Result<()> {
             other => anyhow::bail!("unknown compaction mode '{other}'"),
         },
         full_rebuild_every: args.get_parsed_or("full-rebuild-every", 0usize),
+        quantized: args.flag("quantized"),
+        rescore_factor: args.get_parsed_or("rescore-c", 4usize),
     };
     let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());

@@ -14,6 +14,8 @@ use super::ArtifactMeta;
 use crate::data::types::Dataset;
 use crate::sim::{cosine, jaccard};
 use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Knuth multiplicative hash of a co-purchase token into `buckets`.
@@ -36,20 +38,39 @@ pub struct LearnedMeta {
     pub pair_feats: usize,
 }
 
+/// Recycle the PJRT client/executable after this many dispatches.
+///
+/// xla_extension 0.5.1's CPU client retains a small allocation per
+/// dispatch, so jobs issuing hundreds of thousands of dispatches (R=400
+/// learned builds) grow RSS without bound. Rebuilding the client from the
+/// stored HLO artifact releases everything the old client accumulated;
+/// at ~50k dispatches the amortized rebuild cost is noise (one compile
+/// per tens of seconds of dispatch work). See the EXPERIMENTS.md
+/// known-issue note.
+pub const RECYCLE_EVERY: u64 = 50_000;
+
 /// PJRT-backed learned similarity model.
 pub struct LearnedModel {
     exe: Mutex<Executable>,
+    /// HLO artifact path, kept so the executable can be recompiled on a
+    /// fresh client when the recycle threshold trips.
+    hlo_path: PathBuf,
     /// Artifact shapes.
     pub meta: LearnedMeta,
     /// Holdout AUC recorded by the python training run (from meta.json).
     pub auc: f64,
-    dispatches: std::sync::atomic::AtomicU64,
+    dispatches: AtomicU64,
+    /// Dispatches since the last client recycle.
+    since_recycle: AtomicU64,
+    /// Completed client recycles.
+    engine_recycles: AtomicU64,
 }
 
 impl LearnedModel {
     /// Load from artifacts.
     pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<LearnedModel> {
-        let exe = engine.load_hlo_text(&meta.file("learned_sim")?)?;
+        let hlo_path = meta.file("learned_sim")?;
+        let exe = engine.load_hlo_text(&hlo_path)?;
         let auc = meta
             .raw
             .get("learned_sim")
@@ -58,6 +79,7 @@ impl LearnedModel {
             .unwrap_or(f64::NAN);
         Ok(LearnedModel {
             exe: Mutex::new(exe),
+            hlo_path,
             meta: LearnedMeta {
                 batch: meta.usize_field("learned_sim", "batch")?,
                 dim: meta.usize_field("learned_sim", "dim")?,
@@ -66,21 +88,45 @@ impl LearnedModel {
             },
             auc,
             dispatches: Default::default(),
+            since_recycle: Default::default(),
+            engine_recycles: Default::default(),
         })
     }
 
     /// PJRT dispatch count (perf accounting).
     pub fn dispatches(&self) -> u64 {
-        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// How many times the PJRT client has been recycled (perf accounting;
+    /// one recycle per [`RECYCLE_EVERY`] dispatches).
+    pub fn engine_recycles(&self) -> u64 {
+        self.engine_recycles.load(Ordering::Relaxed)
+    }
+
+    /// Recompile the executable on a fresh CPU client when enough
+    /// dispatches have accumulated, releasing everything the old client
+    /// retained. Must be called with the `exe` lock held (the swap and all
+    /// PJRT interaction share that lock — see the `Send`/`Sync` note in
+    /// runtime::engine). A failed rebuild keeps serving on the old client:
+    /// the leak workaround must never turn a working model into an error.
+    fn maybe_recycle(&self, exe: &mut Executable) {
+        if self.since_recycle.fetch_add(1, Ordering::Relaxed) + 1 < RECYCLE_EVERY {
+            return;
+        }
+        if let Ok(fresh) = Engine::cpu().and_then(|e| e.load_hlo_text(&self.hlo_path)) {
+            *exe = fresh;
+            self.engine_recycles.fetch_add(1, Ordering::Relaxed);
+        }
+        self.since_recycle.store(0, Ordering::Relaxed);
     }
 
     /// Score arbitrary pairs of dataset points. Pads the final batch.
     ///
-    /// TODO(perf/mem): xla_extension 0.5.1's CPU client retains some
-    /// allocation per dispatch; jobs issuing hundreds of thousands of
-    /// dispatches (R=400 learned builds) grow RSS. Workaround until the
-    /// runtime is upgraded: recycle the Engine/model every ~50k dispatches
-    /// (see EXPERIMENTS.md known-issue note).
+    /// The PJRT client is recycled every [`RECYCLE_EVERY`] dispatches to
+    /// cap the per-dispatch RSS growth of xla_extension 0.5.1's CPU
+    /// client (builds without the `pjrt` feature never construct a model,
+    /// so the recycle path is compiled but unreachable there).
     pub fn score(&self, ds: &Dataset, pairs: &[(u32, u32)]) -> Result<Vec<f32>> {
         let m = self.meta;
         anyhow::ensure!(
@@ -123,9 +169,11 @@ impl LearnedModel {
                 literal_f32(&hb, &[m.batch as i64, m.hash_buckets as i64])?,
                 literal_f32(&pf, &[m.batch as i64, m.pair_feats as i64])?,
             ];
-            self.dispatches
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let scores = self.exe.lock().unwrap().run_f32(&inputs)?;
+            self.dispatches.fetch_add(1, Ordering::Relaxed);
+            let mut exe = self.exe.lock().unwrap();
+            self.maybe_recycle(&mut exe);
+            let scores = exe.run_f32(&inputs)?;
+            drop(exe);
             out.extend_from_slice(&scores[..chunk.len()]);
         }
         Ok(out)

@@ -6,12 +6,23 @@
 //! the buffered points into a fresh [`super::StarIndex`] snapshot and trims
 //! the absorbed prefix; global point ids are stable across the swap because
 //! compaction appends the prefix in insertion order.
+//!
+//! Dense buffers also keep a [`QuantDataset`] in lockstep (quantize on
+//! insert, O(d) per point): when the engine serves in quantized mode the
+//! delta tile joins the int8 first pass instead of being brute-forced in
+//! f32. The table is maintained unconditionally for dense templates —
+//! per-row SQ8 is cheap, and the engine's quantized flag can differ from
+//! snapshot to snapshot while the buffer outlives the swap.
 
 use crate::data::types::{Dataset, WeightedSet};
+use crate::sim::QuantDataset;
 
 /// Buffer of points inserted since the last snapshot.
 pub struct DeltaBuffer {
     ds: Dataset,
+    /// SQ8 codes of the buffered dense rows, row-for-row with `ds`
+    /// (`None` for set-only templates).
+    quant: Option<QuantDataset>,
     /// Global id of the buffer's first point (= current snapshot size).
     base: usize,
     /// Whether inserts must carry a token set — fixed by the snapshot's
@@ -30,9 +41,11 @@ impl DeltaBuffer {
         } else {
             Dataset::from_sets("delta", Vec::new(), vec![])
         };
+        let quant = (template.dim() > 0).then(|| QuantDataset::empty(template.dim()));
         let wants_sets = template.dim() == 0 || !template.sets.is_empty();
         DeltaBuffer {
             ds,
+            quant,
             base,
             wants_sets,
         }
@@ -58,6 +71,13 @@ impl DeltaBuffer {
         &self.ds
     }
 
+    /// SQ8 codes of the buffered dense rows, row-for-row with
+    /// [`Self::dataset`] (`None` for set-only buffers) — the quantized
+    /// engine's first-pass tile over the delta.
+    pub fn quant(&self) -> Option<&QuantDataset> {
+        self.quant.as_ref()
+    }
+
     /// Append a point (dense row and/or token set, matching the snapshot's
     /// feature kinds); returns its global id.
     ///
@@ -79,6 +99,9 @@ impl DeltaBuffer {
             "insert feature kinds must match the indexed dataset"
         );
         let local = self.ds.push_point(row, set);
+        if let Some(q) = self.quant.as_mut() {
+            q.push_row(row.expect("dense template requires a row"));
+        }
         (self.base + local as usize) as u32
     }
 
@@ -90,6 +113,12 @@ impl DeltaBuffer {
         debug_assert!(prefix <= self.ds.len());
         let tail: Vec<u32> = (prefix as u32..self.ds.len() as u32).collect();
         self.ds = self.ds.subset(&tail);
+        // Requantizing the surviving tail is O(|tail| · d) — bounded by
+        // `compact_limit`, and per-row SQ8 reproduces the original codes
+        // exactly (no cross-row state).
+        if self.quant.is_some() {
+            self.quant = Some(QuantDataset::from_dataset(&self.ds));
+        }
         self.base += prefix;
     }
 }
@@ -142,6 +171,26 @@ mod tests {
         );
         let mut d = DeltaBuffer::new(&template, 1);
         d.insert(Some(&[0.0, 1.0]), None);
+    }
+
+    #[test]
+    fn dense_buffers_keep_quant_codes_in_lockstep() {
+        let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 10);
+        assert_eq!(d.quant().unwrap().len(), 0);
+        d.insert(Some(&[3.0, -4.0]), None);
+        d.insert(Some(&[0.5, 0.5]), None);
+        let q = d.quant().unwrap();
+        assert_eq!(q.len(), 2);
+        // max|x| = 4 → scale 4/127: 3.0 → round(95.25) = 95, -4.0 → -127.
+        assert_eq!(q.codes(0), &[95, -127]);
+        // Absorbing a prefix requantizes the surviving tail identically.
+        d.absorb_prefix(1);
+        assert_eq!(d.quant().unwrap().len(), 1);
+        assert_eq!(d.quant().unwrap().codes(0), &[127, 127]);
+        // Set-only buffers carry no quant table.
+        let sets = Dataset::from_sets("t", vec![WeightedSet::from_tokens(vec![1])], vec![]);
+        assert!(DeltaBuffer::new(&sets, 1).quant().is_none());
     }
 
     #[test]

@@ -8,6 +8,20 @@
 //! in query order, so the returned top-k lists are **bit-identical for any
 //! worker count** — the read-side mirror of the builder's determinism
 //! contract.
+//!
+//! When the snapshot carries an SQ8 table (`ServeConfig::quantized`) and
+//! the measure is dense (cosine/dot), scoring runs in **two passes**: an
+//! int8 estimate of every candidate (snapshot *and* delta — both tables
+//! are maintained), a top-`k · rescore_factor` cut, then an exact f32
+//! rescore of the survivors through the same tiled kernels as the exact
+//! path. Survivor scores — and hence the ranking among them — are
+//! bit-identical to the exact path's scores for the same ids; only the
+//! *membership* of the survivor set is approximate, which is why the
+//! quantized path is recall-gated rather than bit-identity-gated
+//! (ARCHITECTURE.md "Quantized scoring tier"). The first pass itself is
+//! deterministic across worker counts and SIMD backends: the int8 dot is
+//! an associative integer sum, and the estimate applies two f32 multiplies
+//! in a fixed order.
 
 use super::delta::DeltaBuffer;
 use super::index::StarIndex;
@@ -17,6 +31,7 @@ use crate::data::types::{Dataset, WeightedSet};
 use crate::graph::two_hop::{two_hop_into, VisitScratch};
 use crate::graph::{Csr, Edge};
 use crate::lsh::{sketch, LshFamily};
+use crate::sim::quant::{self, QuantDataset};
 use crate::sim::{
     BatchScratch, CosineSim, DotSim, JaccardSim, MixtureSim, Similarity, WeightedJaccardSim,
 };
@@ -24,6 +39,7 @@ use crate::stars::{Accumulator, BuildParams, StarsBuilder};
 use crate::util::fxhash::FxHashMap;
 use crate::util::json::Json;
 use crate::util::pool;
+use crate::util::simd;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -59,6 +75,13 @@ impl ServeMeasure {
             ServeMeasure::WeightedJaccard => "weighted-jaccard",
             ServeMeasure::Mixture { .. } => "mixture",
         }
+    }
+
+    /// Whether the quantized first pass can estimate this measure: dense
+    /// row measures only. Set and mixture measures ignore
+    /// `ServeConfig::quantized` and stay on the exact single-pass path.
+    pub fn supports_quant(&self) -> bool {
+        matches!(self, ServeMeasure::Cosine | ServeMeasure::Dot)
     }
 
     /// The build-side [`Similarity`] equivalent (compaction rebuilds).
@@ -114,6 +137,10 @@ struct QueryScratch {
     cands: Vec<u32>,
     scores: Vec<f32>,
     batch: BatchScratch,
+    /// SQ8 codes of the current query row (quantized first pass).
+    qcodes: Vec<i8>,
+    /// Delta-local ids of rescore survivors (quantized second pass).
+    delta_cands: Vec<u32>,
 }
 
 thread_local! {
@@ -210,6 +237,7 @@ impl TopNeighbors {
 fn answer_one(
     snap: &StarIndex<'_>,
     delta: &Dataset,
+    delta_quant: Option<&QuantDataset>,
     delta_base: usize,
     keys: &[u64],
     nq: usize,
@@ -241,6 +269,74 @@ fn answer_one(
             if cfg.max_candidates > 0 && s.cands.len() >= cfg.max_candidates {
                 break 'route;
             }
+        }
+    }
+    // Quantized two-pass path: int8 estimates over the whole candidate set
+    // (snapshot and delta), then an exact rescore of the top survivors.
+    if k > 0
+        && cfg.quantized
+        && measure.supports_quant()
+        && (delta.is_empty() || delta_quant.is_some())
+    {
+        if let Some(sq) = snap.quant() {
+            let backend = simd::active();
+            s.qcodes.resize(queries.dim(), 0);
+            let qscale = quant::quantize_row(queries.row(qi), &mut s.qcodes);
+            let qnorm = queries.norm(qi);
+            // First pass: keep c = k · rescore_factor estimated-best ids
+            // under the same (score desc, id asc) order as the exact path.
+            let c = k.saturating_mul(cfg.rescore_factor.max(1));
+            let mut first = TopNeighbors::new(c);
+            sq.dot_estimates_with(backend, &s.qcodes, qscale, &s.cands, &mut s.scores);
+            for (&cand, &est) in s.cands.iter().zip(s.scores.iter()) {
+                let score = match measure {
+                    ServeMeasure::Cosine => {
+                        quant::cosine_estimate(est, qnorm * snap.dataset().norm(cand as usize))
+                    }
+                    _ => est,
+                };
+                first.push(score, cand);
+            }
+            if !delta.is_empty() {
+                let dq = delta_quant.expect("checked above");
+                s.cands.clear();
+                s.cands.extend(0..delta.len() as u32);
+                dq.dot_estimates_with(backend, &s.qcodes, qscale, &s.cands, &mut s.scores);
+                for (di, &est) in s.scores.iter().enumerate() {
+                    let score = match measure {
+                        ServeMeasure::Cosine => {
+                            quant::cosine_estimate(est, qnorm * delta.norm(di))
+                        }
+                        _ => est,
+                    };
+                    first.push(score, (delta_base + di) as u32);
+                }
+            }
+            // Second pass: exact f32 rescore of the survivors through the
+            // same tiled kernels as the exact path — survivor scores are
+            // bit-identical to what the exact path would assign, so the
+            // final top-k ranking among survivors is exact.
+            s.cands.clear();
+            s.delta_cands.clear();
+            for (gid, _) in first.into_sorted() {
+                if (gid as usize) < delta_base {
+                    s.cands.push(gid);
+                } else {
+                    s.delta_cands.push(gid - delta_base as u32);
+                }
+            }
+            let mut top = TopNeighbors::new(k);
+            measure.score(queries, qi, snap.dataset(), &s.cands, &mut s.batch, &mut s.scores);
+            for (&cand, &w) in s.cands.iter().zip(s.scores.iter()) {
+                top.push(w, cand);
+            }
+            if !s.delta_cands.is_empty() {
+                measure.score(queries, qi, delta, &s.delta_cands, &mut s.batch, &mut s.scores);
+                for (&dc, &w) in s.delta_cands.iter().zip(s.scores.iter()) {
+                    top.push(w, (delta_base + dc as usize) as u32);
+                }
+            }
+            return top.into_sorted();
         }
     }
     // Score the snapshot candidates through the tiled kernels.
@@ -445,11 +541,12 @@ impl<'f> QueryEngine<'f> {
         // under the delta lock, which compaction also holds while swapping
         // — a batch sees either (old snapshot, full delta) or (new
         // snapshot, trimmed delta), never a point twice or not at all.
-        let (snap, delta, delta_base) = {
+        let (snap, delta, delta_quant, delta_base) = {
             let d = self.delta.lock().unwrap();
             (
                 self.snapshot.read().unwrap().clone(),
                 d.dataset().clone(),
+                d.quant().cloned(),
                 d.base(),
             )
         };
@@ -461,7 +558,19 @@ impl<'f> QueryEngine<'f> {
         pool::parallel_map(nq, self.workers, |qi| {
             QSCRATCH.with(|cell| {
                 let s = &mut *cell.borrow_mut();
-                answer_one(&snap, &delta, delta_base, &keys, nq, qi, queries, measure, k, s)
+                answer_one(
+                    &snap,
+                    &delta,
+                    delta_quant.as_ref(),
+                    delta_base,
+                    &keys,
+                    nq,
+                    qi,
+                    queries,
+                    measure,
+                    k,
+                    s,
+                )
             })
         })
     }
@@ -733,15 +842,20 @@ impl<'f> QueryEngine<'f> {
         let graph = acc.finalize();
 
         // 5. Extend the routing tables with the delta keys and assemble
-        //    the next snapshot; sketch states carry over untouched.
+        //    the next snapshot; sketch states carry over untouched. A
+        //    quantized snapshot extends its SQ8 table over just the delta
+        //    range — per-row codes are position-independent, so the result
+        //    is identical to quantizing the merged dataset from scratch.
         let router = snap
             .router()
             .extended(&delta_keys, n_old as u32, cfg.route_leaders);
+        let quant = snap.quant().map(|q| Arc::new(q.extended(&merged, n_old)));
         let next = StarIndex::from_parts(
             merged,
             Csr::new(&graph),
             snap.states().to_vec(),
             router,
+            quant,
             cfg,
         );
         let report = CompactionReport {
@@ -928,5 +1042,99 @@ mod tests {
         let res = engine.query(&queries, 0);
         assert_eq!(res.len(), 1);
         assert!(res[0].is_empty());
+    }
+
+    #[test]
+    fn quantized_with_wide_rescore_matches_exact_engine() {
+        // With rescore_factor large enough that every candidate survives
+        // the first pass, the quantized path degenerates to "exact rescore
+        // of everything" — results must be *bitwise* identical to the
+        // exact engine, survivors and scores alike.
+        let h = SimHash::new(16, 8, 3);
+        let ds = synth::gaussian_mixture(800, 16, 8, 0.08, 47);
+        let params = BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(8)
+            .threshold(0.4);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params.clone())
+            .workers(2)
+            .build();
+        let cfg = ServeConfig::default().route_reps(8).compact_limit(0);
+        let exact = QueryEngine::new(
+            StarIndex::build(ds.clone(), &h, &out.graph, cfg.clone()),
+            &h,
+            ServeMeasure::Cosine,
+            params.clone(),
+        )
+        .workers(2);
+        let quant = QueryEngine::new(
+            StarIndex::build(ds.clone(), &h, &out.graph, cfg.quantized(10_000)),
+            &h,
+            ServeMeasure::Cosine,
+            params,
+        )
+        .workers(2);
+        assert!(quant.snapshot().quant().is_some());
+        assert!(exact.snapshot().quant().is_none());
+        let queries = ds.subset(&[5, 123, 700]);
+        let want = exact.query(&queries, 5);
+        let got = quant.query(&queries, 5);
+        for (w, g) in want.iter().zip(got.iter()) {
+            assert_eq!(w.len(), g.len());
+            for (&(wid, ws), &(gid, gs)) in w.iter().zip(g.iter()) {
+                assert_eq!(wid, gid, "survivor sets diverged");
+                assert_eq!(ws.to_bits(), gs.to_bits(), "rescore not exact");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_engine_serves_delta_and_survives_compaction() {
+        let h = SimHash::new(16, 8, 3);
+        let ds = synth::gaussian_mixture(800, 16, 8, 0.08, 47);
+        let params = BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(8)
+            .threshold(0.4);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params.clone())
+            .workers(2)
+            .build();
+        let cfg = ServeConfig::default()
+            .route_reps(8)
+            .compact_limit(0)
+            .quantized(8);
+        let index = StarIndex::build(ds, &h, &out.graph, cfg);
+        let engine = QueryEngine::new(index, &h, ServeMeasure::Cosine, params).workers(2);
+        let snap = engine.snapshot();
+        let n = snap.len();
+        // A buffered duplicate of point 7 joins the int8 first pass via the
+        // delta's lockstep quant table and must surface next to point 7
+        // (identical rows tie at 1.0; ids ascending puts 7 first).
+        engine.insert(Some(snap.dataset().row(7)), None);
+        let res = engine.query(&snap.dataset().subset(&[7]), 5);
+        assert_eq!(res[0][0].0, 7);
+        assert!(
+            res[0].iter().any(|&(id, _)| id == n as u32),
+            "buffered duplicate missed the quantized first pass: {:?}",
+            res[0]
+        );
+        // Incremental compaction extends the SQ8 table over the delta range
+        // and reports the quantized telemetry.
+        let rep = engine.compact_report().expect("delta pending");
+        assert_eq!(rep.mode, CompactionMode::Incremental);
+        assert_eq!(rep.snapshot.points, n + 1);
+        assert!(rep.snapshot.quantized);
+        assert_eq!(rep.snapshot.rescore_factor, 8);
+        assert_eq!(rep.snapshot.bytes_per_row, 16 + 4);
+        let next = engine.snapshot();
+        assert_eq!(next.quant().expect("quant table dropped").len(), n + 1);
+        // Still answerable after the swap.
+        let res = engine.query(&next.dataset().subset(&[7]), 5);
+        assert_eq!(res[0][0].0, 7);
+        assert!(res[0].iter().any(|&(id, _)| id == n as u32));
     }
 }

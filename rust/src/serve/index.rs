@@ -14,6 +14,7 @@ use crate::ampc::SnapshotStats;
 use crate::data::types::Dataset;
 use crate::graph::{Csr, Graph};
 use crate::lsh::{LshFamily, SketchState};
+use crate::sim::QuantDataset;
 use crate::util::pool;
 use std::sync::Arc;
 
@@ -37,6 +38,11 @@ pub struct StarIndex<'f> {
     csr: Csr,
     states: Vec<Arc<dyn SketchState + 'f>>,
     router: Router,
+    /// SQ8 codes of the dense rows for quantized first-pass scoring —
+    /// built when `cfg.quantized` and the dataset is dense, shared with
+    /// the next epoch by incremental compaction via `Arc` (the extension
+    /// clones, but compaction already owns the merge).
+    quant: Option<Arc<QuantDataset>>,
     cfg: ServeConfig,
 }
 
@@ -113,11 +119,14 @@ impl<'f> StarIndex<'f> {
             keys_per_rep.push(keys);
         }
         let router = Router::build(&keys_per_rep, cfg.route_leaders, cfg.seed);
+        let quant =
+            (cfg.quantized && ds.dim() > 0).then(|| Arc::new(QuantDataset::from_dataset(&ds)));
         StarIndex {
             csr: Csr::new(graph),
             ds,
             states,
             router,
+            quant,
             cfg,
         }
     }
@@ -131,15 +140,20 @@ impl<'f> StarIndex<'f> {
         csr: Csr,
         states: Vec<Arc<dyn SketchState + 'f>>,
         router: Router,
+        quant: Option<Arc<QuantDataset>>,
         cfg: ServeConfig,
     ) -> StarIndex<'f> {
         assert_eq!(csr.num_nodes(), ds.len(), "CSR node count != dataset size");
         assert_eq!(states.len(), router.reps(), "state count != router reps");
+        if let Some(q) = &quant {
+            assert_eq!(q.len(), ds.len(), "quant row count != dataset size");
+        }
         StarIndex {
             ds,
             csr,
             states,
             router,
+            quant,
             cfg,
         }
     }
@@ -180,6 +194,13 @@ impl<'f> StarIndex<'f> {
         &self.states
     }
 
+    /// The SQ8 side table for quantized first-pass scoring (`None` unless
+    /// the snapshot was built with [`ServeConfig::quantized`] over a dense
+    /// dataset).
+    pub fn quant(&self) -> Option<&Arc<QuantDataset>> {
+        self.quant.as_ref()
+    }
+
     /// Size/memory telemetry of this snapshot (router tables, CSR arrays,
     /// cached sketch-state tables) for capacity planning — attached to
     /// build reports by `StarsBuilder::build_indexed` and to every
@@ -193,6 +214,20 @@ impl<'f> StarIndex<'f> {
             router_bytes: self.router.heap_bytes(),
             csr_bytes: self.csr.heap_bytes(),
             state_table_bytes: self.states.iter().map(|s| s.table_bytes()).sum(),
+            quantized: self.quant.is_some(),
+            rescore_factor: if self.quant.is_some() {
+                self.cfg.rescore_factor.max(1)
+            } else {
+                0
+            },
+            quant_bytes: self.quant.as_ref().map_or(0, |q| q.heap_bytes()),
+            // Bytes each row occupies in the *first-pass scoring* storage:
+            // SQ8 codes + scale when quantized, the dense f32 row
+            // otherwise — the ~4× reduction the quantized tier buys.
+            bytes_per_row: match &self.quant {
+                Some(q) => q.bytes_per_row(),
+                None => self.ds.dim() * std::mem::size_of::<f32>(),
+            },
         }
     }
 
@@ -312,6 +347,40 @@ mod tests {
         assert!(sa.csr_bytes > 0);
         // SimHash states cache 4 reps × 8 planes × 16 dims of f32.
         assert_eq!(sa.state_table_bytes, 4 * 8 * 16 * 4);
+    }
+
+    #[test]
+    fn quantized_build_carries_the_sq8_table() {
+        let h = SimHash::new(16, 8, 5);
+        let ds = synth::gaussian_mixture(600, 16, 6, 0.08, 31);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(
+                BuildParams::threshold_mode(Algorithm::LshStars)
+                    .sketches(6)
+                    .threshold(0.4),
+            )
+            .workers(2)
+            .build();
+        let cfg = ServeConfig::default().route_reps(4).quantized(4);
+        let index = StarIndex::build(ds, &h, &out.graph, cfg);
+        let q = index.quant().expect("dense quantized snapshot has a table");
+        assert_eq!(q.len(), 600);
+        let s = index.stats();
+        assert!(s.quantized);
+        assert_eq!(s.rescore_factor, 4);
+        // 16 i8 codes + one f32 scale vs 16 f32 — the ~4× row reduction.
+        assert_eq!(s.bytes_per_row, 16 + 4);
+        assert_eq!(s.quant_bytes, 600 * (16 + 4));
+        // A plain snapshot reports dense row bytes and no table.
+        let plain = small_index(&h);
+        assert!(plain.quant().is_none());
+        let sp = plain.stats();
+        assert!(!sp.quantized);
+        assert_eq!(sp.rescore_factor, 0);
+        assert_eq!(sp.quant_bytes, 0);
+        assert_eq!(sp.bytes_per_row, 16 * 4);
     }
 
     #[test]

@@ -47,6 +47,19 @@
 //! `Full` per N compactions, and [`executor::CompactionReport`] reports the
 //! running full/incremental mix.
 //!
+//! **Quantized scoring tier** ([`ServeConfig::quantized`]): dense-measure
+//! snapshots can carry an SQ8 side table ([`crate::sim::QuantDataset`],
+//! `d + 4` bytes per row instead of `4·d`) and score the two-hop candidate
+//! set in two passes — an int8 estimate over every candidate, then an
+//! exact f32 rescore of the top `k · rescore_factor` survivors with the
+//! same tiled kernels as the exact path, so the final ranking *among
+//! survivors* is exact. This is the repo's first documented parity
+//! relaxation: quantized results are gated on recall against the f32 path
+//! (≥ 0.98 · recall@10 on the test recipes), not bit-identity — but the
+//! quantized path is itself deterministic across worker counts and SIMD
+//! backends (integer first pass; see ARCHITECTURE.md "Quantized scoring
+//! tier").
+//!
 //! **Determinism contract:** like the builder, [`QueryEngine::query`]
 //! results are bit-identical for every worker count (per-query work is
 //! independent and results are assembled in query order; ties break by
@@ -121,6 +134,15 @@ pub struct ServeConfig {
     /// bounds that drift. The full/incremental mix is reported in
     /// [`executor::CompactionReport`].
     pub full_rebuild_every: usize,
+    /// Quantized first-pass scoring: build an SQ8 table into the snapshot
+    /// and score candidates int8-first, exact-f32-rescoring the top
+    /// `k · rescore_factor` (dense cosine/dot measures only; set and
+    /// mixture measures ignore the flag and stay exact).
+    pub quantized: bool,
+    /// Rescore width multiplier for the quantized path: the first pass
+    /// keeps `k · rescore_factor` survivors for the exact rescore.
+    /// Larger = closer to f32 recall, smaller = cheaper. Clamped to ≥ 1.
+    pub rescore_factor: usize,
     /// Seed for the router's deterministic entry sampling.
     pub seed: u64,
 }
@@ -136,6 +158,8 @@ impl Default for ServeConfig {
             compact_limit: 1024,
             compaction: CompactionMode::default(),
             full_rebuild_every: 0,
+            quantized: false,
+            rescore_factor: 4,
             seed: 0x5EA7,
         }
     }
@@ -191,6 +215,14 @@ impl ServeConfig {
         self
     }
 
+    /// Enable quantized first-pass scoring with an exact f32 rescore of
+    /// the top `k · rescore_factor` survivors (clamped to ≥ 1).
+    pub fn quantized(mut self, rescore_factor: usize) -> Self {
+        self.quantized = true;
+        self.rescore_factor = rescore_factor.max(1);
+        self
+    }
+
     /// Set the router sampling seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
@@ -226,6 +258,7 @@ mod tests {
             .compact_limit(5)
             .compaction(CompactionMode::Full)
             .full_rebuild_every(3)
+            .quantized(0)
             .seed(1);
         assert_eq!(c.route_reps, 1);
         assert_eq!(c.route_leaders, 1);
@@ -234,8 +267,12 @@ mod tests {
         assert_eq!(c.compact_limit, 5);
         assert_eq!(c.compaction, CompactionMode::Full);
         assert_eq!(c.full_rebuild_every, 3);
+        assert!(c.quantized);
+        assert_eq!(c.rescore_factor, 1, "rescore factor clamps to >= 1");
         assert_eq!(ServeConfig::default().full_rebuild_every, 0);
         assert_eq!(ServeConfig::default().compaction, CompactionMode::Incremental);
+        assert!(!ServeConfig::default().quantized);
+        assert_eq!(ServeConfig::default().rescore_factor, 4);
         assert_eq!(CompactionMode::Full.name(), "full");
         assert_eq!(CompactionMode::Incremental.name(), "incremental");
     }

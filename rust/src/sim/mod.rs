@@ -16,9 +16,11 @@
 pub mod batch;
 mod measure;
 mod learned;
+pub mod quant;
 
 pub use batch::BatchScratch;
 pub use learned::LearnedSim;
+pub use quant::QuantDataset;
 pub use measure::{
     cosine, dot, jaccard, l2_norm, weighted_jaccard, CosineSim, CountingSim, DotSim, JaccardSim,
     MixtureSim, Similarity, WeightedJaccardSim,

@@ -1,0 +1,310 @@
+//! Symmetric per-row SQ8 quantization for the quantized first-pass
+//! scoring tier (ROADMAP "Quantized scoring path (int8/SQ8) with exact
+//! rescore").
+//!
+//! Each dense f32 row is stored as `d` i8 codes plus one f32 scale —
+//! `d + 4` bytes instead of `4·d`, a ~4× row-storage reduction — and the
+//! dot of two quantized rows runs on the int8 kernels of
+//! [`crate::util::simd`], which process 4× the lanes per instruction of
+//! the f32 tiles.
+//!
+//! **Quantizer.** Per row, symmetric around zero (the zero-point is
+//! always 0, so no cross-term correction is needed in the dot):
+//! `scale = max|x| / 127`, `code[k] = round(x[k] / scale)` clamped to
+//! `[-127, 127]`. `-128` is deliberately excluded — the AVX2 `maddubs`
+//! idiom in `util::simd` needs `|code| ≤ 127` to rule out i16 saturation.
+//! The estimate of `a·b` is then `scale_a · scale_b · Σ qa[k]·qb[k]`,
+//! with the integer sum exact (i32) and only the two scale multiplies in
+//! float. Rounding error per element is at most `scale / 2`, so the
+//! round-trip bound `|x − deq(q(x))| ≤ max|x| / 254` holds per row
+//! (asserted in `tests/quant_parity.rs`).
+//!
+//! **Determinism.** Quantization (round-half-away-from-zero), the integer
+//! dot (associative, backend-independent — see `util::simd`), and the
+//! two-multiply estimate are all deterministic, so the quantized first
+//! pass is worker-count- and instruction-set-invariant even though its
+//! *scores* are approximations. The parity relaxation lives one level up:
+//! the quantized serve path is gated on recall against the f32 path, not
+//! bit-identity with it (ARCHITECTURE.md "Quantized scoring tier").
+
+use crate::data::types::Dataset;
+use crate::util::simd::{self, SimdBackend};
+
+use super::measure::cosine_from_parts;
+
+/// Largest code magnitude the quantizer emits (`[-127, 127]`; never -128).
+pub const QMAX: f32 = 127.0;
+
+/// Quantize one dense row into `out` (same length), returning the scale.
+///
+/// An all-zero (or non-finite-max) row quantizes to zero codes with scale
+/// 0 — estimates against it are exactly 0, matching the f32 dot.
+pub fn quantize_row(row: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), out.len());
+    let mut max_abs = 0f32;
+    for &x in row {
+        max_abs = max_abs.max(x.abs());
+    }
+    if max_abs <= 0.0 || !max_abs.is_finite() {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = QMAX / max_abs;
+    for (o, &x) in out.iter_mut().zip(row) {
+        *o = (x * inv).round().clamp(-QMAX, QMAX) as i8;
+    }
+    max_abs / QMAX
+}
+
+/// Reconstruct a row from its codes and scale (tests and diagnostics).
+pub fn dequantize_into(codes: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32 * scale;
+    }
+}
+
+/// Map a raw dot estimate to a cosine estimate with the same zero-guard
+/// and `[-1, 1]` clamp as the exact scoring path.
+#[inline]
+pub fn cosine_estimate(dot_est: f32, norm_prod: f32) -> f32 {
+    cosine_from_parts(dot_est, norm_prod)
+}
+
+/// Packed SQ8 codes for a dense dataset: row-major `n × dim` i8 codes
+/// plus one f32 scale per row. Built once at `StarIndex` build/compaction
+/// time (and incrementally on `DeltaBuffer` inserts); immutable snapshots
+/// share it behind an `Arc`.
+#[derive(Clone, Debug, Default)]
+pub struct QuantDataset {
+    dim: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantDataset {
+    /// An empty table for `dim`-dimensional rows.
+    pub fn empty(dim: usize) -> QuantDataset {
+        QuantDataset {
+            dim,
+            codes: Vec::new(),
+            scales: Vec::new(),
+        }
+    }
+
+    /// Quantize every dense row of `ds`.
+    pub fn from_dataset(ds: &Dataset) -> QuantDataset {
+        let mut q = QuantDataset::empty(ds.dim());
+        q.extend_from(ds, 0);
+        q
+    }
+
+    /// Append rows `from..ds.len()` of `ds` — the O(delta) path used by
+    /// incremental compaction ([`Self::extended`]) and by rebuilding a
+    /// delta-buffer table after a prefix absorb.
+    pub fn extend_from(&mut self, ds: &Dataset, from: usize) {
+        assert_eq!(self.dim, ds.dim(), "quant/dataset dim mismatch");
+        assert!(from <= ds.len() && from >= self.len());
+        // Rows already quantized past `from` are identical (per-row
+        // quantization has no cross-row state), so skip to our own end.
+        let start = self.len().max(from);
+        for i in start..ds.len() {
+            self.push_row(ds.row(i));
+        }
+    }
+
+    /// Clone-and-append: this table extended with rows `from..ds.len()` of
+    /// `ds`. Incremental compaction shares no codes with the old snapshot
+    /// only here — the copy is `n·d` bytes, 4× smaller than copying f32.
+    pub fn extended(&self, ds: &Dataset, from: usize) -> QuantDataset {
+        let mut q = self.clone();
+        q.extend_from(ds, from);
+        q
+    }
+
+    /// Quantize and append one row.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim, "quant row dim mismatch");
+        let at = self.codes.len();
+        self.codes.resize(at + self.dim, 0);
+        let scale = quantize_row(row, &mut self.codes[at..]);
+        self.scales.push(scale);
+    }
+
+    /// Number of quantized rows.
+    pub fn len(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Whether no rows are stored.
+    pub fn is_empty(&self) -> bool {
+        self.scales.is_empty()
+    }
+
+    /// Row dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The i8 codes of row `i`.
+    pub fn codes(&self, i: usize) -> &[i8] {
+        &self.codes[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The scale of row `i`.
+    pub fn scale(&self, i: usize) -> f32 {
+        self.scales[i]
+    }
+
+    /// Heap bytes held by the code and scale tables.
+    pub fn heap_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes per stored row: `dim` code bytes + one f32 scale.
+    pub fn bytes_per_row(&self) -> usize {
+        self.dim + std::mem::size_of::<f32>()
+    }
+
+    /// Estimated f32 dot products of a quantized query against candidate
+    /// rows: `out[j] = qscale · scale(c_j) · Σ qcodes·codes(c_j)`, in
+    /// 4-row blocks on the int8 kernels. Candidates are scored directly
+    /// from the packed table (no gather — i8 rows are a quarter the size
+    /// of the f32 tile rows, so the cache argument for staging is gone).
+    pub fn dot_estimates_with(
+        &self,
+        backend: SimdBackend,
+        qcodes: &[i8],
+        qscale: f32,
+        cands: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(qcodes.len(), self.dim);
+        out.clear();
+        out.resize(cands.len(), 0.0);
+        let blocks = cands.len() / 4;
+        for blk in 0..blocks {
+            let j = blk * 4;
+            let d4 = simd::dot_i8_block4_with(
+                backend,
+                qcodes,
+                self.codes(cands[j] as usize),
+                self.codes(cands[j + 1] as usize),
+                self.codes(cands[j + 2] as usize),
+                self.codes(cands[j + 3] as usize),
+            );
+            for r in 0..4 {
+                out[j + r] = qscale * self.scales[cands[j + r] as usize] * d4[r] as f32;
+            }
+        }
+        for j in blocks * 4..cands.len() {
+            let c = cands[j] as usize;
+            let d = simd::dot_i8_with(backend, qcodes, self.codes(c));
+            out[j] = qscale * self.scales[c] * d as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Rng;
+
+    fn rowf(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_a_step() {
+        for d in [1usize, 3, 16, 100, 784] {
+            let row = rowf(d, 42 + d as u64);
+            let mut codes = vec![0i8; d];
+            let scale = quantize_row(&row, &mut codes);
+            let mut back = vec![0f32; d];
+            dequantize_into(&codes, scale, &mut back);
+            for k in 0..d {
+                assert!(
+                    (row[k] - back[k]).abs() <= scale * 0.5 + 1e-6,
+                    "d={d} k={k}: {} vs {} (scale {scale})",
+                    row[k],
+                    back[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_row_quantizes_to_zero_scale() {
+        let mut codes = vec![7i8; 8];
+        let scale = quantize_row(&[0.0; 8], &mut codes);
+        assert_eq!(scale, 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn codes_never_reach_minus_128() {
+        // The AVX2 maddubs idiom requires it; extreme negative values must
+        // clamp to -127.
+        let row = [-1e30f32, 1e30, -1.0, 0.5];
+        let mut codes = vec![0i8; 4];
+        quantize_row(&row, &mut codes);
+        assert!(codes.iter().all(|&c| c >= -127));
+        assert_eq!(codes[0], -127);
+        assert_eq!(codes[1], 127);
+    }
+
+    #[test]
+    fn from_dataset_and_incremental_paths_agree() {
+        let ds = synth::gaussian_mixture(64, 16, 4, 0.2, 7);
+        let whole = QuantDataset::from_dataset(&ds);
+        assert_eq!(whole.len(), 64);
+        assert_eq!(whole.bytes_per_row(), 16 + 4);
+        assert_eq!(whole.heap_bytes(), 64 * 16 + 64 * 4);
+
+        // Build a prefix table, then extend by the suffix — per-row
+        // quantization must make the two routes identical.
+        let prefix = ds.subset(&(0..40u32).collect::<Vec<_>>());
+        let mut inc = QuantDataset::from_dataset(&prefix);
+        inc.extend_from(&ds, 40);
+        for i in 0..64 {
+            assert_eq!(inc.codes(i), whole.codes(i), "row {i}");
+            assert_eq!(inc.scale(i).to_bits(), whole.scale(i).to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn dot_estimates_approximate_the_exact_dot() {
+        let ds = synth::gaussian_mixture(40, 100, 4, 0.2, 9);
+        let q = QuantDataset::from_dataset(&ds);
+        let mut qcodes = vec![0i8; ds.dim()];
+        let qscale = quantize_row(ds.row(0), &mut qcodes);
+        let cands: Vec<u32> = (0..40).collect();
+        let mut est = Vec::new();
+        q.dot_estimates_with(simd::active(), &qcodes, qscale, &cands, &mut est);
+        for (j, &c) in cands.iter().enumerate() {
+            let exact = crate::sim::dot(ds.row(0), ds.row(c as usize));
+            // Error bound: |a·b − est| ≤ Σ|a||Δb| + Σ|Δa||b̂| ≤
+            // d·(max|a|·sb/2 + sa/2·max|b|); loose practical check here.
+            assert!(
+                (exact - est[j]).abs() < 0.05 * exact.abs().max(1.0),
+                "cand {c}: exact {exact} vs est {}",
+                est[j]
+            );
+        }
+        // Block path (first 4·k candidates) and tail path (rest) must
+        // agree with the single-row kernel on every backend.
+        for backend in simd::reachable() {
+            let mut per_backend = Vec::new();
+            q.dot_estimates_with(backend, &qcodes, qscale, &cands, &mut per_backend);
+            for j in 0..cands.len() {
+                assert_eq!(
+                    per_backend[j].to_bits(),
+                    est[j].to_bits(),
+                    "backend {backend:?} cand {j}"
+                );
+            }
+        }
+    }
+}

@@ -26,6 +26,15 @@
 //!   warning, when the host can't run the request) so perf numbers and CI
 //!   runs can pin the lanes they exercise.
 //!
+//! The int8 kernels ([`dot_i8`], [`dot_i8_block4`]) satisfy a *stronger*
+//! form of the first contract: they accumulate in `i32`, and integer
+//! addition is associative, so every backend returns the **same integer**
+//! no matter how the lanes are grouped — equality of values, not merely of
+//! rounded bit patterns. Their operands must come from the SQ8 quantizer
+//! (`sim::quant`, range `[-127, 127]`): the AVX2 port pairs an unsigned
+//! `|a|` with a sign-transferred `b` through `maddubs`, whose i16 pair sums
+//! only stay below saturation when `-128` is excluded.
+//!
 //! Dispatch is resolved once per tile (callers hoist [`active`] out of
 //! their block loops and call the `_with` variants), so the per-block cost
 //! is one predictable match, amortized over a `4 × d` reduction.
@@ -299,6 +308,32 @@ fn sketch_block4_scalar(
     (da, db)
 }
 
+/// Int8 dot reference: sequential i32 accumulation. Structure is
+/// irrelevant for parity (integer adds are associative — wrapping on the
+/// astronomically-unlikely overflow, `|dot| ≤ 127²·d` needs `d > 2¹⁷`), so
+/// the reference stays in the shape the autovectorizer likes best.
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for k in 0..a.len() {
+        acc = acc.wrapping_add(a[k] as i32 * b[k] as i32);
+    }
+    acc
+}
+
+/// Int8 dot of `q` against four rows at once — one query-element load
+/// feeds four integer accumulators.
+fn dot_i8_block4_scalar(q: &[i8], t0: &[i8], t1: &[i8], t2: &[i8], t3: &[i8]) -> [i32; 4] {
+    let mut out = [0i32; 4];
+    for k in 0..q.len() {
+        let x = q[k] as i32;
+        out[0] = out[0].wrapping_add(x * t0[k] as i32);
+        out[1] = out[1].wrapping_add(x * t1[k] as i32);
+        out[2] = out[2].wrapping_add(x * t2[k] as i32);
+        out[3] = out[3].wrapping_add(x * t3[k] as i32);
+    }
+    out
+}
+
 /// 4-lane blocked sum — the accumulate helper behind the weighted-jaccard
 /// weight folds. NOTE: this is a *blocked* order (lanes then [`sum4`] then
 /// the scalar tail), not the strictly sequential `iter().sum()`; all
@@ -508,6 +543,82 @@ mod avx2 {
         }
         s
     }
+
+    /// Spill a 256-bit register to its 8 i32 lanes (lane 0 first).
+    #[inline(always)]
+    unsafe fn lanes8_i32(v: __m256i) -> [i32; 8] {
+        let mut out = [0i32; 8];
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, v);
+        out
+    }
+
+    /// One 32-element i8 chunk of `a·b` widened into 8 i32 lanes.
+    ///
+    /// AVX2 has no signed×signed byte multiply, so the classic idiom: feed
+    /// `maddubs` (unsigned × signed) with `|a|` and `sign(b, a)` — per lane
+    /// `|a|·(b·sign(a)) = a·b`. With operands clamped to `[-127, 127]` the
+    /// i16 pair sums are ≤ `2·127² = 32258 < i16::MAX`, so `maddubs` cannot
+    /// saturate; `madd` against ones then widens the pairs to i32.
+    #[inline(always)]
+    unsafe fn madd_i8_chunk(va: __m256i, vb: __m256i) -> __m256i {
+        let pairs = _mm256_maddubs_epi16(_mm256_abs_epi8(va), _mm256_sign_epi8(vb, va));
+        _mm256_madd_epi16(pairs, _mm256_set1_epi16(1))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 32;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let k = c * 32;
+            let va = _mm256_loadu_si256(a.as_ptr().add(k) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(k) as *const __m256i);
+            acc = _mm256_add_epi32(acc, madd_i8_chunk(va, vb));
+        }
+        let mut d = lanes8_i32(acc)
+            .iter()
+            .fold(0i32, |s, &x| s.wrapping_add(x));
+        for k in chunks * 32..n {
+            d = d.wrapping_add(a[k] as i32 * b[k] as i32);
+        }
+        d
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_i8_block4(
+        q: &[i8],
+        t0: &[i8],
+        t1: &[i8],
+        t2: &[i8],
+        t3: &[i8],
+    ) -> [i32; 4] {
+        let d = q.len();
+        let chunks = d / 32;
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let rows = [t0, t1, t2, t3];
+        for c in 0..chunks {
+            let k = c * 32;
+            let vq = _mm256_loadu_si256(q.as_ptr().add(k) as *const __m256i);
+            for (r, t) in rows.iter().enumerate() {
+                let vt = _mm256_loadu_si256(t.as_ptr().add(k) as *const __m256i);
+                acc[r] = _mm256_add_epi32(acc[r], madd_i8_chunk(vq, vt));
+            }
+        }
+        let mut out = [0i32; 4];
+        for r in 0..4 {
+            out[r] = lanes8_i32(acc[r])
+                .iter()
+                .fold(0i32, |s, &x| s.wrapping_add(x));
+        }
+        for k in chunks * 32..d {
+            let x = q[k] as i32;
+            for (r, t) in rows.iter().enumerate() {
+                out[r] = out[r].wrapping_add(x * t[k] as i32);
+            }
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -678,6 +789,65 @@ mod neon {
         }
         s
     }
+
+    /// Accumulate one 16-element i8 chunk of `a·b` into 4 i32 lanes via
+    /// widening multiply + pairwise-add — plain NEON, no `dotprod`
+    /// extension required (`vmull_s8` products fit i16: ≤ 127² = 16129;
+    /// `vpadalq_s16` widens each pair into the i32 accumulator).
+    #[inline(always)]
+    unsafe fn padal_i8_chunk(acc: int32x4_t, va: int8x16_t, vb: int8x16_t) -> int32x4_t {
+        let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+        let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+        vpadalq_s16(vpadalq_s16(acc, lo), hi)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = vdupq_n_s32(0);
+        for c in 0..chunks {
+            let k = c * 16;
+            acc = padal_i8_chunk(acc, vld1q_s8(a.as_ptr().add(k)), vld1q_s8(b.as_ptr().add(k)));
+        }
+        let mut d = vaddvq_s32(acc);
+        for k in chunks * 16..n {
+            d = d.wrapping_add(a[k] as i32 * b[k] as i32);
+        }
+        d
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8_block4(
+        q: &[i8],
+        t0: &[i8],
+        t1: &[i8],
+        t2: &[i8],
+        t3: &[i8],
+    ) -> [i32; 4] {
+        let d = q.len();
+        let chunks = d / 16;
+        let mut acc = [vdupq_n_s32(0); 4];
+        let rows = [t0, t1, t2, t3];
+        for c in 0..chunks {
+            let k = c * 16;
+            let vq = vld1q_s8(q.as_ptr().add(k));
+            for (r, t) in rows.iter().enumerate() {
+                acc[r] = padal_i8_chunk(acc[r], vq, vld1q_s8(t.as_ptr().add(k)));
+            }
+        }
+        let mut out = [0i32; 4];
+        for r in 0..4 {
+            out[r] = vaddvq_s32(acc[r]);
+        }
+        for k in chunks * 16..d {
+            let x = q[k] as i32;
+            for (r, t) in rows.iter().enumerate() {
+                out[r] = out[r].wrapping_add(x * t[k] as i32);
+            }
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -808,6 +978,63 @@ pub fn sketch_block4_with(
     }
 }
 
+/// Int8 dot product, the quantized first-pass kernel (`sim::quant`).
+///
+/// Accumulates in i32 — integer adds are associative, so **every backend
+/// returns the same integer** (a stronger guarantee than the f32 kernels'
+/// pinned reduction order). Operands must be SQ8 codes in `[-127, 127]`:
+/// the AVX2 port's `maddubs` pairing would saturate on `-128`.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    dot_i8_with(active(), a, b)
+}
+
+/// [`dot_i8`] on an explicit backend.
+#[inline]
+pub fn dot_i8_with(backend: SimdBackend, a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe { avx2::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe { neon::dot_i8(a, b) },
+        _ => dot_i8_scalar(a, b),
+    }
+}
+
+/// Int8 dot of `q` against four candidate rows at once — the block kernel
+/// of the quantized first pass. Same integer-exact guarantee as
+/// [`dot_i8`].
+#[inline]
+pub fn dot_i8_block4(q: &[i8], t0: &[i8], t1: &[i8], t2: &[i8], t3: &[i8]) -> [i32; 4] {
+    dot_i8_block4_with(active(), q, t0, t1, t2, t3)
+}
+
+/// [`dot_i8_block4`] on an explicit backend.
+#[inline]
+pub fn dot_i8_block4_with(
+    backend: SimdBackend,
+    q: &[i8],
+    t0: &[i8],
+    t1: &[i8],
+    t2: &[i8],
+    t3: &[i8],
+) -> [i32; 4] {
+    let d = q.len();
+    debug_assert!(t0.len() == d && t1.len() == d && t2.len() == d && t3.len() == d);
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if supported(SimdBackend::Avx2) => unsafe {
+            avx2::dot_i8_block4(q, t0, t1, t2, t3)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if supported(SimdBackend::Neon) => unsafe {
+            neon::dot_i8_block4(q, t0, t1, t2, t3)
+        },
+        _ => dot_i8_block4_scalar(q, t0, t1, t2, t3),
+    }
+}
+
 /// Sum of a weight slice in a fixed 4-lane blocked order (lanes, then the
 /// `((s0+s1)+s2)+s3` lane sum, then the sequential tail). All backends
 /// agree bit-for-bit; callers migrating from a strictly sequential
@@ -926,6 +1153,52 @@ mod tests {
         }
     }
 
+    /// SQ8-range codes: uniform in [-127, 127], never -128.
+    fn veci8(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn int8_kernels_are_integer_exact_across_backends() {
+        // Stronger than the f32 `.to_bits()` checks: the i32 results must
+        // be *equal* on every reachable backend, for every lane/tail
+        // combination (32-lane AVX2 chunks, 16-lane NEON chunks, tails).
+        for backend in reachable() {
+            for d in [0usize, 1, 3, 15, 16, 17, 31, 32, 33, 100, 784] {
+                let a = veci8(d, 1 + d as u64);
+                let b = veci8(d, 100 + d as u64);
+                let t = [veci8(d, 7), veci8(d, 8), veci8(d, 9), veci8(d, 10)];
+                assert_eq!(
+                    dot_i8_with(backend, &a, &b),
+                    dot_i8_with(SimdBackend::Scalar, &a, &b),
+                    "dot_i8 {:?} d={d}",
+                    backend
+                );
+                assert_eq!(
+                    dot_i8_block4_with(backend, &a, &t[0], &t[1], &t[2], &t[3]),
+                    dot_i8_block4_with(SimdBackend::Scalar, &a, &t[0], &t[1], &t[2], &t[3]),
+                    "dot_i8_block4 {:?} d={d}",
+                    backend
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_scalar_reference_matches_naive() {
+        let a = veci8(100, 21);
+        let b = veci8(100, 22);
+        let naive: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+        assert_eq!(dot_i8_with(SimdBackend::Scalar, &a, &b), naive);
+        let saturating = vec![127i8; 784];
+        let negated = vec![-127i8; 784];
+        // The worst case the quantizer can produce — exercises the maddubs
+        // no-saturation bound on AVX2 hosts via the parity test above, and
+        // the exact extreme value here.
+        assert_eq!(dot_i8_with(SimdBackend::Scalar, &saturating, &negated), -127 * 127 * 784);
+    }
+
     #[test]
     fn dispatched_entry_points_match_active_backend() {
         let b = active();
@@ -933,6 +1206,9 @@ mod tests {
         let x = vecf(37, 6);
         assert_eq!(dot(&a, &x).to_bits(), dot_with(b, &a, &x).to_bits());
         assert_eq!(sum_f32(&a).to_bits(), sum_f32_with(b, &a).to_bits());
+        let qa = veci8(37, 5);
+        let qx = veci8(37, 6);
+        assert_eq!(dot_i8(&qa, &qx), dot_i8_with(b, &qa, &qx));
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Quantized-tier acceptance tests: the SQ8 round-trip bound, int8-kernel
+//! bit-parity across every reachable SIMD backend (the instruction-set
+//! invariance contract extended to the integer kernels — where it is in
+//! fact *integer exactness*, stronger than f32 bit-identity), and the
+//! rescore-restores-exact-ranking property of the two-pass serve path.
+//!
+//! Like `simd_parity.rs`, `scripts/ci.sh` runs this suite twice — default
+//! dispatch and `STARS_SIMD=scalar` — so the dispatched int8 entry points
+//! are validated under both resolutions.
+
+use stars::data::synth;
+use stars::lsh::SimHash;
+use stars::serve::{QueryEngine, ServeConfig, ServeMeasure, StarIndex};
+use stars::sim::quant::{dequantize_into, quantize_row, QuantDataset};
+use stars::sim::CosineSim;
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+use stars::util::rng::Rng;
+use stars::util::simd::{self, SimdBackend};
+
+const DIMS: [usize; 5] = [3, 8, 16, 100, 784];
+
+fn rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.gaussian() as f32).collect()
+}
+
+/// Random i8 codes in the quantizer's emitted range `[-127, 127]`.
+fn codes(n: usize, seed: u64) -> Vec<i8> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8)
+        .collect()
+}
+
+#[test]
+fn round_trip_error_is_bounded_per_row() {
+    // |x − deq(q(x))| ≤ scale/2 per element, scale = max|x|/127 — the
+    // quantizer's advertised bound, over the acceptance dimension sweep
+    // and a scale sweep (tiny to huge magnitudes).
+    for &d in &DIMS {
+        for (mag, seed) in [(1e-3f32, 5u64), (1.0, 6), (1e4, 7)] {
+            let row: Vec<f32> = rows(1, d, seed + d as u64).iter().map(|x| x * mag).collect();
+            let mut q = vec![0i8; d];
+            let scale = quantize_row(&row, &mut q);
+            assert!(q.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+            let mut back = vec![0f32; d];
+            dequantize_into(&q, scale, &mut back);
+            let max_abs = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+            assert!((scale - max_abs / 127.0).abs() <= max_abs * 1e-6);
+            for k in 0..d {
+                assert!(
+                    (row[k] - back[k]).abs() <= scale * 0.5 * (1.0 + 1e-5),
+                    "d={d} mag={mag} k={k}: {} vs {} (scale {scale})",
+                    row[k],
+                    back[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_override_applies_to_int8_kernels() {
+    // resolve() governs the int8 entry points exactly like the f32 ones:
+    // under STARS_SIMD=..., dot_i8 must equal the forced backend's _with.
+    assert_eq!(simd::resolve(Some("scalar")), SimdBackend::Scalar);
+    let a = codes(100, 3);
+    let b = codes(100, 4);
+    assert_eq!(simd::dot_i8(&a, &b), simd::dot_i8_with(simd::active(), &a, &b));
+    if let Ok(forced) = std::env::var(simd::SIMD_ENV) {
+        let want = match SimdBackend::parse(&forced) {
+            Some(b) if simd::supported(b) => b,
+            Some(_) => SimdBackend::Scalar,
+            None => simd::detected(),
+        };
+        assert_eq!(simd::active(), want, "STARS_SIMD={forced} not honored");
+    }
+}
+
+#[test]
+fn int8_kernels_integer_exact_across_backends() {
+    // i32 accumulation is associative: every backend returns the *same
+    // integer*, not merely the same bits of a rounding-tolerant float.
+    for backend in simd::reachable() {
+        for &d in &DIMS {
+            let a = codes(d, 11 + d as u64);
+            let b = codes(d, 77 + d as u64);
+            assert_eq!(
+                simd::dot_i8_with(backend, &a, &b),
+                simd::dot_i8_with(SimdBackend::Scalar, &a, &b),
+                "dot_i8 {backend:?} d={d}"
+            );
+            let t = codes(4 * d, 5 + d as u64);
+            let (t0, t1, t2, t3) = (&t[..d], &t[d..2 * d], &t[2 * d..3 * d], &t[3 * d..4 * d]);
+            assert_eq!(
+                simd::dot_i8_block4_with(backend, &a, t0, t1, t2, t3),
+                simd::dot_i8_block4_with(SimdBackend::Scalar, &a, t0, t1, t2, t3),
+                "dot_i8_block4 {backend:?} d={d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_estimates_bit_identical_across_backends() {
+    // One level up: the full estimate (integer dot × two float scales) is
+    // bit-identical per backend because the float part is two multiplies
+    // in a fixed order.
+    let ds = synth::gaussian_mixture(64, 100, 4, 0.2, 9);
+    let q = QuantDataset::from_dataset(&ds);
+    let mut qc = vec![0i8; ds.dim()];
+    let qs = quantize_row(ds.row(3), &mut qc);
+    let cands: Vec<u32> = (0..64).collect();
+    let mut want = Vec::new();
+    q.dot_estimates_with(SimdBackend::Scalar, &qc, qs, &cands, &mut want);
+    for backend in simd::reachable() {
+        let mut got = Vec::new();
+        q.dot_estimates_with(backend, &qc, qs, &cands, &mut got);
+        for j in 0..cands.len() {
+            assert_eq!(
+                got[j].to_bits(),
+                want[j].to_bits(),
+                "estimate {backend:?} cand {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wide_rescore_restores_the_exact_ranking() {
+    // With rescore_factor wide enough that every first-pass candidate
+    // survives, the quantized engine must be *bitwise* equal to the exact
+    // engine — the rescore runs the same f32 kernels over the same
+    // candidate set, so any divergence is a two-pass bookkeeping bug.
+    let h = SimHash::new(16, 8, 7);
+    let ds = synth::gaussian_mixture(1000, 16, 10, 0.08, 21);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(8)
+        .threshold(0.4);
+    let out = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params.clone())
+        .workers(2)
+        .build();
+    let cfg = ServeConfig::default().route_reps(8).compact_limit(0);
+    let exact = QueryEngine::new(
+        StarIndex::build(ds.clone(), &h, &out.graph, cfg.clone()),
+        &h,
+        ServeMeasure::Cosine,
+        params.clone(),
+    )
+    .workers(2);
+    let quant = QueryEngine::new(
+        StarIndex::build(ds.clone(), &h, &out.graph, cfg.quantized(100_000)),
+        &h,
+        ServeMeasure::Cosine,
+        params,
+    )
+    .workers(2);
+    let qids: Vec<u32> = (0..1000u32).step_by(37).collect();
+    let queries = ds.subset(&qids);
+    assert_eq!(
+        quant.query(&queries, 10),
+        exact.query(&queries, 10),
+        "wide rescore diverged from the exact engine"
+    );
+}

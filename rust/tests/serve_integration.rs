@@ -1,6 +1,12 @@
 //! Serving-path acceptance tests: recall parity against brute force,
 //! streaming insert-then-query correctness across compaction, and the
 //! worker-count invariance contract of the batched query executor.
+//!
+//! The `quantized_*` tests gate the int8 first-pass tier: its recall must
+//! stay within 2% of the f32 path on the clustered fixture (the documented
+//! parity *relaxation* — see ARCHITECTURE.md "Quantized scoring tier"),
+//! while the quantized path itself stays worker-count-invariant like every
+//! other serve path. `scripts/ci.sh` re-runs them under STARS_SIMD=scalar.
 
 use stars::data::synth;
 use stars::lsh::{SimHash, WeightedMinHash};
@@ -39,6 +45,29 @@ fn build_cosine_engine(
     (ds, engine)
 }
 
+/// [`build_cosine_engine`] with the quantized first-pass tier enabled.
+fn build_quantized_engine(
+    h: &SimHash,
+    workers: usize,
+    rescore_factor: usize,
+) -> (stars::data::Dataset, QueryEngine<'_>) {
+    let ds = synth::gaussian_mixture(2000, 16, 20, 0.08, 33);
+    let params = clustered_params();
+    let (_, index) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(h)
+        .params(params.clone())
+        .workers(workers)
+        .build_indexed(
+            ServeConfig::default()
+                .route_reps(8)
+                .compact_limit(0)
+                .quantized(rescore_factor),
+        );
+    let engine = QueryEngine::new(index, h, ServeMeasure::Cosine, params).workers(workers);
+    (ds, engine)
+}
+
 #[test]
 fn recall_at_10_beats_point_nine_vs_brute_force() {
     let h = SimHash::new(16, 8, 7);
@@ -60,6 +89,78 @@ fn recall_at_10_beats_point_nine_vs_brute_force() {
             let want = stars::sim::cosine(queries.row(qi), ds.row(id as usize));
             assert!((w - want).abs() < 1e-5, "score drift on ({qi}, {id})");
         }
+    }
+}
+
+#[test]
+fn quantized_recall_tracks_the_f32_path() {
+    // The documented parity relaxation: quantized recall@10 must hold at
+    // least 98% of the f32 path's recall on the clustered fixture (both
+    // measured against exact brute force over the whole dataset).
+    let h = SimHash::new(16, 8, 7);
+    let qids: Vec<u32> = (0..2000u32).step_by(40).collect(); // 50 queries
+    let (ds, exact) = build_cosine_engine(&h, 4, 0);
+    let queries = ds.subset(&qids);
+    let truth = brute_force_topk(&ds, &queries, ServeMeasure::Cosine, 10, 4);
+    let recall_of = |got: &[Vec<(u32, f32)>]| {
+        truth
+            .iter()
+            .zip(got.iter())
+            .map(|(t, g)| recall_against(t, g))
+            .sum::<f64>()
+            / qids.len() as f64
+    };
+    let recall_f32 = recall_of(&exact.query(&queries, 10));
+    drop(exact);
+    let (_, quant) = build_quantized_engine(&h, 4, 4);
+    assert!(quant.snapshot().quant().is_some(), "SQ8 table missing");
+    let got_q = quant.query(&queries, 10);
+    let recall_q = recall_of(&got_q);
+    assert!(
+        recall_q >= 0.98 * recall_f32,
+        "quantized recall@10 = {recall_q:.3} < 0.98 · {recall_f32:.3}"
+    );
+    // Survivor scores are exact (the rescore runs the f32 kernels): every
+    // returned score must equal the true similarity, not an estimate.
+    for (qi, res) in got_q.iter().enumerate() {
+        for &(id, w) in res.iter().take(3) {
+            let want = stars::sim::cosine(queries.row(qi), ds.row(id as usize));
+            assert!((w - want).abs() < 1e-5, "estimated score leaked ({qi}, {id})");
+        }
+    }
+    // Snapshot telemetry shows the ~4× first-pass storage reduction.
+    let stats = quant.snapshot().stats();
+    assert!(stats.quantized);
+    assert_eq!(stats.bytes_per_row, 16 + 4);
+    assert_eq!(stats.quant_bytes, 2000 * (16 + 4));
+}
+
+#[test]
+fn quantized_results_are_worker_count_invariant() {
+    // The quantized path inherits the determinism contract: the int8 first
+    // pass is integer-exact and per-query, so results are bit-identical
+    // for every worker count — snapshot-only and with a live delta.
+    let h = SimHash::new(16, 8, 7);
+    let qids: Vec<u32> = (0..2000u32).step_by(101).collect();
+    let (ds, engine1) = build_quantized_engine(&h, 1, 4);
+    let queries = ds.subset(&qids);
+    let baseline = engine1.query(&queries, 10);
+    drop(engine1);
+    for workers in [3usize, 8] {
+        let (_, engine) = build_quantized_engine(&h, workers, 4);
+        assert_eq!(
+            engine.query(&queries, 10),
+            baseline,
+            "quantized snapshot results differ between 1 and {workers} workers"
+        );
+        engine.insert(Some(ds.row(5)), None);
+        let (_, e1) = build_quantized_engine(&h, 1, 4);
+        e1.insert(Some(ds.row(5)), None);
+        assert_eq!(
+            engine.query(&queries, 10),
+            e1.query(&queries, 10),
+            "quantized delta-path results differ between 1 and {workers} workers"
+        );
     }
 }
 

@@ -37,6 +37,16 @@ else
     echo "==> forced-scalar test run skipped (detected backend is already scalar)"
 fi
 
+# The quantized tier's dedicated gates, pinned to the scalar backend
+# regardless of host detection: the int8 parity suite and the quantized
+# serve-integration tests (recall floor + worker invariance). Cheap and
+# targeted — the quantized path's first documented parity *relaxation*
+# must never silently widen into a backend dependence (see ARCHITECTURE.md
+# "Quantized scoring tier").
+echo "==> STARS_SIMD=scalar quantized-tier gates (quant_parity + serve_integration quant)"
+STARS_SIMD=scalar cargo test -q --test quant_parity
+STARS_SIMD=scalar cargo test -q --test serve_integration quantized
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
