@@ -25,10 +25,12 @@ use stars::bench::{fmt_count, fmt_secs, percentile, time_once, time_runs, Table}
 use stars::data::synth;
 use stars::lsh::SimHash;
 use stars::serve::{
-    brute_force_topk, recall_against, CompactionMode, QueryEngine, ServeConfig, ServeMeasure,
+    brute_force_topk, recall_against, AdmissionConfig, CompactionMode, FrontDoor, QueryEngine,
+    ServeConfig, ServeMeasure,
 };
 use stars::sim::CosineSim;
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+use stars::util::fault::FaultPlan;
 use stars::util::json::Json;
 use stars::util::pool;
 use std::path::PathBuf;
@@ -195,7 +197,8 @@ fn main() {
                 .quantized(4),
         );
     let qstats = qindex.stats();
-    let qengine = QueryEngine::new(qindex, &family, ServeMeasure::Cosine, params).workers(workers);
+    let qengine =
+        QueryEngine::new(qindex, &family, ServeMeasure::Cosine, params.clone()).workers(workers);
     let qbatch = time_runs(1, 5, || {
         std::hint::black_box(qengine.query(&queries, K));
     });
@@ -228,12 +231,78 @@ fn main() {
         format!("{:.4} of f32", q_recall / recall.max(1e-12)),
     ]);
 
+    // Admission front door over the quantized engine: one unloaded sweep,
+    // one sweep against a full backlog (shed at the door), one at the
+    // degrade threshold (served on the reduced-rescore quantized tier) —
+    // the whole ladder's counters from three deterministic probes.
+    const QUEUE_LIMIT: usize = 8;
+    let door = FrontDoor::new(
+        &qengine,
+        AdmissionConfig::default()
+            .queue_limit(QUEUE_LIMIT)
+            .degraded_rescore(2),
+    );
+    let _ = door.query(&queries, K);
+    {
+        let full: Vec<_> = (0..QUEUE_LIMIT).map(|_| door.acquire()).collect();
+        let _ = door.query(&queries, K);
+        drop(full);
+    }
+    {
+        // depth = held + the query itself = ceil(degrade_at · limit).
+        let held =
+            ((door.config().degrade_at * QUEUE_LIMIT as f64).ceil() as usize).saturating_sub(1);
+        let partial: Vec<_> = (0..held).map(|_| door.acquire()).collect();
+        let _ = door.query(&queries, K);
+        drop(partial);
+    }
+    let adm = door.stats();
+    table.row(vec![
+        format!("front door (limit={QUEUE_LIMIT}, overload probe)"),
+        fmt_count(adm.admitted + adm.shed()),
+        format!("{} degraded", adm.degraded),
+        format!("{} shed", adm.shed()),
+    ]);
+
+    // Fault-injected build: the same recipe under a pinned light schedule —
+    // measures the recovery machinery's wall-clock overhead and proves the
+    // output is bit-identical while the retry counters are nonzero.
+    const FAULT_SPEC: &str = "seed=7,crash=0.02,delay=0.01:5,corrupt=0.02,max_failures=2";
+    let fplan = FaultPlan::parse(FAULT_SPEC).expect("bench fault spec");
+    let (fault_build_s, fout) = time_once(|| {
+        StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&family)
+            .params(params.clone())
+            .faults(fplan)
+            .build()
+    });
+    assert_eq!(
+        fout.graph.edges(),
+        out.graph.edges(),
+        "faulted build diverged from the clean build"
+    );
+    let fc = fout.report.faults;
+    table.row(vec![
+        "faulted build (bit-identical)".into(),
+        fmt_count(N as u64),
+        fmt_secs(fault_build_s),
+        format!(
+            "{} retries, {} csum refetch",
+            fmt_count(fc.task_retries),
+            fmt_count(fc.corruption_retries)
+        ),
+    ]);
+
     table.print();
 
     let doc = Json::obj(vec![
-        // v4: added the `quantized` object (int8 first-pass tier measured
-        // next to its f32 twin from the same build recipe).
-        ("schema", Json::from("stars-bench-serve/v4")),
+        // v5: added the `admission` object (front-door shed/degrade ladder
+        // counters) and the `faults` object (fault-injected build overhead
+        // + recovery counters). v4: added the `quantized` object (int8
+        // first-pass tier measured next to its f32 twin from the same
+        // build recipe).
+        ("schema", Json::from("stars-bench-serve/v5")),
         ("bench", Json::from("servebench")),
         ("workers", Json::from(workers)),
         // Which SIMD lanes served every query in this file — p50/p99 are
@@ -278,6 +347,15 @@ fn main() {
                 ),
                 ("bytes_per_row", Json::from(qstats.bytes_per_row)),
                 ("quant_bytes", Json::from(qstats.quant_bytes)),
+            ]),
+        ),
+        ("admission", adm.to_json()),
+        (
+            "faults",
+            Json::obj(vec![
+                ("plan", Json::from(FAULT_SPEC)),
+                ("build_s", Json::from(fault_build_s)),
+                ("counters", fc.to_json()),
             ]),
         ),
     ]);

@@ -1,9 +1,31 @@
 //! The simulated worker fleet.
 
 use super::metrics::{CostLedger, CostReport};
+use crate::util::fault::{Fault, FaultPlan};
+use crate::util::fxhash::FxHashMap;
 use crate::util::pool;
-use std::sync::Arc;
-use std::time::Instant;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// First retry backoff, milliseconds. Doubles per attempt up to
+/// [`BACKOFF_CAP_MS`] — real backoff shape, toy constants (the fleet is
+/// simulated; tests shouldn't spend seconds sleeping).
+const BACKOFF_BASE_MS: u64 = 1;
+/// Backoff ceiling, milliseconds.
+const BACKOFF_CAP_MS: u64 = 8;
+/// In-place retry budget per `map_timed` execution of a task. A task whose
+/// schedule crashes it more often than this panics out to the wave level,
+/// where the builder restarts the wave from its checkpoint — exercising the
+/// coarse recovery path, not just the fine one.
+const CALL_RETRY_BUDGET: u32 = 3;
+/// A task is a straggler when it ran longer than `median × STRAGGLER_FACTOR`
+/// (and longer than [`STRAGGLER_FLOOR_NANOS`], so microsecond waves don't
+/// speculate on noise).
+const STRAGGLER_FACTOR: u64 = 8;
+/// Minimum absolute duration before a task can be called a straggler.
+const STRAGGLER_FLOOR_NANOS: u64 = 25_000_000;
 
 /// A pool of worker "machines" sharing a [`CostLedger`].
 ///
@@ -11,18 +33,44 @@ use std::time::Instant;
 /// workers, timing each worker's busy span and charging it to the ledger —
 /// so "total running time" (Σ busy) and "real running time" (wall clock)
 /// reproduce the paper's two reported quantities.
+///
+/// # Failure model
+///
+/// When the ledger carries an active [`FaultPlan`] (from `STARS_FAULTS` or
+/// [`Cluster::with_faults`]), each task attempt first consults the plan:
+/// an injected *crash* records a failure and retries the task with capped
+/// exponential backoff (never having run `f`, so no partial effects); an
+/// injected *delay* stalls the attempt to manufacture a straggler. Real
+/// panics out of `f` are caught and retried the same way. Failure counts
+/// persist across wave restarts (keyed by `(round, task)` — the simulated
+/// analogue of the AMPC controller's per-task attempt record), so a
+/// schedule that crashes a task `max_failures` times converges no matter
+/// how the work is re-driven. Recovery is pure re-execution of
+/// deterministic tasks: results, and therefore output edges and serve
+/// top-k, are bit-identical to a fault-free run.
 pub struct Cluster {
     workers: usize,
     ledger: Arc<CostLedger>,
+    /// Recorded failures per `(round, task)` decision point, surviving
+    /// wave restarts within this cluster's lifetime.
+    attempts: Mutex<FxHashMap<(u64, u64), u32>>,
 }
 
 impl Cluster {
-    /// Cluster with an explicit worker count.
+    /// Cluster with an explicit worker count; fault schedule from
+    /// `STARS_FAULTS` (inert when unset).
     pub fn new(workers: usize) -> Cluster {
+        Cluster::with_faults(workers, FaultPlan::from_env())
+    }
+
+    /// Cluster with an explicit worker count and fault schedule. Tests use
+    /// this instead of the env var (parallel test threads race on setenv).
+    pub fn with_faults(workers: usize, faults: FaultPlan) -> Cluster {
         let workers = workers.max(1);
         Cluster {
             workers,
-            ledger: Arc::new(CostLedger::new(workers)),
+            ledger: Arc::new(CostLedger::with_faults(workers, faults)),
+            attempts: Mutex::new(FxHashMap::default()),
         }
     }
 
@@ -41,28 +89,133 @@ impl Cluster {
         &self.ledger
     }
 
+    /// Recorded failures at a decision point.
+    fn failures(&self, key: (u64, u64)) -> u32 {
+        *self.attempts.lock().unwrap().get(&key).unwrap_or(&0)
+    }
+
+    /// Record one more failure at a decision point.
+    fn record_failure(&self, key: (u64, u64)) {
+        *self.attempts.lock().unwrap().entry(key).or_insert(0) += 1;
+    }
+
+    /// Run one task to completion under the fault plan: consult the
+    /// schedule, absorb injected crashes/delays and real panics with capped
+    /// backoff, and return `f`'s (deterministic) result.
+    fn run_task<R, F>(&self, plan: &FaultPlan, round: u64, task: usize, f: &F) -> R
+    where
+        F: Fn(usize, &CostLedger) -> R + Sync,
+    {
+        let ledger = &*self.ledger;
+        if !plan.is_active() {
+            // Hot path: no schedule, no attempt map, no unwind shim here
+            // (the pool already isolates panics per task).
+            return f(task, ledger);
+        }
+        let key = (round, task as u64);
+        let mut call_crashes = 0u32;
+        let mut real_panics = 0u32;
+        let mut backoff_ms = BACKOFF_BASE_MS;
+        loop {
+            match plan.decide(round, task as u64, self.failures(key)) {
+                Fault::Crash => {
+                    self.record_failure(key);
+                    ledger.add_injected_crash();
+                    call_crashes += 1;
+                    if call_crashes >= CALL_RETRY_BUDGET {
+                        // Escalate to the wave level: the builder restarts
+                        // the wave from its checkpoint; our failure record
+                        // persists, so the schedule eventually relents.
+                        panic!(
+                            "injected crash: round {round} task {task} exhausted \
+                             its in-place retry budget"
+                        );
+                    }
+                    ledger.add_task_retry();
+                    std::thread::sleep(Duration::from_millis(backoff_ms));
+                    backoff_ms = (backoff_ms * 2).min(BACKOFF_CAP_MS);
+                    continue;
+                }
+                Fault::Delay(ms) => {
+                    ledger.add_injected_delay();
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Fault::None => {}
+            }
+            match catch_unwind(AssertUnwindSafe(|| f(task, ledger))) {
+                Ok(r) => return r,
+                Err(payload) => {
+                    self.record_failure(key);
+                    real_panics += 1;
+                    if real_panics >= CALL_RETRY_BUDGET {
+                        resume_unwind(payload);
+                    }
+                    ledger.add_task_retry();
+                    std::thread::sleep(Duration::from_millis(backoff_ms));
+                    backoff_ms = (backoff_ms * 2).min(BACKOFF_CAP_MS);
+                }
+            }
+        }
+    }
+
     /// Run `f(task_id, &ledger)` for each task in [0, tasks), dynamically
     /// balanced over the workers; per-task busy time is charged to the
-    /// executing worker. Results are returned in task order.
+    /// executing worker. Results are returned in task order. Fault-schedule
+    /// decisions use round 0 (callers with a real round structure use
+    /// [`Cluster::map_timed_round`]).
     pub fn map_timed<R, F>(&self, tasks: usize, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(usize, &CostLedger) -> R + Sync,
     {
+        self.map_timed_round(0, tasks, f)
+    }
+
+    /// [`Cluster::map_timed`] with an explicit round label: the fault
+    /// schedule keys decisions on `(round, task)`, so a builder driving
+    /// repetition `r` as round `r` gets per-repetition schedules that stay
+    /// stable when a wave is restarted.
+    pub fn map_timed_round<R, F>(&self, round: u64, tasks: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &CostLedger) -> R + Sync,
+    {
         let ledger = Arc::clone(&self.ledger);
+        let plan = *self.ledger.faults();
         // Distribute tasks over workers; charge each task's duration to the
         // worker slot it ran on. parallel_map's cursor assigns dynamically;
         // we approximate the worker id by the thread's task order (round
         // robin on the ledger slots is fine for Σ-busy accounting).
         let counter = std::sync::atomic::AtomicUsize::new(0);
-        pool::parallel_map(tasks, self.workers, |task| {
+        let durations: Vec<AtomicU64> = (0..tasks).map(|_| AtomicU64::new(0)).collect();
+        let mut out = pool::parallel_map(tasks, self.workers, |task| {
             let slot =
                 counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.workers;
             let t = Instant::now();
-            let r = f(task, &ledger);
-            ledger.add_busy(slot, t.elapsed().as_nanos() as u64);
+            let r = self.run_task(&plan, round, task, &f);
+            let nanos = t.elapsed().as_nanos() as u64;
+            durations[task].store(nanos, Ordering::Relaxed);
+            ledger.add_busy(slot, nanos);
             r
-        })
+        });
+        // Straggler pass: speculatively re-execute tasks that ran far past
+        // the wave median (injected delays manufacture these). `f` is
+        // deterministic, so the re-executed result replaces the original
+        // bit-for-bit; gated on an active plan so fault-free builds never
+        // pay for (or double-charge) a speculative run.
+        if plan.is_active() && tasks >= 2 {
+            let mut sorted: Vec<u64> = durations.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+            sorted.sort_unstable();
+            let median = sorted[tasks / 2];
+            let threshold = (median.saturating_mul(STRAGGLER_FACTOR)).max(STRAGGLER_FLOOR_NANOS);
+            for (task, d) in durations.iter().enumerate() {
+                if d.load(Ordering::Relaxed) > threshold {
+                    ledger.add_straggler();
+                    out[task] = f(task, &*ledger);
+                }
+            }
+        }
+        out
     }
 
     /// Run a whole job (closure over this cluster) and produce its cost
@@ -81,7 +234,7 @@ mod tests {
 
     #[test]
     fn map_timed_returns_ordered_results_and_charges_time() {
-        let c = Cluster::new(4);
+        let c = Cluster::with_faults(4, FaultPlan::none());
         let out = c.map_timed(20, |task, ledger| {
             ledger.add_comparisons(1);
             // Busy-wait a tiny deterministic amount.
@@ -92,11 +245,12 @@ mod tests {
         assert_eq!(out, (0..20).map(|t| t * 2).collect::<Vec<_>>());
         assert_eq!(c.ledger().comparisons(), 20);
         assert!(c.ledger().total_time() > 0.0);
+        assert!(!c.ledger().fault_counters().any(), "clean run, zero counters");
     }
 
     #[test]
     fn run_job_reports_real_time() {
-        let c = Cluster::new(2);
+        let c = Cluster::with_faults(2, FaultPlan::none());
         let (val, report) = c.run_job(|c| {
             c.map_timed(4, |t, _| t);
             42
@@ -109,7 +263,7 @@ mod tests {
     #[test]
     fn total_time_exceeds_real_time_under_parallelism() {
         // With 4 workers each busy ~2ms, total ≈ 8ms but real ≈ 2ms.
-        let c = Cluster::new(4);
+        let c = Cluster::with_faults(4, FaultPlan::none());
         let (_, report) = c.run_job(|c| {
             c.map_timed(4, |_, _| {
                 let t = Instant::now();
@@ -122,5 +276,72 @@ mod tests {
             report.total_time,
             report.real_time
         );
+    }
+
+    #[test]
+    fn injected_crashes_retry_to_identical_results() {
+        let plan = FaultPlan::parse("seed=5,crash=0.9,max_failures=2").unwrap();
+        for workers in [1usize, 4] {
+            let c = Cluster::with_faults(workers, plan);
+            let out = c.map_timed(12, |task, _| task * 3);
+            assert_eq!(out, (0..12).map(|t| t * 3).collect::<Vec<_>>());
+            let counters = c.ledger().fault_counters();
+            assert!(counters.injected_crashes > 0, "schedule should fire");
+            assert!(counters.task_retries > 0);
+        }
+    }
+
+    #[test]
+    fn injected_delays_trigger_straggler_reexecution() {
+        // One wave, every task fast except the delayed ones (~60ms vs
+        // microseconds): the straggler pass must fire and results stay
+        // identical.
+        let plan = FaultPlan::parse("seed=6,delay=0.75:60").unwrap();
+        let c = Cluster::with_faults(4, plan);
+        let out = c.map_timed(8, |task, _| task + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+        let counters = c.ledger().fault_counters();
+        assert!(counters.injected_delays > 0, "schedule should fire");
+        assert!(counters.stragglers > 0, "delayed tasks should be re-run");
+    }
+
+    #[test]
+    fn real_panic_is_retried_then_surfaced() {
+        use std::sync::atomic::AtomicUsize;
+        // An always-panicking task under an active plan: retried
+        // CALL_RETRY_BUDGET times in place, then the panic surfaces.
+        let plan = FaultPlan::parse("seed=1,delay=0.0:0,corrupt=0.01").unwrap();
+        let c = Cluster::with_faults(1, plan);
+        let calls = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            c.map_timed(1, |_, _| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                panic!("boom");
+            })
+        }));
+        assert!(r.is_err());
+        assert_eq!(calls.load(Ordering::Relaxed), CALL_RETRY_BUDGET as usize);
+        assert_eq!(c.ledger().fault_counters().task_retries, u64::from(CALL_RETRY_BUDGET) - 1);
+    }
+
+    #[test]
+    fn failure_record_survives_wave_restart() {
+        // crash=1.0 with max_failures above the in-place budget: the first
+        // map_timed panics out (budget exhausted); re-driving the same
+        // round converges because recorded failures persist on the cluster.
+        let plan = FaultPlan::parse("seed=2,crash=1.0,max_failures=5").unwrap();
+        let c = Cluster::with_faults(2, plan);
+        let mut restarts = 0;
+        let out = loop {
+            match catch_unwind(AssertUnwindSafe(|| c.map_timed_round(7, 3, |t, _| t * 10))) {
+                Ok(r) => break r,
+                Err(_) => {
+                    restarts += 1;
+                    assert!(restarts < 10, "must converge");
+                }
+            }
+        };
+        assert_eq!(out, vec![0, 10, 20]);
+        assert!(restarts > 0, "budget 5 > in-place budget must escalate");
     }
 }

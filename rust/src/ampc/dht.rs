@@ -57,19 +57,38 @@ impl<'a> Dht<'a> {
 
     /// Batch lookup: charges one RPC per *distinct shard* touched plus the
     /// payload bytes — modeling request coalescing in the real system.
+    ///
+    /// Responses carry a content checksum; when the ledger's fault plan
+    /// injects corruption the batch fails verification and is re-fetched
+    /// (re-charging RPCs and bytes). Lookups are reads of an immutable
+    /// store, so the retried response is identical — recovery never
+    /// perturbs results.
     pub fn lookup_batch(&self, ids: &[u32], ledger: &CostLedger) -> u64 {
+        let plan = *ledger.faults();
         let mut shard_mask = vec![false; self.shards];
         let mut bytes = 0u64;
+        // Content digest identifying this batch's response payload — the
+        // corruption stream key, so the schedule is a pure function of
+        // *what* was fetched, not of call order.
+        let mut digest = 0u64;
         for &i in ids {
             shard_mask[self.shard_of(i)] = true;
             bytes += self.payload_bytes(i);
+            digest = digest.wrapping_add(crate::util::fxhash::hash_u64(i as u64 ^ 0xD47A));
         }
         let rpcs = shard_mask.iter().filter(|&&m| m).count() as u64;
-        for _ in 0..rpcs {
-            ledger.add_dht_lookup(0);
+        let mut attempt = 0u32;
+        loop {
+            for _ in 0..rpcs {
+                ledger.add_dht_lookup(0);
+            }
+            ledger.add_dht_lookup(bytes); // payload accounted once per fetch
+            if !plan.corrupt(digest, attempt) {
+                return bytes;
+            }
+            ledger.add_corruption_retry();
+            attempt += 1;
         }
-        ledger.add_dht_lookup(bytes); // payload accounted once
-        bytes
     }
 }
 
@@ -111,5 +130,22 @@ mod tests {
         assert_eq!(bytes, 6 * 32);
         let r = ledger.report(0.0);
         assert!(r.dht_lookups <= 5, "too many rpcs: {}", r.dht_lookups);
+    }
+
+    #[test]
+    fn corrupted_batch_is_refetched() {
+        use crate::util::fault::FaultPlan;
+        let ds = synth::gaussian_mixture(50, 8, 4, 0.1, 2);
+        let dht = Dht::new(&ds, 4);
+        let clean = CostLedger::new(1);
+        let want = dht.lookup_batch(&[0, 1, 2], &clean);
+        let plan = FaultPlan::parse("seed=4,corrupt=1.0,max_failures=2").unwrap();
+        let ledger = CostLedger::with_faults(1, plan);
+        let bytes = dht.lookup_batch(&[0, 1, 2], &ledger);
+        assert_eq!(bytes, want, "retried fetch returns the same payload");
+        let r = ledger.report(0.0);
+        assert_eq!(r.faults.corruption_retries, 2, "corrupt=1.0 retries to the budget");
+        // Each re-fetch re-charges: bytes charged = 3 fetches × payload.
+        assert_eq!(r.dht_bytes, 3 * want);
     }
 }

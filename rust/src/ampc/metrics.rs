@@ -1,5 +1,6 @@
 //! Cost accounting: comparisons, per-worker busy time, shuffle bytes.
 
+use crate::util::fault::FaultPlan;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,11 +15,26 @@ pub struct CostLedger {
     shuffle_bytes: AtomicU64,
     dht_lookups: AtomicU64,
     dht_bytes: AtomicU64,
+    /// The job's fault schedule. Riding on the ledger (which already flows
+    /// through every cluster primitive) lets `dht`/`shuffle` consult the
+    /// plan without signature churn; the inert plan costs one branch.
+    faults: FaultPlan,
+    task_retries: AtomicU64,
+    injected_crashes: AtomicU64,
+    injected_delays: AtomicU64,
+    corruption_retries: AtomicU64,
+    wave_restarts: AtomicU64,
+    stragglers: AtomicU64,
 }
 
 impl CostLedger {
-    /// Ledger for `workers` workers.
+    /// Ledger for `workers` workers, no fault schedule.
     pub fn new(workers: usize) -> CostLedger {
+        CostLedger::with_faults(workers, FaultPlan::none())
+    }
+
+    /// Ledger for `workers` workers carrying a fault schedule.
+    pub fn with_faults(workers: usize, faults: FaultPlan) -> CostLedger {
         CostLedger {
             busy_nanos: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
             comparisons: AtomicU64::new(0),
@@ -27,6 +43,67 @@ impl CostLedger {
             shuffle_bytes: AtomicU64::new(0),
             dht_lookups: AtomicU64::new(0),
             dht_bytes: AtomicU64::new(0),
+            faults,
+            task_retries: AtomicU64::new(0),
+            injected_crashes: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            corruption_retries: AtomicU64::new(0),
+            wave_restarts: AtomicU64::new(0),
+            stragglers: AtomicU64::new(0),
+        }
+    }
+
+    /// The job's fault schedule (the inert plan when none was configured).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Record one task re-attempt (after an injected crash or a real panic).
+    #[inline]
+    pub fn add_task_retry(&self) {
+        self.task_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one injected task crash.
+    #[inline]
+    pub fn add_injected_crash(&self) {
+        self.injected_crashes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one injected task delay.
+    #[inline]
+    pub fn add_injected_delay(&self) {
+        self.injected_delays.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one checksum-failure retry (shuffle partition or DHT batch).
+    #[inline]
+    pub fn add_corruption_retry(&self) {
+        self.corruption_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one wave restart (a task exhausted its in-place retry budget
+    /// and the builder re-ran the whole wave from its checkpoint).
+    #[inline]
+    pub fn add_wave_restart(&self) {
+        self.wave_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one straggler re-execution.
+    #[inline]
+    pub fn add_straggler(&self) {
+        self.stragglers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the fault/recovery counters.
+    pub fn fault_counters(&self) -> FaultCounters {
+        FaultCounters {
+            task_retries: self.task_retries.load(Ordering::Relaxed),
+            injected_crashes: self.injected_crashes.load(Ordering::Relaxed),
+            injected_delays: self.injected_delays.load(Ordering::Relaxed),
+            corruption_retries: self.corruption_retries.load(Ordering::Relaxed),
+            wave_restarts: self.wave_restarts.load(Ordering::Relaxed),
+            stragglers: self.stragglers.load(Ordering::Relaxed),
         }
     }
 
@@ -117,7 +194,47 @@ impl CostLedger {
             real_time,
             simd_backend: crate::util::simd::active().name(),
             snapshot: None,
+            faults: self.fault_counters(),
         }
+    }
+}
+
+/// Fault-injection and recovery counters for one job. All zero on a clean
+/// run with no schedule; nonzero entries say which recovery paths fired
+/// (and were absorbed — a report with nonzero counters still describes
+/// bit-identical output, that's the contract).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// In-place task re-attempts (injected crashes + caught real panics).
+    pub task_retries: u64,
+    /// Injected crashes served by the schedule.
+    pub injected_crashes: u64,
+    /// Injected straggler delays served by the schedule.
+    pub injected_delays: u64,
+    /// Checksum-failure retries (shuffle partitions, DHT batches).
+    pub corruption_retries: u64,
+    /// Whole-wave restarts from the builder's per-repetition checkpoint.
+    pub wave_restarts: u64,
+    /// Straggler re-executions by the speculative pass.
+    pub stragglers: u64,
+}
+
+impl FaultCounters {
+    /// True if any recovery path fired.
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+
+    /// JSON object for experiment/serving reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task_retries", Json::from(self.task_retries)),
+            ("injected_crashes", Json::from(self.injected_crashes)),
+            ("injected_delays", Json::from(self.injected_delays)),
+            ("corruption_retries", Json::from(self.corruption_retries)),
+            ("wave_restarts", Json::from(self.wave_restarts)),
+            ("stragglers", Json::from(self.stragglers)),
+        ])
     }
 }
 
@@ -206,6 +323,8 @@ pub struct CostReport {
     /// Serving-snapshot telemetry, when the job exported one
     /// (`StarsBuilder::build_indexed`).
     pub snapshot: Option<SnapshotStats>,
+    /// Fault-injection/recovery counters; all zero on a clean run.
+    pub faults: FaultCounters,
 }
 
 impl CostReport {
@@ -226,6 +345,7 @@ impl CostReport {
         if let Some(s) = &self.snapshot {
             pairs.push(("snapshot", s.to_json()));
         }
+        pairs.push(("faults", self.faults.to_json()));
         Json::obj(pairs)
     }
 }
@@ -270,6 +390,39 @@ mod tests {
         let l = CostLedger::new(2);
         l.add_busy(5, 100); // worker 5 % 2 = 1
         assert!(l.total_time() > 0.0);
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_serialize() {
+        let l = CostLedger::new(2);
+        assert!(!l.fault_counters().any(), "clean ledger starts at zero");
+        l.add_task_retry();
+        l.add_injected_crash();
+        l.add_injected_delay();
+        l.add_corruption_retry();
+        l.add_wave_restart();
+        l.add_straggler();
+        let c = l.fault_counters();
+        assert!(c.any());
+        assert_eq!(c.task_retries, 1);
+        assert_eq!(c.injected_crashes, 1);
+        assert_eq!(c.injected_delays, 1);
+        assert_eq!(c.corruption_retries, 1);
+        assert_eq!(c.wave_restarts, 1);
+        assert_eq!(c.stragglers, 1);
+        let j = l.report(0.0).to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        let f = v.get("faults").unwrap();
+        assert_eq!(f.get("task_retries").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(f.get("wave_restarts").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn ledger_carries_its_plan() {
+        let plan = crate::util::fault::FaultPlan::parse("seed=1,crash=0.5").unwrap();
+        let l = CostLedger::with_faults(2, plan);
+        assert_eq!(*l.faults(), plan);
+        assert!(!CostLedger::new(1).faults().is_active());
     }
 
     #[test]

@@ -22,4 +22,4 @@ pub mod terasort;
 
 pub use cluster::Cluster;
 pub use dht::Dht;
-pub use metrics::{CostLedger, CostReport, SnapshotStats};
+pub use metrics::{CostLedger, CostReport, FaultCounters, SnapshotStats};

@@ -8,6 +8,11 @@
 
 use super::metrics::CostLedger;
 use super::terasort::terasort_u64;
+use crate::util::fxhash;
+use crate::util::rng::derive_seed;
+
+/// Stream salt separating shuffle-partition corruption draws from DHT ones.
+const SHUFFLE_CORRUPT_STREAM: u64 = 0x5_4FFE_CC5A_17;
 
 /// A grouped bucket: the shared key and the member point ids.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,22 +23,59 @@ pub struct KeyGroup {
     pub members: Vec<u32>,
 }
 
+/// Order-independent multiset checksum over shuffle records — the same
+/// value before and after sorting, so a sorted partition that fails to
+/// match the pre-shuffle digest has lost or mangled records in transit.
+fn multiset_digest(records: &[(u64, u32)]) -> u64 {
+    records.iter().fold(0u64, |acc, &(key, id)| {
+        acc.wrapping_add(fxhash::hash_u64(fxhash::combine(key, id as u64)))
+    })
+}
+
 /// Group `(key, id)` records by key using a distributed-style shuffle sort.
 /// Returns groups in ascending key order; within a group, members keep
 /// their record order (the radix sort is stable — and the join drivers
 /// emit records in ascending id order, so members come out id-ascending).
 /// Singleton groups are retained (callers usually skip them — no pairs to
 /// score).
+///
+/// When the ledger's fault plan injects corruption, the sorted output is
+/// checksummed against the input's multiset digest and re-sorted on
+/// mismatch (re-charging shuffle bytes — a real re-shuffle moves the bytes
+/// again). The radix pipeline is stable and deterministic, so the retried
+/// result is bit-identical to a clean first pass.
 pub fn shuffle_group(
     records: Vec<(u64, u32)>,
     workers: usize,
     ledger: &CostLedger,
-    _seed: u64,
+    seed: u64,
 ) -> Vec<KeyGroup> {
+    let plan = *ledger.faults();
+    let check = plan.corrupt_prob > 0.0 && !records.is_empty();
+    let want = if check { multiset_digest(&records) } else { 0 };
     // 12 bytes per record: u64 key + u32 id. The stable u64 fast path needs
-    // no splitter sampling, so the seed is unused (kept for signature
-    // stability with the generic terasort-based join).
-    let sorted = terasort_u64(records, workers, 12, |r| r.0, ledger);
+    // no splitter sampling; the seed keys this partition's corruption
+    // stream.
+    let mut sorted = terasort_u64(records, workers, 12, |r| r.0, ledger);
+    if check {
+        let stream = derive_seed(seed, SHUFFLE_CORRUPT_STREAM) ^ want;
+        let mut attempt = 0u32;
+        loop {
+            let mut got = multiset_digest(&sorted);
+            if plan.corrupt(stream, attempt) {
+                got = !got; // injected: the partition read back wrong
+            }
+            if got == want {
+                break;
+            }
+            ledger.add_corruption_retry();
+            attempt += 1;
+            // Re-shuffle. Sorting the already-sorted records through the
+            // same stable pipeline yields the identical permutation a clean
+            // first pass produces, so recovery preserves bit-identity.
+            sorted = terasort_u64(sorted, workers, 12, |r| r.0, ledger);
+        }
+    }
     let mut groups: Vec<KeyGroup> = Vec::new();
     for (key, id) in sorted {
         match groups.last_mut() {
@@ -81,5 +123,32 @@ mod tests {
         let records: Vec<(u64, u32)> = (0..100).map(|i| (i % 10, i as u32)).collect();
         shuffle_group(records, 4, &ledger, 2);
         assert_eq!(ledger.report(0.0).shuffle_bytes, 2 * 12 * 100);
+    }
+
+    #[test]
+    fn injected_corruption_retries_to_identical_groups() {
+        use crate::util::fault::FaultPlan;
+        let records: Vec<(u64, u32)> = (0..200).map(|i| (i % 17, i as u32)).collect();
+        let clean = {
+            let ledger = CostLedger::new(2);
+            shuffle_group(records.clone(), 2, &ledger, 42)
+        };
+        let plan = FaultPlan::parse("seed=8,corrupt=1.0,max_failures=2").unwrap();
+        let ledger = CostLedger::with_faults(2, plan);
+        let groups = shuffle_group(records, 2, &ledger, 42);
+        assert_eq!(groups, clean, "recovery must reproduce the clean grouping");
+        let c = ledger.fault_counters();
+        assert_eq!(c.corruption_retries, 2, "corrupt=1.0 fires max_failures times");
+        // Every retry honestly re-charges the shuffle bytes it re-moves.
+        assert_eq!(ledger.report(0.0).shuffle_bytes, 3 * 2 * 12 * 200);
+    }
+
+    #[test]
+    fn multiset_digest_is_order_independent() {
+        let a = vec![(5u64, 1u32), (3, 2), (9, 5)];
+        let mut b = a.clone();
+        b.reverse();
+        assert_eq!(multiset_digest(&a), multiset_digest(&b));
+        assert_ne!(multiset_digest(&a), multiset_digest(&a[..2]));
     }
 }

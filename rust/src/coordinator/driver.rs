@@ -134,6 +134,18 @@ pub struct ServeOpts {
     /// Rescore width multiplier for the quantized path (ignored unless
     /// `quantized`; clamped to ≥ 1).
     pub rescore_factor: usize,
+    /// Serve the query sweep through an admission-controlled
+    /// [`crate::serve::FrontDoor`] with this in-flight bound (0 = no front
+    /// door; queries hit the engine directly).
+    pub queue_limit: usize,
+    /// Per-query deadline budget for the front door, milliseconds
+    /// (0 = no deadline shedding). Ignored unless `queue_limit > 0`.
+    pub deadline_ms: f64,
+    /// Apply deterministic synthetic pressure to the front door (held
+    /// admission permits) so the report shows the full ladder — admitted,
+    /// degraded, and shed counts — from one run. Ignored unless
+    /// `queue_limit > 0`.
+    pub overload: bool,
 }
 
 impl Default for ServeOpts {
@@ -146,6 +158,9 @@ impl Default for ServeOpts {
             full_rebuild_every: 0,
             quantized: false,
             rescore_factor: 4,
+            queue_limit: 0,
+            deadline_ms: 0.0,
+            overload: false,
         }
     }
 }
@@ -286,6 +301,37 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
             doc.push(("compaction", rep.to_json()));
         }
     }
+    // Admission-controlled front door: replay the query sweep through the
+    // door (unloaded — every batch admits), then optionally apply
+    // deterministic pressure via held permits so one report shows the whole
+    // ladder: admitted, degraded, queue-shed.
+    if opts.queue_limit > 0 {
+        use crate::serve::{AdmissionConfig, FrontDoor};
+        let door = FrontDoor::new(
+            &engine,
+            AdmissionConfig::default()
+                .queue_limit(opts.queue_limit)
+                .deadline_ms(opts.deadline_ms),
+        );
+        let _ = door.query(&qset, k);
+        if opts.overload {
+            // Full backlog: the next batch is shed at the door.
+            let full: Vec<_> = (0..opts.queue_limit).map(|_| door.acquire()).collect();
+            let _ = door.query(&qset, k);
+            drop(full);
+            // Partial backlog at the degrade threshold: served on the
+            // degraded quantized tier when the snapshot carries one.
+            let held = ((door.config().degrade_at * opts.queue_limit as f64).ceil() as usize)
+                .saturating_sub(1);
+            let partial: Vec<_> = (0..held).map(|_| door.acquire()).collect();
+            let _ = door.query(&qset, k);
+            drop(partial);
+        }
+        doc.push(("admission", door.stats().to_json()));
+    }
+    // Build-side fault/recovery counters (nonzero only when a STARS_FAULTS
+    // schedule or a pinned plan injected faults into the build).
+    doc.push(("faults", out.report.faults.to_json()));
     // Final snapshot telemetry (router/CSR/state-table memory), tracked
     // like build costs (ROADMAP "Router memory telemetry").
     doc.push(("snapshot", engine.snapshot().stats().to_json()));
@@ -448,6 +494,56 @@ mod tests {
             snap.get("quant_bytes").unwrap().as_usize().unwrap(),
             510 * 20
         );
+    }
+
+    #[test]
+    fn run_serve_overload_reports_the_admission_ladder() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 500,
+                dim: 16,
+                modes: 8,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                .sketches(6)
+                .threshold(0.4),
+            data_seed: 11,
+            workers: 2,
+        };
+        let opts = ServeOpts {
+            queries: 20,
+            k: 5,
+            quantized: true,
+            queue_limit: 4,
+            overload: true,
+            ..ServeOpts::default()
+        };
+        let doc = run_serve_with(&job, &opts).unwrap();
+        let adm = doc.get("admission").expect("admission stats missing");
+        // Unloaded sweep + degraded sweep admitted; full-backlog sweep shed.
+        assert_eq!(adm.get("admitted").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(adm.get("degraded").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(adm.get("queue_sheds").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(adm.get("deadline_sheds").unwrap().as_usize().unwrap(), 0);
+        assert!(adm.get("depth_high_water").unwrap().as_usize().unwrap() <= 4);
+        assert!(adm.get("ewma_ms").unwrap().as_f64().unwrap() > 0.0);
+        // The fault-free build reports all-zero recovery counters.
+        let faults = doc.get("faults").expect("fault counters missing");
+        assert_eq!(faults.get("task_retries").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(faults.get("wave_restarts").unwrap().as_usize().unwrap(), 0);
+        // Without a queue limit there is no admission object at all.
+        let plain = run_serve_with(
+            &job,
+            &ServeOpts {
+                queries: 10,
+                k: 5,
+                ..ServeOpts::default()
+            },
+        )
+        .unwrap();
+        assert!(plain.get("admission").is_none());
     }
 
     #[test]

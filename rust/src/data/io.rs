@@ -17,6 +17,10 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SDS1";
 
+/// Largest dataset name the loader accepts. A corrupted header claiming a
+/// multi-gigabyte "name" fails fast instead of allocating it.
+const MAX_NAME_LEN: usize = 4096;
+
 /// Write a dataset to `path`.
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     let file = std::fs::File::create(path)
@@ -53,42 +57,103 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
 }
 
 /// Read a dataset from `path`.
+///
+/// Every failure names the file and the section being read, and the header's
+/// claimed sizes are checked against the actual file length *before* any
+/// O(n·dim) allocation — a truncated or bit-flipped header fails with a
+/// diagnostic instead of an OOM or a silent short read.
 pub fn load(path: &Path) -> Result<Dataset> {
     let file =
         std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{}: reading magic (truncated file?)", path.display()))?;
     if &magic != MAGIC {
-        bail!("{}: not a stars dataset file", path.display());
+        bail!(
+            "{}: bad magic {:?} (expected {:?}) — not a stars dataset file",
+            path.display(),
+            magic,
+            MAGIC
+        );
     }
-    let n = read_u64(&mut r)? as usize;
-    let dim = read_u64(&mut r)? as usize;
+    let n = read_u64(&mut r)
+        .with_context(|| format!("{}: reading point count", path.display()))? as usize;
+    let dim = read_u64(&mut r)
+        .with_context(|| format!("{}: reading dimension", path.display()))? as usize;
     let mut flags = [0u8; 2];
-    r.read_exact(&mut flags)?;
+    r.read_exact(&mut flags)
+        .with_context(|| format!("{}: reading feature flags", path.display()))?;
     let (has_sets, has_labels) = (flags[0] != 0, flags[1] != 0);
-    let name_len = read_u32(&mut r)? as usize;
+    let name_len = read_u32(&mut r)
+        .with_context(|| format!("{}: reading name length", path.display()))?
+        as usize;
+    if name_len > MAX_NAME_LEN {
+        bail!(
+            "{}: header claims a {name_len}-byte dataset name (cap {MAX_NAME_LEN}) — \
+             corrupt header",
+            path.display()
+        );
+    }
+    // Minimum bytes the header's claims imply, in u128 so n·dim·4 cannot
+    // itself overflow. Sets are variable-length, so only their mandatory
+    // per-point length fields count toward the floor.
+    let mut need: u128 = (4 + 8 + 8 + 2 + 4 + name_len) as u128 + n as u128 * dim as u128 * 4;
+    if has_labels {
+        need += n as u128 * 4;
+    }
+    if has_sets {
+        need += n as u128 * 4;
+    }
+    if need > file_len as u128 {
+        bail!(
+            "{}: truncated or corrupt: header (n={n}, dim={dim}) requires at least \
+             {need} bytes but the file is {file_len}",
+            path.display()
+        );
+    }
     let mut name_buf = vec![0u8; name_len];
-    r.read_exact(&mut name_buf)?;
-    let name = String::from_utf8(name_buf).context("dataset name not utf8")?;
+    r.read_exact(&mut name_buf)
+        .with_context(|| format!("{}: reading {name_len}-byte name", path.display()))?;
+    let name = String::from_utf8(name_buf)
+        .with_context(|| format!("{}: dataset name not utf8", path.display()))?;
 
     let mut dense = vec![0f32; n * dim];
-    read_f32s(&mut r, &mut dense)?;
+    read_f32s(&mut r, &mut dense)
+        .with_context(|| format!("{}: reading {n}×{dim} dense block", path.display()))?;
     let labels = if has_labels {
         let mut buf = vec![0u32; n];
-        read_u32s(&mut r, &mut buf)?;
+        read_u32s(&mut r, &mut buf)
+            .with_context(|| format!("{}: reading {n} labels", path.display()))?;
         buf
     } else {
         Vec::new()
     };
     let sets = if has_sets {
         let mut sets = Vec::with_capacity(n);
-        for _ in 0..n {
-            let len = read_u32(&mut r)? as usize;
+        for i in 0..n {
+            let len = read_u32(&mut r)
+                .with_context(|| format!("{}: reading set {i} length", path.display()))?
+                as usize;
+            // A set cannot be longer than the whole file: reject the
+            // claimed length before allocating token/weight buffers.
+            if len as u128 * 8 > file_len as u128 {
+                bail!(
+                    "{}: set {i} claims {len} tokens — more than the file can hold; \
+                     corrupt set block",
+                    path.display()
+                );
+            }
             let mut tokens = vec![0u32; len];
-            read_u32s(&mut r, &mut tokens)?;
+            read_u32s(&mut r, &mut tokens)
+                .with_context(|| format!("{}: reading set {i} tokens", path.display()))?;
             let mut weights = vec![0f32; len];
-            read_f32s(&mut r, &mut weights)?;
+            read_f32s(&mut r, &mut weights)
+                .with_context(|| format!("{}: reading set {i} weights", path.display()))?;
             sets.push(WeightedSet { tokens, weights });
         }
         sets
@@ -100,7 +165,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
         (true, true) => Dataset::hybrid(&name, dim, dense, sets, labels),
         (true, false) => Dataset::from_dense(&name, dim, dense, labels),
         (false, true) => Dataset::from_sets(&name, sets, labels),
-        (false, false) => bail!("dataset has neither dense nor set features"),
+        (false, false) => bail!("{}: dataset has neither dense nor set features", path.display()),
     })
 }
 
@@ -187,5 +252,93 @@ mod tests {
         std::fs::write(&p, b"not a dataset").unwrap();
         assert!(load(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    /// Write `bytes` to a temp file and return the load error's full chain.
+    fn err_of(name: &str, bytes: &[u8]) -> String {
+        let p = tmp(name);
+        std::fs::write(&p, bytes).unwrap();
+        let e = format!("{:#}", load(&p).unwrap_err());
+        std::fs::remove_file(&p).ok();
+        e
+    }
+
+    #[test]
+    fn bad_magic_is_diagnosed() {
+        let e = err_of("badmagic", b"XDS1\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0");
+        assert!(e.contains("bad magic"), "got: {e}");
+    }
+
+    #[test]
+    fn truncation_is_diagnosed_per_header_field() {
+        let ds = synth::gaussian_mixture(40, 6, 3, 0.1, 9);
+        let p = tmp("trunc_src");
+        save(&ds, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        // Header layout: magic[0..4] n[4..12] dim[12..20] flags[20..22]
+        // name_len[22..26] name... — cut inside each field and check the
+        // error names the section.
+        for (cut, want) in [
+            (2usize, "reading magic"),
+            (10, "reading point count"),
+            (15, "reading dimension"),
+            (21, "reading feature flags"),
+            (24, "reading name length"),
+            (bytes.len() - 1, "truncated or corrupt"),
+        ] {
+            let e = err_of("trunc", &bytes[..cut]);
+            assert!(e.contains(want), "cut at {cut}: expected {want:?} in: {e}");
+        }
+    }
+
+    #[test]
+    fn absurd_header_fails_before_allocation() {
+        // n·dim ≈ 2^80 dense values: the u128 size check must reject this
+        // instantly rather than attempt the allocation.
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes()); // n
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes()); // dim
+        bytes.extend_from_slice(&[0, 0]); // flags
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // name_len
+        let e = err_of("huge_nd", &bytes);
+        assert!(e.contains("truncated or corrupt"), "got: {e}");
+
+        // A header claiming a 2 GiB dataset name fails on the name cap.
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // dim
+        bytes.extend_from_slice(&[1, 0]); // flags: sets, no labels
+        bytes.extend_from_slice(&(1u32 << 31).to_le_bytes()); // name_len
+        let e = err_of("huge_name", &bytes);
+        assert!(e.contains("dataset name"), "got: {e}");
+    }
+
+    #[test]
+    fn corrupt_set_length_is_diagnosed() {
+        // Valid header for one set-only point, then a set length field
+        // claiming u32::MAX tokens — longer than the file itself.
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // dim
+        bytes.extend_from_slice(&[1, 0]); // flags: sets, no labels
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'x');
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // set 0 length
+        let e = err_of("setlen", &bytes);
+        assert!(e.contains("set 0 claims"), "got: {e}");
+    }
+
+    #[test]
+    fn truncated_set_block_names_the_set() {
+        // Truncation past the minimum-size floor (sets are variable-length)
+        // surfaces in the per-set read context, not a generic EOF.
+        let ds = synth::zipf_sets(50, &synth::ZipfSetsParams::default(), 4);
+        let p = tmp("settrunc_src");
+        save(&ds, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        let e = err_of("settrunc", &bytes[..bytes.len() - 2]);
+        assert!(e.contains("set 49"), "got: {e}");
     }
 }

@@ -51,6 +51,7 @@ USAGE:
   stars serve    (build flags) [--queries N] [--k K] [--inserts N]
                  [--compact-mode incremental|full] [--full-rebuild-every N]
                  [--quantized] [--rescore-c F]
+                 [--queue-limit N] [--deadline-ms MS] [--overload]
                  build a graph, export a serving snapshot, and answer N
                  sampled top-k queries (reports QPS, p50/p99, recall@k);
                  with --inserts, also stream N points in and report the
@@ -58,10 +59,24 @@ USAGE:
                  --full-rebuild-every forces one full rebuild per N
                  incremental compactions (drift bound; mix is reported);
                  --quantized serves int8-first with an exact f32 rescore of
-                 the top k·F survivors (F = --rescore-c, default 4)
+                 the top k·F survivors (F = --rescore-c, default 4);
+                 --queue-limit serves through the admission-controlled front
+                 door (bounded in-flight depth; shed/degrade counters in the
+                 report), --deadline-ms sheds queries whose estimated queue
+                 wait exceeds the budget, and --overload applies synthetic
+                 backlog so one run reports the whole admit/degrade/shed
+                 ladder
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
                  [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
   stars smoke    verify artifacts (PJRT runtime end-to-end)
+
+ENVIRONMENT:
+  STARS_SIMD    force a SIMD backend (scalar|sse2|avx2|neon)
+  STARS_FAULTS  seeded fault-injection schedule for the build pipeline, e.g.
+                \"seed=7,crash=0.1,delay=0.05:40,corrupt=0.05,max_failures=2\"
+                — crashes/delays tasks and corrupts shuffle/DHT traffic
+                deterministically; output is bit-identical, recovery
+                counters appear under \"faults\" in build/serve reports
 ";
 
 fn parse_algo(name: &str) -> stars::Result<Algorithm> {
@@ -178,6 +193,9 @@ fn serve(args: &mut Args) -> stars::Result<()> {
         full_rebuild_every: args.get_parsed_or("full-rebuild-every", 0usize),
         quantized: args.flag("quantized"),
         rescore_factor: args.get_parsed_or("rescore-c", 4usize),
+        queue_limit: args.get_parsed_or("queue-limit", 0usize),
+        deadline_ms: args.get_parsed_or("deadline-ms", 0.0f64),
+        overload: args.flag("overload"),
     };
     let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());

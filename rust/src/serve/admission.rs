@@ -1,0 +1,382 @@
+//! Admission-controlled front door for the [`QueryEngine`].
+//!
+//! At fleet scale the serve layer's failure mode is not a crash but an
+//! overload collapse: unbounded concurrent queries grow tail latency until
+//! every caller times out. The [`FrontDoor`] bounds that failure with a
+//! three-step ladder, cheapest lever first:
+//!
+//! 1. **Admit** — in-flight depth below the degrade threshold: serve the
+//!    configured tier untouched.
+//! 2. **Degrade** — depth at or past `degrade_at × queue_limit`: force the
+//!    quantized first-pass tier with a reduced rescore width
+//!    ([`QueryEngine::query_tier`]), trading a bounded recall dip for exact
+//!    f32 work per query, *before* refusing anyone.
+//! 3. **Shed** — the queue is full ([`ShedReason::QueueFull`]), or the
+//!    EWMA service estimate says the query cannot meet its deadline behind
+//!    the current backlog ([`ShedReason::Deadline`]): refuse immediately —
+//!    an early, explicit rejection the caller can retry against another
+//!    replica, instead of a late timeout.
+//!
+//! Admission is synchronous and conservative (no reordering, no waiting
+//! room): depth is bounded by `queue_limit` at every instant, and admitted
+//! queries are served by the same deterministic engine — so admitted
+//! results are bit-identical to a door-less engine at the same tier, which
+//! is what `tests/fault_injection.rs` asserts while shedding under
+//! synthetic pressure.
+
+use super::executor::QueryEngine;
+use crate::data::types::Dataset;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency reservoir size: a deterministic ring (slot = arrival index mod
+/// cap), enough for stable p99 at bench scale without unbounded growth.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Admission policy knobs.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Maximum concurrent in-flight queries; one more is shed. 0 disables
+    /// the queue bound (and with it the degrade threshold).
+    pub queue_limit: usize,
+    /// Per-query deadline budget, milliseconds. A query whose estimated
+    /// queue wait (`depth × EWMA service time`) already exceeds this is
+    /// shed on arrival. 0 disables deadline shedding.
+    pub deadline_ms: f64,
+    /// Occupancy fraction of `queue_limit` at which the degraded tier
+    /// engages.
+    pub degrade_at: f64,
+    /// Rescore width (`c = k · degraded_rescore`) served under pressure —
+    /// deliberately below the typical configured factor.
+    pub degraded_rescore: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            queue_limit: 64,
+            deadline_ms: 0.0,
+            degrade_at: 0.75,
+            degraded_rescore: 2,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Set the in-flight bound.
+    pub fn queue_limit(mut self, limit: usize) -> Self {
+        self.queue_limit = limit;
+        self
+    }
+
+    /// Set the per-query deadline budget (ms); 0 disables.
+    pub fn deadline_ms(mut self, ms: f64) -> Self {
+        self.deadline_ms = ms;
+        self
+    }
+
+    /// Set the degrade occupancy fraction.
+    pub fn degrade_at(mut self, frac: f64) -> Self {
+        self.degrade_at = frac;
+        self
+    }
+
+    /// Set the degraded tier's rescore width multiplier.
+    pub fn degraded_rescore(mut self, rf: usize) -> Self {
+        self.degraded_rescore = rf.max(1);
+        self
+    }
+}
+
+/// Why a query was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// In-flight depth hit `queue_limit`.
+    QueueFull,
+    /// Estimated wait behind the backlog exceeded the deadline budget.
+    Deadline,
+}
+
+/// Outcome of one front-door query.
+#[derive(Clone, Debug)]
+pub enum Admission {
+    /// Served at the engine's configured tier.
+    Served(Vec<Vec<(u32, f32)>>),
+    /// Served on the degraded quantized tier (reduced rescore width).
+    Degraded(Vec<Vec<(u32, f32)>>),
+    /// Refused; nothing was computed.
+    Shed(ShedReason),
+}
+
+impl Admission {
+    /// The answers, if the query was served at any tier.
+    pub fn results(self) -> Option<Vec<Vec<(u32, f32)>>> {
+        match self {
+            Admission::Served(r) | Admission::Degraded(r) => Some(r),
+            Admission::Shed(_) => None,
+        }
+    }
+
+    /// True when the query was refused.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Admission::Shed(_))
+    }
+}
+
+/// Counter snapshot of a front door's life so far.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AdmissionStats {
+    /// Queries served (either tier).
+    pub admitted: u64,
+    /// Queries served on the degraded quantized tier.
+    pub degraded: u64,
+    /// Queries refused because the queue was full.
+    pub queue_sheds: u64,
+    /// Queries refused by the deadline estimate.
+    pub deadline_sheds: u64,
+    /// Highest concurrent in-flight depth ever admitted (≤ `queue_limit`).
+    pub depth_high_water: usize,
+    /// Median per-query service time over the latency reservoir, ms.
+    pub p50_ms: f64,
+    /// 99th-percentile per-query service time, ms.
+    pub p99_ms: f64,
+    /// Current EWMA per-query service estimate, ms (0 until first sample).
+    pub ewma_ms: f64,
+}
+
+impl AdmissionStats {
+    /// Total refusals, both reasons.
+    pub fn shed(&self) -> u64 {
+        self.queue_sheds + self.deadline_sheds
+    }
+
+    /// JSON object for serving reports and benches.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::from(self.admitted)),
+            ("degraded", Json::from(self.degraded)),
+            ("queue_sheds", Json::from(self.queue_sheds)),
+            ("deadline_sheds", Json::from(self.deadline_sheds)),
+            ("depth_high_water", Json::from(self.depth_high_water)),
+            ("latency_p50_ms", Json::from(self.p50_ms)),
+            ("latency_p99_ms", Json::from(self.p99_ms)),
+            ("ewma_ms", Json::from(self.ewma_ms)),
+        ])
+    }
+}
+
+/// RAII admission slot: holding one occupies in-flight depth; dropping it
+/// releases the slot. [`FrontDoor::query`] uses one internally; tests and
+/// external load drivers hold them to apply deterministic pressure.
+pub struct AdmissionPermit<'d> {
+    in_flight: &'d AtomicUsize,
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The admission-controlled front door over a [`QueryEngine`].
+pub struct FrontDoor<'e, 'f> {
+    engine: &'e QueryEngine<'f>,
+    cfg: AdmissionConfig,
+    in_flight: AtomicUsize,
+    depth_high_water: AtomicUsize,
+    admitted: AtomicU64,
+    degraded: AtomicU64,
+    queue_sheds: AtomicU64,
+    deadline_sheds: AtomicU64,
+    /// EWMA of per-query service time in integer microseconds (0 = no
+    /// sample yet). Fixed-point so it fits one lock-free atomic.
+    ewma_us: AtomicU64,
+    /// Total queries ever recorded into the reservoir (ring index source).
+    observed: AtomicUsize,
+    lat_ms: Mutex<Vec<f64>>,
+}
+
+impl<'e, 'f> FrontDoor<'e, 'f> {
+    /// Front door over an engine with the given policy.
+    pub fn new(engine: &'e QueryEngine<'f>, cfg: AdmissionConfig) -> FrontDoor<'e, 'f> {
+        FrontDoor {
+            engine,
+            cfg,
+            in_flight: AtomicUsize::new(0),
+            depth_high_water: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            queue_sheds: AtomicU64::new(0),
+            deadline_sheds: AtomicU64::new(0),
+            ewma_us: AtomicU64::new(0),
+            observed: AtomicUsize::new(0),
+            lat_ms: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The policy in force.
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Current in-flight depth (queries plus held permits).
+    pub fn depth(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Try to occupy one admission slot. `None` means the queue is full
+    /// (counted as a queue shed). External load drivers hold permits to
+    /// create deterministic backlog; the multi-shard front end will hold
+    /// one per outstanding scatter.
+    pub fn acquire(&self) -> Option<AdmissionPermit<'_>> {
+        let depth = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.cfg.queue_limit > 0 && depth > self.cfg.queue_limit {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.queue_sheds.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.depth_high_water.fetch_max(depth, Ordering::SeqCst);
+        Some(AdmissionPermit {
+            in_flight: &self.in_flight,
+        })
+    }
+
+    /// Admit-or-shed one query batch through the ladder. Admitted batches
+    /// are answered by the underlying engine — bit-identical to calling it
+    /// directly at the same tier.
+    pub fn query(&self, queries: &Dataset, k: usize) -> Admission {
+        let permit = match self.acquire() {
+            Some(p) => p,
+            None => return Admission::Shed(ShedReason::QueueFull),
+        };
+        // Depth including this query — the backlog its wait estimate and
+        // the degrade decision see.
+        let depth = self.depth();
+        if self.cfg.deadline_ms > 0.0 {
+            let ewma_ms = self.ewma_ms();
+            if ewma_ms > 0.0 && depth as f64 * ewma_ms > self.cfg.deadline_ms {
+                drop(permit);
+                self.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                return Admission::Shed(ShedReason::Deadline);
+            }
+        }
+        let degrade = self.cfg.queue_limit > 0
+            && self.cfg.degrade_at > 0.0
+            && (depth as f64) >= self.cfg.degrade_at * self.cfg.queue_limit as f64
+            && self.engine.quant_ready();
+        let t = Instant::now();
+        let results = if degrade {
+            self.engine
+                .query_tier(queries, k, Some(self.cfg.degraded_rescore))
+        } else {
+            self.engine.query(queries, k)
+        };
+        self.observe(t.elapsed().as_secs_f64() * 1e3, queries.len());
+        drop(permit);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        if degrade {
+            self.degraded.fetch_add(1, Ordering::Relaxed);
+            Admission::Degraded(results)
+        } else {
+            Admission::Served(results)
+        }
+    }
+
+    /// Current EWMA per-query service estimate, milliseconds.
+    pub fn ewma_ms(&self) -> f64 {
+        self.ewma_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Fold one batch's service time into the EWMA (α = 1/8) and the
+    /// latency reservoir, normalized to per-query time.
+    fn observe(&self, batch_ms: f64, nq: usize) {
+        let per_query_ms = batch_ms / nq.max(1) as f64;
+        let sample_us = (per_query_ms * 1e3).round().max(1.0) as u64;
+        // Lossy read-modify-write is fine: the EWMA is a shedding heuristic,
+        // not an accounting value.
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let next = if old == 0 {
+            sample_us
+        } else {
+            (old * 7 + sample_us) / 8
+        };
+        self.ewma_us.store(next, Ordering::Relaxed);
+        let slot = self.observed.fetch_add(1, Ordering::Relaxed);
+        let mut lat = self.lat_ms.lock().unwrap();
+        if lat.len() < RESERVOIR_CAP {
+            lat.push(per_query_ms);
+        } else {
+            lat[slot % RESERVOIR_CAP] = per_query_ms;
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> AdmissionStats {
+        let lat = self.lat_ms.lock().unwrap();
+        let (p50, p99) = percentiles(&lat);
+        AdmissionStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            queue_sheds: self.queue_sheds.load(Ordering::Relaxed),
+            deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
+            depth_high_water: self.depth_high_water.load(Ordering::SeqCst),
+            p50_ms: p50,
+            p99_ms: p99,
+            ewma_ms: self.ewma_ms(),
+        }
+    }
+}
+
+/// (p50, p99) of an unsorted sample set, ms; zeros when empty.
+fn percentiles(samples: &[f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let at = |q: f64| {
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx]
+    };
+    (at(0.50), at(0.99))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_small_samples() {
+        assert_eq!(percentiles(&[]), (0.0, 0.0));
+        assert_eq!(percentiles(&[2.0]), (2.0, 2.0));
+        let (p50, p99) = percentiles(&[4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(p50, 3.0);
+        assert_eq!(p99, 5.0);
+    }
+
+    #[test]
+    fn admission_config_builders() {
+        let cfg = AdmissionConfig::default()
+            .queue_limit(8)
+            .deadline_ms(2.5)
+            .degrade_at(0.5)
+            .degraded_rescore(0);
+        assert_eq!(cfg.queue_limit, 8);
+        assert_eq!(cfg.deadline_ms, 2.5);
+        assert_eq!(cfg.degrade_at, 0.5);
+        assert_eq!(cfg.degraded_rescore, 1, "rescore width clamps to ≥ 1");
+    }
+
+    #[test]
+    fn shed_reason_and_results_accessors() {
+        let served = Admission::Served(vec![vec![(1, 0.5)]]);
+        assert!(!served.is_shed());
+        assert_eq!(served.results().unwrap().len(), 1);
+        let shed = Admission::Shed(ShedReason::QueueFull);
+        assert!(shed.is_shed());
+        assert!(shed.clone().results().is_none());
+        assert_ne!(ShedReason::QueueFull, ShedReason::Deadline);
+    }
+}

@@ -194,6 +194,92 @@ mod tests {
     }
 
     #[test]
+    fn absorb_prefix_zero_and_empty_buffer_are_noops() {
+        let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 7);
+        // Absorbing nothing from an empty buffer changes nothing.
+        d.absorb_prefix(0);
+        assert!(d.is_empty());
+        assert_eq!(d.base(), 7);
+        assert_eq!(d.quant().unwrap().len(), 0);
+        // Absorbing a zero-length prefix of a non-empty buffer keeps every
+        // point and every id.
+        d.insert(Some(&[1.0, 2.0]), None);
+        d.insert(Some(&[-3.0, 0.5]), None);
+        d.absorb_prefix(0);
+        assert_eq!(d.base(), 7);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.dataset().row(0), &[1.0, 2.0]);
+        assert_eq!(d.dataset().row(1), &[-3.0, 0.5]);
+        // The next insert continues the id sequence untouched.
+        assert_eq!(d.insert(Some(&[0.0, 1.0]), None), 9);
+    }
+
+    #[test]
+    fn absorb_full_buffer_then_insert_continues_ids() {
+        // An insert that lands while compaction runs keeps its global id:
+        // absorbing the whole pre-compaction prefix moves `base` to exactly
+        // where the new snapshot ends, so the concurrent insert's id is the
+        // next one handed out.
+        let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 50);
+        assert_eq!(d.insert(Some(&[1.0, 0.0]), None), 50);
+        assert_eq!(d.insert(Some(&[0.0, 1.0]), None), 51);
+        // Compaction snapshots len() == 2, then an insert races in.
+        let prefix = d.len();
+        assert_eq!(d.insert(Some(&[0.25, 0.75]), None), 52);
+        d.absorb_prefix(prefix);
+        assert_eq!(d.base(), 52);
+        assert_eq!(d.len(), 1, "the racing insert survives in the tail");
+        assert_eq!(d.dataset().row(0), &[0.25, 0.75]);
+        assert_eq!(d.quant().unwrap().len(), 1);
+        assert_eq!(d.insert(Some(&[5.0, 5.0]), None), 53);
+        // Absorbing everything empties the buffer but keeps ids monotone.
+        let rest = d.len();
+        d.absorb_prefix(rest);
+        assert!(d.is_empty());
+        assert_eq!(d.base(), 54);
+        assert_eq!(d.insert(Some(&[9.0, 9.0]), None), 54);
+    }
+
+    #[test]
+    fn partial_absorb_requantizes_tail_exactly() {
+        // After a partial absorb, the surviving tail's SQ8 codes and scales
+        // must equal a from-scratch quantization of the tail dataset —
+        // per-row SQ8 carries no cross-row state, so the lockstep table
+        // never drifts from what `QuantDataset::from_dataset` would build.
+        let template = Dataset::from_dense("t", 3, vec![1.0, 0.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 0);
+        let rows: [&[f32]; 5] = [
+            &[3.0, -4.0, 0.5],
+            &[0.0, 0.0, 0.0],
+            &[1e-3, -2e-3, 5e-4],
+            &[100.0, 50.0, -25.0],
+            &[-0.75, 0.25, 0.125],
+        ];
+        for r in rows {
+            d.insert(Some(r), None);
+        }
+        d.absorb_prefix(2);
+        let tail = d.quant().unwrap();
+        let fresh = QuantDataset::from_dataset(d.dataset());
+        assert_eq!(tail.len(), fresh.len());
+        assert_eq!(tail.len(), 3);
+        for i in 0..tail.len() {
+            assert_eq!(tail.codes(i), fresh.codes(i), "row {i} codes");
+            assert_eq!(
+                tail.scale(i).to_bits(),
+                fresh.scale(i).to_bits(),
+                "row {i} scale"
+            );
+        }
+        // A post-absorb insert extends the same table in lockstep.
+        d.insert(Some(&[2.0, -2.0, 1.0]), None);
+        assert_eq!(d.quant().unwrap().len(), 4);
+        assert_eq!(d.quant().unwrap().codes(3), &[127, -127, 64]);
+    }
+
+    #[test]
     fn set_deltas_follow_template_kind() {
         let template = Dataset::from_sets("t", vec![WeightedSet::from_tokens(vec![1])], vec![]);
         let mut d = DeltaBuffer::new(&template, 1);

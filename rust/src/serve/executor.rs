@@ -233,6 +233,10 @@ impl TopNeighbors {
 }
 
 /// Answer one query against a consistent (snapshot, delta) view.
+/// `quant_rescore` overrides the snapshot's configured scoring tier:
+/// `Some(rf)` forces the quantized first pass with rescore width `rf`
+/// (the admission front door's degraded tier), `None` serves the
+/// configured tier.
 #[allow(clippy::too_many_arguments)]
 fn answer_one(
     snap: &StarIndex<'_>,
@@ -245,6 +249,7 @@ fn answer_one(
     queries: &Dataset,
     measure: ServeMeasure,
     k: usize,
+    quant_rescore: Option<usize>,
     s: &mut QueryScratch,
 ) -> Vec<(u32, f32)> {
     let cfg = snap.config();
@@ -273,8 +278,12 @@ fn answer_one(
     }
     // Quantized two-pass path: int8 estimates over the whole candidate set
     // (snapshot and delta), then an exact rescore of the top survivors.
+    let (want_quant, rescore_factor) = match quant_rescore {
+        Some(rf) => (true, rf.max(1)),
+        None => (cfg.quantized, cfg.rescore_factor.max(1)),
+    };
     if k > 0
-        && cfg.quantized
+        && want_quant
         && measure.supports_quant()
         && (delta.is_empty() || delta_quant.is_some())
     {
@@ -285,7 +294,7 @@ fn answer_one(
             let qnorm = queries.norm(qi);
             // First pass: keep c = k · rescore_factor estimated-best ids
             // under the same (score desc, id asc) order as the exact path.
-            let c = k.saturating_mul(cfg.rescore_factor.max(1));
+            let c = k.saturating_mul(rescore_factor);
             let mut first = TopNeighbors::new(c);
             sq.dot_estimates_with(backend, &s.qcodes, qscale, &s.cands, &mut s.scores);
             for (&cand, &est) in s.cands.iter().zip(s.scores.iter()) {
@@ -409,6 +418,10 @@ pub struct CompactionReport {
     /// Incremental compactions this engine has run so far, this one
     /// included.
     pub incremental_compactions: u64,
+    /// Fault-recovery events absorbed by the compaction's rebuild (task
+    /// retries + corruption re-fetches from the build cluster's ledger);
+    /// 0 for incremental compactions (no cluster) and clean rebuilds.
+    pub fault_retries: u64,
     /// Memory/size telemetry of the new snapshot epoch.
     pub snapshot: SnapshotStats,
 }
@@ -428,6 +441,7 @@ impl CompactionReport {
                 "incremental_compactions",
                 Json::from(self.incremental_compactions),
             ),
+            ("fault_retries", Json::from(self.fault_retries)),
             ("snapshot", self.snapshot.to_json()),
         ])
     }
@@ -533,6 +547,23 @@ impl<'f> QueryEngine<'f> {
     /// assert!((top[0][0].1 - 1.0).abs() < 1e-5);
     /// ```
     pub fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        self.query_tier(queries, k, None)
+    }
+
+    /// [`QueryEngine::query`] with an explicit scoring-tier override:
+    /// `Some(rf)` forces the quantized first pass with rescore width
+    /// `c = k · rf` regardless of the snapshot's configured tier — the
+    /// admission front door's graceful-degradation lever (a narrower
+    /// rescore scores fewer exact rows per query under pressure). `None`
+    /// serves the configured tier; callers should check
+    /// [`QueryEngine::quant_ready`] first — without an SQ8 table the
+    /// override falls back to the exact path.
+    pub fn query_tier(
+        &self,
+        queries: &Dataset,
+        k: usize,
+        quant_rescore: Option<usize>,
+    ) -> Vec<Vec<(u32, f32)>> {
         let nq = queries.len();
         if nq == 0 {
             return Vec::new();
@@ -569,10 +600,20 @@ impl<'f> QueryEngine<'f> {
                     queries,
                     measure,
                     k,
+                    quant_rescore,
                     s,
                 )
             })
         })
+    }
+
+    /// True when the degraded quantized tier can actually serve: the
+    /// current snapshot carries an SQ8 table and the measure has an int8
+    /// kernel. The front door only counts a query as degraded when this
+    /// holds — otherwise the tier override is a no-op and the query was
+    /// served exact.
+    pub fn quant_ready(&self) -> bool {
+        self.measure.supports_quant() && self.snapshot.read().unwrap().quant().is_some()
     }
 
     /// Stream one point in (dense row and/or token set, matching the
@@ -731,6 +772,7 @@ impl<'f> QueryEngine<'f> {
             seconds: 0.0,
             full_compactions: 0,
             incremental_compactions: 0,
+            fault_retries: out.report.faults.task_retries + out.report.faults.corruption_retries,
             snapshot: SnapshotStats::default(),
         };
         (next, report)
@@ -867,6 +909,7 @@ impl<'f> QueryEngine<'f> {
             seconds: 0.0,
             full_compactions: 0,
             incremental_compactions: 0,
+            fault_retries: 0,
             snapshot: SnapshotStats::default(),
         };
         (next, report)

@@ -66,11 +66,13 @@
 //! score-descending then id-ascending). Asserted by
 //! `tests/serve_integration.rs`.
 
+pub mod admission;
 pub mod delta;
 pub mod executor;
 pub mod index;
 pub mod router;
 
+pub use admission::{Admission, AdmissionConfig, AdmissionPermit, AdmissionStats, FrontDoor, ShedReason};
 pub use delta::DeltaBuffer;
 pub use executor::{brute_force_topk, CompactionReport, QueryEngine, ServeMeasure};
 pub use index::StarIndex;

@@ -48,6 +48,12 @@ pub struct BuildOutput {
     pub params: BuildParams,
 }
 
+/// Wave-restart budget: a failed wave is re-driven from its checkpoint at
+/// most this many times before the failure is allowed to surface. The
+/// cluster's per-task failure record persists across restarts, so any
+/// bounded fault schedule converges well inside this.
+const MAX_WAVE_RESTARTS: u32 = 32;
+
 /// Builder for a Stars graph construction job.
 pub struct StarsBuilder<'a> {
     ds: &'a Dataset,
@@ -55,6 +61,7 @@ pub struct StarsBuilder<'a> {
     family: Option<&'a dyn LshFamily>,
     params: Option<BuildParams>,
     workers: usize,
+    faults: Option<crate::util::fault::FaultPlan>,
 }
 
 impl<'a> StarsBuilder<'a> {
@@ -66,6 +73,7 @@ impl<'a> StarsBuilder<'a> {
             family: None,
             params: None,
             workers: crate::util::pool::default_workers(),
+            faults: None,
         }
     }
 
@@ -90,6 +98,17 @@ impl<'a> StarsBuilder<'a> {
     /// Worker count for the simulated cluster (default: host cores).
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Pin an explicit fault schedule for this build's cluster (default:
+    /// whatever `STARS_FAULTS` says, inert when unset). Tests use this —
+    /// mutating the process environment races across parallel test
+    /// threads; a pinned plan does not. The build's output is
+    /// bit-identical under any plan; only the recovery counters on the
+    /// report differ.
+    pub fn faults(mut self, plan: crate::util::fault::FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -132,7 +151,10 @@ impl<'a> StarsBuilder<'a> {
     ) -> (BuildOutput, Vec<Option<Vec<u64>>>) {
         let params = self.params.expect("params not set");
         let sim = self.sim.expect("similarity not set");
-        let cluster = Cluster::new(self.workers);
+        let cluster = match self.faults {
+            Some(plan) => Cluster::with_faults(self.workers, plan),
+            None => Cluster::new(self.workers),
+        };
         let n = self.ds.len();
 
         let ((graph, kept), report) = cluster.run_job(|c| {
@@ -164,27 +186,54 @@ impl<'a> StarsBuilder<'a> {
                 // identical for any split (see lsh_rep_par docs), so the
                 // graph does not depend on the wave geometry.
                 let inner = (wave / count).max(1);
-                let results = c.map_timed(count, |t, ledger| {
-                    let rep = (done + t) as u64;
-                    match params.algorithm {
-                        Algorithm::Lsh | Algorithm::LshStars => threshold::lsh_rep_par_keys(
-                            self.ds,
-                            sim,
-                            family,
-                            &params,
-                            rep,
-                            ledger,
-                            dht,
-                            inner,
-                            (rep as usize) < keep_keys,
-                        ),
-                        Algorithm::SortingLsh | Algorithm::SortingLshStars => (
-                            knn::sorting_rep_par(self.ds, sim, family, &params, rep, ledger, inner),
-                            None,
-                        ),
-                        Algorithm::AllPair => unreachable!(),
+                // Checkpointed wave execution: `done` completed repetitions
+                // are already folded into the accumulator, so a wave that
+                // fails (a task exhausted its in-place retry budget) is
+                // re-driven from here rather than restarting the build.
+                // The wave's round label is `done`, stable across restarts,
+                // so the fault schedule — and every repetition's output —
+                // is the same on the re-drive; the accumulator is only
+                // touched after the wave succeeds.
+                let mut restarts = 0u32;
+                let results = loop {
+                    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        c.map_timed_round(done as u64, count, |t, ledger| {
+                            let rep = (done + t) as u64;
+                            match params.algorithm {
+                                Algorithm::Lsh | Algorithm::LshStars => {
+                                    threshold::lsh_rep_par_keys(
+                                        self.ds,
+                                        sim,
+                                        family,
+                                        &params,
+                                        rep,
+                                        ledger,
+                                        dht,
+                                        inner,
+                                        (rep as usize) < keep_keys,
+                                    )
+                                }
+                                Algorithm::SortingLsh | Algorithm::SortingLshStars => (
+                                    knn::sorting_rep_par(
+                                        self.ds, sim, family, &params, rep, ledger, inner,
+                                    ),
+                                    None,
+                                ),
+                                Algorithm::AllPair => unreachable!(),
+                            }
+                        })
+                    }));
+                    match attempt {
+                        Ok(r) => break r,
+                        Err(payload) => {
+                            restarts += 1;
+                            if !c.ledger().faults().is_active() || restarts > MAX_WAVE_RESTARTS {
+                                std::panic::resume_unwind(payload);
+                            }
+                            c.ledger().add_wave_restart();
+                        }
                     }
-                });
+                };
                 let mut batches = Vec::with_capacity(results.len());
                 for (t, (edges, keys)) in results.into_iter().enumerate() {
                     if let Some(k) = keys {

@@ -1,0 +1,277 @@
+//! Deterministic fault injection: seeded crash / delay / corruption
+//! schedules for the AMPC pipeline.
+//!
+//! At tera scale worker failure is the steady state, not the exception, so
+//! the recovery paths (task retry, wave restart, checksum re-fetch) need to
+//! be exercised continuously — but a fault test that cannot be replayed is
+//! worse than none. A [`FaultPlan`] is therefore a pure function of
+//! `(seed, round, task, attempt)`: the same plan injects the same faults at
+//! the same points in every run, on any worker count, which is what lets
+//! `tests/fault_injection.rs` assert the hard invariant that build output
+//! and serve top-k are **bit-identical** under any schedule (recovery is
+//! pure re-execution of deterministic tasks).
+//!
+//! A plan is typically supplied through the `STARS_FAULTS` environment
+//! variable (read once per [`crate::ampc::Cluster`] construction):
+//!
+//! ```text
+//! STARS_FAULTS="seed=7,crash=0.1,delay=0.05:40,corrupt=0.05,max_failures=2"
+//! ```
+//!
+//! * `crash=P` — before executing, a task crashes with probability `P`
+//!   until it has accumulated `max_failures` recorded failures; retries
+//!   then run it clean (the schedule models "this task's host died twice").
+//! * `delay=P:MS` — a task's *first* attempt is stalled `MS` milliseconds
+//!   with probability `P` (a straggler; the re-execution pass covers it).
+//! * `corrupt=P` — a shuffle partition / DHT batch response fails its
+//!   checksum with probability `P` on each of the first `max_failures`
+//!   attempts, forcing a re-fetch/re-sort.
+//! * `max_failures=N` — per-decision-point failure budget (default 2).
+//!
+//! Tests should *not* set the env var (parallel test threads race on it);
+//! they pin a plan explicitly via `StarsBuilder::faults` /
+//! `Cluster::with_faults`.
+
+use crate::util::rng::{derive_seed, SplitMix64};
+
+/// Stream-id salt separating crash/delay draws from corruption draws.
+const CORRUPT_TAG: u64 = 0xC0DE_D1CE_BAD_F00D;
+/// Stream-id salt separating the round dimension from raw task ids.
+const ROUND_TAG: u64 = 0x5EED_0FA1_1ED_40B5;
+
+/// What a task's next attempt should suffer, per the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Run clean.
+    None,
+    /// The task's host "dies" before producing a result.
+    Crash,
+    /// The task is stalled for the given number of milliseconds first.
+    Delay(u64),
+}
+
+/// A seeded, replayable fault schedule. `Copy` so it rides on the shared
+/// [`crate::ampc::CostLedger`] without lifetime plumbing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed; every decision point derives its own stream from it.
+    pub seed: u64,
+    /// Per-(round, task) crash probability while under the failure budget.
+    pub crash_prob: f64,
+    /// Probability a task's first attempt is delayed.
+    pub delay_prob: f64,
+    /// Injected delay length, milliseconds.
+    pub delay_ms: u64,
+    /// Per-attempt checksum-corruption probability for shuffle/DHT traffic.
+    pub corrupt_prob: f64,
+    /// How many failures each decision point may accumulate before the
+    /// schedule lets it through (bounds injected retries; a real system's
+    /// analogue is "the scheduler moved the task to a healthy host").
+    pub max_failures: u32,
+}
+
+impl FaultPlan {
+    /// The inert plan: injects nothing, adds no overhead on hot paths.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            crash_prob: 0.0,
+            delay_prob: 0.0,
+            delay_ms: 0,
+            corrupt_prob: 0.0,
+            max_failures: 2,
+        }
+    }
+
+    /// True if any fault kind has nonzero probability.
+    pub fn is_active(&self) -> bool {
+        self.crash_prob > 0.0 || self.delay_prob > 0.0 || self.corrupt_prob > 0.0
+    }
+
+    /// Read the plan from `STARS_FAULTS`, or the inert plan when unset.
+    /// A malformed spec is a configuration error and panics loudly rather
+    /// than silently running fault-free.
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("STARS_FAULTS") {
+            Ok(spec) => match FaultPlan::parse(&spec) {
+                Ok(p) => p,
+                Err(e) => panic!("invalid STARS_FAULTS spec {spec:?}: {e}"),
+            },
+            Err(_) => FaultPlan::none(),
+        }
+    }
+
+    /// Parse a `key=value` comma list, e.g.
+    /// `"seed=7,crash=0.1,delay=0.05:40,corrupt=0.05,max_failures=2"`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            let bad = |e: &dyn std::fmt::Display| format!("bad value for {key}: {e}");
+            match key {
+                "seed" => plan.seed = val.parse().map_err(|e| bad(&e))?,
+                "crash" => plan.crash_prob = parse_prob(key, val)?,
+                "delay" => {
+                    // delay=P or delay=P:MS (MS defaults to 20).
+                    let (p, ms) = match val.split_once(':') {
+                        Some((p, ms)) => {
+                            (parse_prob(key, p)?, ms.parse().map_err(|e| bad(&e))?)
+                        }
+                        None => (parse_prob(key, val)?, 20),
+                    };
+                    plan.delay_prob = p;
+                    plan.delay_ms = ms;
+                }
+                "corrupt" => plan.corrupt_prob = parse_prob(key, val)?,
+                "max_failures" => plan.max_failures = val.parse().map_err(|e| bad(&e))?,
+                _ => return Err(format!("unknown fault key {key:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// What should attempt number `attempt` (0-based count of *recorded
+    /// failures* at this decision point) of task `task` in round `round`
+    /// suffer? Pure: same arguments, same answer, forever.
+    pub fn decide(&self, round: u64, task: u64, attempt: u32) -> Fault {
+        if !self.is_active() {
+            return Fault::None;
+        }
+        let mut sm = SplitMix64::new(derive_seed(
+            derive_seed(self.seed, round ^ ROUND_TAG),
+            task,
+        ));
+        let u_crash = sm.next_f64();
+        let u_delay = sm.next_f64();
+        if self.crash_prob > 0.0 && u_crash < self.crash_prob && attempt < self.max_failures {
+            return Fault::Crash;
+        }
+        if self.delay_prob > 0.0 && u_delay < self.delay_prob && attempt == 0 {
+            return Fault::Delay(self.delay_ms);
+        }
+        Fault::None
+    }
+
+    /// Should the payload identified by `stream` (a content digest or a
+    /// derived partition id) fail its checksum on attempt `attempt`?
+    /// Injection stops after `max_failures` attempts so a plan with
+    /// `corrupt=1.0` still terminates — deterministically, after exactly
+    /// `max_failures` retries per payload.
+    pub fn corrupt(&self, stream: u64, attempt: u32) -> bool {
+        if self.corrupt_prob <= 0.0 || attempt >= self.max_failures {
+            return false;
+        }
+        let mut sm = SplitMix64::new(derive_seed(
+            self.seed ^ CORRUPT_TAG,
+            derive_seed(stream, attempt as u64),
+        ));
+        sm.next_f64() < self.corrupt_prob
+    }
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64, String> {
+    let p: f64 = val
+        .parse()
+        .map_err(|e| format!("bad value for {key}: {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("{key} probability {p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("seed=7,crash=0.1,delay=0.05:40,corrupt=0.05,max_failures=3")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.crash_prob, 0.1);
+        assert_eq!(p.delay_prob, 0.05);
+        assert_eq!(p.delay_ms, 40);
+        assert_eq!(p.corrupt_prob, 0.05);
+        assert_eq!(p.max_failures, 3);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parse_defaults_and_empty() {
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p, FaultPlan::none());
+        assert!(!p.is_active());
+        let p = FaultPlan::parse("delay=0.5").unwrap();
+        assert_eq!(p.delay_ms, 20, "delay ms defaults to 20");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("crash").is_err());
+        assert!(FaultPlan::parse("crash=notanumber").is_err());
+        assert!(FaultPlan::parse("crash=1.5").is_err());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_seed_sensitive() {
+        let p = FaultPlan::parse("seed=11,crash=0.5,delay=0.5:5").unwrap();
+        let q = FaultPlan::parse("seed=12,crash=0.5,delay=0.5:5").unwrap();
+        let mut differ = false;
+        for round in 0..4u64 {
+            for task in 0..16u64 {
+                for attempt in 0..3u32 {
+                    assert_eq!(
+                        p.decide(round, task, attempt),
+                        p.decide(round, task, attempt),
+                        "same plan must redecide identically"
+                    );
+                }
+                if p.decide(round, task, 0) != q.decide(round, task, 0) {
+                    differ = true;
+                }
+            }
+        }
+        assert!(differ, "different seeds should yield different schedules");
+    }
+
+    #[test]
+    fn crash_respects_failure_budget() {
+        let p = FaultPlan::parse("seed=3,crash=1.0,max_failures=2").unwrap();
+        for task in 0..8u64 {
+            assert_eq!(p.decide(0, task, 0), Fault::Crash);
+            assert_eq!(p.decide(0, task, 1), Fault::Crash);
+            assert_eq!(p.decide(0, task, 2), Fault::None, "budget exhausted");
+        }
+    }
+
+    #[test]
+    fn delay_only_hits_first_attempt() {
+        let p = FaultPlan::parse("seed=3,delay=1.0:7").unwrap();
+        assert_eq!(p.decide(1, 4, 0), Fault::Delay(7));
+        assert_eq!(p.decide(1, 4, 1), Fault::None);
+    }
+
+    #[test]
+    fn corruption_terminates_under_certainty() {
+        let p = FaultPlan::parse("seed=9,corrupt=1.0,max_failures=2").unwrap();
+        assert!(p.corrupt(0xABCD, 0));
+        assert!(p.corrupt(0xABCD, 1));
+        assert!(!p.corrupt(0xABCD, 2), "injection stops at the budget");
+        let inert = FaultPlan::none();
+        assert!(!inert.corrupt(0xABCD, 0));
+    }
+
+    #[test]
+    fn inert_plan_decides_none_without_drawing() {
+        let p = FaultPlan::none();
+        assert_eq!(p.decide(0, 0, 0), Fault::None);
+        assert_eq!(p.decide(9, 9, 9), Fault::None);
+    }
+}

@@ -6,6 +6,7 @@
 //! harness, timing harness — is implemented here.
 
 pub mod rng;
+pub mod fault;
 pub mod json;
 pub mod args;
 pub mod bits;

@@ -170,6 +170,17 @@ where
 /// [`parallel_map`] reporting each worker thread's busy span (its whole
 /// task loop, one callback per worker) to `busy(worker_index, nanos)`. The
 /// serial path reports index 0.
+///
+/// # Panic isolation
+///
+/// On the parallel path each task runs under `catch_unwind`: a panicking
+/// closure stops neither its worker (the cursor loop continues, so every
+/// task still executes) nor the other workers, and after the scope joins
+/// the first panic *by task index* is re-raised on the caller's thread —
+/// deterministic regardless of which worker hit it first. Without this, a
+/// worker thread dying mid-loop would strand its queued tasks and the
+/// scope join would abort the process on the poisoned handle. The serial
+/// path propagates directly (same thread, nothing to strand).
 pub fn parallel_map_timed<R, F, B>(n: usize, workers: usize, busy: B, f: F) -> Vec<R>
 where
     R: Send,
@@ -184,7 +195,7 @@ where
         return out;
     }
     let cursor = AtomicUsize::new(0);
-    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+    let parts: Vec<Vec<(usize, std::thread::Result<R>)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
                 let cursor = &cursor;
@@ -198,7 +209,10 @@ where
                         if i >= n {
                             break;
                         }
-                        local.push((i, f(i)));
+                        local.push((
+                            i,
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))),
+                        ));
                     }
                     busy(w, t.elapsed().as_nanos() as u64);
                     local
@@ -207,7 +221,7 @@ where
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    let mut slots: Vec<Option<std::thread::Result<R>>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
     for part in parts {
         for (i, r) in part {
@@ -215,10 +229,22 @@ where
             slots[i] = Some(r);
         }
     }
-    slots
-        .into_iter()
-        .map(|s| s.expect("task not executed"))
-        .collect()
+    let mut out = Vec::with_capacity(n);
+    let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for slot in slots {
+        match slot.expect("task not executed") {
+            Ok(r) => out.push(r),
+            Err(payload) => {
+                if first_panic.is_none() {
+                    first_panic = Some(payload);
+                }
+            }
+        }
+    }
+    if let Some(payload) = first_panic {
+        std::panic::resume_unwind(payload);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -362,5 +388,34 @@ mod tests {
         for (i, r) in out.iter().enumerate() {
             assert_eq!(r.0, i);
         }
+    }
+
+    #[test]
+    fn panicking_task_does_not_deadlock_parallel_map() {
+        // Regression: a worker used to die on the first panic, stranding
+        // its queued tasks and aborting the scope join. Now every task
+        // still runs, the pool drains, and the first panic *by task index*
+        // surfaces on the caller — deterministically, whichever worker
+        // tripped it first.
+        let executed = AtomicU64::new(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map(64, 4, |i| {
+                executed.fetch_add(1, Ordering::Relaxed);
+                if i == 31 || i == 7 {
+                    panic!("task {i} failed");
+                }
+                i
+            })
+        }));
+        let payload = r.expect_err("panic must surface to the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("formatted panic payload");
+        assert_eq!(msg, "task 7 failed", "lowest task index wins");
+        assert_eq!(
+            executed.load(Ordering::Relaxed),
+            64,
+            "all tasks still execute; no worker strands its queue"
+        );
     }
 }

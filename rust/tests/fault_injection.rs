@@ -1,0 +1,300 @@
+//! Fault-injection acceptance tests: the hard invariant is that a build
+//! under *any* seeded fault schedule — crashes, delays, corrupted shuffle
+//! partitions / DHT batches — produces bit-identical output to the
+//! fault-free build (edges, CSR, and serve top-k), for one worker and for
+//! many, while the recovery counters on the report prove the schedule
+//! actually fired. Recovery is pure re-execution of deterministic tasks,
+//! so anything short of bit-identity is a recovery bug.
+//!
+//! Every build here pins its plan via [`StarsBuilder::faults`] — never the
+//! `STARS_FAULTS` env var, which races across parallel test threads (and
+//! which `scripts/ci.sh` sets for whole re-runs of this file; the explicit
+//! pins make those runs exercise exactly the same schedules).
+//!
+//! The overload tests at the bottom cover the serve-side half of the
+//! robustness story: the [`FrontDoor`] admission ladder sheds and degrades
+//! under synthetic pressure while admitted queries stay bit-identical to a
+//! door-less engine.
+
+use stars::data::synth;
+use stars::lsh::SimHash;
+use stars::serve::{
+    Admission, AdmissionConfig, FrontDoor, QueryEngine, ServeConfig, ServeMeasure, ShedReason,
+};
+use stars::sim::CosineSim;
+use stars::stars::{Algorithm, BuildOutput, BuildParams, JoinStrategy, StarsBuilder};
+use stars::util::fault::FaultPlan;
+
+fn fixture() -> stars::data::Dataset {
+    synth::gaussian_mixture(800, 16, 10, 0.08, 33)
+}
+
+fn params(join: JoinStrategy) -> BuildParams {
+    BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(6)
+        .threshold(0.4)
+        .join(join)
+}
+
+fn build_with(
+    ds: &stars::data::Dataset,
+    h: &SimHash,
+    plan: FaultPlan,
+    workers: usize,
+    join: JoinStrategy,
+) -> BuildOutput {
+    StarsBuilder::new(ds)
+        .similarity(&CosineSim)
+        .hash(h)
+        .params(params(join))
+        .workers(workers)
+        .faults(plan)
+        .build()
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).expect("test plan spec")
+}
+
+#[test]
+fn crash_schedule_build_is_bit_identical() {
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    let clean = build_with(&ds, &h, FaultPlan::none(), 1, JoinStrategy::Direct);
+    assert!(!clean.report.faults.any(), "inert plan must count nothing");
+    for workers in [1usize, 4] {
+        let out = build_with(
+            &ds,
+            &h,
+            plan("seed=11,crash=0.9,max_failures=2"),
+            workers,
+            JoinStrategy::Direct,
+        );
+        assert_eq!(
+            out.graph.edges(),
+            clean.graph.edges(),
+            "crash schedule changed the graph ({workers} workers)"
+        );
+        assert!(
+            out.report.faults.injected_crashes > 0,
+            "schedule never fired ({workers} workers)"
+        );
+        assert!(out.report.faults.task_retries > 0);
+    }
+}
+
+#[test]
+fn delay_schedule_build_is_bit_identical() {
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    let clean = build_with(&ds, &h, FaultPlan::none(), 1, JoinStrategy::Direct);
+    for workers in [1usize, 4] {
+        let out = build_with(
+            &ds,
+            &h,
+            plan("seed=5,delay=0.95:30"),
+            workers,
+            JoinStrategy::Direct,
+        );
+        assert_eq!(
+            out.graph.edges(),
+            clean.graph.edges(),
+            "delay schedule changed the graph ({workers} workers)"
+        );
+        assert!(
+            out.report.faults.injected_delays > 0,
+            "schedule never fired ({workers} workers)"
+        );
+    }
+}
+
+#[test]
+fn corruption_schedules_build_bit_identical() {
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    for join in [JoinStrategy::Shuffle, JoinStrategy::Dht] {
+        let clean = build_with(&ds, &h, FaultPlan::none(), 1, join);
+        for workers in [1usize, 4] {
+            let out = build_with(
+                &ds,
+                &h,
+                plan("seed=9,corrupt=0.9,max_failures=2"),
+                workers,
+                join,
+            );
+            assert_eq!(
+                out.graph.edges(),
+                clean.graph.edges(),
+                "corruption changed the graph ({join:?}, {workers} workers)"
+            );
+            assert!(
+                out.report.faults.corruption_retries > 0,
+                "no checksum retries fired ({join:?}, {workers} workers)"
+            );
+        }
+    }
+}
+
+#[test]
+fn total_crash_schedule_recovers_via_wave_restarts() {
+    // crash=1.0 with max_failures=5: every task crashes three times in its
+    // first wave (exhausting the in-place retry budget → wave restart),
+    // twice more in the restarted wave, then runs clean because the
+    // persistent per-(round, task) failure record crossed the budget. The
+    // build must complete with the exact fault-free graph.
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    let clean = build_with(&ds, &h, FaultPlan::none(), 1, JoinStrategy::Direct);
+    let out = build_with(
+        &ds,
+        &h,
+        plan("seed=2,crash=1.0,max_failures=5"),
+        4,
+        JoinStrategy::Direct,
+    );
+    assert_eq!(out.graph.edges(), clean.graph.edges());
+    assert!(out.report.faults.wave_restarts > 0, "no wave ever restarted");
+    assert!(out.report.faults.injected_crashes >= 5);
+}
+
+#[test]
+fn serve_topk_is_bit_identical_under_faults() {
+    // End to end: a faulted build's serving snapshot answers every query
+    // exactly like the fault-free one, across worker counts.
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    let qids: Vec<u32> = (0..800u32).step_by(37).collect();
+    let queries = ds.subset(&qids);
+    let serve_cfg = || ServeConfig::default().route_reps(6).compact_limit(0);
+    let build_engine = |plan: FaultPlan, workers: usize| {
+        let p = params(JoinStrategy::Direct);
+        let (out, index) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(p.clone())
+            .workers(workers)
+            .faults(plan)
+            .build_indexed(serve_cfg());
+        (
+            out.report.faults,
+            QueryEngine::new(index, &h, ServeMeasure::Cosine, p).workers(workers),
+        )
+    };
+    let (_, clean) = build_engine(FaultPlan::none(), 1);
+    let baseline = clean.query(&queries, 10);
+    drop(clean);
+    for workers in [1usize, 4] {
+        let (counters, engine) =
+            build_engine(plan("seed=17,crash=0.8,delay=0.5:25,max_failures=2"), workers);
+        assert!(counters.any(), "mixed schedule never fired");
+        assert_eq!(
+            engine.query(&queries, 10),
+            baseline,
+            "faulted build serves different top-k ({workers} workers)"
+        );
+    }
+}
+
+/// Quantized engine fixture for the admission tests (the degraded tier
+/// needs an SQ8 table on the snapshot).
+fn quantized_engine(h: &SimHash, workers: usize) -> (stars::data::Dataset, QueryEngine<'_>) {
+    let ds = fixture();
+    let p = params(JoinStrategy::Direct);
+    let (_, index) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(h)
+        .params(p.clone())
+        .workers(workers)
+        .faults(FaultPlan::none())
+        .build_indexed(
+            ServeConfig::default()
+                .route_reps(6)
+                .compact_limit(0)
+                .quantized(4),
+        );
+    let engine = QueryEngine::new(index, h, ServeMeasure::Cosine, p).workers(workers);
+    (ds, engine)
+}
+
+#[test]
+fn front_door_admits_degrades_and_sheds_in_order() {
+    let h = SimHash::new(16, 8, 7);
+    let (ds, engine) = quantized_engine(&h, 2);
+    let qids: Vec<u32> = (0..800u32).step_by(53).collect();
+    let queries = ds.subset(&qids);
+    let door = FrontDoor::new(
+        &engine,
+        AdmissionConfig::default()
+            .queue_limit(4)
+            .degrade_at(0.5)
+            .degraded_rescore(2),
+    );
+
+    // Unloaded: admitted results are bit-identical to the door-less engine.
+    match door.query(&queries, 10) {
+        Admission::Served(got) => assert_eq!(got, engine.query(&queries, 10)),
+        other => panic!("unloaded query not served untouched: {other:?}"),
+    }
+
+    // One held permit puts the query at depth 2 = degrade_at × queue_limit:
+    // served on the degraded tier, bit-identical to query_tier at the
+    // reduced rescore width.
+    let _backlog = door.acquire().expect("depth 1 admits");
+    match door.query(&queries, 10) {
+        Admission::Degraded(got) => {
+            assert_eq!(got, engine.query_tier(&queries, 10, Some(2)));
+        }
+        other => panic!("pressured query not degraded: {other:?}"),
+    }
+
+    // Fill the queue: the next query is shed without computing anything.
+    let _b2 = door.acquire().expect("depth 2 admits");
+    let _b3 = door.acquire().expect("depth 3 admits");
+    let _b4 = door.acquire().expect("depth 4 admits");
+    assert!(door.acquire().is_none(), "queue_limit must bound depth");
+    match door.query(&queries, 10) {
+        Admission::Shed(ShedReason::QueueFull) => {}
+        other => panic!("overloaded query not shed: {other:?}"),
+    }
+
+    let stats = door.stats();
+    assert_eq!(stats.admitted, 2);
+    assert_eq!(stats.degraded, 1);
+    assert!(stats.queue_sheds >= 2, "permit denial and query shed both count");
+    assert_eq!(stats.deadline_sheds, 0);
+    assert!(
+        stats.depth_high_water <= 4,
+        "depth exceeded queue_limit: {}",
+        stats.depth_high_water
+    );
+    assert!(stats.p99_ms >= stats.p50_ms);
+    assert!(stats.ewma_ms > 0.0);
+    assert!(stats.shed() >= 2);
+}
+
+#[test]
+fn front_door_deadline_shedding_uses_the_ewma() {
+    let h = SimHash::new(16, 8, 7);
+    let (ds, engine) = quantized_engine(&h, 2);
+    let queries = ds.subset(&[1, 50, 99]);
+    let door = FrontDoor::new(
+        &engine,
+        AdmissionConfig::default()
+            .queue_limit(8)
+            .degrade_at(0.0)
+            .deadline_ms(1e-4),
+    );
+    // First query warms the EWMA (no estimate yet → deadline check skips).
+    assert!(!door.query(&queries, 5).is_shed(), "cold door must admit");
+    assert!(door.ewma_ms() > 0.0);
+    // With backlog held, the estimated wait dwarfs the microscopic budget.
+    let _b1 = door.acquire().unwrap();
+    let _b2 = door.acquire().unwrap();
+    match door.query(&queries, 5) {
+        Admission::Shed(ShedReason::Deadline) => {}
+        other => panic!("doomed query not deadline-shed: {other:?}"),
+    }
+    let stats = door.stats();
+    assert_eq!(stats.deadline_sheds, 1);
+    assert_eq!(stats.admitted, 1);
+}

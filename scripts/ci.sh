@@ -47,6 +47,23 @@ echo "==> STARS_SIMD=scalar quantized-tier gates (quant_parity + serve_integrati
 STARS_SIMD=scalar cargo test -q --test quant_parity
 STARS_SIMD=scalar cargo test -q --test serve_integration quantized
 
+# Fault-injection gates. The suite's tests pin their plans explicitly
+# (mutating the env races across parallel test threads), so the suite is
+# run under two fixed STARS_FAULTS schedules to prove the env var is
+# harmless in its presence — and the CLI build below, whose cluster *does*
+# read the env, proves the end-to-end wiring: parse → active schedule →
+# recovery → a successful build. Two different seeds so the schedule
+# coverage isn't a single draw.
+echo "==> STARS_FAULTS fault-injection gates (two fixed seeds)"
+STARS_FAULTS="seed=1,crash=0.2,delay=0.1:20,corrupt=0.3,max_failures=2" \
+    cargo test -q --test fault_injection
+STARS_FAULTS="seed=40,crash=0.35,delay=0.05:10,corrupt=0.15,max_failures=3" \
+    cargo test -q --test fault_injection
+echo "==> STARS_FAULTS end-to-end env wiring (CLI build under faults)"
+STARS_FAULTS="seed=1,crash=0.2,delay=0.1:20,corrupt=0.3,max_failures=2" \
+    ./target/release/stars build --dataset random --n 2000 --r 4 \
+    --threshold 0.5 --join shuffle >/dev/null
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
