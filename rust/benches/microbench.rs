@@ -217,6 +217,77 @@ fn bench_e2e_build(table: &mut Table) -> Json {
     ])
 }
 
+/// Observability overhead probe: the per-iteration cost of a span
+/// enter/exit, a histogram record, and a disabled-sink emission, next to an
+/// uninstrumented baseline of the same loop body — the numbers behind the
+/// "fully off the hot path" claim (`stars::obs` module docs). Tracing is
+/// forced off first, so the emit row measures the one relaxed atomic load
+/// every emission site pays when `STARS_TRACE` is unset.
+fn bench_obs_overhead(table: &mut Table) -> Json {
+    let _ = stars::obs::set_trace(None, 1);
+    const ITERS: usize = 1_000_000;
+    let mut acc = 0u64;
+    let baseline = time_runs(2, 10, || {
+        for i in 0..ITERS {
+            acc = acc.wrapping_add(std::hint::black_box(i as u64));
+        }
+        std::hint::black_box(acc);
+    });
+    let phases = stars::obs::Phases::new();
+    let span = time_runs(2, 10, || {
+        for i in 0..ITERS {
+            let _g = phases.enter("probe");
+            acc = acc.wrapping_add(std::hint::black_box(i as u64));
+        }
+        std::hint::black_box(acc);
+    });
+    let hist = stars::obs::Histogram::new();
+    let record = time_runs(2, 10, || {
+        for i in 0..ITERS {
+            hist.record(std::hint::black_box(i as u64));
+            acc = acc.wrapping_add(i as u64);
+        }
+        std::hint::black_box(acc);
+    });
+    let emit = time_runs(2, 10, || {
+        for i in 0..ITERS {
+            stars::obs::emit_lazy("probe", || vec![("i", Json::from(0u64))]);
+            acc = acc.wrapping_add(std::hint::black_box(i as u64));
+        }
+        std::hint::black_box(acc);
+    });
+    let per_ns = |s: f64| s / ITERS as f64 * 1e9;
+    let (base_ns, span_ns, rec_ns, emit_ns) = (
+        per_ns(baseline.median()),
+        per_ns(span.median()),
+        per_ns(record.median()),
+        per_ns(emit.median()),
+    );
+    for (name, ns) in [
+        ("baseline loop", base_ns),
+        ("span enter/exit", span_ns),
+        ("histogram record", rec_ns),
+        ("disabled emit", emit_ns),
+    ] {
+        table.row(vec![
+            format!("obs overhead: {name}"),
+            fmt_count(ITERS as u64),
+            format!("{ns:.1}ns/iter"),
+            format!("+{:.1}ns vs baseline", (ns - base_ns).max(0.0)),
+        ]);
+    }
+    Json::obj(vec![
+        ("iters", Json::from(ITERS)),
+        ("baseline_ns_per_iter", Json::from(base_ns)),
+        ("span_enter_exit_ns_per_iter", Json::from(span_ns)),
+        ("histogram_record_ns_per_iter", Json::from(rec_ns)),
+        ("disabled_emit_ns_per_iter", Json::from(emit_ns)),
+        ("span_overhead_ns", Json::from((span_ns - base_ns).max(0.0))),
+        ("histogram_overhead_ns", Json::from((rec_ns - base_ns).max(0.0))),
+        ("disabled_emit_overhead_ns", Json::from((emit_ns - base_ns).max(0.0))),
+    ])
+}
+
 fn main() {
     let mut table = Table::new(&["primitive", "n", "median", "throughput"]);
 
@@ -225,6 +296,7 @@ fn main() {
     let simd_kernels = bench_simd_backends(&mut table);
     let simd_i8 = bench_simd_int8(&mut table);
     let e2e = bench_e2e_build(&mut table);
+    let obs_overhead = bench_obs_overhead(&mut table);
 
     let ds = synth::gaussian_mixture(100_000, 100, 100, 0.1, 42);
 
@@ -400,9 +472,16 @@ fn main() {
 
     // Machine-readable report for cross-PR perf tracking.
     let doc = Json::obj(vec![
+        // v4: renamed `schema` → `schema_version` (CI bench-check gate),
+        // added `data_status` and the `obs_overhead` probe (per-iteration
+        // span/histogram/disabled-emit cost vs an uninstrumented loop).
         // v3: added the simd_kernel_dot_i8 per-backend sweep (the
         // quantized tier's int8 estimate kernel).
-        ("schema", Json::from("stars-bench-scoring/v3")),
+        ("schema_version", Json::from("stars-bench-scoring/v4")),
+        (
+            "data_status",
+            Json::from("measured by `cargo bench --bench microbench` on this host"),
+        ),
         ("bench", Json::from("microbench")),
         (
             "workers",
@@ -415,6 +494,7 @@ fn main() {
         ("simd_kernel_dot", simd_kernels),
         ("simd_kernel_dot_i8", simd_i8),
         ("e2e_build", e2e),
+        ("obs_overhead", obs_overhead),
     ]);
     let path = bench_out_path();
     match std::fs::write(&path, doc.to_pretty()) {

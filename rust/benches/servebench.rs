@@ -21,7 +21,8 @@
 //!   with the recall ratio the 0.98 serve-integration gate tracks
 //!   (EXPERIMENTS.md §Quant table convention).
 
-use stars::bench::{fmt_count, fmt_secs, percentile, time_once, time_runs, Table};
+use stars::bench::{fmt_count, fmt_secs, time_once, time_runs, Table};
+use stars::obs::Histogram;
 use stars::data::synth;
 use stars::lsh::SimHash;
 use stars::serve::{
@@ -98,15 +99,19 @@ fn main() {
         format!("{}/s", fmt_count(qps as u64)),
     ]);
 
-    // Single-query latency distribution.
-    let mut lats = Vec::with_capacity(LATENCY_QUERIES);
+    // Single-query latency distribution (log-bucketed histogram in µs —
+    // the obs machinery the serve registry itself records into).
+    let lat_hist = Histogram::new();
     for qi in 0..LATENCY_QUERIES {
         let one = queries.subset(&[(qi % BATCH_QUERIES) as u32]);
         let (s, _) = time_once(|| engine.query(&one, K));
-        lats.push(s);
+        lat_hist.record((s * 1e6) as u64);
     }
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let (p50, p99) = (percentile(&lats, 0.50), percentile(&lats, 0.99));
+    let lat = lat_hist.snapshot();
+    let (p50, p99) = (
+        lat.quantile(0.50) as f64 / 1e6,
+        lat.quantile(0.99) as f64 / 1e6,
+    );
     table.row(vec![
         "single-query latency".into(),
         fmt_count(LATENCY_QUERIES as u64),
@@ -209,14 +214,17 @@ fn main() {
         fmt_secs(qbatch.median()),
         format!("{}/s", fmt_count(q_qps as u64)),
     ]);
-    let mut qlats = Vec::with_capacity(LATENCY_QUERIES);
+    let qlat_hist = Histogram::new();
     for qi in 0..LATENCY_QUERIES {
         let one = queries.subset(&[(qi % BATCH_QUERIES) as u32]);
         let (s, _) = time_once(|| qengine.query(&one, K));
-        qlats.push(s);
+        qlat_hist.record((s * 1e6) as u64);
     }
-    qlats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let (q_p50, q_p99) = (percentile(&qlats, 0.50), percentile(&qlats, 0.99));
+    let qlat = qlat_hist.snapshot();
+    let (q_p50, q_p99) = (
+        qlat.quantile(0.50) as f64 / 1e6,
+        qlat.quantile(0.99) as f64 / 1e6,
+    );
     let q_got = qengine.query(&rqueries, K);
     let q_recall = truth
         .iter()
@@ -297,12 +305,17 @@ fn main() {
     table.print();
 
     let doc = Json::obj(vec![
-        // v5: added the `admission` object (front-door shed/degrade ladder
-        // counters) and the `faults` object (fault-injected build overhead
-        // + recovery counters). v4: added the `quantized` object (int8
-        // first-pass tier measured next to its f32 twin from the same
-        // build recipe).
-        ("schema", Json::from("stars-bench-serve/v5")),
+        // v6: renamed `schema` → `schema_version` (CI bench-check gate),
+        // added `data_status` and the `phases` object (the build's
+        // self-profile from CostReport::phases; latency percentiles now
+        // come from the obs histogram — ≤6.25% bucket error). v5: added
+        // the `admission` and `faults` objects. v4: added the `quantized`
+        // object (int8 first-pass tier next to its f32 twin).
+        ("schema_version", Json::from("stars-bench-serve/v6")),
+        (
+            "data_status",
+            Json::from("measured by `cargo bench --bench servebench` on this host"),
+        ),
         ("bench", Json::from("servebench")),
         ("workers", Json::from(workers)),
         // Which SIMD lanes served every query in this file — p50/p99 are
@@ -320,6 +333,9 @@ fn main() {
         ("edges", Json::from(out.graph.num_edges())),
         ("router_entries", Json::from(router_entries)),
         ("build_s", Json::from(build_s)),
+        // Build self-profile: phase path → {count, secs, busy_secs, bytes}
+        // (EXPERIMENTS.md §Observability explains how to read it).
+        ("phases", out.report.phases.to_json()),
         ("batch_queries", Json::from(BATCH_QUERIES)),
         ("batch_qps", Json::from(qps)),
         ("latency_p50_ms", Json::from(p50 * 1e3)),

@@ -276,7 +276,13 @@ fn main() {
     table.print();
 
     let doc = Json::obj(vec![
-        ("schema", Json::from("stars-bench-sketch/v2")),
+        // v3: renamed `schema` → `schema_version` and added `data_status`
+        // (CI bench-check gate).
+        ("schema_version", Json::from("stars-bench-sketch/v3")),
+        (
+            "data_status",
+            Json::from("measured by `cargo bench --bench sketchbench` on this host"),
+        ),
         ("bench", Json::from("sketchbench")),
         ("workers", Json::from(pool::default_workers())),
         ("simd_backend", Json::from(simd::active().name())),

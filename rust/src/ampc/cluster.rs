@@ -182,6 +182,10 @@ impl Cluster {
     {
         let ledger = Arc::clone(&self.ledger);
         let plan = *self.ledger.faults();
+        // Wave span: wall time of the fan-out on the coordinator; its busy
+        // aggregates every task's duration (Σ task time), mirroring the
+        // ledger's Σ-busy accounting. Observation only — never consulted.
+        let wave_span = self.ledger.phases().enter("wave");
         // Distribute tasks over workers; charge each task's duration to the
         // worker slot it ran on. parallel_map's cursor assigns dynamically;
         // we approximate the worker id by the thread's task order (round
@@ -196,6 +200,7 @@ impl Cluster {
             let nanos = t.elapsed().as_nanos() as u64;
             durations[task].store(nanos, Ordering::Relaxed);
             ledger.add_busy(slot, nanos);
+            wave_span.add_busy(nanos);
             r
         });
         // Straggler pass: speculatively re-execute tasks that ran far past

@@ -1,5 +1,8 @@
-//! Cost accounting: comparisons, per-worker busy time, shuffle bytes.
+//! Cost accounting: comparisons, per-worker busy time, shuffle bytes —
+//! plus the per-job phase-span collector (`crate::obs`), so every report
+//! carries a self-profile of where its seconds went.
 
+use crate::obs::{PhaseReport, Phases};
 use crate::util::fault::FaultPlan;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +28,11 @@ pub struct CostLedger {
     corruption_retries: AtomicU64,
     wave_restarts: AtomicU64,
     stragglers: AtomicU64,
+    /// Phase-span collector for this job. Riding on the ledger (like the
+    /// fault plan) gives every pipeline stage span access without
+    /// signature churn; purely additive — spans never feed back into any
+    /// cost counter (the bit-identity contract).
+    phases: Phases,
 }
 
 impl CostLedger {
@@ -50,12 +58,20 @@ impl CostLedger {
             corruption_retries: AtomicU64::new(0),
             wave_restarts: AtomicU64::new(0),
             stragglers: AtomicU64::new(0),
+            phases: Phases::new(),
         }
     }
 
     /// The job's fault schedule (the inert plan when none was configured).
     pub fn faults(&self) -> &FaultPlan {
         &self.faults
+    }
+
+    /// The job's phase-span collector (`crate::obs`): enter spans via
+    /// `ledger.phases().enter("name")`; the aggregate lands in
+    /// [`CostReport::phases`].
+    pub fn phases(&self) -> &Phases {
+        &self.phases
     }
 
     /// Record one task re-attempt (after an injected crash or a real panic).
@@ -195,6 +211,7 @@ impl CostLedger {
             simd_backend: crate::util::simd::active().name(),
             snapshot: None,
             faults: self.fault_counters(),
+            phases: self.phases.report(),
         }
     }
 }
@@ -325,6 +342,12 @@ pub struct CostReport {
     pub snapshot: Option<SnapshotStats>,
     /// Fault-injection/recovery counters; all zero on a clean run.
     pub faults: FaultCounters,
+    /// Per-phase self-profile (`crate::obs` spans): path →
+    /// {count, secs, busy_secs, bytes}. Purely additive — the `build`
+    /// root reconciles with `real_time` and the Σ of `build/rep` spans
+    /// with `total_time` to within accounting slack (asserted by
+    /// `tests/obs.rs`).
+    pub phases: PhaseReport,
 }
 
 impl CostReport {
@@ -346,6 +369,7 @@ impl CostReport {
             pairs.push(("snapshot", s.to_json()));
         }
         pairs.push(("faults", self.faults.to_json()));
+        pairs.push(("phases", self.phases.to_json()));
         Json::obj(pairs)
     }
 }

@@ -50,6 +50,10 @@ pub fn shuffle_group(
     ledger: &CostLedger,
     seed: u64,
 ) -> Vec<KeyGroup> {
+    // Phase span: shuffle wall time plus the bytes it moves (including
+    // corruption-retry re-shuffles). Observation only.
+    let shuffle_span = ledger.phases().enter("shuffle");
+    shuffle_span.add_bytes(12 * records.len() as u64);
     let plan = *ledger.faults();
     let check = plan.corrupt_prob > 0.0 && !records.is_empty();
     let want = if check { multiset_digest(&records) } else { 0 };
@@ -69,6 +73,7 @@ pub fn shuffle_group(
                 break;
             }
             ledger.add_corruption_retry();
+            shuffle_span.add_bytes(12 * sorted.len() as u64);
             attempt += 1;
             // Re-shuffle. Sorting the already-sorted records through the
             // same stable pipeline yields the identical permutation a clean

@@ -60,17 +60,6 @@ pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (f64, R) {
     (t.elapsed().as_secs_f64(), r)
 }
 
-/// Nearest-rank percentile of an ascending sample vector (`q` in [0, 1]).
-/// Shared by the serving latency reports (`coordinator::run_serve`,
-/// `benches/servebench.rs`) so the two can never drift.
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
-}
-
 /// Pretty-print seconds with an adaptive unit.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {

@@ -146,6 +146,13 @@ pub struct ServeOpts {
     /// degraded, and shed counts — from one run. Ignored unless
     /// `queue_limit > 0`.
     pub overload: bool,
+    /// Periodically write a Prometheus-text metrics snapshot to this path
+    /// while the serve sweep runs (atomic tmp+rename, so a scraper never
+    /// reads a torn file). `None` = no exporter.
+    pub metrics_out: Option<std::path::PathBuf>,
+    /// Rewrite interval for `metrics_out`, seconds (clamped to ≥ 0.01 by
+    /// the exporter). Ignored unless `metrics_out` is set.
+    pub metrics_every_s: f64,
 }
 
 impl Default for ServeOpts {
@@ -161,6 +168,8 @@ impl Default for ServeOpts {
             queue_limit: 0,
             deadline_ms: 0.0,
             overload: false,
+            metrics_out: None,
+            metrics_every_s: 1.0,
         }
     }
 }
@@ -188,6 +197,16 @@ pub fn run_serve(job: &Job, queries: usize, k: usize) -> crate::Result<Json> {
 pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     use crate::serve::{brute_force_topk, recall_against, QueryEngine, ServeConfig};
     use std::time::Instant;
+    // Live metrics exposition: while the sweep runs, the exporter rewrites
+    // a scrapeable Prometheus-text snapshot of the global registry every
+    // `metrics_every_s`. Dropped at the end of this fn, which writes one
+    // final snapshot covering everything recorded below.
+    let _metrics = opts.metrics_out.as_ref().map(|p| {
+        crate::obs::MetricsExporter::start(
+            p.clone(),
+            std::time::Duration::from_secs_f64(opts.metrics_every_s.max(0.0)),
+        )
+    });
     let (queries, k) = (opts.queries, opts.k);
     let dataset = job.dataset.realize(job.data_seed)?;
     let smeasure = serve_measure(job.measure)?;
@@ -232,16 +251,18 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     let t = Instant::now();
     let got = engine.query(&qset, k);
     let batch_s = t.elapsed().as_secs_f64();
-    // Single-query latency distribution over a bounded prefix.
+    // Single-query latency distribution over a bounded prefix, recorded
+    // into a log-bucketed histogram (microseconds) — the same machinery the
+    // serve registry uses, replacing the old sort-and-index percentile math.
     let lat_n = qids.len().min(200);
-    let mut lats = Vec::with_capacity(lat_n);
+    let lat_hist = crate::obs::Histogram::new();
     for qi in 0..lat_n {
         let one = qset.subset(&[qi as u32]);
         let t = Instant::now();
         let _ = engine.query(&one, k);
-        lats.push(t.elapsed().as_secs_f64());
+        lat_hist.record(t.elapsed().as_micros() as u64);
     }
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lat = lat_hist.snapshot();
     // Recall vs brute force with identical kernels and tie rule.
     let truth = brute_force_topk(&dataset, &qset, smeasure, k, workers);
     let recall = if got.is_empty() {
@@ -266,8 +287,10 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         ("queries", Json::from(qids.len())),
         ("k", Json::from(k)),
         ("batch_qps", Json::from(qids.len() as f64 / batch_s.max(1e-12))),
-        ("p50_ms", Json::from(crate::bench::percentile(&lats, 0.50) * 1e3)),
-        ("p99_ms", Json::from(crate::bench::percentile(&lats, 0.99) * 1e3)),
+        ("p50_ms", Json::from(lat.quantile(0.50) as f64 / 1e3)),
+        ("p90_ms", Json::from(lat.quantile(0.90) as f64 / 1e3)),
+        ("p99_ms", Json::from(lat.quantile(0.99) as f64 / 1e3)),
+        ("p999_ms", Json::from(lat.quantile(0.999) as f64 / 1e3)),
         ("recall_at_k", Json::from(recall)),
         ("quantized", Json::from(opts.quantized)),
         (

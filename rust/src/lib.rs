@@ -46,6 +46,7 @@
 //! ```
 
 pub mod util;
+pub mod obs;
 pub mod data;
 pub mod sim;
 pub mod lsh;

@@ -31,6 +31,8 @@ fn real_main() -> stars::Result<()> {
         "serve" => serve(&mut args),
         "experiment" => experiment(&mut args),
         "smoke" => smoke(),
+        "trace-check" => trace_check(&mut args),
+        "bench-check" => bench_check(&mut args),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -52,6 +54,7 @@ USAGE:
                  [--compact-mode incremental|full] [--full-rebuild-every N]
                  [--quantized] [--rescore-c F]
                  [--queue-limit N] [--deadline-ms MS] [--overload]
+                 [--metrics-out FILE] [--metrics-every S]
                  build a graph, export a serving snapshot, and answer N
                  sampled top-k queries (reports QPS, p50/p99, recall@k);
                  with --inserts, also stream N points in and report the
@@ -65,10 +68,18 @@ USAGE:
                  report), --deadline-ms sheds queries whose estimated queue
                  wait exceeds the budget, and --overload applies synthetic
                  backlog so one run reports the whole admit/degrade/shed
-                 ladder
+                 ladder; --metrics-out atomically rewrites a Prometheus-text
+                 snapshot of the serve metrics every --metrics-every seconds
+                 (default 1) while the sweep runs
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
                  [--scale F] [--workers W] [--seed S]   (STARS_BENCH_FULL=1 for paper-size R)
   stars smoke    verify artifacts (PJRT runtime end-to-end)
+  stars trace-check <files...>   validate NDJSON trace files: every
+                 non-empty line must parse as a JSON object (CI gate for
+                 STARS_TRACE output)
+  stars bench-check <files...>   validate BENCH_*.json files: each must
+                 parse and carry schema_version, data_status, and
+                 simd_backend keys (CI gate)
 
 ENVIRONMENT:
   STARS_SIMD    force a SIMD backend (scalar|sse2|avx2|neon)
@@ -77,6 +88,13 @@ ENVIRONMENT:
                 — crashes/delays tasks and corrupts shuffle/DHT traffic
                 deterministically; output is bit-identical, recovery
                 counters appear under \"faults\" in build/serve reports
+  STARS_TRACE   append structured NDJSON trace events (spans, logs, serve
+                queries, compactions) to this file; tracing never changes
+                results, only observes them
+  STARS_TRACE_SAMPLE  \"1/N\" keeps every Nth trace event (deterministic,
+                by event index; default 1/1 = everything)
+  STARS_LOG     log verbosity: error|info|debug (default info); enabled
+                lines also land in the STARS_TRACE sink as \"log\" events
 ";
 
 fn parse_algo(name: &str) -> stars::Result<Algorithm> {
@@ -196,6 +214,8 @@ fn serve(args: &mut Args) -> stars::Result<()> {
         queue_limit: args.get_parsed_or("queue-limit", 0usize),
         deadline_ms: args.get_parsed_or("deadline-ms", 0.0f64),
         overload: args.flag("overload"),
+        metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
+        metrics_every_s: args.get_parsed_or("metrics-every", 1.0f64),
     };
     let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());
@@ -236,6 +256,65 @@ fn experiment(args: &mut Args) -> stars::Result<()> {
             experiments::table3(&cfg);
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+/// CI gate: every non-empty line of each NDJSON trace file must parse as a
+/// JSON object (the STARS_TRACE sink's contract).
+fn trace_check(args: &mut Args) -> stars::Result<()> {
+    let files = args.positional().to_vec();
+    anyhow::ensure!(!files.is_empty(), "trace-check needs at least one file");
+    for file in &files {
+        let text = std::fs::read_to_string(file)
+            .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+        let mut lines = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let doc = stars::util::json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{file}:{}: unparseable trace line: {e}", i + 1))?;
+            anyhow::ensure!(
+                matches!(doc, stars::util::json::Json::Obj(_)),
+                "{file}:{}: trace line is not a JSON object",
+                i + 1
+            );
+            anyhow::ensure!(
+                doc.get("kind").and_then(|k| k.as_str()).is_some(),
+                "{file}:{}: trace line has no \"kind\" field",
+                i + 1
+            );
+            lines += 1;
+        }
+        anyhow::ensure!(lines > 0, "{file}: trace file has no events");
+        println!("{file}: {lines} trace lines OK");
+    }
+    Ok(())
+}
+
+/// CI gate: each BENCH_*.json must parse and carry the shared envelope keys
+/// (`schema_version`, `data_status`, `simd_backend`).
+fn bench_check(args: &mut Args) -> stars::Result<()> {
+    let files = args.positional().to_vec();
+    anyhow::ensure!(!files.is_empty(), "bench-check needs at least one file");
+    for file in &files {
+        let text = std::fs::read_to_string(file)
+            .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+        let doc = stars::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{file}: unparseable JSON: {e}"))?;
+        for key in ["schema_version", "data_status", "simd_backend"] {
+            anyhow::ensure!(
+                doc.get(key).is_some(),
+                "{file}: missing required key \"{key}\""
+            );
+        }
+        let sv = doc.get("schema_version").and_then(|v| v.as_str());
+        anyhow::ensure!(
+            sv.is_some_and(|s| !s.is_empty()),
+            "{file}: schema_version must be a non-empty string"
+        );
+        println!("{file}: schema {} OK", sv.unwrap_or("?"));
     }
     Ok(())
 }

@@ -1,0 +1,358 @@
+//! Log-bucketed histograms (HDR-style) with deterministic merge.
+//!
+//! Values are `u64` in whatever unit the caller picks (the serve paths
+//! record nanoseconds; counts and widths are recorded raw). The bucket
+//! scheme is the classic power-of-2 layout with [`SUB_BUCKETS`] = 16
+//! linear sub-buckets per octave:
+//!
+//! * values `< 16` get their own exact bucket (index = value);
+//! * a value `v ≥ 16` with floor-log2 `o` lands in bucket
+//!   `(o - 3) · 16 + ((v >> (o - 4)) & 15)` — 16 equal-width sub-buckets
+//!   spanning `[2^o, 2^(o+1))`.
+//!
+//! The relative quantization error is therefore bounded by `1/16`
+//! (≤ 6.25%), quantile estimates are clamped to the recorded `[min, max]`,
+//! and everything below 16 is exact. [`NUM_BUCKETS`] = 976 covers the full
+//! `u64` range.
+//!
+//! [`Histogram`] is the live, lock-free recorder (relaxed atomic adds —
+//! safe to share across pool workers); [`HistSnapshot`] is the plain-data
+//! snapshot used for quantiles, JSON reports and merging. Merge is
+//! bucket-wise addition: associative, commutative, and exactly
+//! count-conserving (asserted by `tests/obs.rs`).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per power-of-2 octave (must stay a power of two).
+pub const SUB_BUCKETS: usize = 16;
+const SUB_SHIFT: u32 = 4; // log2(SUB_BUCKETS)
+
+/// Total bucket count covering all of `u64` (the largest index, reached at
+/// `u64::MAX`, is `(63 - SUB_SHIFT + 1) · SUB_BUCKETS + SUB_BUCKETS - 1`).
+pub const NUM_BUCKETS: usize = (64 - SUB_SHIFT as usize + 1) * SUB_BUCKETS;
+
+/// Bucket index of a value. Monotone non-decreasing in `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros(); // floor(log2 v) >= SUB_SHIFT
+    ((o - SUB_SHIFT + 1) as usize) * SUB_BUCKETS
+        + ((v >> (o - SUB_SHIFT)) as usize & (SUB_BUCKETS - 1))
+}
+
+/// Smallest value mapping to bucket `idx` (inverse of [`bucket_index`]).
+#[inline]
+pub fn bucket_floor(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        return idx as u64;
+    }
+    let o = (idx / SUB_BUCKETS) as u32 - 1 + SUB_SHIFT;
+    let sub = (idx % SUB_BUCKETS) as u64;
+    (SUB_BUCKETS as u64 + sub) << (o - SUB_SHIFT)
+}
+
+/// Exclusive upper bound of bucket `idx` (`u64::MAX` for the last bucket).
+#[inline]
+pub fn bucket_ceil(idx: usize) -> u64 {
+    if idx + 1 >= NUM_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_floor(idx + 1)
+    }
+}
+
+/// Live lock-free histogram: relaxed atomic bucket counters plus running
+/// count/sum/min/max. Recording never blocks and never allocates.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (lock-free; relaxed ordering).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-data snapshot (sparse; only non-empty buckets are kept).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = Vec::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push((i as u32, n));
+            }
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data histogram snapshot: sparse `(bucket, count)` pairs in
+/// ascending bucket order plus exact count/sum/min/max. Also usable as a
+/// cheap serial recorder (see [`HistSnapshot::record`]) where no sharing
+/// is needed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    /// Non-empty `(bucket index, count)` pairs, ascending by index.
+    pub buckets: Vec<(u32, u64)>,
+    /// Total recorded values.
+    pub count: u64,
+    /// Sum of recorded values (wrapping on overflow).
+    pub sum: u64,
+    /// Smallest recorded value (`u64::MAX` when empty).
+    pub min: u64,
+    /// Largest recorded value (0 when empty).
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { buckets: Vec::new(), count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Record one value serially (single-owner paths; the live
+    /// [`Histogram`] is the shared-recorder variant).
+    pub fn record(&mut self, v: u64) {
+        let idx = bucket_index(v) as u32;
+        match self.buckets.binary_search_by_key(&idx, |&(i, _)| i) {
+            Ok(pos) => self.buckets[pos].1 += 1,
+            Err(pos) => self.buckets.insert(pos, (idx, 1)),
+        }
+        self.count += 1;
+        self.sum = self.sum.wrapping_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Bucket-wise merge: associative, commutative, count-conserving.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut buckets = Vec::with_capacity(self.buckets.len() + other.buckets.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.buckets.len() || j < other.buckets.len() {
+            let a = self.buckets.get(i);
+            let b = other.buckets.get(j);
+            match (a, b) {
+                (Some(&(ia, ca)), Some(&(ib, cb))) if ia == ib => {
+                    buckets.push((ia, ca + cb));
+                    i += 1;
+                    j += 1;
+                }
+                (Some(&(ia, ca)), Some(&(ib, _))) if ia < ib => {
+                    buckets.push((ia, ca));
+                    i += 1;
+                }
+                (Some(_), Some(&(ib, cb))) => {
+                    buckets.push((ib, cb));
+                    j += 1;
+                }
+                (Some(&(ia, ca)), None) => {
+                    buckets.push((ia, ca));
+                    i += 1;
+                }
+                (None, Some(&(ib, cb))) => {
+                    buckets.push((ib, cb));
+                    j += 1;
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count + other.count,
+            sum: self.sum.wrapping_add(other.sum),
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]` (nearest-rank over buckets, the
+    /// bucket midpoint clamped to the exact `[min, max]`). 0 when empty.
+    /// Monotone non-decreasing in `q`; exact for values below
+    /// [`SUB_BUCKETS`], within 6.25% relative error elsewhere.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for &(idx, c) in &self.buckets {
+            cum += c;
+            if cum >= rank {
+                let idx = idx as usize;
+                let floor = bucket_floor(idx);
+                let width = bucket_ceil(idx).saturating_sub(floor);
+                let mid = floor + width / 2;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Mean of recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// JSON object: count/sum/min/max plus p50/p90/p99/p999 estimates.
+    /// `min` is reported as 0 when empty.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count)),
+            ("sum", Json::from(self.sum)),
+            ("min", Json::from(if self.count == 0 { 0 } else { self.min })),
+            ("max", Json::from(self.max)),
+            ("p50", Json::from(self.quantile(0.50))),
+            ("p90", Json::from(self.quantile(0.90))),
+            ("p99", Json::from(self.quantile(0.99))),
+            ("p999", Json::from(self.quantile(0.999))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_inverts() {
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v < 1 << 40 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket index not monotone at {v}");
+            assert!(bucket_floor(idx) <= v, "floor({idx}) > {v}");
+            assert!(v < bucket_ceil(idx) || idx + 1 == NUM_BUCKETS);
+            prev = idx;
+            v = v * 2 + 1;
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 31);
+        assert_eq!(bucket_index(32), 32);
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 16);
+        for (i, q) in (0..16).map(|i| (i, (i as f64 + 1.0) / 16.0)) {
+            assert_eq!(s.quantile(q), i as u64, "quantile {q}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut s = HistSnapshot::default();
+        let v = 123_456_789u64;
+        s.record(v);
+        let est = s.quantile(0.5);
+        let err = (est as f64 - v as f64).abs() / v as f64;
+        assert!(err <= 1.0 / SUB_BUCKETS as f64, "relative error {err}");
+    }
+
+    #[test]
+    fn quantiles_monotone_and_clamped() {
+        let mut s = HistSnapshot::default();
+        let mut x = 1u64;
+        for _ in 0..1000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            s.record(x >> 40);
+        }
+        let mut prev = 0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let v = s.quantile(q);
+            assert!(v >= prev);
+            assert!(v >= s.min && v <= s.max);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn merge_conserves_counts() {
+        let (mut a, mut b) = (HistSnapshot::default(), HistSnapshot::default());
+        for v in 0..500u64 {
+            a.record(v * 7);
+            b.record(v * 13 + 3);
+        }
+        let m = a.merge(&b);
+        assert_eq!(m.count, 1000);
+        assert_eq!(m.buckets.iter().map(|&(_, c)| c).sum::<u64>(), 1000);
+        assert_eq!(m.sum, a.sum.wrapping_add(b.sum));
+        assert_eq!(m.min, a.min.min(b.min));
+        assert_eq!(m.max, a.max.max(b.max));
+    }
+
+    #[test]
+    fn empty_snapshot_behaves() {
+        let s = HistSnapshot::default();
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+        let j = s.to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("count").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(v.get("min").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn atomic_and_serial_recorders_agree() {
+        let h = Histogram::new();
+        let mut s = HistSnapshot::default();
+        for v in [0u64, 5, 17, 900, 1 << 20, u64::MAX] {
+            h.record(v);
+            s.record(v);
+        }
+        assert_eq!(h.snapshot(), s);
+    }
+}

@@ -1,0 +1,41 @@
+//! `stars::obs` — the structured observability layer: phase spans, lock-free
+//! histograms, a metrics registry, and NDJSON/Prometheus export.
+//!
+//! Everything in this module is *observation only*. The contract (the same
+//! bit-identity contract the kernels and the fault layer honor): tracing on
+//! or off, sampled or not, must never alter edges, top-k results, or any
+//! `CostReport` counter — it may only **add** to reports. The layer is
+//! fully off the hot path: with `STARS_TRACE` unset, every emission site
+//! costs one relaxed atomic load, and metric recording is a handful of
+//! relaxed atomic adds (both measured by the microbench overhead probe and
+//! reported in `BENCH_scoring.json`).
+//!
+//! The four pieces:
+//!
+//! * [`span`] — hierarchical phase spans with RAII guards, collected
+//!   per-job on `CostLedger` (build pipeline) and reported as
+//!   `CostReport::phases`;
+//! * [`hist`] — log-bucketed (power-of-2, 16 sub-buckets) histograms with
+//!   deterministic, count-conserving merge;
+//! * [`registry`] — the process-global named-metric registry plus the
+//!   Prometheus text renderer and the atomic snapshot writer behind
+//!   `stars serve --metrics-out`;
+//! * [`sink`] — the `STARS_TRACE=<path>` NDJSON event sink with
+//!   deterministic `STARS_TRACE_SAMPLE=1/N` sampling.
+//!
+//! Schemas are documented in EXPERIMENTS.md §Observability; the span
+//! taxonomy and overhead budget in ARCHITECTURE.md "Observability".
+
+pub mod hist;
+pub mod registry;
+pub mod sink;
+pub mod span;
+
+pub use hist::{
+    bucket_ceil, bucket_floor, bucket_index, Histogram, HistSnapshot, NUM_BUCKETS, SUB_BUCKETS,
+};
+pub use registry::{registry, write_snapshot, Counter, Gauge, HistHandle, MetricsExporter, Registry};
+pub use sink::{
+    emit, emit_lazy, emit_log, enabled as trace_enabled, reset_to_env, sample_every, set_trace,
+};
+pub use span::{PhaseGuard, PhaseReport, PhaseStat, Phases};

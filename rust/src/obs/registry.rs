@@ -1,0 +1,284 @@
+//! Process-global metrics registry and Prometheus-text exposition.
+//!
+//! Named counters, gauges and [`Histogram`]s, registered once (a mutex
+//! protects the name table) and recorded lock-free thereafter (handles
+//! are `Arc`s over atomics). The registry renders to the Prometheus text
+//! exposition format — counters and gauges as single samples, histograms
+//! in summary style with `quantile` labels plus `_sum`/`_count` — and
+//! [`write_snapshot`] rewrites a scrape file *atomically* (write to a
+//! `.tmp` sibling, then rename), so a scraper never reads a torn file.
+//!
+//! `stars serve --metrics-out <path> --metrics-every <s>` runs a
+//! [`MetricsExporter`] ticker thread over this registry; the serve stack
+//! records query latency, queue depth, rescore width and compaction time
+//! here (see EXPERIMENTS.md §Observability for the metric catalogue).
+
+use crate::obs::hist::{HistSnapshot, Histogram};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A monotonically increasing counter handle (cheap to clone).
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n`.
+    #[inline]
+    pub fn inc(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge handle (cheap to clone).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the current value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A histogram handle (cheap to clone; see [`Histogram`]).
+#[derive(Clone, Debug)]
+pub struct HistHandle(Arc<Histogram>);
+
+impl HistHandle {
+    /// Record one value.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+
+    /// Plain-data snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.0.snapshot()
+    }
+}
+
+#[derive(Default)]
+struct Tables {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>,
+    hists: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// Named-metric registry; see the module docs. Use [`registry`] for the
+/// process-global instance.
+#[derive(Default)]
+pub struct Registry {
+    tables: Mutex<Tables>,
+}
+
+impl Registry {
+    /// Fresh empty registry (tests; production code uses [`registry`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create a counter. Metric names should match Prometheus
+    /// conventions (`[a-zA-Z_][a-zA-Z0-9_]*`).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut t = self.tables.lock().unwrap();
+        Counter(t.counters.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut t = self.tables.lock().unwrap();
+        Gauge(t.gauges.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> HistHandle {
+        let mut t = self.tables.lock().unwrap();
+        HistHandle(t.hists.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Render the whole registry in the Prometheus text exposition
+    /// format. Deterministic order (names ascend); histograms render as
+    /// summaries with `quantile` labels plus `_sum`/`_count`.
+    pub fn render_prometheus(&self) -> String {
+        let t = self.tables.lock().unwrap();
+        let mut out = String::new();
+        for (name, v) in &t.counters {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (name, v) in &t.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (name, h) in &t.hists {
+            let s = h.snapshot();
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for (label, q) in [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99), ("0.999", 0.999)] {
+                out.push_str(&format!("{name}{{quantile=\"{label}\"}} {}\n", s.quantile(q)));
+            }
+            out.push_str(&format!("{name}_sum {}\n", s.sum));
+            out.push_str(&format!("{name}_count {}\n", s.count));
+        }
+        out
+    }
+
+    /// JSON snapshot of every metric (histograms via
+    /// [`HistSnapshot::to_json`]).
+    pub fn snapshot_json(&self) -> Json {
+        let t = self.tables.lock().unwrap();
+        let counters: Vec<(&str, Json)> = t
+            .counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::from(v.load(Ordering::Relaxed))))
+            .collect();
+        let gauges: Vec<(&str, Json)> = t
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::from(v.load(Ordering::Relaxed))))
+            .collect();
+        let hists: Vec<(&str, Json)> =
+            t.hists.iter().map(|(k, h)| (k.as_str(), h.snapshot().to_json())).collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Atomically rewrite `path` with the global registry's Prometheus text
+/// snapshot (write a `.tmp` sibling, then rename over).
+pub fn write_snapshot(path: &Path) -> std::io::Result<()> {
+    let text = registry().render_prometheus();
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+struct ExporterShared {
+    stop: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// Background ticker that atomically rewrites a metrics snapshot every
+/// interval (the `stars serve --metrics-out/--metrics-every` path).
+/// Dropping it writes one final snapshot and joins the thread.
+pub struct MetricsExporter {
+    shared: Arc<ExporterShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsExporter {
+    /// Start exporting to `path` every `every` (clamped to ≥ 10 ms).
+    pub fn start(path: PathBuf, every: Duration) -> MetricsExporter {
+        let every = every.max(Duration::from_millis(10));
+        let shared = Arc::new(ExporterShared { stop: Mutex::new(false), cv: Condvar::new() });
+        let shared2 = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("stars-metrics".into())
+            .spawn(move || loop {
+                let _ = write_snapshot(&path);
+                let stopped = shared2.stop.lock().unwrap();
+                let (stopped, _) = shared2.cv.wait_timeout(stopped, every).unwrap();
+                if *stopped {
+                    let _ = write_snapshot(&path);
+                    break;
+                }
+            })
+            .expect("spawn metrics exporter");
+        MetricsExporter { shared, handle: Some(handle) }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        *self.shared.stop.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_record_and_render() {
+        let r = Registry::new();
+        let c = r.counter("stars_test_total");
+        c.inc(3);
+        c.inc(2);
+        assert_eq!(c.get(), 5);
+        let g = r.gauge("stars_test_depth");
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        let h = r.histogram("stars_test_latency_us");
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE stars_test_total counter"));
+        assert!(text.contains("stars_test_total 5"));
+        assert!(text.contains("stars_test_depth 7"));
+        assert!(text.contains("stars_test_latency_us{quantile=\"0.5\"} 20"));
+        assert!(text.contains("stars_test_latency_us_count 3"));
+        assert!(text.contains("stars_test_latency_us_sum 60"));
+    }
+
+    #[test]
+    fn same_name_shares_storage() {
+        let r = Registry::new();
+        r.counter("shared").inc(1);
+        r.counter("shared").inc(1);
+        assert_eq!(r.counter("shared").get(), 2);
+    }
+
+    #[test]
+    fn snapshot_json_parses() {
+        let r = Registry::new();
+        r.counter("a_total").inc(1);
+        r.histogram("b_us").record(5);
+        let j = r.snapshot_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        let counter = v.get("counters").unwrap().get("a_total").unwrap();
+        assert_eq!(counter.as_usize().unwrap(), 1);
+        let hist = v.get("histograms").unwrap().get("b_us").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn snapshot_file_is_atomic_rewrite() {
+        let dir = std::env::temp_dir().join(format!("stars_obs_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.prom");
+        registry().counter("stars_reg_file_test_total").inc(1);
+        write_snapshot(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("stars_reg_file_test_total"));
+        assert!(!path.with_extension("tmp").exists(), "tmp file must be renamed away");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

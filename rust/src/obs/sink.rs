@@ -1,0 +1,187 @@
+//! `STARS_TRACE` NDJSON event sink with deterministic sampling.
+//!
+//! When `STARS_TRACE=<path>` is set (read once, at first use), every
+//! emitted event becomes one JSON object per line (NDJSON) appended to
+//! that file via `util::json` — so every line is guaranteed to parse back
+//! with `util::json::parse` (gated in `scripts/ci.sh`). The common event
+//! schema is
+//!
+//! ```json
+//! {"kind": "span|query|compaction|log|...", "seq": 17, "ts_s": 0.132, ...}
+//! ```
+//!
+//! plus kind-specific fields (see EXPERIMENTS.md §Observability for the
+//! full catalogue). `seq` is a process-global event index; `ts_s` is
+//! seconds since the logging epoch (`util::logging::elapsed`).
+//!
+//! `STARS_TRACE_SAMPLE=1/N` (or plain `N`) keeps every N-th event,
+//! decided deterministically on the event index — no RNG, so a traced run
+//! samples the same event *indices* every time. Sampling and tracing are
+//! observation-only: nothing here can change edges, top-k, or any
+//! `CostReport` counter (the bit-identity contract; asserted by the
+//! tracing-parity test in `tests/obs.rs`).
+//!
+//! With tracing off the entire layer costs one relaxed atomic load per
+//! call site (measured by the microbench overhead probe).
+
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static ENV_INIT: Once = Once::new();
+static SINK: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
+
+fn sink_cell() -> &'static Mutex<Option<BufWriter<File>>> {
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Parse `STARS_TRACE_SAMPLE`: `1/N` or plain `N`; 0/garbage → 1.
+fn parse_sample(s: &str) -> u64 {
+    let n = match s.split_once('/') {
+        Some((_, denom)) => denom.trim().parse::<u64>().unwrap_or(1),
+        None => s.trim().parse::<u64>().unwrap_or(1),
+    };
+    n.max(1)
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(path) = std::env::var("STARS_TRACE") {
+            if !path.is_empty() {
+                let every = std::env::var("STARS_TRACE_SAMPLE")
+                    .map(|s| parse_sample(&s))
+                    .unwrap_or(1);
+                let _ = install(Path::new(&path), every);
+            }
+        }
+    });
+}
+
+fn install(path: &Path, sample_every: u64) -> std::io::Result<()> {
+    let file = OpenOptions::new().create(true).append(true).open(path)?;
+    *sink_cell().lock().unwrap() = Some(BufWriter::new(file));
+    SAMPLE_EVERY.store(sample_every.max(1), Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Whether the trace sink is active. One relaxed load after the first
+/// call (which consumes `STARS_TRACE`/`STARS_TRACE_SAMPLE`).
+#[inline]
+pub fn enabled() -> bool {
+    init_from_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Programmatically (re-)install the sink: `Some(path)` appends NDJSON
+/// events to `path` keeping every `sample_every`-th event; `None`
+/// disables tracing. Overrides the environment (tests use this; call
+/// [`reset_to_env`] to hand control back).
+pub fn set_trace(path: Option<&Path>, sample_every: u64) -> std::io::Result<()> {
+    init_from_env();
+    match path {
+        Some(p) => install(p, sample_every),
+        None => {
+            ENABLED.store(false, Ordering::Relaxed);
+            *sink_cell().lock().unwrap() = None;
+            Ok(())
+        }
+    }
+}
+
+/// Restore the sink to whatever `STARS_TRACE`/`STARS_TRACE_SAMPLE`
+/// prescribe right now (appending), or disable it if unset.
+pub fn reset_to_env() {
+    init_from_env();
+    match std::env::var("STARS_TRACE") {
+        Ok(path) if !path.is_empty() => {
+            let every = std::env::var("STARS_TRACE_SAMPLE")
+                .map(|s| parse_sample(&s))
+                .unwrap_or(1);
+            let _ = install(Path::new(&path), every);
+        }
+        _ => {
+            ENABLED.store(false, Ordering::Relaxed);
+            *sink_cell().lock().unwrap() = None;
+        }
+    }
+}
+
+/// The active keep-every-N sampling divisor.
+pub fn sample_every() -> u64 {
+    init_from_env();
+    SAMPLE_EVERY.load(Ordering::Relaxed).max(1)
+}
+
+/// Emit one event, building its fields lazily only if the sink is active
+/// *and* the event index survives sampling. `kind`, `seq` and `ts_s` are
+/// added automatically.
+pub fn emit_lazy<F>(kind: &str, fields: F)
+where
+    F: FnOnce() -> Vec<(&'static str, Json)>,
+{
+    if !enabled() {
+        return;
+    }
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let every = SAMPLE_EVERY.load(Ordering::Relaxed).max(1);
+    if seq % every != 0 {
+        return;
+    }
+    let mut pairs = vec![
+        ("kind", Json::from(kind)),
+        ("seq", Json::from(seq)),
+        ("ts_s", Json::from(crate::util::logging::elapsed())),
+    ];
+    pairs.extend(fields());
+    let line = Json::obj(pairs).to_string();
+    let mut guard = sink_cell().lock().unwrap();
+    if let Some(w) = guard.as_mut() {
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+/// Emit one event with eagerly built fields.
+pub fn emit(kind: &str, fields: Vec<(&'static str, Json)>) {
+    emit_lazy(kind, move || fields);
+}
+
+/// Route a log line into the sink (called by `util::logging::log` for
+/// every line at or above the active level).
+pub fn emit_log(level: &'static str, msg: &str) {
+    emit_lazy("log", || {
+        vec![("level", Json::from(level)), ("msg", Json::from(msg))]
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_spec_parses() {
+        assert_eq!(parse_sample("1/8"), 8);
+        assert_eq!(parse_sample("16"), 16);
+        assert_eq!(parse_sample("1/0"), 1);
+        assert_eq!(parse_sample("junk"), 1);
+        assert_eq!(parse_sample(" 1/4 "), 4);
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        // Whatever the env says, an explicit disable must make emission a
+        // no-op (and must not panic).
+        set_trace(None, 1).unwrap();
+        assert!(!enabled());
+        emit("test", vec![("x", Json::from(1u64))]);
+        reset_to_env();
+        assert!(sample_every() >= 1);
+    }
+}

@@ -1,0 +1,416 @@
+//! Hierarchical phase spans with RAII guards and a lock-free collector.
+//!
+//! A [`Phases`] is a fixed-capacity table of phase slots attached to a job
+//! (the build pipeline hangs one off its `CostLedger`; the serve stack has
+//! a process-global one). [`Phases::enter`] pushes a span onto a
+//! per-thread stack and returns a [`PhaseGuard`]; dropping the guard adds
+//! the span's inclusive nanoseconds to its slot with relaxed atomic adds —
+//! no locks anywhere on the record path (slot *creation* goes through a
+//! `OnceLock` claim, once per distinct phase path per process).
+//!
+//! Nesting is per-thread: a span entered while another span of the *same*
+//! `Phases` instance is active on the same thread becomes its child, and
+//! the slot identity is `(parent slot, name)` — so `"build" > "rep" >
+//! "sketch"` and a bare `"sketch"` entered elsewhere are different phases.
+//! Pool workers start with an empty stack, so spans recorded inside
+//! parallel tasks root their own subtree (the builder names them
+//! accordingly, e.g. `build/rep`); guards are truncation-safe — dropping
+//! an outer guard pops any leaked inner entries, so the stack can never
+//! cross or orphan spans (asserted by `tests/obs.rs` under every worker
+//! count).
+//!
+//! Each slot tracks `{count, nanos, busy_nanos, bytes}`: `nanos` is the
+//! inclusive span time summed over instances (wall for coordinator-side
+//! phases, Σ task time for per-task phases), `busy_nanos` is data-parallel
+//! worker time explicitly attributed via [`PhaseGuard::add_busy`] (the
+//! in-repetition drivers feed it from their pool busy callbacks), `bytes`
+//! is whatever the caller attributes via [`PhaseGuard::add_bytes`].
+//!
+//! Tracing never changes results: guards only read clocks and bump
+//! counters, and the whole layer is additive to `CostReport` (the
+//! bit-identity contract — see ARCHITECTURE.md "Observability").
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Phase slots per [`Phases`] instance (power of two; open addressing).
+const SLOTS: usize = 128;
+/// Parent marker for root spans.
+const ROOT: u32 = u32::MAX;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Active span stack: `(Phases instance id, slot index)` per entry.
+    static SPAN_STACK: RefCell<Vec<(u64, u32)>> = RefCell::new(Vec::new());
+}
+
+#[derive(Debug)]
+struct Slot {
+    /// `(parent slot index or ROOT, segment name)`; unset = free.
+    meta: OnceLock<(u32, &'static str)>,
+    nanos: AtomicU64,
+    busy_nanos: AtomicU64,
+    count: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// A job-scoped phase-span collector. Cheap to share (`&Phases` records
+/// concurrently from any thread); see the module docs for the model.
+#[derive(Debug)]
+pub struct Phases {
+    id: u64,
+    slots: Vec<Slot>,
+    dropped: AtomicU64,
+}
+
+impl Default for Phases {
+    fn default() -> Phases {
+        Phases::new()
+    }
+}
+
+impl Phases {
+    /// Empty collector with a fresh instance identity.
+    pub fn new() -> Phases {
+        Phases {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            slots: (0..SLOTS)
+                .map(|_| Slot {
+                    meta: OnceLock::new(),
+                    nanos: AtomicU64::new(0),
+                    busy_nanos: AtomicU64::new(0),
+                    count: AtomicU64::new(0),
+                    bytes: AtomicU64::new(0),
+                })
+                .collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn slot_for(&self, parent: u32, name: &'static str) -> Option<u32> {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ parent as u64;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+        for i in 0..SLOTS {
+            let idx = (h as usize + i) & (SLOTS - 1);
+            let slot = &self.slots[idx];
+            match slot.meta.get() {
+                Some(&(p, n)) if p == parent && n == name => return Some(idx as u32),
+                Some(_) => continue,
+                None => {
+                    if slot.meta.set((parent, name)).is_ok() {
+                        return Some(idx as u32);
+                    }
+                    // Lost the claim race — re-check what won.
+                    if let Some(&(p, n)) = slot.meta.get() {
+                        if p == parent && n == name {
+                            return Some(idx as u32);
+                        }
+                    }
+                }
+            }
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Enter a span named `name`, child of the innermost active span of
+    /// this instance on the current thread (root otherwise). The returned
+    /// guard records on drop. If the slot table is full the span is
+    /// counted as dropped and the guard records nothing.
+    pub fn enter(&self, name: &'static str) -> PhaseGuard<'_> {
+        self.enter_impl(name, None)
+    }
+
+    /// Enter a span anchored at the root regardless of what is active on
+    /// the current thread. Per-task phases use this (e.g. the builder's
+    /// `build/rep`) so their path is identical whether the task runs on a
+    /// pool worker or is re-executed on the coordinator (straggler pass);
+    /// child spans entered on the same thread still nest under it.
+    pub fn enter_root(&self, name: &'static str) -> PhaseGuard<'_> {
+        self.enter_impl(name, Some(ROOT))
+    }
+
+    fn enter_impl(&self, name: &'static str, forced_parent: Option<u32>) -> PhaseGuard<'_> {
+        let (prior_len, slot) = SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = forced_parent.unwrap_or_else(|| {
+                s.iter()
+                    .rev()
+                    .find(|&&(id, _)| id == self.id)
+                    .map(|&(_, slot)| slot)
+                    .unwrap_or(ROOT)
+            });
+            let slot = self.slot_for(parent, name);
+            let len = s.len();
+            if let Some(idx) = slot {
+                s.push((self.id, idx));
+            }
+            (len, slot)
+        });
+        PhaseGuard { phases: self, slot, prior_len, start: Instant::now() }
+    }
+
+    /// Full `/`-joined path of a slot.
+    fn path_of(&self, idx: u32) -> String {
+        let mut segs: Vec<&'static str> = Vec::new();
+        let mut cur = idx;
+        while cur != ROOT {
+            match self.slots[cur as usize].meta.get() {
+                Some(&(parent, name)) => {
+                    segs.push(name);
+                    cur = parent;
+                }
+                None => break,
+            }
+        }
+        segs.reverse();
+        segs.join("/")
+    }
+
+    /// Spans that could not be recorded (slot table full).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of every recorded phase, sorted by path.
+    pub fn report(&self) -> PhaseReport {
+        let mut phases: Vec<PhaseStat> = Vec::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if slot.meta.get().is_none() {
+                continue;
+            }
+            let count = slot.count.load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            phases.push(PhaseStat {
+                path: self.path_of(i as u32),
+                count,
+                secs: slot.nanos.load(Ordering::Relaxed) as f64 / 1e9,
+                busy_secs: slot.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+                bytes: slot.bytes.load(Ordering::Relaxed),
+            });
+        }
+        phases.sort_by(|a, b| a.path.cmp(&b.path));
+        PhaseReport { phases, dropped: self.dropped() }
+    }
+}
+
+/// RAII span guard returned by [`Phases::enter`].
+#[derive(Debug)]
+pub struct PhaseGuard<'p> {
+    phases: &'p Phases,
+    slot: Option<u32>,
+    prior_len: usize,
+    start: Instant,
+}
+
+impl PhaseGuard<'_> {
+    /// Attribute data-parallel worker-busy nanoseconds to this phase
+    /// (callable concurrently — pool busy callbacks feed this).
+    pub fn add_busy(&self, nanos: u64) {
+        if let Some(idx) = self.slot {
+            self.phases.slots[idx as usize].busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+        }
+    }
+
+    /// Attribute processed bytes to this phase.
+    pub fn add_bytes(&self, bytes: u64) {
+        if let Some(idx) = self.slot {
+            self.phases.slots[idx as usize].bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for PhaseGuard<'_> {
+    fn drop(&mut self) {
+        let nanos = self.start.elapsed().as_nanos() as u64;
+        SPAN_STACK.with(|s| s.borrow_mut().truncate(self.prior_len));
+        if let Some(idx) = self.slot {
+            let slot = &self.phases.slots[idx as usize];
+            slot.nanos.fetch_add(nanos, Ordering::Relaxed);
+            slot.count.fetch_add(1, Ordering::Relaxed);
+            if crate::obs::sink::enabled() {
+                let path = self.phases.path_of(idx);
+                crate::obs::sink::emit_lazy("span", || {
+                    vec![
+                        ("path", Json::from(path.as_str())),
+                        ("us", Json::from(nanos / 1_000)),
+                    ]
+                });
+            }
+        }
+    }
+}
+
+/// One phase's aggregated stats.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseStat {
+    /// `/`-joined span path, e.g. `build/rep/sketch`.
+    pub path: String,
+    /// Span instances recorded.
+    pub count: u64,
+    /// Inclusive seconds summed over instances (wall for coordinator-side
+    /// phases; Σ per-task time for fanned-out phases).
+    pub secs: f64,
+    /// Explicitly attributed data-parallel worker seconds
+    /// ([`PhaseGuard::add_busy`]); 0 where nothing was attributed.
+    pub busy_secs: f64,
+    /// Explicitly attributed bytes ([`PhaseGuard::add_bytes`]).
+    pub bytes: u64,
+}
+
+/// Sorted snapshot of a [`Phases`] collector — the `phases` member of
+/// `CostReport` and the `BENCH_*` `phases` objects.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseReport {
+    /// Per-phase stats, ascending by path.
+    pub phases: Vec<PhaseStat>,
+    /// Spans dropped because the slot table was full (0 in practice).
+    pub dropped: u64,
+}
+
+impl PhaseReport {
+    /// Stats of an exact path, if recorded.
+    pub fn get(&self, path: &str) -> Option<&PhaseStat> {
+        self.phases.iter().find(|p| p.path == path)
+    }
+
+    /// Σ `secs` over phases whose path matches `path` exactly or lives
+    /// under `path/`.
+    pub fn subtree_secs(&self, path: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|p| p.path == path || p.path.starts_with(&format!("{path}/")))
+            .map(|p| p.secs)
+            .sum()
+    }
+
+    /// JSON object mapping path → `{count, secs, busy_secs, bytes}`; a
+    /// `_dropped_spans` key appears only when spans were dropped.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = self
+            .phases
+            .iter()
+            .map(|p| {
+                (
+                    p.path.as_str(),
+                    Json::obj(vec![
+                        ("count", Json::from(p.count)),
+                        ("secs", Json::from(p.secs)),
+                        ("busy_secs", Json::from(p.busy_secs)),
+                        ("bytes", Json::from(p.bytes)),
+                    ]),
+                )
+            })
+            .collect();
+        if self.dropped > 0 {
+            pairs.push(("_dropped_spans", Json::from(self.dropped)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nesting_builds_paths() {
+        let ph = Phases::new();
+        {
+            let _a = ph.enter("build");
+            {
+                let _b = ph.enter("rep");
+                let _c = ph.enter("sketch");
+            }
+            let _d = ph.enter("accumulate");
+        }
+        let r = ph.report();
+        let paths: Vec<&str> = r.phases.iter().map(|p| p.path.as_str()).collect();
+        assert_eq!(paths, vec!["build", "build/accumulate", "build/rep", "build/rep/sketch"]);
+        assert_eq!(r.get("build").unwrap().count, 1);
+        assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn sibling_instances_do_not_cross() {
+        let a = Phases::new();
+        let b = Phases::new();
+        let _ga = a.enter("outer");
+        {
+            let _gb = b.enter("other");
+            let _ga2 = a.enter("inner");
+        }
+        drop(_ga);
+        let ra = a.report();
+        let rb = b.report();
+        assert!(ra.get("outer/inner").is_some(), "a-nesting must ignore b's span");
+        assert!(rb.get("other").is_some());
+        assert!(rb.get("outer/other").is_none());
+    }
+
+    #[test]
+    fn same_name_different_parent_is_distinct() {
+        let ph = Phases::new();
+        {
+            let _a = ph.enter("rep");
+            let _b = ph.enter("sketch");
+        }
+        {
+            let _c = ph.enter("sketch");
+        }
+        let r = ph.report();
+        assert_eq!(r.get("rep/sketch").unwrap().count, 1);
+        assert_eq!(r.get("sketch").unwrap().count, 1);
+    }
+
+    #[test]
+    fn busy_and_bytes_attribution() {
+        let ph = Phases::new();
+        {
+            let g = ph.enter("sketch");
+            g.add_busy(2_000_000_000);
+            g.add_bytes(4096);
+        }
+        let r = ph.report();
+        let s = r.get("sketch").unwrap();
+        assert!((s.busy_secs - 2.0).abs() < 1e-9);
+        assert_eq!(s.bytes, 4096);
+        assert!(s.secs >= 0.0);
+    }
+
+    #[test]
+    fn parallel_spans_from_pool_workers() {
+        let ph = std::sync::Arc::new(Phases::new());
+        let ph2 = ph.clone();
+        crate::util::pool::parallel_chunks(64, 4, move |_w, range| {
+            for _ in range {
+                let g = ph2.enter("build/rep");
+                let _inner = ph2.enter("score");
+                g.add_busy(1);
+            }
+        });
+        let r = ph.report();
+        assert_eq!(r.get("build/rep").unwrap().count, 64);
+        assert_eq!(r.get("build/rep/score").unwrap().count, 64);
+        assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn report_json_parses() {
+        let ph = Phases::new();
+        {
+            let _g = ph.enter("build");
+        }
+        let j = ph.report().to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("build").unwrap().get("count").unwrap().as_usize().unwrap(), 1);
+    }
+}

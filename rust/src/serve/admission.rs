@@ -26,14 +26,10 @@
 
 use super::executor::QueryEngine;
 use crate::data::types::Dataset;
+use crate::obs::{Counter, HistHandle, Histogram};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
-
-/// Latency reservoir size: a deterministic ring (slot = arrival index mod
-/// cap), enough for stable p99 at bench scale without unbounded growth.
-const RESERVOIR_CAP: usize = 4096;
 
 /// Admission policy knobs.
 #[derive(Clone, Debug)]
@@ -191,11 +187,20 @@ pub struct FrontDoor<'e, 'f> {
     queue_sheds: AtomicU64,
     deadline_sheds: AtomicU64,
     /// EWMA of per-query service time in integer microseconds (0 = no
-    /// sample yet). Fixed-point so it fits one lock-free atomic.
+    /// sample yet). Fixed-point so it fits one lock-free atomic — kept for
+    /// the deadline-shedding estimate (a last-values estimate, which the
+    /// whole-life histogram below is deliberately not).
     ewma_us: AtomicU64,
-    /// Total queries ever recorded into the reservoir (ring index source).
-    observed: AtomicUsize,
-    lat_ms: Mutex<Vec<f64>>,
+    /// Per-query service time, microseconds — a lock-free log-bucketed
+    /// [`Histogram`] (≤ 6.25 % relative quantile error), replacing the old
+    /// sort-based latency reservoir.
+    lat_us: Histogram,
+    /// Registry mirror: in-flight depth observed at each admit
+    /// (`stars_serve_queue_depth`).
+    queue_depth_hist: HistHandle,
+    /// Registry mirror: total refusals, both reasons
+    /// (`stars_serve_sheds_total`).
+    sheds_total: Counter,
 }
 
 impl<'e, 'f> FrontDoor<'e, 'f> {
@@ -211,8 +216,9 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
             queue_sheds: AtomicU64::new(0),
             deadline_sheds: AtomicU64::new(0),
             ewma_us: AtomicU64::new(0),
-            observed: AtomicUsize::new(0),
-            lat_ms: Mutex::new(Vec::new()),
+            lat_us: Histogram::new(),
+            queue_depth_hist: crate::obs::registry().histogram("stars_serve_queue_depth"),
+            sheds_total: crate::obs::registry().counter("stars_serve_sheds_total"),
         }
     }
 
@@ -235,9 +241,11 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
         if self.cfg.queue_limit > 0 && depth > self.cfg.queue_limit {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
             self.queue_sheds.fetch_add(1, Ordering::Relaxed);
+            self.sheds_total.inc(1);
             return None;
         }
         self.depth_high_water.fetch_max(depth, Ordering::SeqCst);
+        self.queue_depth_hist.record(depth as u64);
         Some(AdmissionPermit {
             in_flight: &self.in_flight,
         })
@@ -259,6 +267,7 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
             if ewma_ms > 0.0 && depth as f64 * ewma_ms > self.cfg.deadline_ms {
                 drop(permit);
                 self.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                self.sheds_total.inc(1);
                 return Admission::Shed(ShedReason::Deadline);
             }
         }
@@ -290,7 +299,7 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
     }
 
     /// Fold one batch's service time into the EWMA (α = 1/8) and the
-    /// latency reservoir, normalized to per-query time.
+    /// latency histogram, normalized to per-query time.
     fn observe(&self, batch_ms: f64, nq: usize) {
         let per_query_ms = batch_ms / nq.max(1) as f64;
         let sample_us = (per_query_ms * 1e3).round().max(1.0) as u64;
@@ -303,44 +312,25 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
             (old * 7 + sample_us) / 8
         };
         self.ewma_us.store(next, Ordering::Relaxed);
-        let slot = self.observed.fetch_add(1, Ordering::Relaxed);
-        let mut lat = self.lat_ms.lock().unwrap();
-        if lat.len() < RESERVOIR_CAP {
-            lat.push(per_query_ms);
-        } else {
-            lat[slot % RESERVOIR_CAP] = per_query_ms;
-        }
+        self.lat_us.record(sample_us);
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot. Latency quantiles come from the lock-free
+    /// histogram over the door's whole life (monotone in q, within the
+    /// bucket scheme's ≤ 6.25 % relative error); 0 before the first sample.
     pub fn stats(&self) -> AdmissionStats {
-        let lat = self.lat_ms.lock().unwrap();
-        let (p50, p99) = percentiles(&lat);
+        let lat = self.lat_us.snapshot();
         AdmissionStats {
             admitted: self.admitted.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
             queue_sheds: self.queue_sheds.load(Ordering::Relaxed),
             deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
             depth_high_water: self.depth_high_water.load(Ordering::SeqCst),
-            p50_ms: p50,
-            p99_ms: p99,
+            p50_ms: lat.quantile(0.5) as f64 / 1e3,
+            p99_ms: lat.quantile(0.99) as f64 / 1e3,
             ewma_ms: self.ewma_ms(),
         }
     }
-}
-
-/// (p50, p99) of an unsorted sample set, ms; zeros when empty.
-fn percentiles(samples: &[f64]) -> (f64, f64) {
-    if samples.is_empty() {
-        return (0.0, 0.0);
-    }
-    let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.total_cmp(b));
-    let at = |q: f64| {
-        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-        sorted[idx]
-    };
-    (at(0.50), at(0.99))
 }
 
 #[cfg(test)]
@@ -348,12 +338,44 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentiles_of_small_samples() {
-        assert_eq!(percentiles(&[]), (0.0, 0.0));
-        assert_eq!(percentiles(&[2.0]), (2.0, 2.0));
-        let (p50, p99) = percentiles(&[4.0, 1.0, 3.0, 2.0, 5.0]);
-        assert_eq!(p50, 3.0);
-        assert_eq!(p99, 5.0);
+    fn stats_json_keys_stay_stable() {
+        // Downstream consumers (driver reports, servebench JSON) key on
+        // these names; the histogram migration must not rename them.
+        let s = AdmissionStats {
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            ..Default::default()
+        };
+        let j = s.to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        for key in [
+            "admitted",
+            "degraded",
+            "queue_sheds",
+            "deadline_sheds",
+            "depth_high_water",
+            "latency_p50_ms",
+            "latency_p99_ms",
+            "ewma_ms",
+        ] {
+            assert!(v.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn histogram_latency_quantiles_are_monotone_in_ms() {
+        // Spread samples across octaves; the ms-converted quantiles must
+        // stay ordered and inside [min, max] (the shed ladder's reports and
+        // `tests/fault_injection.rs` rely on p99 ≥ p50).
+        let h = Histogram::new();
+        for us in [120u64, 450, 900, 3_000, 12_000, 90_000] {
+            h.record(us);
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5) as f64 / 1e3;
+        let p99 = s.quantile(0.99) as f64 / 1e3;
+        assert!(p99 >= p50, "p99 {p99} < p50 {p50}");
+        assert!(p50 >= 0.120 && p99 <= 90.0);
     }
 
     #[test]

@@ -467,6 +467,10 @@ pub struct QueryEngine<'f> {
     /// Incremental compactions since the last full rebuild — the input to
     /// the `full_rebuild_every` policy.
     incr_since_full: AtomicU64,
+    /// Cached observability handle: delta-buffer depth gauge, updated on
+    /// insert and after every compaction swap (registry lookups take a
+    /// mutex; inserts should not).
+    delta_pending_gauge: crate::obs::Gauge,
 }
 
 impl<'f> QueryEngine<'f> {
@@ -492,6 +496,7 @@ impl<'f> QueryEngine<'f> {
             full_compactions: AtomicU64::new(0),
             incremental_compactions: AtomicU64::new(0),
             incr_since_full: AtomicU64::new(0),
+            delta_pending_gauge: crate::obs::registry().gauge("stars_serve_delta_pending"),
         }
     }
 
@@ -586,8 +591,25 @@ impl<'f> QueryEngine<'f> {
         }
         let keys = snap.query_keys(queries, self.workers);
         let measure = self.measure;
+        // Observability (results never depend on it): per-query latency and
+        // rescore width land in the global registry; with `STARS_TRACE` set
+        // each query also emits one NDJSON trace event. Handles are resolved
+        // once per batch — recording is relaxed atomic adds.
+        let lat_hist = crate::obs::registry().histogram("stars_serve_query_latency_us");
+        let query_count = crate::obs::registry().counter("stars_serve_queries_total");
+        let quant_engaged = measure.supports_quant()
+            && (quant_rescore.is_some() || snap.config().quantized)
+            && snap.quant().is_some()
+            && (delta.is_empty() || delta_quant.is_some());
+        if quant_engaged && k > 0 {
+            let rf = quant_rescore.unwrap_or(snap.config().rescore_factor).max(1);
+            crate::obs::registry()
+                .histogram("stars_serve_rescore_width")
+                .record(k.saturating_mul(rf) as u64);
+        }
         pool::parallel_map(nq, self.workers, |qi| {
-            QSCRATCH.with(|cell| {
+            let t0 = Instant::now();
+            let out = QSCRATCH.with(|cell| {
                 let s = &mut *cell.borrow_mut();
                 answer_one(
                     &snap,
@@ -603,7 +625,21 @@ impl<'f> QueryEngine<'f> {
                     quant_rescore,
                     s,
                 )
-            })
+            });
+            let us = t0.elapsed().as_micros() as u64;
+            lat_hist.record(us);
+            query_count.inc(1);
+            let results = out.len();
+            crate::obs::emit_lazy("serve_query", || {
+                vec![
+                    ("query", Json::from(qi)),
+                    ("k", Json::from(k)),
+                    ("results", Json::from(results)),
+                    ("quant", Json::from(quant_engaged)),
+                    ("us", Json::from(us)),
+                ]
+            });
+            out
         })
     }
 
@@ -621,11 +657,13 @@ impl<'f> QueryEngine<'f> {
     /// immediately. Triggers a compaction when the delta reaches the
     /// configured limit.
     pub fn insert(&self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
-        let (id, should_compact) = {
+        let (id, should_compact, pending) = {
             let mut d = self.delta.lock().unwrap();
             let id = d.insert(row, set);
-            (id, self.compact_limit > 0 && d.len() >= self.compact_limit)
+            let pending = d.len();
+            (id, self.compact_limit > 0 && pending >= self.compact_limit, pending)
         };
+        self.delta_pending_gauge.set(pending as u64);
         if should_compact {
             self.compact();
         }
@@ -738,9 +776,27 @@ impl<'f> QueryEngine<'f> {
         report.seconds = t0.elapsed().as_secs_f64();
         // Swap the epoch and trim the absorbed prefix atomically w.r.t.
         // readers (who take the delta lock to capture their view).
-        let mut d = self.delta.lock().unwrap();
-        *self.snapshot.write().unwrap() = Arc::new(next);
-        d.absorb_prefix(prefix);
+        let pending = {
+            let mut d = self.delta.lock().unwrap();
+            *self.snapshot.write().unwrap() = Arc::new(next);
+            d.absorb_prefix(prefix);
+            d.len()
+        };
+        // Observability: compaction time + the post-swap delta depth.
+        let us = (report.seconds * 1e6) as u64;
+        crate::obs::registry().histogram("stars_serve_compaction_us").record(us);
+        crate::obs::registry().counter("stars_serve_compactions_total").inc(1);
+        self.delta_pending_gauge.set(pending as u64);
+        let (mode_name, delta_points, scored) =
+            (report.mode.name(), report.delta_points, report.candidates_scored);
+        crate::obs::emit_lazy("compaction", || {
+            vec![
+                ("mode", Json::from(mode_name)),
+                ("delta_points", Json::from(delta_points)),
+                ("candidates_scored", Json::from(scored)),
+                ("us", Json::from(us)),
+            ]
+        });
         Some(report)
     }
 

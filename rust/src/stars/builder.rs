@@ -158,6 +158,10 @@ impl<'a> StarsBuilder<'a> {
         let n = self.ds.len();
 
         let ((graph, kept), report) = cluster.run_job(|c| {
+            // Root phase span for the whole job: its wall time reconciles
+            // with the report's real_time (tests/obs.rs). Pure observation —
+            // no result depends on it.
+            let _build_span = c.ledger().phases().enter_root("build");
             let mut kept: Vec<Option<Vec<u64>>> = vec![None; keep_keys];
             if params.algorithm == Algorithm::AllPair {
                 let edges = allpair::allpair_edges(self.ds, sim, params.threshold, c);
@@ -199,6 +203,10 @@ impl<'a> StarsBuilder<'a> {
                     let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         c.map_timed_round(done as u64, count, |t, ledger| {
                             let rep = (done + t) as u64;
+                            // Root-anchored so the path is "build/rep"
+                            // whether the task runs on a pool worker or is
+                            // re-executed inline by the straggler pass.
+                            let _rep_span = ledger.phases().enter_root("build/rep");
                             match params.algorithm {
                                 Algorithm::Lsh | Algorithm::LshStars => {
                                     threshold::lsh_rep_par_keys(
@@ -243,9 +251,13 @@ impl<'a> StarsBuilder<'a> {
                     }
                     batches.push(edges);
                 }
-                acc.add_wave(batches);
+                {
+                    let _acc_span = c.ledger().phases().enter("accumulate");
+                    acc.add_wave(batches);
+                }
                 done += count;
             }
+            let _fin_span = c.ledger().phases().enter("finalize");
             (acc.finalize(), kept)
         });
 

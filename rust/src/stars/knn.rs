@@ -63,9 +63,15 @@ pub fn sorting_rep_par(
 
     // Sketch + sort phase (TeraSort in the real system): data-parallel
     // sketching over point chunks, then the packed-u64 radix fast path for
-    // binary-symbol families.
-    let order = sorted_indices_par_timed(family, ds, rep, inner_workers, inner_busy);
+    // binary-symbol families. One phase span covers both (they share the
+    // driver), its busy aggregating every inner worker's chunk time.
+    let sketch_span = ledger.phases().enter("sketch");
+    let order = sorted_indices_par_timed(family, ds, rep, inner_workers, |w, nanos| {
+        inner_busy(w, nanos);
+        sketch_span.add_busy(nanos);
+    });
     ledger.add_sketches((n * family.sketch_len()) as u64);
+    drop(sketch_span);
 
     let ws = windows(n, params.window, &mut rng);
     // Leader pre-draw in window order: same RNG stream as the sequential
@@ -133,14 +139,19 @@ pub fn sorting_rep_par(
             }
         }
     };
+    let score_span = ledger.phases().enter("score");
     let edges = pool::parallel_flat_map_timed(
         ws.len(),
         inner_workers,
-        inner_busy,
+        |w, nanos| {
+            inner_busy(w, nanos);
+            score_span.add_busy(nanos);
+        },
         Vec::<f32>::new,
         score_window,
     );
     ledger.add_edges(edges.len() as u64);
+    drop(score_span);
     edges
 }
 

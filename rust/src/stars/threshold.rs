@@ -83,11 +83,18 @@ pub fn lsh_rep_par_keys(
     // busy counts machine-seconds (worker 0 rides the rep's wall charge).
     let inner_busy = |w: usize, nanos: u64| ledger.add_inner_busy(w, nanos);
 
-    // Sketch phase: one prepared state, point chunks over the pool.
-    let keys = sketch::bucket_keys_par_timed(family, ds, rep, inner_workers, inner_busy);
+    // Sketch phase: one prepared state, point chunks over the pool. The
+    // phase span's busy aggregates every inner worker's chunk time.
+    let sketch_span = ledger.phases().enter("sketch");
+    let keys = sketch::bucket_keys_par_timed(family, ds, rep, inner_workers, |w, nanos| {
+        inner_busy(w, nanos);
+        sketch_span.add_busy(nanos);
+    });
     ledger.add_sketches(n as u64);
+    drop(sketch_span);
 
     // Join phase: group ids by bucket key (§4's two strategies).
+    let join_span = ledger.phases().enter("join");
     let buckets = match params.join {
         JoinStrategy::Shuffle => {
             let records: Vec<(u64, u32)> =
@@ -101,6 +108,7 @@ pub fn lsh_rep_par_keys(
         _ => group_buckets(&keys),
     };
     let buckets = split_oversized(buckets, params.max_bucket, &mut rng);
+    drop(join_span);
 
     // Leader pre-draw: consume the repetition RNG in bucket order exactly as
     // the sequential scoring loop did (a draw only for Stars buckets above
@@ -134,14 +142,19 @@ pub fn lsh_rep_par_keys(
             None => score_all_pairs(ds, sim, bucket, threshold, ledger, scores, edges),
         }
     };
+    let score_span = ledger.phases().enter("score");
     let edges = pool::parallel_flat_map_timed(
         buckets.len(),
         inner_workers,
-        inner_busy,
+        |w, nanos| {
+            inner_busy(w, nanos);
+            score_span.add_busy(nanos);
+        },
         Vec::<f32>::new,
         score_bucket,
     );
     ledger.add_edges(edges.len() as u64);
+    drop(score_span);
     (edges, if keep_keys { Some(keys) } else { None })
 }
 

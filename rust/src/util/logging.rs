@@ -1,4 +1,11 @@
 //! Leveled stderr logger with elapsed-time stamps.
+//!
+//! Verbosity defaults to `Info` and can be set two ways: programmatically
+//! via [`set_level`], or through the `STARS_LOG=error|info|debug` env var,
+//! consumed once at the first [`level`]/[`log`] call (an explicit
+//! [`set_level`] always wins). When the `STARS_TRACE` NDJSON sink is
+//! active, every line at or above the active level is additionally routed
+//! into it as a `{"kind": "log", ...}` event (see `crate::obs::sink`).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -12,20 +19,39 @@ pub enum Level {
     Debug = 2,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(1);
+/// Sentinel: level not yet initialized from `STARS_LOG`.
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
 static START: OnceLock<Instant> = OnceLock::new();
 
-/// Set global verbosity.
+/// Set global verbosity (overrides `STARS_LOG`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Current verbosity.
+/// Current verbosity; the first call consumes `STARS_LOG` (default
+/// `Info` when unset or unparseable).
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
         1 => Level::Info,
-        _ => Level::Debug,
+        2 => Level::Debug,
+        _ => {
+            let from_env = match std::env::var("STARS_LOG").as_deref() {
+                Ok("error") | Ok("ERROR") => Level::Error,
+                Ok("debug") | Ok("DEBUG") => Level::Debug,
+                _ => Level::Info,
+            };
+            // A concurrent set_level wins over the env default.
+            let _ = LEVEL.compare_exchange(
+                UNSET,
+                from_env as u8,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            level()
+        }
     }
 }
 
@@ -34,7 +60,8 @@ pub fn elapsed() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
-/// Emit a log line if `lvl` is enabled.
+/// Emit a log line if `lvl` is enabled; enabled lines are also routed to
+/// the `STARS_TRACE` NDJSON sink when one is active.
 pub fn log(lvl: Level, msg: std::fmt::Arguments<'_>) {
     if lvl <= level() {
         let tag = match lvl {
@@ -43,6 +70,14 @@ pub fn log(lvl: Level, msg: std::fmt::Arguments<'_>) {
             Level::Debug => "DBG ",
         };
         eprintln!("[{:9.3}s {}] {}", elapsed(), tag, msg);
+        if crate::obs::sink::enabled() {
+            let name = match lvl {
+                Level::Error => "error",
+                Level::Info => "info",
+                Level::Debug => "debug",
+            };
+            crate::obs::sink::emit_log(name, &format!("{msg}"));
+        }
     }
 }
 

@@ -1,0 +1,292 @@
+//! Observability acceptance tests (ARCHITECTURE.md "Observability"):
+//!
+//! * the build's span tree has the documented shape under every worker
+//!   count — no orphaned or crossed spans from pool parallelism, and the
+//!   straggler-safe root anchoring keeps `build/rep` on one path;
+//! * histogram merge is associative and exactly count-conserving;
+//! * tracing is observation only — a traced build/serve run is
+//!   bit-identical (edges and top-k) to an untraced one, every NDJSON line
+//!   the sink writes parses back through `util::json`, and `1/N` sampling
+//!   keeps exactly the events whose global index survives `seq % N == 0`;
+//! * `CostReport::phases` reconciles with the report's wall/busy clocks;
+//! * `run_serve_with(metrics_out)` leaves a parseable Prometheus-text
+//!   snapshot behind.
+//!
+//! The sink is process-global, so everything that toggles it lives in ONE
+//! test fn (`tracing_is_observation_only_and_ndjson_parses`) — the other
+//! tests never enable it, and stray span events from concurrently running
+//! builds landing in the trace file are themselves valid events, which the
+//! parse assertions tolerate by design.
+
+use stars::data::synth;
+use stars::lsh::SimHash;
+use stars::obs::HistSnapshot;
+use stars::serve::{QueryEngine, ServeConfig, ServeMeasure};
+use stars::sim::CosineSim;
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+
+const REPS: usize = 12;
+
+fn fixture() -> (stars::data::Dataset, SimHash) {
+    let ds = synth::gaussian_mixture(1200, 16, 10, 0.1, 21);
+    let h = SimHash::new(16, 8, 3);
+    (ds, h)
+}
+
+fn params() -> BuildParams {
+    BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(REPS)
+        .threshold(0.5)
+}
+
+#[test]
+fn span_tree_is_stable_under_every_worker_count() {
+    let (ds, h) = fixture();
+    for workers in [1usize, 2, 4, 8] {
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params())
+            .workers(workers)
+            .build();
+        let ph = &out.report.phases;
+        assert_eq!(ph.dropped, 0, "dropped spans at {workers} workers");
+        // Coordinator-side spine.
+        assert_eq!(ph.get("build").unwrap().count, 1, "{workers} workers");
+        let waves = ph.get("build/wave").unwrap().count;
+        assert!(waves >= 1, "no waves at {workers} workers");
+        assert_eq!(ph.get("build/accumulate").unwrap().count, waves);
+        assert_eq!(ph.get("build/finalize").unwrap().count, 1);
+        // Per-repetition subtree: root-anchored, so the count is exactly R
+        // for every worker count — a crossed span (a rep nested under
+        // wave, or a phase attributed to the wrong rep) would split these
+        // counts across paths.
+        for path in [
+            "build/rep",
+            "build/rep/sketch",
+            "build/rep/join",
+            "build/rep/score",
+        ] {
+            assert_eq!(
+                ph.get(path).map(|p| p.count),
+                Some(REPS as u64),
+                "{path} at {workers} workers"
+            );
+        }
+        // No orphans: every recorded path lives in the build namespace.
+        for p in &ph.phases {
+            assert!(
+                p.path == "build" || p.path.starts_with("build/"),
+                "orphaned span path {:?} at {workers} workers",
+                p.path
+            );
+        }
+    }
+}
+
+#[test]
+fn histogram_merge_is_associative_and_conserves_counts() {
+    let mk = |vals: &[u64]| {
+        let mut s = HistSnapshot::default();
+        for &v in vals {
+            s.record(v);
+        }
+        s
+    };
+    let a = mk(&[0, 1, 5, 17, 300, 301, 1 << 30]);
+    let b = mk(&[2, 4, 1_000_000, u64::MAX]);
+    let c = mk(&[7, 7, 7, 123_456_789]);
+    let left = a.merge(&b).merge(&c);
+    let right = a.merge(&b.merge(&c));
+    assert_eq!(left, right, "merge must be associative");
+    assert_eq!(a.merge(&b), b.merge(&a), "merge must be commutative");
+    // Exact count conservation, in the total and bucket-wise.
+    assert_eq!(left.count, a.count + b.count + c.count);
+    assert_eq!(
+        left.buckets.iter().map(|&(_, n)| n).sum::<u64>(),
+        left.count
+    );
+    assert_eq!(left.min, 0);
+    assert_eq!(left.max, u64::MAX);
+    // Identity element.
+    assert_eq!(a.merge(&HistSnapshot::default()), a);
+}
+
+#[test]
+fn tracing_is_observation_only_and_ndjson_parses() {
+    let (ds, h) = fixture();
+    let build = || {
+        StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params())
+            .workers(4)
+            .build_indexed(ServeConfig::default().route_reps(4).compact_limit(0))
+    };
+    let qids: Vec<u32> = (0..1200u32).step_by(24).collect();
+    let queries = ds.subset(&qids);
+
+    // Baseline: tracing off.
+    stars::obs::set_trace(None, 1).unwrap();
+    let (out_off, index_off) = build();
+    let engine_off =
+        QueryEngine::new(index_off, &h, ServeMeasure::Cosine, params()).workers(4);
+    let topk_off = engine_off.query(&queries, 10);
+
+    // Same build + sweep, traced.
+    let dir = std::env::temp_dir();
+    let trace = dir.join(format!("stars_obs_trace_{}.ndjson", std::process::id()));
+    let _ = std::fs::remove_file(&trace);
+    stars::obs::set_trace(Some(trace.as_path()), 1).unwrap();
+    let (out_on, index_on) = build();
+    let engine_on =
+        QueryEngine::new(index_on, &h, ServeMeasure::Cosine, params()).workers(4);
+    let topk_on = engine_on.query(&queries, 10);
+    stars::obs::set_trace(None, 1).unwrap();
+
+    // Bit-identity: tracing must not change edges or top-k.
+    assert_eq!(
+        out_off.graph.edges(),
+        out_on.graph.edges(),
+        "tracing changed the built edges"
+    );
+    assert_eq!(topk_off, topk_on, "tracing changed serve top-k");
+
+    // Every line the sink wrote parses back and is a tagged object.
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut spans = 0usize;
+    let mut queries_seen = 0usize;
+    for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate() {
+        let doc = stars::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("line {}: {e}: {line}", i + 1));
+        let kind = doc.get("kind").and_then(|k| k.as_str()).unwrap().to_string();
+        assert!(doc.get("seq").is_some(), "line {} has no seq", i + 1);
+        match kind.as_str() {
+            "span" => {
+                spans += 1;
+                assert!(doc.get("path").and_then(|p| p.as_str()).is_some());
+            }
+            "serve_query" => queries_seen += 1,
+            _ => {}
+        }
+    }
+    assert!(spans > 0, "traced build emitted no span events");
+    assert!(queries_seen > 0, "traced sweep emitted no serve_query events");
+
+    // Deterministic 1/N sampling: with sample_every = 3, every surviving
+    // event's global index satisfies seq % 3 == 0 — no RNG anywhere.
+    let sampled = dir.join(format!("stars_obs_sampled_{}.ndjson", std::process::id()));
+    let _ = std::fs::remove_file(&sampled);
+    stars::obs::set_trace(Some(sampled.as_path()), 3).unwrap();
+    assert_eq!(stars::obs::sample_every(), 3);
+    for _ in 0..30 {
+        stars::obs::emit("marker", vec![("x", stars::util::json::Json::from(1u64))]);
+    }
+    stars::obs::set_trace(None, 1).unwrap();
+    let text = std::fs::read_to_string(&sampled).unwrap();
+    let mut kept = 0usize;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let doc = stars::util::json::parse(line).unwrap();
+        let seq = doc.get("seq").unwrap().as_usize().unwrap();
+        assert_eq!(seq % 3, 0, "sampled event with off-stride seq {seq}");
+        kept += 1;
+    }
+    assert!(kept > 0, "1/3 sampling of 30 events kept nothing");
+    let _ = std::fs::remove_file(&trace);
+    let _ = std::fs::remove_file(&sampled);
+}
+
+#[test]
+fn phases_reconcile_with_cost_report_clocks() {
+    let (ds, h) = fixture();
+    // REPS >= workers so each repetition runs with inner_workers == 1 and
+    // the rep spans' Σ wall is directly comparable to total_time.
+    let out = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params())
+        .workers(4)
+        .build();
+    let r = &out.report;
+    const SLACK_S: f64 = 0.5;
+    let build = r.phases.get("build").unwrap();
+    assert!(build.secs > 0.0);
+    // The build root span lives inside the job wall clock.
+    assert!(
+        build.secs <= r.real_time + SLACK_S,
+        "build span {:.3}s exceeds wall {:.3}s",
+        build.secs,
+        r.real_time
+    );
+    // Σ per-rep task time is what the ledger charges as worker busy time,
+    // so the rep subtree cannot exceed total_time by more than accounting
+    // slack (rep spans include a sliver of per-task bookkeeping the
+    // ledger's own charge also includes).
+    let rep_secs = r.phases.get("build/rep").unwrap().secs;
+    assert!(
+        rep_secs <= r.total_time + SLACK_S,
+        "rep spans {rep_secs:.3}s exceed total busy {:.3}s",
+        r.total_time
+    );
+    // Phase children stay inside their parent's inclusive time.
+    let child_sum: f64 = ["build/rep/sketch", "build/rep/join", "build/rep/score"]
+        .iter()
+        .map(|p| r.phases.get(p).unwrap().secs)
+        .sum();
+    assert!(
+        child_sum <= rep_secs + SLACK_S,
+        "children {child_sum:.3}s exceed build/rep {rep_secs:.3}s"
+    );
+    // The report JSON carries the phases object.
+    let j = r.to_json().to_string();
+    let doc = stars::util::json::parse(&j).unwrap();
+    let phases = doc.get("phases").expect("report JSON lost phases");
+    assert!(phases.get("build").is_some());
+}
+
+#[test]
+fn metrics_out_writes_prometheus_snapshot() {
+    use stars::coordinator::{DatasetSpec, FamilySpec, Job, MeasureSpec, ServeOpts};
+    let job = Job {
+        dataset: DatasetSpec::Random {
+            n: 400,
+            dim: 16,
+            modes: 8,
+        },
+        measure: MeasureSpec::Cosine,
+        family: FamilySpec::SimHash { bits: 8 },
+        params: BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(6)
+            .threshold(0.4),
+        data_seed: 7,
+        workers: 2,
+    };
+    let path = std::env::temp_dir().join(format!(
+        "stars_obs_metrics_{}.prom",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let opts = ServeOpts {
+        queries: 10,
+        k: 5,
+        metrics_out: Some(path.clone()),
+        metrics_every_s: 0.05,
+        ..ServeOpts::default()
+    };
+    let doc = stars::coordinator::run_serve_with(&job, &opts).unwrap();
+    // The serve JSON now reports the full quantile ladder from the obs
+    // histogram.
+    for key in ["p50_ms", "p90_ms", "p99_ms", "p999_ms"] {
+        assert!(doc.get(key).unwrap().as_f64().unwrap() >= 0.0, "{key}");
+    }
+    // The exporter's final write (on drop) leaves a Prometheus-text
+    // snapshot behind, and the rename-into-place protocol leaves no .tmp.
+    let text = std::fs::read_to_string(&path).expect("metrics snapshot missing");
+    assert!(text.contains("# TYPE"), "no TYPE lines:\n{text}");
+    assert!(
+        text.contains("stars_serve_query_latency_us"),
+        "latency summary missing:\n{text}"
+    );
+    assert!(text.contains("stars_serve_queries_total"));
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# BENCH_*.json envelope gate: every checked-in bench artifact must parse
+# and carry the three envelope keys — `schema_version` (non-empty),
+# `data_status` (provenance: measured vs PROJECTED) and `simd_backend` —
+# so a bench emitter can never silently drop the provenance machinery
+# (EXPERIMENTS.md §The BENCH_*.json convention). The actual validation
+# lives in the repo's own binary (`stars bench-check`, built on the
+# zero-dependency util::json parser), keeping this script free of
+# external JSON tooling.
+#
+#   scripts/check_bench_schema.sh            # checks the three root files
+#   scripts/check_bench_schema.sh FILE...    # checks the given files
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="$ROOT/rust/target/release/stars"
+
+if [[ ! -x "$BIN" ]]; then
+    echo "==> building release binary for bench-check"
+    (cd "$ROOT/rust" && cargo build --release)
+fi
+
+if [[ $# -gt 0 ]]; then
+    FILES=("$@")
+else
+    FILES=(
+        "$ROOT/BENCH_scoring.json"
+        "$ROOT/BENCH_sketch.json"
+        "$ROOT/BENCH_serve.json"
+    )
+fi
+
+"$BIN" bench-check "${FILES[@]}"

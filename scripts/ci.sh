@@ -64,6 +64,29 @@ STARS_FAULTS="seed=1,crash=0.2,delay=0.1:20,corrupt=0.3,max_failures=2" \
     ./target/release/stars build --dataset random --n 2000 --r 4 \
     --threshold 0.5 --join shuffle >/dev/null
 
+# Observability gates (see ARCHITECTURE.md "Observability" and
+# EXPERIMENTS.md §Observability). The tracing/metrics layer's own
+# bit-identity and span-shape tests run inside the suites above; here the
+# *end-to-end env wiring* is gated the same way as STARS_FAULTS: a CLI
+# build + serve under STARS_TRACE must leave an NDJSON file whose every
+# line parses back through the repo's own util::json (`stars
+# trace-check`), a --metrics-out serve must leave a Prometheus-text
+# snapshot behind, and the checked-in BENCH_*.json artifacts must carry
+# the schema_version/data_status/simd_backend envelope.
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+echo "==> STARS_TRACE end-to-end env wiring (CLI build+serve, trace-check)"
+STARS_TRACE="$OBS_TMP/trace.ndjson" STARS_TRACE_SAMPLE=1 \
+    ./target/release/stars serve --dataset random --n 2000 --r 4 \
+    --threshold 0.5 --queries 20 --k 5 \
+    --metrics-out "$OBS_TMP/metrics.prom" --metrics-every 0.1 >/dev/null
+./target/release/stars trace-check "$OBS_TMP/trace.ndjson"
+echo "==> Prometheus snapshot sanity (--metrics-out)"
+grep -q '# TYPE' "$OBS_TMP/metrics.prom"
+grep -q 'stars_serve_query_latency_us' "$OBS_TMP/metrics.prom"
+echo "==> BENCH_*.json envelope gate (bench-check)"
+../scripts/check_bench_schema.sh
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
