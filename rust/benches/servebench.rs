@@ -19,7 +19,11 @@
 //! * the **quantized tier** end-to-end (same build, `ServeConfig::
 //!   quantized`): int8-first QPS/latency/recall next to the f32 numbers,
 //!   with the recall ratio the 0.98 serve-integration gate tracks
-//!   (EXPERIMENTS.md §Quant table convention).
+//!   (EXPERIMENTS.md §Quant table convention);
+//! * the **multi-shard scaling curve** (EXPERIMENTS.md §Sharding table
+//!   convention): the same snapshot served at 1/2/4/8 shards through the
+//!   fence-partitioned scatter-gather engine, answers asserted
+//!   bit-identical across shard counts.
 
 use stars::bench::{fmt_count, fmt_secs, time_once, time_runs, Table};
 use stars::obs::Histogram;
@@ -27,7 +31,7 @@ use stars::data::synth;
 use stars::lsh::SimHash;
 use stars::serve::{
     brute_force_topk, recall_against, AdmissionConfig, CompactionMode, FrontDoor, QueryEngine,
-    ServeConfig, ServeMeasure,
+    ServeConfig, ServeMeasure, ShardedEngine,
 };
 use stars::sim::CosineSim;
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
@@ -302,16 +306,70 @@ fn main() {
         ),
     ]);
 
+    // Multi-shard scaling curve: the same snapshot served through the
+    // fence-partitioned scatter-gather engine at 1/2/4/8 shards. The
+    // sharded build forces max_candidates to 0 (the shard-invariance
+    // config), so this is a separate snapshot from the capped f32 engine
+    // above; the per-count answers are asserted bit-identical, which is
+    // the contract `tests/shard_parity.rs` proves exhaustively.
+    let (_, sbase) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&family)
+        .params(params.clone())
+        .build_sharded(1, ServeConfig::default().route_reps(8).compact_limit(0));
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut s_qps: Vec<f64> = Vec::new();
+    let mut s_p50: Vec<f64> = Vec::new();
+    let mut s_p99: Vec<f64> = Vec::new();
+    let mut s_reference: Option<Vec<Vec<(u32, f32)>>> = None;
+    for &ns in &shard_counts {
+        let seng = ShardedEngine::new(
+            sbase.resharded(ns),
+            &family,
+            ServeMeasure::Cosine,
+            params.clone(),
+        )
+        .workers(workers);
+        let sbatch = time_runs(1, 3, || {
+            std::hint::black_box(seng.query(&queries, K));
+        });
+        let sqps = BATCH_QUERIES as f64 / sbatch.median();
+        let sh = Histogram::new();
+        for qi in 0..LATENCY_QUERIES.min(200) {
+            let one = queries.subset(&[(qi % BATCH_QUERIES) as u32]);
+            let (s, _) = time_once(|| seng.query(&one, K));
+            sh.record((s * 1e6) as u64);
+        }
+        let slat = sh.snapshot();
+        s_qps.push(sqps);
+        s_p50.push(slat.quantile(0.50) as f64 / 1e3);
+        s_p99.push(slat.quantile(0.99) as f64 / 1e3);
+        let s_got = seng.query(&rqueries, K);
+        match &s_reference {
+            None => s_reference = Some(s_got),
+            Some(r) => assert_eq!(r, &s_got, "sharded answers diverged at {ns} shards"),
+        }
+        table.row(vec![
+            format!("sharded queries ({ns} shards, bit-identical)"),
+            fmt_count(BATCH_QUERIES as u64),
+            fmt_secs(sbatch.median()),
+            format!("{}/s", fmt_count(sqps as u64)),
+        ]);
+    }
+
     table.print();
 
     let doc = Json::obj(vec![
-        // v6: renamed `schema` → `schema_version` (CI bench-check gate),
-        // added `data_status` and the `phases` object (the build's
+        // v7: added the `sharding` object — the multi-shard scaling curve
+        // (QPS/p50/p99 vs shard count) through the fence-partitioned
+        // scatter-gather engine, answers asserted bit-identical across
+        // counts. v6: renamed `schema` → `schema_version` (CI bench-check
+        // gate), added `data_status` and the `phases` object (the build's
         // self-profile from CostReport::phases; latency percentiles now
         // come from the obs histogram — ≤6.25% bucket error). v5: added
         // the `admission` and `faults` objects. v4: added the `quantized`
         // object (int8 first-pass tier next to its f32 twin).
-        ("schema_version", Json::from("stars-bench-serve/v6")),
+        ("schema_version", Json::from("stars-bench-serve/v7")),
         (
             "data_status",
             Json::from("measured by `cargo bench --bench servebench` on this host"),
@@ -363,6 +421,27 @@ fn main() {
                 ),
                 ("bytes_per_row", Json::from(qstats.bytes_per_row)),
                 ("quant_bytes", Json::from(qstats.quant_bytes)),
+            ]),
+        ),
+        (
+            "sharding",
+            Json::obj(vec![
+                (
+                    "shard_counts",
+                    Json::Arr(shard_counts.iter().map(|&c| Json::from(c)).collect()),
+                ),
+                (
+                    "batch_qps",
+                    Json::Arr(s_qps.iter().map(|&v| Json::from(v)).collect()),
+                ),
+                (
+                    "latency_p50_ms",
+                    Json::Arr(s_p50.iter().map(|&v| Json::from(v)).collect()),
+                ),
+                (
+                    "latency_p99_ms",
+                    Json::Arr(s_p99.iter().map(|&v| Json::from(v)).collect()),
+                ),
             ]),
         ),
         ("admission", adm.to_json()),

@@ -153,6 +153,19 @@ pub struct ServeOpts {
     /// Rewrite interval for `metrics_out`, seconds (clamped to ≥ 0.01 by
     /// the exporter). Ignored unless `metrics_out` is set.
     pub metrics_every_s: f64,
+    /// Serve through a fence-partitioned [`crate::serve::ShardedEngine`]
+    /// with this many shards (≤ 1 = the single-process
+    /// [`crate::serve::QueryEngine`]). The sharded build forces
+    /// `max_candidates = 0` — the shard-invariance contract needs the
+    /// uncapped candidate walk — so recall is measured under that config.
+    pub shards: usize,
+    /// Per-tenant QPS cap spec `QPS[:BURST]` for the front door's token
+    /// buckets (e.g. `"0.5:4"`; burst defaults to 8). Requires
+    /// `queue_limit > 0`. The sweep then drives one hot tenant past its
+    /// burst and one cold tenant through, so the report's
+    /// `admission.tenant_sheds` shows the cap engaging without starving
+    /// other tenants.
+    pub tenants: Option<String>,
 }
 
 impl Default for ServeOpts {
@@ -170,8 +183,99 @@ impl Default for ServeOpts {
             overload: false,
             metrics_out: None,
             metrics_every_s: 1.0,
+            shards: 1,
+            tenants: None,
         }
     }
+}
+
+/// The serve sweep's engine: one process-local [`crate::serve::QueryEngine`]
+/// or a fence-partitioned [`crate::serve::ShardedEngine`] scatter-gathering
+/// across shard workers. Under `max_candidates = 0` both answer
+/// bit-identically, so the sweep below never cares which one is behind it.
+enum AnyEngine<'f> {
+    Single(crate::serve::QueryEngine<'f>),
+    Sharded(crate::serve::ShardedEngine<'f>),
+}
+
+impl<'f> AnyEngine<'f> {
+    fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        match self {
+            AnyEngine::Single(e) => e.query(queries, k),
+            AnyEngine::Sharded(e) => e.query(queries, k),
+        }
+    }
+
+    fn insert(
+        &self,
+        row: Option<&[f32]>,
+        set: Option<crate::data::types::WeightedSet>,
+    ) -> u32 {
+        match self {
+            AnyEngine::Single(e) => e.insert(row, set),
+            AnyEngine::Sharded(e) => e.insert(row, set),
+        }
+    }
+
+    fn compact_report(&self) -> Option<crate::serve::CompactionReport> {
+        match self {
+            AnyEngine::Single(e) => e.compact_report(),
+            AnyEngine::Sharded(e) => e.compact_report(),
+        }
+    }
+
+    fn snapshot(&self) -> std::sync::Arc<crate::serve::StarIndex<'f>> {
+        match self {
+            AnyEngine::Single(e) => e.snapshot(),
+            AnyEngine::Sharded(e) => e.snapshot(),
+        }
+    }
+}
+
+impl crate::serve::ServeBackend for AnyEngine<'_> {
+    fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        AnyEngine::query(self, queries, k)
+    }
+
+    fn query_tier(
+        &self,
+        queries: &Dataset,
+        k: usize,
+        quant_rescore: Option<usize>,
+    ) -> Vec<Vec<(u32, f32)>> {
+        match self {
+            AnyEngine::Single(e) => e.query_tier(queries, k, quant_rescore),
+            AnyEngine::Sharded(e) => e.query_tier(queries, k, quant_rescore),
+        }
+    }
+
+    fn quant_ready(&self) -> bool {
+        match self {
+            AnyEngine::Single(e) => e.quant_ready(),
+            AnyEngine::Sharded(e) => e.quant_ready(),
+        }
+    }
+}
+
+/// Parse a `--tenants` spec: `QPS[:BURST]`, e.g. `0.5` or `0.5:4`.
+fn parse_tenant_spec(spec: &str) -> crate::Result<(f64, usize)> {
+    let mut it = spec.splitn(2, ':');
+    let qps: f64 = it
+        .next()
+        .unwrap_or("")
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad --tenants spec {spec:?}: QPS must be a number"))?;
+    let burst: usize = match it.next() {
+        Some(b) => b.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad --tenants spec {spec:?}: BURST must be an integer")
+        })?,
+        None => 8,
+    };
+    if !qps.is_finite() || qps <= 0.0 {
+        anyhow::bail!("bad --tenants spec {spec:?}: QPS must be a positive number");
+    }
+    Ok((qps, burst.max(1)))
 }
 
 /// Build a job's graph, export a serving snapshot, and measure the query
@@ -208,6 +312,15 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         )
     });
     let (queries, k) = (opts.queries, opts.k);
+    // Tenant caps ride on the front door's token buckets — parse (and
+    // fail) before the expensive build.
+    let tenant_spec = match opts.tenants.as_deref() {
+        Some(s) => Some(parse_tenant_spec(s)?),
+        None => None,
+    };
+    if tenant_spec.is_some() && opts.queue_limit == 0 {
+        anyhow::bail!("--tenants requires a front door: set --queue-limit > 0");
+    }
     let dataset = job.dataset.realize(job.data_seed)?;
     let smeasure = serve_measure(job.measure)?;
     let measure = make_measure(job.measure)?;
@@ -235,15 +348,32 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         cfg = cfg.quantized(opts.rescore_factor);
     }
     let t = Instant::now();
-    let (out, index) = StarsBuilder::new(&dataset)
+    let builder = StarsBuilder::new(&dataset)
         .similarity(measure.as_ref())
         .hash(family.as_ref())
         .params(job.params.clone())
-        .workers(workers)
-        .build_indexed(cfg);
-    let build_s = t.elapsed().as_secs_f64();
-    let engine = QueryEngine::new(index, family.as_ref(), smeasure, job.params.clone())
         .workers(workers);
+    let (out, engine) = if opts.shards >= 2 {
+        // Fence-partitioned serving: build_sharded forces max_candidates
+        // to 0 (shard invariance needs the uncapped candidate walk) and
+        // the scatter-gather engine answers bit-identically to the
+        // single-shard path under that config.
+        let (out, sindex) = builder.build_sharded(opts.shards, cfg);
+        let eng = crate::serve::ShardedEngine::new(
+            sindex,
+            family.as_ref(),
+            smeasure,
+            job.params.clone(),
+        )
+        .workers(workers);
+        (out, AnyEngine::Sharded(eng))
+    } else {
+        let (out, index) = builder.build_indexed(cfg);
+        let eng = QueryEngine::new(index, family.as_ref(), smeasure, job.params.clone())
+            .workers(workers);
+        (out, AnyEngine::Single(eng))
+    };
+    let build_s = t.elapsed().as_secs_f64();
 
     let qids = crate::eval::recall::sample_queries(dataset.len(), queries, job.data_seed ^ 0x9E);
     let qset = dataset.subset(&qids);
@@ -301,6 +431,7 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
                 0
             }),
         ),
+        ("shards", Json::from(opts.shards.max(1))),
     ];
     // Write path: stream inserts in and compact with the configured mode,
     // reporting the compaction's cost alongside the read-path numbers.
@@ -330,13 +461,23 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     // ladder: admitted, degraded, queue-shed.
     if opts.queue_limit > 0 {
         use crate::serve::{AdmissionConfig, FrontDoor};
-        let door = FrontDoor::new(
-            &engine,
-            AdmissionConfig::default()
-                .queue_limit(opts.queue_limit)
-                .deadline_ms(opts.deadline_ms),
-        );
+        let mut acfg = AdmissionConfig::default()
+            .queue_limit(opts.queue_limit)
+            .deadline_ms(opts.deadline_ms);
+        if let Some((qps, burst)) = tenant_spec {
+            acfg = acfg.tenant_qps(qps).tenant_burst(burst);
+        }
+        let door = FrontDoor::new(&engine, acfg);
         let _ = door.query(&qset, k);
+        if let Some((_, burst)) = tenant_spec {
+            // Per-tenant caps: drive one hot tenant past its burst so the
+            // report shows the tenant-shed rung, then serve one batch for
+            // a cold tenant whose untouched bucket admits it.
+            for _ in 0..burst + 2 {
+                let _ = door.query_for(7, &qset, k);
+            }
+            let _ = door.query_for(13, &qset, k);
+        }
         if opts.overload {
             // Full backlog: the next batch is shed at the door.
             let full: Vec<_> = (0..opts.queue_limit).map(|_| door.acquire()).collect();
@@ -358,6 +499,14 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     // Final snapshot telemetry (router/CSR/state-table memory), tracked
     // like build costs (ROADMAP "Router memory telemetry").
     doc.push(("snapshot", engine.snapshot().stats().to_json()));
+    // Per-shard slices of that telemetry when serving fence-partitioned:
+    // points/edges/router entries are exact per shard, bytes prorated.
+    if let AnyEngine::Sharded(se) = &engine {
+        let shots: Vec<Json> = (0..se.n_shards())
+            .map(|s| se.shard_stats(s).to_json())
+            .collect();
+        doc.push(("shard_snapshots", Json::Arr(shots)));
+    }
     Ok(Json::obj(doc))
 }
 
@@ -567,6 +716,120 @@ mod tests {
         )
         .unwrap();
         assert!(plain.get("admission").is_none());
+    }
+
+    #[test]
+    fn run_serve_sharded_reports_shard_snapshots() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 500,
+                dim: 16,
+                modes: 8,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                .sketches(6)
+                .threshold(0.4),
+            data_seed: 11,
+            workers: 2,
+        };
+        let opts = ServeOpts {
+            queries: 20,
+            k: 5,
+            inserts: 12,
+            shards: 3,
+            ..ServeOpts::default()
+        };
+        let doc = run_serve_with(&job, &opts).unwrap();
+        assert_eq!(doc.get("shards").unwrap().as_usize().unwrap(), 3);
+        let recall = doc.get("recall_at_k").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&recall), "recall {recall}");
+        assert!(doc.get("batch_qps").unwrap().as_f64().unwrap() > 0.0);
+        // One compaction folded the inserts in; the per-shard snapshot
+        // slices tile the compacted snapshot exactly.
+        let comp = doc.get("compaction").expect("compaction report missing");
+        assert_eq!(comp.get("delta_points").unwrap().as_usize().unwrap(), 12);
+        let shots = doc.get("shard_snapshots").unwrap().as_arr().unwrap();
+        assert_eq!(shots.len(), 3);
+        let pts: usize = shots
+            .iter()
+            .map(|s| s.get("points").unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(pts, 512);
+        // The single-shard path reports no shard_snapshots at all.
+        let plain = run_serve_with(
+            &job,
+            &ServeOpts {
+                queries: 10,
+                k: 5,
+                ..ServeOpts::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(plain.get("shards").unwrap().as_usize().unwrap(), 1);
+        assert!(plain.get("shard_snapshots").is_none());
+    }
+
+    #[test]
+    fn run_serve_tenant_caps_report_tenant_sheds() {
+        let job = Job {
+            dataset: DatasetSpec::Random {
+                n: 400,
+                dim: 16,
+                modes: 8,
+            },
+            measure: MeasureSpec::Cosine,
+            family: FamilySpec::SimHash { bits: 8 },
+            params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                .sketches(6)
+                .threshold(0.4),
+            data_seed: 11,
+            workers: 2,
+        };
+        let opts = ServeOpts {
+            queries: 10,
+            k: 5,
+            queue_limit: 8,
+            tenants: Some("0.001:2".into()),
+            ..ServeOpts::default()
+        };
+        let doc = run_serve_with(&job, &opts).unwrap();
+        let adm = doc.get("admission").expect("admission stats missing");
+        // Hot tenant: burst 2 admitted, the 2 extra batches shed at the
+        // bucket (refill at 0.001 qps is negligible); cold tenant admitted.
+        assert!(adm.get("tenant_sheds").unwrap().as_usize().unwrap() >= 1);
+        assert!(adm.get("admitted").unwrap().as_usize().unwrap() >= 4);
+        assert_eq!(adm.get("queue_sheds").unwrap().as_usize().unwrap(), 0);
+        // Tenant caps without a front door are a config error, as is a
+        // malformed spec.
+        let no_door = ServeOpts {
+            queries: 5,
+            k: 5,
+            tenants: Some("1".into()),
+            ..ServeOpts::default()
+        };
+        assert!(run_serve_with(&job, &no_door).is_err());
+        let bad = ServeOpts {
+            queries: 5,
+            k: 5,
+            queue_limit: 4,
+            tenants: Some("-2:zap".into()),
+            ..ServeOpts::default()
+        };
+        assert!(run_serve_with(&job, &bad).is_err());
+    }
+
+    #[test]
+    fn tenant_spec_parses_qps_and_burst() {
+        assert_eq!(parse_tenant_spec("0.5").unwrap(), (0.5, 8));
+        assert_eq!(parse_tenant_spec("2:4").unwrap(), (2.0, 4));
+        assert_eq!(parse_tenant_spec(" 1.5 : 0 ").unwrap(), (1.5, 1));
+        assert!(parse_tenant_spec("").is_err());
+        assert!(parse_tenant_spec("0").is_err());
+        assert!(parse_tenant_spec("-1:2").is_err());
+        assert!(parse_tenant_spec("1:x").is_err());
+        assert!(parse_tenant_spec("nan:2").is_err());
     }
 
     #[test]

@@ -54,6 +54,7 @@ USAGE:
                  [--compact-mode incremental|full] [--full-rebuild-every N]
                  [--quantized] [--rescore-c F]
                  [--queue-limit N] [--deadline-ms MS] [--overload]
+                 [--shards N] [--tenants QPS[:BURST]]
                  [--metrics-out FILE] [--metrics-every S]
                  build a graph, export a serving snapshot, and answer N
                  sampled top-k queries (reports QPS, p50/p99, recall@k);
@@ -68,7 +69,13 @@ USAGE:
                  report), --deadline-ms sheds queries whose estimated queue
                  wait exceeds the budget, and --overload applies synthetic
                  backlog so one run reports the whole admit/degrade/shed
-                 ladder; --metrics-out atomically rewrites a Prometheus-text
+                 ladder; --shards N (≥ 2) serves through the fence-partitioned
+                 scatter-gather engine — answers are bit-identical to
+                 single-shard serving (max_candidates is forced to 0) and the
+                 report adds per-shard snapshot slices; --tenants applies a
+                 per-tenant QPS token bucket at the front door (requires
+                 --queue-limit; tenant_sheds appears in the admission stats);
+                 --metrics-out atomically rewrites a Prometheus-text
                  snapshot of the serve metrics every --metrics-every seconds
                  (default 1) while the sweep runs
   stars experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|all>
@@ -79,7 +86,8 @@ USAGE:
                  STARS_TRACE output)
   stars bench-check <files...>   validate BENCH_*.json files: each must
                  parse and carry schema_version, data_status, and
-                 simd_backend keys (CI gate)
+                 simd_backend keys; serve v7 files must also carry a
+                 well-formed \"sharding\" scaling object (CI gate)
 
 ENVIRONMENT:
   STARS_SIMD    force a SIMD backend (scalar|sse2|avx2|neon)
@@ -216,6 +224,8 @@ fn serve(args: &mut Args) -> stars::Result<()> {
         overload: args.flag("overload"),
         metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
         metrics_every_s: args.get_parsed_or("metrics-every", 1.0f64),
+        shards: args.get_parsed_or("shards", 1usize),
+        tenants: args.get("tenants").map(String::from),
     };
     let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());
@@ -314,6 +324,28 @@ fn bench_check(args: &mut Args) -> stars::Result<()> {
             sv.is_some_and(|s| !s.is_empty()),
             "{file}: schema_version must be a non-empty string"
         );
+        // Serve v7 adds the multi-shard scaling curve: a "sharding" object
+        // of four equal-length, non-empty arrays keyed by shard count.
+        if sv == Some("stars-bench-serve/v7") {
+            let sharding = doc
+                .get("sharding")
+                .ok_or_else(|| anyhow::anyhow!("{file}: serve v7 requires a \"sharding\" object"))?;
+            let mut lens = Vec::new();
+            for key in ["shard_counts", "batch_qps", "latency_p50_ms", "latency_p99_ms"] {
+                let arr = sharding
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("{file}: sharding.{key} must be an array")
+                    })?;
+                anyhow::ensure!(!arr.is_empty(), "{file}: sharding.{key} is empty");
+                lens.push(arr.len());
+            }
+            anyhow::ensure!(
+                lens.windows(2).all(|w| w[0] == w[1]),
+                "{file}: sharding arrays must have equal lengths (got {lens:?})"
+            );
+        }
         println!("{file}: schema {} OK", sv.unwrap_or("?"));
     }
     Ok(())

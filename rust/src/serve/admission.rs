@@ -1,21 +1,31 @@
-//! Admission-controlled front door for the [`QueryEngine`].
+//! Admission-controlled front door for the serve engines.
 //!
 //! At fleet scale the serve layer's failure mode is not a crash but an
 //! overload collapse: unbounded concurrent queries grow tail latency until
 //! every caller times out. The [`FrontDoor`] bounds that failure with a
-//! three-step ladder, cheapest lever first:
+//! ladder of levers, cheapest first:
 //!
-//! 1. **Admit** — in-flight depth below the degrade threshold: serve the
+//! 1. **Tenant cap** ([`FrontDoor::query_for`]) — a per-tenant token
+//!    bucket (`tenant_qps`/`tenant_burst`) refuses a hot tenant before it
+//!    can occupy a queue slot ([`ShedReason::TenantCap`]), so one abusive
+//!    caller cannot starve the rest of the fleet's budget.
+//! 2. **Admit** — in-flight depth below the degrade threshold: serve the
 //!    configured tier untouched.
-//! 2. **Degrade** — depth at or past `degrade_at × queue_limit`: force the
+//! 3. **Degrade** — depth at or past `degrade_at × queue_limit`: force the
 //!    quantized first-pass tier with a reduced rescore width
-//!    ([`QueryEngine::query_tier`]), trading a bounded recall dip for exact
-//!    f32 work per query, *before* refusing anyone.
-//! 3. **Shed** — the queue is full ([`ShedReason::QueueFull`]), or the
+//!    ([`ServeBackend::query_tier`]), trading a bounded recall dip for
+//!    exact f32 work per query, *before* refusing anyone.
+//! 4. **Shed** — the queue is full ([`ShedReason::QueueFull`]), or the
 //!    EWMA service estimate says the query cannot meet its deadline behind
 //!    the current backlog ([`ShedReason::Deadline`]): refuse immediately —
 //!    an early, explicit rejection the caller can retry against another
 //!    replica, instead of a late timeout.
+//!
+//! The door is generic over [`ServeBackend`], so the same ladder fronts a
+//! single-process [`QueryEngine`] or a scatter-gather
+//! [`super::sharded::ShardedEngine`] — in the sharded case one
+//! [`AdmissionPermit`] is held per outstanding scatter (a batch *is* one
+//! scatter), so in-flight depth counts scatters exactly.
 //!
 //! Admission is synchronous and conservative (no reordering, no waiting
 //! room): depth is bounded by `queue_limit` at every instant, and admitted
@@ -25,11 +35,73 @@
 //! synthetic pressure.
 
 use super::executor::QueryEngine;
+use super::sharded::ShardedEngine;
 use crate::data::types::Dataset;
 use crate::obs::{Counter, HistHandle, Histogram};
+use crate::util::fxhash::FxHashMap;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// The engine interface the [`FrontDoor`] fronts: answer a batch at the
+/// configured or an overridden scoring tier. Implemented by
+/// [`QueryEngine`] and [`ShardedEngine`] (whose answers are bit-identical
+/// to each other, so the door's ladder composes with either).
+pub trait ServeBackend {
+    /// Answer a batch at the engine's configured tier.
+    fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>>;
+
+    /// Answer a batch with an explicit tier override (`Some(rf)` forces
+    /// the quantized first pass with rescore width `c = k · rf`).
+    fn query_tier(
+        &self,
+        queries: &Dataset,
+        k: usize,
+        quant_rescore: Option<usize>,
+    ) -> Vec<Vec<(u32, f32)>>;
+
+    /// True when the degraded quantized tier can actually serve.
+    fn quant_ready(&self) -> bool;
+}
+
+impl ServeBackend for QueryEngine<'_> {
+    fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        QueryEngine::query(self, queries, k)
+    }
+
+    fn query_tier(
+        &self,
+        queries: &Dataset,
+        k: usize,
+        quant_rescore: Option<usize>,
+    ) -> Vec<Vec<(u32, f32)>> {
+        QueryEngine::query_tier(self, queries, k, quant_rescore)
+    }
+
+    fn quant_ready(&self) -> bool {
+        QueryEngine::quant_ready(self)
+    }
+}
+
+impl ServeBackend for ShardedEngine<'_> {
+    fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        ShardedEngine::query(self, queries, k)
+    }
+
+    fn query_tier(
+        &self,
+        queries: &Dataset,
+        k: usize,
+        quant_rescore: Option<usize>,
+    ) -> Vec<Vec<(u32, f32)>> {
+        ShardedEngine::query_tier(self, queries, k, quant_rescore)
+    }
+
+    fn quant_ready(&self) -> bool {
+        ShardedEngine::quant_ready(self)
+    }
+}
 
 /// Admission policy knobs.
 #[derive(Clone, Debug)]
@@ -47,6 +119,13 @@ pub struct AdmissionConfig {
     /// Rescore width (`c = k · degraded_rescore`) served under pressure —
     /// deliberately below the typical configured factor.
     pub degraded_rescore: usize,
+    /// Sustained per-tenant query rate (batches/second) enforced by
+    /// [`FrontDoor::query_for`]'s token buckets. 0 disables tenant caps
+    /// (`query_for` then behaves exactly like [`FrontDoor::query`]).
+    pub tenant_qps: f64,
+    /// Token-bucket burst: how many batches a tenant may issue back to
+    /// back before the sustained rate applies (buckets start full).
+    pub tenant_burst: usize,
 }
 
 impl Default for AdmissionConfig {
@@ -56,6 +135,8 @@ impl Default for AdmissionConfig {
             deadline_ms: 0.0,
             degrade_at: 0.75,
             degraded_rescore: 2,
+            tenant_qps: 0.0,
+            tenant_burst: 8,
         }
     }
 }
@@ -84,6 +165,18 @@ impl AdmissionConfig {
         self.degraded_rescore = rf.max(1);
         self
     }
+
+    /// Set the sustained per-tenant rate (batches/s); 0 disables caps.
+    pub fn tenant_qps(mut self, qps: f64) -> Self {
+        self.tenant_qps = qps.max(0.0);
+        self
+    }
+
+    /// Set the per-tenant burst allowance (clamped to ≥ 1).
+    pub fn tenant_burst(mut self, burst: usize) -> Self {
+        self.tenant_burst = burst.max(1);
+        self
+    }
 }
 
 /// Why a query was refused.
@@ -93,6 +186,8 @@ pub enum ShedReason {
     QueueFull,
     /// Estimated wait behind the backlog exceeded the deadline budget.
     Deadline,
+    /// The tenant's token bucket was empty ([`FrontDoor::query_for`]).
+    TenantCap,
 }
 
 /// Outcome of one front-door query.
@@ -132,6 +227,8 @@ pub struct AdmissionStats {
     pub queue_sheds: u64,
     /// Queries refused by the deadline estimate.
     pub deadline_sheds: u64,
+    /// Queries refused by a per-tenant token bucket.
+    pub tenant_sheds: u64,
     /// Highest concurrent in-flight depth ever admitted (≤ `queue_limit`).
     pub depth_high_water: usize,
     /// Median per-query service time over the latency reservoir, ms.
@@ -143,9 +240,9 @@ pub struct AdmissionStats {
 }
 
 impl AdmissionStats {
-    /// Total refusals, both reasons.
+    /// Total refusals, all reasons.
     pub fn shed(&self) -> u64 {
-        self.queue_sheds + self.deadline_sheds
+        self.queue_sheds + self.deadline_sheds + self.tenant_sheds
     }
 
     /// JSON object for serving reports and benches.
@@ -155,6 +252,7 @@ impl AdmissionStats {
             ("degraded", Json::from(self.degraded)),
             ("queue_sheds", Json::from(self.queue_sheds)),
             ("deadline_sheds", Json::from(self.deadline_sheds)),
+            ("tenant_sheds", Json::from(self.tenant_sheds)),
             ("depth_high_water", Json::from(self.depth_high_water)),
             ("latency_p50_ms", Json::from(self.p50_ms)),
             ("latency_p99_ms", Json::from(self.p99_ms)),
@@ -165,7 +263,9 @@ impl AdmissionStats {
 
 /// RAII admission slot: holding one occupies in-flight depth; dropping it
 /// releases the slot. [`FrontDoor::query`] uses one internally; tests and
-/// external load drivers hold them to apply deterministic pressure.
+/// external load drivers hold them to apply deterministic pressure. The
+/// release runs in `Drop`, so a panicking engine still frees its slot
+/// during unwind — the no-leak property `tests/fault_injection.rs` pins.
 pub struct AdmissionPermit<'d> {
     in_flight: &'d AtomicUsize,
 }
@@ -176,9 +276,16 @@ impl Drop for AdmissionPermit<'_> {
     }
 }
 
-/// The admission-controlled front door over a [`QueryEngine`].
-pub struct FrontDoor<'e, 'f> {
-    engine: &'e QueryEngine<'f>,
+/// A tenant's token bucket: a fractional token balance refilled at
+/// `tenant_qps` tokens/second up to `tenant_burst`, spent one per batch.
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// The admission-controlled front door over any [`ServeBackend`].
+pub struct FrontDoor<'e, E: ServeBackend + ?Sized> {
+    engine: &'e E,
     cfg: AdmissionConfig,
     in_flight: AtomicUsize,
     depth_high_water: AtomicUsize,
@@ -186,6 +293,10 @@ pub struct FrontDoor<'e, 'f> {
     degraded: AtomicU64,
     queue_sheds: AtomicU64,
     deadline_sheds: AtomicU64,
+    tenant_sheds_n: AtomicU64,
+    /// Per-tenant buckets, created on first sight (off the hot path —
+    /// only `query_for` with `tenant_qps > 0` takes the lock).
+    tenants: Mutex<FxHashMap<u64, TokenBucket>>,
     /// EWMA of per-query service time in integer microseconds (0 = no
     /// sample yet). Fixed-point so it fits one lock-free atomic — kept for
     /// the deadline-shedding estimate (a last-values estimate, which the
@@ -198,14 +309,17 @@ pub struct FrontDoor<'e, 'f> {
     /// Registry mirror: in-flight depth observed at each admit
     /// (`stars_serve_queue_depth`).
     queue_depth_hist: HistHandle,
-    /// Registry mirror: total refusals, both reasons
+    /// Registry mirror: total refusals, all reasons
     /// (`stars_serve_sheds_total`).
     sheds_total: Counter,
+    /// Registry mirror: tenant-cap refusals alone
+    /// (`stars_serve_tenant_sheds_total`).
+    tenant_sheds_total: Counter,
 }
 
-impl<'e, 'f> FrontDoor<'e, 'f> {
+impl<'e, E: ServeBackend + ?Sized> FrontDoor<'e, E> {
     /// Front door over an engine with the given policy.
-    pub fn new(engine: &'e QueryEngine<'f>, cfg: AdmissionConfig) -> FrontDoor<'e, 'f> {
+    pub fn new(engine: &'e E, cfg: AdmissionConfig) -> FrontDoor<'e, E> {
         FrontDoor {
             engine,
             cfg,
@@ -215,10 +329,14 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
             degraded: AtomicU64::new(0),
             queue_sheds: AtomicU64::new(0),
             deadline_sheds: AtomicU64::new(0),
+            tenant_sheds_n: AtomicU64::new(0),
+            tenants: Mutex::new(FxHashMap::default()),
             ewma_us: AtomicU64::new(0),
             lat_us: Histogram::new(),
             queue_depth_hist: crate::obs::registry().histogram("stars_serve_queue_depth"),
             sheds_total: crate::obs::registry().counter("stars_serve_sheds_total"),
+            tenant_sheds_total: crate::obs::registry()
+                .counter("stars_serve_tenant_sheds_total"),
         }
     }
 
@@ -234,8 +352,8 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
 
     /// Try to occupy one admission slot. `None` means the queue is full
     /// (counted as a queue shed). External load drivers hold permits to
-    /// create deterministic backlog; the multi-shard front end will hold
-    /// one per outstanding scatter.
+    /// create deterministic backlog; the multi-shard front end holds one
+    /// per outstanding scatter.
     pub fn acquire(&self) -> Option<AdmissionPermit<'_>> {
         let depth = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
         if self.cfg.queue_limit > 0 && depth > self.cfg.queue_limit {
@@ -251,10 +369,55 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
         })
     }
 
-    /// Admit-or-shed one query batch through the ladder. Admitted batches
-    /// are answered by the underlying engine — bit-identical to calling it
+    /// Admit-or-shed one query batch through the ladder (no tenant
+    /// attribution — the bucket step is skipped). Admitted batches are
+    /// answered by the underlying engine — bit-identical to calling it
     /// directly at the same tier.
     pub fn query(&self, queries: &Dataset, k: usize) -> Admission {
+        self.admit_and_serve(queries, k)
+    }
+
+    /// [`FrontDoor::query`] on behalf of a tenant: the tenant's token
+    /// bucket is the first (cheapest) rung — an empty bucket refuses the
+    /// batch before it can occupy a queue slot, so a hot tenant sheds
+    /// while cold tenants' admission, tier and results are untouched.
+    /// With `tenant_qps = 0` the bucket step is a no-op.
+    pub fn query_for(&self, tenant: u64, queries: &Dataset, k: usize) -> Admission {
+        if !self.tenant_admit(tenant) {
+            self.tenant_sheds_n.fetch_add(1, Ordering::Relaxed);
+            self.sheds_total.inc(1);
+            self.tenant_sheds_total.inc(1);
+            return Admission::Shed(ShedReason::TenantCap);
+        }
+        self.admit_and_serve(queries, k)
+    }
+
+    /// Take one token from `tenant`'s bucket (true = admit). Buckets start
+    /// full at `tenant_burst` and refill continuously at `tenant_qps`.
+    fn tenant_admit(&self, tenant: u64) -> bool {
+        if self.cfg.tenant_qps <= 0.0 {
+            return true;
+        }
+        let burst = self.cfg.tenant_burst.max(1) as f64;
+        let now = Instant::now();
+        let mut tenants = self.tenants.lock().unwrap();
+        let b = tenants.entry(tenant).or_insert(TokenBucket {
+            tokens: burst,
+            last: now,
+        });
+        let elapsed = now.duration_since(b.last).as_secs_f64();
+        b.last = now;
+        b.tokens = (b.tokens + elapsed * self.cfg.tenant_qps).min(burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The shared admit → deadline → degrade → serve ladder.
+    fn admit_and_serve(&self, queries: &Dataset, k: usize) -> Admission {
         let permit = match self.acquire() {
             Some(p) => p,
             None => return Admission::Shed(ShedReason::QueueFull),
@@ -325,6 +488,7 @@ impl<'e, 'f> FrontDoor<'e, 'f> {
             degraded: self.degraded.load(Ordering::Relaxed),
             queue_sheds: self.queue_sheds.load(Ordering::Relaxed),
             deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
+            tenant_sheds: self.tenant_sheds_n.load(Ordering::Relaxed),
             depth_high_water: self.depth_high_water.load(Ordering::SeqCst),
             p50_ms: lat.quantile(0.5) as f64 / 1e3,
             p99_ms: lat.quantile(0.99) as f64 / 1e3,
@@ -340,7 +504,8 @@ mod tests {
     #[test]
     fn stats_json_keys_stay_stable() {
         // Downstream consumers (driver reports, servebench JSON) key on
-        // these names; the histogram migration must not rename them.
+        // these names; the histogram migration must not rename them, and
+        // the tenant-cap addition may only add keys.
         let s = AdmissionStats {
             p50_ms: 1.0,
             p99_ms: 2.0,
@@ -353,6 +518,7 @@ mod tests {
             "degraded",
             "queue_sheds",
             "deadline_sheds",
+            "tenant_sheds",
             "depth_high_water",
             "latency_p50_ms",
             "latency_p99_ms",
@@ -384,11 +550,18 @@ mod tests {
             .queue_limit(8)
             .deadline_ms(2.5)
             .degrade_at(0.5)
-            .degraded_rescore(0);
+            .degraded_rescore(0)
+            .tenant_qps(-3.0)
+            .tenant_burst(0);
         assert_eq!(cfg.queue_limit, 8);
         assert_eq!(cfg.deadline_ms, 2.5);
         assert_eq!(cfg.degrade_at, 0.5);
         assert_eq!(cfg.degraded_rescore, 1, "rescore width clamps to ≥ 1");
+        assert_eq!(cfg.tenant_qps, 0.0, "negative rates clamp to disabled");
+        assert_eq!(cfg.tenant_burst, 1, "burst clamps to ≥ 1");
+        let d = AdmissionConfig::default();
+        assert_eq!(d.tenant_qps, 0.0, "tenant caps default off");
+        assert_eq!(d.tenant_burst, 8);
     }
 
     #[test]
@@ -400,5 +573,13 @@ mod tests {
         assert!(shed.is_shed());
         assert!(shed.clone().results().is_none());
         assert_ne!(ShedReason::QueueFull, ShedReason::Deadline);
+        assert_ne!(ShedReason::TenantCap, ShedReason::QueueFull);
+        let t = AdmissionStats {
+            queue_sheds: 1,
+            deadline_sheds: 2,
+            tenant_sheds: 4,
+            ..Default::default()
+        };
+        assert_eq!(t.shed(), 7, "shed() totals all three reasons");
     }
 }

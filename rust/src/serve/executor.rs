@@ -97,7 +97,7 @@ impl ServeMeasure {
 
     /// Score query `qi` of `queries` against `cands` in `ds` through the
     /// tiled batch kernels (`out[j]` = similarity to `cands[j]`).
-    fn score(
+    pub(crate) fn score(
         self,
         queries: &Dataset,
         qi: usize,
@@ -129,22 +129,24 @@ impl ServeMeasure {
 }
 
 /// Per-thread query scratch: visited stamps, candidate/score buffers and
-/// the tiled-kernel scratch. One per pool thread, reset per query.
+/// the tiled-kernel scratch. One per pool thread, reset per query. Shared
+/// with the sharded scatter path (`super::sharded`), which runs the same
+/// pipeline per shard.
 #[derive(Default)]
-struct QueryScratch {
-    visit: VisitScratch,
-    entry_visit: VisitScratch,
-    cands: Vec<u32>,
-    scores: Vec<f32>,
-    batch: BatchScratch,
+pub(crate) struct QueryScratch {
+    pub(crate) visit: VisitScratch,
+    pub(crate) entry_visit: VisitScratch,
+    pub(crate) cands: Vec<u32>,
+    pub(crate) scores: Vec<f32>,
+    pub(crate) batch: BatchScratch,
     /// SQ8 codes of the current query row (quantized first pass).
-    qcodes: Vec<i8>,
+    pub(crate) qcodes: Vec<i8>,
     /// Delta-local ids of rescore survivors (quantized second pass).
-    delta_cands: Vec<u32>,
+    pub(crate) delta_cands: Vec<u32>,
 }
 
 thread_local! {
-    static QSCRATCH: RefCell<QueryScratch> = RefCell::new(QueryScratch::default());
+    pub(crate) static QSCRATCH: RefCell<QueryScratch> = RefCell::new(QueryScratch::default());
 }
 
 /// Bounded top-k of neighbors under the serving order: higher score wins,
@@ -153,14 +155,14 @@ thread_local! {
 /// first-pushed of boundary ties, which would make the retained set depend
 /// on candidate order and diverge from the brute-force reference on
 /// tie-heavy measures (small-rational Jaccard scores).
-struct TopNeighbors {
+pub(crate) struct TopNeighbors {
     k: usize,
     /// Min-heap: the *worst* retained entry (score asc, id desc) at root.
     heap: Vec<(f32, u32)>,
 }
 
 impl TopNeighbors {
-    fn new(k: usize) -> TopNeighbors {
+    pub(crate) fn new(k: usize) -> TopNeighbors {
         TopNeighbors {
             k,
             heap: Vec::with_capacity(k.min(1024)),
@@ -179,7 +181,7 @@ impl TopNeighbors {
     }
 
     #[inline]
-    fn push(&mut self, score: f32, id: u32) {
+    pub(crate) fn push(&mut self, score: f32, id: u32) {
         if self.k == 0 {
             return;
         }
@@ -225,7 +227,7 @@ impl TopNeighbors {
 
     /// Extract `(id, score)` best-first: score descending, ties ascending
     /// by id.
-    fn into_sorted(mut self) -> Vec<(u32, f32)> {
+    pub(crate) fn into_sorted(mut self) -> Vec<(u32, f32)> {
         self.heap
             .sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         self.heap.into_iter().map(|(w, c)| (c, w)).collect()
@@ -808,30 +810,7 @@ impl<'f> QueryEngine<'f> {
         snap: &StarIndex<'f>,
         delta: &Dataset,
     ) -> (StarIndex<'f>, CompactionReport) {
-        let merged = snap.dataset().concat(delta);
-        let cfg = snap.config().clone();
-        let sim = self.measure.to_similarity();
-        let (out, keys) = StarsBuilder::new(&merged)
-            .similarity(sim.as_ref())
-            .hash(self.family)
-            .params(self.build.clone())
-            .workers(self.workers)
-            .build_with_keys(cfg.route_reps.max(1));
-        let next =
-            StarIndex::build_from_keys(merged, self.family, &out.graph, cfg, self.workers, keys);
-        let report = CompactionReport {
-            mode: CompactionMode::Full,
-            delta_points: delta.len(),
-            affected_buckets: 0,
-            candidates_scored: out.report.comparisons,
-            edges_emitted: out.report.edges_emitted as usize,
-            seconds: 0.0,
-            full_compactions: 0,
-            incremental_compactions: 0,
-            fault_retries: out.report.faults.task_retries + out.report.faults.corruption_retries,
-            snapshot: SnapshotStats::default(),
-        };
-        (next, report)
+        rebuild_full_from(snap, delta, self.family, self.measure, &self.build, self.workers)
     }
 
     /// O(delta) compaction: sketch → route → score only the delta, fold
@@ -841,135 +820,179 @@ impl<'f> QueryEngine<'f> {
         snap: &StarIndex<'f>,
         delta: &Dataset,
     ) -> (StarIndex<'f>, CompactionReport) {
-        let n_old = snap.len();
-        let nd = delta.len();
-        let merged = snap.dataset().concat(delta);
-        let cfg = snap.config().clone();
-
-        // 1. Sketch only the delta range of the merged dataset through the
-        //    snapshot's cached per-repetition states (bit-identical keys by
-        //    the state-purity contract — no re-prepare, no corpus pass).
-        let delta_keys: Vec<Vec<u64>> = snap
-            .states()
-            .iter()
-            .map(|s| sketch::state_keys_range_par(s.as_ref(), &merged, n_old, nd, self.workers))
-            .collect();
-
-        // 2. Find the affected buckets: group delta points by bucket key
-        //    per repetition (sorted key order — the task list, and hence
-        //    every downstream edge vector, is identical for any worker
-        //    count) and look up each bucket's entry points.
-        struct BucketTask<'s> {
-            /// Snapshot entry points of the bucket (empty for a new key).
-            entries: &'s [u32],
-            /// Delta members that routed into the bucket, ids ascending.
-            members: Vec<u32>,
-        }
-        let mut tasks: Vec<BucketTask<'_>> = Vec::new();
-        let mut affected = 0usize;
-        for (rep, keys) in delta_keys.iter().enumerate() {
-            let mut groups: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
-            for (i, &k) in keys.iter().enumerate() {
-                groups.entry(k).or_default().push((n_old + i) as u32);
-            }
-            let mut ordered: Vec<(u64, Vec<u32>)> = groups.into_iter().collect();
-            ordered.sort_unstable_by_key(|(k, _)| *k);
-            for (key, members) in ordered {
-                let entries = snap.router().route(rep, key);
-                affected += 1;
-                if entries.len() + members.len() >= 2 {
-                    tasks.push(BucketTask { entries, members });
-                }
-            }
-        }
-
-        // 3. Score each delta member against its bucket's routed snapshot
-        //    entries plus the bucket's later delta members, through the
-        //    tiled kernels; keep pairs at or above the build threshold.
-        //    The delta point sits on the leader side, which is weight-exact
-        //    versus the rebuild's member-side orientation for every
-        //    orientation-symmetric measure (see compact_with docs).
-        let threshold = self.build.threshold;
-        let measure = self.measure;
-        let merged_ref = &merged;
-        let task_refs = &tasks;
-        let scored = AtomicU64::new(0);
-        let batches: Vec<Vec<Edge>> = pool::parallel_map(tasks.len(), self.workers, |ti| {
-            QSCRATCH.with(|cell| {
-                let s = &mut *cell.borrow_mut();
-                let t = &task_refs[ti];
-                let mut edges = Vec::new();
-                let mut cands: Vec<u32> =
-                    Vec::with_capacity(t.entries.len() + t.members.len());
-                for (j, &x) in t.members.iter().enumerate() {
-                    cands.clear();
-                    cands.extend_from_slice(t.entries);
-                    cands.extend_from_slice(&t.members[j + 1..]);
-                    if cands.is_empty() {
-                        continue;
-                    }
-                    measure.score(
-                        merged_ref,
-                        x as usize,
-                        merged_ref,
-                        &cands,
-                        &mut s.batch,
-                        &mut s.scores,
-                    );
-                    scored.fetch_add(cands.len() as u64, Ordering::Relaxed);
-                    for (&c, &w) in cands.iter().zip(s.scores.iter()) {
-                        if w >= threshold {
-                            edges.push(Edge::new(x, c, w));
-                        }
-                    }
-                }
-                edges
-            })
-        });
-        let emitted: usize = batches.iter().map(Vec::len).sum();
-
-        // 4. Fold the delta edges into the snapshot graph through a
-        //    re-opened accumulator and finalize the next epoch's graph.
-        let mut acc = Accumulator::reopen_from_csr(
-            snap.csr(),
-            merged.len(),
-            self.build.degree_cap,
-            self.workers,
-        );
-        acc.add_wave(batches);
-        let graph = acc.finalize();
-
-        // 5. Extend the routing tables with the delta keys and assemble
-        //    the next snapshot; sketch states carry over untouched. A
-        //    quantized snapshot extends its SQ8 table over just the delta
-        //    range — per-row codes are position-independent, so the result
-        //    is identical to quantizing the merged dataset from scratch.
-        let router = snap
-            .router()
-            .extended(&delta_keys, n_old as u32, cfg.route_leaders);
-        let quant = snap.quant().map(|q| Arc::new(q.extended(&merged, n_old)));
-        let next = StarIndex::from_parts(
-            merged,
-            Csr::new(&graph),
-            snap.states().to_vec(),
-            router,
-            quant,
-            cfg,
-        );
-        let report = CompactionReport {
-            mode: CompactionMode::Incremental,
-            delta_points: nd,
-            affected_buckets: affected,
-            candidates_scored: scored.into_inner(),
-            edges_emitted: emitted,
-            seconds: 0.0,
-            full_compactions: 0,
-            incremental_compactions: 0,
-            fault_retries: 0,
-            snapshot: SnapshotStats::default(),
-        };
-        (next, report)
+        rebuild_incremental_from(snap, delta, self.measure, &self.build, self.workers)
     }
+}
+
+/// The full-rebuild compaction as a free function, shared between
+/// [`QueryEngine`] and [`super::sharded::ShardedEngine`]: both fold their
+/// delta (for the sharded engine, the per-shard deltas reassembled in
+/// global-id order) through the *same* code path, which is what makes
+/// compacted epochs — and hence every post-compaction answer —
+/// bit-identical across shard counts.
+pub(crate) fn rebuild_full_from<'f>(
+    snap: &StarIndex<'f>,
+    delta: &Dataset,
+    family: &'f dyn LshFamily,
+    measure: ServeMeasure,
+    build: &BuildParams,
+    workers: usize,
+) -> (StarIndex<'f>, CompactionReport) {
+    let merged = snap.dataset().concat(delta);
+    let cfg = snap.config().clone();
+    let sim = measure.to_similarity();
+    let (out, keys) = StarsBuilder::new(&merged)
+        .similarity(sim.as_ref())
+        .hash(family)
+        .params(build.clone())
+        .workers(workers)
+        .build_with_keys(cfg.route_reps.max(1));
+    let next = StarIndex::build_from_keys(merged, family, &out.graph, cfg, workers, keys);
+    let report = CompactionReport {
+        mode: CompactionMode::Full,
+        delta_points: delta.len(),
+        affected_buckets: 0,
+        candidates_scored: out.report.comparisons,
+        edges_emitted: out.report.edges_emitted as usize,
+        seconds: 0.0,
+        full_compactions: 0,
+        incremental_compactions: 0,
+        fault_retries: out.report.faults.task_retries + out.report.faults.corruption_retries,
+        snapshot: SnapshotStats::default(),
+    };
+    (next, report)
+}
+
+/// The incremental compaction as a free function (see
+/// [`rebuild_full_from`] for why it is shared).
+pub(crate) fn rebuild_incremental_from<'f>(
+    snap: &StarIndex<'f>,
+    delta: &Dataset,
+    measure: ServeMeasure,
+    build: &BuildParams,
+    workers: usize,
+) -> (StarIndex<'f>, CompactionReport) {
+    let n_old = snap.len();
+    let nd = delta.len();
+    let merged = snap.dataset().concat(delta);
+    let cfg = snap.config().clone();
+
+    // 1. Sketch only the delta range of the merged dataset through the
+    //    snapshot's cached per-repetition states (bit-identical keys by
+    //    the state-purity contract — no re-prepare, no corpus pass).
+    let delta_keys: Vec<Vec<u64>> = snap
+        .states()
+        .iter()
+        .map(|s| sketch::state_keys_range_par(s.as_ref(), &merged, n_old, nd, workers))
+        .collect();
+
+    // 2. Find the affected buckets: group delta points by bucket key
+    //    per repetition (sorted key order — the task list, and hence
+    //    every downstream edge vector, is identical for any worker
+    //    count) and look up each bucket's entry points.
+    struct BucketTask<'s> {
+        /// Snapshot entry points of the bucket (empty for a new key).
+        entries: &'s [u32],
+        /// Delta members that routed into the bucket, ids ascending.
+        members: Vec<u32>,
+    }
+    let mut tasks: Vec<BucketTask<'_>> = Vec::new();
+    let mut affected = 0usize;
+    for (rep, keys) in delta_keys.iter().enumerate() {
+        let mut groups: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+        for (i, &k) in keys.iter().enumerate() {
+            groups.entry(k).or_default().push((n_old + i) as u32);
+        }
+        let mut ordered: Vec<(u64, Vec<u32>)> = groups.into_iter().collect();
+        ordered.sort_unstable_by_key(|(k, _)| *k);
+        for (key, members) in ordered {
+            let entries = snap.router().route(rep, key);
+            affected += 1;
+            if entries.len() + members.len() >= 2 {
+                tasks.push(BucketTask { entries, members });
+            }
+        }
+    }
+
+    // 3. Score each delta member against its bucket's routed snapshot
+    //    entries plus the bucket's later delta members, through the
+    //    tiled kernels; keep pairs at or above the build threshold.
+    //    The delta point sits on the leader side, which is weight-exact
+    //    versus the rebuild's member-side orientation for every
+    //    orientation-symmetric measure (see compact_with docs).
+    let threshold = build.threshold;
+    let merged_ref = &merged;
+    let task_refs = &tasks;
+    let scored = AtomicU64::new(0);
+    let batches: Vec<Vec<Edge>> = pool::parallel_map(tasks.len(), workers, |ti| {
+        QSCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            let t = &task_refs[ti];
+            let mut edges = Vec::new();
+            let mut cands: Vec<u32> = Vec::with_capacity(t.entries.len() + t.members.len());
+            for (j, &x) in t.members.iter().enumerate() {
+                cands.clear();
+                cands.extend_from_slice(t.entries);
+                cands.extend_from_slice(&t.members[j + 1..]);
+                if cands.is_empty() {
+                    continue;
+                }
+                measure.score(
+                    merged_ref,
+                    x as usize,
+                    merged_ref,
+                    &cands,
+                    &mut s.batch,
+                    &mut s.scores,
+                );
+                scored.fetch_add(cands.len() as u64, Ordering::Relaxed);
+                for (&c, &w) in cands.iter().zip(s.scores.iter()) {
+                    if w >= threshold {
+                        edges.push(Edge::new(x, c, w));
+                    }
+                }
+            }
+            edges
+        })
+    });
+    let emitted: usize = batches.iter().map(Vec::len).sum();
+
+    // 4. Fold the delta edges into the snapshot graph through a
+    //    re-opened accumulator and finalize the next epoch's graph.
+    let mut acc = Accumulator::reopen_from_csr(snap.csr(), merged.len(), build.degree_cap, workers);
+    acc.add_wave(batches);
+    let graph = acc.finalize();
+
+    // 5. Extend the routing tables with the delta keys and assemble
+    //    the next snapshot; sketch states carry over untouched. A
+    //    quantized snapshot extends its SQ8 table over just the delta
+    //    range — per-row codes are position-independent, so the result
+    //    is identical to quantizing the merged dataset from scratch.
+    let router = snap
+        .router()
+        .extended(&delta_keys, n_old as u32, cfg.route_leaders);
+    let quant = snap.quant().map(|q| Arc::new(q.extended(&merged, n_old)));
+    let next = StarIndex::from_parts(
+        merged,
+        Csr::new(&graph),
+        snap.states().to_vec(),
+        router,
+        quant,
+        cfg,
+    );
+    let report = CompactionReport {
+        mode: CompactionMode::Incremental,
+        delta_points: nd,
+        affected_buckets: affected,
+        candidates_scored: scored.into_inner(),
+        edges_emitted: emitted,
+        seconds: 0.0,
+        full_compactions: 0,
+        incremental_compactions: 0,
+        fault_retries: 0,
+        snapshot: SnapshotStats::default(),
+    };
+    (next, report)
 }
 
 #[cfg(test)]

@@ -65,18 +65,32 @@
 //! independent and results are assembled in query order; ties break by
 //! score-descending then id-ascending). Asserted by
 //! `tests/serve_integration.rs`.
+//!
+//! **Shard invariance** extends that contract across machines: a
+//! [`ShardedIndex`] fence-partitions one snapshot's routing-entry
+//! ownership and [`ShardedEngine`] scatter-gathers queries across the
+//! shards — with the merged top-k **bit-identical to the single-shard
+//! engine for any shard count and any worker count** (requires
+//! `max_candidates = 0`; see [`sharded`] for the fence layout, the
+//! exactness argument, and the per-shard delta/compaction story, and
+//! `tests/shard_parity.rs` for the battery that pins it).
 
 pub mod admission;
 pub mod delta;
 pub mod executor;
 pub mod index;
 pub mod router;
+pub mod sharded;
 
-pub use admission::{Admission, AdmissionConfig, AdmissionPermit, AdmissionStats, FrontDoor, ShedReason};
+pub use admission::{
+    Admission, AdmissionConfig, AdmissionPermit, AdmissionStats, FrontDoor, ServeBackend,
+    ShedReason,
+};
 pub use delta::DeltaBuffer;
 pub use executor::{brute_force_topk, CompactionReport, QueryEngine, ServeMeasure};
 pub use index::StarIndex;
 pub use router::Router;
+pub use sharded::{fence_for, ShardedEngine, ShardedIndex};
 
 /// How `QueryEngine::compact` folds the delta buffer into the next
 /// snapshot epoch.

@@ -96,6 +96,27 @@ impl Router {
             .sum()
     }
 
+    /// Live retained entries whose point id falls in `[lo, hi)`, across
+    /// all repetitions — the per-shard slice of [`Router::num_entries`]
+    /// for a fence-partitioned snapshot (sharded serving telemetry).
+    /// Counted through the key tables, so orphaned slots are excluded.
+    pub fn entries_in_range(&self, lo: u32, hi: u32) -> usize {
+        self.reps
+            .iter()
+            .map(|r| {
+                r.table
+                    .values()
+                    .map(|&(start, len)| {
+                        r.entries[start as usize..(start + len) as usize]
+                            .iter()
+                            .filter(|&&e| e >= lo && e < hi)
+                            .count()
+                    })
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
     /// Estimated heap bytes of the routing tables: flat entry arrays plus
     /// the key tables (key + range + map-slot overhead per bucket).
     pub fn heap_bytes(&self) -> usize {

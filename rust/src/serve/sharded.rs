@@ -1,0 +1,894 @@
+//! Shard-parallel serving: a fence-partitioned snapshot behind a
+//! scatter-gather engine.
+//!
+//! The paper's serving story (§4) fans queries out across machines; this
+//! module is the in-process mirror of that fleet, the same way
+//! `ampc::Cluster` simulates the build fleet with threads over shared
+//! memory. A [`ShardedIndex`] partitions one immutable [`StarIndex`] epoch
+//! by contiguous node range: `fence[s]..fence[s+1]` is the entry range
+//! shard `s` **owns**. Every shard holds an `Arc` of the *same* snapshot
+//! (shared memory stands in for replicated storage); what the fence
+//! partitions is **routing-entry ownership**, not rows. A scatter task for
+//! shard `s` runs the single-engine pipeline — sketch → route → two-hop
+//! expand → tiled score — but expands only the probed router entries it
+//! owns, scores whatever candidates that expansion reaches (two-hop
+//! neighborhoods cross fences freely), folds in shard `s`'s own delta
+//! slice, and returns a per-shard top list. The gather phase merges the
+//! shard lists under the engine's total order (score descending, ties
+//! ascending by id), drops cross-shard duplicates, and truncates.
+//!
+//! **Shard-invariance contract** (`tests/shard_parity.rs`): the merged
+//! top-k is bit-identical to [`QueryEngine`]'s answer for any shard count
+//! and any worker count. The argument:
+//!
+//! * every probed router entry is owned by exactly one shard, so the union
+//!   of the shards' two-hop expansions is exactly the single engine's
+//!   candidate set (cross-shard duplicates are inherent spanner overlap);
+//! * scores are pure per `(query, id)` — the tiled kernels compute each
+//!   candidate's similarity independently of list composition — so
+//!   duplicates carry bit-equal scores and land adjacent under the total
+//!   order, where one `dedup` pass removes them;
+//! * any member of the global top-k beats all but < k elements of *any*
+//!   candidate subset containing it, so it survives every per-shard
+//!   top-k cut and the merge restores the global order.
+//!
+//! The argument needs the *whole* candidate set expanded, which is why
+//! sharded serving requires `max_candidates = 0`: the single engine's
+//! global cap truncates in probe order, a cut no fence partition can
+//! replicate. [`crate::stars::StarsBuilder::build_sharded`] forces the
+//! override (with a logged notice); [`ShardedEngine::new`] asserts it.
+//!
+//! **Quantized tier** runs in two phases to keep the survivor set exact:
+//! each shard returns its top-`c` (`c = k · rescore_factor`) *int8
+//! estimates* — pure per `(query, id)`, hence bit-equal across shards —
+//! and the gather merges them to the global top-`c`, which equals the
+//! single engine's survivor set, then rescores those survivors through the
+//! exact f32 kernels and keeps the top k. Same recall contract as the
+//! single engine, bit-identical output.
+//!
+//! **Writes** land in per-shard [`DeltaBuffer`]s. A global sequencer lock
+//! allocates ids and orders captures: an insert holds the sequencer across
+//! its shard push, so anyone capturing under the sequencer sees a gapless
+//! global-id view — the invariant compaction's reassembly asserts.
+//! Compaction reassembles the union delta in global-id order and runs the
+//! *same* rebuild code as the single engine
+//! ([`rebuild_full_from`]/[`rebuild_incremental_from`]), so compacted
+//! epochs are bit-identical too. Lock order is always sequencer → shard
+//! deltas (ascending) → snapshot; nothing acquires in another order.
+
+use super::delta::DeltaBuffer;
+use super::executor::{
+    rebuild_full_from, rebuild_incremental_from, CompactionReport, QueryScratch, ServeMeasure,
+    TopNeighbors, QSCRATCH,
+};
+use super::index::StarIndex;
+use super::CompactionMode;
+use crate::ampc::SnapshotStats;
+use crate::data::types::{Dataset, WeightedSet};
+use crate::graph::two_hop::two_hop_into;
+use crate::lsh::LshFamily;
+use crate::sim::quant::{self, QuantDataset};
+use crate::stars::BuildParams;
+use crate::util::fault::{Fault, FaultPlan};
+use crate::util::fxhash::FxHashMap;
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::simd;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+#[cfg(doc)]
+use super::executor::QueryEngine;
+
+/// Fence for `n` points over `n_shards` contiguous ranges:
+/// `fence[s]..fence[s+1]` is shard `s`'s owned node range, `fence` has
+/// `n_shards + 1` entries, `fence[0] = 0`, `fence[n_shards] = n`. Ranges
+/// differ in size by at most one point; shards beyond `n` own empty
+/// ranges (`n_shards > n` is legal — the extra shards simply contribute
+/// nothing).
+pub fn fence_for(n: usize, n_shards: usize) -> Vec<u64> {
+    let s = n_shards.max(1) as u64;
+    (0..=s).map(|i| n as u64 * i / s).collect()
+}
+
+/// A fence-partitioned serving snapshot: per-shard handles to one shared
+/// immutable [`StarIndex`] epoch plus the ownership fence. Built by
+/// [`crate::stars::StarsBuilder::build_sharded`] (routing reps are
+/// sketched once and split by fence — the shards never re-sketch).
+pub struct ShardedIndex<'f> {
+    /// One handle per shard; all point at the same epoch (`Arc::ptr_eq`).
+    shards: Vec<Arc<StarIndex<'f>>>,
+    /// `fence[s]..fence[s+1]` = node range shard `s` owns (`n_shards + 1`
+    /// entries).
+    fence: Vec<u64>,
+}
+
+impl<'f> ShardedIndex<'f> {
+    /// Partition a built snapshot into `n_shards` (clamped to ≥ 1)
+    /// contiguous ownership ranges.
+    pub fn new(index: StarIndex<'f>, n_shards: usize) -> ShardedIndex<'f> {
+        let n_shards = n_shards.max(1);
+        let snap = Arc::new(index);
+        let fence = fence_for(snap.len(), n_shards);
+        ShardedIndex {
+            shards: (0..n_shards).map(|_| snap.clone()).collect(),
+            fence,
+        }
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The ownership fence (`n_shards + 1` entries).
+    pub fn fence(&self) -> &[u64] {
+        &self.fence
+    }
+
+    /// The same snapshot under a different shard count. Shards share the
+    /// underlying snapshot `Arc`, so re-sharding costs O(`n_shards`) — the
+    /// scaling benches sweep shard counts off one build this way.
+    pub fn resharded(&self, n_shards: usize) -> ShardedIndex<'f> {
+        let n_shards = n_shards.max(1);
+        ShardedIndex {
+            shards: (0..n_shards).map(|_| self.shards[0].clone()).collect(),
+            fence: fence_for(self.shards[0].len(), n_shards),
+        }
+    }
+
+    /// Shard `s`'s snapshot handle.
+    pub fn shard(&self, s: usize) -> &Arc<StarIndex<'f>> {
+        &self.shards[s]
+    }
+
+    /// The shared snapshot epoch.
+    pub fn snapshot(&self) -> Arc<StarIndex<'f>> {
+        self.shards[0].clone()
+    }
+
+    /// Shard `s`'s slice of the snapshot telemetry (see
+    /// [`shard_stats_of`]).
+    pub fn shard_stats(&self, s: usize) -> SnapshotStats {
+        shard_stats_of(&self.shards[s], &self.fence, s)
+    }
+}
+
+/// Shard `s`'s slice of a snapshot's [`SnapshotStats`]: owned points and
+/// their CSR adjacency entries are counted exactly; router entries via
+/// [`super::router::Router::entries_in_range`]; byte figures are prorated
+/// by the shard's share (points for CSR/state/quant bytes, live entries
+/// for router bytes) since the underlying storage is shared.
+pub fn shard_stats_of(snap: &StarIndex<'_>, fence: &[u64], s: usize) -> SnapshotStats {
+    let (lo, hi) = (fence[s] as u32, fence[s + 1] as u32);
+    let points = (hi - lo) as usize;
+    let frac = points as f64 / snap.len().max(1) as f64;
+    let edges: usize = (lo..hi).map(|u| snap.csr().degree(u)).sum();
+    let entries = snap.router().entries_in_range(lo, hi);
+    let full = snap.stats();
+    let efrac = entries as f64 / full.router_entries.max(1) as f64;
+    SnapshotStats {
+        points,
+        edges,
+        router_reps: full.router_reps,
+        router_entries: entries,
+        router_bytes: (full.router_bytes as f64 * efrac) as usize,
+        csr_bytes: (full.csr_bytes as f64 * frac) as usize,
+        state_table_bytes: (full.state_table_bytes as f64 * frac) as usize,
+        quantized: full.quantized,
+        rescore_factor: full.rescore_factor,
+        quant_bytes: (full.quant_bytes as f64 * frac) as usize,
+        bytes_per_row: full.bytes_per_row,
+    }
+}
+
+/// One shard's write-side state: its delta buffer plus the *global* id of
+/// each buffered row (`ids[i]` is row `i`'s id). The buffer's own base is
+/// not meaningful here — global ids interleave across shards, so the
+/// explicit vector is authoritative.
+struct ShardDelta {
+    buf: DeltaBuffer,
+    ids: Vec<u32>,
+}
+
+/// A consistent per-shard delta view captured under the sequencer.
+struct ShardView {
+    ds: Dataset,
+    quant: Option<QuantDataset>,
+    ids: Vec<u32>,
+}
+
+/// One shard's answer for one query: the per-shard top list plus the
+/// scatter task's wall time (observability only).
+struct ShardAnswer {
+    top: Vec<(u32, f32)>,
+    us: u64,
+}
+
+/// The scatter-gather serving engine over a [`ShardedIndex`] — the
+/// multi-shard counterpart of [`QueryEngine`], bit-identical to it for
+/// any shard count (see the module docs for the contract and argument).
+pub struct ShardedEngine<'f> {
+    family: &'f dyn LshFamily,
+    measure: ServeMeasure,
+    build: BuildParams,
+    workers: usize,
+    compact_limit: usize,
+    n_shards: usize,
+    snapshot: RwLock<Arc<StarIndex<'f>>>,
+    /// Insert sequencer: the next global id. Lock order is `seq` → shard
+    /// deltas (ascending index); an insert holds `seq` across its shard
+    /// push, so capturing under `seq` yields a gapless global-id view.
+    seq: Mutex<usize>,
+    deltas: Vec<Mutex<ShardDelta>>,
+    /// Buffered rows across all shards (mirrors the per-shard `ids` under
+    /// `seq`; read lock-free for the auto-compaction trigger and gauges).
+    pending_total: AtomicUsize,
+    /// Serializes compactions so concurrent triggers rebuild once.
+    compacting: Mutex<()>,
+    full_compactions: AtomicU64,
+    incremental_compactions: AtomicU64,
+    incr_since_full: AtomicU64,
+    /// Deterministic fault schedule for scatter tasks
+    /// ([`ShardedEngine::faults`]); inactive by default. Crash draws
+    /// re-execute the task (straggler re-execution), delay draws sleep —
+    /// results are bit-identical either way.
+    faults: FaultPlan,
+    /// Scatter round counter (the fault plan's `round` coordinate).
+    round: AtomicU64,
+    /// Scatter task re-executions triggered by the fault plan.
+    scatter_retries_n: AtomicU64,
+    delta_pending_gauge: crate::obs::Gauge,
+    retry_counter: crate::obs::Counter,
+}
+
+impl<'f> ShardedEngine<'f> {
+    /// Engine over a partitioned snapshot. `build` parameterizes
+    /// compaction rebuilds, exactly as for [`QueryEngine::new`].
+    ///
+    /// Panics when the snapshot was built with `max_candidates > 0` — the
+    /// global candidate cap truncates in probe order, which no fence
+    /// partition can replicate (see the module docs);
+    /// [`crate::stars::StarsBuilder::build_sharded`] forces the override.
+    pub fn new(
+        index: ShardedIndex<'f>,
+        family: &'f dyn LshFamily,
+        measure: ServeMeasure,
+        build: BuildParams,
+    ) -> ShardedEngine<'f> {
+        let n_shards = index.n_shards();
+        let snap = index.snapshot();
+        assert_eq!(
+            snap.config().max_candidates, 0,
+            "sharded serving requires max_candidates = 0 (the global cap truncates in probe \
+             order, which shards cannot replicate; build via StarsBuilder::build_sharded)"
+        );
+        let compact_limit = snap.config().compact_limit;
+        let deltas = (0..n_shards)
+            .map(|_| {
+                Mutex::new(ShardDelta {
+                    buf: DeltaBuffer::new(snap.dataset(), snap.len()),
+                    ids: Vec::new(),
+                })
+            })
+            .collect();
+        let engine = ShardedEngine {
+            family,
+            measure,
+            build,
+            workers: pool::default_workers(),
+            compact_limit,
+            n_shards,
+            seq: Mutex::new(snap.len()),
+            snapshot: RwLock::new(snap),
+            deltas,
+            pending_total: AtomicUsize::new(0),
+            compacting: Mutex::new(()),
+            full_compactions: AtomicU64::new(0),
+            incremental_compactions: AtomicU64::new(0),
+            incr_since_full: AtomicU64::new(0),
+            faults: FaultPlan::none(),
+            round: AtomicU64::new(0),
+            scatter_retries_n: AtomicU64::new(0),
+            delta_pending_gauge: crate::obs::registry().gauge("stars_serve_delta_pending"),
+            retry_counter: crate::obs::registry().counter("stars_serve_scatter_retries_total"),
+        };
+        crate::obs::registry().gauge("stars_serve_shards").set(n_shards as u64);
+        engine.publish_shard_metrics();
+        engine
+    }
+
+    /// Worker count for scatter/gather batches and compaction rebuilds.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Pin a deterministic fault schedule onto the scatter path (tests;
+    /// defaults to no faults). The plan is pure in `(round, task,
+    /// attempt)`, so injected crashes re-execute tasks without changing
+    /// any answer.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Points in the current snapshot.
+    pub fn num_indexed(&self) -> usize {
+        self.snapshot.read().unwrap().len()
+    }
+
+    /// Points buffered across all shard deltas.
+    pub fn num_pending(&self) -> usize {
+        self.pending_total.load(Ordering::Relaxed)
+    }
+
+    /// The current snapshot epoch (shared by every shard).
+    pub fn snapshot(&self) -> Arc<StarIndex<'f>> {
+        self.snapshot.read().unwrap().clone()
+    }
+
+    /// The current ownership fence.
+    pub fn fence(&self) -> Vec<u64> {
+        fence_for(self.num_indexed(), self.n_shards)
+    }
+
+    /// Shard `s`'s slice of the current snapshot telemetry.
+    pub fn shard_stats(&self, s: usize) -> SnapshotStats {
+        let snap = self.snapshot();
+        let fence = fence_for(snap.len(), self.n_shards);
+        shard_stats_of(&snap, &fence, s)
+    }
+
+    /// Scatter task re-executions the fault plan has triggered so far.
+    pub fn scatter_retries(&self) -> u64 {
+        self.scatter_retries_n.load(Ordering::Relaxed)
+    }
+
+    /// The engine's compaction mix so far: `(full, incremental)` counts.
+    pub fn compaction_mix(&self) -> (u64, u64) {
+        (
+            self.full_compactions.load(Ordering::Relaxed),
+            self.incremental_compactions.load(Ordering::Relaxed),
+        )
+    }
+
+    /// True when the degraded quantized tier can serve (mirrors
+    /// [`QueryEngine::quant_ready`]).
+    pub fn quant_ready(&self) -> bool {
+        self.measure.supports_quant() && self.snapshot.read().unwrap().quant().is_some()
+    }
+
+    /// Refresh the `stars_serve_shard_{s}_*` gauges from the current
+    /// snapshot (called at construction and after every compaction swap).
+    fn publish_shard_metrics(&self) {
+        let snap = self.snapshot();
+        let fence = fence_for(snap.len(), self.n_shards);
+        for s in 0..self.n_shards {
+            let st = shard_stats_of(&snap, &fence, s);
+            let reg = crate::obs::registry();
+            reg.gauge(&format!("stars_serve_shard_{s}_points")).set(st.points as u64);
+            reg.gauge(&format!("stars_serve_shard_{s}_edges")).set(st.edges as u64);
+            reg.gauge(&format!("stars_serve_shard_{s}_router_entries"))
+                .set(st.router_entries as u64);
+        }
+    }
+
+    /// Answer a batch: scatter to every shard, gather under the total
+    /// order. Bit-identical to [`QueryEngine::query`] over the same
+    /// snapshot and inserts, for any shard and worker count.
+    pub fn query(&self, queries: &Dataset, k: usize) -> Vec<Vec<(u32, f32)>> {
+        self.query_tier(queries, k, None)
+    }
+
+    /// [`ShardedEngine::query`] with the explicit scoring-tier override
+    /// (mirrors [`QueryEngine::query_tier`]): `Some(rf)` forces the
+    /// quantized first pass with rescore width `c = k · rf`.
+    pub fn query_tier(
+        &self,
+        queries: &Dataset,
+        k: usize,
+        quant_rescore: Option<usize>,
+    ) -> Vec<Vec<(u32, f32)>> {
+        let nq = queries.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        // Consistent epoch: capturing under the sequencer guarantees no
+        // insert is mid-push, so the per-shard views form a gapless
+        // global-id set and the batch sees each point exactly once.
+        let (snap, views) = {
+            let _seq = self.seq.lock().unwrap();
+            let snap = self.snapshot.read().unwrap().clone();
+            let views: Vec<ShardView> = self
+                .deltas
+                .iter()
+                .map(|m| {
+                    let d = m.lock().unwrap();
+                    ShardView {
+                        ds: d.buf.dataset().clone(),
+                        quant: d.buf.quant().cloned(),
+                        ids: d.ids.clone(),
+                    }
+                })
+                .collect();
+            (snap, views)
+        };
+        if snap.dataset().dim() > 0 {
+            assert_eq!(queries.dim(), snap.dataset().dim(), "query dimension mismatch");
+        }
+        let keys = snap.query_keys(queries, self.workers);
+        let ns = self.n_shards;
+        let n = snap.len();
+        let fence = fence_for(n, ns);
+        let measure = self.measure;
+        // The tier decision is batch-global so every shard serves the same
+        // tier — the same condition QueryEngine evaluates, with "the delta"
+        // read as the union of the shard slices.
+        let quant_engaged = k > 0
+            && (quant_rescore.is_some() || snap.config().quantized)
+            && measure.supports_quant()
+            && snap.quant().is_some()
+            && views.iter().all(|v| v.ds.is_empty() || v.quant.is_some());
+        let rf = quant_rescore.unwrap_or(snap.config().rescore_factor).max(1);
+        let c = k.saturating_mul(rf);
+        let quant_pass = quant_engaged.then_some(c);
+        let lat_hist = crate::obs::registry().histogram("stars_serve_query_latency_us");
+        let query_count = crate::obs::registry().counter("stars_serve_queries_total");
+        let scatter_hist = crate::obs::registry().histogram("stars_serve_shard_scatter_us");
+        if quant_engaged {
+            crate::obs::registry()
+                .histogram("stars_serve_rescore_width")
+                .record(c as u64);
+        }
+        let plan = self.faults;
+        let round = self.round.fetch_add(1, Ordering::Relaxed);
+        // Phase 1 — scatter: nq × n_shards independent tasks over the
+        // pool; task t answers query t / ns on shard t % ns. The fault
+        // plan's crash draws re-execute the task (attempt advances until
+        // the plan's max_failures exhausts), delay draws sleep first —
+        // neither changes the result.
+        let (keys_ref, views_ref, fence_ref, snap_ref) = (&keys, &views, &fence, &snap);
+        let per_shard: Vec<ShardAnswer> = pool::parallel_map(nq * ns, self.workers, |t| {
+            let (qi, si) = (t / ns, t % ns);
+            if plan.is_active() {
+                let mut attempt = 0u32;
+                loop {
+                    match plan.decide(round, t as u64, attempt) {
+                        Fault::Crash => {
+                            attempt += 1;
+                            self.scatter_retries_n.fetch_add(1, Ordering::Relaxed);
+                            self.retry_counter.inc(1);
+                        }
+                        Fault::Delay(ms) => {
+                            std::thread::sleep(std::time::Duration::from_millis(ms));
+                            break;
+                        }
+                        Fault::None => break,
+                    }
+                }
+            }
+            let v = &views_ref[si];
+            let t0 = Instant::now();
+            let top = QSCRATCH.with(|cell| {
+                scatter_one(
+                    snap_ref,
+                    fence_ref[si] as u32,
+                    fence_ref[si + 1] as u32,
+                    &v.ds,
+                    v.quant.as_ref(),
+                    &v.ids,
+                    keys_ref,
+                    nq,
+                    qi,
+                    queries,
+                    measure,
+                    k,
+                    quant_pass,
+                    &mut cell.borrow_mut(),
+                )
+            });
+            let us = t0.elapsed().as_micros() as u64;
+            scatter_hist.record(us);
+            ShardAnswer { top, us }
+        });
+        // Global-id → (shard, local row) for rescoring delta survivors.
+        let mut delta_where: FxHashMap<u32, (u32, u32)> = FxHashMap::default();
+        if quant_engaged {
+            for (si, v) in views.iter().enumerate() {
+                for (li, &g) in v.ids.iter().enumerate() {
+                    delta_where.insert(g, (si as u32, li as u32));
+                }
+            }
+        }
+        // Phase 2 — gather: merge each query's shard lists under the total
+        // order (score desc, id asc), drop cross-shard duplicates (same id
+        // ⇒ bit-equal score ⇒ adjacent after the sort), truncate; on the
+        // quantized tier the merged estimates are the single engine's
+        // survivor set, rescored exactly here.
+        let (per_shard_ref, dw_ref) = (&per_shard, &delta_where);
+        let out = pool::parallel_map(nq, self.workers, |qi| {
+            let t0 = Instant::now();
+            let mut scatter_us = 0u64;
+            let mut all: Vec<(u32, f32)> = Vec::new();
+            for si in 0..ns {
+                let a = &per_shard_ref[qi * ns + si];
+                all.extend_from_slice(&a.top);
+                scatter_us += a.us;
+            }
+            all.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            all.dedup_by(|a, b| a.0 == b.0);
+            let merged = if quant_engaged {
+                all.truncate(c);
+                QSCRATCH.with(|cell| {
+                    rescore_survivors(
+                        &all, snap_ref, views_ref, dw_ref, queries, qi, measure, k,
+                        &mut cell.borrow_mut(),
+                    )
+                })
+            } else {
+                all.truncate(k);
+                all
+            };
+            // Approximate per-query service time: this query's summed
+            // scatter work plus the merge/rescore — what a sequential
+            // engine would have spent (observability only).
+            lat_hist.record(scatter_us + t0.elapsed().as_micros() as u64);
+            query_count.inc(1);
+            let results = merged.len();
+            crate::obs::emit_lazy("serve_query", || {
+                vec![
+                    ("query", Json::from(qi)),
+                    ("k", Json::from(k)),
+                    ("results", Json::from(results)),
+                    ("quant", Json::from(quant_engaged)),
+                    ("shards", Json::from(ns)),
+                    ("us", Json::from(scatter_us)),
+                ]
+            });
+            merged
+        });
+        out
+    }
+
+    /// Stream one point in: the sequencer allocates its global id, the
+    /// owner shard (`id % n_shards` — any deterministic rule works, the
+    /// gather order never depends on placement) buffers the row. Triggers
+    /// a compaction when the total pending count reaches the configured
+    /// limit. Ids are global and survive compaction unchanged, exactly as
+    /// for [`QueryEngine::insert`].
+    pub fn insert(&self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
+        let (gid, pending) = {
+            let mut seq = self.seq.lock().unwrap();
+            let gid = *seq as u32;
+            let shard = *seq % self.n_shards;
+            let mut d = self.deltas[shard].lock().unwrap();
+            d.buf.insert(row, set);
+            d.ids.push(gid);
+            *seq += 1;
+            let pending = self.pending_total.fetch_add(1, Ordering::Relaxed) + 1;
+            (gid, pending)
+        };
+        self.delta_pending_gauge.set(pending as u64);
+        if self.compact_limit > 0 && pending >= self.compact_limit {
+            self.compact();
+        }
+        gid
+    }
+
+    /// Fold every shard's delta into a fresh shared epoch (the snapshot's
+    /// configured mode, with the same `full_rebuild_every` promotion
+    /// policy as [`QueryEngine::compact_report`]). Returns false when
+    /// nothing was pending.
+    pub fn compact(&self) -> bool {
+        self.compact_report().is_some()
+    }
+
+    /// [`ShardedEngine::compact`] returning the work/telemetry report.
+    pub fn compact_report(&self) -> Option<CompactionReport> {
+        let cfg = {
+            let snap = self.snapshot.read().unwrap();
+            let c = snap.config();
+            (c.compaction, c.full_rebuild_every)
+        };
+        let mut mode = cfg.0;
+        if mode == CompactionMode::Incremental
+            && cfg.1 > 0
+            && self.incr_since_full.load(Ordering::Relaxed) + 1 >= cfg.1 as u64
+        {
+            mode = CompactionMode::Full;
+        }
+        self.compact_with(mode)
+    }
+
+    /// Compact with an explicit mode. The shard deltas are reassembled
+    /// into one union delta in global-id order — asserting the gapless-id
+    /// invariant the sequencer maintains — and rebuilt through the same
+    /// code path as the single engine, so the new epoch is bit-identical
+    /// to what a [`QueryEngine`] fed the same inserts would have built.
+    pub fn compact_with(&self, mode: CompactionMode) -> Option<CompactionReport> {
+        let _serial = self.compacting.lock().unwrap();
+        let t0 = Instant::now();
+        // Capture under the sequencer: gapless view, like the query path.
+        let (snap, views) = {
+            let _seq = self.seq.lock().unwrap();
+            let snap = self.snapshot.read().unwrap().clone();
+            let views: Vec<(Dataset, Vec<u32>)> = self
+                .deltas
+                .iter()
+                .map(|m| {
+                    let d = m.lock().unwrap();
+                    (d.buf.dataset().clone(), d.ids.clone())
+                })
+                .collect();
+            (snap, views)
+        };
+        let total: usize = views.iter().map(|(_, ids)| ids.len()).sum();
+        if total == 0 {
+            return None;
+        }
+        let n_old = snap.len();
+        // Reassemble the union delta in global-id order. The sort is over
+        // explicit ids, so the result is independent of shard placement.
+        let mut order: Vec<(u32, usize, usize)> = Vec::with_capacity(total);
+        for (si, (_, ids)) in views.iter().enumerate() {
+            for (li, &g) in ids.iter().enumerate() {
+                order.push((g, si, li));
+            }
+        }
+        order.sort_unstable_by_key(|&(g, _, _)| g);
+        let mut union = DeltaBuffer::new(snap.dataset(), n_old);
+        for (i, &(g, si, li)) in order.iter().enumerate() {
+            assert_eq!(
+                g as usize,
+                n_old + i,
+                "sharded delta ids must be gapless (insert sequencer invariant)"
+            );
+            let ds = &views[si].0;
+            let row = (ds.dim() > 0).then(|| ds.row(li));
+            let set = (!ds.sets.is_empty()).then(|| ds.set(li).clone());
+            let id = union.insert(row, set);
+            debug_assert_eq!(id, g);
+        }
+        let union_ds = union.dataset().clone();
+        let (next, mut report) = match mode {
+            CompactionMode::Full => rebuild_full_from(
+                &snap, &union_ds, self.family, self.measure, &self.build, self.workers,
+            ),
+            CompactionMode::Incremental => {
+                rebuild_incremental_from(&snap, &union_ds, self.measure, &self.build, self.workers)
+            }
+        };
+        match mode {
+            CompactionMode::Full => {
+                self.full_compactions.fetch_add(1, Ordering::Relaxed);
+                self.incr_since_full.store(0, Ordering::Relaxed);
+            }
+            CompactionMode::Incremental => {
+                self.incremental_compactions.fetch_add(1, Ordering::Relaxed);
+                self.incr_since_full.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        report.full_compactions = self.full_compactions.load(Ordering::Relaxed);
+        report.incremental_compactions = self.incremental_compactions.load(Ordering::Relaxed);
+        report.snapshot = next.stats();
+        report.seconds = t0.elapsed().as_secs_f64();
+        // Swap: retake the sequencer, publish the epoch, trim each shard's
+        // absorbed prefix. Inserts that raced in after the capture keep
+        // their ids and stay buffered — still gapless above the new len.
+        let pending = {
+            let _seq = self.seq.lock().unwrap();
+            *self.snapshot.write().unwrap() = Arc::new(next);
+            for (m, (_, ids)) in self.deltas.iter().zip(views.iter()) {
+                let mut d = m.lock().unwrap();
+                d.buf.absorb_prefix(ids.len());
+                d.ids.drain(..ids.len());
+            }
+            self.pending_total.fetch_sub(total, Ordering::Relaxed) - total
+        };
+        let us = (report.seconds * 1e6) as u64;
+        crate::obs::registry().histogram("stars_serve_compaction_us").record(us);
+        crate::obs::registry().counter("stars_serve_compactions_total").inc(1);
+        self.delta_pending_gauge.set(pending as u64);
+        self.publish_shard_metrics();
+        let (mode_name, delta_points, scored) =
+            (report.mode.name(), report.delta_points, report.candidates_scored);
+        crate::obs::emit_lazy("compaction", || {
+            vec![
+                ("mode", Json::from(mode_name)),
+                ("delta_points", Json::from(delta_points)),
+                ("candidates_scored", Json::from(scored)),
+                ("us", Json::from(us)),
+            ]
+        });
+        Some(report)
+    }
+}
+
+/// One scatter task: the single-engine pipeline restricted to the entry
+/// range `[lo, hi)` this shard owns, over the shared snapshot plus the
+/// shard's delta slice. Returns the per-shard exact top-k, or — when
+/// `quant_pass` is `Some(c)` — the per-shard top-`c` *int8 estimates*
+/// (rescoring happens at the gather, where the global survivor set is
+/// known).
+#[allow(clippy::too_many_arguments)]
+fn scatter_one(
+    snap: &StarIndex<'_>,
+    lo: u32,
+    hi: u32,
+    delta: &Dataset,
+    delta_quant: Option<&QuantDataset>,
+    delta_ids: &[u32],
+    keys: &[u64],
+    nq: usize,
+    qi: usize,
+    queries: &Dataset,
+    measure: ServeMeasure,
+    k: usize,
+    quant_pass: Option<usize>,
+    s: &mut QueryScratch,
+) -> Vec<(u32, f32)> {
+    let cfg = snap.config();
+    let csr = snap.csr();
+    let n = snap.len();
+    s.visit.begin(n);
+    s.entry_visit.begin(n);
+    s.cands.clear();
+    // Route + expand, exactly as the single engine — except only owned
+    // entries expand here. Each distinct probed entry is owned by exactly
+    // one shard, so the union over shards of these expansions is the
+    // single engine's candidate set. Two-hop neighborhoods cross the fence
+    // freely; the fence partitions entry ownership, not reachability.
+    for rep in 0..snap.router().reps() {
+        let key = keys[rep * nq + qi];
+        for &e in snap.router().route(rep, key).iter().take(cfg.probe_entries) {
+            if e < lo || e >= hi {
+                continue;
+            }
+            if s.entry_visit.mark(e) {
+                if s.visit.mark(e) {
+                    s.cands.push(e);
+                }
+                two_hop_into(csr, e, cfg.min_w, &mut s.visit, &mut s.cands);
+            }
+        }
+    }
+    // Quantized first pass: per-shard top-c estimates over owned snapshot
+    // candidates plus this shard's delta slice. Estimates are pure per
+    // (query, id) — an associative integer dot plus two fixed-order f32
+    // multiplies — so cross-shard duplicates carry bit-equal values.
+    if let Some(c) = quant_pass {
+        let sq = snap.quant().expect("quantized pass requires an SQ8 snapshot table");
+        let backend = simd::active();
+        s.qcodes.resize(queries.dim(), 0);
+        let qscale = quant::quantize_row(queries.row(qi), &mut s.qcodes);
+        let qnorm = queries.norm(qi);
+        let mut first = TopNeighbors::new(c);
+        sq.dot_estimates_with(backend, &s.qcodes, qscale, &s.cands, &mut s.scores);
+        for (&cand, &est) in s.cands.iter().zip(s.scores.iter()) {
+            let score = match measure {
+                ServeMeasure::Cosine => {
+                    quant::cosine_estimate(est, qnorm * snap.dataset().norm(cand as usize))
+                }
+                _ => est,
+            };
+            first.push(score, cand);
+        }
+        if !delta.is_empty() {
+            let dq = delta_quant.expect("tier decision guarantees a delta quant table");
+            s.cands.clear();
+            s.cands.extend(0..delta.len() as u32);
+            dq.dot_estimates_with(backend, &s.qcodes, qscale, &s.cands, &mut s.scores);
+            for (di, &est) in s.scores.iter().enumerate() {
+                let score = match measure {
+                    ServeMeasure::Cosine => quant::cosine_estimate(est, qnorm * delta.norm(di)),
+                    _ => est,
+                };
+                first.push(score, delta_ids[di]);
+            }
+        }
+        return first.into_sorted();
+    }
+    // Exact tier: score owned candidates plus the shard's delta slice.
+    let mut top = TopNeighbors::new(k);
+    measure.score(queries, qi, snap.dataset(), &s.cands, &mut s.batch, &mut s.scores);
+    for (&cand, &w) in s.cands.iter().zip(s.scores.iter()) {
+        top.push(w, cand);
+    }
+    if !delta.is_empty() {
+        s.cands.clear();
+        s.cands.extend(0..delta.len() as u32);
+        measure.score(queries, qi, delta, &s.cands, &mut s.batch, &mut s.scores);
+        for (di, &w) in s.scores.iter().enumerate() {
+            top.push(w, delta_ids[di]);
+        }
+    }
+    top.into_sorted()
+}
+
+/// Quantized-tier phase 2 at the gather: `survivors` is the merged global
+/// top-`c` estimate list (identical to the single engine's survivor set);
+/// rescore each survivor exactly through the tiled kernels — snapshot ids
+/// against the shared dataset, delta ids against their owning shard's
+/// view — and keep the top `k`. Scores are pure per `(query, row)`, so
+/// the per-shard grouping cannot change them.
+#[allow(clippy::too_many_arguments)]
+fn rescore_survivors(
+    survivors: &[(u32, f32)],
+    snap: &StarIndex<'_>,
+    views: &[ShardView],
+    delta_where: &FxHashMap<u32, (u32, u32)>,
+    queries: &Dataset,
+    qi: usize,
+    measure: ServeMeasure,
+    k: usize,
+    s: &mut QueryScratch,
+) -> Vec<(u32, f32)> {
+    let n = snap.len();
+    let mut top = TopNeighbors::new(k);
+    s.cands.clear();
+    for &(gid, _) in survivors {
+        if (gid as usize) < n {
+            s.cands.push(gid);
+        }
+    }
+    measure.score(queries, qi, snap.dataset(), &s.cands, &mut s.batch, &mut s.scores);
+    for (&cand, &w) in s.cands.iter().zip(s.scores.iter()) {
+        top.push(w, cand);
+    }
+    for (si, v) in views.iter().enumerate() {
+        s.delta_cands.clear();
+        let mut gids: Vec<u32> = Vec::new();
+        for &(gid, _) in survivors {
+            if (gid as usize) >= n {
+                let &(vs, li) = delta_where
+                    .get(&gid)
+                    .expect("delta survivor id missing from the capture's shard views");
+                if vs as usize == si {
+                    s.delta_cands.push(li);
+                    gids.push(gid);
+                }
+            }
+        }
+        if s.delta_cands.is_empty() {
+            continue;
+        }
+        measure.score(queries, qi, &v.ds, &s.delta_cands, &mut s.batch, &mut s.scores);
+        for (&gid, &w) in gids.iter().zip(s.scores.iter()) {
+            top.push(w, gid);
+        }
+    }
+    top.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fence_covers_and_balances() {
+        let f = fence_for(10, 3);
+        assert_eq!(f, vec![0, 3, 6, 10]);
+        assert_eq!(fence_for(0, 4), vec![0, 0, 0, 0, 0]);
+        assert_eq!(fence_for(5, 1), vec![0, 5]);
+        // More shards than points: trailing shards own empty ranges.
+        let f = fence_for(2, 5);
+        assert_eq!(f.len(), 6);
+        assert_eq!(*f.last().unwrap(), 2);
+        for w in f.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // Every point owned exactly once, sizes within one of each other.
+        let f = fence_for(1003, 7);
+        let sizes: Vec<u64> = f.windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(sizes.iter().sum::<u64>(), 1003);
+        let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1, "unbalanced fence: {sizes:?}");
+    }
+}

@@ -128,9 +128,50 @@ impl<'a> StarsBuilder<'a> {
         let family = self.family.expect("hash family not set");
         let workers = self.workers;
         let (mut out, keys) = self.build_with_keys(serve.route_reps.max(1));
+        // Repetitions the build never bucket-keyed (SortingLSH sorts symbol
+        // rows, it has no bucket keys; `keep_keys` beyond the build's
+        // repetition count) come back `None`; the export re-sketches those
+        // through fresh states rather than silently dropping routing reps —
+        // correct but paid for twice, hence the notice.
+        let missing = keys.iter().filter(|k| k.is_none()).count();
+        if missing > 0 {
+            crate::info!(
+                "snapshot export: re-sketching {missing} routing repetition(s) the build did \
+                 not bucket-key (sorted-window/AllPair builds share no keys)"
+            );
+        }
         let index = StarIndex::build_from_keys(ds.clone(), family, &out.graph, serve, workers, keys);
         out.report.snapshot = Some(index.stats());
         (out, index)
+    }
+
+    /// [`StarsBuilder::build_indexed`], then partition the snapshot into a
+    /// [`crate::serve::ShardedIndex`] over `n_shards` contiguous ownership
+    /// ranges — the build artifact for scatter-gather serving
+    /// ([`crate::serve::ShardedEngine`]). Routing repetitions are sketched
+    /// once (reusing the build's keys where available, with the same
+    /// re-sketch fallback and notice as `build_indexed`) and split by
+    /// fence; the shards never re-sketch.
+    ///
+    /// Sharded serving requires the full two-hop candidate set per query
+    /// (the shard-invariance argument in [`crate::serve::sharded`]), so a
+    /// nonzero `max_candidates` is overridden to 0 here, with a logged
+    /// notice — [`crate::serve::ShardedEngine::new`] asserts it.
+    pub fn build_sharded(
+        self,
+        n_shards: usize,
+        mut serve: crate::serve::ServeConfig,
+    ) -> (BuildOutput, crate::serve::ShardedIndex<'a>) {
+        if serve.max_candidates != 0 {
+            crate::info!(
+                "build_sharded: overriding max_candidates {} -> 0 (the global cap truncates \
+                 in probe order, which no fence partition can replicate)",
+                serve.max_candidates
+            );
+            serve.max_candidates = 0;
+        }
+        let (out, index) = self.build_indexed(serve);
+        (out, crate::serve::ShardedIndex::new(index, n_shards))
     }
 
     /// Run the build.

@@ -19,7 +19,8 @@
 use stars::data::synth;
 use stars::lsh::SimHash;
 use stars::serve::{
-    Admission, AdmissionConfig, FrontDoor, QueryEngine, ServeConfig, ServeMeasure, ShedReason,
+    Admission, AdmissionConfig, FrontDoor, QueryEngine, ServeConfig, ServeMeasure, ShardedEngine,
+    ShedReason,
 };
 use stars::sim::CosineSim;
 use stars::stars::{Algorithm, BuildOutput, BuildParams, JoinStrategy, StarsBuilder};
@@ -193,6 +194,99 @@ fn serve_topk_is_bit_identical_under_faults() {
             "faulted build serves different top-k ({workers} workers)"
         );
     }
+}
+
+#[test]
+fn sharded_scatter_is_bit_identical_under_faults() {
+    // Scatter tasks under crash/delay schedules re-execute (straggler
+    // re-execution: the retry loop in the scatter path) and the gathered
+    // answers stay bit-identical to a fault-free sharded engine — on the
+    // snapshot path and with a live delta.
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    let p = params(JoinStrategy::Direct);
+    let qids: Vec<u32> = (0..800u32).step_by(37).collect();
+    let queries = ds.subset(&qids);
+    let (_, base) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(p.clone())
+        .build_sharded(
+            1,
+            ServeConfig::default().route_reps(6).compact_limit(0),
+        );
+    let clean =
+        ShardedEngine::new(base.resharded(4), &h, ServeMeasure::Cosine, p.clone()).workers(4);
+    let want = clean.query(&queries, 10);
+    assert_eq!(clean.scatter_retries(), 0, "inert plan must count nothing");
+    for spec in [
+        "seed=3,crash=0.8,max_failures=2",
+        "seed=5,crash=0.5,delay=0.4:5,max_failures=3",
+    ] {
+        let eng = ShardedEngine::new(base.resharded(4), &h, ServeMeasure::Cosine, p.clone())
+            .workers(4)
+            .faults(plan(spec));
+        assert_eq!(
+            eng.query(&queries, 10),
+            want,
+            "faulted scatter diverged ({spec})"
+        );
+        assert!(eng.scatter_retries() > 0, "plan never fired ({spec})");
+        // Delta path under the same schedule: the same insert into a fresh
+        // fault-free engine must still gather bit-identically.
+        let clean_delta =
+            ShardedEngine::new(base.resharded(4), &h, ServeMeasure::Cosine, p.clone())
+                .workers(4);
+        eng.insert(Some(ds.row(3)), None);
+        clean_delta.insert(Some(ds.row(3)), None);
+        assert_eq!(
+            eng.query(&queries, 10),
+            clean_delta.query(&queries, 10),
+            "faulted delta scatter diverged ({spec})"
+        );
+    }
+}
+
+#[test]
+fn front_door_releases_permits_when_the_engine_panics() {
+    // The no-leak property: AdmissionPermit::drop runs during unwind, so a
+    // query that panics inside the engine cannot wedge the door. Six
+    // panicking batches against a queue_limit of 4 would exhaust the queue
+    // if any permit leaked — later panics would shed instead of panic, and
+    // the final good batch would be refused.
+    let ds = fixture();
+    let h = SimHash::new(16, 8, 7);
+    let p = params(JoinStrategy::Direct);
+    let (_, base) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(p.clone())
+        .build_sharded(
+            3,
+            ServeConfig::default().route_reps(6).compact_limit(0),
+        );
+    let engine = ShardedEngine::new(base, &h, ServeMeasure::Cosine, p).workers(2);
+    let door = FrontDoor::new(&engine, AdmissionConfig::default().queue_limit(4));
+    let good = ds.subset(&[1, 2]);
+    assert!(!door.query(&good, 5).is_shed(), "cold door must admit");
+    assert_eq!(door.depth(), 0);
+    // Wrong-dimension queries panic inside the engine (its dim assert).
+    let bad = synth::gaussian_mixture(3, 8, 2, 0.05, 1);
+    for round in 0..6 {
+        let got =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| door.query(&bad, 5)));
+        assert!(got.is_err(), "dim-mismatched query must panic (round {round})");
+        assert_eq!(
+            door.depth(),
+            0,
+            "panicked query leaked its permit (round {round})"
+        );
+    }
+    assert!(
+        !door.query(&good, 5).is_shed(),
+        "door wedged after panicking queries"
+    );
+    assert_eq!(door.stats().queue_sheds, 0);
 }
 
 /// Quantized engine fixture for the admission tests (the degraded tier

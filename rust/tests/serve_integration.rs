@@ -11,7 +11,8 @@
 use stars::data::synth;
 use stars::lsh::{SimHash, WeightedMinHash};
 use stars::serve::{
-    brute_force_topk, recall_against, CompactionMode, QueryEngine, ServeConfig, ServeMeasure,
+    brute_force_topk, recall_against, Admission, AdmissionConfig, CompactionMode, FrontDoor,
+    QueryEngine, ServeConfig, ServeMeasure, ShardedEngine, ShedReason,
 };
 use stars::sim::{CosineSim, WeightedJaccardSim};
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
@@ -395,6 +396,104 @@ fn set_family_incremental_compaction_roundtrip() {
     for (qi, &id) in delta_ids.iter().enumerate() {
         assert_eq!(res[qi][0].0, id, "absorbed set {id} not its own top-1");
         assert!((res[qi][0].1 - 1.0).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn tenant_caps_shed_the_hot_tenant_and_spare_the_cold_one() {
+    // Per-tenant QPS token buckets at the front door: a hot tenant burns
+    // its burst and is shed with ShedReason::TenantCap; a cold tenant's
+    // untouched bucket admits it, and its results are bit-identical to the
+    // door-less engine. Refill at 0.001 qps is negligible over the test's
+    // lifetime, so the counts are deterministic.
+    let h = SimHash::new(16, 8, 7);
+    let (ds, engine) = build_cosine_engine(&h, 2, 0);
+    let queries = ds.subset(&[3, 44, 199]);
+    let door = FrontDoor::new(
+        &engine,
+        AdmissionConfig::default()
+            .queue_limit(8)
+            .tenant_qps(0.001)
+            .tenant_burst(2),
+    );
+    let want = engine.query(&queries, 5);
+    for round in 0..2 {
+        match door.query_for(7, &queries, 5) {
+            Admission::Served(got) => assert_eq!(got, want, "hot round {round}"),
+            other => panic!("hot tenant refused inside its burst: {other:?}"),
+        }
+    }
+    for round in 0..3 {
+        match door.query_for(7, &queries, 5) {
+            Admission::Shed(ShedReason::TenantCap) => {}
+            other => panic!("hot tenant not capped (round {round}): {other:?}"),
+        }
+    }
+    match door.query_for(13, &queries, 5) {
+        Admission::Served(got) => assert_eq!(got, want, "cold tenant results drifted"),
+        other => panic!("cold tenant starved by the hot one: {other:?}"),
+    }
+    let stats = door.stats();
+    assert_eq!(stats.tenant_sheds, 3);
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.queue_sheds, 0);
+    assert_eq!(stats.deadline_sheds, 0);
+    assert!(stats.shed() >= 3);
+    // Untenanted traffic (plain query) bypasses the buckets entirely.
+    assert!(!door.query(&queries, 5).is_shed());
+}
+
+#[test]
+fn merge_ties_straddling_a_fence_keep_the_total_order() {
+    // Two bit-identical rows placed on opposite sides of the 2-shard fence
+    // produce bit-equal scores from different shards; the gather's total
+    // order (score desc, id asc) must rank them exactly like the single
+    // engine's heap does — ascending id — for any worker count.
+    let base = synth::gaussian_mixture(100, 16, 5, 0.08, 61);
+    let mut idx: Vec<u32> = (0..100).collect();
+    idx[60] = 10; // rows 10 and 60 are now identical, fence at 50 splits them
+    let ds = base.subset(&idx);
+    let h = SimHash::new(16, 8, 7);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(8)
+        .threshold(0.3);
+    let cfg = || {
+        ServeConfig::default()
+            .route_reps(8)
+            .compact_limit(0)
+            .max_candidates(0)
+    };
+    let (_, rindex) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params.clone())
+        .build_indexed(cfg());
+    let single = QueryEngine::new(rindex, &h, ServeMeasure::Cosine, params.clone()).workers(1);
+    let queries = ds.subset(&[10]);
+    let want = single.query(&queries, 5);
+    // The duplicate pair ties at similarity 1.0 and must come back in
+    // ascending-id order from the single engine already.
+    assert_eq!(want[0][0].0, 10, "original not first");
+    assert_eq!(want[0][1].0, 60, "duplicate not second");
+    assert_eq!(
+        want[0][0].1.to_bits(),
+        want[0][1].1.to_bits(),
+        "duplicate rows must score bit-equal"
+    );
+    for workers in [1usize, 4] {
+        let (_, sindex) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params.clone())
+            .build_sharded(2, cfg());
+        assert_eq!(sindex.fence(), &[0, 50, 100]);
+        let eng =
+            ShardedEngine::new(sindex, &h, ServeMeasure::Cosine, params.clone()).workers(workers);
+        assert_eq!(
+            eng.query(&queries, 5),
+            want,
+            "fence-straddling tie broke the total order ({workers} workers)"
+        );
     }
 }
 

@@ -1,0 +1,269 @@
+//! Shard-invariance battery: the scatter-gather [`ShardedEngine`] must
+//! answer **bit-identically** to the single-process [`QueryEngine`] over
+//! the same snapshot and the same inserts — for every shard count, every
+//! worker count, on both scoring tiers (exact f32 and quantized int8), and
+//! across the whole write path (live deltas, incremental compaction).
+//!
+//! The contract holds under `max_candidates = 0` (the global candidate cap
+//! truncates in probe order, which no fence partition can replicate);
+//! `build_sharded` forces that config and the reference engines here pin
+//! it explicitly. See ARCHITECTURE.md "Sharded serving".
+
+use stars::data::synth;
+use stars::lsh::SimHash;
+use stars::serve::{
+    fence_for, CompactionMode, QueryEngine, ServeConfig, ServeMeasure, ShardedEngine,
+    ShardedIndex, StarIndex,
+};
+use stars::sim::CosineSim;
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+
+fn clustered_params() -> BuildParams {
+    BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(8)
+        .threshold(0.5)
+}
+
+/// The shared serve config of every engine in this battery: uncapped
+/// candidate walk (the shard-invariance requirement), manual compaction,
+/// incremental mode, optionally the quantized first-pass tier.
+fn serve_cfg(quantized: bool) -> ServeConfig {
+    let cfg = ServeConfig::default()
+        .route_reps(8)
+        .compact_limit(0)
+        .max_candidates(0)
+        .compaction(CompactionMode::Incremental);
+    if quantized {
+        cfg.quantized(4)
+    } else {
+        cfg
+    }
+}
+
+#[test]
+fn sharded_answers_are_bit_identical_to_single_shard() {
+    // The full battery: shards {1, 2, 3, 8} × workers {1, 8} × tiers
+    // {exact, quantized}, each compared against a single-worker
+    // QueryEngine reference at three write-path stages — snapshot-only,
+    // with a live 24-point delta, and after one incremental compaction.
+    let ds = synth::gaussian_mixture(700, 16, 14, 0.08, 33);
+    let extra = synth::gaussian_mixture(24, 16, 14, 0.08, 34);
+    let h = SimHash::new(16, 8, 7);
+    let qids: Vec<u32> = (0..700u32).step_by(17).collect();
+    let queries = ds.subset(&qids);
+    let dqueries = extra.subset(&[0, 5, 11, 23]);
+    for quantized in [false, true] {
+        let tier = if quantized { "quantized" } else { "exact" };
+        // Reference: the single-shard engine under the identical config.
+        let (_, rindex) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(clustered_params())
+            .workers(1)
+            .build_indexed(serve_cfg(quantized));
+        let reference =
+            QueryEngine::new(rindex, &h, ServeMeasure::Cosine, clustered_params()).workers(1);
+        let snap_only = reference.query(&queries, 10);
+        for i in 0..extra.len() {
+            reference.insert(Some(extra.row(i)), None);
+        }
+        let with_delta = reference.query(&queries, 10);
+        let with_delta_dq = reference.query(&dqueries, 10);
+        assert!(reference.compact());
+        let compacted = reference.query(&queries, 10);
+        let compacted_dq = reference.query(&dqueries, 10);
+        // One sharded build; each (shards, workers) cell re-fences it.
+        let (_, sbase) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(clustered_params())
+            .workers(1)
+            .build_sharded(1, serve_cfg(quantized));
+        for ns in [1usize, 2, 3, 8] {
+            for workers in [1usize, 8] {
+                let cell = format!("({tier}, {ns} shards, {workers} workers)");
+                let eng = ShardedEngine::new(
+                    sbase.resharded(ns),
+                    &h,
+                    ServeMeasure::Cosine,
+                    clustered_params(),
+                )
+                .workers(workers);
+                assert_eq!(eng.n_shards(), ns);
+                assert_eq!(
+                    eng.query(&queries, 10),
+                    snap_only,
+                    "snapshot-only answers diverged {cell}"
+                );
+                // Live delta: same inserts, same global ids.
+                for i in 0..extra.len() {
+                    assert_eq!(eng.insert(Some(extra.row(i)), None), 700 + i as u32);
+                }
+                assert_eq!(eng.num_pending(), 24);
+                assert_eq!(
+                    eng.query(&queries, 10),
+                    with_delta,
+                    "delta-path answers diverged {cell}"
+                );
+                assert_eq!(
+                    eng.query(&dqueries, 10),
+                    with_delta_dq,
+                    "delta-point queries diverged {cell}"
+                );
+                // Incremental compaction: per-shard deltas reassemble into
+                // the same epoch the reference's single buffer produced.
+                let rep = eng.compact_report().expect("delta pending");
+                assert_eq!(rep.mode, CompactionMode::Incremental);
+                assert_eq!(rep.delta_points, 24);
+                assert_eq!(eng.num_pending(), 0);
+                assert_eq!(eng.num_indexed(), 724);
+                assert_eq!(
+                    eng.query(&queries, 10),
+                    compacted,
+                    "post-compaction answers diverged {cell}"
+                );
+                assert_eq!(
+                    eng.query(&dqueries, 10),
+                    compacted_dq,
+                    "post-compaction delta-point queries diverged {cell}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fence_edge_cases_keep_bit_identity() {
+    // Degenerate fences: more shards than points (some shards own zero
+    // points), single-point shards, and inserts landing on empty shards —
+    // answers must still match the single-shard engine bit for bit.
+    let ds = synth::gaussian_mixture(5, 8, 2, 0.05, 9);
+    let h = SimHash::new(8, 6, 3);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(4)
+        .threshold(0.3);
+    let (_, rindex) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params.clone())
+        .build_indexed(serve_cfg(false));
+    let reference = QueryEngine::new(rindex, &h, ServeMeasure::Cosine, params.clone()).workers(1);
+    let queries = ds.subset(&[0, 1, 2, 3, 4]);
+    let want = reference.query(&queries, 3);
+    reference.insert(Some(ds.row(2)), None);
+    let want_delta = reference.query(&queries, 3);
+    for ns in [2usize, 5, 9] {
+        let (_, sindex) = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params.clone())
+            .build_sharded(ns, serve_cfg(false));
+        // Oversharded fences are monotone, cover all points, and contain
+        // at least one empty shard when ns > n.
+        let fence = sindex.fence().to_vec();
+        assert_eq!(fence.len(), ns + 1);
+        assert!(fence.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*fence.last().unwrap(), 5);
+        if ns > 5 {
+            assert!(
+                fence.windows(2).any(|w| w[0] == w[1]),
+                "no empty shard in the {ns}-way fence over 5 points"
+            );
+        }
+        let eng =
+            ShardedEngine::new(sindex, &h, ServeMeasure::Cosine, params.clone()).workers(2);
+        assert_eq!(eng.query(&queries, 3), want, "{ns}-way snapshot diverged");
+        // Empty-shard telemetry stays well-formed.
+        for s in 0..ns {
+            let st = eng.shard_stats(s);
+            assert!(st.points <= 5);
+        }
+        // The insert's owner shard is gid % ns — possibly a shard that
+        // owns no snapshot points — and must still be scored.
+        assert_eq!(eng.insert(Some(ds.row(2)), None), 5);
+        assert_eq!(eng.query(&queries, 3), want_delta, "{ns}-way delta diverged");
+    }
+}
+
+#[test]
+fn fence_for_tiles_the_id_space() {
+    let f = fence_for(10, 3);
+    assert_eq!(f, vec![0, 3, 6, 10]);
+    assert_eq!(fence_for(0, 4), vec![0, 0, 0, 0, 0]);
+    assert_eq!(fence_for(7, 1), vec![0, 7]);
+    // Balanced within one point.
+    let f = fence_for(1003, 7);
+    let sizes: Vec<u64> = f.windows(2).map(|w| w[1] - w[0]).collect();
+    assert_eq!(sizes.iter().sum::<u64>(), 1003);
+    assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+}
+
+#[test]
+fn resharding_preserves_the_snapshot_and_engine_answers() {
+    // ShardedIndex::resharded re-fences the same Arc'd snapshot — the
+    // bench sweeps shard counts off one build this way, so it must be
+    // answer-preserving too.
+    let ds = synth::gaussian_mixture(300, 16, 6, 0.08, 41);
+    let h = SimHash::new(16, 8, 7);
+    let params = clustered_params();
+    let (_, index) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params.clone())
+        .build_indexed(serve_cfg(false));
+    let base = ShardedIndex::new(index, 3);
+    assert_eq!(base.n_shards(), 3);
+    let queries = ds.subset(&[0, 50, 299]);
+    let mut baseline: Option<Vec<Vec<(u32, f32)>>> = None;
+    for ns in [1usize, 4, 7] {
+        let re = base.resharded(ns);
+        assert_eq!(re.n_shards(), ns);
+        assert_eq!(re.snapshot().len(), 300);
+        let eng = ShardedEngine::new(re, &h, ServeMeasure::Cosine, params.clone()).workers(2);
+        let got = eng.query(&queries, 5);
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(b, &got, "resharded({ns}) diverged"),
+        }
+    }
+}
+
+#[test]
+fn sorting_builds_serve_sharded_through_the_resketch_fallback() {
+    // SortingLshStars shares no routing keys with the snapshot export
+    // (sorted-window builds bucket differently), so build_sharded goes
+    // through the documented re-sketch fallback — and must still serve
+    // bit-identically to the single-shard engine built the same way.
+    let ds = synth::gaussian_mixture(400, 16, 8, 0.08, 21);
+    let h = SimHash::new(16, 8, 7);
+    let params = BuildParams::knn_mode(Algorithm::SortingLshStars).sketches(6);
+    let (_, rindex) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params.clone())
+        .build_indexed(serve_cfg(false));
+    let reference = QueryEngine::new(rindex, &h, ServeMeasure::Cosine, params.clone()).workers(1);
+    let queries = ds.subset(&[0, 13, 77, 200, 399]);
+    let want = reference.query(&queries, 5);
+    // Deliberately pass a config with the default candidate cap:
+    // build_sharded must force it to 0 (matching serve_cfg's explicit 0
+    // above) before exporting.
+    let capped = ServeConfig::default().route_reps(8).compact_limit(0);
+    let (_, sindex) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(&h)
+        .params(params.clone())
+        .build_sharded(3, capped);
+    let snap: std::sync::Arc<StarIndex<'_>> = sindex.snapshot();
+    assert_eq!(
+        snap.config().max_candidates,
+        0,
+        "build_sharded must force the uncapped candidate walk"
+    );
+    let eng = ShardedEngine::new(sindex, &h, ServeMeasure::Cosine, params).workers(4);
+    assert_eq!(
+        eng.query(&queries, 5),
+        want,
+        "sorting-build sharded answers diverged from single-shard"
+    );
+}

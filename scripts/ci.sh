@@ -64,6 +64,22 @@ STARS_FAULTS="seed=1,crash=0.2,delay=0.1:20,corrupt=0.3,max_failures=2" \
     ./target/release/stars build --dataset random --n 2000 --r 4 \
     --threshold 0.5 --join shuffle >/dev/null
 
+# Sharded serving gates. `tests/shard_parity.rs` (inside the suites above)
+# proves scatter-gather answers bit-identical to single-shard serving; here
+# the end-to-end CLI wiring is gated: --shards 1 keeps the single-engine
+# path, --shards 4 serves through the fence-partitioned engine (with
+# --tenants exercising the per-tenant QPS caps through the front door), and
+# one forced-scalar 4-shard pass pins shard invariance to the scalar
+# backend too.
+echo "==> sharded serve gates (--shards 1, --shards 4 + tenants, scalar 4-shard)"
+./target/release/stars serve --dataset random --n 2000 --r 4 \
+    --threshold 0.5 --queries 20 --k 5 --shards 1 >/dev/null
+./target/release/stars serve --dataset random --n 2000 --r 4 \
+    --threshold 0.5 --queries 20 --k 5 --inserts 50 --shards 4 \
+    --queue-limit 8 --tenants 0.001:2 >/dev/null
+STARS_SIMD=scalar ./target/release/stars serve --dataset random --n 2000 \
+    --r 4 --threshold 0.5 --queries 20 --k 5 --shards 4 >/dev/null
+
 # Observability gates (see ARCHITECTURE.md "Observability" and
 # EXPERIMENTS.md §Observability). The tracing/metrics layer's own
 # bit-identity and span-shape tests run inside the suites above; here the
