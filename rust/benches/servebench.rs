@@ -23,15 +23,20 @@
 //! * the **multi-shard scaling curve** (EXPERIMENTS.md §Sharding table
 //!   convention): the same snapshot served at 1/2/4/8 shards through the
 //!   fence-partitioned scatter-gather engine, answers asserted
-//!   bit-identical across shard counts.
+//!   bit-identical across shard counts;
+//! * the **durability probe** (EXPERIMENTS.md §Persistence): WAL append
+//!   cost under the `os` and `always` fsync policies, delta-tail seal
+//!   cost, snapshot file size, and the restart-without-rebuild pair
+//!   (cold-start wall + per-record replay), with the recovered engine's
+//!   answers asserted bit-identical to the uncrashed one.
 
 use stars::bench::{fmt_count, fmt_secs, time_once, time_runs, Table};
 use stars::obs::Histogram;
 use stars::data::synth;
 use stars::lsh::SimHash;
 use stars::serve::{
-    brute_force_topk, recall_against, AdmissionConfig, CompactionMode, FrontDoor, QueryEngine,
-    ServeConfig, ServeMeasure, ShardedEngine,
+    brute_force_topk, recall_against, AdmissionConfig, CompactionMode, DurableStore, FrontDoor,
+    FsyncPolicy, QueryEngine, ServeConfig, ServeMeasure, ShardedEngine,
 };
 use stars::sim::CosineSim;
 use stars::stars::{Algorithm, BuildParams, StarsBuilder};
@@ -357,9 +362,111 @@ fn main() {
         ]);
     }
 
+    // Durability probe: a smaller build (5k points) so the WAL/seal/replay
+    // costs dominate the numbers instead of build wall. Dir A measures the
+    // buffered `os` policy end to end — checkpoint, 4096 WAL'd inserts
+    // (sealing every 256), recover, replay, bit-identity check; dir B
+    // isolates the `always` policy's per-append fsync cost.
+    const DUR_INSERTS: usize = 4096;
+    const FSYNC_ROUNDS: usize = 64;
+    const SEAL_LIMIT: usize = 256;
+    let dds = ds.subset(&(0..5000u32).collect::<Vec<_>>());
+    let dcfg = ServeConfig::default()
+        .route_reps(8)
+        .compact_limit(0)
+        .seal_limit(SEAL_LIMIT);
+    let (_, dindex) = StarsBuilder::new(&dds)
+        .similarity(&CosineSim)
+        .hash(&family)
+        .params(params.clone())
+        .build_indexed(dcfg.clone());
+    let dengine =
+        QueryEngine::new(dindex, &family, ServeMeasure::Cosine, params.clone()).workers(workers);
+    let dur_dir = std::env::temp_dir().join(format!("stars-servebench-dur-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dur_dir);
+    let mut dstore = DurableStore::open(&dur_dir, FsyncPolicy::Os).expect("state dir");
+    let snap_path = dstore.checkpoint(&dengine.snapshot()).expect("checkpoint");
+    let snapshot_bytes = std::fs::metadata(&snap_path).map(|m| m.len()).unwrap_or(0);
+    let mut wal_ns = 0u64;
+    for i in 0..DUR_INSERTS {
+        let row = dds.row(i % dds.len());
+        let gid = dengine.next_gid();
+        let t = std::time::Instant::now();
+        dstore.log_insert(gid, Some(row), None).expect("wal append");
+        wal_ns += t.elapsed().as_nanos() as u64;
+        dengine.insert(Some(row), None);
+    }
+    dstore.sync().expect("wal sync");
+    let wal_append_ns = wal_ns as f64 / DUR_INSERTS as f64;
+    let seal_us =
+        stars::obs::registry().histogram("stars_serve_seal_us").snapshot().quantile(0.5) as f64;
+    table.row(vec![
+        format!("WAL append (fsync=os, seal every {SEAL_LIMIT})"),
+        fmt_count(DUR_INSERTS as u64),
+        format!("{wal_append_ns:.0} ns/append"),
+        format!("seal p50 {seal_us:.0} µs"),
+    ]);
+    // Dir B: the same appends under Always — every record pays an fsync.
+    let dur_dir_b =
+        std::env::temp_dir().join(format!("stars-servebench-dur-b-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dur_dir_b);
+    let mut bstore = DurableStore::open(&dur_dir_b, FsyncPolicy::Always).expect("state dir");
+    bstore.checkpoint(&dengine.snapshot()).expect("checkpoint");
+    let base_b = dengine.next_gid();
+    let (fsync_s, _) = time_once(|| {
+        for i in 0..FSYNC_ROUNDS {
+            bstore
+                .log_insert(base_b + i as u32, Some(dds.row(i % dds.len())), None)
+                .expect("wal append");
+        }
+    });
+    let wal_fsync_always_ns = fsync_s * 1e9 / FSYNC_ROUNDS as f64;
+    table.row(vec![
+        "WAL append (fsync=always)".into(),
+        fmt_count(FSYNC_ROUNDS as u64),
+        format!("{wal_fsync_always_ns:.0} ns/append"),
+        "durable per record".into(),
+    ]);
+    // Restart without rebuild: recover dir A (snapshot + 4096-record WAL
+    // suffix), replay through a fresh engine, and require bit-identical
+    // answers to the uncrashed engine.
+    let dqueries = dds.subset(&(0..100u32).collect::<Vec<_>>());
+    let d_ref = dengine.query(&dqueries, K);
+    let mut rstore = DurableStore::open(&dur_dir, FsyncPolicy::Os).expect("state dir");
+    let (rec_s, rec) = time_once(|| {
+        rstore
+            .recover(&family, dcfg.clone(), workers)
+            .expect("recover")
+            .expect("snapshot present")
+    });
+    let cold_start_ms = rec_s * 1e3;
+    let replay_n = rec.replay.len();
+    let rengine =
+        QueryEngine::new(rec.index, &family, ServeMeasure::Cosine, params.clone()).workers(workers);
+    let (replay_s, _) = time_once(|| {
+        for r in &rec.replay {
+            rengine.insert(r.row.as_deref(), r.set.clone());
+        }
+    });
+    let replay_ns_per_record = replay_s * 1e9 / replay_n.max(1) as f64;
+    let recovered_ok = rengine.query(&dqueries, K) == d_ref;
+    assert!(recovered_ok, "recovered serving diverged from the uncrashed engine");
+    table.row(vec![
+        format!("recover + replay ({replay_n} records, bit-identical)"),
+        fmt_count(dengine.num_indexed() as u64),
+        format!("cold start {cold_start_ms:.1} ms"),
+        format!("{replay_ns_per_record:.0} ns/record"),
+    ]);
+    let _ = std::fs::remove_dir_all(&dur_dir);
+    let _ = std::fs::remove_dir_all(&dur_dir_b);
+
     table.print();
 
     let doc = Json::obj(vec![
+        // v8: added the `durability` object — WAL append cost under both
+        // fsync policies, seal cost, snapshot bytes, and the
+        // restart-without-rebuild pair (cold-start wall + replay
+        // ns/record), with `recovered_bit_identical` asserted in-run.
         // v7: added the `sharding` object — the multi-shard scaling curve
         // (QPS/p50/p99 vs shard count) through the fence-partitioned
         // scatter-gather engine, answers asserted bit-identical across
@@ -369,7 +476,7 @@ fn main() {
         // come from the obs histogram — ≤6.25% bucket error). v5: added
         // the `admission` and `faults` objects. v4: added the `quantized`
         // object (int8 first-pass tier next to its f32 twin).
-        ("schema_version", Json::from("stars-bench-serve/v7")),
+        ("schema_version", Json::from("stars-bench-serve/v8")),
         (
             "data_status",
             Json::from("measured by `cargo bench --bench servebench` on this host"),
@@ -442,6 +549,20 @@ fn main() {
                     "latency_p99_ms",
                     Json::Arr(s_p99.iter().map(|&v| Json::from(v)).collect()),
                 ),
+            ]),
+        ),
+        (
+            "durability",
+            Json::obj(vec![
+                ("wal_records", Json::from(DUR_INSERTS)),
+                ("wal_append_ns", Json::from(wal_append_ns)),
+                ("wal_fsync_always_ns", Json::from(wal_fsync_always_ns)),
+                ("seal_limit", Json::from(SEAL_LIMIT)),
+                ("seal_us", Json::from(seal_us)),
+                ("snapshot_bytes", Json::from(snapshot_bytes as usize)),
+                ("cold_start_ms", Json::from(cold_start_ms)),
+                ("replay_ns_per_record", Json::from(replay_ns_per_record)),
+                ("recovered_bit_identical", Json::from(recovered_ok)),
             ]),
         ),
         ("admission", adm.to_json()),

@@ -166,6 +166,23 @@ pub struct ServeOpts {
     /// `admission.tenant_sheds` shows the cap engaging without starving
     /// other tenants.
     pub tenants: Option<String>,
+    /// Durable serving state directory ([`crate::serve::DurableStore`]):
+    /// inserts are WAL'd before they are applied, compactions checkpoint a
+    /// crash-consistent snapshot, and a restart cold-starts from the newest
+    /// valid snapshot plus WAL-suffix replay instead of rebuilding.
+    /// `None` = in-memory serving (the previous behavior, byte-identical
+    /// JSON).
+    pub state_dir: Option<std::path::PathBuf>,
+    /// WAL fsync policy spec for `state_dir`: `always`, `os`, or
+    /// `every:N` ([`crate::serve::FsyncPolicy::parse`]). Ignored without a
+    /// state dir.
+    pub fsync: String,
+    /// Seal the active delta tail into an immutable, pre-sketched
+    /// [`crate::serve::SealedSegment`] every N inserts
+    /// ([`crate::serve::ServeConfig::seal_limit`]; 0 = never seal).
+    /// Sealed serving is bit-identical to the brute-forced tail, so this
+    /// only moves per-query work, never answers.
+    pub seal_limit: usize,
 }
 
 impl Default for ServeOpts {
@@ -185,6 +202,9 @@ impl Default for ServeOpts {
             metrics_every_s: 1.0,
             shards: 1,
             tenants: None,
+            state_dir: None,
+            fsync: "os".to_string(),
+            seal_limit: 0,
         }
     }
 }
@@ -228,6 +248,13 @@ impl<'f> AnyEngine<'f> {
         match self {
             AnyEngine::Single(e) => e.snapshot(),
             AnyEngine::Sharded(e) => e.snapshot(),
+        }
+    }
+
+    fn next_gid(&self) -> u32 {
+        match self {
+            AnyEngine::Single(e) => e.next_gid(),
+            AnyEngine::Sharded(e) => e.next_gid(),
         }
     }
 }
@@ -343,35 +370,94 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         .route_reps(job.params.sketches.clamp(1, 8))
         .compact_limit(0)
         .compaction(opts.compaction)
-        .full_rebuild_every(opts.full_rebuild_every);
+        .full_rebuild_every(opts.full_rebuild_every)
+        .seal_limit(opts.seal_limit);
     if opts.quantized {
         cfg = cfg.quantized(opts.rescore_factor);
     }
+    if opts.shards >= 2 {
+        // build_sharded forces max_candidates to 0 (shard invariance needs
+        // the uncapped candidate walk); a snapshot recovered from disk must
+        // carry the same config to pass the sharded engine's assert and
+        // answer bit-identically.
+        cfg = cfg.max_candidates(0);
+    }
     let t = Instant::now();
-    let builder = StarsBuilder::new(&dataset)
-        .similarity(measure.as_ref())
-        .hash(family.as_ref())
-        .params(job.params.clone())
-        .workers(workers);
-    let (out, engine) = if opts.shards >= 2 {
-        // Fence-partitioned serving: build_sharded forces max_candidates
-        // to 0 (shard invariance needs the uncapped candidate walk) and
-        // the scatter-gather engine answers bit-identically to the
-        // single-shard path under that config.
-        let (out, sindex) = builder.build_sharded(opts.shards, cfg);
-        let eng = crate::serve::ShardedEngine::new(
-            sindex,
-            family.as_ref(),
-            smeasure,
-            job.params.clone(),
-        )
-        .workers(workers);
-        (out, AnyEngine::Sharded(eng))
+    // Durable serving: open the state dir and try to recover before paying
+    // for a build. `Ok(None)` means a fresh dir — build, then checkpoint.
+    let policy = crate::serve::FsyncPolicy::parse(&opts.fsync)
+        .map_err(|e| anyhow::anyhow!("bad --fsync spec: {e}"))?;
+    let mut store = match opts.state_dir.as_deref() {
+        Some(d) => Some(crate::serve::DurableStore::open(d, policy)?),
+        None => None,
+    };
+    let recovered = match store.as_mut() {
+        Some(s) => s.recover(family.as_ref(), cfg.clone(), workers)?,
+        None => None,
+    };
+    let replayed = recovered.as_ref().map(|r| r.replay.len());
+    let (edges, faults_json, engine) = if let Some(rec) = recovered {
+        // Restart without rebuild: wrap the recovered index in the same
+        // engine the build path would have produced, then replay the WAL
+        // suffix through the normal insert path. Gid order is the store's
+        // gapless-suffix contract; the assert turns a violation into a
+        // diagnosis instead of a silently divergent index.
+        let engine = if opts.shards >= 2 {
+            let sindex = crate::serve::ShardedIndex::new(rec.index, opts.shards);
+            AnyEngine::Sharded(
+                crate::serve::ShardedEngine::new(
+                    sindex,
+                    family.as_ref(),
+                    smeasure,
+                    job.params.clone(),
+                )
+                .workers(workers),
+            )
+        } else {
+            AnyEngine::Single(
+                QueryEngine::new(rec.index, family.as_ref(), smeasure, job.params.clone())
+                    .workers(workers),
+            )
+        };
+        for r in &rec.replay {
+            assert_eq!(r.gid, engine.next_gid(), "WAL replay out of gid order");
+            engine.insert(r.row.as_deref(), r.set.clone());
+        }
+        // No build ran: edges come from the recovered snapshot and the
+        // build-side fault counters are structurally zero.
+        let edges = engine.snapshot().stats().edges;
+        (edges, crate::ampc::FaultCounters::default().to_json(), engine)
     } else {
-        let (out, index) = builder.build_indexed(cfg);
-        let eng = QueryEngine::new(index, family.as_ref(), smeasure, job.params.clone())
+        let builder = StarsBuilder::new(&dataset)
+            .similarity(measure.as_ref())
+            .hash(family.as_ref())
+            .params(job.params.clone())
             .workers(workers);
-        (out, AnyEngine::Single(eng))
+        let (out, engine) = if opts.shards >= 2 {
+            // Fence-partitioned serving: the scatter-gather engine answers
+            // bit-identically to the single-shard path under
+            // max_candidates = 0 (forced above).
+            let (out, sindex) = builder.build_sharded(opts.shards, cfg);
+            let eng = crate::serve::ShardedEngine::new(
+                sindex,
+                family.as_ref(),
+                smeasure,
+                job.params.clone(),
+            )
+            .workers(workers);
+            (out, AnyEngine::Sharded(eng))
+        } else {
+            let (out, index) = builder.build_indexed(cfg);
+            let eng = QueryEngine::new(index, family.as_ref(), smeasure, job.params.clone())
+                .workers(workers);
+            (out, AnyEngine::Single(eng))
+        };
+        // First checkpoint: publish the freshly built snapshot so a crash
+        // at any later point recovers without rebuilding.
+        if let Some(s) = store.as_mut() {
+            s.checkpoint(&engine.snapshot())?;
+        }
+        (out.graph.num_edges(), out.report.faults.to_json(), engine)
     };
     let build_s = t.elapsed().as_secs_f64();
 
@@ -407,7 +493,7 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     };
     let mut doc = vec![
         ("job", job.to_json()),
-        ("edges", Json::from(out.graph.num_edges())),
+        ("edges", Json::from(edges)),
         ("router_entries", Json::from(engine.snapshot().router().num_entries())),
         (
             "simd_backend",
@@ -436,23 +522,65 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
     // Write path: stream inserts in and compact with the configured mode,
     // reporting the compaction's cost alongside the read-path numbers.
     if opts.inserts > 0 && !dataset.is_empty() {
+        // A recovered engine has already replayed a prefix of this insert
+        // schedule (its gids sit past the build floor); resume at the
+        // position the sequencer high-water implies, so a restarted run
+        // feeds exactly the suffix an uncrashed run would have.
+        let start = (engine.next_gid() as usize)
+            .saturating_sub(dataset.len())
+            .min(opts.inserts);
+        // Crash injection for the kill-and-restart gate: with a STARS_FAULTS
+        // schedule active and a state dir, tear the WAL mid-append at the
+        // schedule midpoint and exit hard. WAL-before-apply means the torn
+        // record was never applied; recovery truncates it and the restarted
+        // process re-inserts it from the schedule.
+        let plan = crate::util::fault::FaultPlan::from_env();
         let t = Instant::now();
-        for i in 0..opts.inserts {
+        for i in start..opts.inserts {
             let src = i % dataset.len();
             let row = (dataset.dim() > 0).then(|| dataset.row(src));
             let set = (!dataset.sets.is_empty()).then(|| dataset.set(src).clone());
+            if let Some(s) = store.as_mut() {
+                let gid = engine.next_gid();
+                if plan.is_active()
+                    && i == opts.inserts / 2
+                    && matches!(
+                        plan.decide(0, i as u64, 0),
+                        crate::util::fault::Fault::Crash
+                    )
+                {
+                    let kept = s.log_torn(gid, row, set.as_ref(), 7)?;
+                    eprintln!(
+                        "stars: injected crash mid-WAL-append (gid {gid}, {kept} torn bytes)"
+                    );
+                    std::process::exit(3);
+                }
+                s.log_insert(gid, row, set.as_ref())?;
+            }
             engine.insert(row, set);
         }
+        if let Some(s) = store.as_mut() {
+            // Leave the WAL durable past the timed region even under the
+            // `Os`/`EveryN` policies.
+            s.sync()?;
+        }
         let insert_s = t.elapsed().as_secs_f64();
-        doc.push(("inserts", Json::from(opts.inserts)));
+        let done = opts.inserts - start;
+        doc.push(("inserts", Json::from(done)));
         doc.push((
             "insert_per_s",
-            Json::from(opts.inserts as f64 / insert_s.max(1e-12)),
+            Json::from(done as f64 / insert_s.max(1e-12)),
         ));
         if let Some(rep) = engine.compact_report() {
             // The report carries the engine's running full/incremental mix
             // (the `full_rebuild_every` policy's observable).
             doc.push(("compaction", rep.to_json()));
+        }
+        // Post-compaction checkpoint: the absorbed delta moves from
+        // WAL-replay territory into a published snapshot, so the next
+        // restart replays only what arrived after this point.
+        if let Some(s) = store.as_mut() {
+            s.checkpoint(&engine.snapshot())?;
         }
     }
     // Admission-controlled front door: replay the query sweep through the
@@ -493,9 +621,42 @@ pub fn run_serve_with(job: &Job, opts: &ServeOpts) -> crate::Result<Json> {
         }
         doc.push(("admission", door.stats().to_json()));
     }
+    // Deterministic digest of a final query sweep over the settled index
+    // (after inserts and compaction) — the kill-and-restart gate's
+    // comparand. The strict total order on (score desc, id asc) makes this
+    // identical across worker counts, seal timing, and crash/recovery at a
+    // fixed config; any divergence is a durability bug.
+    let fin = engine.query(&qset, k);
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for (qi, row) in fin.iter().enumerate() {
+        digest = crate::util::fxhash::combine(digest, qi as u64);
+        for &(id, score) in row {
+            digest = crate::util::fxhash::combine(digest, id as u64);
+            digest = crate::util::fxhash::combine(digest, u64::from(score.to_bits()));
+        }
+    }
+    doc.push(("results_digest", Json::from(format!("{digest:016x}"))));
     // Build-side fault/recovery counters (nonzero only when a STARS_FAULTS
-    // schedule or a pinned plan injected faults into the build).
-    doc.push(("faults", out.report.faults.to_json()));
+    // schedule or a pinned plan injected faults into the build; structurally
+    // zero after a recovery, which runs no build).
+    doc.push(("faults", faults_json));
+    // Durability telemetry: present exactly when serving with --state-dir.
+    // `cold_start_ms` is the build wall on a fresh dir and the
+    // recover-plus-replay wall on a restart — the restart-without-rebuild
+    // win reads straight off this pair.
+    if let Some(s) = store.as_ref() {
+        doc.push((
+            "durable",
+            Json::obj(vec![
+                ("state_dir", Json::from(s.dir().display().to_string())),
+                ("fsync", Json::from(opts.fsync.clone())),
+                ("recovered", Json::from(replayed.is_some())),
+                ("replayed", Json::from(replayed.unwrap_or(0))),
+                ("cold_start_ms", Json::from(build_s * 1e3)),
+                ("seal_limit", Json::from(opts.seal_limit)),
+            ]),
+        ));
+    }
     // Final snapshot telemetry (router/CSR/state-table memory), tracked
     // like build costs (ROADMAP "Router memory telemetry").
     doc.push(("snapshot", engine.snapshot().stats().to_json()));
@@ -769,6 +930,76 @@ mod tests {
         .unwrap();
         assert_eq!(plain.get("shards").unwrap().as_usize().unwrap(), 1);
         assert!(plain.get("shard_snapshots").is_none());
+    }
+
+    #[test]
+    fn run_serve_durable_restart_is_bit_identical_without_rebuild() {
+        for quantized in [false, true] {
+            let dir = std::env::temp_dir().join(format!(
+                "stars-driver-durable-{}-{}",
+                std::process::id(),
+                quantized
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let job = Job {
+                dataset: DatasetSpec::Random {
+                    n: 400,
+                    dim: 16,
+                    modes: 8,
+                },
+                measure: MeasureSpec::Cosine,
+                family: FamilySpec::SimHash { bits: 8 },
+                params: BuildParams::threshold_mode(crate::stars::Algorithm::LshStars)
+                    .sketches(6)
+                    .threshold(0.4),
+                data_seed: 11,
+                workers: 2,
+            };
+            let opts = ServeOpts {
+                queries: 20,
+                k: 5,
+                inserts: 16,
+                quantized,
+                seal_limit: 5,
+                state_dir: Some(dir.clone()),
+                fsync: "every:4".into(),
+                ..ServeOpts::default()
+            };
+            let a = run_serve_with(&job, &opts).unwrap();
+            let da = a.get("durable").expect("durable telemetry missing");
+            assert!(!da.get("recovered").unwrap().as_bool().unwrap());
+            assert_eq!(da.get("seal_limit").unwrap().as_usize().unwrap(), 5);
+            assert_eq!(a.get("inserts").unwrap().as_usize().unwrap(), 16);
+            let b = run_serve_with(&job, &opts).unwrap();
+            let db = b.get("durable").expect("durable telemetry missing");
+            assert!(db.get("recovered").unwrap().as_bool().unwrap());
+            // The post-compaction checkpoint absorbed the whole insert
+            // schedule: the restart replays nothing and re-inserts nothing.
+            assert_eq!(db.get("replayed").unwrap().as_usize().unwrap(), 0);
+            assert_eq!(b.get("inserts").unwrap().as_usize().unwrap(), 0);
+            assert_eq!(
+                a.get("results_digest").unwrap().as_str().unwrap(),
+                b.get("results_digest").unwrap().as_str().unwrap(),
+                "quantized={quantized}: recovered serving diverged from the build"
+            );
+            // Recovery runs no build, so its fault counters are all zero.
+            let fb = b.get("faults").unwrap();
+            assert_eq!(fb.get("task_retries").unwrap().as_usize().unwrap(), 0);
+            // The in-memory path reports no durable object but still
+            // carries the digest (the gate's comparand).
+            let plain = run_serve_with(
+                &job,
+                &ServeOpts {
+                    queries: 5,
+                    k: 5,
+                    ..ServeOpts::default()
+                },
+            )
+            .unwrap();
+            assert!(plain.get("durable").is_none());
+            assert!(plain.get("results_digest").is_some());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
     }
 
     #[test]

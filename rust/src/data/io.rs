@@ -21,10 +21,27 @@ const MAGIC: &[u8; 4] = b"SDS1";
 /// multi-gigabyte "name" fails fast instead of allocating it.
 const MAX_NAME_LEN: usize = 4096;
 
-/// Write a dataset to `path`.
+/// Write a dataset to `path` atomically: bytes go to a `.tmp` sibling
+/// which is fsynced and renamed over the target (the same publish idiom as
+/// `obs::write_snapshot` and the serve-snapshot store), so a crash or
+/// write failure mid-save can never leave a torn file at `path` — the
+/// target is either the complete old content, the complete new content, or
+/// absent.
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
+    let tmp = path.with_extension("tmp");
+    let result = write_to(ds, &tmp).and_then(|()| {
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing {} over {}", tmp.display(), path.display()))
+    });
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+fn write_to(ds: &Dataset, tmp: &Path) -> Result<()> {
+    let file =
+        std::fs::File::create(tmp).with_context(|| format!("creating {}", tmp.display()))?;
     let mut w = BufWriter::new(file);
     w.write_all(MAGIC)?;
     w.write_all(&(ds.len() as u64).to_le_bytes())?;
@@ -52,7 +69,12 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
             }
         }
     }
-    w.flush()?;
+    w.flush()
+        .with_context(|| format!("flushing {}", tmp.display()))?;
+    w.into_inner()
+        .map_err(|e| anyhow::anyhow!("{}: flushing buffered writer: {}", tmp.display(), e.error()))?
+        .sync_all()
+        .with_context(|| format!("fsyncing {}", tmp.display()))?;
     Ok(())
 }
 
@@ -244,6 +266,37 @@ mod tests {
         assert_eq!(ds.dense, back.dense);
         assert_eq!(ds.sets, back.sets);
         assert_eq!(back.kind(), crate::data::FeatureKind::Hybrid);
+    }
+
+    #[test]
+    fn failed_save_leaves_target_absent_or_valid() {
+        // Atomic-publish contract: after an injected write failure the
+        // target path holds either the complete previous content or nothing
+        // — never a torn file.
+        let old = synth::gaussian_mixture(30, 4, 2, 0.1, 5);
+        let new = synth::gaussian_mixture(60, 4, 2, 0.1, 6);
+        let p = tmp("atomic");
+        save(&old, &p).unwrap();
+
+        // Inject: the .tmp sibling is unwritable (it is a directory), so
+        // the save fails before the rename — the old target must survive
+        // bit-for-bit.
+        let tmp_path = p.with_extension("tmp");
+        std::fs::create_dir(&tmp_path).unwrap();
+        assert!(save(&new, &p).is_err());
+        std::fs::remove_dir(&tmp_path).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), old.len(), "failed save clobbered the target");
+        assert_eq!(back.dense, old.dense);
+        std::fs::remove_file(&p).ok();
+
+        // Inject: the parent directory does not exist, so the save fails
+        // with no prior target — the target must stay absent (no torn
+        // partial file, no leaked .tmp).
+        let missing = tmp("no_such_dir").join("ds.bin");
+        assert!(save(&new, &missing).is_err());
+        assert!(!missing.exists());
+        assert!(!missing.with_extension("tmp").exists());
     }
 
     #[test]

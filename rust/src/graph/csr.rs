@@ -75,6 +75,40 @@ impl Csr {
         }
     }
 
+    /// Reassemble from flat arrays (snapshot persistence). The caller must
+    /// hand back exactly what [`Csr::offset_slice`] / [`Csr::neighbor_slice`]
+    /// / [`Csr::weight_slice`] exported; shape invariants are re-checked so a
+    /// corrupted file cannot produce an index-out-of-bounds panic later.
+    pub(crate) fn from_raw_parts(offsets: Vec<usize>, neighbors: Vec<u32>, weights: Vec<f32>) -> Csr {
+        assert!(!offsets.is_empty(), "CSR offsets must have n+1 entries");
+        assert_eq!(neighbors.len(), weights.len(), "CSR neighbor/weight length mismatch");
+        assert_eq!(*offsets.last().unwrap(), neighbors.len(), "CSR final offset != edge count");
+        assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "CSR offsets must be non-decreasing");
+        let n = (offsets.len() - 1) as u32;
+        assert!(neighbors.iter().all(|&v| v < n), "CSR neighbor id out of range");
+        Csr {
+            offsets,
+            neighbors,
+            weights,
+        }
+    }
+
+    /// Flat per-node offsets (`n + 1` entries) — snapshot persistence.
+    pub(crate) fn offset_slice(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// Flat neighbor ids, grouped per node — snapshot persistence.
+    pub(crate) fn neighbor_slice(&self) -> &[u32] {
+        &self.neighbors
+    }
+
+    /// Flat edge weights, parallel to the neighbor ids — snapshot
+    /// persistence.
+    pub(crate) fn weight_slice(&self) -> &[f32] {
+        &self.weights
+    }
+
     /// Number of nodes.
     pub fn num_nodes(&self) -> usize {
         self.offsets.len() - 1
@@ -184,6 +218,29 @@ mod tests {
             csr.neighbors(1).any(|(v, _)| v == 0),
             "edge kept by the low-degree endpoint was dropped"
         );
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_preserves_adjacency() {
+        let csr = Csr::new(&path_graph());
+        let back = Csr::from_raw_parts(
+            csr.offset_slice().to_vec(),
+            csr.neighbor_slice().to_vec(),
+            csr.weight_slice().to_vec(),
+        );
+        assert_eq!(back.num_nodes(), csr.num_nodes());
+        assert_eq!(back.num_edges(), csr.num_edges());
+        for u in 0..csr.num_nodes() as u32 {
+            let a: Vec<(u32, f32)> = csr.neighbors(u).collect();
+            let b: Vec<(u32, f32)> = back.neighbors(u).collect();
+            assert_eq!(a, b, "node {u}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "CSR final offset")]
+    fn raw_parts_rejects_inconsistent_shapes() {
+        Csr::from_raw_parts(vec![0, 2], vec![1], vec![0.5]);
     }
 
     #[test]

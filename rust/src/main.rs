@@ -55,6 +55,7 @@ USAGE:
                  [--quantized] [--rescore-c F]
                  [--queue-limit N] [--deadline-ms MS] [--overload]
                  [--shards N] [--tenants QPS[:BURST]]
+                 [--state-dir DIR] [--fsync always|os|every:N] [--seal-limit N]
                  [--metrics-out FILE] [--metrics-every S]
                  build a graph, export a serving snapshot, and answer N
                  sampled top-k queries (reports QPS, p50/p99, recall@k);
@@ -75,6 +76,16 @@ USAGE:
                  report adds per-shard snapshot slices; --tenants applies a
                  per-tenant QPS token bucket at the front door (requires
                  --queue-limit; tenant_sheds appears in the admission stats);
+                 --state-dir makes the write path durable: every insert is
+                 WAL'd (length+CRC framing, --fsync policy, default os)
+                 before it is applied, compactions publish crash-consistent
+                 snapshots (atomic tmp+rename), and a rerun over the same
+                 dir cold-starts from the newest valid snapshot plus
+                 WAL-suffix replay — bit-identical answers, no rebuild
+                 (the report's \"durable\" object carries recovered/replayed
+                 /cold_start_ms); --seal-limit N seals the delta tail into
+                 immutable pre-sketched segments every N inserts (0 = off;
+                 answers are bit-identical either way);
                  --metrics-out atomically rewrites a Prometheus-text
                  snapshot of the serve metrics every --metrics-every seconds
                  (default 1) while the sweep runs
@@ -86,8 +97,9 @@ USAGE:
                  STARS_TRACE output)
   stars bench-check <files...>   validate BENCH_*.json files: each must
                  parse and carry schema_version, data_status, and
-                 simd_backend keys; serve v7 files must also carry a
-                 well-formed \"sharding\" scaling object (CI gate)
+                 simd_backend keys; serve v7+ files must also carry a
+                 well-formed \"sharding\" scaling object, and serve v8 a
+                 \"durability\" probe object (CI gate)
 
 ENVIRONMENT:
   STARS_SIMD    force a SIMD backend (scalar|sse2|avx2|neon)
@@ -226,6 +238,9 @@ fn serve(args: &mut Args) -> stars::Result<()> {
         metrics_every_s: args.get_parsed_or("metrics-every", 1.0f64),
         shards: args.get_parsed_or("shards", 1usize),
         tenants: args.get("tenants").map(String::from),
+        state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+        fsync: args.get_or("fsync", "os").to_string(),
+        seal_limit: args.get_parsed_or("seal-limit", 0usize),
     };
     let doc = stars::coordinator::run_serve_with(&job, &opts)?;
     println!("{}", doc.to_pretty());
@@ -324,9 +339,10 @@ fn bench_check(args: &mut Args) -> stars::Result<()> {
             sv.is_some_and(|s| !s.is_empty()),
             "{file}: schema_version must be a non-empty string"
         );
-        // Serve v7 adds the multi-shard scaling curve: a "sharding" object
-        // of four equal-length, non-empty arrays keyed by shard count.
-        if sv == Some("stars-bench-serve/v7") {
+        // Serve v7+ carries the multi-shard scaling curve: a "sharding"
+        // object of four equal-length, non-empty arrays keyed by shard
+        // count.
+        if sv == Some("stars-bench-serve/v7") || sv == Some("stars-bench-serve/v8") {
             let sharding = doc
                 .get("sharding")
                 .ok_or_else(|| anyhow::anyhow!("{file}: serve v7 requires a \"sharding\" object"))?;
@@ -344,6 +360,32 @@ fn bench_check(args: &mut Args) -> stars::Result<()> {
             anyhow::ensure!(
                 lens.windows(2).all(|w| w[0] == w[1]),
                 "{file}: sharding arrays must have equal lengths (got {lens:?})"
+            );
+        }
+        // Serve v8 adds the durability probe: WAL append/fsync cost, seal
+        // cost, snapshot size, and the restart-without-rebuild numbers.
+        if sv == Some("stars-bench-serve/v8") {
+            let dur = doc.get("durability").ok_or_else(|| {
+                anyhow::anyhow!("{file}: serve v8 requires a \"durability\" object")
+            })?;
+            for key in [
+                "wal_append_ns",
+                "wal_fsync_always_ns",
+                "seal_us",
+                "snapshot_bytes",
+                "cold_start_ms",
+                "replay_ns_per_record",
+            ] {
+                anyhow::ensure!(
+                    dur.get(key).and_then(|v| v.as_f64()).is_some_and(|v| v >= 0.0),
+                    "{file}: durability.{key} must be a non-negative number"
+                );
+            }
+            anyhow::ensure!(
+                dur.get("recovered_bit_identical")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                "{file}: durability.recovered_bit_identical must be true"
             );
         }
         println!("{file}: schema {} OK", sv.unwrap_or("?"));

@@ -66,6 +66,16 @@ impl DeltaBuffer {
         self.base
     }
 
+    /// The sequencer high-water mark: the global id the *next* insert will
+    /// receive. Strictly monotone over the buffer's lifetime — inserts
+    /// advance it by one, [`Self::absorb_prefix`] and [`Self::seal_take`]
+    /// preserve it exactly (asserted) — which is what lets WAL replay use
+    /// `gid < next_gid()` as its already-applied test without ever
+    /// double-applying a record.
+    pub fn next_gid(&self) -> u32 {
+        (self.base + self.ds.len()) as u32
+    }
+
     /// The buffered points as a dataset (brute-force scoring tile).
     pub fn dataset(&self) -> &Dataset {
         &self.ds
@@ -110,7 +120,11 @@ impl DeltaBuffer {
     /// keep their global ids: the new snapshot ends exactly where the
     /// surviving tail begins.
     pub fn absorb_prefix(&mut self, prefix: usize) {
-        debug_assert!(prefix <= self.ds.len());
+        assert!(
+            prefix <= self.ds.len(),
+            "absorb_prefix past the buffer end would rewind the sequencer"
+        );
+        let high = self.next_gid();
         let tail: Vec<u32> = (prefix as u32..self.ds.len() as u32).collect();
         self.ds = self.ds.subset(&tail);
         // Requantizing the surviving tail is O(|tail| · d) — bounded by
@@ -120,6 +134,40 @@ impl DeltaBuffer {
             self.quant = Some(QuantDataset::from_dataset(&self.ds));
         }
         self.base += prefix;
+        assert_eq!(
+            self.next_gid(),
+            high,
+            "absorb_prefix must preserve the sequencer high-water"
+        );
+    }
+
+    /// Take every buffered point out as a `(dataset, quant)` pair and leave
+    /// the buffer empty with `base` advanced past them — the seal step of
+    /// the LSM write path ([`crate::serve::durable::SealedSegment`]). Like
+    /// [`Self::absorb_prefix`], the sequencer high-water is preserved
+    /// exactly: the sealed rows keep their global ids (segment-local row
+    /// `i` is global `old_base + i`) and the next insert continues the
+    /// sequence.
+    pub fn seal_take(&mut self) -> (Dataset, Option<QuantDataset>) {
+        let high = self.next_gid();
+        let n = self.ds.len();
+        let fresh = if self.ds.dim() > 0 {
+            Dataset::from_dense("delta", self.ds.dim(), Vec::new(), vec![])
+        } else {
+            Dataset::from_sets("delta", Vec::new(), vec![])
+        };
+        let ds = std::mem::replace(&mut self.ds, fresh);
+        let quant = self
+            .quant
+            .as_mut()
+            .map(|q| std::mem::replace(q, QuantDataset::empty(ds.dim())));
+        self.base += n;
+        assert_eq!(
+            self.next_gid(),
+            high,
+            "seal_take must preserve the sequencer high-water"
+        );
+        (ds, quant)
     }
 }
 
@@ -277,6 +325,57 @@ mod tests {
         d.insert(Some(&[2.0, -2.0, 1.0]), None);
         assert_eq!(d.quant().unwrap().len(), 4);
         assert_eq!(d.quant().unwrap().codes(3), &[127, -127, 64]);
+    }
+
+    #[test]
+    fn replay_after_partial_absorb_cannot_double_apply() {
+        // WAL replay's already-applied test is `gid < next_gid()`. A
+        // partial absorb moves points out of the buffer but must keep the
+        // high-water fixed, so a replayed record for an absorbed gid is
+        // still recognized as applied — the regression this guards is
+        // `base` advancing by less than the absorbed prefix, which would
+        // rewind next_gid() and let replay re-insert gids 50..52 as fresh
+        // points under wrong ids.
+        let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 50);
+        for i in 0..4 {
+            assert_eq!(d.insert(Some(&[i as f32, 1.0]), None), 50 + i);
+        }
+        assert_eq!(d.next_gid(), 54);
+        d.absorb_prefix(2);
+        assert_eq!(d.next_gid(), 54, "high-water must survive a partial absorb");
+        // Replay of the WAL from gid 50: the first four records are all
+        // below the high-water (already applied — two absorbed, two in the
+        // tail); only gid 54 onward applies.
+        for gid in 50..54u32 {
+            assert!(gid < d.next_gid(), "gid {gid} would double-apply");
+        }
+        assert_eq!(d.insert(Some(&[9.0, 9.0]), None), 54);
+    }
+
+    #[test]
+    fn seal_take_empties_the_buffer_and_keeps_the_sequencer() {
+        let template = Dataset::from_dense("t", 2, vec![1.0, 0.0], vec![]);
+        let mut d = DeltaBuffer::new(&template, 10);
+        d.insert(Some(&[3.0, -4.0]), None);
+        d.insert(Some(&[0.5, 0.5]), None);
+        let (ds, quant) = d.seal_take();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(0), &[3.0, -4.0]);
+        assert_eq!(quant.as_ref().unwrap().len(), 2);
+        assert_eq!(quant.unwrap().codes(0), &[95, -127]);
+        assert!(d.is_empty());
+        assert_eq!(d.base(), 12);
+        assert_eq!(d.next_gid(), 12);
+        // Sealed rows keep their ids; the next insert continues after them.
+        assert_eq!(d.insert(Some(&[1.0, 1.0]), None), 12);
+        // Set-only buffers seal without a quant table.
+        let sets = Dataset::from_sets("t", vec![WeightedSet::from_tokens(vec![1])], vec![]);
+        let mut sd = DeltaBuffer::new(&sets, 0);
+        sd.insert(None, Some(WeightedSet::from_tokens(vec![4])));
+        let (sds, squant) = sd.seal_take();
+        assert_eq!(sds.len(), 1);
+        assert!(squant.is_none());
     }
 
     #[test]

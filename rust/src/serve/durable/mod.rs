@@ -1,0 +1,44 @@
+//! `stars::serve::durable` — the durable serve layer: WAL'd write path,
+//! sealed immutable delta segments, crash-consistent snapshot persistence
+//! (ROADMAP "Tiered LSM-style write path + snapshot persistence").
+//!
+//! Three pieces, one recovery contract:
+//!
+//! * [`wal`] — per-insert write-ahead logging with length + CRC-32
+//!   framing, an `Always | EveryN | Os` fsync policy, and torn-tail
+//!   detection that truncates at the last valid record. The reader
+//!   returns a strict prefix of what was appended, or errors — never a
+//!   panic, never altered data.
+//! * [`segment`] — when the active delta tail hits
+//!   `ServeConfig::seal_limit`, its rows are sketched once through the
+//!   snapshot's cached `SketchState`s into an immutable
+//!   [`SealedSegment`] that queries route into. Complete candidate
+//!   coverage keeps sealed serving bit-identical to the brute-forced
+//!   `DeltaBuffer` path, so seal timing never changes an answer.
+//! * [`store`] — `snapshot-{N}.sss` section files (versioned header,
+//!   per-section CRCs, atomic tmp + rename publish) covering dataset +
+//!   CSR + router tables + quant codes + sequencer high-water, plus the
+//!   checkpoint/rotate/recover protocol over `wal-{B}.log` segments.
+//!
+//! **Recovery contract** (gated by `tests/durability.rs` and the
+//! `scripts/ci.sh` kill-and-restart gate): after a crash at *any* WAL
+//! record boundary, inside a torn WAL append, or at any snapshot-publish
+//! boundary, `stars serve --state-dir D` cold-starts from the newest
+//! valid snapshot plus WAL-suffix replay and answers every query top-k
+//! **bit-identical** to a process that never crashed — for the exact and
+//! quantized tiers, any worker count, and the sharded engine.
+//! Conditions: the same serving configuration and feature flags across
+//! restarts (states are re-derived from the family, so the family seed
+//! must match), and the single-writer discipline the serve loop already
+//! has (one insert sequencer; WAL append strictly before engine apply).
+
+pub mod segment;
+pub mod store;
+pub mod wal;
+
+pub use segment::SealedSegment;
+pub use store::{
+    load_snapshot, save_snapshot, snapshot_files, snapshot_path, wal_files, wal_path,
+    DurableStore, Recovered,
+};
+pub use wal::{crc32, read_wal, FsyncPolicy, WalRecord, WalWriter, MAX_RECORD};

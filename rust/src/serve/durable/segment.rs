@@ -1,0 +1,233 @@
+//! Sealed immutable delta segments — the middle tier of the LSM-shaped
+//! write path (WAL → active [`crate::serve::DeltaBuffer`] tail → sealed
+//! segments → snapshot compaction).
+//!
+//! When the active tail reaches `ServeConfig::seal_limit`, its rows are
+//! taken out whole ([`crate::serve::DeltaBuffer::seal_take`]) and sketched
+//! **once** through the snapshot's cached per-repetition `SketchState`s
+//! into per-rep bucket tables. Queries then *route into* a segment with
+//! the same bucket keys they route into the snapshot with, visiting the
+//! query's collision buckets first, instead of treating every sealed row
+//! as an unordered brute-force tile.
+//!
+//! **Exactness.** [`SealedSegment::candidates_into`] emits *complete*
+//! coverage: the probed buckets first, then every remaining row in
+//! ascending order, each row exactly once. Because the engine's top-k
+//! selection (`TopNeighbors`) imposes a strict total order on (score, id)
+//! that is independent of push order, scoring a permutation of the same
+//! candidate set yields bit-identical answers — so sealed-segment serving
+//! is exactly equivalent to the brute-forced `DeltaBuffer` path (gated in
+//! `tests/durability.rs`), and seal timing can never change an answer.
+//! The bucket structure's payoff today is the write path — the engine's
+//! per-query capture clones only the O(active-tail) buffer while sealed
+//! rows ride behind `Arc`s, and their sketch/quant work is paid once at
+//! seal time — and it is the landing zone for bounded-probe segment
+//! serving (stop after the collision buckets, a recall-vs-latency trade
+//! documented as future work in ARCHITECTURE.md).
+//!
+//! Segments are **never persisted**: recovery re-derives them by
+//! replaying the WAL suffix through the normal insert path, which may
+//! re-seal at different boundaries — harmless, because exactness makes
+//! answers independent of seal boundaries.
+
+use crate::data::types::Dataset;
+use crate::graph::two_hop::VisitScratch;
+use crate::lsh::{sketch, SketchState};
+use crate::sim::QuantDataset;
+use crate::util::fxhash::FxHashMap;
+use std::sync::Arc;
+
+/// An immutable, sketched batch of sealed delta rows. Row `i` of the
+/// segment is global point `base() + i`.
+pub struct SealedSegment {
+    ds: Dataset,
+    quant: Option<QuantDataset>,
+    base: usize,
+    /// Per routing repetition: bucket key → segment-local rows (ascending).
+    buckets: Vec<FxHashMap<u64, Vec<u32>>>,
+}
+
+impl SealedSegment {
+    /// Sketch `ds` (rows `base..base + ds.len()` of the global id space)
+    /// through the snapshot's cached per-repetition `states` into a sealed
+    /// segment. `quant`, when present, is the rows' SQ8 table in lockstep
+    /// with `ds` (handed over from the delta buffer's own table).
+    pub fn seal<'f>(
+        states: &[Arc<dyn SketchState + 'f>],
+        ds: Dataset,
+        quant: Option<QuantDataset>,
+        base: usize,
+        workers: usize,
+    ) -> SealedSegment {
+        if let Some(q) = &quant {
+            assert_eq!(q.len(), ds.len(), "seal quant table out of lockstep");
+        }
+        let n = ds.len();
+        let buckets = states
+            .iter()
+            .map(|state| {
+                let keys = sketch::state_keys_range_par(state.as_ref(), &ds, 0, n, workers);
+                let mut table: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
+                for (i, &k) in keys.iter().enumerate() {
+                    table.entry(k).or_default().push(i as u32);
+                }
+                table
+            })
+            .collect();
+        SealedSegment {
+            ds,
+            quant,
+            base,
+            buckets,
+        }
+    }
+
+    /// Number of sealed rows.
+    pub fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    /// True when the segment holds no rows (never constructed by the
+    /// engine, which only seals non-empty tails).
+    pub fn is_empty(&self) -> bool {
+        self.ds.is_empty()
+    }
+
+    /// Global id of row 0.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// The sealed rows.
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    /// SQ8 codes of the sealed rows, row-for-row with [`Self::dataset`].
+    pub fn quant(&self) -> Option<&QuantDataset> {
+        self.quant.as_ref()
+    }
+
+    /// Routing repetitions the segment was sketched under.
+    pub fn reps(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Segment-local candidate rows for query `qi`, collision buckets
+    /// first: for each repetition `r`, the bucket at `keys[r * nq + qi]`
+    /// (the same rep-major key layout `StarIndex::query_keys` produces, so
+    /// a query routes into a segment with exactly the keys it routes into
+    /// the snapshot with), then every not-yet-visited row ascending.
+    /// Complete coverage — each of the segment's rows appears exactly once
+    /// — which is what makes sealed serving bit-identical to brute force
+    /// (module docs).
+    pub fn candidates_into(
+        &self,
+        keys: &[u64],
+        nq: usize,
+        qi: usize,
+        visit: &mut VisitScratch,
+        out: &mut Vec<u32>,
+    ) {
+        let n = self.ds.len();
+        visit.begin(n);
+        for (rep, table) in self.buckets.iter().enumerate() {
+            if let Some(members) = table.get(&keys[rep * nq + qi]) {
+                for &i in members {
+                    if visit.mark(i) {
+                        out.push(i);
+                    }
+                }
+            }
+        }
+        for i in 0..n as u32 {
+            if visit.mark(i) {
+                out.push(i);
+            }
+        }
+    }
+
+    /// Heap bytes of the sealed rows, quant table and bucket tables
+    /// (serving memory telemetry).
+    pub fn heap_bytes(&self) -> usize {
+        self.ds.dense.len() * 4
+            + self.ds.norms.len() * 4
+            + self
+                .ds
+                .sets
+                .iter()
+                .map(|s| s.tokens.len() * 4 + s.weights.len() * 4)
+                .sum::<usize>()
+            + self.quant.as_ref().map_or(0, |q| q.heap_bytes())
+            + self
+                .buckets
+                .iter()
+                .map(|t| t.len() * 24 + t.values().map(|v| v.len() * 4).sum::<usize>())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::lsh::{LshFamily, SimHash};
+
+    fn fixture() -> (Dataset, Vec<Arc<dyn SketchState + 'static>>) {
+        let ds = synth::gaussian_mixture(60, 8, 4, 0.15, 21);
+        // States normally borrow their family; the fixture leaks one per
+        // rep so the states are 'static without a self-referential struct.
+        let states: Vec<Arc<dyn SketchState>> = (0..3u64)
+            .map(|rep| {
+                let fam: &'static SimHash = Box::leak(Box::new(SimHash::new(8, 6, 99)));
+                Arc::from(fam.prepare(&ds, rep))
+            })
+            .collect();
+        (ds, states)
+    }
+
+    #[test]
+    fn seal_buckets_match_state_keys() {
+        let (ds, states) = fixture();
+        let quant = QuantDataset::from_dataset(&ds);
+        let seg = SealedSegment::seal(&states, ds.clone(), Some(quant), 500, 2);
+        assert_eq!(seg.len(), 60);
+        assert_eq!(seg.base(), 500);
+        assert_eq!(seg.reps(), 3);
+        // Every row lands in exactly the bucket its state key names.
+        for (rep, state) in states.iter().enumerate() {
+            let keys = sketch::state_keys_range_par(state.as_ref(), &ds, 0, 60, 1);
+            for (i, &k) in keys.iter().enumerate() {
+                assert!(
+                    seg.buckets[rep][&k].contains(&(i as u32)),
+                    "rep {rep} row {i} missing from its bucket"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_are_a_complete_permutation() {
+        let (ds, states) = fixture();
+        let seg = SealedSegment::seal(&states, ds.clone(), None, 0, 1);
+        // Query keys: sketch the first 5 rows as "queries" (rep-major).
+        let nq = 5;
+        let mut keys = vec![0u64; 3 * nq];
+        for (rep, state) in states.iter().enumerate() {
+            let qk = sketch::state_keys_range_par(state.as_ref(), &ds, 0, nq, 1);
+            keys[rep * nq..(rep + 1) * nq].copy_from_slice(&qk);
+        }
+        let mut visit = VisitScratch::new(0);
+        for qi in 0..nq {
+            let mut out = Vec::new();
+            seg.candidates_into(&keys, nq, qi, &mut visit, &mut out);
+            // Complete coverage, each row exactly once.
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..60u32).collect::<Vec<_>>(), "query {qi}");
+            // The query's own collision bucket (rep 0) leads the list.
+            let bucket = &seg.buckets[0][&keys[qi]];
+            assert_eq!(&out[..bucket.len()], &bucket[..], "query {qi} probe order");
+        }
+    }
+}

@@ -1,0 +1,797 @@
+//! Crash-consistent snapshot persistence + the `--state-dir` store.
+//!
+//! A state directory holds two kinds of files:
+//!
+//! * `snapshot-{N}.sss` — a full serving snapshot covering global points
+//!   `0..N` (`N` = the WAL-replay floor: every gid below it is inside the
+//!   file, every gid at or above it must come from WAL replay). Section
+//!   format in the `data/io.rs` tradition: versioned magic header, then
+//!   tagged sections each carrying its own length and CRC-32, published
+//!   atomically via tmp + rename (the `obs::write_snapshot` idiom) so a
+//!   crash mid-save can never leave a torn `.sss` behind.
+//! * `wal-{B}.log` — an append-only [`super::wal`] segment whose records
+//!   all have `gid ≥ B`. Rotated on every checkpoint and recovery;
+//!   records still pending (logged but not yet inside a snapshot) are
+//!   re-logged into the fresh file, so duplicates across files are
+//!   expected and replay's `gid < next` skip rule absorbs them.
+//!
+//! **Recovery** (`DurableStore::recover`): load the newest `.sss` that
+//! validates — falling back to older ones, since a crash can land between
+//! publishing a snapshot and pruning its predecessors — then replay every
+//! WAL file in base order: skip `gid < next`, apply `gid == next`, and
+//! treat `gid > next` as a hard "WAL gap" error (a missing file or
+//! misordered record must never silently misnumber the sequencer). The
+//! sketch states and sealed segments are **re-derived**, never persisted:
+//! states are pure functions of `(family, rep)` (the state-purity
+//! contract), and segment boundaries cannot change answers (see
+//! [`super::segment`]).
+//!
+//! What is persisted: dataset rows (+ labels/sets), the CSR adjacency,
+//! the router's raw tables (the *extended* layout incremental compaction
+//! left, which a fresh `Router::build` would not reproduce), the SQ8
+//! codes when the snapshot is quantized, and the sequencer high-water.
+
+use super::wal::{crc32, read_wal, FsyncPolicy, WalRecord, WalWriter};
+use crate::data::types::{Dataset, WeightedSet};
+use crate::lsh::LshFamily;
+use crate::serve::{ServeConfig, StarIndex};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: &[u8; 4] = b"SSS1";
+const VERSION: u32 = 1;
+
+/// Path of the snapshot covering points `0..floor` in `dir`.
+pub fn snapshot_path(dir: &Path, floor: u64) -> PathBuf {
+    dir.join(format!("snapshot-{floor}.sss"))
+}
+
+/// Path of the WAL segment with base `base` in `dir`.
+pub fn wal_path(dir: &Path, base: u64) -> PathBuf {
+    dir.join(format!("wal-{base}.log"))
+}
+
+fn parse_stem(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
+    name.strip_prefix(prefix)?.strip_suffix(suffix)?.parse().ok()
+}
+
+/// `(base, path)` of every file in `dir` matching `{prefix}{N}{suffix}`,
+/// ascending by `N`.
+fn numbered_files(dir: &Path, prefix: &str, suffix: &str) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing state dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing state dir {}", dir.display()))?;
+        if let Some(n) = entry.file_name().to_str().and_then(|s| parse_stem(s, prefix, suffix)) {
+            out.push((n, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|&(n, _)| n);
+    Ok(out)
+}
+
+/// Snapshot files in `dir`, ascending by replay floor.
+pub fn snapshot_files(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    numbered_files(dir, "snapshot-", ".sss")
+}
+
+/// WAL files in `dir`, ascending by base.
+pub fn wal_files(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    numbered_files(dir, "wal-", ".log")
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot serialization
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian section reader: every short read is an
+/// error naming the offset, never a panic (the corrupted-input fuzz in
+/// `tests/durability.rs` drives arbitrary bytes through this).
+struct Rd<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.at {
+            bail!(
+                "payload truncated ({n} bytes needed at offset {}, {} present)",
+                self.at,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Element count claimed by a header field, validated against the
+    /// bytes actually present before any allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem_bytes) {
+            Some(total) if total <= self.buf.len() - self.at => Ok(n),
+            _ => bail!(
+                "claimed {n} elements × {elem_bytes} bytes exceeds the {} remaining",
+                self.buf.len() - self.at
+            ),
+        }
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = n.checked_mul(4).context("element count overflows")?;
+        Ok(self
+            .take(bytes)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let bytes = n.checked_mul(8).context("element count overflows")?;
+        Ok(self
+            .take(bytes)?
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n.checked_mul(4).context("element count overflows")?;
+        Ok(self
+            .take(bytes)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i8s(&mut self, n: usize) -> Result<Vec<i8>> {
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+const FLAG_QUANT: u8 = 1;
+const FLAG_SETS: u8 = 2;
+const FLAG_LABELS: u8 = 4;
+
+fn meta_section(index: &StarIndex, floor: u64) -> Vec<u8> {
+    let ds = index.dataset();
+    let mut p = Vec::new();
+    push_u64(&mut p, ds.len() as u64);
+    push_u64(&mut p, ds.dim() as u64);
+    push_u64(&mut p, floor);
+    push_u32(&mut p, index.router().reps() as u32);
+    let flags = if index.quant().is_some() { FLAG_QUANT } else { 0 }
+        | if ds.sets.is_empty() { 0 } else { FLAG_SETS }
+        | if ds.labels.is_empty() { 0 } else { FLAG_LABELS };
+    p.push(flags);
+    p
+}
+
+fn dset_section(ds: &Dataset) -> Vec<u8> {
+    let mut p = Vec::new();
+    let name = ds.name.as_bytes();
+    push_u32(&mut p, name.len() as u32);
+    p.extend_from_slice(name);
+    for &x in &ds.dense {
+        push_f32(&mut p, x);
+    }
+    for &l in &ds.labels {
+        push_u32(&mut p, l);
+    }
+    for s in &ds.sets {
+        push_u32(&mut p, s.tokens.len() as u32);
+        for &t in &s.tokens {
+            push_u32(&mut p, t);
+        }
+        for &w in &s.weights {
+            push_f32(&mut p, w);
+        }
+    }
+    p
+}
+
+fn csrs_section(index: &StarIndex) -> Vec<u8> {
+    let csr = index.csr();
+    let mut p = Vec::new();
+    push_u64(&mut p, (csr.offset_slice().len() - 1) as u64);
+    for &o in csr.offset_slice() {
+        push_u64(&mut p, o as u64);
+    }
+    push_u64(&mut p, csr.neighbor_slice().len() as u64);
+    for &v in csr.neighbor_slice() {
+        push_u32(&mut p, v);
+    }
+    for &w in csr.weight_slice() {
+        push_f32(&mut p, w);
+    }
+    p
+}
+
+fn rout_section(index: &StarIndex) -> Vec<u8> {
+    let parts = index.router().export_parts();
+    let mut p = Vec::new();
+    push_u32(&mut p, parts.len() as u32);
+    for (triples, entries) in parts {
+        push_u64(&mut p, triples.len() as u64);
+        for (key, start, len) in triples {
+            push_u64(&mut p, key);
+            push_u32(&mut p, start);
+            push_u32(&mut p, len);
+        }
+        push_u64(&mut p, entries.len() as u64);
+        for e in entries {
+            push_u32(&mut p, e);
+        }
+    }
+    p
+}
+
+fn qunt_section(index: &StarIndex) -> Option<Vec<u8>> {
+    let q = index.quant()?;
+    let mut p = Vec::new();
+    push_u64(&mut p, q.dim() as u64);
+    push_u64(&mut p, q.len() as u64);
+    p.extend(q.code_slice().iter().map(|&c| c as u8));
+    for &s in q.scale_slice() {
+        push_f32(&mut p, s);
+    }
+    Some(p)
+}
+
+/// Serialize `index` (replay floor `floor`, asserted equal to its point
+/// count) to `path` atomically: sections go to a `.tmp` sibling, which is
+/// fsynced and renamed over the target.
+pub fn save_snapshot(index: &StarIndex, floor: u64, path: &Path) -> Result<()> {
+    assert_eq!(
+        floor,
+        index.len() as u64,
+        "snapshot replay floor must equal the snapshot's point count"
+    );
+    let mut sections: Vec<([u8; 4], Vec<u8>)> = vec![
+        (*b"META", meta_section(index, floor)),
+        (*b"DSET", dset_section(index.dataset())),
+        (*b"CSRS", csrs_section(index)),
+        (*b"ROUT", rout_section(index)),
+    ];
+    if let Some(q) = qunt_section(index) {
+        sections.push((*b"QUNT", q));
+    }
+    let tmp = path.with_extension("sss.tmp");
+    let result = (|| -> Result<()> {
+        let mut file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut head = Vec::new();
+        head.extend_from_slice(MAGIC);
+        push_u32(&mut head, VERSION);
+        push_u32(&mut head, sections.len() as u32);
+        file.write_all(&head)?;
+        for (tag, payload) in &sections {
+            let mut frame = Vec::with_capacity(16 + payload.len());
+            frame.extend_from_slice(tag);
+            push_u64(&mut frame, payload.len() as u64);
+            push_u32(&mut frame, crc32(payload));
+            frame.extend_from_slice(payload);
+            file.write_all(&frame)?;
+        }
+        file.sync_all()
+            .with_context(|| format!("fsyncing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing {} over {}", tmp.display(), path.display()))
+    })();
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+/// Parse the raw section table of a snapshot file: `(tag, payload)` pairs
+/// in file order, CRC-validated. Every failure names the file and the
+/// section.
+fn read_sections(path: &Path) -> Result<Vec<([u8; 4], Vec<u8>)>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    let mut r = Rd { buf: &bytes, at: 0 };
+    let magic = r
+        .take(4)
+        .with_context(|| format!("{}: reading magic", path.display()))?;
+    if magic != MAGIC {
+        bail!(
+            "{}: bad magic {magic:?} (expected {MAGIC:?}) — not a stars snapshot file",
+            path.display()
+        );
+    }
+    let version = r
+        .u32()
+        .with_context(|| format!("{}: reading version", path.display()))?;
+    if version != VERSION {
+        bail!("{}: unsupported snapshot version {version}", path.display());
+    }
+    let count = r
+        .u32()
+        .with_context(|| format!("{}: reading section count", path.display()))?;
+    if count > 64 {
+        bail!("{}: absurd section count {count} — corrupt header", path.display());
+    }
+    let mut sections = Vec::with_capacity(count as usize);
+    for i in 0..count {
+        let frame = (|| -> Result<([u8; 4], Vec<u8>)> {
+            let tag: [u8; 4] = r.take(4)?.try_into().unwrap();
+            let len = r.count(1)?;
+            let want = r.u32()?;
+            let payload = r.take(len)?;
+            let got = crc32(payload);
+            if got != want {
+                bail!(
+                    "section {:?}: checksum mismatch ({got:#010x} != {want:#010x})",
+                    String::from_utf8_lossy(&tag)
+                );
+            }
+            Ok((tag, payload.to_vec()))
+        })()
+        .with_context(|| format!("{}: reading section {i}", path.display()))?;
+        sections.push(frame);
+    }
+    r.done()
+        .with_context(|| format!("{}: after the section table", path.display()))?;
+    Ok(sections)
+}
+
+/// Load a snapshot from `path`, re-deriving the per-repetition sketch
+/// states through `family` (they are never persisted — state purity makes
+/// re-preparation bit-identical) and re-assembling a [`StarIndex`] under
+/// `cfg`. Returns the index and its WAL-replay floor.
+///
+/// Fails with per-section context on any corruption: a bit flip or
+/// truncation anywhere must surface here, never as a panic or a silently
+/// different index (fuzzed over every section boundary in
+/// `tests/durability.rs`).
+pub fn load_snapshot<'f>(
+    path: &Path,
+    family: &'f dyn LshFamily,
+    cfg: ServeConfig,
+    workers: usize,
+) -> Result<(StarIndex<'f>, u64)> {
+    let sections = read_sections(path)?;
+    let section = |tag: &[u8; 4]| -> Result<&Vec<u8>> {
+        sections
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, p)| p)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: missing section {:?}",
+                    path.display(),
+                    String::from_utf8_lossy(tag)
+                )
+            })
+    };
+
+    // META
+    let (n, dim, floor, reps, flags) = (|| -> Result<_> {
+        let mut r = Rd { buf: section(b"META")?, at: 0 };
+        let n = r.u64()? as usize;
+        let dim = r.u64()? as usize;
+        let floor = r.u64()?;
+        let reps = r.u32()? as usize;
+        let flags = r.u8()?;
+        r.done()?;
+        if floor != n as u64 {
+            bail!("replay floor {floor} != point count {n}");
+        }
+        if flags & !(FLAG_QUANT | FLAG_SETS | FLAG_LABELS) != 0 {
+            bail!("unknown flag bits {flags:#04x}");
+        }
+        Ok((n, dim, floor, reps, flags))
+    })()
+    .with_context(|| format!("{}: section META", path.display()))?;
+
+    // DSET
+    let ds = (|| -> Result<Dataset> {
+        let mut r = Rd { buf: section(b"DSET")?, at: 0 };
+        let name_len = r.u32()? as usize;
+        if name_len > 4096 {
+            bail!("claimed {name_len}-byte dataset name");
+        }
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .context("dataset name not utf8")?;
+        let dense = r.f32s(n.checked_mul(dim).context("n×dim overflows")?)?;
+        let labels = if flags & FLAG_LABELS != 0 { r.u32s(n)? } else { Vec::new() };
+        let sets = if flags & FLAG_SETS != 0 {
+            // No with_capacity(n): a corrupted META n must fail on the
+            // first short read, not pre-allocate n slots.
+            let mut sets = Vec::new();
+            for i in 0..n {
+                let len = r.u32()? as usize;
+                let tokens = r
+                    .u32s(len)
+                    .with_context(|| format!("set {i} tokens"))?;
+                let weights = r
+                    .f32s(len)
+                    .with_context(|| format!("set {i} weights"))?;
+                sets.push(WeightedSet { tokens, weights });
+            }
+            sets
+        } else {
+            Vec::new()
+        };
+        r.done()?;
+        Ok(match (dim > 0, !sets.is_empty() || (flags & FLAG_SETS != 0 && n == 0)) {
+            (true, true) => Dataset::hybrid(&name, dim, dense, sets, labels),
+            (true, false) => Dataset::from_dense(&name, dim, dense, labels),
+            (false, true) => Dataset::from_sets(&name, sets, labels),
+            (false, false) => bail!("dataset has neither dense nor set features"),
+        })
+    })()
+    .with_context(|| format!("{}: section DSET", path.display()))?;
+
+    // CSRS
+    let csr = (|| -> Result<_> {
+        let mut r = Rd { buf: section(b"CSRS")?, at: 0 };
+        let nodes = r.count(8)?;
+        if nodes != n {
+            bail!("CSR node count {nodes} != point count {n}");
+        }
+        let offsets: Vec<usize> = r.u64s(nodes + 1)?.into_iter().map(|o| o as usize).collect();
+        let edges = r.count(8)?;
+        if Some(&edges) != offsets.last() {
+            bail!("CSR edge count {edges} != final offset {:?}", offsets.last());
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            bail!("CSR offsets not monotone");
+        }
+        let neighbors = r.u32s(edges)?;
+        if let Some(&bad) = neighbors.iter().find(|&&v| v as usize >= nodes) {
+            bail!("CSR neighbor id {bad} out of range (n = {nodes})");
+        }
+        let weights = r.f32s(edges)?;
+        r.done()?;
+        Ok(crate::graph::Csr::from_raw_parts(offsets, neighbors, weights))
+    })()
+    .with_context(|| format!("{}: section CSRS", path.display()))?;
+
+    // ROUT
+    let router = (|| -> Result<_> {
+        let mut r = Rd { buf: section(b"ROUT")?, at: 0 };
+        let nreps = r.u32()? as usize;
+        if nreps != reps {
+            bail!("router rep count {nreps} != META rep count {reps}");
+        }
+        let mut parts = Vec::with_capacity(nreps);
+        for rep in 0..nreps {
+            let nbuckets = r.count(16)?;
+            let mut triples = Vec::with_capacity(nbuckets);
+            for _ in 0..nbuckets {
+                triples.push((r.u64()?, r.u32()?, r.u32()?));
+            }
+            let nentries = r.count(4)?;
+            let entries = r.u32s(nentries)?;
+            for &(key, start, len) in &triples {
+                if start as usize + len as usize > entries.len() {
+                    bail!("rep {rep} bucket {key:#x}: range out of bounds");
+                }
+            }
+            if triples.windows(2).any(|w| w[0].0 >= w[1].0) {
+                bail!("rep {rep}: bucket keys not strictly ascending");
+            }
+            if let Some(&bad) = entries.iter().find(|&&e| e as usize >= n) {
+                bail!("rep {rep}: entry id {bad} out of range (n = {n})");
+            }
+            parts.push((triples, entries));
+        }
+        r.done()?;
+        Ok(crate::serve::Router::from_parts(parts))
+    })()
+    .with_context(|| format!("{}: section ROUT", path.display()))?;
+
+    // QUNT — only consulted when the serving config wants the quantized
+    // tier; a plain restart of a quantized state dir simply ignores it.
+    let quant = if cfg.quantized && dim > 0 {
+        if flags & FLAG_QUANT != 0 {
+            let q = (|| -> Result<_> {
+                let mut r = Rd { buf: section(b"QUNT")?, at: 0 };
+                let qdim = r.u64()? as usize;
+                if qdim != dim {
+                    bail!("quant dim {qdim} != dataset dim {dim}");
+                }
+                let rows = r.count(dim.max(1))?;
+                if rows != n {
+                    bail!("quant row count {rows} != point count {n}");
+                }
+                let codes = r.i8s(rows * dim)?;
+                let scales = r.f32s(rows)?;
+                r.done()?;
+                Ok(crate::sim::QuantDataset::from_raw_parts(dim, codes, scales))
+            })()
+            .with_context(|| format!("{}: section QUNT", path.display()))?;
+            Some(Arc::new(q))
+        } else {
+            // Snapshot was persisted unquantized; per-row SQ8 is a pure
+            // function of the rows, so recomputing is bit-identical to
+            // what a quantized build would have stored.
+            Some(Arc::new(crate::sim::QuantDataset::from_dataset(&ds)))
+        }
+    } else {
+        None
+    };
+
+    let states = (0..reps.max(1))
+        .map(|rep| Arc::from(family.prepare(&ds, rep as u64)))
+        .collect();
+    Ok((StarIndex::from_parts(ds, csr, states, router, quant, cfg), floor))
+}
+
+// ---------------------------------------------------------------------------
+// The store
+
+/// A recovered serving state: the snapshot-backed index plus the WAL
+/// suffix to replay through the normal insert path.
+pub struct Recovered<'f> {
+    /// The index loaded from the newest valid snapshot.
+    pub index: StarIndex<'f>,
+    /// WAL records with `gid ≥ index.len()`, gapless and in gid order —
+    /// replaying them through `insert` reproduces the uncrashed engine.
+    pub replay: Vec<WalRecord>,
+}
+
+/// The `--state-dir` front: owns the active WAL writer, the pending
+/// (not-yet-snapshotted) records, and the checkpoint/recover protocol.
+pub struct DurableStore {
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    wal: Option<WalWriter>,
+    /// Records logged since the last checkpoint whose gid may exceed the
+    /// newest snapshot's floor — re-logged into the fresh WAL on rotation.
+    pending: Vec<WalRecord>,
+    replayed: crate::obs::Counter,
+    recoveries: crate::obs::Counter,
+    saves: crate::obs::Counter,
+    load_errors: crate::obs::Counter,
+}
+
+impl DurableStore {
+    /// Open (creating if needed) the state directory.
+    pub fn open(dir: &Path, policy: FsyncPolicy) -> Result<DurableStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        let reg = crate::obs::registry();
+        Ok(DurableStore {
+            dir: dir.to_path_buf(),
+            policy,
+            wal: None,
+            pending: Vec::new(),
+            replayed: reg.counter("stars_serve_wal_replayed_total"),
+            recoveries: reg.counter("stars_serve_recoveries_total"),
+            saves: reg.counter("stars_serve_snapshot_saves_total"),
+            load_errors: reg.counter("stars_serve_snapshot_load_errors_total"),
+        })
+    }
+
+    /// The state directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Attempt recovery: load the newest valid snapshot (falling back to
+    /// older ones on per-file corruption) and collect the WAL suffix.
+    /// `Ok(None)` means a fresh directory — no snapshot exists and serving
+    /// starts with a build + [`Self::checkpoint`]. After a successful
+    /// recovery the store has a fresh WAL rotated to the recovered
+    /// high-water, ready for [`Self::log_insert`].
+    pub fn recover<'f>(
+        &mut self,
+        family: &'f dyn LshFamily,
+        cfg: ServeConfig,
+        workers: usize,
+    ) -> Result<Option<Recovered<'f>>> {
+        let snapshots = snapshot_files(&self.dir)?;
+        if snapshots.is_empty() {
+            return Ok(None);
+        }
+        let mut loaded = None;
+        let mut errors = Vec::new();
+        for (floor, path) in snapshots.iter().rev() {
+            match load_snapshot(path, family, cfg.clone(), workers) {
+                Ok((index, file_floor)) if file_floor == *floor => {
+                    loaded = Some(index);
+                    break;
+                }
+                Ok((_, file_floor)) => {
+                    self.load_errors.inc(1);
+                    errors.push(format!(
+                        "{}: file claims floor {file_floor}, name says {floor}",
+                        path.display()
+                    ));
+                }
+                Err(e) => {
+                    self.load_errors.inc(1);
+                    errors.push(format!("{e:#}"));
+                }
+            }
+        }
+        let Some(index) = loaded else {
+            bail!(
+                "no loadable snapshot in {} ({} candidates): {}",
+                self.dir.display(),
+                errors.len(),
+                errors.join("; ")
+            );
+        };
+
+        // Replay every WAL file in base order under the skip/apply/gap
+        // rule (duplicates from rotation re-logging are expected; a gap is
+        // corruption).
+        let mut next = index.len() as u64;
+        let mut replay = Vec::new();
+        for (_, path) in wal_files(&self.dir)? {
+            let (records, _torn) = read_wal(&path)?;
+            for rec in records {
+                match (rec.gid as u64).cmp(&next) {
+                    std::cmp::Ordering::Less => {} // already in the snapshot or replayed
+                    std::cmp::Ordering::Equal => {
+                        replay.push(rec);
+                        next += 1;
+                    }
+                    std::cmp::Ordering::Greater => bail!(
+                        "WAL gap in {}: record gid {} but replay expects {next} — \
+                         a WAL segment is missing or misordered",
+                        path.display(),
+                        rec.gid
+                    ),
+                }
+            }
+        }
+        self.replayed.inc(replay.len() as u64);
+        self.recoveries.inc(1);
+
+        // Rotate to a fresh WAL at the recovered high-water. The replayed
+        // records become pending again (they are not inside the snapshot),
+        // re-logged so the old segments stay prunable at the next
+        // checkpoint.
+        self.pending = replay.clone();
+        self.rotate(next, &[])?;
+        Ok(Some(Recovered { index, replay }))
+    }
+
+    /// Append one insert to the WAL (write-ahead: call *before* applying
+    /// the insert to the engine).
+    pub fn log_insert(&mut self, gid: u32, row: Option<&[f32]>, set: Option<&WeightedSet>) -> Result<()> {
+        let rec = WalRecord {
+            gid,
+            row: row.map(|r| r.to_vec()),
+            set: set.cloned(),
+        };
+        self.wal
+            .as_mut()
+            .expect("log_insert before checkpoint/recover established a WAL")
+            .append(&rec)?;
+        self.pending.push(rec);
+        Ok(())
+    }
+
+    /// Crash simulation: append the first `keep` bytes of the record's
+    /// frame — the torn tail a mid-write crash leaves — without tracking
+    /// it as pending. The caller is expected to abort the process.
+    pub fn log_torn(
+        &mut self,
+        gid: u32,
+        row: Option<&[f32]>,
+        set: Option<&WeightedSet>,
+        keep: usize,
+    ) -> Result<usize> {
+        let rec = WalRecord {
+            gid,
+            row: row.map(|r| r.to_vec()),
+            set: set.cloned(),
+        };
+        self.wal
+            .as_mut()
+            .expect("log_torn before checkpoint/recover established a WAL")
+            .append_torn(&rec, keep)
+    }
+
+    /// Force the active WAL to disk regardless of fsync policy.
+    pub fn sync(&mut self) -> Result<()> {
+        match self.wal.as_mut() {
+            Some(w) => w.sync(),
+            None => Ok(()),
+        }
+    }
+
+    /// Persist `index` and advance the durable state: publish
+    /// `snapshot-{n}.sss` atomically, rotate the WAL to base `n` re-logging
+    /// still-pending records (gid ≥ n), then prune WAL segments and
+    /// snapshots the new snapshot supersedes. Crash-safe at every step —
+    /// recovery handles a published snapshot with unpruned predecessors,
+    /// and pruning is strictly after the publish.
+    pub fn checkpoint(&mut self, index: &StarIndex) -> Result<PathBuf> {
+        let floor = index.len() as u64;
+        let path = snapshot_path(&self.dir, floor);
+        save_snapshot(index, floor, &path)?;
+        self.saves.inc(1);
+
+        self.pending.retain(|r| r.gid as u64 >= floor);
+        let keep: Vec<WalRecord> = self.pending.clone();
+        self.rotate(floor, &keep)?;
+
+        // Prune superseded files, best-effort: the publish above is the
+        // durability point, deletion is housekeeping.
+        for (n, p) in snapshot_files(&self.dir)? {
+            if n < floor {
+                std::fs::remove_file(&p).ok();
+            }
+        }
+        for (b, p) in wal_files(&self.dir)? {
+            if b < floor {
+                std::fs::remove_file(&p).ok();
+            }
+        }
+        Ok(path)
+    }
+
+    /// Open a fresh `wal-{base}.log` with `relog` already appended,
+    /// atomically: bytes go to a `.tmp` sibling that is synced and renamed
+    /// into place, so a crash mid-rotation leaves any previous
+    /// `wal-{base}.log` untouched (re-logged records are never the only
+    /// durable copy until the rename lands).
+    fn rotate(&mut self, base: u64, relog: &[WalRecord]) -> Result<()> {
+        let final_path = wal_path(&self.dir, base);
+        let tmp = final_path.with_extension("log.tmp");
+        let result = (|| -> Result<WalWriter> {
+            let mut wal = WalWriter::create(&tmp, self.policy)?;
+            for rec in relog {
+                wal.append(rec)?;
+            }
+            wal.sync()?;
+            std::fs::rename(&tmp, &final_path).with_context(|| {
+                format!("publishing {} over {}", tmp.display(), final_path.display())
+            })?;
+            wal.set_path(final_path.clone());
+            Ok(wal)
+        })();
+        match result {
+            Ok(wal) => {
+                self.wal = Some(wal);
+                Ok(())
+            }
+            Err(e) => {
+                std::fs::remove_file(&tmp).ok();
+                Err(e)
+            }
+        }
+    }
+}

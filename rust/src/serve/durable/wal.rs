@@ -1,0 +1,467 @@
+//! The per-insert write-ahead log.
+//!
+//! Frame layout (little endian), one frame per insert:
+//! ```text
+//! len u32 | crc u32 | payload[len]
+//! payload: gid u32 | flags u8 (bit0 dense row, bit1 token set) |
+//!          [row: dim u32, f32 * dim] |
+//!          [set: ntok u32, tokens u32 * ntok, weights f32 * ntok]
+//! ```
+//! `crc` is CRC-32 (reflected, polynomial 0xEDB8_8320) over the payload.
+//! The reader's contract is the recovery lemma the whole durable layer
+//! rests on: [`read_wal`] returns a **strict prefix** of the records that
+//! were appended, or an error naming the offending record — never a
+//! panic, never altered data. A prefix is indistinguishable from a crash
+//! that happened at that frame boundary, so replaying it is always a
+//! legitimate recovery; a checksum mismatch on a *complete* frame is real
+//! corruption and must stop recovery loudly.
+//!
+//! Torn tails — a crash mid-`write(2)` leaving a partial frame — are
+//! detected structurally (fewer bytes remain than the frame header or its
+//! declared payload needs at end-of-file) and truncated at the last valid
+//! record. Writers never append to a previously-torn file: the store
+//! rotates to a fresh `wal-{high}.log` on every recovery and checkpoint,
+//! so read-side truncation is sufficient.
+
+use crate::data::types::WeightedSet;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Largest payload the reader will accept (guards a corrupted length
+/// field from driving a multi-gigabyte allocation).
+pub const MAX_RECORD: usize = 1 << 28;
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC-32 (reflected, poly 0xEDB8_8320 — the zlib/PNG polynomial) of
+/// `bytes`. Shared by the WAL frames and the snapshot sections.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// When appended WAL frames reach the disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fdatasync` after every append — survives power loss, slowest.
+    Always,
+    /// `fdatasync` every `n` appends — bounded-loss middle ground.
+    EveryN(u32),
+    /// Leave flushing to the OS page cache — survives process death (the
+    /// kernel holds the bytes), not power loss. The default.
+    Os,
+}
+
+impl FsyncPolicy {
+    /// Parse `always` | `os` | `every:N` (the `--fsync` flag grammar).
+    pub fn parse(spec: &str) -> Result<FsyncPolicy, String> {
+        match spec {
+            "always" => Ok(FsyncPolicy::Always),
+            "os" => Ok(FsyncPolicy::Os),
+            _ => match spec.strip_prefix("every:") {
+                Some(n) => n
+                    .parse::<u32>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .map(FsyncPolicy::EveryN)
+                    .ok_or_else(|| format!("bad fsync interval {n:?} (want a positive integer)")),
+                None => Err(format!("bad fsync policy {spec:?} (want always | os | every:N)")),
+            },
+        }
+    }
+}
+
+/// One logged insert: the global id the sequencer assigned plus the
+/// point's features, exactly as they were handed to `insert`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    /// Global point id (sequencer position) of this insert.
+    pub gid: u32,
+    /// Dense row, when the indexed dataset has one.
+    pub row: Option<Vec<f32>>,
+    /// Token set, when the indexed dataset has one.
+    pub set: Option<WeightedSet>,
+}
+
+impl WalRecord {
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.gid.to_le_bytes());
+        let flags = self.row.is_some() as u8 | (self.set.is_some() as u8) << 1;
+        out.push(flags);
+        if let Some(row) = &self.row {
+            out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+            for &x in row {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        if let Some(set) = &self.set {
+            out.extend_from_slice(&(set.tokens.len() as u32).to_le_bytes());
+            for &t in &set.tokens {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+            for &w in &set.weights {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+    }
+
+    /// The full frame (header + payload) this record appends.
+    fn encode_frame(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        self.encode_payload(&mut payload);
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    fn decode_payload(payload: &[u8], record: usize) -> Result<WalRecord> {
+        let mut c = Cursor { buf: payload, at: 0, record };
+        let gid = c.u32()?;
+        let flags = c.u8()?;
+        if flags & !0b11 != 0 {
+            bail!("WAL record {record}: unknown flag bits {flags:#04x}");
+        }
+        let row = if flags & 1 != 0 {
+            let dim = c.u32()? as usize;
+            Some(c.f32s(dim)?)
+        } else {
+            None
+        };
+        let set = if flags & 2 != 0 {
+            let ntok = c.u32()? as usize;
+            let tokens = c.u32s(ntok)?;
+            let weights = c.f32s(ntok)?;
+            Some(WeightedSet { tokens, weights })
+        } else {
+            None
+        };
+        if c.at != payload.len() {
+            bail!(
+                "WAL record {record}: {} trailing payload bytes",
+                payload.len() - c.at
+            );
+        }
+        Ok(WalRecord { gid, row, set })
+    }
+}
+
+/// Bounds-checked little-endian payload reader (decode never panics on a
+/// short buffer — it reports the record).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+    record: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.at + n > self.buf.len() {
+            bail!(
+                "WAL record {}: payload truncated ({} bytes needed at offset {}, {} present)",
+                self.record,
+                n,
+                self.at,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        if n > MAX_RECORD / 4 {
+            bail!("WAL record {}: absurd element count {n}", self.record);
+        }
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        if n > MAX_RECORD / 4 {
+            bail!("WAL record {}: absurd element count {n}", self.record);
+        }
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Appends framed records to one WAL file under an [`FsyncPolicy`].
+pub struct WalWriter {
+    file: std::fs::File,
+    path: PathBuf,
+    policy: FsyncPolicy,
+    since_sync: u32,
+    appends: crate::obs::Counter,
+    fsyncs: crate::obs::Counter,
+    bytes: crate::obs::Counter,
+}
+
+impl WalWriter {
+    /// Create (truncating) the WAL file at `path`. Writers always start
+    /// fresh files — the store rotates on recovery and checkpoint — so
+    /// truncation can only discard a torn tail that recovery already
+    /// declined to replay.
+    pub fn create(path: &Path, policy: FsyncPolicy) -> Result<WalWriter> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating WAL {}", path.display()))?;
+        let reg = crate::obs::registry();
+        Ok(WalWriter {
+            file,
+            path: path.to_path_buf(),
+            policy,
+            since_sync: 0,
+            appends: reg.counter("stars_serve_wal_appends_total"),
+            fsyncs: reg.counter("stars_serve_wal_fsyncs_total"),
+            bytes: reg.counter("stars_serve_wal_bytes_total"),
+        })
+    }
+
+    /// The file this writer appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record that the file was renamed (atomic rotation publishes the
+    /// WAL via tmp + rename; the open handle follows the inode, only the
+    /// diagnostic path changes).
+    pub(crate) fn set_path(&mut self, path: PathBuf) {
+        self.path = path;
+    }
+
+    /// Append one record and apply the fsync policy.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let frame = rec.encode_frame();
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to WAL {}", self.path.display()))?;
+        self.appends.inc(1);
+        self.bytes.inc(frame.len() as u64);
+        self.since_sync += 1;
+        let due = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(n) => self.since_sync >= n,
+            FsyncPolicy::Os => false,
+        };
+        if due {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Force the file to disk regardless of policy (checkpoint barrier).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing WAL {}", self.path.display()))?;
+        self.fsyncs.inc(1);
+        self.since_sync = 0;
+        Ok(())
+    }
+
+    /// Crash simulation: append only the first `keep` bytes of the frame
+    /// `rec` would produce — a torn tail exactly as a mid-`write` power cut
+    /// would leave it — and flush so the bytes are observable by a reader.
+    pub fn append_torn(&mut self, rec: &WalRecord, keep: usize) -> Result<usize> {
+        let frame = rec.encode_frame();
+        let keep = keep.min(frame.len().saturating_sub(1));
+        self.file
+            .write_all(&frame[..keep])
+            .with_context(|| format!("torn append to WAL {}", self.path.display()))?;
+        self.file.sync_data().ok();
+        Ok(keep)
+    }
+}
+
+/// Read every complete record of the WAL at `path`.
+///
+/// Returns the records plus the number of torn trailing bytes that were
+/// truncated (0 for a cleanly closed file). See the module docs for the
+/// prefix-or-error contract.
+pub fn read_wal(path: &Path) -> Result<(Vec<WalRecord>, usize)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading WAL {}", path.display()))?;
+    let mut records = Vec::new();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        let rem = bytes.len() - at;
+        if rem < 8 {
+            // A frame header needs 8 bytes; fewer at EOF is a torn tail.
+            return Ok((records, rem));
+        }
+        let len = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+        if len > MAX_RECORD {
+            bail!(
+                "WAL {} record {}: length field {len} exceeds the {MAX_RECORD}-byte cap — \
+                 corrupt frame header",
+                path.display(),
+                records.len()
+            );
+        }
+        if rem < 8 + len {
+            // Header complete, payload cut off at EOF: torn tail.
+            return Ok((records, rem));
+        }
+        let want = u32::from_le_bytes(bytes[at + 4..at + 8].try_into().unwrap());
+        let payload = &bytes[at + 8..at + 8 + len];
+        let got = crc32(payload);
+        if got != want {
+            bail!(
+                "WAL {} record {}: checksum mismatch ({got:#010x} != {want:#010x}) — \
+                 corrupt payload",
+                path.display(),
+                records.len()
+            );
+        }
+        records.push(WalRecord::decode_payload(payload, records.len())?);
+        at += 8 + len;
+    }
+    Ok((records, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("stars_wal_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord { gid: 100, row: Some(vec![1.0, -2.5, 0.0]), set: None },
+            WalRecord {
+                gid: 101,
+                row: None,
+                set: Some(WeightedSet { tokens: vec![3, 9], weights: vec![0.5, 1.5] }),
+            },
+            WalRecord {
+                gid: 102,
+                row: Some(vec![f32::MIN_POSITIVE, 7.25]),
+                set: Some(WeightedSet { tokens: vec![1], weights: vec![2.0] }),
+            },
+        ]
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Reference values of the zlib/PNG CRC-32.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn fsync_policy_grammar() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("os").unwrap(), FsyncPolicy::Os);
+        assert_eq!(FsyncPolicy::parse("every:16").unwrap(), FsyncPolicy::EveryN(16));
+        assert!(FsyncPolicy::parse("every:0").is_err());
+        assert!(FsyncPolicy::parse("every:x").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn append_read_roundtrip_bit_exact() {
+        let p = tmp("roundtrip");
+        let mut w = WalWriter::create(&p, FsyncPolicy::EveryN(2)).unwrap();
+        for r in &sample_records() {
+            w.append(r).unwrap();
+        }
+        drop(w);
+        let (back, torn) = read_wal(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(torn, 0);
+        assert_eq!(back, sample_records());
+        // f32 payloads roundtrip by bits, not by value.
+        assert_eq!(back[2].row.as_ref().unwrap()[0].to_bits(), f32::MIN_POSITIVE.to_bits());
+    }
+
+    #[test]
+    fn torn_tail_truncates_at_every_cut_point() {
+        let records = sample_records();
+        let frame_len = records[2].encode_frame().len();
+        for keep in 0..frame_len {
+            let p = tmp(&format!("torn_{keep}"));
+            let mut w = WalWriter::create(&p, FsyncPolicy::Os).unwrap();
+            w.append(&records[0]).unwrap();
+            w.append(&records[1]).unwrap();
+            w.append_torn(&records[2], keep).unwrap();
+            drop(w);
+            let (back, torn) = read_wal(&p).unwrap();
+            std::fs::remove_file(&p).ok();
+            assert_eq!(back, records[..2], "keep={keep}");
+            assert_eq!(torn, keep.min(frame_len - 1), "keep={keep}");
+        }
+    }
+
+    #[test]
+    fn complete_frame_corruption_is_an_error_never_a_misload() {
+        // Flip each byte of a complete two-record WAL in turn: the reader
+        // must return a strict prefix of the written records or error —
+        // never panic, never a record that differs from what was appended.
+        let p = tmp("flip");
+        let mut w = WalWriter::create(&p, FsyncPolicy::Os).unwrap();
+        let records = sample_records();
+        w.append(&records[0]).unwrap();
+        w.append(&records[1]).unwrap();
+        drop(w);
+        let clean = std::fs::read(&p).unwrap();
+        for i in 0..clean.len() {
+            let mut bytes = clean.clone();
+            bytes[i] ^= 0x40;
+            std::fs::write(&p, &bytes).unwrap();
+            match read_wal(&p) {
+                Ok((got, _)) => {
+                    assert!(got.len() <= 2, "flip at {i}: extra records");
+                    for (j, r) in got.iter().enumerate() {
+                        assert_eq!(r, &records[j], "flip at {i}: record {j} misloaded");
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("record"), "flip at {i}: undiagnosed error: {msg}");
+                }
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,13 +1,23 @@
 //! The concurrent batched query executor.
 //!
 //! [`QueryEngine`] owns the current [`StarIndex`] epoch (behind
-//! `RwLock<Arc<_>>`), the [`DeltaBuffer`] of streamed inserts, and the
-//! query pipeline: sketch → route → two-hop expand → tiled score → top-k
-//! merge with the delta. Batches fan out over [`crate::util::pool`], one
-//! task per query; per-query work is independent and results are assembled
-//! in query order, so the returned top-k lists are **bit-identical for any
-//! worker count** — the read-side mirror of the builder's determinism
-//! contract.
+//! `RwLock<Arc<_>>`), the write path of streamed inserts — sealed
+//! immutable [`SealedSegment`]s behind the active [`DeltaBuffer`] tail —
+//! and the query pipeline: sketch → route → two-hop expand → tiled score
+//! → top-k merge with the segments and the tail. Batches fan out over
+//! [`crate::util::pool`], one task per query; per-query work is
+//! independent and results are assembled in query order, so the returned
+//! top-k lists are **bit-identical for any worker count** — the read-side
+//! mirror of the builder's determinism contract.
+//!
+//! With `ServeConfig::seal_limit > 0` the tail seals into a
+//! [`SealedSegment`] when it fills: the sealed rows are sketched once
+//! through the snapshot's cached states and queries *route into* them
+//! (collision buckets first, complete coverage) instead of brute-forcing
+//! an ever-growing buffer — and because segment coverage is complete,
+//! answers stay bit-identical to the unsealed path for any seal boundary
+//! (`serve::durable::segment` has the argument). Compaction drains
+//! segments and tail together into the next snapshot epoch.
 //!
 //! When the snapshot carries an SQ8 table (`ServeConfig::quantized`) and
 //! the measure is dense (cosine/dot), scoring runs in **two passes**: an
@@ -24,6 +34,7 @@
 //! in a fixed order.
 
 use super::delta::DeltaBuffer;
+use super::durable::SealedSegment;
 use super::index::StarIndex;
 use super::CompactionMode;
 use crate::ampc::SnapshotStats;
@@ -143,6 +154,12 @@ pub(crate) struct QueryScratch {
     pub(crate) qcodes: Vec<i8>,
     /// Delta-local ids of rescore survivors (quantized second pass).
     pub(crate) delta_cands: Vec<u32>,
+    /// Visited stamps for sealed-segment candidate routing.
+    pub(crate) seg_visit: VisitScratch,
+    /// Segment-local candidate buffer (exact path).
+    pub(crate) seg_cands: Vec<u32>,
+    /// Per-segment rescore survivors (quantized second pass).
+    pub(crate) seg_survivors: Vec<Vec<u32>>,
 }
 
 thread_local! {
@@ -234,14 +251,17 @@ impl TopNeighbors {
     }
 }
 
-/// Answer one query against a consistent (snapshot, delta) view.
-/// `quant_rescore` overrides the snapshot's configured scoring tier:
-/// `Some(rf)` forces the quantized first pass with rescore width `rf`
-/// (the admission front door's degraded tier), `None` serves the
-/// configured tier.
+/// Answer one query against a consistent (snapshot, segments, tail) view.
+/// `segments` are the sealed delta segments in ascending contiguous base
+/// order (row `i` of segment `g` is global id `g.base() + i`; the tail
+/// starts exactly where the last segment ends). `quant_rescore` overrides
+/// the snapshot's configured scoring tier: `Some(rf)` forces the
+/// quantized first pass with rescore width `rf` (the admission front
+/// door's degraded tier), `None` serves the configured tier.
 #[allow(clippy::too_many_arguments)]
 fn answer_one(
     snap: &StarIndex<'_>,
+    segments: &[Arc<SealedSegment>],
     delta: &Dataset,
     delta_quant: Option<&QuantDataset>,
     delta_base: usize,
@@ -288,6 +308,7 @@ fn answer_one(
         && want_quant
         && measure.supports_quant()
         && (delta.is_empty() || delta_quant.is_some())
+        && segments.iter().all(|g| g.quant().is_some())
     {
         if let Some(sq) = snap.quant() {
             let backend = simd::active();
@@ -307,6 +328,25 @@ fn answer_one(
                     _ => est,
                 };
                 first.push(score, cand);
+            }
+            // Sealed segments join the first pass whole: their SQ8 codes
+            // were handed over from the tail at seal time (per-row SQ8 has
+            // no cross-row state), so every estimate — and hence the
+            // survivor set — is bit-identical to the unsealed buffer's.
+            for seg in segments {
+                let sq8 = seg.quant().expect("checked above");
+                s.cands.clear();
+                s.cands.extend(0..seg.len() as u32);
+                sq8.dot_estimates_with(backend, &s.qcodes, qscale, &s.cands, &mut s.scores);
+                for (i, &est) in s.scores.iter().enumerate() {
+                    let score = match measure {
+                        ServeMeasure::Cosine => {
+                            quant::cosine_estimate(est, qnorm * seg.dataset().norm(i))
+                        }
+                        _ => est,
+                    };
+                    first.push(score, (seg.base() + i) as u32);
+                }
             }
             if !delta.is_empty() {
                 let dq = delta_quant.expect("checked above");
@@ -329,17 +369,42 @@ fn answer_one(
             // final top-k ranking among survivors is exact.
             s.cands.clear();
             s.delta_cands.clear();
+            s.seg_survivors.iter_mut().for_each(Vec::clear);
+            if s.seg_survivors.len() < segments.len() {
+                s.seg_survivors.resize_with(segments.len(), Vec::new);
+            }
             for (gid, _) in first.into_sorted() {
-                if (gid as usize) < delta_base {
+                let g = gid as usize;
+                if g < n {
                     s.cands.push(gid);
+                } else if g >= delta_base {
+                    s.delta_cands.push((g - delta_base) as u32);
                 } else {
-                    s.delta_cands.push(gid - delta_base as u32);
+                    // Owning segment: bases are ascending and contiguous.
+                    let si = segments.partition_point(|seg| seg.base() + seg.len() <= g);
+                    s.seg_survivors[si].push((g - segments[si].base()) as u32);
                 }
             }
             let mut top = TopNeighbors::new(k);
             measure.score(queries, qi, snap.dataset(), &s.cands, &mut s.batch, &mut s.scores);
             for (&cand, &w) in s.cands.iter().zip(s.scores.iter()) {
                 top.push(w, cand);
+            }
+            for (si, seg) in segments.iter().enumerate() {
+                if s.seg_survivors[si].is_empty() {
+                    continue;
+                }
+                measure.score(
+                    queries,
+                    qi,
+                    seg.dataset(),
+                    &s.seg_survivors[si],
+                    &mut s.batch,
+                    &mut s.scores,
+                );
+                for (&c, &w) in s.seg_survivors[si].iter().zip(s.scores.iter()) {
+                    top.push(w, (seg.base() + c as usize) as u32);
+                }
             }
             if !s.delta_cands.is_empty() {
                 measure.score(queries, qi, delta, &s.delta_cands, &mut s.batch, &mut s.scores);
@@ -356,7 +421,19 @@ fn answer_one(
     for (&c, &w) in s.cands.iter().zip(s.scores.iter()) {
         top.push(w, c);
     }
-    // Brute-force the delta buffer (bounded by the compaction limit).
+    // Sealed segments: route in with the query's own keys — collision
+    // buckets first, then the remainder. Coverage is complete (every
+    // sealed row scored exactly once), so the merged top-k is identical
+    // to brute-forcing these rows in the tail.
+    for seg in segments {
+        s.seg_cands.clear();
+        seg.candidates_into(keys, nq, qi, &mut s.seg_visit, &mut s.seg_cands);
+        measure.score(queries, qi, seg.dataset(), &s.seg_cands, &mut s.batch, &mut s.scores);
+        for (&c, &w) in s.seg_cands.iter().zip(s.scores.iter()) {
+            top.push(w, (seg.base() + c as usize) as u32);
+        }
+    }
+    // Brute-force the active tail (bounded by the seal/compaction limits).
     if !delta.is_empty() {
         s.cands.clear();
         s.cands.extend(0..delta.len() as u32);
@@ -449,16 +526,35 @@ impl CompactionReport {
     }
 }
 
+/// The engine's mutable write path: sealed immutable segments (ascending,
+/// contiguous global-id ranges) queued behind the active tail. One mutex
+/// guards both — queries capture a consistent view, inserts append to the
+/// tail, seals move the tail whole into a new segment, compaction drains
+/// everything.
+struct WritePath {
+    segments: Vec<Arc<SealedSegment>>,
+    tail: DeltaBuffer,
+}
+
+impl WritePath {
+    /// Points not yet folded into a snapshot (sealed + tail).
+    fn pending(&self) -> usize {
+        self.segments.iter().map(|g| g.len()).sum::<usize>() + self.tail.len()
+    }
+}
+
 /// The online query engine: an epoch-swapped [`StarIndex`] snapshot plus a
-/// streaming [`DeltaBuffer`], serving worker-count-invariant top-k batches.
+/// streaming write path (sealed [`SealedSegment`]s + a [`DeltaBuffer`]
+/// tail), serving worker-count-invariant top-k batches.
 pub struct QueryEngine<'f> {
     family: &'f dyn LshFamily,
     measure: ServeMeasure,
     build: BuildParams,
     workers: usize,
     compact_limit: usize,
+    seal_limit: usize,
     snapshot: RwLock<Arc<StarIndex<'f>>>,
-    delta: Mutex<DeltaBuffer>,
+    delta: Mutex<WritePath>,
     /// Serializes compactions so concurrent triggers rebuild once.
     compacting: Mutex<()>,
     /// Full compactions run so far (all mutated under `compacting`; atomics
@@ -485,13 +581,18 @@ impl<'f> QueryEngine<'f> {
         build: BuildParams,
     ) -> QueryEngine<'f> {
         let compact_limit = index.config().compact_limit;
-        let delta = Mutex::new(DeltaBuffer::new(index.dataset(), index.len()));
+        let seal_limit = index.config().seal_limit;
+        let delta = Mutex::new(WritePath {
+            segments: Vec::new(),
+            tail: DeltaBuffer::new(index.dataset(), index.len()),
+        });
         QueryEngine {
             family,
             measure,
             build,
             workers: pool::default_workers(),
             compact_limit,
+            seal_limit,
             snapshot: RwLock::new(Arc::new(index)),
             delta,
             compacting: Mutex::new(()),
@@ -513,9 +614,28 @@ impl<'f> QueryEngine<'f> {
         self.snapshot.read().unwrap().len()
     }
 
-    /// Points waiting in the delta buffer.
+    /// Points waiting in the write path (sealed segments + active tail).
     pub fn num_pending(&self) -> usize {
-        self.delta.lock().unwrap().len()
+        self.delta.lock().unwrap().pending()
+    }
+
+    /// Points sealed into immutable segments awaiting compaction, and the
+    /// number of segments holding them.
+    pub fn num_sealed(&self) -> (usize, usize) {
+        let d = self.delta.lock().unwrap();
+        (
+            d.segments.iter().map(|g| g.len()).sum::<usize>(),
+            d.segments.len(),
+        )
+    }
+
+    /// The write sequencer's high-water mark: the global id the next
+    /// [`QueryEngine::insert`] will assign. Strictly monotone across
+    /// seals and compactions — the durable layer WAL-logs each record
+    /// under this id *before* applying it, and replay uses
+    /// `gid < next_gid()` as its already-applied test.
+    pub fn next_gid(&self) -> u32 {
+        self.delta.lock().unwrap().tail.next_gid()
     }
 
     /// The current snapshot epoch (for inspection/metrics).
@@ -575,17 +695,20 @@ impl<'f> QueryEngine<'f> {
         if nq == 0 {
             return Vec::new();
         }
-        // Consistent epoch: the snapshot pointer and the delta are read
-        // under the delta lock, which compaction also holds while swapping
-        // — a batch sees either (old snapshot, full delta) or (new
-        // snapshot, trimmed delta), never a point twice or not at all.
-        let (snap, delta, delta_quant, delta_base) = {
+        // Consistent epoch: the snapshot pointer and the write path are
+        // read under the delta lock, which seal and compaction also hold
+        // while mutating — a batch sees either (old snapshot, full write
+        // path) or (new snapshot, drained path), never a point twice or
+        // not at all. Sealed segments ride behind `Arc` (O(1) capture);
+        // only the active tail is cloned.
+        let (snap, segments, delta, delta_quant, delta_base) = {
             let d = self.delta.lock().unwrap();
             (
                 self.snapshot.read().unwrap().clone(),
-                d.dataset().clone(),
-                d.quant().cloned(),
-                d.base(),
+                d.segments.clone(),
+                d.tail.dataset().clone(),
+                d.tail.quant().cloned(),
+                d.tail.base(),
             )
         };
         if snap.dataset().dim() > 0 {
@@ -602,7 +725,8 @@ impl<'f> QueryEngine<'f> {
         let quant_engaged = measure.supports_quant()
             && (quant_rescore.is_some() || snap.config().quantized)
             && snap.quant().is_some()
-            && (delta.is_empty() || delta_quant.is_some());
+            && (delta.is_empty() || delta_quant.is_some())
+            && segments.iter().all(|g| g.quant().is_some());
         if quant_engaged && k > 0 {
             let rf = quant_rescore.unwrap_or(snap.config().rescore_factor).max(1);
             crate::obs::registry()
@@ -615,6 +739,7 @@ impl<'f> QueryEngine<'f> {
                 let s = &mut *cell.borrow_mut();
                 answer_one(
                     &snap,
+                    &segments,
                     &delta,
                     delta_quant.as_ref(),
                     delta_base,
@@ -656,20 +781,61 @@ impl<'f> QueryEngine<'f> {
 
     /// Stream one point in (dense row and/or token set, matching the
     /// indexed feature kinds); returns its global id, queryable
-    /// immediately. Triggers a compaction when the delta reaches the
-    /// configured limit.
+    /// immediately. Seals the active tail into an immutable segment at
+    /// `ServeConfig::seal_limit` and triggers a compaction when the whole
+    /// write path reaches the compaction limit.
     pub fn insert(&self, row: Option<&[f32]>, set: Option<WeightedSet>) -> u32 {
-        let (id, should_compact, pending) = {
+        let (id, should_seal, should_compact, pending) = {
             let mut d = self.delta.lock().unwrap();
-            let id = d.insert(row, set);
-            let pending = d.len();
-            (id, self.compact_limit > 0 && pending >= self.compact_limit, pending)
+            let id = d.tail.insert(row, set);
+            let pending = d.pending();
+            (
+                id,
+                self.seal_limit > 0 && d.tail.len() >= self.seal_limit,
+                self.compact_limit > 0 && pending >= self.compact_limit,
+                pending,
+            )
         };
         self.delta_pending_gauge.set(pending as u64);
         if should_compact {
+            // Compaction drains segments and tail alike — sealing first
+            // would only waste the sketch work.
             self.compact();
+        } else if should_seal {
+            self.seal_tail();
         }
         id
+    }
+
+    /// Seal the active tail into a [`SealedSegment`] behind the queue.
+    /// Serialized against compaction by *try*-locking `compacting` — an
+    /// insert already past the delta lock must not invert the compaction
+    /// path's `compacting → delta` lock order. Losing the race defers the
+    /// seal to a later insert (or lets the running compaction absorb the
+    /// tail), which is harmless: segment coverage is complete, so seal
+    /// timing never changes an answer.
+    fn seal_tail(&self) {
+        let Ok(_serial) = self.compacting.try_lock() else {
+            return;
+        };
+        let t0 = Instant::now();
+        let snap = self.snapshot.read().unwrap().clone();
+        let mut d = self.delta.lock().unwrap();
+        if self.seal_limit == 0 || d.tail.len() < self.seal_limit {
+            return; // another insert sealed first
+        }
+        let base = d.tail.base();
+        let (ds, quant) = d.tail.seal_take();
+        // Sketching O(seal_limit) rows holds the delta lock — bounded,
+        // and the alternative (sketch outside the lock) would open a
+        // window where the rows are in neither tail nor segment.
+        let seg = SealedSegment::seal(snap.states(), ds, quant, base, self.workers);
+        d.segments.push(Arc::new(seg));
+        drop(d);
+        crate::obs::registry().counter("stars_serve_seals_total").inc(1);
+        crate::obs::registry()
+            .histogram("stars_serve_seal_us")
+            .record(t0.elapsed().as_micros() as u64);
     }
 
     /// Fold the delta buffer into a fresh snapshot epoch using the
@@ -745,16 +911,38 @@ impl<'f> QueryEngine<'f> {
     pub fn compact_with(&self, mode: CompactionMode) -> Option<CompactionReport> {
         let _serial = self.compacting.lock().unwrap();
         let t0 = Instant::now();
-        let (snap, delta_ds, prefix) = {
+        let (snap, segs, tail_ds, prefix) = {
             let d = self.delta.lock().unwrap();
-            if d.is_empty() {
+            if d.segments.is_empty() && d.tail.is_empty() {
                 return None;
             }
             (
                 self.snapshot.read().unwrap().clone(),
-                d.dataset().clone(),
-                d.len(),
+                d.segments.clone(),
+                d.tail.dataset().clone(),
+                d.tail.len(),
             )
+        };
+        // Sealed segments re-enter compaction as plain delta rows,
+        // concatenated in base order ahead of the captured tail — exactly
+        // the global-id order the rows were inserted in, so the rebuild
+        // sees the same merged dataset it would have without sealing. The
+        // empty tail is skipped rather than concatenated: an empty
+        // hybrid-template tail has no sets and would trip concat's
+        // feature-kind check.
+        let delta_ds = {
+            let mut acc: Option<Dataset> = None;
+            for g in &segs {
+                acc = Some(match acc {
+                    Some(a) => a.concat(g.dataset()),
+                    None => g.dataset().clone(),
+                });
+            }
+            match (acc, prefix) {
+                (Some(a), 0) => a,
+                (Some(a), _) => a.concat(&tail_ds),
+                (None, _) => tail_ds,
+            }
         };
         let (next, mut report) = match mode {
             CompactionMode::Full => self.rebuild_full(&snap, &delta_ds),
@@ -776,13 +964,18 @@ impl<'f> QueryEngine<'f> {
         report.incremental_compactions = self.incremental_compactions.load(Ordering::Relaxed);
         report.snapshot = next.stats();
         report.seconds = t0.elapsed().as_secs_f64();
-        // Swap the epoch and trim the absorbed prefix atomically w.r.t.
-        // readers (who take the delta lock to capture their view).
+        // Swap the epoch and drain the absorbed write path atomically
+        // w.r.t. readers (who take the delta lock to capture their view).
+        // Seals are serialized under `compacting`, which we hold — the
+        // queued segments are exactly the captured ones; only the tail
+        // can have grown.
         let pending = {
             let mut d = self.delta.lock().unwrap();
             *self.snapshot.write().unwrap() = Arc::new(next);
-            d.absorb_prefix(prefix);
-            d.len()
+            debug_assert_eq!(d.segments.len(), segs.len(), "segment sealed during compaction");
+            d.segments.clear();
+            d.tail.absorb_prefix(prefix);
+            d.pending()
         };
         // Observability: compaction time + the post-swap delta depth.
         let us = (report.seconds * 1e6) as u64;
@@ -1258,5 +1451,77 @@ mod tests {
         let res = engine.query(&next.dataset().subset(&[7]), 5);
         assert_eq!(res[0][0].0, 7);
         assert!(res[0].iter().any(|&(id, _)| id == n as u32));
+    }
+
+    #[test]
+    fn sealed_segments_serve_bit_identical_to_the_brute_forced_tail() {
+        // Two engines over the same snapshot, one sealing every 2 inserts,
+        // one never sealing: every answer must match bitwise, before and
+        // after compaction — the exactness lemma the durable write path
+        // rests on (serve::durable::segment module docs).
+        let h = SimHash::new(16, 8, 3);
+        let ds = synth::gaussian_mixture(400, 16, 8, 0.08, 47);
+        let params = BuildParams::threshold_mode(Algorithm::LshStars)
+            .sketches(8)
+            .threshold(0.4);
+        let out = StarsBuilder::new(&ds)
+            .similarity(&CosineSim)
+            .hash(&h)
+            .params(params.clone())
+            .workers(2)
+            .build();
+        for quantized in [false, true] {
+            let mut cfg = ServeConfig::default().route_reps(8).compact_limit(0);
+            if quantized {
+                cfg = cfg.quantized(4);
+            }
+            let plain = QueryEngine::new(
+                StarIndex::build(ds.clone(), &h, &out.graph, cfg.clone()),
+                &h,
+                ServeMeasure::Cosine,
+                params.clone(),
+            )
+            .workers(2);
+            let sealed = QueryEngine::new(
+                StarIndex::build(ds.clone(), &h, &out.graph, cfg.seal_limit(2)),
+                &h,
+                ServeMeasure::Cosine,
+                params.clone(),
+            )
+            .workers(2);
+            for i in 0..7 {
+                let row: Vec<f32> = ds.row(i * 31).to_vec();
+                assert_eq!(
+                    plain.insert(Some(&row), None),
+                    sealed.insert(Some(&row), None)
+                );
+            }
+            assert_eq!(plain.num_pending(), 7);
+            assert_eq!(sealed.num_pending(), 7);
+            assert_eq!(sealed.num_sealed(), (6, 3), "7 inserts at seal_limit 2");
+            assert_eq!(plain.num_sealed(), (0, 0));
+            assert_eq!(sealed.next_gid(), plain.next_gid());
+            let queries = ds.subset(&[5, 123, 399]);
+            let check = |tag: &str| {
+                let want = plain.query(&queries, 6);
+                let got = sealed.query(&queries, 6);
+                for (w, g) in want.iter().zip(got.iter()) {
+                    assert_eq!(w.len(), g.len(), "{tag} (quantized={quantized})");
+                    for (&(wid, ws), &(gid, gs)) in w.iter().zip(g.iter()) {
+                        assert_eq!(wid, gid, "{tag}: ids diverged (quantized={quantized})");
+                        assert_eq!(ws.to_bits(), gs.to_bits(), "{tag}: scores diverged");
+                    }
+                }
+            };
+            check("pre-compaction");
+            // Compaction drains segments and tail into the same epoch a
+            // never-sealing engine reaches.
+            assert!(sealed.compact());
+            assert!(plain.compact());
+            assert_eq!(sealed.num_pending(), 0);
+            assert_eq!(sealed.num_sealed(), (0, 0));
+            assert_eq!(sealed.num_indexed(), plain.num_indexed());
+            check("post-compaction");
+        }
     }
 }

@@ -29,6 +29,15 @@
 //! swapped in via `Arc` — the epoch pattern; readers never block on
 //! writers.
 //!
+//! The write path is durable when serving runs with a state directory
+//! ([`durable`]): every insert is WAL-logged before it is applied, the
+//! active tail seals into immutable routed [`SealedSegment`]s at
+//! [`ServeConfig::seal_limit`], and compaction checkpoints publish
+//! crash-consistent `snapshot-{N}.sss` files — so a restart recovers the
+//! exact serving state (newest valid snapshot + WAL-suffix replay)
+//! instead of rebuilding, with answers bit-identical to an uncrashed
+//! process (see [`durable`] for the contract and its conditions).
+//!
 //! **Compaction** comes in two flavors ([`CompactionMode`], a
 //! [`ServeConfig`] knob). `Full` rebuilds the star graph over
 //! snapshot ∪ delta from scratch — O(n) per compaction, the original demo
@@ -77,6 +86,7 @@
 
 pub mod admission;
 pub mod delta;
+pub mod durable;
 pub mod executor;
 pub mod index;
 pub mod router;
@@ -87,6 +97,7 @@ pub use admission::{
     ShedReason,
 };
 pub use delta::DeltaBuffer;
+pub use durable::{DurableStore, FsyncPolicy, SealedSegment};
 pub use executor::{brute_force_topk, CompactionReport, QueryEngine, ServeMeasure};
 pub use index::StarIndex;
 pub use router::Router;
@@ -150,6 +161,13 @@ pub struct ServeConfig {
     /// bounds that drift. The full/incremental mix is reported in
     /// [`executor::CompactionReport`].
     pub full_rebuild_every: usize,
+    /// Active-tail size that triggers sealing the delta buffer into an
+    /// immutable [`durable::SealedSegment`] (0 = never seal — brute-force
+    /// the whole buffer, the pre-durable behavior). Sealed rows are
+    /// sketched once through the snapshot's cached states and queries
+    /// route into them; answers are bit-identical either way (see
+    /// [`durable::segment`]), so this is purely a write-path cost knob.
+    pub seal_limit: usize,
     /// Quantized first-pass scoring: build an SQ8 table into the snapshot
     /// and score candidates int8-first, exact-f32-rescoring the top
     /// `k · rescore_factor` (dense cosine/dot measures only; set and
@@ -174,6 +192,7 @@ impl Default for ServeConfig {
             compact_limit: 1024,
             compaction: CompactionMode::default(),
             full_rebuild_every: 0,
+            seal_limit: 0,
             quantized: false,
             rescore_factor: 4,
             seed: 0x5EA7,
@@ -231,6 +250,13 @@ impl ServeConfig {
         self
     }
 
+    /// Seal the delta tail into an immutable segment once it holds `n`
+    /// points (0 = never seal).
+    pub fn seal_limit(mut self, n: usize) -> Self {
+        self.seal_limit = n;
+        self
+    }
+
     /// Enable quantized first-pass scoring with an exact f32 rescore of
     /// the top `k · rescore_factor` survivors (clamped to ≥ 1).
     pub fn quantized(mut self, rescore_factor: usize) -> Self {
@@ -274,6 +300,7 @@ mod tests {
             .compact_limit(5)
             .compaction(CompactionMode::Full)
             .full_rebuild_every(3)
+            .seal_limit(7)
             .quantized(0)
             .seed(1);
         assert_eq!(c.route_reps, 1);
@@ -283,6 +310,8 @@ mod tests {
         assert_eq!(c.compact_limit, 5);
         assert_eq!(c.compaction, CompactionMode::Full);
         assert_eq!(c.full_rebuild_every, 3);
+        assert_eq!(c.seal_limit, 7);
+        assert_eq!(ServeConfig::default().seal_limit, 0, "sealing is opt-in");
         assert!(c.quantized);
         assert_eq!(c.rescore_factor, 1, "rescore factor clamps to >= 1");
         assert_eq!(ServeConfig::default().full_rebuild_every, 0);

@@ -126,6 +126,49 @@ impl Router {
             .sum()
     }
 
+    /// Export every repetition's table as `(sorted (key, start, len)
+    /// triples, flat entries)` — snapshot persistence. Triples are emitted
+    /// in ascending key order so the byte stream (and its checksum) is
+    /// independent of hash-map iteration order.
+    pub(crate) fn export_parts(&self) -> Vec<(Vec<(u64, u32, u32)>, Vec<u32>)> {
+        self.reps
+            .iter()
+            .map(|r| {
+                let mut triples: Vec<(u64, u32, u32)> = r
+                    .table
+                    .iter()
+                    .map(|(&k, &(start, len))| (k, start, len))
+                    .collect();
+                triples.sort_unstable_by_key(|&(k, _, _)| k);
+                (triples, r.entries.clone())
+            })
+            .collect()
+    }
+
+    /// Reassemble from [`Router::export_parts`] output (snapshot
+    /// persistence). Bucket ranges are bounds-checked against the flat
+    /// entry array so a corrupted file fails here, not as a slice panic on
+    /// some later query. This reproduces the *exact* table — including the
+    /// prefix-biased layout [`Router::extended`] leaves behind, which a
+    /// fresh [`Router::build`] over the same keys would not.
+    pub(crate) fn from_parts(parts: Vec<(Vec<(u64, u32, u32)>, Vec<u32>)>) -> Router {
+        let reps = parts
+            .into_iter()
+            .map(|(triples, entries)| {
+                let mut table = FxHashMap::default();
+                for (key, start, len) in triples {
+                    assert!(
+                        start as usize + len as usize <= entries.len(),
+                        "router bucket range out of bounds"
+                    );
+                    assert!(table.insert(key, (start, len)).is_none(), "duplicate router key");
+                }
+                RepRouter { table, entries }
+            })
+            .collect();
+        Router { reps }
+    }
+
     /// A new router with `delta_keys_per_rep[r][i]` (the bucket keys of
     /// delta point `base + i` under repetition `r`) folded in — the
     /// incremental-compaction analogue of [`Router::build`] whose cost is
@@ -283,6 +326,32 @@ mod tests {
             "leaked entry slots: {} bytes",
             router.heap_bytes()
         );
+    }
+
+    #[test]
+    fn export_import_roundtrips_the_extended_layout() {
+        // `extended` leaves a prefix-biased, possibly orphan-compacted
+        // layout that `Router::build` over the same keys would NOT
+        // reproduce — persistence must roundtrip the raw parts instead.
+        let keys = vec![vec![7u64, 3, 7], vec![1u64, 1, 2]];
+        let mut router = Router::build(&keys, 3, 9);
+        for step in 0..6u32 {
+            router = router.extended(&[vec![7], vec![1]], 3 + step, 3);
+        }
+        let back = Router::from_parts(router.export_parts());
+        assert_eq!(back.reps(), router.reps());
+        assert_eq!(back.num_entries(), router.num_entries());
+        for (rep, keyset) in [(0usize, vec![3u64, 7, 999]), (1, vec![1, 2, 999])] {
+            for k in keyset {
+                assert_eq!(back.route(rep, k), router.route(rep, k), "rep {rep} key {k}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "router bucket range")]
+    fn from_parts_rejects_out_of_bounds_ranges() {
+        Router::from_parts(vec![(vec![(5u64, 0u32, 3u32)], vec![1, 2])]);
     }
 
     #[test]

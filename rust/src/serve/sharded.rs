@@ -329,6 +329,15 @@ impl<'f> ShardedEngine<'f> {
         self.pending_total.load(Ordering::Relaxed)
     }
 
+    /// The insert sequencer's high-water mark: the global id the next
+    /// [`ShardedEngine::insert`] will assign. Mirrors
+    /// [`QueryEngine::next_gid`] — the durable layer WAL-logs each record
+    /// under this id before applying it, and replay uses
+    /// `gid < next_gid()` as its already-applied test.
+    pub fn next_gid(&self) -> u32 {
+        *self.seq.lock().unwrap() as u32
+    }
+
     /// The current snapshot epoch (shared by every shard).
     pub fn snapshot(&self) -> Arc<StarIndex<'f>> {
         self.snapshot.read().unwrap().clone()

@@ -122,6 +122,24 @@ impl QuantDataset {
         q
     }
 
+    /// Reassemble from flat code/scale arrays (snapshot persistence). The
+    /// shape invariant is re-checked so a corrupted file cannot produce a
+    /// misaligned row view later.
+    pub(crate) fn from_raw_parts(dim: usize, codes: Vec<i8>, scales: Vec<f32>) -> QuantDataset {
+        assert_eq!(codes.len(), scales.len() * dim, "quant codes/scales length mismatch");
+        QuantDataset { dim, codes, scales }
+    }
+
+    /// The whole flat code table, row-major — snapshot persistence.
+    pub(crate) fn code_slice(&self) -> &[i8] {
+        &self.codes
+    }
+
+    /// All per-row scales — snapshot persistence.
+    pub(crate) fn scale_slice(&self) -> &[f32] {
+        &self.scales
+    }
+
     /// Quantize and append one row.
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.dim, "quant row dim mismatch");

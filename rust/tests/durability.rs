@@ -1,0 +1,492 @@
+//! Durability acceptance battery for `stars::serve::durable` (the PR-10
+//! tentpole): WAL framing and torn-tail truncation, corrupted-persistence
+//! fuzzing (bit flips + truncation over every section boundary — errors
+//! with per-section context, never a panic), and the crash-recovery
+//! bit-identity contract: after a simulated crash at *any* WAL record
+//! boundary or inside a torn append, recovery (newest valid snapshot +
+//! WAL-suffix replay) must answer top-k bit-identical to a process that
+//! never crashed — for the exact and quantized tiers, across worker
+//! counts, and through the sharded scatter-gather engine.
+//!
+//! `scripts/ci.sh` adds the process-level twin of this battery: a CLI
+//! serve run killed mid-WAL-append by an injected fault, restarted, and
+//! required to report the same `results_digest` as a clean run.
+
+use stars::data::synth;
+use stars::data::types::WeightedSet;
+use stars::lsh::{SimHash, WeightedMinHash};
+use stars::serve::durable::{
+    read_wal, save_snapshot, snapshot_path, wal_path, WalRecord, WalWriter,
+};
+use stars::serve::{
+    DurableStore, FsyncPolicy, QueryEngine, ServeConfig, ServeMeasure, ShardedEngine,
+    ShardedIndex,
+};
+use stars::sim::{CosineSim, WeightedJaccardSim};
+use stars::stars::{Algorithm, BuildParams, StarsBuilder};
+use std::path::PathBuf;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("stars-durability-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn sample_records(n: usize) -> Vec<WalRecord> {
+    (0..n)
+        .map(|i| WalRecord {
+            gid: 400 + i as u32,
+            row: Some((0..16).map(|d| (i * 16 + d) as f32 * 0.25 - 3.0).collect()),
+            set: (i % 3 == 0).then(|| WeightedSet {
+                tokens: vec![i as u32, i as u32 + 7],
+                weights: vec![1.0, 0.5 + i as f32],
+            }),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- WAL layer
+
+#[test]
+fn wal_roundtrips_rows_sets_and_fsync_policies() {
+    let dir = tmp_dir("wal-roundtrip");
+    let recs = sample_records(9);
+    for (name, policy) in [
+        ("always", FsyncPolicy::Always),
+        ("os", FsyncPolicy::Os),
+        ("every", FsyncPolicy::EveryN(4)),
+    ] {
+        let path = dir.join(format!("{name}.log"));
+        let mut w = WalWriter::create(&path, policy).unwrap();
+        for r in &recs {
+            w.append(r).unwrap();
+        }
+        w.sync().unwrap();
+        let (got, torn) = read_wal(&path).unwrap();
+        assert_eq!(got, recs, "policy {name} altered records");
+        assert_eq!(torn, 0, "clean file reported a torn tail");
+    }
+    assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+    assert_eq!(FsyncPolicy::parse("os").unwrap(), FsyncPolicy::Os);
+    assert_eq!(FsyncPolicy::parse("every:16").unwrap(), FsyncPolicy::EveryN(16));
+    assert!(FsyncPolicy::parse("every:0").is_err());
+    assert!(FsyncPolicy::parse("sometimes").is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wal_torn_tail_truncates_to_the_last_complete_record() {
+    // A crash can land at any byte of an in-flight append: every torn
+    // length must read back as exactly the complete prefix, with the torn
+    // byte count reported.
+    let dir = tmp_dir("wal-torn");
+    let recs = sample_records(5);
+    let extra = sample_records(6);
+    let torn_rec = &extra[5];
+    for keep in [0usize, 1, 4, 7, 8, 9, 20, 10_000] {
+        let path = dir.join(format!("torn-{keep}.log"));
+        let mut w = WalWriter::create(&path, FsyncPolicy::Os).unwrap();
+        for r in &recs {
+            w.append(r).unwrap();
+        }
+        let kept = w.append_torn(torn_rec, keep).unwrap();
+        assert!(kept <= keep, "append_torn wrote more than asked");
+        let (got, torn) = read_wal(&path).unwrap();
+        assert_eq!(got, recs, "torn tail (keep={keep}) corrupted the prefix");
+        assert_eq!(torn, kept, "torn byte count wrong for keep={keep}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wal_fuzz_truncation_and_bit_flips_never_panic() {
+    let dir = tmp_dir("wal-fuzz");
+    let path = dir.join("base.log");
+    let recs = sample_records(6);
+    let mut w = WalWriter::create(&path, FsyncPolicy::Os).unwrap();
+    for r in &recs {
+        w.append(r).unwrap();
+    }
+    w.sync().unwrap();
+    drop(w);
+    let bytes = std::fs::read(&path).unwrap();
+    let scratch = dir.join("scratch.log");
+    // Truncation at every byte offset: the reader must return a prefix of
+    // the original records (or an error), never panic, never invent data.
+    for cut in 0..=bytes.len() {
+        std::fs::write(&scratch, &bytes[..cut]).unwrap();
+        if let Ok((got, _)) = read_wal(&scratch) {
+            assert!(got.len() <= recs.len());
+            assert_eq!(got[..], recs[..got.len()], "truncation at {cut} invented records");
+        }
+    }
+    // One flipped bit at every byte offset: prefix-or-error, and any
+    // record the reader does return must be byte-exact from the original
+    // prefix (the CRC catches everything downstream of the flip).
+    for at in 0..bytes.len() {
+        let mut mutated = bytes.clone();
+        mutated[at] ^= 0x10;
+        std::fs::write(&scratch, &mutated).unwrap();
+        if let Ok((got, _)) = read_wal(&scratch) {
+            assert!(got.len() <= recs.len(), "flip at {at} invented records");
+            for (i, r) in got.iter().enumerate() {
+                if *r != recs[i] {
+                    // A flip inside record i's payload that still passed
+                    // CRC-32 would be a checksum collision from a single
+                    // bit flip — impossible for CRC-32.
+                    panic!("flip at byte {at} silently altered record {i}");
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------------------- snapshot layer
+
+/// Section boundaries of a snapshot file: byte offsets of every structural
+/// edge (header fields, then each section's tag / len / crc / payload
+/// start / payload end), parsed from the on-disk layout
+/// (`MAGIC ∥ version ∥ count ∥ [tag(4) len(8) crc(4) payload]*`).
+fn section_boundaries(bytes: &[u8]) -> Vec<usize> {
+    let mut cuts = vec![0, 4, 8, 12];
+    let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut at = 12usize;
+    for _ in 0..count {
+        let len = u64::from_le_bytes(bytes[at + 4..at + 12].try_into().unwrap()) as usize;
+        cuts.extend([at + 4, at + 12, at + 16, at + 16 + len / 2, at + 16 + len]);
+        at += 16 + len;
+    }
+    assert_eq!(at, bytes.len(), "section table does not tile the file");
+    cuts
+}
+
+fn build_cosine_index(
+    h: &SimHash,
+    quantized: bool,
+) -> (stars::data::Dataset, stars::serve::StarIndex<'_>, BuildParams, ServeConfig) {
+    let ds = synth::gaussian_mixture(400, 16, 8, 0.08, 33);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(6)
+        .threshold(0.5);
+    let mut cfg = ServeConfig::default()
+        .route_reps(6)
+        .compact_limit(0)
+        .max_candidates(0)
+        .seal_limit(5);
+    if quantized {
+        cfg = cfg.quantized(4);
+    }
+    let (_, index) = StarsBuilder::new(&ds)
+        .similarity(&CosineSim)
+        .hash(h)
+        .params(params.clone())
+        .workers(2)
+        .build_indexed(cfg.clone());
+    (ds, index, params, cfg)
+}
+
+#[test]
+fn snapshot_roundtrip_is_bit_identical_for_both_tiers() {
+    let h = SimHash::new(16, 8, 7);
+    for quantized in [false, true] {
+        let dir = tmp_dir(&format!("snap-roundtrip-{quantized}"));
+        let (ds, index, params, cfg) = build_cosine_index(&h, quantized);
+        let path = snapshot_path(&dir, 400);
+        save_snapshot(&index, 400, &path).unwrap();
+        let (loaded, floor) = stars::serve::durable::load_snapshot(&path, &h, cfg, 2).unwrap();
+        assert_eq!(floor, 400);
+        assert_eq!(loaded.len(), index.len());
+        let qids: Vec<u32> = (0..400).step_by(13).collect();
+        let queries = ds.subset(&qids);
+        let a = QueryEngine::new(index, &h, ServeMeasure::Cosine, params.clone()).workers(2);
+        let b = QueryEngine::new(loaded, &h, ServeMeasure::Cosine, params.clone()).workers(2);
+        assert_eq!(
+            a.query(&queries, 6),
+            b.query(&queries, 6),
+            "loaded snapshot diverged (quantized={quantized})"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn snapshot_roundtrip_covers_the_set_feature() {
+    // Weighted-Jaccard over Zipf sets: the DSET section's hybrid set
+    // payload (tokens + weights) must survive the roundtrip.
+    let dir = tmp_dir("snap-sets");
+    let sets = synth::zipf_sets(300, &synth::ZipfSetsParams::default(), 29);
+    let h = WeightedMinHash::new(3, 11);
+    let params = BuildParams::threshold_mode(Algorithm::LshStars)
+        .sketches(6)
+        .threshold(0.1);
+    let cfg = ServeConfig::default().route_reps(6).route_leaders(16).compact_limit(0);
+    let (_, index) = StarsBuilder::new(&sets)
+        .similarity(&WeightedJaccardSim)
+        .hash(&h)
+        .params(params.clone())
+        .workers(2)
+        .build_indexed(cfg.clone());
+    let path = snapshot_path(&dir, 300);
+    save_snapshot(&index, 300, &path).unwrap();
+    let (loaded, _) = stars::serve::durable::load_snapshot(&path, &h, cfg, 2).unwrap();
+    let qids: Vec<u32> = (0..300).step_by(17).collect();
+    let queries = sets.subset(&qids);
+    let a = QueryEngine::new(index, &h, ServeMeasure::WeightedJaccard, params.clone()).workers(2);
+    let b = QueryEngine::new(loaded, &h, ServeMeasure::WeightedJaccard, params).workers(2);
+    assert_eq!(a.query(&queries, 5), b.query(&queries, 5), "set snapshot diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_fuzz_truncation_and_bit_flips_error_with_context_never_panic() {
+    let h = SimHash::new(16, 8, 7);
+    let dir = tmp_dir("snap-fuzz");
+    let (_, index, _, cfg) = build_cosine_index(&h, true);
+    let path = snapshot_path(&dir, 400);
+    save_snapshot(&index, 400, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let scratch = dir.join("scratch.sss");
+    // Truncation at every section boundary (plus mid-payload): loading a
+    // cut file must be a contextual error, never a panic, never Ok.
+    for &cut in &section_boundaries(&bytes) {
+        if cut == bytes.len() {
+            continue;
+        }
+        std::fs::write(&scratch, &bytes[..cut]).unwrap();
+        let err = match stars::serve::durable::load_snapshot(&scratch, &h, cfg.clone(), 2) {
+            Ok(_) => panic!("truncation at byte {cut} loaded"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("scratch.sss"),
+            "truncation at {cut}: error lost the file context: {msg}"
+        );
+    }
+    // One flipped bit inside every section (header, tag, len, crc, and the
+    // middle of each payload): per-section error context, no panic. A flip
+    // can land in ignorable slack only if sections were unchecked — they
+    // aren't, every payload is CRC'd.
+    for &at in &section_boundaries(&bytes) {
+        if at >= bytes.len() {
+            continue;
+        }
+        let mut mutated = bytes.clone();
+        mutated[at] ^= 0x40;
+        std::fs::write(&scratch, &mutated).unwrap();
+        let err = match stars::serve::durable::load_snapshot(&scratch, &h, cfg.clone(), 2) {
+            Ok(_) => panic!("bit flip at byte {at} loaded"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("scratch.sss") || msg.contains("section"),
+            "flip at {at}: error lost its context: {msg}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------- crash-recovery battery
+
+/// The tentpole contract. For one tier: build once, derive the uncrashed
+/// reference answers, then for a crash after every possible number of
+/// WAL'd inserts (each non-final crash also tearing the next record
+/// mid-append), recover and require the final top-k — after replay plus
+/// the remainder of the schedule — to be bit-identical to the reference,
+/// across worker counts and through the sharded engine.
+fn crash_recovery_battery(quantized: bool) {
+    let h = SimHash::new(16, 8, 7);
+    let (ds, index, params, cfg) = build_cosine_index(&h, quantized);
+    let schedule: Vec<usize> = (0..12).map(|i| (i * 31) % 400).collect();
+    let qids: Vec<u32> = (0..400).step_by(13).collect();
+    let queries = ds.subset(&qids);
+    let reference = QueryEngine::new(index, &h, ServeMeasure::Cosine, params.clone()).workers(2);
+    // Checkpoint the pristine build before feeding the reference engine
+    // (inserts land in its delta, not its snapshot, so the order is
+    // immaterial — but this mirrors the serve loop).
+    let template = tmp_dir(&format!("crash-template-{quantized}"));
+    {
+        let mut store = DurableStore::open(&template, FsyncPolicy::EveryN(3)).unwrap();
+        store.checkpoint(&reference.snapshot()).unwrap();
+    }
+    for &src in &schedule {
+        reference.insert(Some(ds.row(src)), None);
+    }
+    let want = reference.query(&queries, 6);
+
+    for crash_at in 0..=schedule.len() {
+        // Stage the crashed state dir: the pristine snapshot, `crash_at`
+        // complete WAL records, and (for non-final crash points) a torn
+        // append of the next record — the crash landed mid-write().
+        let dir = tmp_dir(&format!("crash-{quantized}-{crash_at}"));
+        std::fs::copy(snapshot_path(&template, 400), snapshot_path(&dir, 400)).unwrap();
+        let mut store = DurableStore::open(&dir, FsyncPolicy::EveryN(3)).unwrap();
+        let rec = store
+            .recover(&h, cfg.clone(), 2)
+            .unwrap()
+            .expect("template snapshot");
+        assert!(rec.replay.is_empty());
+        for (i, &src) in schedule[..crash_at].iter().enumerate() {
+            store.log_insert(400 + i as u32, Some(ds.row(src)), None).unwrap();
+        }
+        if crash_at < schedule.len() {
+            let keep = 1 + (crash_at * 5) % 24;
+            store
+                .log_torn(400 + crash_at as u32, Some(ds.row(schedule[crash_at])), None, keep)
+                .unwrap();
+        }
+        drop(store); // the simulated crash: no checkpoint, no clean close
+
+        for workers in [1usize, 3] {
+            for sharded in [false, true] {
+                let mut rstore = DurableStore::open(&dir, FsyncPolicy::EveryN(3)).unwrap();
+                let rec = rstore
+                    .recover(&h, cfg.clone(), workers)
+                    .unwrap()
+                    .expect("snapshot survived the crash");
+                assert_eq!(
+                    rec.replay.len(),
+                    crash_at,
+                    "crash@{crash_at}: wrong replay suffix (torn tail not truncated?)"
+                );
+                assert_eq!(rec.index.len(), 400);
+                let got = if sharded {
+                    let eng = ShardedEngine::new(
+                        ShardedIndex::new(rec.index, 3),
+                        &h,
+                        ServeMeasure::Cosine,
+                        params.clone(),
+                    )
+                    .workers(workers);
+                    for r in &rec.replay {
+                        assert_eq!(r.gid, eng.next_gid(), "replay out of gid order");
+                        eng.insert(r.row.as_deref(), r.set.clone());
+                    }
+                    for &src in &schedule[rec.replay.len()..] {
+                        eng.insert(Some(ds.row(src)), None);
+                    }
+                    eng.query(&queries, 6)
+                } else {
+                    let eng = QueryEngine::new(rec.index, &h, ServeMeasure::Cosine, params.clone())
+                        .workers(workers);
+                    for r in &rec.replay {
+                        assert_eq!(r.gid, eng.next_gid(), "replay out of gid order");
+                        eng.insert(r.row.as_deref(), r.set.clone());
+                    }
+                    for &src in &schedule[rec.replay.len()..] {
+                        eng.insert(Some(ds.row(src)), None);
+                    }
+                    eng.query(&queries, 6)
+                };
+                assert_eq!(
+                    got, want,
+                    "crash@{crash_at} quantized={quantized} workers={workers} \
+                     sharded={sharded}: recovery diverged from the uncrashed engine"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&template);
+}
+
+#[test]
+fn crash_recovery_is_bit_identical_exact_tier() {
+    crash_recovery_battery(false);
+}
+
+#[test]
+fn crash_recovery_is_bit_identical_quantized_tier() {
+    crash_recovery_battery(true);
+}
+
+// ------------------------------------------------------------- store layer
+
+#[test]
+fn recovery_ignores_tmp_garbage_and_falls_back_past_a_corrupt_snapshot() {
+    let h = SimHash::new(16, 8, 7);
+    let dir = tmp_dir("fallback");
+    let (ds, index, params, cfg) = build_cosine_index(&h, false);
+    // Stash the floor-400 generation aside: checkpoint prunes superseded
+    // snapshots, but a crash between publish and prune legitimately leaves
+    // the older file behind — that state is restaged below.
+    let side = dir.join("gen-400.keep");
+    save_snapshot(&index, 400, &side).unwrap();
+    let engine = QueryEngine::new(index, &h, ServeMeasure::Cosine, params).workers(2);
+    let mut store = DurableStore::open(&dir, FsyncPolicy::Os).unwrap();
+    store.checkpoint(&engine.snapshot()).unwrap();
+    // Five durable inserts, then a compaction + second checkpoint advance
+    // the durable floor to 405.
+    for i in 0..5u32 {
+        let row = ds.row(i as usize * 17);
+        store.log_insert(400 + i, Some(row), None).unwrap();
+        engine.insert(Some(row), None);
+    }
+    engine.compact_report().expect("delta pending");
+    store.checkpoint(&engine.snapshot()).unwrap();
+    drop(store);
+    std::fs::copy(&side, snapshot_path(&dir, 400)).unwrap();
+    assert!(snapshot_path(&dir, 400).exists());
+    assert!(snapshot_path(&dir, 405).exists());
+    // Crash-at-publish-boundary debris plus unrelated junk: all ignored.
+    std::fs::write(dir.join("snapshot-999.sss.tmp"), b"half-published garbage").unwrap();
+    std::fs::write(wal_path(&dir, 999).with_extension("log.tmp"), b"torn rotation").unwrap();
+    std::fs::write(dir.join("notes.txt"), b"not ours").unwrap();
+    let mut rstore = DurableStore::open(&dir, FsyncPolicy::Os).unwrap();
+    let rec = rstore.recover(&h, cfg.clone(), 2).unwrap().expect("snapshot");
+    assert_eq!(rec.index.len(), 405, "newest valid snapshot not selected");
+    assert!(rec.replay.is_empty());
+    drop(rstore);
+    // Now rot the newest snapshot on disk: recovery must report it and
+    // fall back to the older valid generation instead of failing.
+    let newest = snapshot_path(&dir, 405);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&newest, &bytes).unwrap();
+    let mut fstore = DurableStore::open(&dir, FsyncPolicy::Os).unwrap();
+    let rec = fstore.recover(&h, cfg, 2).unwrap().expect("older snapshot");
+    assert_eq!(rec.index.len(), 400, "fallback skipped the older valid snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_retains_the_wal_suffix_across_repeated_recoveries() {
+    // Sequencer high-water monotonicity through the store: log, recover,
+    // log more through the rotated WAL, recover again — the replay suffix
+    // accumulates gaplessly and in gid order.
+    let h = SimHash::new(16, 8, 7);
+    let dir = tmp_dir("suffix");
+    let (ds, index, params, cfg) = build_cosine_index(&h, false);
+    let engine = QueryEngine::new(index, &h, ServeMeasure::Cosine, params).workers(2);
+    {
+        let mut store = DurableStore::open(&dir, FsyncPolicy::Always).unwrap();
+        store.checkpoint(&engine.snapshot()).unwrap();
+        for i in 0..6u32 {
+            store.log_insert(400 + i, Some(ds.row(i as usize)), None).unwrap();
+        }
+    }
+    let mut store = DurableStore::open(&dir, FsyncPolicy::Always).unwrap();
+    let rec = store.recover(&h, cfg.clone(), 2).unwrap().expect("snapshot");
+    assert_eq!(rec.replay.len(), 6);
+    // The rotated WAL is live: keep logging where the suffix left off.
+    for i in 6..11u32 {
+        store.log_insert(400 + i, Some(ds.row(i as usize)), None).unwrap();
+    }
+    drop(store);
+    let mut store = DurableStore::open(&dir, FsyncPolicy::Always).unwrap();
+    let rec = store.recover(&h, cfg, 2).unwrap().expect("snapshot");
+    assert_eq!(rec.replay.len(), 11, "rotation dropped part of the suffix");
+    for (i, r) in rec.replay.iter().enumerate() {
+        assert_eq!(r.gid, 400 + i as u32, "suffix out of gid order");
+    }
+    // The final recovery rotated the full 11-record suffix to a fresh WAL
+    // at the recovered high-water (411).
+    let (on_disk, torn) = read_wal(&wal_path(&dir, 411)).unwrap();
+    assert_eq!(on_disk.len(), 11);
+    assert_eq!(torn, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

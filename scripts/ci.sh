@@ -80,6 +80,51 @@ echo "==> sharded serve gates (--shards 1, --shards 4 + tenants, scalar 4-shard)
 STARS_SIMD=scalar ./target/release/stars serve --dataset random --n 2000 \
     --r 4 --threshold 0.5 --queries 20 --k 5 --shards 4 >/dev/null
 
+# Durable serve kill-and-restart gate (see ARCHITECTURE.md "Durability &
+# crash recovery"). tests/durability.rs proves crash-point bit-identity at
+# the store API level inside the suites above; this gates the *process*
+# contract end to end. Run A serves clean over a state dir and reports a
+# results_digest. Run B, over its own dir, gets a STARS_FAULTS crash
+# schedule: the serve loop tears the WAL mid-append at the insert midpoint
+# and dies (exit 3). The restarted process (faults unset) must recover from
+# snapshot + WAL-suffix replay, finish the schedule, and report the same
+# digest as the never-crashed run — for the exact and quantized tiers.
+DUR_TMP="$(mktemp -d)"
+trap 'rm -rf "$DUR_TMP"' EXIT
+digest_of() { sed -n 's/.*"results_digest": *"\([0-9a-f]*\)".*/\1/p' "$1"; }
+echo "==> durable serve kill-and-restart gate (exact + quantized)"
+for MODE in exact quant; do
+    QFLAG=""
+    [[ "$MODE" == "quant" ]] && QFLAG="--quantized"
+    ./target/release/stars serve --dataset random --n 2000 --r 4 \
+        --threshold 0.5 --queries 20 --k 5 --inserts 40 --seal-limit 8 \
+        --state-dir "$DUR_TMP/clean-$MODE" $QFLAG > "$DUR_TMP/clean-$MODE.json"
+    set +e
+    STARS_FAULTS="seed=1,crash=1.0,max_failures=1" \
+        ./target/release/stars serve --dataset random --n 2000 --r 4 \
+        --threshold 0.5 --queries 20 --k 5 --inserts 40 --seal-limit 8 \
+        --state-dir "$DUR_TMP/crash-$MODE" $QFLAG >/dev/null 2>&1
+    CODE=$?
+    set -e
+    if [[ "$CODE" != "3" ]]; then
+        echo "durability gate ($MODE): expected injected crash (exit 3), got $CODE"
+        exit 1
+    fi
+    ./target/release/stars serve --dataset random --n 2000 --r 4 \
+        --threshold 0.5 --queries 20 --k 5 --inserts 40 --seal-limit 8 \
+        --state-dir "$DUR_TMP/crash-$MODE" $QFLAG > "$DUR_TMP/recovered-$MODE.json"
+    CLEAN="$(digest_of "$DUR_TMP/clean-$MODE.json")"
+    RECOVERED="$(digest_of "$DUR_TMP/recovered-$MODE.json")"
+    if [[ -z "$CLEAN" || "$CLEAN" != "$RECOVERED" ]]; then
+        echo "durability gate ($MODE): digest mismatch (clean=$CLEAN recovered=$RECOVERED)"
+        exit 1
+    fi
+    grep -q '"recovered": true' "$DUR_TMP/recovered-$MODE.json" || {
+        echo "durability gate ($MODE): restart did not report recovered=true"
+        exit 1
+    }
+done
+
 # Observability gates (see ARCHITECTURE.md "Observability" and
 # EXPERIMENTS.md §Observability). The tracing/metrics layer's own
 # bit-identity and span-shape tests run inside the suites above; here the
@@ -90,7 +135,7 @@ STARS_SIMD=scalar ./target/release/stars serve --dataset random --n 2000 \
 # snapshot behind, and the checked-in BENCH_*.json artifacts must carry
 # the schema_version/data_status/simd_backend envelope.
 OBS_TMP="$(mktemp -d)"
-trap 'rm -rf "$OBS_TMP"' EXIT
+trap 'rm -rf "$OBS_TMP" "$DUR_TMP"' EXIT
 echo "==> STARS_TRACE end-to-end env wiring (CLI build+serve, trace-check)"
 STARS_TRACE="$OBS_TMP/trace.ndjson" STARS_TRACE_SAMPLE=1 \
     ./target/release/stars serve --dataset random --n 2000 --r 4 \
